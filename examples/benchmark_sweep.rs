@@ -1,0 +1,70 @@
+//! Benchmarking sweep — the paper's Objective #2 use case: design-space
+//! exploration over every (model × variant), producing the data an
+//! ML-driven scheduler would train on (Objective #4).
+//!
+//! ```sh
+//! cargo run --release --example benchmark_sweep -- [requests] [real]
+//! ```
+//!
+//! For every artifact: deploy on PJRT, validate numerics against the
+//! build-time fixtures, measure real compute, sample the platform service
+//! model, and emit a machine-readable dataset (`reports/sweep.csv`).
+
+use anyhow::Result;
+
+use tf2aif::coordinator::{bench_one, Fig4Options};
+use tf2aif::report;
+use tf2aif::runtime::{load_verified, Engine};
+use tf2aif::{artifact, ARTIFACTS_DIR};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let real: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let engine = Engine::cpu()?;
+    let artifacts = artifact::scan(ARTIFACTS_DIR)?;
+    println!(
+        "sweeping {} artifacts ({} service samples, {} real executions each)…\n",
+        artifacts.len(),
+        requests,
+        real
+    );
+
+    let opts = Fig4Options { requests, real_requests: real, seed: 0x5EEE };
+    let mut rows = Vec::new();
+    for a in &artifacts {
+        // Numeric gate first: served logits must match the python build.
+        let (_, delta) = load_verified(&engine, a)?;
+        let lat = bench_one(&engine, a, &opts)?;
+        println!(
+            "{:<24} fixtureΔ {:>9.2e} | service* median {:>9.2} ms | real mean {:>9.2} ms",
+            a.manifest.id(),
+            delta,
+            lat.service.median,
+            lat.real_mean_ms,
+        );
+        rows.push(vec![
+            lat.model.clone(),
+            lat.variant.clone(),
+            format!("{}", a.manifest.gflops),
+            format!("{:.4}", lat.service.median),
+            format!("{:.4}", lat.service.q1),
+            format!("{:.4}", lat.service.q3),
+            format!("{:.4}", lat.service.mean),
+            format!("{:.4}", lat.real_mean_ms),
+            format!("{delta:.3e}"),
+        ]);
+    }
+    let headers = vec![
+        "model", "variant", "gflops", "service_median_ms", "service_q1_ms",
+        "service_q3_ms", "service_mean_ms", "real_mean_ms", "fixture_delta",
+    ];
+    report::write_csv("reports/sweep.csv", &headers, &rows)?;
+    println!(
+        "\nwrote reports/sweep.csv — {} rows (scheduler-training dataset; \
+         * = simulated platform, DESIGN.md §2)",
+        rows.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end driver (the validation example required by DESIGN.md):
+//! bring up the paper's Table II cluster, let the backend auto-place the
+//! best variant of every model, and serve batched request workloads
+//! against the real loaded models, reporting latency and throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cluster_serving
+//! ```
+//!
+//! Everything composes here: artifacts (L1 Pallas kernels inside L2 JAX
+//! graphs, AOT-lowered) → PJRT runtime → serving loop → cluster scheduler
+//! → backend variant selection → generated clients → metrics.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::report;
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{BatcherConfig, Request, ServerHandle};
+use tf2aif::util::rng::Rng;
+use tf2aif::util::stats::Series;
+use tf2aif::workload::image_like;
+use tf2aif::{artifact, ARTIFACTS_DIR};
+
+fn main() -> Result<()> {
+    // ── 1. Cluster up (Table II) ────────────────────────────────────────
+    let mut cluster = Cluster::new(paper_testbed());
+    let (h, r) = report::table2(cluster.nodes());
+    println!("cluster:");
+    print!("{}", report::render_table(&h, &r));
+    cluster.apply_kube_api_extension();
+    println!("Kube-API extension applied: ARM devices registered\n");
+
+    // ── 2. Backend selects + deploys the best variant per model ────────
+    let artifacts = artifact::scan(ARTIFACTS_DIR)?;
+    println!("registry: {} artifacts available", artifacts.len());
+    let backend = Backend::new(artifacts, Policy::MinLatency);
+    let engine = Engine::cpu()?;
+
+    let mut deployments = Vec::new();
+    for model in ["lenet", "mobilenetv1", "resnet50", "inceptionv4"] {
+        let dep = backend.deploy(model, &mut cluster, &engine)?;
+        println!(
+            "deploy {model:<12} → {:<6} on {:<4} (modeled {:.2} ms, pod {}, compile {:.2}s)",
+            dep.decision.variant,
+            dep.decision.node,
+            dep.decision.modeled_ms,
+            dep.pod,
+            dep.server.model.compile_time_s,
+        );
+        deployments.push(dep);
+    }
+
+    // ── 3. Batched serving: async server loops + concurrent clients ────
+    println!("\nserving 64 requests per AIF through the batched server loop…");
+    let mut summary_rows = Vec::new();
+    for dep in &deployments {
+        let shape = dep.server.model.input_shape.clone();
+        let (h_, w_, c_) = (shape[1], shape[2], shape[3]);
+        let handle = ServerHandle::spawn(
+            Arc::clone(&dep.server),
+            BatcherConfig { max_batch: 8, workers: 2 },
+        );
+        let mut rng = Rng::new(1234);
+        let t0 = std::time::Instant::now();
+        // Submit a burst (tests queueing), then drain.
+        let pending: Vec<_> = (0..64)
+            .map(|i| {
+                handle.submit(Request { id: i, payload: image_like(&mut rng, h_, w_, c_) })
+            })
+            .collect();
+        let mut e2e = Series::new();
+        let mut errors = 0usize;
+        for rx in pending {
+            match rx.recv().expect("server loop alive") {
+                Ok(resp) => e2e.push(resp.queue_wait_ms + resp.real_compute_ms),
+                Err(_) => errors += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        handle.shutdown();
+        let snap = dep.server.metrics.snapshot();
+        let bp = e2e.boxplot();
+        summary_rows.push(vec![
+            dep.server.model_name.clone(),
+            dep.decision.variant.clone(),
+            dep.decision.node.clone(),
+            format!("{}", snap.requests),
+            format!("{errors}"),
+            format!("{:.2}", bp.median),
+            format!("{:.2}", bp.max),
+            format!("{:.1}", 64.0 / wall),
+        ]);
+    }
+    let headers = vec![
+        "model", "variant", "node", "served", "errors",
+        "e2e median (ms)", "e2e max (ms)", "throughput (rps)",
+    ];
+    print!("{}", report::render_table(&headers, &summary_rows));
+
+    // ── 4. Teardown ─────────────────────────────────────────────────────
+    let pods: Vec<u64> = cluster.running_pods().map(|p| p.id).collect();
+    for pod in pods {
+        cluster.terminate(pod)?;
+    }
+    println!("\nall pods terminated; cluster clean");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! ML-driven scheduling — the paper's Objective #4 and future-work
+//! section, end to end: generate performance data with TF2AIF's sweep,
+//! train the latency predictor on it, and let the backend place AIFs from
+//! *learned* estimates instead of the analytic cost model.
+//!
+//! ```sh
+//! cargo run --release --example learned_scheduler
+//! ```
+
+use anyhow::Result;
+
+use tf2aif::artifact;
+use tf2aif::backend::predictor::{from_sweep_csv, synthetic_sweep, LearnedLatency};
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+
+fn main() -> Result<()> {
+    // ── 1. Training data: a recorded sweep if present, else synthesize
+    //       one from the platform models (with measurement noise).
+    let (data, source) = match from_sweep_csv("reports/sweep.csv") {
+        Ok(d) if d.len() >= 8 => (d, "reports/sweep.csv (recorded by benchmark_sweep)"),
+        _ => (synthetic_sweep(0.05, 42), "synthetic sweep (5% label noise)"),
+    };
+    println!("training on {} observations from {source}", data.len());
+
+    // ── 2. Train + evaluate.
+    let model = LearnedLatency::fit(&data)?;
+    println!(
+        "ridge model over {} platforms, training MAPE {:.1}%",
+        model.platforms().len(),
+        model.mape(&data) * 100.0
+    );
+
+    // ── 3. Holdout check: unseen FLOP sizes.
+    let holdout = synthetic_sweep(0.0, 777);
+    println!("holdout MAPE vs noise-free cost model: {:.1}%", model.mape(&holdout) * 100.0);
+
+    // ── 4. Place every model with analytic vs learned scoring.
+    let artifacts = artifact::scan("artifacts")?;
+    let mut analytic = Backend::new(artifact::scan("artifacts")?, Policy::MinLatency);
+    let mut learned = Backend::new(artifacts, Policy::MinLatency);
+    learned.predictor = Some(model);
+    let _ = &mut analytic;
+
+    let cluster = {
+        let mut c = Cluster::new(paper_testbed());
+        c.apply_kube_api_extension();
+        c
+    };
+    println!("\nplacement decisions (paper testbed):");
+    println!("{:<14} {:>18} {:>18} {:>8}", "model", "analytic", "learned", "agree");
+    let mut agree = 0;
+    let models = ["lenet", "mobilenetv1", "resnet50", "inceptionv4"];
+    for m in models {
+        let a = analytic.select(m, &cluster)?;
+        let l = learned.select(m, &cluster)?;
+        let same = a.variant == l.variant && a.node == l.node;
+        agree += same as usize;
+        println!(
+            "{m:<14} {:>12}@{:<5} {:>12}@{:<5} {:>8}",
+            a.variant, a.node, l.variant, l.node,
+            if same { "yes" } else { "NO" }
+        );
+    }
+    println!(
+        "\nlearned scheduler agrees with the analytic optimum on {agree}/{} models",
+        models.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: load one generated AIF, verify it, serve a few requests.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 30-second tour of the public API: artifact → engine →
+//! server → client.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use tf2aif::artifact::Artifact;
+use tf2aif::client::{Client, ClientConfig};
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{AifServer, ImageClassify};
+use tf2aif::workload::Arrival;
+
+fn main() -> Result<()> {
+    // 1. Pick an artifact the build pipeline produced (model × variant).
+    let artifact = Artifact::load("artifacts/mobilenetv1_GPU")?;
+    println!(
+        "AIF {}: {} on {} ({}, {} layers, {:.3} GFLOPs)",
+        artifact.manifest.id(),
+        artifact.manifest.framework,
+        artifact.manifest.platform,
+        artifact.manifest.precision,
+        artifact.manifest.layers,
+        artifact.manifest.gflops,
+    );
+
+    // 2. Compile it on the PJRT CPU client and pin the weights.
+    let engine = Engine::cpu()?;
+    let server = Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify))?);
+    println!(
+        "compiled in {:.2}s, {} weight tensors pinned on device",
+        server.model.compile_time_s,
+        server.model.num_weights()
+    );
+
+    // 3. The generated client verifies the service against build-time
+    //    fixtures (the paper's client-container verification feature)…
+    let client = Client::new(Arc::clone(&server));
+    let n = client.verify(&artifact)?;
+    println!("verification: {n} fixtures OK (served logits match python build)");
+
+    // 4. …then benchmarks it: closed loop, one image per request.
+    let run = client.run(&ClientConfig {
+        requests: 50,
+        arrival: Arrival::ClosedLoop,
+        seed: 42,
+    })?;
+    let mut svc = run.service_ms.clone();
+    let bp = svc.boxplot();
+    println!(
+        "50 requests | service latency* median {:.2} ms (q1 {:.2}, q3 {:.2}) | \
+         real compute mean {:.2} ms",
+        bp.median,
+        bp.q1,
+        bp.q3,
+        run.real_compute_ms.mean()
+    );
+    println!("(* simulated {} platform — DESIGN.md §2)", server.platform().name);
+    Ok(())
+}

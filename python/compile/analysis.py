@@ -1,0 +1,179 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization estimates.
+
+interpret=True wallclock is CPU-numpy time, NOT a TPU proxy (DESIGN.md
+§8) — so the L1 perf pass optimizes *structure*: keep every tile resident
+in the ~16 MiB/core VMEM, keep the MXU's 128×128 systolic array fed with
+full tiles, double-buffer the HBM↔VMEM streams.  This module computes
+those structural metrics for a kernel configuration and for every GEMM a
+model variant actually runs, and powers the `--sweep` used in the §Perf
+log.
+
+Usage:
+    python -m compile.analysis --model resnet50 --variant ALVEO
+    python -m compile.analysis --sweep          # block-size sweep table
+"""
+
+import argparse
+import sys
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # per TPU core
+MXU_DIM = 128
+
+
+@dataclass
+class GemmShape:
+    name: str
+    m: int
+    k: int
+    n: int
+    in_bytes: int   # bytes per input element (1 int8, 2 bf16, 4 f32)
+    acc_bytes: int  # accumulator bytes (4 for int32/f32)
+
+
+@dataclass
+class TileReport:
+    vmem_bytes: int           # x-tile + w-tile (double-buffered) + acc
+    vmem_ok: bool
+    mxu_utilization: float    # fraction of the 128x128 array busy
+    hbm_traffic_bytes: int    # total HBM reads over the grid
+    grid: tuple
+
+    def summary(self) -> str:
+        return (
+            f"vmem {self.vmem_bytes / 1024:.0f} KiB ({'OK' if self.vmem_ok else 'OVER'}) "
+            f"mxu {self.mxu_utilization * 100:5.1f}% "
+            f"hbm {self.hbm_traffic_bytes / 1e6:8.2f} MB grid {self.grid}"
+        )
+
+
+def analyze_tiling(g: GemmShape, block=(128, 128, 128)) -> TileReport:
+    """Structural metrics for one tiled GEMM under the L1 BlockSpec."""
+    bm, bn, bk = block
+    bm_, bn_, bk_ = min(bm, _up(g.m, 8)), min(bn, _up(g.n, 8)), min(bk, _up(g.k, 8))
+    grid = (_div_up(g.m, bm_), _div_up(g.n, bn_), _div_up(g.k, bk_))
+    # Double-buffered input tiles + resident accumulator + epilogue vecs.
+    vmem = 2 * (bm_ * bk_ * g.in_bytes + bk_ * bn_ * g.in_bytes)
+    vmem += bm_ * bn_ * g.acc_bytes
+    vmem += 2 * bn_ * 4  # scale + bias rows
+    # MXU: each dot issues ceil(b/128)^3 passes of a 128x128x128 systolic
+    # step; utilization is the filled fraction of the final partial tiles.
+    fill = lambda dim, b: dim / (_div_up(dim, b) * b)
+    mxu = (
+        fill(g.m, min(bm_, MXU_DIM))
+        * fill(g.n, min(bn_, MXU_DIM))
+        * fill(g.k, min(bk_, MXU_DIM))
+    )
+    # HBM traffic: x re-read once per N-block column, w once per M-block row.
+    traffic = (
+        grid[1] * g.m * g.k * g.in_bytes
+        + grid[0] * g.k * g.n * g.in_bytes
+        + g.m * g.n * 4
+    )
+    return TileReport(
+        vmem_bytes=vmem,
+        vmem_ok=vmem <= VMEM_BYTES,
+        mxu_utilization=mxu,
+        hbm_traffic_bytes=traffic,
+        grid=grid,
+    )
+
+
+def _div_up(a, b):
+    return -(-a // b)
+
+
+def _up(v, m):
+    return _div_up(v, m) * m
+
+
+def model_gemms(model_name: str, variant_name: str):
+    """Enumerate every GEMM the (model, variant) actually executes, by
+    replaying the forward graph with a shape-tracing Ops."""
+    from compile.models import get_model
+    from compile.models.common import InitOps
+    import jax.numpy as jnp
+    from compile.variants import get_variant
+
+    mod = get_model(model_name)
+    variant = get_variant(variant_name)
+    in_bytes = {"int8": 1, "bf16": 2, "f32": 4, "native": 4}[variant.mode]
+
+    gemms = []
+
+    class TraceOps(InitOps):
+        def conv(self, name, x, cout, k, **kw):
+            kh, kw_ = (k, k) if isinstance(k, int) else k
+            out = super().conv(name, x, cout, k, **kw)
+            m = out.shape[0] * out.shape[1] * out.shape[2]
+            gemms.append(GemmShape(name, m, kh * kw_ * x.shape[-1], cout,
+                                   in_bytes, 4))
+            return out
+
+        def dense(self, name, x, out_dim, **kw):
+            out = super().dense(name, x, out_dim, **kw)
+            gemms.append(GemmShape(name, x.shape[0], x.shape[-1], out_dim,
+                                   in_bytes, 4))
+            return out
+
+    ops = TraceOps(seed=0)
+    mod.forward(ops, jnp.zeros((1,) + tuple(mod.INPUT_SHAPE), jnp.float32))
+    return gemms
+
+
+def report_model(model_name, variant_name, block=(128, 128, 128)):
+    gemms = model_gemms(model_name, variant_name)
+    print(f"{model_name}_{variant_name}: {len(gemms)} GEMMs, block={block}")
+    worst_vmem = 0
+    util_num = util_den = 0.0
+    for g in gemms:
+        r = analyze_tiling(g, block)
+        worst_vmem = max(worst_vmem, r.vmem_bytes)
+        macs = g.m * g.k * g.n
+        util_num += r.mxu_utilization * macs
+        util_den += macs
+    agg = util_num / max(util_den, 1)
+    print(f"  worst-tile VMEM {worst_vmem / 1024:.0f} KiB "
+          f"({'fits' if worst_vmem <= VMEM_BYTES else 'OVERFLOWS'} 16 MiB)")
+    print(f"  MAC-weighted MXU utilization estimate {agg * 100:.1f}%")
+    return agg, worst_vmem
+
+
+def sweep(model_name="resnet50", variant_name="ALVEO"):
+    """Block-size sweep: the L1 §Perf iteration table."""
+    print(f"block-size sweep on {model_name}_{variant_name} "
+          f"(MAC-weighted MXU util / worst VMEM):")
+    for block in [(32, 32, 32), (64, 64, 64), (128, 128, 128),
+                  (256, 256, 128), (128, 256, 128), (512, 512, 128)]:
+        gemms = model_gemms(model_name, variant_name)
+        worst = 0
+        num = den = 0.0
+        hbm = 0
+        for g in gemms:
+            r = analyze_tiling(g, block)
+            worst = max(worst, r.vmem_bytes)
+            macs = g.m * g.k * g.n
+            num += r.mxu_utilization * macs
+            den += macs
+            hbm += r.hbm_traffic_bytes
+        ok = "OK " if worst <= VMEM_BYTES else "OVER"
+        print(f"  {str(block):>16}  mxu {num / den * 100:5.1f}%  "
+              f"vmem {worst / 1024:7.0f} KiB {ok}  hbm {hbm / 1e6:8.1f} MB")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="resnet50")
+    ap.add_argument("--variant", default="ALVEO")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--block", type=int, nargs=3, default=[128, 128, 128])
+    args = ap.parse_args(argv)
+    if args.sweep:
+        sweep(args.model, args.variant)
+    else:
+        report_model(args.model, args.variant, tuple(args.block))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

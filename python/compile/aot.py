@@ -1,0 +1,222 @@
+"""AOT export — lower every (model × variant) to a PJRT-loadable artifact.
+
+This is the compile-path endpoint of the three-layer stack: python runs
+*once* here; the Rust coordinator loads the outputs and never imports
+python again.
+
+Per (model, variant) the artifact directory contains:
+
+- ``model.hlo.txt``   — HLO **text** of the jitted serving function
+  ``f(input, params…) → logits``.  Text, not ``.serialize()``: jax ≥ 0.5
+  emits HloModuleProto with 64-bit instruction ids that xla_extension
+  0.5.1 rejects; the text parser reassigns ids (see
+  /opt/xla-example/README.md).
+- ``weights.bin``     — raw little-endian tensor bytes, 64-byte aligned,
+  in **sorted parameter-name order** (jax flattens dict pytrees in sorted
+  key order, so position i+1 of the entry computation is params[i]).
+- ``manifest.json``   — input/output specs, parameter table
+  (name/dtype/shape/offset), model stats (params, MACs), calibration
+  record, preprocessing spec.  Everything the Rust runtime needs.
+
+Usage (the Rust Converter drives this in parallel, one process per
+combination, mirroring the paper's parallel generation):
+
+    python -m compile.aot --model resnet50 --variant GPU --out-dir ../artifacts
+    python -m compile.aot --all --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import calib, convert
+from compile.models import MODELS, get_model
+from compile.models.common import ExecOps, init_model
+from compile.variants import ALL_VARIANTS, get_variant
+
+MASTER_SEED = 7  # all variants of a model share one master parameter set
+
+_DTYPE_NAMES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int8): "i8",
+}
+
+
+def _dtype_name(arr):
+    if arr.dtype == jnp.bfloat16:
+        return "bf16"
+    return _DTYPE_NAMES[np.dtype(arr.dtype)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_forward(model_mod, variant, act_scales):
+    """The deployable serving function for one variant."""
+
+    def forward(x, params):
+        ops = ExecOps(variant.mode, params, act_scales)
+        return (model_mod.forward(ops, x),)
+
+    return forward
+
+
+def export_variant(model_name, variant_name, out_dir, *, calib_samples=32,
+                   verbose=True):
+    """Convert + lower + export one (model, variant). Returns the manifest."""
+    t_start = time.time()
+    model_mod = get_model(model_name)
+    variant = get_variant(variant_name)
+
+    master, layer_meta, macs = init_model(model_mod, seed=MASTER_SEED)
+    calib_batches = (
+        calib.calibration_set(model_mod, samples=calib_samples)
+        if variant.mode == "int8" else []
+    )
+    params, act_scales, calib_record = convert.convert(
+        model_mod, master, layer_meta, variant, calib_batches
+    )
+    t_convert = time.time() - t_start
+
+    # --- lower ------------------------------------------------------------
+    t0 = time.time()
+    params_j = {k: jnp.asarray(v) for k, v in params.items()}
+    in_shape = (1,) + tuple(model_mod.INPUT_SHAPE)
+    x_spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    p_spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in params_j.items()}
+    fwd = build_forward(model_mod, variant, act_scales)
+    lowered = jax.jit(fwd).lower(x_spec, p_spec)
+    hlo_text = to_hlo_text(lowered)
+    t_lower = time.time() - t0
+
+    # --- write artifact -----------------------------------------------------
+    vdir = os.path.join(out_dir, f"{model_name}_{variant_name}")
+    os.makedirs(vdir, exist_ok=True)
+    with open(os.path.join(vdir, "model.hlo.txt"), "w") as f:
+        f.write(hlo_text)
+
+    names = sorted(params_j)  # jax dict-pytree flatten order
+    ptable = []
+    blob = bytearray()
+    for name in names:
+        arr = np.asarray(params_j[name])
+        off = len(blob)
+        pad = (-off) % 64
+        blob.extend(b"\0" * pad)
+        off += pad
+        raw = arr.tobytes()
+        blob.extend(raw)
+        ptable.append({
+            "name": name,
+            "dtype": _dtype_name(arr),
+            "shape": list(arr.shape),
+            "offset": off,
+            "nbytes": len(raw),
+        })
+    with open(os.path.join(vdir, "weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+
+    # --- serving-path fixtures ---------------------------------------------
+    # A few (input, logits) pairs computed through the *same jitted function*
+    # that was lowered: the Rust integration tests replay these through the
+    # PJRT runtime and assert bitwise-close parity (python is build-time
+    # only, so this is the only numeric bridge between the layers).
+    fixtures = []
+    fix_blob = bytearray()
+    jit_fwd = jax.jit(fwd)
+    for i, inp in enumerate(calib.request_inputs(model_mod, count=4)):
+        out = np.asarray(jit_fwd(jnp.asarray(inp), params_j)[0])
+        in_off = len(fix_blob)
+        fix_blob.extend(np.asarray(inp, np.float32).tobytes())
+        out_off = len(fix_blob)
+        fix_blob.extend(out.astype(np.float32).tobytes())
+        fixtures.append({"input_offset": in_off, "output_offset": out_off,
+                         "output_shape": list(out.shape)})
+    with open(os.path.join(vdir, "fixtures.bin"), "wb") as f:
+        f.write(bytes(fix_blob))
+
+    manifest = {
+        "model": model_name,
+        "variant": variant_name,
+        "platform": variant.platform,
+        "framework": variant.framework,
+        "precision": variant.precision,
+        "mode": variant.mode,
+        "baseline_of": variant.baseline_of,
+        "input": {"shape": list(in_shape), "dtype": "f32"},
+        "output": {"shape": [1, model_mod.NUM_CLASSES], "dtype": "f32"},
+        "params": ptable,
+        "stats": {
+            "param_count": int(sum(np.asarray(v).size for v in params_j.values())),
+            "weights_bytes": len(blob),
+            "master_size_mb": round(
+                sum(v.nbytes for v in master.values()) / 1e6, 3),
+            "macs": int(macs),
+            "gflops": round(2 * macs / 1e9, 6),
+            "layers": len(layer_meta),
+            "hlo_bytes": len(hlo_text),
+            "convert_time_s": round(t_convert, 3),
+            "lower_time_s": round(t_lower, 3),
+        },
+        "calibration": calib_record,
+        "preprocess": {"kind": "per-image-standardize"},
+        "fixtures": fixtures,
+    }
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if verbose:
+        print(f"[aot] {model_name}_{variant_name}: convert {t_convert:.1f}s "
+              f"lower {t_lower:.1f}s hlo {len(hlo_text)/1e6:.2f}MB "
+              f"weights {len(blob)/1e6:.1f}MB", flush=True)
+    return manifest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=sorted(MODELS), help="model name")
+    ap.add_argument("--variant", choices=sorted(ALL_VARIANTS),
+                    help="variant name (Table I row or *_TF baseline)")
+    ap.add_argument("--all", action="store_true",
+                    help="export every model × variant combination")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--calib-samples", type=int, default=32)
+    ap.add_argument("--list", action="store_true",
+                    help="print the combination matrix and exit")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.list or args.all:
+        combos = [(m, v) for m in sorted(MODELS) for v in sorted(ALL_VARIANTS)]
+    elif args.model and args.variant:
+        combos = [(args.model, args.variant)]
+    else:
+        ap.error("need --model+--variant, --all, or --list")
+
+    if args.list:
+        for m, v in combos:
+            print(f"{m}_{v}")
+        return 0
+
+    for m, v in combos:
+        export_variant(m, v, args.out_dir, calib_samples=args.calib_samples)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Synthetic calibration + benchmark datasets (deterministic).
+
+The paper's Converter takes a representative dataset as ``tf.data.Dataset``;
+ours takes any iterable of numpy batches.  With no proprietary traces
+available (DESIGN.md §2) we synthesize "image-like" inputs: smooth low-
+frequency fields plus sparse highlights, normalized the way image
+classification pipelines normalize — which exercises the same calibration
+code path (amax tracking over realistic, non-uniform activations).
+"""
+
+import numpy as np
+
+
+def image_like(rng, n, h, w, c):
+    """Batch of image-like f32 tensors in roughly N(0,1) after normalize."""
+    # Low-frequency structure: upsampled coarse noise.
+    coarse = rng.standard_normal((n, max(2, h // 8), max(2, w // 8), c))
+    img = np.kron(coarse, np.ones((1, 8, 8, 1)))[:, :h, :w, :]
+    # Sparse highlights (specular/edges) — stresses amax calibration.
+    mask = rng.random((n, h, w, c)) < 0.01
+    img = img + mask * rng.standard_normal((n, h, w, c)) * 3.0
+    # Per-image standardization (the user "preprocess interface").
+    mean = img.mean(axis=(1, 2, 3), keepdims=True)
+    std = img.std(axis=(1, 2, 3), keepdims=True) + 1e-6
+    return ((img - mean) / std).astype(np.float32)
+
+
+def calibration_set(model_mod, *, samples=32, batch=8, seed=1234):
+    """Deterministic calibration batches for one model."""
+    h, w, c = model_mod.INPUT_SHAPE
+    rng = np.random.default_rng(seed)
+    out = []
+    done = 0
+    while done < samples:
+        n = min(batch, samples - done)
+        out.append(image_like(rng, n, h, w, c))
+        done += n
+    return out
+
+
+def request_inputs(model_mod, *, count=16, seed=99):
+    """Inputs for serving-path correctness checks (distinct seed from
+    calibration, so tests catch calibration-set overfitting)."""
+    h, w, c = model_mod.INPUT_SHAPE
+    rng = np.random.default_rng(seed)
+    return [image_like(rng, 1, h, w, c) for _ in range(count)]

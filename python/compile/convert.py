@@ -1,0 +1,141 @@
+"""The Converter — stage 1 of the TF2AIF pipeline (paper §IV-C).
+
+Takes the master FP32 model and produces the per-variant parameter set and
+graph configuration, replicating what the vendor flows do:
+
+1. **BN folding** (all accelerated variants): batch-norm affine transforms
+   are folded into the preceding conv's weights and bias — TensorRT, TFLite
+   and Vitis-AI all do this before quantization.  The ``native`` baseline
+   keeps BN unfolded, exactly like a stock TensorFlow graph.
+2. **Calibration** (INT8 variants): the folded FP32 model runs over a
+   representative dataset (the paper's ``tf.data.Dataset`` interface → our
+   numpy iterator) recording per-layer activation amax; symmetric scales
+   are derived from them (TensorRT PTQ / TFLite representative-dataset
+   flow).
+3. **Quantization** (INT8 variants): per-channel symmetric weight scales;
+   weights → int8, combined dequant scale ``s_x·s_w[c]`` and f32 bias are
+   exported per layer.  The ALVEO variant constrains every scale to a
+   power of two — the Vitis-AI DPU shifts instead of multiplying.
+4. **Weight casting** (FP16/bf16 variant): weights stored in bf16 — the
+   storage half of the TensorRT-FP16 conversion.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.models.common import BN_EPS, CalibOps
+
+
+def fold_bn(params, layer_meta):
+    """Fold BN into conv weights/biases: returns {name/w, name/b} dict.
+
+    For a conv y = W*x followed by BN(γ, β, μ, σ²):
+      W' = W · γ/√(σ²+ε)   (per output channel)
+      b' = β − μ·γ/√(σ²+ε)
+    Layers without BN keep their existing bias.  Dense layers pass through.
+    """
+    folded = {}
+    for name, meta in layer_meta.items():
+        w = params[f"{name}/w"]
+        if meta["bn"]:
+            gamma = params[f"{name}/gamma"]
+            beta = params[f"{name}/beta"]
+            mean = params[f"{name}/mean"]
+            var = params[f"{name}/var"]
+            scale = gamma / np.sqrt(var + BN_EPS)
+            # conv: HWIO — output channel is the last axis; dwconv: HWC —
+            # the channel axis is also last.  Broadcasting handles both.
+            folded[f"{name}/w"] = (w * scale).astype(np.float32)
+            folded[f"{name}/b"] = (beta - mean * scale).astype(np.float32)
+        else:
+            folded[f"{name}/w"] = w.astype(np.float32)
+            folded[f"{name}/b"] = params[f"{name}/b"].astype(np.float32)
+    return folded
+
+
+def calibrate(model_mod, folded, layer_meta, calib_batches):
+    """Run the folded FP32 model over the calibration set; return amax."""
+    ops = CalibOps({k: jnp.array(v) for k, v in folded.items()}, layer_meta)
+    for batch in calib_batches:
+        model_mod.forward(ops, jnp.array(batch))
+    return ops.amax
+
+
+def _po2(x):
+    """Round a positive scale to the nearest power of two (Vitis-AI DPU)."""
+    return float(2.0 ** round(math.log2(max(x, 1e-12))))
+
+
+def act_scales_from_amax(amax, *, po2=False):
+    """Symmetric activation scale per layer: s = amax / 127."""
+    scales = {}
+    for name, m in amax.items():
+        s = m / 127.0
+        scales[name] = _po2(s) if po2 else s
+    return scales
+
+
+def quantize_weights(folded, layer_meta, act_scales, *, po2=False):
+    """Per-channel symmetric weight quantization.
+
+    Returns the int8 parameter dict: per layer ``wq`` (i8), ``s``
+    (f32[c] combined dequant scale = s_x·s_w[c]) and ``b`` (f32 bias).
+    Dense and conv weights quantize over the output-channel axis; depthwise
+    weights over their channel axis.
+    """
+    qparams = {}
+    for name, meta in layer_meta.items():
+        w = folded[f"{name}/w"]
+        b = folded[f"{name}/b"]
+        s_x = act_scales[name]
+        # output-channel axis is last for conv (HWIO), dwconv (HWC), dense.
+        reduce_axes = tuple(range(w.ndim - 1))
+        w_amax = np.maximum(np.abs(w).max(axis=reduce_axes), 1e-8)
+        s_w = w_amax / 127.0
+        if po2:
+            s_w = np.array([_po2(s) for s in s_w], np.float32)
+        wq = np.clip(np.round(w / s_w), -127, 127).astype(np.int8)
+        qparams[f"{name}/wq"] = wq
+        qparams[f"{name}/s"] = (s_x * s_w).astype(np.float32)
+        qparams[f"{name}/b"] = b.astype(np.float32)
+    return qparams
+
+
+def convert(model_mod, master_params, layer_meta, variant, calib_batches):
+    """Full Converter: (master params, variant) → (exec params, act scales).
+
+    Returns (params_dict, act_scales, calib_record) where params_dict is
+    exactly what gets exported to ``weights.bin`` / fed to the lowered
+    function, and act_scales are baked into the INT8 graph as constants.
+    """
+    if variant.mode == "native":
+        # Stock-TensorFlow graph: masters pass through untouched.
+        return dict(master_params), {}, {"scheme": "none"}
+
+    folded = fold_bn(master_params, layer_meta)
+
+    if variant.mode == "f32":
+        return folded, {}, {"scheme": "bn-folded fp32"}
+
+    if variant.mode == "bf16":
+        out = {}
+        for name in layer_meta:
+            out[f"{name}/w"] = folded[f"{name}/w"].astype(jnp.bfloat16)
+            out[f"{name}/b"] = folded[f"{name}/b"]
+        return out, {}, {"scheme": "bn-folded bf16 weights, f32 accum"}
+
+    assert variant.mode == "int8", variant.mode
+    amax = calibrate(model_mod, folded, layer_meta, calib_batches)
+    scales = act_scales_from_amax(amax, po2=variant.po2_scales)
+    qparams = quantize_weights(folded, layer_meta, scales,
+                               po2=variant.po2_scales)
+    record = {
+        "scheme": ("symmetric per-channel, po2 (Vitis-AI DPU)"
+                   if variant.po2_scales
+                   else "symmetric per-channel (TensorRT/TFLite PTQ)"),
+        "samples": sum(int(np.shape(b)[0]) for b in calib_batches),
+        "act_scales": {k: float(v) for k, v in scales.items()},
+    }
+    return qparams, scales, record

@@ -1,0 +1,68 @@
+"""L2 graph inspection: op census of the lowered HLO per artifact.
+
+The L2 perf target (DESIGN.md §8) is structural: no redundant
+recomputation, XLA-fusable element-wise chains, one im2col per conv.  This
+tool counts the ops that matter in each artifact's `model.hlo.txt` so the
+§Perf log can show the graph shape per variant (e.g. native keeps separate
+BN multiply/add chains; accelerated variants fold them away).
+
+Usage:
+    python -m compile.hlo_stats [--artifacts ../artifacts] [--model lenet]
+"""
+
+import argparse
+import os
+import re
+import sys
+from collections import Counter
+
+INTERESTING = [
+    "dot", "convolution", "while", "fusion", "reduce-window", "reduce",
+    "transpose", "reshape", "broadcast", "multiply", "add", "divide",
+    "rsqrt", "maximum", "clamp", "round-nearest-even", "convert",
+    "dynamic-update-slice", "dynamic-slice", "concatenate", "pad",
+]
+
+
+def census(hlo_text: str) -> Counter:
+    c = Counter()
+    # HLO text: `%name = type opcode(...)`; count opcode tokens.
+    for m in re.finditer(r"=\s+[\w\[\],{}\s]*?\b([a-z][a-z0-9-]*)\(", hlo_text):
+        op = m.group(1)
+        if op in INTERESTING:
+            c[op] += 1
+    c["total_instructions"] = hlo_text.count(" = ")
+    c["bytes"] = len(hlo_text)
+    return c
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--model", default=None)
+    ap.add_argument("--ops", default="dot,while,multiply,add,rsqrt,"
+                                     "round-nearest-even,clamp,total_instructions")
+    args = ap.parse_args(argv)
+    ops = args.ops.split(",")
+
+    rows = []
+    for entry in sorted(os.listdir(args.artifacts)):
+        path = os.path.join(args.artifacts, entry, "model.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        if args.model and not entry.startswith(args.model + "_"):
+            continue
+        with open(path) as f:
+            c = census(f.read())
+        rows.append((entry, c))
+
+    header = f"{'artifact':<26}" + "".join(f"{op:>12}" for op in ops)
+    print(header)
+    print("-" * len(header))
+    for entry, c in rows:
+        print(f"{entry:<26}" + "".join(f"{c.get(op, 0):>12}" for op in ops))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Layer-1 Pallas kernels: the accelerated-inference hot paths.
+
+Each vendor flow the paper wraps (TensorRT, TFLite, Vitis-AI) bottoms out in
+a precision-specialized GEMM fed through a blocked memory hierarchy.  These
+kernels are the TPU-shaped equivalents (see DESIGN.md §3):
+
+- :mod:`matmul`  — FP32 tiled GEMM (the "TFLite on x86 CPU" path).
+- :mod:`hmatmul` — bf16 tiled GEMM with f32 accumulation (the "TensorRT
+  FP16 tensor-core" path mapped onto the MXU).
+- :mod:`qmatmul` — INT8×INT8→INT32 tiled GEMM with a fused per-channel
+  rescale + bias epilogue (the "TensorRT INT8 / TFLite INT8 / Vitis-AI DPU"
+  path).
+- :mod:`conv`    — im2col convolution wrappers that feed the GEMMs.
+- :mod:`ref`     — pure-jnp oracles used by the pytest correctness gate.
+
+All kernels run under ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.  Block sizes default to
+MXU-friendly multiples (see :data:`DEFAULT_BLOCK`); callers pad to block
+multiples via :func:`compile.kernels.conv.pad_to_block`.
+"""
+
+from compile.kernels.matmul import matmul_f32
+from compile.kernels.hmatmul import matmul_bf16
+from compile.kernels.qmatmul import matmul_int8
+
+# (bm, bn, bk) — 128-multiples saturate the 128x128 MXU; small models pad up
+# to one block.  Overridable per-call for the L1 perf sweep.
+DEFAULT_BLOCK = (256, 256, 256)
+
+__all__ = ["matmul_f32", "matmul_bf16", "matmul_int8", "DEFAULT_BLOCK"]

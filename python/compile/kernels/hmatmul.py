@@ -1,0 +1,77 @@
+"""bf16 tiled-GEMM Pallas kernel — the FP16 tensor-core path, TPU-shaped.
+
+The paper's ``GPU`` platform runs TensorRT with FP16 precision to hit the
+V100's tensor cores.  The TPU analogue (DESIGN.md §3) is a bfloat16 GEMM on
+the MXU: inputs are cast to bf16 at the VMEM boundary, products accumulate
+in f32 (exactly the tensor-core/WMMA contract), and the epilogue (bias +
+optional ReLU) runs in f32 before the block is written back.
+
+The numerics therefore differ from the FP32 path the same way TensorRT-FP16
+differs from TF-FP32: reduced-precision products, full-precision
+accumulation.  ``ref.matmul_bf16_ref`` mirrors this bit-for-bit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hmm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # bf16 multiplies, f32 accumulation: the MXU contract.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.bfloat16),
+        w_ref[...].astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def matmul_bf16(x, w, bias=None, *, relu=False, block=(256, 256, 256)):
+    """``relu(bf16(x) @ bf16(w) + bias)`` with f32 accumulation.
+
+    Weights are expected pre-cast to bf16 by the converter (half-precision
+    storage is where the memory saving comes from); activations are cast in
+    VMEM.  Accepts f32 or bf16 inputs.
+
+    Returns f32[M, N].
+    """
+    from compile.kernels.conv import pad_to_block
+    from compile.kernels.matmul import _shrink_block
+
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+
+    (bm, bn, bk) = _shrink_block(block, M, N, K)
+    xp, wp, bp, (Mp, Np, Kp) = pad_to_block(x, w, bias, (bm, bn, bk))
+
+    kernel = functools.partial(_hmm_kernel, relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:M, :N]

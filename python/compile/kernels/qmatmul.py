@@ -1,0 +1,107 @@
+"""INT8 tiled-GEMM Pallas kernel with fused requantization epilogue.
+
+This is the core of the paper's three INT8 platforms:
+
+- ``AGX``   (TensorRT INT8 on Jetson Xavier): symmetric per-channel weight
+  scales, per-tensor activation scale — the TensorRT PTQ contract.
+- ``ARM``   (TFLite INT8): same symmetric per-channel scheme.
+- ``ALVEO`` (Vitis-AI DPU): scales constrained to powers of two — the DPU
+  shifts instead of multiplying.  The converter enforces the constraint;
+  this kernel is scheme-agnostic (it consumes a combined f32 scale vector).
+
+TPU mapping (DESIGN.md §3): INT8×INT8 products accumulate in INT32 on the
+MXU (the DP4A / DPU-systolic contract), then a single fused epilogue applies
+``acc * scale + bias`` and the optional ReLU in f32.  The activation is
+requantized by the *caller* at the next layer boundary so that layers can be
+fused with pooling etc. in between.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # INT8 x INT8 -> INT32 accumulation: the DPU / DP4A / MXU-int8 contract.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        # Dequantize with the combined (s_x * s_w[j]) per-channel scale and
+        # add the f32 bias.  One pass over the block while it is VMEM-hot.
+        out = acc_ref[...].astype(jnp.float32) * s_ref[...] + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def matmul_int8(x_q, w_q, scale, bias=None, *, relu=False, block=(256, 256, 256)):
+    """``relu((x_q @ w_q) * scale + bias)`` — INT8 GEMM, f32 output.
+
+    Args:
+      x_q: i8[M, K] quantized activations.
+      w_q: i8[K, N] quantized weights.
+      scale: f32[N] combined dequant scale per output channel
+        (``s_x * s_w[j]``).
+      bias: f32[N] or None (applied *after* dequantization, like
+        TFLite/TensorRT fold it).
+      relu: fuse a ReLU into the epilogue.
+      block: (bm, bn, bk) VMEM tile sizes.
+
+    Returns:
+      f32[M, N] dequantized output.
+    """
+    from compile.kernels.conv import pad_to_block
+    from compile.kernels.matmul import _shrink_block
+
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    assert x_q.dtype == jnp.int8 and w_q.dtype == jnp.int8, (
+        f"int8 GEMM needs int8 inputs, got {x_q.dtype}/{w_q.dtype}"
+    )
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+
+    (bm, bn, bk) = _shrink_block(block, M, N, K)
+    xp, wp, bp, (Mp, Np, Kp) = pad_to_block(x_q, w_q, bias, (bm, bn, bk))
+    sp = jnp.pad(scale.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    kernel = functools.partial(_qmm_kernel, relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=True,
+    )(xp, wp, sp, bp)
+    return out[:M, :N]
+
+
+def quantize_sym(x, scale):
+    """Symmetric quantization to int8: ``clip(round(x / scale), -127, 127)``.
+
+    Used at layer boundaries by the L2 INT8 model variants; the clamp to
+    ±127 (not -128) matches TensorRT's symmetric scheme, keeping the range
+    symmetric so the DPU shift trick stays exact.
+    """
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)

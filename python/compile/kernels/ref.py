@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness gate.
+
+Every kernel in this package has a reference here that computes the same
+mathematical function with plain jnp ops (no Pallas, no tiling, no
+padding).  ``python/tests/test_kernels.py`` asserts allclose between kernel
+and oracle across a hypothesis-driven sweep of shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_f32_ref(x, w, bias=None, *, relu=False):
+    out = x @ w
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def matmul_bf16_ref(x, w, bias=None, *, relu=False):
+    """bf16 products, f32 accumulation — mirrors the MXU contract exactly."""
+    out = jnp.dot(
+        x.astype(jnp.bfloat16),
+        w.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def matmul_int8_ref(x_q, w_q, scale, bias=None, *, relu=False):
+    """Exact int32 accumulation then per-channel dequant."""
+    acc = jnp.dot(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * scale
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_ref(x, w, bias, *, stride=1, padding=0, relu=False):
+    """NHWC/HWIO convolution via lax.conv_general_dilated (XLA's own conv)."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def depthwise_conv2d_ref(x, w, bias, *, stride=1, padding=0, relu=False):
+    """Depthwise conv via feature_group_count=C."""
+    c = w.shape[2]
+    # HWIO with I=1, O=C and feature_group_count=C is a depthwise conv.
+    w4 = w.reshape(w.shape[0], w.shape[1], 1, c)
+    out = jax.lax.conv_general_dilated(
+        x, w4,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def quantize_sym_ref(x, scale):
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)

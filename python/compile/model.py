@@ -1,0 +1,11 @@
+"""Compatibility shim — the L2 model zoo lives in :mod:`compile.models`.
+
+Kept so ``python/compile/model.py`` (the path named in the project
+scaffold/Makefile docs) resolves; see :mod:`compile.models.common` for the
+framework and :mod:`compile.aot` for the export entry point.
+"""
+
+from compile.models import MODELS, get_model
+from compile.models.common import ExecOps, InitOps, init_model
+
+__all__ = ["MODELS", "get_model", "ExecOps", "InitOps", "init_model"]

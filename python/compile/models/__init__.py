@@ -1,0 +1,11 @@
+"""Layer-2 model zoo — the paper's Table III models, JAX-native.
+
+Architectures are faithful to the originals (same block structure and
+depth); inputs and widths are scaled down so interpret-mode Pallas stays
+tractable on CPU while preserving the paper's size ordering
+LeNet ≪ MobileNetV1 < ResNet50 < InceptionV4 (DESIGN.md §7).
+"""
+
+from compile.models.registry import MODELS, get_model
+
+__all__ = ["MODELS", "get_model"]

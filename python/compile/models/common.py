@@ -1,0 +1,311 @@
+"""Model-definition framework: one ``forward`` per model, many backends.
+
+A model is a single python function ``forward(ops, x)`` that calls named
+layer primitives on an :class:`Ops` object.  The same function serves every
+phase of the TF2AIF pipeline by swapping the Ops implementation:
+
+- :class:`InitOps`   — shape-inference + parameter initialization + FLOP
+  and size accounting (builds the "master" FP32 params, Table III stats).
+- :class:`CalibOps`  — the Converter's calibration pass: runs the folded
+  FP32 model over the calibration set recording per-layer activation
+  ranges (pure-jnp ops, fast).
+- :class:`ExecOps`   — the deployable forward for a concrete variant:
+  ``native`` (unfolded BN, generic lax convs — the "native TensorFlow"
+  baseline), ``f32`` / ``bf16`` / ``int8`` (folded, Pallas-kernel paths).
+
+Parameter naming convention (flat dict, sorted-key export order):
+``<layer>/w``, ``<layer>/b``, ``<layer>/wq`` (int8), ``<layer>/s``
+(combined dequant scale), ``<layer>/gamma|beta|mean|var`` (native BN).
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import conv as K
+from compile.kernels import ref as R
+from compile.kernels.qmatmul import quantize_sym
+from compile.kernels.matmul import matmul_f32
+from compile.kernels.hmatmul import matmul_bf16
+from compile.kernels.qmatmul import matmul_int8
+
+BN_EPS = 1e-3
+
+
+class InitOps:
+    """Parameter initialization + architecture accounting pass (numpy)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.params = {}          # name -> np.ndarray (FP32 masters)
+        self.layer_meta = {}      # name -> dict(kind, bn, relu, ...)
+        self.order = []           # layer call order
+        self.macs = 0             # multiply-accumulates (GEMM+DW+dense)
+
+    def _he(self, shape, fan_in):
+        return self.rng.normal(0.0, math.sqrt(2.0 / fan_in), shape).astype(
+            np.float32
+        )
+
+    def _bn(self, name, c):
+        self.params[f"{name}/gamma"] = self.rng.uniform(0.8, 1.2, c).astype(
+            np.float32
+        )
+        self.params[f"{name}/beta"] = self.rng.normal(0, 0.1, c).astype(
+            np.float32
+        )
+        self.params[f"{name}/mean"] = self.rng.normal(0, 0.1, c).astype(
+            np.float32
+        )
+        self.params[f"{name}/var"] = self.rng.uniform(0.5, 1.5, c).astype(
+            np.float32
+        )
+
+    def conv(self, name, x, cout, k, *, stride=1, padding=0, relu=True,
+             bn=True):
+        kh, kw = (k, k) if isinstance(k, int) else k
+        cin = x.shape[-1]
+        w = self._he((kh, kw, cin, cout), kh * kw * cin)
+        self.params[f"{name}/w"] = w
+        if bn:
+            self._bn(name, cout)
+        else:
+            self.params[f"{name}/b"] = np.zeros(cout, np.float32)
+        self.layer_meta[name] = dict(kind="conv", bn=bn, relu=relu,
+                                     stride=stride, padding=padding)
+        self.order.append(name)
+        out = R.conv2d_ref(x, jnp.array(w), jnp.zeros(cout), stride=stride,
+                           padding=padding)
+        ho, wo = out.shape[1], out.shape[2]
+        self.macs += x.shape[0] * ho * wo * kh * kw * cin * cout
+        return jnp.maximum(out, 0) if relu else out
+
+    def dwconv(self, name, x, k, *, stride=1, padding=0, relu=True, bn=True):
+        c = x.shape[-1]
+        w = self._he((k, k, c), k * k)
+        self.params[f"{name}/w"] = w
+        if bn:
+            self._bn(name, c)
+        else:
+            self.params[f"{name}/b"] = np.zeros(c, np.float32)
+        self.layer_meta[name] = dict(kind="dwconv", bn=bn, relu=relu,
+                                     stride=stride, padding=padding)
+        self.order.append(name)
+        out = R.depthwise_conv2d_ref(x, jnp.array(w), jnp.zeros(c),
+                                     stride=stride, padding=padding)
+        ho, wo = out.shape[1], out.shape[2]
+        self.macs += x.shape[0] * ho * wo * k * k * c
+        return jnp.maximum(out, 0) if relu else out
+
+    def dense(self, name, x, out_dim, *, relu=False):
+        in_dim = x.shape[-1]
+        self.params[f"{name}/w"] = self._he((in_dim, out_dim), in_dim)
+        self.params[f"{name}/b"] = np.zeros(out_dim, np.float32)
+        self.layer_meta[name] = dict(kind="dense", bn=False, relu=relu)
+        self.order.append(name)
+        self.macs += x.shape[0] * in_dim * out_dim
+        out = x @ jnp.array(self.params[f"{name}/w"])
+        return jnp.maximum(out, 0) if relu else out
+
+    # Structural ops — no parameters, shared across all Ops backends.
+    def maxpool(self, x, size, stride):
+        return K.max_pool(x, size, stride)
+
+    def avgpool(self, x, size, stride, padding="VALID"):
+        return K.avg_pool(x, size, stride, padding)
+
+    def gap(self, x):
+        return K.global_avg_pool(x)
+
+    def flatten(self, x):
+        return x.reshape(x.shape[0], -1)
+
+    def add(self, a, b):
+        return a + b
+
+    def relu(self, x):
+        return jnp.maximum(x, 0.0)
+
+    def concat(self, xs):
+        return jnp.concatenate(xs, axis=-1)
+
+
+class CalibOps:
+    """Calibration pass over the *folded* FP32 params (pure-jnp ops).
+
+    Records the running amax of every quantizable layer's input — the
+    Converter turns these into symmetric activation scales.
+    """
+
+    def __init__(self, folded, layer_meta):
+        self.folded = folded
+        self.layer_meta = layer_meta
+        self.amax = {}
+
+    def _record(self, name, x):
+        m = float(jnp.max(jnp.abs(x)))
+        self.amax[name] = max(self.amax.get(name, 0.0), m, 1e-6)
+
+    def conv(self, name, x, cout, k, *, stride=1, padding=0, relu=True,
+             bn=True):
+        self._record(name, x)
+        w = self.folded[f"{name}/w"]
+        b = self.folded[f"{name}/b"]
+        return R.conv2d_ref(x, w, b, stride=stride, padding=padding,
+                            relu=relu)
+
+    def dwconv(self, name, x, k, *, stride=1, padding=0, relu=True, bn=True):
+        self._record(name, x)
+        w = self.folded[f"{name}/w"]
+        b = self.folded[f"{name}/b"]
+        return R.depthwise_conv2d_ref(x, w, b, stride=stride,
+                                      padding=padding, relu=relu)
+
+    def dense(self, name, x, out_dim, *, relu=False):
+        self._record(name, x)
+        w = self.folded[f"{name}/w"]
+        b = self.folded[f"{name}/b"]
+        return R.matmul_f32_ref(x, w, b, relu=relu)
+
+    maxpool = InitOps.maxpool
+    avgpool = InitOps.avgpool
+    gap = InitOps.gap
+    flatten = InitOps.flatten
+    add = InitOps.add
+    relu = InitOps.relu
+    concat = InitOps.concat
+
+
+class ExecOps:
+    """Deployable forward for one variant.
+
+    mode "native": unfolded master params, generic lax convs, separate
+      BN/ReLU ops — the Fig. 5 "native TensorFlow" graph.
+    mode "f32"/"bf16": folded params, Pallas GEMM path with fused epilogue.
+    mode "int8": quantized params, calibrated activation scales baked as
+      constants (like a TensorRT engine), Pallas INT8 GEMM.
+    """
+
+    # Per-precision VMEM tile defaults from the §Perf block sweep
+    # (EXPERIMENTS.md): wider K amortizes grid steps for the wider dtypes;
+    # int8's K reduction is cheap enough that 256 wins.  All are
+    # 128-multiples (MXU-aligned) and fit 16 MiB VMEM with double
+    # buffering (compile.analysis).
+    MODE_BLOCKS = {
+        "f32": (256, 256, 1024),
+        "bf16": (256, 256, 512),
+        "int8": (256, 256, 256),
+        "native": (256, 256, 256),  # unused: native path has no Pallas
+    }
+
+    def __init__(self, mode, params, act_scales=None, block=None):
+        assert mode in ("native", "f32", "bf16", "int8"), mode
+        self.mode = mode
+        self.params = params
+        self.act_scales = act_scales or {}
+        self.block = block or self.MODE_BLOCKS[mode]
+
+    # -- helpers ----------------------------------------------------------
+    def _p(self, key):
+        return self.params[key]
+
+    def _bn_apply(self, name, x):
+        g = self._p(f"{name}/gamma")
+        b = self._p(f"{name}/beta")
+        m = self._p(f"{name}/mean")
+        v = self._p(f"{name}/var")
+        return g * (x - m) / jnp.sqrt(v + BN_EPS) + b
+
+    # -- layers ------------------------------------------------------------
+    def conv(self, name, x, cout, k, *, stride=1, padding=0, relu=True,
+             bn=True):
+        if self.mode == "native":
+            w = self._p(f"{name}/w")
+            if bn:
+                out = R.conv2d_ref(x, w, jnp.zeros(w.shape[-1]),
+                                   stride=stride, padding=padding)
+                out = self._bn_apply(name, out)
+            else:
+                out = R.conv2d_ref(x, w, self._p(f"{name}/b"),
+                                   stride=stride, padding=padding)
+            return jnp.maximum(out, 0.0) if relu else out
+        if self.mode == "int8":
+            s_x = self.act_scales[name]
+            x_q = quantize_sym(x, s_x)
+            return K.conv2d_gemm(
+                x_q, self._p(f"{name}/wq"), self._p(f"{name}/b"),
+                stride=stride, padding=padding, relu=relu, mode="int8",
+                scale=self._p(f"{name}/s"), block=self.block,
+            )
+        # f32 / bf16: folded params, fused Pallas epilogue.
+        return K.conv2d_gemm(
+            self._maybe_f32_act(x), self._p(f"{name}/w"), self._p(f"{name}/b"),
+            stride=stride, padding=padding, relu=relu, mode=self.mode,
+            block=self.block,
+        )
+
+    def dwconv(self, name, x, k, *, stride=1, padding=0, relu=True, bn=True):
+        if self.mode == "native":
+            w = self._p(f"{name}/w")
+            if bn:
+                out = R.depthwise_conv2d_ref(x, w, jnp.zeros(w.shape[-1]),
+                                             stride=stride, padding=padding)
+                out = self._bn_apply(name, out)
+            else:
+                out = R.depthwise_conv2d_ref(x, w, self._p(f"{name}/b"),
+                                             stride=stride, padding=padding)
+            return jnp.maximum(out, 0.0) if relu else out
+        if self.mode == "int8":
+            s_x = self.act_scales[name]
+            x_q = quantize_sym(x, s_x)
+            return K.depthwise_conv2d_int8(
+                x_q, self._p(f"{name}/wq"), self._p(f"{name}/s"),
+                self._p(f"{name}/b"), stride=stride, padding=padding,
+                relu=relu,
+            )
+        # Depthwise stays on the vector path (DESIGN.md §3) in f32/bf16.
+        return K.depthwise_conv2d(
+            self._maybe_f32_act(x), self._p(f"{name}/w"), self._p(f"{name}/b"),
+            stride=stride, padding=padding, relu=relu,
+        )
+
+    def dense(self, name, x, out_dim, *, relu=False):
+        if self.mode == "native":
+            return R.matmul_f32_ref(x, self._p(f"{name}/w"),
+                                    self._p(f"{name}/b"), relu=relu)
+        if self.mode == "int8":
+            s_x = self.act_scales[name]
+            x_q = quantize_sym(x, s_x)
+            return matmul_int8(x_q, self._p(f"{name}/wq"),
+                               self._p(f"{name}/s"), self._p(f"{name}/b"),
+                               relu=relu, block=self.block)
+        if self.mode == "bf16":
+            return matmul_bf16(x, self._p(f"{name}/w"), self._p(f"{name}/b"),
+                               relu=relu, block=self.block)
+        return matmul_f32(x, self._p(f"{name}/w"), self._p(f"{name}/b"),
+                          relu=relu, block=self.block)
+
+    def _maybe_f32_act(self, x):
+        # Activations stay f32 between layers; the bf16 cast happens inside
+        # the kernel at the VMEM boundary (hmatmul).
+        return x
+
+    maxpool = InitOps.maxpool
+    avgpool = InitOps.avgpool
+    gap = InitOps.gap
+    flatten = InitOps.flatten
+    add = InitOps.add
+    relu = InitOps.relu
+    concat = InitOps.concat
+
+
+def init_model(model_mod, seed=0):
+    """Run the init pass: returns (master_params, layer_meta, macs)."""
+    ops = InitOps(seed)
+    x = jnp.zeros((1,) + tuple(model_mod.INPUT_SHAPE), jnp.float32)
+    out = model_mod.forward(ops, x)
+    assert out.shape == (1, model_mod.NUM_CLASSES), (
+        f"{model_mod.NAME}: bad output shape {out.shape}"
+    )
+    return ops.params, ops.layer_meta, ops.macs

@@ -1,0 +1,129 @@
+"""InceptionV4 — the paper's "Large" model (Table III row 4).
+
+Faithful block inventory: dual-branch stem, 4× Inception-A, Reduction-A,
+7× Inception-B, Reduction-B, 3× Inception-C, global average pool.  Channel
+counts are scaled to ≈½ of the original and the input is 96×96 (DESIGN.md
+§7); reductions use SAME-style padding so the deepest blocks keep a usable
+spatial extent at this input size.  The asymmetric 7×1/1×7 and 3×1/1×3
+factorized convolutions of the original are preserved.
+"""
+
+NAME = "inceptionv4"
+INPUT_SHAPE = (96, 96, 3)
+NUM_CLASSES = 200
+
+
+def _q(ch):
+    """Scale a channel count to ~half width, keeping multiples of 8."""
+    return max(8, (ch // 2 + 7) // 8 * 8)
+
+
+def _stem(ops, x):
+    # 96 -> 47 -> 45 -> 45
+    x = ops.conv("stem1", x, _q(32), 3, stride=2, padding=0)
+    x = ops.conv("stem2", x, _q(32), 3, stride=1, padding=0)
+    x = ops.conv("stem3", x, _q(64), 3, stride=1, padding=1)
+    # mixed 1: maxpool ‖ stride-2 conv  (45 -> 22)
+    a = ops.maxpool(x, 3, 2)
+    b = ops.conv("stem4", x, _q(96), 3, stride=2, padding=0)
+    x = ops.concat([a, b])
+    # mixed 2: two conv towers (22 -> 20)
+    a = ops.conv("stem5a1", x, _q(64), 1, stride=1, padding=0)
+    a = ops.conv("stem5a2", a, _q(96), 3, stride=1, padding=0)
+    b = ops.conv("stem5b1", x, _q(64), 1, stride=1, padding=0)
+    b = ops.conv("stem5b2", b, _q(64), (7, 1), stride=1, padding=0)
+    b = _pad_hw(ops, b, 3, 0)
+    b = ops.conv("stem5b3", b, _q(64), (1, 7), stride=1, padding=0)
+    b = _pad_hw(ops, b, 0, 3)
+    b = ops.conv("stem5b4", b, _q(96), 3, stride=1, padding=0)
+    x = ops.concat([a, b])
+    # mixed 3: conv ‖ maxpool (20 -> 9)
+    a = ops.conv("stem6", x, _q(192), 3, stride=2, padding=0)
+    b = ops.maxpool(x, 3, 2)
+    return ops.concat([a, b])
+
+
+def _pad_hw(ops, x, ph, pw):
+    """Manual SAME-padding helper for the asymmetric convs."""
+    import jax.numpy as jnp
+
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+def _inception_a(ops, x, n):
+    p = f"a{n}"
+    b0 = ops.conv(f"{p}_b0", x, _q(96), 1)
+    b1 = ops.conv(f"{p}_b1a", x, _q(64), 1)
+    b1 = ops.conv(f"{p}_b1b", b1, _q(96), 3, padding=1)
+    b2 = ops.conv(f"{p}_b2a", x, _q(64), 1)
+    b2 = ops.conv(f"{p}_b2b", b2, _q(96), 3, padding=1)
+    b2 = ops.conv(f"{p}_b2c", b2, _q(96), 3, padding=1)
+    b3 = ops.avgpool(x, 3, 1, padding="SAME")
+    b3 = ops.conv(f"{p}_b3", b3, _q(96), 1)
+    return ops.concat([b0, b1, b2, b3])
+
+
+def _reduction_a(ops, x):
+    b0 = ops.conv("ra_b0", x, _q(384), 3, stride=2, padding=1)
+    b1 = ops.conv("ra_b1a", x, _q(192), 1)
+    b1 = ops.conv("ra_b1b", b1, _q(224), 3, padding=1)
+    b1 = ops.conv("ra_b1c", b1, _q(256), 3, stride=2, padding=1)
+    b2 = ops.maxpool(_pad_hw(ops, x, 1, 1), 3, 2)
+    return ops.concat([b0, b1, b2])
+
+
+def _inception_b(ops, x, n):
+    p = f"b{n}"
+    b0 = ops.conv(f"{p}_b0", x, _q(384), 1)
+    b1 = ops.conv(f"{p}_b1a", x, _q(192), 1)
+    b1 = ops.conv(f"{p}_b1b", _pad_hw(ops, b1, 0, 3), _q(224), (1, 7))
+    b1 = ops.conv(f"{p}_b1c", _pad_hw(ops, b1, 3, 0), _q(256), (7, 1))
+    b2 = ops.conv(f"{p}_b2a", x, _q(192), 1)
+    b2 = ops.conv(f"{p}_b2b", _pad_hw(ops, b2, 3, 0), _q(192), (7, 1))
+    b2 = ops.conv(f"{p}_b2c", _pad_hw(ops, b2, 0, 3), _q(224), (1, 7))
+    b2 = ops.conv(f"{p}_b2d", _pad_hw(ops, b2, 3, 0), _q(224), (7, 1))
+    b2 = ops.conv(f"{p}_b2e", _pad_hw(ops, b2, 0, 3), _q(256), (1, 7))
+    b3 = ops.avgpool(x, 3, 1, padding="SAME")
+    b3 = ops.conv(f"{p}_b3", b3, _q(128), 1)
+    return ops.concat([b0, b1, b2, b3])
+
+
+def _reduction_b(ops, x):
+    b0 = ops.conv("rb_b0a", x, _q(192), 1)
+    b0 = ops.conv("rb_b0b", b0, _q(192), 3, stride=2, padding=1)
+    b1 = ops.conv("rb_b1a", x, _q(256), 1)
+    b1 = ops.conv("rb_b1b", _pad_hw(ops, b1, 0, 3), _q(256), (1, 7))
+    b1 = ops.conv("rb_b1c", _pad_hw(ops, b1, 3, 0), _q(320), (7, 1))
+    b1 = ops.conv("rb_b1d", b1, _q(320), 3, stride=2, padding=1)
+    b2 = ops.maxpool(_pad_hw(ops, x, 1, 1), 3, 2)
+    return ops.concat([b0, b1, b2])
+
+
+def _inception_c(ops, x, n):
+    p = f"c{n}"
+    b0 = ops.conv(f"{p}_b0", x, _q(256), 1)
+    b1 = ops.conv(f"{p}_b1", x, _q(384), 1)
+    b1a = ops.conv(f"{p}_b1a", _pad_hw(ops, b1, 0, 1), _q(256), (1, 3))
+    b1b = ops.conv(f"{p}_b1b", _pad_hw(ops, b1, 1, 0), _q(256), (3, 1))
+    b2 = ops.conv(f"{p}_b2", x, _q(384), 1)
+    b2 = ops.conv(f"{p}_b2a", _pad_hw(ops, b2, 1, 0), _q(448), (3, 1))
+    b2 = ops.conv(f"{p}_b2b", _pad_hw(ops, b2, 0, 1), _q(512), (1, 3))
+    b2a = ops.conv(f"{p}_b2c", _pad_hw(ops, b2, 0, 1), _q(256), (1, 3))
+    b2b = ops.conv(f"{p}_b2d", _pad_hw(ops, b2, 1, 0), _q(256), (3, 1))
+    b3 = ops.avgpool(x, 3, 1, padding="SAME")
+    b3 = ops.conv(f"{p}_b3", b3, _q(256), 1)
+    return ops.concat([b0, b1a, b1b, b2a, b2b, b3])
+
+
+def forward(ops, x):
+    x = _stem(ops, x)
+    for i in range(4):
+        x = _inception_a(ops, x, i)
+    x = _reduction_a(ops, x)
+    for i in range(7):
+        x = _inception_b(ops, x, i)
+    x = _reduction_b(ops, x)
+    for i in range(3):
+        x = _inception_c(ops, x, i)
+    x = ops.gap(x)
+    return ops.dense("classifier", x, NUM_CLASSES)

@@ -1,0 +1,21 @@
+"""LeNet-5 — the paper's "Tiny" model (Table III row 1).
+
+Classic topology (conv5→pool→conv5→pool→120→84→10) with ReLU instead of
+tanh, per the modern LeNet used in inference benchmarks.  32×32×1 input,
+10 classes; convolutions carry plain biases (no BN, as in the original).
+"""
+
+NAME = "lenet"
+INPUT_SHAPE = (32, 32, 1)
+NUM_CLASSES = 10
+
+
+def forward(ops, x):
+    x = ops.conv("conv1", x, 6, 5, stride=1, padding=0, relu=True, bn=False)
+    x = ops.maxpool(x, 2, 2)
+    x = ops.conv("conv2", x, 16, 5, stride=1, padding=0, relu=True, bn=False)
+    x = ops.maxpool(x, 2, 2)
+    x = ops.flatten(x)
+    x = ops.dense("fc1", x, 120, relu=True)
+    x = ops.dense("fc2", x, 84, relu=True)
+    return ops.dense("fc3", x, NUM_CLASSES)

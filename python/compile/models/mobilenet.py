@@ -1,0 +1,31 @@
+"""MobileNetV1 — the paper's "Small" model (Table III row 2).
+
+Faithful 13-block depthwise-separable topology with the standard stride
+schedule; width multiplier α=0.5 and 64×64 input keep interpret-mode cost
+tractable (DESIGN.md §7).  Depthwise convs run on the vector path, the
+FLOP-dominant pointwise convs on the Pallas GEMM.
+"""
+
+NAME = "mobilenetv1"
+INPUT_SHAPE = (64, 64, 3)
+NUM_CLASSES = 200
+
+_ALPHA = 0.5
+# (pointwise output channels, depthwise stride) per block — MobileNetV1 table.
+_BLOCKS = [
+    (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+    (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1),
+]
+
+
+def _c(ch):
+    return max(8, int(ch * _ALPHA))
+
+
+def forward(ops, x):
+    x = ops.conv("stem", x, _c(32), 3, stride=2, padding=1)
+    for i, (cout, s) in enumerate(_BLOCKS):
+        x = ops.dwconv(f"b{i}_dw", x, 3, stride=s, padding=1)
+        x = ops.conv(f"b{i}_pw", x, _c(cout), 1, stride=1, padding=0)
+    x = ops.gap(x)
+    return ops.dense("classifier", x, NUM_CLASSES)

@@ -1,0 +1,18 @@
+"""Model registry — name → module, mirroring the paper's Table III set."""
+
+from compile.models import lenet, mobilenet, resnet, inception
+
+MODELS = {
+    lenet.NAME: lenet,
+    mobilenet.NAME: mobilenet,
+    resnet.NAME: resnet,
+    inception.NAME: inception,
+}
+
+
+def get_model(name: str):
+    try:
+        return MODELS[name]
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; known: {sorted(MODELS)}") \
+            from None

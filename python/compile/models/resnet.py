@@ -1,0 +1,41 @@
+"""ResNet-50 — the paper's "Medium" model (Table III row 3).
+
+Full bottleneck topology: 7×7 stem, max-pool, stages of [3, 4, 6, 3]
+bottleneck blocks with expansion 4 and projection shortcuts on each stage
+entry.  Base width 32 (half of standard) and 64×64 input per DESIGN.md §7;
+the 16 residual adds and 53 convolutions of the original are all present.
+"""
+
+NAME = "resnet50"
+INPUT_SHAPE = (64, 64, 3)
+NUM_CLASSES = 200
+
+_BASE = 32
+_STAGES = [3, 4, 6, 3]
+
+
+def _bottleneck(ops, x, name, width, stride, project):
+    """conv1x1(width) → conv3x3(width, stride) → conv1x1(4·width) + skip."""
+    out = ops.conv(f"{name}_a", x, width, 1, stride=1, padding=0)
+    out = ops.conv(f"{name}_b", out, width, 3, stride=stride, padding=1)
+    out = ops.conv(f"{name}_c", out, 4 * width, 1, stride=1, padding=0,
+                   relu=False)
+    if project:
+        skip = ops.conv(f"{name}_proj", x, 4 * width, 1, stride=stride,
+                        padding=0, relu=False)
+    else:
+        skip = x
+    return ops.relu(ops.add(out, skip))
+
+
+def forward(ops, x):
+    x = ops.conv("stem", x, _BASE, 7, stride=2, padding=3)
+    x = ops.maxpool(x, 3, 2)
+    for stage, nblocks in enumerate(_STAGES):
+        width = _BASE * (2 ** stage)
+        for b in range(nblocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            x = _bottleneck(ops, x, f"s{stage}b{b}", width, stride,
+                            project=(b == 0))
+    x = ops.gap(x)
+    return ops.dense("classifier", x, NUM_CLASSES)

@@ -1,0 +1,64 @@
+"""AI-framework-platform variant definitions — the paper's Table I.
+
+A *variant* is one (platform, precision, kernel-path) combination that the
+Converter+Composer turn into a deployable AIF.  The five accelerated
+platforms come straight from Table I; the ``*_TF`` entries are the
+"native TensorFlow" baselines of Fig. 5 (same hardware, generic FP32
+framework, no specialized kernels) — there is no ALVEO_TF because
+TensorFlow has no FPGA backend (paper §V-C).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AI-framework-platform combination (a Table I row)."""
+
+    name: str            # e.g. "AGX"
+    platform: str        # hardware class, e.g. "Edge GPU"
+    framework: str       # the vendor flow this path reproduces
+    precision: str       # "FP32" | "FP16" | "INT8"
+    mode: str            # Ops mode: "native" | "f32" | "bf16" | "int8"
+    po2_scales: bool = False   # Vitis-AI DPU constraint: power-of-two scales
+    baseline_of: str = ""      # for *_TF rows: the accelerated row compared
+
+    @property
+    def is_native(self) -> bool:
+        return self.mode == "native"
+
+
+# Table I — accelerated variants.  "mode" selects the L1 kernel path; the
+# GPU row uses bf16 as the TPU-shaped stand-in for FP16 tensor cores
+# (DESIGN.md §3).
+VARIANTS = {
+    "AGX": Variant("AGX", "Edge GPU", "ONNX w/ TensorRT", "INT8", "int8"),
+    "ARM": Variant("ARM", "ARM", "TensorFlow Lite", "INT8", "int8"),
+    "CPU": Variant("CPU", "x86 CPU", "TensorFlow Lite", "FP32", "f32"),
+    "ALVEO": Variant("ALVEO", "Cloud FPGA", "Vitis AI", "INT8", "int8",
+                     po2_scales=True),
+    "GPU": Variant("GPU", "GPU", "ONNX w/ TensorRT", "FP16", "bf16"),
+}
+
+# Fig. 5 baselines — native TensorFlow on the same four platforms.
+NATIVE_VARIANTS = {
+    "AGX_TF": Variant("AGX_TF", "Edge GPU", "TensorFlow", "FP32", "native",
+                      baseline_of="AGX"),
+    "ARM_TF": Variant("ARM_TF", "ARM", "TensorFlow", "FP32", "native",
+                      baseline_of="ARM"),
+    "CPU_TF": Variant("CPU_TF", "x86 CPU", "TensorFlow", "FP32", "native",
+                      baseline_of="CPU"),
+    "GPU_TF": Variant("GPU_TF", "GPU", "TensorFlow", "FP32", "native",
+                      baseline_of="GPU"),
+}
+
+ALL_VARIANTS = {**VARIANTS, **NATIVE_VARIANTS}
+
+
+def get_variant(name: str) -> Variant:
+    try:
+        return ALL_VARIANTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown variant {name!r}; known: {sorted(ALL_VARIANTS)}"
+        ) from None

@@ -1,0 +1,49 @@
+"""Structural L1 analysis (VMEM/MXU estimates) sanity checks."""
+
+import pytest
+
+from compile.analysis import GemmShape, analyze_tiling, model_gemms, VMEM_BYTES
+
+
+def test_mxu_full_tiles_hit_100pct():
+    g = GemmShape("x", 256, 256, 256, 1, 4)
+    r = analyze_tiling(g, (128, 128, 128))
+    assert r.mxu_utilization == pytest.approx(1.0)
+    assert r.grid == (2, 2, 2)
+    assert r.vmem_ok
+
+
+def test_mxu_partial_tiles_penalized():
+    g = GemmShape("x", 130, 130, 130, 1, 4)
+    r = analyze_tiling(g, (128, 128, 128))
+    assert r.mxu_utilization < 0.30, "2-wide remainder tiles waste the MXU"
+
+
+def test_vmem_overflow_detected():
+    g = GemmShape("x", 8192, 8192, 8192, 4, 4)
+    r = analyze_tiling(g, (2048, 2048, 2048))
+    assert not r.vmem_ok
+    assert r.vmem_bytes > VMEM_BYTES
+
+
+def test_bigger_blocks_reduce_hbm_traffic():
+    g = GemmShape("x", 1024, 1024, 1024, 1, 4)
+    small = analyze_tiling(g, (32, 32, 32))
+    large = analyze_tiling(g, (256, 256, 256))
+    assert large.hbm_traffic_bytes < small.hbm_traffic_bytes
+
+
+@pytest.mark.parametrize("model,expected_gemms", [
+    ("lenet", 5),           # 2 conv + 3 dense
+    ("mobilenetv1", 15),    # stem + 13 pointwise + classifier (dw not GEMM)
+    ("resnet50", 54),       # 53 convs + classifier
+])
+def test_model_gemm_census(model, expected_gemms):
+    gemms = model_gemms(model, "ALVEO")
+    assert len(gemms) == expected_gemms
+    assert all(g.in_bytes == 1 for g in gemms), "ALVEO is int8"
+
+
+def test_gpu_variant_uses_bf16_operands():
+    gemms = model_gemms("lenet", "GPU")
+    assert all(g.in_bytes == 2 for g in gemms)

@@ -1,0 +1,110 @@
+"""AOT exporter: artifact layout, manifest consistency, HLO validity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.variants import ALL_VARIANTS
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_variant("lenet", "AGX", str(out), calib_samples=8,
+                                  verbose=False)
+    return out, manifest
+
+
+def test_artifact_files_exist(exported):
+    out, m = exported
+    d = out / "lenet_AGX"
+    for f in ["model.hlo.txt", "weights.bin", "manifest.json", "fixtures.bin"]:
+        assert (d / f).exists(), f
+        assert (d / f).stat().st_size > 0, f
+
+
+def test_manifest_offsets_are_consistent(exported):
+    out, m = exported
+    blob_size = os.path.getsize(out / "lenet_AGX" / "weights.bin")
+    prev_end = 0
+    for p in m["params"]:
+        assert p["offset"] % 64 == 0, "64-byte alignment"
+        assert p["offset"] >= prev_end
+        elems = int(np.prod(p["shape"])) if p["shape"] else 1
+        dtype_size = {"f32": 4, "i8": 1, "bf16": 2}[p["dtype"]]
+        assert p["nbytes"] == elems * dtype_size
+        prev_end = p["offset"] + p["nbytes"]
+    assert prev_end == blob_size == m["stats"]["weights_bytes"]
+
+
+def test_manifest_params_sorted(exported):
+    """Rust feeds params positionally: order MUST be sorted names (jax
+    dict-pytree flatten order)."""
+    _, m = exported
+    names = [p["name"] for p in m["params"]]
+    assert names == sorted(names)
+
+
+def test_hlo_is_text_with_entry(exported):
+    out, _ = exported
+    hlo = (out / "lenet_AGX" / "model.hlo.txt").read_text()
+    assert hlo.startswith("HloModule"), "must be HLO text, not a proto"
+    assert "ENTRY" in hlo
+    # Entry parameter count = 1 input + len(params).  Inner computations
+    # (the pallas while-loops) have their own parameters, so count only in
+    # the ENTRY computation — the final one in HLO text.
+    m = json.loads((out / "lenet_AGX" / "manifest.json").read_text())
+    entry = hlo[hlo.rindex("ENTRY"):]
+    assert entry.count("parameter(") == 1 + len(m["params"])
+
+
+def test_fixtures_roundtrip(exported):
+    out, m = exported
+    blob = (out / "lenet_AGX" / "fixtures.bin").read_bytes()
+    assert len(m["fixtures"]) == 4
+    in_elems = int(np.prod(m["input"]["shape"]))
+    for fx in m["fixtures"]:
+        x = np.frombuffer(blob, np.float32, in_elems, fx["input_offset"])
+        y = np.frombuffer(blob, np.float32,
+                          int(np.prod(fx["output_shape"])), fx["output_offset"])
+        assert np.all(np.isfinite(x)) and np.all(np.isfinite(y))
+        # inputs are standardized images
+        assert abs(float(x.mean())) < 0.05
+        assert y.shape == (10,)
+
+
+def test_int8_variant_ships_quantized_weights(exported):
+    _, m = exported
+    dtypes = {p["dtype"] for p in m["params"]}
+    assert "i8" in dtypes, "AGX (INT8) must ship int8 weights"
+    assert m["calibration"]["samples"] == 8
+    assert "act_scales" in m["calibration"]
+
+
+def test_cli_list_covers_matrix(capsys):
+    aot.main(["--list", "--out-dir", "/tmp/unused"])
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert len(lines) == 4 * len(ALL_VARIANTS)
+    assert "resnet50_ALVEO" in lines
+
+
+def test_cli_requires_selection():
+    with pytest.raises(SystemExit):
+        aot.main(["--out-dir", "/tmp/unused"])
+
+
+def test_bf16_export_dtype(tmp_path):
+    m = aot.export_variant("lenet", "GPU", str(tmp_path), verbose=False)
+    wq = [p for p in m["params"] if p["name"].endswith("/w")]
+    assert wq and all(p["dtype"] == "bf16" for p in wq)
+    assert m["precision"] == "FP16"
+
+
+def test_native_export_keeps_bn_params(tmp_path):
+    m = aot.export_variant("mobilenetv1", "CPU_TF", str(tmp_path), verbose=False)
+    names = {p["name"] for p in m["params"]}
+    assert any(n.endswith("/gamma") for n in names), "native keeps BN unfolded"
+    assert m["baseline_of"] == "CPU"

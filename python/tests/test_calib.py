@@ -1,0 +1,56 @@
+"""Calibration/workload dataset generator properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import calib
+from compile.models import get_model
+
+
+def test_calibration_set_is_deterministic():
+    mod = get_model("lenet")
+    a = calib.calibration_set(mod, samples=8)
+    b = calib.calibration_set(mod, samples=8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_calibration_respects_sample_count_and_batching():
+    mod = get_model("mobilenetv1")
+    batches = calib.calibration_set(mod, samples=13, batch=4)
+    sizes = [b.shape[0] for b in batches]
+    assert sum(sizes) == 13
+    assert sizes == [4, 4, 4, 1]
+    h, w, c = mod.INPUT_SHAPE
+    for b in batches:
+        assert b.shape[1:] == (h, w, c)
+        assert b.dtype == np.float32
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_images_are_standardized(seed):
+    mod = get_model("lenet")
+    rng = np.random.default_rng(seed)
+    img = calib.image_like(rng, 2, 32, 32, 1)
+    for i in range(2):
+        assert abs(img[i].mean()) < 1e-3
+        assert abs(img[i].std() - 1.0) < 1e-2
+
+
+def test_request_inputs_differ_from_calibration():
+    """Serving-path inputs must not be the calibration set (overfitting
+    a PTQ model to its calibration data would hide range bugs)."""
+    mod = get_model("lenet")
+    cal = calib.calibration_set(mod, samples=1, batch=1)[0]
+    req = calib.request_inputs(mod, count=1)[0]
+    assert not np.allclose(cal, req)
+
+
+def test_images_have_sparse_highlights():
+    """The amax-stressing tail must exist (it drives calibration)."""
+    mod = get_model("mobilenetv1")
+    rng = np.random.default_rng(0)
+    img = calib.image_like(rng, 4, 64, 64, 3)
+    assert np.abs(img).max() > 3.0, "no outliers: calibration untested"

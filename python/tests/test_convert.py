@@ -1,0 +1,164 @@
+"""Converter correctness: BN folding, calibration, quantization schemes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import calib, convert
+from compile.models import get_model
+from compile.models.common import CalibOps, ExecOps, init_model
+from compile.variants import get_variant, ALL_VARIANTS, VARIANTS
+
+HYPO = dict(max_examples=10, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def lenet_setup():
+    mod = get_model("lenet")
+    params, meta, macs = init_model(mod, seed=7)
+    return mod, params, meta, macs
+
+
+@pytest.fixture(scope="module")
+def mobilenet_setup():
+    mod = get_model("mobilenetv1")
+    params, meta, macs = init_model(mod, seed=7)
+    return mod, params, meta, macs
+
+
+def test_bn_folding_preserves_function(mobilenet_setup):
+    """Folded conv(x)·s + b must equal BN(conv(x)) exactly."""
+    mod, params, meta, _ = mobilenet_setup
+    folded = convert.fold_bn(params, meta)
+    x = jnp.array(calib.calibration_set(mod, samples=2, batch=2)[0])
+    # native mode applies BN separately from master params
+    native = mod.forward(ExecOps("native", {k: jnp.array(v) for k, v in params.items()}), x)
+    # f32 CalibOps path uses the folded params with ref convs
+    ops = CalibOps({k: jnp.array(v) for k, v in folded.items()}, meta)
+    folded_out = mod.forward(ops, x)
+    np.testing.assert_allclose(native, folded_out, atol=1e-3, rtol=1e-3)
+
+
+def test_fold_bn_layers_without_bn_pass_through(lenet_setup):
+    _, params, meta, _ = lenet_setup
+    folded = convert.fold_bn(params, meta)
+    for name, m in meta.items():
+        assert not m["bn"], "lenet has no BN"
+        np.testing.assert_array_equal(folded[f"{name}/w"], params[f"{name}/w"])
+        np.testing.assert_array_equal(folded[f"{name}/b"], params[f"{name}/b"])
+
+
+def test_calibration_records_every_quantizable_layer(lenet_setup):
+    mod, params, meta, _ = lenet_setup
+    folded = convert.fold_bn(params, meta)
+    amax = convert.calibrate(mod, folded, meta, calib.calibration_set(mod, samples=4))
+    assert set(amax) == set(meta), "every conv/dense input must be calibrated"
+    assert all(v > 0 for v in amax.values())
+
+
+def test_calibration_amax_is_monotone_in_dataset():
+    """More calibration data can only widen the recorded range."""
+    mod = get_model("lenet")
+    params, meta, _ = init_model(mod, seed=7)
+    folded = convert.fold_bn(params, meta)
+    small = convert.calibrate(mod, folded, meta, calib.calibration_set(mod, samples=4))
+    big_batches = calib.calibration_set(mod, samples=4) + calib.calibration_set(
+        mod, samples=8, seed=777
+    )
+    big = convert.calibrate(mod, folded, meta, big_batches)
+    for k in small:
+        assert big[k] >= small[k] - 1e-9
+
+
+@settings(**HYPO)
+@given(amax=st.floats(min_value=1e-4, max_value=1e4))
+def test_po2_scales_are_powers_of_two(amax):
+    scales = convert.act_scales_from_amax({"l": amax}, po2=True)
+    s = scales["l"]
+    assert s > 0
+    log = np.log2(s)
+    assert abs(log - round(log)) < 1e-9, f"{s} is not a power of two"
+
+
+def test_quantize_weights_per_channel(lenet_setup):
+    _, params, meta, _ = lenet_setup
+    folded = convert.fold_bn(params, meta)
+    scales = {k: 0.05 for k in meta}
+    q = convert.quantize_weights(folded, meta, scales)
+    for name in meta:
+        wq = q[f"{name}/wq"]
+        assert wq.dtype == np.int8
+        # per output channel, the max |q| must hit (or nearly hit) 127 —
+        # per-channel scaling leaves no headroom unused.
+        flat = wq.reshape(-1, wq.shape[-1])
+        assert np.all(np.abs(flat).max(axis=0) >= 126), name
+        # combined scale shape = output channels
+        assert q[f"{name}/s"].shape == (wq.shape[-1],)
+
+
+def test_quantization_error_is_bounded(lenet_setup):
+    """Dequantized weights within half an LSB of the originals."""
+    _, params, meta, _ = lenet_setup
+    folded = convert.fold_bn(params, meta)
+    scales = {k: 1.0 for k in meta}
+    q = convert.quantize_weights(folded, meta, scales)
+    for name in meta:
+        w = folded[f"{name}/w"]
+        reduce_axes = tuple(range(w.ndim - 1))
+        s_w = np.maximum(np.abs(w).max(axis=reduce_axes), 1e-8) / 127.0
+        deq = q[f"{name}/wq"].astype(np.float32) * s_w
+        assert np.max(np.abs(deq - w) / s_w) <= 0.5 + 1e-5, name
+
+
+def test_convert_dispatches_all_modes(lenet_setup):
+    mod, params, meta, _ = lenet_setup
+    batches = calib.calibration_set(mod, samples=4)
+    for vname in ALL_VARIANTS:
+        v = get_variant(vname)
+        out, scales, record = convert.convert(mod, params, meta, v, batches)
+        if v.mode == "native":
+            assert set(out) == set(params)
+        elif v.mode == "int8":
+            assert any(k.endswith("/wq") for k in out)
+            assert set(scales) == set(meta)
+            assert record["samples"] == 4
+        else:
+            assert all(k.endswith("/w") or k.endswith("/b") for k in out)
+
+
+def test_int8_top1_agreement_with_f32(mobilenet_setup):
+    """PTQ sanity: quantized model agrees with FP32 on most inputs (the
+    accuracy contract the vendor flows promise)."""
+    mod, params, meta, _ = mobilenet_setup
+    batches = calib.calibration_set(mod, samples=16)
+    v_f32 = get_variant("CPU")
+    v_int8 = get_variant("AGX")
+    p_f32, _, _ = convert.convert(mod, params, meta, v_f32, [])
+    p_int8, scales, _ = convert.convert(mod, params, meta, v_int8, batches)
+    agree = 0
+    inputs = calib.request_inputs(mod, count=8)
+    for x in inputs:
+        o_f = mod.forward(ExecOps("f32", {k: jnp.array(v) for k, v in p_f32.items()}),
+                          jnp.array(x))
+        o_q = mod.forward(
+            ExecOps("int8", {k: jnp.array(v) for k, v in p_int8.items()}, scales),
+            jnp.array(x))
+        agree += int(np.argmax(o_f) == np.argmax(o_q))
+    assert agree >= 6, f"only {agree}/8 top-1 agreement after PTQ"
+
+
+def test_alveo_po2_variant_still_agrees(lenet_setup):
+    """Vitis-AI's po2 constraint costs precision but not correctness."""
+    mod, params, meta, _ = lenet_setup
+    batches = calib.calibration_set(mod, samples=8)
+    v = get_variant("ALVEO")
+    p, scales, record = convert.convert(mod, params, meta, v, batches)
+    assert "po2" in record["scheme"]
+    for s in scales.values():
+        assert abs(np.log2(s) - round(np.log2(s))) < 1e-9
+    x = calib.request_inputs(mod, count=1)[0]
+    o = mod.forward(ExecOps("int8", {k: jnp.array(v_) for k, v_ in p.items()}, scales),
+                    jnp.array(x))
+    assert o.shape == (1, mod.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(o)))

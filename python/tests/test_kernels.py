@@ -1,0 +1,223 @@
+"""L1 correctness gate: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-block-multiple and degenerate
+sizes), dtypes and epilogue flags; fixed-seed cases pin the exact numeric
+contracts (int32 accumulation, bf16 products, fused bias/ReLU).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_f32, matmul_bf16, matmul_int8
+from compile.kernels import conv as C
+from compile.kernels import ref as R
+from compile.kernels.qmatmul import quantize_sym
+
+DIMS = st.integers(min_value=1, max_value=70)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+HYPO = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ── FP32 GEMM ────────────────────────────────────────────────────────────
+
+@settings(**HYPO)
+@given(m=DIMS, k=DIMS, n=DIMS, relu=st.booleans(), seed=SEEDS)
+def test_matmul_f32_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = matmul_f32(jnp.array(x), jnp.array(w), jnp.array(b), relu=relu)
+    want = R.matmul_f32_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_f32_no_bias():
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 17, 33), rand(rng, 33, 9)
+    got = matmul_f32(jnp.array(x), jnp.array(w))
+    np.testing.assert_allclose(got, x @ w, atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 32, 16), (128, 128, 128)])
+def test_matmul_f32_block_invariance(block):
+    """Result must not depend on the VMEM tile choice."""
+    rng = np.random.default_rng(3)
+    x, w, b = rand(rng, 37, 53), rand(rng, 53, 29), rand(rng, 29)
+    got = matmul_f32(jnp.array(x), jnp.array(w), jnp.array(b), block=block)
+    np.testing.assert_allclose(got, R.matmul_f32_ref(x, w, b), atol=1e-4)
+
+
+def test_matmul_f32_rejects_mismatched_k():
+    with pytest.raises(AssertionError):
+        matmul_f32(jnp.zeros((4, 5)), jnp.zeros((6, 7)))
+
+
+# ── bf16 GEMM (FP16 tensor-core stand-in) ────────────────────────────────
+
+@settings(**HYPO)
+@given(m=DIMS, k=DIMS, n=DIMS, relu=st.booleans(), seed=SEEDS)
+def test_matmul_bf16_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = matmul_bf16(jnp.array(x), jnp.array(w), jnp.array(b), relu=relu)
+    want = R.matmul_bf16_ref(jnp.array(x), jnp.array(w), jnp.array(b), relu=relu)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_bf16_differs_from_f32_on_adversarial_input():
+    """The half-precision path must actually be half precision."""
+    x = np.full((8, 64), 1.001, np.float32)
+    w = np.full((64, 8), 1.003, np.float32)
+    full = R.matmul_f32_ref(x, w)
+    half = matmul_bf16(jnp.array(x), jnp.array(w))
+    assert not np.allclose(full, half, atol=1e-6), "bf16 kernel is secretly f32"
+    # …but close at bf16 tolerance.
+    np.testing.assert_allclose(full, half, rtol=2e-2)
+
+
+def test_bf16_accepts_bf16_weights():
+    rng = np.random.default_rng(4)
+    x, w = rand(rng, 9, 24), rand(rng, 24, 7)
+    wq = jnp.array(w, jnp.bfloat16)
+    got = matmul_bf16(jnp.array(x), wq)
+    want = R.matmul_bf16_ref(jnp.array(x), wq)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ── INT8 GEMM (TensorRT / TFLite / Vitis-AI stand-in) ────────────────────
+
+@settings(**HYPO)
+@given(m=DIMS, k=DIMS, n=DIMS, relu=st.booleans(), seed=SEEDS)
+def test_matmul_int8_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    wq = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    s = (rng.random(n).astype(np.float32) + 0.1) * 0.02
+    b = rand(rng, n)
+    got = matmul_int8(jnp.array(xq), jnp.array(wq), jnp.array(s), jnp.array(b), relu=relu)
+    want = R.matmul_int8_ref(xq, wq, s, b, relu=relu)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_int8_accumulation_is_exact_int32():
+    """Worst-case accumulation (all ±127, k=512) must not saturate/round."""
+    k = 512
+    xq = np.full((4, k), 127, np.int8)
+    wq = np.full((k, 4), 127, np.int8)
+    s = np.ones(4, np.float32)
+    got = matmul_int8(jnp.array(xq), jnp.array(wq), jnp.array(s))
+    assert np.all(got == 127 * 127 * k), got[0, 0]
+
+
+def test_int8_requires_int8_inputs():
+    with pytest.raises(AssertionError):
+        matmul_int8(jnp.zeros((4, 4), jnp.float32), jnp.zeros((4, 4), jnp.int8),
+                    jnp.ones(4))
+
+
+def test_quantize_sym_clips_and_rounds():
+    x = jnp.array([0.0, 0.04, -0.04, 10.0, -10.0, 0.051])
+    q = quantize_sym(x, 0.1)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.array([0, 0, 0, 100, -100, 1], np.int8)
+    )
+    # saturation at ±127, never -128 (TensorRT symmetric scheme)
+    q = quantize_sym(jnp.array([1e9, -1e9]), 0.1)
+    np.testing.assert_array_equal(np.asarray(q), np.array([127, -127], np.int8))
+
+
+# ── conv wrappers ────────────────────────────────────────────────────────
+
+@settings(**HYPO)
+@given(
+    n=st.integers(1, 2),
+    hw=st.integers(4, 14),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=SEEDS,
+)
+def test_conv2d_gemm_matches_lax(n, hw, cin, cout, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = rand(rng, n, hw, hw, cin)
+    w = rand(rng, k, k, cin, cout) * 0.2
+    b = rand(rng, cout)
+    got = C.conv2d_gemm(jnp.array(x), jnp.array(w), jnp.array(b),
+                        stride=stride, padding=pad, relu=True)
+    want = R.conv2d_ref(x, w, b, stride=stride, padding=pad, relu=True)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_conv2d_gemm_asymmetric_kernels():
+    """The 1x7/7x1 Inception factorized convs."""
+    rng = np.random.default_rng(8)
+    x = rand(rng, 1, 9, 9, 4)
+    for kh, kw in [(1, 7), (7, 1), (1, 3), (3, 1)]:
+        w = rand(rng, kh, kw, 4, 5) * 0.2
+        b = rand(rng, 5)
+        xp = jnp.pad(jnp.array(x), ((0, 0), (kh // 2,) * 2, (kw // 2,) * 2, (0, 0)))
+        got = C.conv2d_gemm(xp, jnp.array(w), jnp.array(b))
+        want = R.conv2d_ref(np.asarray(xp), w, b)
+        np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+@settings(**HYPO)
+@given(hw=st.integers(4, 12), c=st.integers(1, 8), stride=st.sampled_from([1, 2]),
+       seed=SEEDS)
+def test_depthwise_matches_lax(hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, hw, hw, c)
+    w = rand(rng, 3, 3, c)
+    b = rand(rng, c)
+    got = C.depthwise_conv2d(jnp.array(x), jnp.array(w), jnp.array(b),
+                             stride=stride, padding=1, relu=True)
+    want = R.depthwise_conv2d_ref(x, w, b, stride=stride, padding=1, relu=True)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_depthwise_int8_matches_float_computation():
+    """int8 depthwise: int32 MAC then dequant == float MAC on dequant inputs."""
+    rng = np.random.default_rng(5)
+    xq = rng.integers(-127, 128, (1, 8, 8, 3)).astype(np.int8)
+    wq = rng.integers(-127, 128, (3, 3, 3)).astype(np.int8)
+    s = np.array([0.01, 0.02, 0.03], np.float32)
+    b = rng.standard_normal(3).astype(np.float32)
+    got = C.depthwise_conv2d_int8(jnp.array(xq), jnp.array(wq), jnp.array(s),
+                                  jnp.array(b), stride=1, padding=1)
+    want = R.depthwise_conv2d_ref(
+        xq.astype(np.float32) * 1.0, wq.astype(np.float32), np.zeros(3),
+        stride=1, padding=1)
+    want = want * s + b
+    np.testing.assert_allclose(got, want, atol=1e-2, rtol=1e-4)
+
+
+def test_pooling_shapes_and_values():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    mp = C.max_pool(x, 2, 2)
+    assert mp.shape == (1, 2, 2, 1)
+    np.testing.assert_array_equal(np.asarray(mp).ravel(), [5, 7, 13, 15])
+    ap = C.avg_pool(x, 2, 2)
+    np.testing.assert_allclose(np.asarray(ap).ravel(), [2.5, 4.5, 10.5, 12.5])
+    gap = C.global_avg_pool(x)
+    assert gap.shape == (1, 1)
+    np.testing.assert_allclose(np.asarray(gap), [[7.5]])
+
+
+def test_extract_patches_order_matches_weight_reshape():
+    """Patch concat order must equal HWIO reshape order, or conv is silently
+    permuted (the classic im2col bug)."""
+    rng = np.random.default_rng(11)
+    x = rand(rng, 1, 5, 5, 2)
+    w = rand(rng, 3, 3, 2, 4)
+    patches, ho, wo = C.extract_patches(jnp.array(x), 3, 3, 1, 1)
+    lhs = np.asarray(patches).reshape(ho * wo, 3 * 3 * 2)
+    out = lhs @ w.reshape(18, 4)
+    want = R.conv2d_ref(x, w, np.zeros(4, np.float32), stride=1, padding=1)
+    np.testing.assert_allclose(out.reshape(1, ho, wo, 4), want, atol=1e-4)

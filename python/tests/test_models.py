@@ -1,0 +1,101 @@
+"""L2 model zoo: shapes, architecture invariants, mode equivalences."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import calib
+from compile.models import MODELS, get_model
+from compile.models.common import ExecOps, init_model
+from compile.variants import get_variant
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_output_shape_and_finiteness(name):
+    mod = get_model(name)
+    params, meta, macs = init_model(mod, seed=7)
+    x = jnp.array(calib.request_inputs(mod, count=1)[0])
+    out = mod.forward(ExecOps("native", {k: jnp.array(v) for k, v in params.items()}), x)
+    assert out.shape == (1, mod.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert macs > 0
+
+
+def test_table3_orderings():
+    """Size and FLOPs ordering of Table III must hold in our scaled zoo."""
+    stats = {}
+    for name, mod in MODELS.items():
+        params, _, macs = init_model(mod, seed=7)
+        stats[name] = (sum(p.nbytes for p in params.values()), macs)
+    order = ["lenet", "mobilenetv1", "resnet50", "inceptionv4"]
+    for a, b in zip(order, order[1:]):
+        assert stats[a][0] < stats[b][0], f"size: {a} !< {b}"
+        assert stats[a][1] < stats[b][1], f"macs: {a} !< {b}"
+
+
+def test_init_is_deterministic():
+    p1, _, _ = init_model(get_model("lenet"), seed=7)
+    p2, _, _ = init_model(get_model("lenet"), seed=7)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    p3, _, _ = init_model(get_model("lenet"), seed=8)
+    assert any(not np.array_equal(p1[k], p3[k]) for k in p1)
+
+
+def test_resnet_block_count():
+    """ResNet50 = 1 stem + 3·[3,4,6,3] convs + 4 projections + 1 dense = 54."""
+    _, meta, _ = init_model(get_model("resnet50"), seed=0)
+    convs = [k for k, m in meta.items() if m["kind"] == "conv"]
+    dense = [k for k, m in meta.items() if m["kind"] == "dense"]
+    assert len(convs) == 1 + 3 * (3 + 4 + 6 + 3) + 4
+    assert len(dense) == 1
+    projections = [k for k in convs if k.endswith("_proj")]
+    assert len(projections) == 4, "one projection per stage entry"
+
+
+def test_mobilenet_block_structure():
+    """13 depthwise + 13 pointwise + stem + classifier."""
+    _, meta, _ = init_model(get_model("mobilenetv1"), seed=0)
+    dw = [k for k, m in meta.items() if m["kind"] == "dwconv"]
+    pw = [k for k, m in meta.items() if m["kind"] == "conv" and k.endswith("_pw")]
+    assert len(dw) == 13
+    assert len(pw) == 13
+
+
+def test_inception_block_inventory():
+    """4×A, 7×B, 3×C blocks + stem + reductions all present."""
+    _, meta, _ = init_model(get_model("inceptionv4"), seed=0)
+    names = set(meta)
+    for i in range(4):
+        assert f"a{i}_b0" in names
+    for i in range(7):
+        assert f"b{i}_b0" in names
+    for i in range(3):
+        assert f"c{i}_b0" in names
+    assert "ra_b0" in names and "rb_b0a" in names, "reduction blocks"
+    # factorized asymmetric convs survive the scaling
+    assert any(k.startswith("b0_b1b") for k in names), "1x7 conv present"
+
+
+@pytest.mark.parametrize("mode", ["f32", "bf16"])
+def test_accelerated_modes_close_to_native(mode):
+    """BN-folded Pallas paths ≈ unfolded native graph (same math)."""
+    mod = get_model("lenet")
+    params, meta, _ = init_model(mod, seed=7)
+    from compile import convert
+
+    v = get_variant("CPU" if mode == "f32" else "GPU")
+    p, scales, _ = convert.convert(mod, params, meta, v, [])
+    x = jnp.array(calib.request_inputs(mod, count=1)[0])
+    native = mod.forward(
+        ExecOps("native", {k: jnp.array(w) for k, w in params.items()}), x)
+    accel = mod.forward(
+        ExecOps(mode, {k: jnp.array(w) for k, w in p.items()}, scales), x)
+    tol = 1e-3 if mode == "f32" else 0.3
+    np.testing.assert_allclose(native, accel, atol=tol, rtol=tol)
+    assert np.argmax(native) == np.argmax(accel)
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        get_model("alexnet")

@@ -1,0 +1,42 @@
+"""Variant registry — the Table I contract the whole pipeline hangs off."""
+
+import pytest
+
+from compile.variants import ALL_VARIANTS, NATIVE_VARIANTS, VARIANTS, get_variant
+
+
+def test_table1_rows():
+    assert set(VARIANTS) == {"AGX", "ARM", "CPU", "ALVEO", "GPU"}
+    assert VARIANTS["AGX"].precision == "INT8"
+    assert VARIANTS["GPU"].precision == "FP16"
+    assert VARIANTS["CPU"].precision == "FP32"
+    assert VARIANTS["ALVEO"].framework == "Vitis AI"
+
+
+def test_only_alveo_has_po2_scales():
+    for name, v in ALL_VARIANTS.items():
+        assert v.po2_scales == (name == "ALVEO"), name
+
+
+def test_native_baselines_cover_fig5():
+    # Fig. 5 has AGX/ARM/CPU/GPU baselines, no ALVEO (no TF FPGA backend).
+    assert set(NATIVE_VARIANTS) == {"AGX_TF", "ARM_TF", "CPU_TF", "GPU_TF"}
+    for name, v in NATIVE_VARIANTS.items():
+        assert v.is_native
+        assert v.precision == "FP32"
+        assert v.framework == "TensorFlow"
+        assert v.baseline_of == name[: -len("_TF")]
+    assert "ALVEO_TF" not in ALL_VARIANTS
+
+
+def test_modes_match_kernel_paths():
+    assert VARIANTS["AGX"].mode == "int8"
+    assert VARIANTS["ARM"].mode == "int8"
+    assert VARIANTS["ALVEO"].mode == "int8"
+    assert VARIANTS["GPU"].mode == "bf16"
+    assert VARIANTS["CPU"].mode == "f32"
+
+
+def test_get_variant_errors_helpfully():
+    with pytest.raises(KeyError, match="known"):
+        get_variant("TPU")

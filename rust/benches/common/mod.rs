@@ -1,0 +1,37 @@
+//! Shared bench-harness utilities (no criterion in the vendored set, so
+//! the harness is in-repo: warmup + repeated timed runs + summary stats).
+
+use std::time::Instant;
+
+use tf2aif::util::stats::Series;
+
+/// Time `f` `iters` times after `warmup` runs; returns ms per iteration.
+pub fn bench_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Series {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Series::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    s
+}
+
+/// Pretty one-line summary.
+pub fn summarize(name: &str, s: &mut Series) {
+    println!(
+        "{name:<40} n={:<4} median {:>9.3} ms  p10 {:>9.3}  p90 {:>9.3}  mean {:>9.3}",
+        s.len(),
+        s.percentile(50.0),
+        s.percentile(10.0),
+        s.percentile(90.0),
+        s.mean(),
+    );
+}
+
+/// `BENCH_QUICK=1` trims iteration counts (CI-friendly).
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}

@@ -1,0 +1,108 @@
+//! Fig. 3 — AI service variant generation time (conversion + compose).
+//!
+//! Regenerates the paper's development-time experiment: for every Table
+//! III model × Table I platform, report the conversion time (python-
+//! measured: quantization/folding + AOT lowering) and the compose time
+//! (measured live: bundle assembly incl. the ALVEO DPU instruction
+//! compile).  The paper's shape to reproduce: compose is small and flat,
+//! conversion grows with model size, ALVEO prepares slowest.
+//!
+//! Run: `cargo bench --bench fig3_generation` (artifacts must exist).
+
+mod common;
+
+use tf2aif::artifact::Artifact;
+use tf2aif::composer::{self, ComposeOptions};
+use tf2aif::coordinator::{MODELS, VARIANTS};
+use tf2aif::report::{self, GenRow};
+
+fn main() -> anyhow::Result<()> {
+    let iters = if common::quick() { 2 } else { 5 };
+    let mut rows = Vec::new();
+    for model in MODELS {
+        for variant in VARIANTS {
+            let dir = format!("artifacts/{model}_{variant}");
+            let Ok(art) = Artifact::load(&dir) else {
+                eprintln!("skipping {model}_{variant}: run `make artifacts` first");
+                continue;
+            };
+            // Compose measured live, best-of-N to de-noise (bundle
+            // assembly + hashing).
+            let opts = ComposeOptions::default();
+            let mut compose = common::bench_ms(1, iters, || {
+                let s = composer::compose_server(&art, &opts).expect("compose");
+                std::hint::black_box(s.digest.len());
+            });
+            // ALVEO conversion includes the Vitis-AI xcompiler substrate
+            // (schedule-optimized DPU instruction compile) — measure live.
+            let dpu_s = if *variant == "ALVEO" {
+                let mut s = common::bench_ms(1, iters, || {
+                    let (p, traffic) = tf2aif::composer::dpu::compile_program_optimized(
+                        &art.manifest,
+                        tf2aif::composer::dpu::DPUCAHX8H,
+                    );
+                    std::hint::black_box((p.len(), traffic));
+                });
+                s.percentile(50.0) / 1e3
+            } else {
+                0.0
+            };
+            let bundle = composer::compose_server(&art, &opts)?;
+            rows.push(GenRow {
+                model: model.to_string(),
+                variant: variant.to_string(),
+                convert_s: art.manifest.convert_time_s + art.manifest.lower_time_s + dpu_s,
+                compose_s: compose.percentile(50.0) / 1e3,
+                bundle_mb: bundle.total_bytes() as f64 / 1e6,
+            });
+        }
+    }
+
+    println!("\nFIG 3 — variant generation time (convert = python-measured at export)");
+    let (h, r) = report::fig3(&rows);
+    print!("{}", report::render_table(&h, &r));
+    report::write_csv("reports/fig3.csv", &h, &r)?;
+
+    // Shape assertions the paper reports in prose.
+    let total = |m: &str| -> f64 {
+        rows.iter().filter(|r| r.model == m).map(|r| r.convert_s + r.compose_s).sum()
+    };
+    let t_lenet = total("lenet");
+    let t_incep = total("inceptionv4");
+    println!("\nshape checks:");
+    println!(
+        "  lightweight models faster: lenet {t_lenet:.1}s vs inceptionv4 {t_incep:.1}s — {}",
+        if t_lenet < t_incep { "OK" } else { "VIOLATED" }
+    );
+    // Paper: "the ALVEO version consistently demands the most time for
+    // preparation, which delay originates from the Vitis-AI conversion."
+    // Compare ALVEO conversion against the other INT8 flows per model
+    // (FP32/FP16 variants skip calibration entirely, so the meaningful
+    // comparison is within the quantizing flows).
+    let mut alveo_slowest = 0;
+    let mut checked = 0;
+    for model in MODELS {
+        let conv = |v: &str| {
+            rows.iter()
+                .find(|r| r.model == *model && r.variant == v)
+                .map(|r| r.convert_s)
+        };
+        if let (Some(alveo), Some(agx), Some(arm)) =
+            (conv("ALVEO"), conv("AGX"), conv("ARM"))
+        {
+            checked += 1;
+            if alveo >= agx && alveo >= arm {
+                alveo_slowest += 1;
+            }
+        }
+    }
+    println!(
+        "  ALVEO slowest of the INT8 conversions (Vitis-AI DPU compile): {alveo_slowest}/{checked} models"
+    );
+    let grand: f64 = rows.iter().map(|r| r.convert_s + r.compose_s).sum();
+    println!(
+        "  20 deployment-ready variants in {:.1} s total (paper: ≈10 min on their toolchain)",
+        grand
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig. 4 — boxplot of per-request latency for every AI-framework-platform
+//! model variant (paper: 1000 requests each).
+//!
+//! Two channels per variant (DESIGN.md §2): the *service* series is the
+//! calibrated platform cost model (what the paper's hardware would
+//! report — labelled simulated), the *real* series is actual PJRT
+//! execution of the variant's graph on this testbed (numeric truth).
+//!
+//! Run: `cargo bench --bench fig4_latency` — `BENCH_QUICK=1` for CI.
+
+mod common;
+
+use tf2aif::coordinator::{self, Fig4Options};
+use tf2aif::report;
+use tf2aif::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Fig4Options {
+        requests: 1000,
+        real_requests: if common::quick() { 2 } else { 8 },
+        seed: 0xF16_4,
+    };
+    let engine = Engine::cpu()?;
+    let rows = coordinator::bench_fig4(&engine, "artifacts", &opts)?;
+
+    println!("\nFIG 4 — request latency per variant (* = simulated platform model)");
+    let (h, r) = report::fig4(&rows);
+    print!("{}", report::render_table(&h, &r));
+    report::write_csv("reports/fig4.csv", &h, &r)?;
+
+    // Paper-shape checks.
+    println!("\nshape checks:");
+    let med = |m: &str, v: &str| {
+        rows.iter()
+            .find(|r| r.model == m && r.variant == v)
+            .map(|r| r.service.median)
+            .unwrap_or(f64::NAN)
+    };
+    // 1. Small models: minimal variation across platforms.
+    let lenet: Vec<f64> = ["AGX", "ARM", "CPU", "ALVEO", "GPU"]
+        .iter()
+        .map(|v| med("lenet", v))
+        .collect();
+    let spread = lenet.iter().fold(f64::MIN, |a, &b| a.max(b))
+        - lenet.iter().fold(f64::MAX, |a, &b| a.min(b));
+    println!(
+        "  LeNet cross-platform spread {:.2} ms (paper: minimal) — {}",
+        spread,
+        if spread < 5.0 { "OK" } else { "WIDE" }
+    );
+    // 2. Large models: advanced platforms pull ahead.
+    let ok = med("inceptionv4", "GPU") < med("inceptionv4", "ALVEO")
+        && med("inceptionv4", "ALVEO") < med("inceptionv4", "AGX")
+        && med("inceptionv4", "AGX") < med("inceptionv4", "CPU")
+        && med("inceptionv4", "CPU") < med("inceptionv4", "ARM");
+    println!(
+        "  InceptionV4 ordering GPU < ALVEO < AGX < CPU < ARM — {}",
+        if ok { "OK" } else { "VIOLATED" }
+    );
+    // 3. CPU shows the highest relative variability (context switching).
+    let rel_iqr = |v: &str| {
+        let r = rows
+            .iter()
+            .find(|r| r.model == "resnet50" && r.variant == v)
+            .unwrap();
+        (r.service.q3 - r.service.q1) / r.service.median
+    };
+    let cpu_iqr = rel_iqr("CPU");
+    let others = ["AGX", "ARM", "ALVEO", "GPU"].map(rel_iqr);
+    println!(
+        "  CPU rel-IQR {:.3} vs max(others) {:.3} — {}",
+        cpu_iqr,
+        others.iter().fold(0.0f64, |a, &b| a.max(b)),
+        if cpu_iqr > others.iter().fold(0.0f64, |a, &b| a.max(b)) { "OK" } else { "VIOLATED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! §Perf hot-path bench — quantifies every layer of the serving stack so
+//! the optimization log in EXPERIMENTS.md has honest before/after numbers.
+//!
+//! Measured, per variant (smallest + largest models to bracket):
+//!   1. raw PJRT execution (`LoadedModel::infer`) — L2 graph cost,
+//!   2. full server handle (preprocess + infer + postprocess + metrics +
+//!      cost model) — L3 overhead on top of (1),
+//!   3. batched server loop round-trip — queueing machinery overhead,
+//!   4. workload generation and JSON manifest parse (coordinator paths).
+//!
+//! Run: `cargo bench --bench hotpath` — `BENCH_QUICK=1` trims iterations.
+
+mod common;
+
+use std::sync::Arc;
+
+use tf2aif::artifact::Artifact;
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{AifServer, BatcherConfig, ImageClassify, Request, ServerHandle};
+use tf2aif::util::rng::Rng;
+use tf2aif::workload::image_like;
+
+fn main() -> anyhow::Result<()> {
+    let iters = if common::quick() { 20 } else { 200 };
+    let engine = Engine::cpu()?;
+
+    for id in ["lenet_CPU", "mobilenetv1_GPU", "resnet50_AGX"] {
+        let Ok(art) = Artifact::load(format!("artifacts/{id}")) else {
+            eprintln!("skipping {id}: run `make artifacts`");
+            continue;
+        };
+        let server = Arc::new(AifServer::deploy(&engine, &art, Arc::new(ImageClassify))?);
+        let shape = server.model.input_shape.clone();
+        let (h, w, c) = (shape[1], shape[2], shape[3]);
+        let mut rng = Rng::new(7);
+        let img = image_like(&mut rng, h, w, c);
+
+        println!("\n─ {id} ({} layers, {:.3} GFLOPs)", art.manifest.layers, art.manifest.gflops);
+
+        // 1. Raw PJRT execution.
+        let model = server.model.clone();
+        let img1 = img.clone();
+        let mut s =
+            common::bench_ms(3, iters, || {
+                std::hint::black_box(model.infer(&img1).unwrap());
+            });
+        common::summarize("L2 raw infer (PJRT execute)", &mut s);
+        let raw_med = s.percentile(50.0);
+
+        // 2. Full server handle.
+        let srv = Arc::clone(&server);
+        let img2 = img.clone();
+        let mut n = 0u64;
+        let mut s = common::bench_ms(3, iters, || {
+            n += 1;
+            std::hint::black_box(
+                srv.handle(&Request { id: n, payload: img2.clone() }).unwrap(),
+            );
+        });
+        common::summarize("L3 server handle (pre+infer+post)", &mut s);
+        let handle_med = s.percentile(50.0);
+        println!(
+            "{:<40} {:.3} ms ({:.1}% of handle)",
+            "  → L3 overhead over raw infer",
+            handle_med - raw_med,
+            (handle_med - raw_med) / handle_med * 100.0
+        );
+
+        // 3. Batched server-loop round-trip.
+        let handle = ServerHandle::spawn(
+            Arc::clone(&server),
+            BatcherConfig { max_batch: 8, workers: 1 },
+        );
+        let img3 = img.clone();
+        let mut m = 1_000_000u64;
+        let mut s = common::bench_ms(3, iters, || {
+            m += 1;
+            let rx = handle.submit(Request { id: m, payload: img3.clone() });
+            std::hint::black_box(rx.recv().unwrap().unwrap());
+        });
+        common::summarize("L3 queued round-trip (1 in flight)", &mut s);
+        handle.shutdown();
+
+        // 4. Coordinator-path microbenches.
+        let mut s = common::bench_ms(3, iters, || {
+            let mut r = Rng::new(9);
+            std::hint::black_box(image_like(&mut r, h, w, c));
+        });
+        common::summarize("workload image_like", &mut s);
+
+        let manifest_src = std::fs::read_to_string(art.dir.join("manifest.json"))?;
+        let mut s = common::bench_ms(3, iters, || {
+            std::hint::black_box(
+                tf2aif::artifact::Manifest::parse(&manifest_src).unwrap(),
+            );
+        });
+        common::summarize("manifest JSON parse", &mut s);
+    }
+    Ok(())
+}

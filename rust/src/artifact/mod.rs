@@ -1,0 +1,336 @@
+//! Artifact model: what the python compile path emits, what the runtime
+//! loads.  One artifact directory per (model × variant) holds
+//! `model.hlo.txt`, `weights.bin`, `manifest.json` and `fixtures.bin`
+//! (serving-path parity vectors) — see `python/compile/aot.py`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an exported tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "bf16" => DType::Bf16,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I8 => 1,
+            DType::Bf16 => 2,
+        }
+    }
+
+    pub fn primitive(self) -> xla::PrimitiveType {
+        match self {
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::I8 => xla::PrimitiveType::S8,
+            DType::Bf16 => xla::PrimitiveType::Bf16,
+        }
+    }
+}
+
+/// One parameter tensor in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A fixture: input/expected-output offsets into `fixtures.bin`.
+#[derive(Debug, Clone)]
+pub struct FixtureSpec {
+    pub input_offset: usize,
+    pub output_offset: usize,
+    pub output_shape: Vec<usize>,
+}
+
+/// Parsed `manifest.json` — everything the runtime and coordinator need.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub variant: String,
+    pub platform: String,
+    pub framework: String,
+    pub precision: String,
+    pub mode: String,
+    pub baseline_of: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub fixtures: Vec<FixtureSpec>,
+    pub param_count: u64,
+    pub weights_bytes: u64,
+    pub master_size_mb: f64,
+    pub macs: u64,
+    pub gflops: f64,
+    pub layers: u64,
+    pub convert_time_s: f64,
+    pub lower_time_s: f64,
+    pub calibration_scheme: String,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src).context("manifest.json parse")?;
+        let shape_of = |v: &Json| -> Result<Vec<usize>> {
+            v.arr()?.iter().map(|d| Ok(d.usize()?)).collect()
+        };
+        let stats = j.get("stats")?;
+        let params = j
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.str()?.to_string(),
+                    dtype: DType::parse(p.get("dtype")?.str()?)?,
+                    shape: shape_of(p.get("shape")?)?,
+                    offset: p.get("offset")?.usize()?,
+                    nbytes: p.get("nbytes")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fixtures = match j.opt("fixtures") {
+            Some(f) => f
+                .arr()?
+                .iter()
+                .map(|p| {
+                    Ok(FixtureSpec {
+                        input_offset: p.get("input_offset")?.usize()?,
+                        output_offset: p.get("output_offset")?.usize()?,
+                        output_shape: shape_of(p.get("output_shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(Manifest {
+            model: j.get("model")?.str()?.to_string(),
+            variant: j.get("variant")?.str()?.to_string(),
+            platform: j.get("platform")?.str()?.to_string(),
+            framework: j.get("framework")?.str()?.to_string(),
+            precision: j.get("precision")?.str()?.to_string(),
+            mode: j.get("mode")?.str()?.to_string(),
+            baseline_of: j.get("baseline_of")?.str()?.to_string(),
+            input_shape: shape_of(j.get("input")?.get("shape")?)?,
+            output_shape: shape_of(j.get("output")?.get("shape")?)?,
+            params,
+            fixtures,
+            param_count: stats.get("param_count")?.u64()?,
+            weights_bytes: stats.get("weights_bytes")?.u64()?,
+            master_size_mb: stats.get("master_size_mb")?.f64()?,
+            macs: stats.get("macs")?.u64()?,
+            gflops: stats.get("gflops")?.f64()?,
+            layers: stats.get("layers")?.u64()?,
+            convert_time_s: stats.get("convert_time_s")?.f64()?,
+            lower_time_s: stats.get("lower_time_s")?.f64()?,
+            calibration_scheme: j
+                .get("calibration")?
+                .get("scheme")?
+                .str()?
+                .to_string(),
+        })
+    }
+
+    /// `<model>_<variant>` — the artifact directory / AIF identity.
+    pub fn id(&self) -> String {
+        format!("{}_{}", self.model, self.variant)
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// An artifact directory on disk.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let msrc = fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Manifest::parse(&msrc)?;
+        Ok(Artifact { dir, manifest })
+    }
+
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join("model.hlo.txt")
+    }
+
+    /// Load `weights.bin` and slice it per the parameter table.
+    pub fn load_weights(&self) -> Result<Weights> {
+        let blob = fs::read(self.dir.join("weights.bin"))
+            .with_context(|| format!("reading weights in {}", self.dir.display()))?;
+        for p in &self.manifest.params {
+            let end = p.offset + p.nbytes;
+            if end > blob.len() {
+                bail!(
+                    "weights.bin truncated: {} needs [{}, {}) of {}",
+                    p.name, p.offset, end, blob.len()
+                );
+            }
+            let elems: usize = p.shape.iter().product();
+            if elems * p.dtype.size() != p.nbytes {
+                bail!("param {}: shape/dtype disagrees with nbytes", p.name);
+            }
+        }
+        Ok(Weights { blob, params: self.manifest.params.clone() })
+    }
+
+    /// Load fixtures (input + expected logits), f32 little-endian.
+    pub fn load_fixtures(&self) -> Result<Vec<Fixture>> {
+        if self.manifest.fixtures.is_empty() {
+            return Ok(Vec::new());
+        }
+        let blob = fs::read(self.dir.join("fixtures.bin"))?;
+        let in_elems = self.manifest.input_elems();
+        self.manifest
+            .fixtures
+            .iter()
+            .map(|f| {
+                let out_elems: usize = f.output_shape.iter().product();
+                Ok(Fixture {
+                    input: read_f32s(&blob, f.input_offset, in_elems)?,
+                    expected: read_f32s(&blob, f.output_offset, out_elems)?,
+                })
+            })
+            .collect()
+    }
+}
+
+/// The weights blob plus its parameter table; hands out aligned slices.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    blob: Vec<u8>,
+    params: Vec<ParamSpec>,
+}
+
+impl Weights {
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn raw(&self, p: &ParamSpec) -> &[u8] {
+        &self.blob[p.offset..p.offset + p.nbytes]
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.blob.len()
+    }
+}
+
+/// Serving-path parity vector.
+#[derive(Debug, Clone)]
+pub struct Fixture {
+    pub input: Vec<f32>,
+    pub expected: Vec<f32>,
+}
+
+fn read_f32s(blob: &[u8], offset: usize, n: usize) -> Result<Vec<f32>> {
+    let end = offset + n * 4;
+    if end > blob.len() {
+        bail!("fixtures.bin truncated: need [{offset}, {end}) of {}", blob.len());
+    }
+    Ok(blob[offset..end]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Scan an artifacts directory for every exported (model × variant).
+pub fn scan(dir: impl AsRef<Path>) -> Result<Vec<Artifact>> {
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(dir.as_ref()) {
+        Ok(rd) => rd,
+        Err(e) => bail!("artifacts dir {}: {e}", dir.as_ref().display()),
+    };
+    for entry in rd {
+        let entry = entry?;
+        if entry.path().join("manifest.json").exists() {
+            out.push(Artifact::load(entry.path())?);
+        }
+    }
+    out.sort_by(|a, b| a.manifest.id().cmp(&b.manifest.id()));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "model": "lenet", "variant": "AGX", "platform": "Edge GPU",
+        "framework": "ONNX w/ TensorRT", "precision": "INT8", "mode": "int8",
+        "baseline_of": "",
+        "input": {"shape": [1, 32, 32, 1], "dtype": "f32"},
+        "output": {"shape": [1, 10], "dtype": "f32"},
+        "params": [
+            {"name": "conv1/b", "dtype": "f32", "shape": [6], "offset": 0, "nbytes": 24},
+            {"name": "conv1/wq", "dtype": "i8", "shape": [5, 5, 1, 6], "offset": 64, "nbytes": 150}
+        ],
+        "stats": {"param_count": 174, "weights_bytes": 214,
+                  "master_size_mb": 0.2, "macs": 1000, "gflops": 0.000002,
+                  "layers": 5, "hlo_bytes": 100, "convert_time_s": 1.5,
+                  "lower_time_s": 0.5},
+        "calibration": {"scheme": "symmetric per-channel"},
+        "fixtures": [{"input_offset": 0, "output_offset": 4096, "output_shape": [1, 10]}]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.id(), "lenet_AGX");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].dtype, DType::I8);
+        assert_eq!(m.input_elems(), 1024);
+        assert_eq!(m.output_elems(), 10);
+        assert_eq!(m.fixtures.len(), 1);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::I8.size(), 1);
+        assert_eq!(DType::Bf16.size(), 2);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn weights_validation_catches_truncation() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        // blob shorter than the second param's extent
+        let w = Weights { blob: vec![0; 64], params: m.params.clone() };
+        // direct construction skips validation; Artifact::load_weights
+        // performs it — emulate the check here:
+        let p = &w.params[1];
+        assert!(p.offset + p.nbytes > w.blob.len());
+    }
+}

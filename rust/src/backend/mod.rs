@@ -1,0 +1,232 @@
+//! Deployment backend — the paper's §V-C "backend system, which operates
+//! in conjunction with Kubernetes [and], considering the available
+//! hardware, automatically determines the most suitable
+//! AI-framework-platform model variant for deployment".
+//!
+//! Selection is a pure function over (artifact index, cluster state,
+//! policy); `Deployment` couples a decision to a bound pod and a live
+//! `AifServer`.  The multi-objective policies beyond `MinLatency` are the
+//! paper's declared future work — implemented here as the natural
+//! extensions (DESIGN.md: optional/extension features).
+
+pub mod predictor;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::artifact::Artifact;
+use crate::cluster::Cluster;
+use crate::platform::{self, Platform};
+use crate::runtime::Engine;
+use crate::serving::{AifServer, ImageClassify};
+
+/// Variant-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Minimize modeled service latency (the paper's implied default).
+    MinLatency,
+    /// Prefer far-edge placements (FE nodes), tie-break on latency —
+    /// keeps near-edge servers free for heavier AIFs.
+    PreferEdge,
+    /// Minimize modeled energy ∝ latency × platform power class.
+    MinEnergy,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        Ok(match s {
+            "min-latency" => Policy::MinLatency,
+            "prefer-edge" => Policy::PreferEdge,
+            "min-energy" => Policy::MinEnergy,
+            other => bail!("unknown policy {other:?}"),
+        })
+    }
+}
+
+/// Rough platform power classes in watts (board TDP scale) for MinEnergy.
+fn power_w(platform: &Platform) -> f64 {
+    match platform.name {
+        "AGX" => 30.0,
+        "ARM" => 15.0,
+        "CPU" => 140.0,
+        "ALVEO" => 100.0,
+        "GPU" => 300.0,
+        _ => 100.0,
+    }
+}
+
+/// One placement decision.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub aif: String,
+    pub variant: String,
+    pub node: String,
+    /// Modeled (noise-free) service latency used for ranking, ms.
+    pub modeled_ms: f64,
+    pub score: f64,
+}
+
+/// The backend: an index of available artifacts + a policy.
+pub struct Backend {
+    /// model name → its artifacts (all variants found on disk).
+    index: BTreeMap<String, Vec<Artifact>>,
+    pub policy: Policy,
+    /// Consider native `*_TF` variants during selection (off by default —
+    /// the paper deploys accelerated variants; baselines are for Fig. 5).
+    pub allow_native: bool,
+    /// When set, latency estimates come from the ML-trained model
+    /// (Objective #4) instead of the analytic platform cost model.
+    pub predictor: Option<predictor::LearnedLatency>,
+}
+
+impl Backend {
+    pub fn new(artifacts: Vec<Artifact>, policy: Policy) -> Backend {
+        let mut index: BTreeMap<String, Vec<Artifact>> = BTreeMap::new();
+        for a in artifacts {
+            index.entry(a.manifest.model.clone()).or_default().push(a);
+        }
+        Backend { index, policy, allow_native: false, predictor: None }
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.index.keys().map(String::as_str).collect()
+    }
+
+    pub fn variants_of(&self, model: &str) -> Vec<&Artifact> {
+        self.index.get(model).map(|v| v.iter().collect()).unwrap_or_default()
+    }
+
+    /// Memory an AIF instance pins on a node, GB (weights + runtime pad).
+    fn pod_memory_gb(a: &Artifact) -> f64 {
+        a.manifest.weights_bytes as f64 / 1e9 + 0.25
+    }
+
+    /// Rank all feasible (variant, node) placements for `model`.
+    pub fn rank(&self, model: &str, cluster: &Cluster) -> Result<Vec<Decision>> {
+        let artifacts = self
+            .index
+            .get(model)
+            .with_context(|| format!("no artifacts for model {model:?}"))?;
+        let mut out = Vec::new();
+        for a in artifacts {
+            let m = &a.manifest;
+            if !self.allow_native && Platform::is_native_variant(&m.variant) {
+                continue;
+            }
+            let Some(plat) = platform::get(&m.variant) else { continue };
+            let native = Platform::is_native_variant(&m.variant);
+            let modeled = match &self.predictor {
+                Some(p) => p.predict(plat.name, m.gflops, native),
+                None => plat.latency_model_ms(m.gflops, native),
+            };
+            for node in cluster.feasible_nodes(&m.variant, Self::pod_memory_gb(a)) {
+                let score = match self.policy {
+                    Policy::MinLatency => modeled,
+                    Policy::PreferEdge => {
+                        // Far-edge nodes (arm64) win by a large margin,
+                        // latency breaks ties.
+                        if node.arch == "arm64" { modeled } else { modeled + 1e6 }
+                    }
+                    Policy::MinEnergy => modeled * power_w(plat),
+                };
+                out.push(Decision {
+                    aif: m.id(),
+                    variant: m.variant.clone(),
+                    node: node.name.clone(),
+                    modeled_ms: modeled,
+                    score,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+        Ok(out)
+    }
+
+    /// Pick the best placement (the paper's automatic selection).
+    pub fn select(&self, model: &str, cluster: &Cluster) -> Result<Decision> {
+        self.rank(model, cluster)?
+            .into_iter()
+            .next()
+            .with_context(|| format!("no feasible placement for {model:?}"))
+    }
+
+    /// Select, bind the pod, compile + pin the AIF, return the live
+    /// deployment.
+    pub fn deploy(
+        &self,
+        model: &str,
+        cluster: &mut Cluster,
+        engine: &Engine,
+    ) -> Result<Deployment> {
+        let d = self.select(model, cluster)?;
+        let artifact = self
+            .index
+            .get(model)
+            .unwrap()
+            .iter()
+            .find(|a| a.manifest.variant == d.variant)
+            .unwrap();
+        let pod = cluster.bind(&d.aif, &d.variant, &d.node, Self::pod_memory_gb(artifact))?;
+        let server = AifServer::deploy(engine, artifact, Arc::new(ImageClassify))?;
+        Ok(Deployment { decision: d, pod, server: Arc::new(server) })
+    }
+}
+
+/// A live deployment: decision + pod binding + serving instance.
+pub struct Deployment {
+    pub decision: Decision,
+    pub pod: u64,
+    pub server: Arc<AifServer>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::paper_testbed;
+
+    fn load_backend(policy: Policy) -> Option<(Backend, Cluster)> {
+        let arts = crate::artifact::scan("artifacts").ok()?;
+        if arts.is_empty() {
+            return None;
+        }
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        Some((Backend::new(arts, policy), cluster))
+    }
+
+    #[test]
+    fn min_latency_picks_gpu_for_large_models() {
+        let Some((b, c)) = load_backend(Policy::MinLatency) else { return };
+        let d = b.select("inceptionv4", &c).unwrap();
+        assert_eq!(d.variant, "GPU", "V100 wins large CNNs (Fig. 4)");
+        assert_eq!(d.node, "NE-2");
+    }
+
+    #[test]
+    fn prefer_edge_lands_on_fe() {
+        let Some((b, c)) = load_backend(Policy::PreferEdge) else { return };
+        let d = b.select("mobilenetv1", &c).unwrap();
+        assert_eq!(d.node, "FE");
+        assert!(d.variant == "AGX" || d.variant == "ARM");
+    }
+
+    #[test]
+    fn native_variants_excluded_by_default() {
+        let Some((b, c)) = load_backend(Policy::MinLatency) else { return };
+        for d in b.rank("resnet50", &c).unwrap() {
+            assert!(!d.variant.ends_with("_TF"), "{}", d.variant);
+        }
+    }
+
+    #[test]
+    fn ranking_is_sorted() {
+        let Some((b, c)) = load_backend(Policy::MinLatency) else { return };
+        let r = b.rank("lenet", &c).unwrap();
+        assert!(!r.is_empty());
+        for w in r.windows(2) {
+            assert!(w[0].score <= w[1].score);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Learned latency predictor — the paper's Objective #4 ("enable
+//! AI-driven inference serving scheduling systems") and declared future
+//! work ("the ease and speed of generating performance data are vital in
+//! empowering AI/ML-driven schedulers").
+//!
+//! TF2AIF's benchmark sweep (`examples/benchmark_sweep.rs`) generates
+//! exactly the dataset this needs: (platform, precision, model-FLOPs) →
+//! measured mean service latency.  A ridge-regularized least-squares
+//! model over [1, gflops, platform one-hots, gflops×platform, native]
+//! recovers the latency surface; the backend can then rank placements
+//! from *data* instead of the analytic cost model.
+
+
+use anyhow::{bail, Result};
+
+/// One training observation from a benchmark sweep.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub platform: String,
+    pub native: bool,
+    pub gflops: f64,
+    pub mean_latency_ms: f64,
+}
+
+/// Ridge-regression latency model.
+#[derive(Debug, Clone)]
+pub struct LearnedLatency {
+    platforms: Vec<String>,
+    weights: Vec<f64>,
+}
+
+impl LearnedLatency {
+    /// Feature vector: global [1, g] plus a per-(platform × native) cell
+    /// intercept and slope — the latency surface is exactly
+    /// `overhead(cell) + g / throughput(cell)`, so the model class
+    /// realizes it and the fit is identifiable from sweep data alone.
+    fn features(&self, platform: &str, gflops: f64, native: bool) -> Vec<f64> {
+        let p = self.platforms.len();
+        let cells = 2 * p;
+        let mut f = vec![0.0; 2 + 2 * cells];
+        f[0] = 1.0;
+        f[1] = gflops;
+        if let Some(i) = self.platforms.iter().position(|q| q == platform) {
+            let cell = 2 * i + native as usize;
+            f[2 + cell] = 1.0;
+            f[2 + cells + cell] = gflops;
+        }
+        f
+    }
+
+    /// Fit by solving the ridge normal equations (tiny dims — Gaussian
+    /// elimination with partial pivoting is plenty).
+    pub fn fit(data: &[Observation]) -> Result<LearnedLatency> {
+        if data.len() < 4 {
+            bail!("need at least 4 observations, got {}", data.len());
+        }
+        let mut platforms: Vec<String> = data.iter().map(|o| o.platform.clone()).collect();
+        platforms.sort();
+        platforms.dedup();
+        let mut model = LearnedLatency { platforms, weights: vec![] };
+        let d = 2 + 4 * model.platforms.len();
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        for o in data {
+            let f = model.features(&o.platform, o.gflops, o.native);
+            for i in 0..d {
+                xty[i] += f[i] * o.mean_latency_ms;
+                for j in 0..d {
+                    xtx[i][j] += f[i] * f[j];
+                }
+            }
+        }
+        // Ridge: keeps unobserved platform columns solvable.
+        for (i, row) in xtx.iter_mut().enumerate() {
+            row[i] += 1e-6;
+        }
+        model.weights = solve(xtx, xty)?;
+        Ok(model)
+    }
+
+    /// Predicted mean service latency in ms (clamped non-negative).
+    pub fn predict(&self, platform: &str, gflops: f64, native: bool) -> f64 {
+        let f = self.features(platform, gflops, native);
+        f.iter().zip(&self.weights).map(|(a, b)| a * b).sum::<f64>().max(0.0)
+    }
+
+    /// Mean absolute percentage error over a dataset.
+    pub fn mape(&self, data: &[Observation]) -> f64 {
+        let mut acc = 0.0;
+        for o in data {
+            let p = self.predict(&o.platform, o.gflops, o.native);
+            acc += ((p - o.mean_latency_ms) / o.mean_latency_ms).abs();
+        }
+        acc / data.len() as f64
+    }
+
+    pub fn platforms(&self) -> &[String] {
+        &self.platforms
+    }
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        if a[piv][col].abs() < 1e-12 {
+            bail!("singular normal equations");
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for k in col + 1..n {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Ok(x)
+}
+
+/// Generate a training set from the analytic platform models — stands in
+/// for a recorded sweep when `reports/sweep.csv` is absent.  `noise`
+/// perturbs the labels (measurement realism).
+pub fn synthetic_sweep(noise: f64, seed: u64) -> Vec<Observation> {
+    use crate::platform::PLATFORMS;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for p in PLATFORMS {
+        for i in 0..24 {
+            let gflops = 0.0005 * 1.35f64.powi(i);
+            for native in [false, true] {
+                if native && p.native_gflops == 0.0 {
+                    continue;
+                }
+                let base = p.latency_model_ms(gflops, native);
+                out.push(Observation {
+                    platform: p.name.to_string(),
+                    native,
+                    gflops,
+                    mean_latency_ms: base * (1.0 + noise * rng.normal()),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Parse observations out of a `reports/sweep.csv` produced by the
+/// benchmark_sweep example.
+pub fn from_sweep_csv(path: &str) -> Result<Vec<Observation>> {
+    let src = std::fs::read_to_string(path)?;
+    let mut lines = src.lines();
+    let header: Vec<&str> = lines.next().unwrap_or("").split(',').collect();
+    let col = |name: &str| header.iter().position(|h| *h == name);
+    let (Some(vi), Some(gi), Some(mi)) =
+        (col("variant"), col("gflops"), col("service_mean_ms"))
+    else {
+        bail!("sweep.csv missing columns");
+    };
+    let mut out = Vec::new();
+    for line in lines {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() <= mi.max(gi).max(vi) {
+            continue;
+        }
+        let variant = f[vi];
+        out.push(Observation {
+            platform: variant.trim_end_matches("_TF").to_string(),
+            native: variant.ends_with("_TF"),
+            gflops: f[gi].parse()?,
+            mean_latency_ms: f[mi].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+
+    #[test]
+    fn recovers_cost_model_ordering() {
+        let data = synthetic_sweep(0.02, 1);
+        let m = LearnedLatency::fit(&data).unwrap();
+        // Large model: learned ranking must match Fig. 4's.
+        let g = 0.529;
+        let lat: BTreeMap<&str, f64> = ["GPU", "ALVEO", "AGX", "CPU", "ARM"]
+            .iter()
+            .map(|p| (*p, m.predict(p, g, false)))
+            .collect();
+        assert!(lat["GPU"] < lat["ALVEO"]);
+        assert!(lat["ALVEO"] < lat["AGX"]);
+        assert!(lat["AGX"] < lat["CPU"]);
+        assert!(lat["CPU"] < lat["ARM"]);
+    }
+
+    #[test]
+    fn fit_error_is_small_on_clean_data() {
+        let data = synthetic_sweep(0.0, 2);
+        let m = LearnedLatency::fit(&data).unwrap();
+        assert!(m.mape(&data) < 0.05, "mape {}", m.mape(&data));
+    }
+
+    #[test]
+    fn predicts_native_slower_than_accelerated() {
+        let m = LearnedLatency::fit(&synthetic_sweep(0.02, 3)).unwrap();
+        for p in ["AGX", "ARM", "CPU", "GPU"] {
+            for g in [0.01, 0.1, 0.5] {
+                assert!(
+                    m.predict(p, g, true) > m.predict(p, g, false),
+                    "{p} at {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_tiny_datasets() {
+        assert!(LearnedLatency::fit(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_platform_gets_global_trend() {
+        let m = LearnedLatency::fit(&synthetic_sweep(0.0, 4)).unwrap();
+        let a = m.predict("NPU", 0.1, false);
+        let b = m.predict("NPU", 0.5, false);
+        assert!(a.is_finite() && b.is_finite());
+        assert!(b >= a, "latency must grow with FLOPs even off-registry");
+    }
+}

@@ -1,0 +1,127 @@
+//! Generated client — paper Feature 6 ("automatic generation of example
+//! client containers, compatible with the server containers").
+//!
+//! The client drives a deployed AIF with a configurable workload (the
+//! paper's benchmark: 1000 closed-loop requests, one image each) and
+//! captures the full latency series.  It is also the verification vehicle:
+//! `verify()` replays the artifact fixtures through the *server* path and
+//! checks predictions, which is how the paper's clients "facilitate the
+//! verification of AI inference services".
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::artifact::Artifact;
+use crate::serving::{AifServer, ImageClassify, PrePost, Request};
+use crate::util::rng::Rng;
+use crate::util::stats::Series;
+use crate::workload::{image_like, Arrival};
+
+/// Client-side benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Number of requests (paper: 1000 per variant).
+    pub requests: usize,
+    pub arrival: Arrival,
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig { requests: 1000, arrival: Arrival::ClosedLoop, seed: 0xC11E }
+    }
+}
+
+/// Result of one client run against one AIF.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub variant: String,
+    pub model: String,
+    /// Simulated platform service latency series (Fig. 4 channel).
+    pub service_ms: Series,
+    /// Real measured PJRT compute series.
+    pub real_compute_ms: Series,
+    pub errors: usize,
+    pub wall_s: f64,
+}
+
+impl RunReport {
+    pub fn throughput_rps(&self) -> f64 {
+        crate::util::stats::throughput_rps(self.service_ms.len(), self.wall_s)
+    }
+}
+
+/// The generated client for one AIF service.
+pub struct Client {
+    server: Arc<AifServer>,
+    input_shape: (usize, usize, usize),
+}
+
+impl Client {
+    pub fn new(server: Arc<AifServer>) -> Client {
+        let s = &server.model.input_shape;
+        assert_eq!(s.len(), 4, "NHWC input expected");
+        let shape = (s[1], s[2], s[3]);
+        Client { server, input_shape: shape }
+    }
+
+    /// Closed/open-loop benchmark: `cfg.requests` single-image requests.
+    pub fn run(&self, cfg: &ClientConfig) -> Result<RunReport> {
+        let (h, w, c) = self.input_shape;
+        let mut rng = Rng::new(cfg.seed);
+        let mut service = Series::new();
+        let mut real = Series::new();
+        let mut errors = 0usize;
+        let t0 = Instant::now();
+        for i in 0..cfg.requests {
+            if let Some(gap) = cfg.arrival.next_gap_s(&mut rng) {
+                // Open loop: model think-time without blocking the bench
+                // on real sleeps for the simulated-platform channel.
+                std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.002)));
+            }
+            let payload = image_like(&mut rng, h, w, c);
+            match self.server.handle(&Request { id: i as u64, payload }) {
+                Ok(resp) => {
+                    service.push(resp.service_ms);
+                    real.push(resp.real_compute_ms);
+                }
+                Err(_) => errors += 1,
+            }
+        }
+        Ok(RunReport {
+            variant: self.server.variant.clone(),
+            model: self.server.model_name.clone(),
+            service_ms: service,
+            real_compute_ms: real,
+            errors,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Replay artifact fixtures through the server path and check that the
+    /// served prediction matches the build-time expected logits' argmax.
+    pub fn verify(&self, artifact: &Artifact) -> Result<usize> {
+        let fixtures = artifact.load_fixtures()?;
+        if fixtures.is_empty() {
+            bail!("{}: no fixtures to verify", artifact.manifest.id());
+        }
+        let pp = ImageClassify;
+        for (i, fx) in fixtures.iter().enumerate() {
+            let resp = self
+                .server
+                .handle(&Request { id: u64::MAX - i as u64, payload: fx.input.clone() })?;
+            let expected = pp.postprocess(&fx.expected);
+            if resp.prediction.class != expected.class {
+                bail!(
+                    "{}: fixture {i} served class {} != expected {}",
+                    artifact.manifest.id(),
+                    resp.prediction.class,
+                    expected.class
+                );
+            }
+        }
+        Ok(fixtures.len())
+    }
+}

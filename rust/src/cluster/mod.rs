@@ -1,0 +1,333 @@
+//! Kubernetes substrate — the cluster the paper deploys onto (Table II).
+//!
+//! Models exactly the control-plane surface TF2AIF needs: nodes with
+//! architecture labels and memory, vendor **device plugins** advertising
+//! accelerator slots (NVIDIA and Xilinx plugins in the paper), the
+//! **Kube-API extension** that registers ARM devices the vendors don't
+//! support natively (paper §V-A), pods with a lifecycle, and a scheduler
+//! with filter/score semantics.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+
+/// A cluster node (one Table II row).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// "x86_64" | "arm64".
+    pub arch: String,
+    pub cpu_desc: String,
+    pub cpus: usize,
+    pub memory_gb: f64,
+    pub accelerator: String,
+    /// Table I platform names servable here once plugins registered.
+    pub platforms: Vec<String>,
+    /// Device slots per platform (accelerator concurrency).
+    pub slots: usize,
+}
+
+/// Device-plugin registration state for a node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PluginState {
+    /// Vendor plugin advertised the device (NVIDIA/Xilinx path).
+    Registered,
+    /// Needs the Kube-API extension first (ARM path, paper §V-A).
+    NeedsKubeApiExtension,
+}
+
+/// Pod lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodState {
+    Pending,
+    Running,
+    Terminated,
+    Failed,
+}
+
+/// A scheduled AIF instance.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: u64,
+    pub aif: String,
+    pub variant: String,
+    pub node: String,
+    pub state: PodState,
+    pub memory_gb: f64,
+}
+
+/// The simulated cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    nodes: Vec<NodeSpec>,
+    plugin_state: BTreeMap<String, PluginState>,
+    pods: Vec<Pod>,
+    next_pod: u64,
+}
+
+/// Does this variant's platform occupy an accelerator device-plugin slot?
+/// AGX / ALVEO / GPU do; plain CPU and ARM serving does not.
+pub fn platform_needs_accelerator(variant: &str) -> bool {
+    matches!(variant.trim_end_matches("_TF"), "AGX" | "ALVEO" | "GPU")
+}
+
+/// The paper's Table II testbed.
+pub fn paper_testbed() -> Vec<NodeSpec> {
+    vec![
+        NodeSpec {
+            name: "NE-1".into(),
+            arch: "x86_64".into(),
+            cpu_desc: "Intel Xeon Silver 4210 @ 2.20GHz".into(),
+            cpus: 16,
+            memory_gb: 16.0,
+            accelerator: "Xilinx Alveo U280 (FPGA)".into(),
+            platforms: vec!["CPU".into(), "ALVEO".into()],
+            slots: 1,
+        },
+        NodeSpec {
+            name: "NE-2".into(),
+            arch: "x86_64".into(),
+            cpu_desc: "Intel Xeon Gold 6138 @ 2.00GHz".into(),
+            cpus: 16,
+            memory_gb: 16.0,
+            accelerator: "NVIDIA V100 (GPU)".into(),
+            platforms: vec!["CPU".into(), "GPU".into()],
+            slots: 1,
+        },
+        NodeSpec {
+            name: "FE".into(),
+            arch: "arm64".into(),
+            cpu_desc: "NVIDIA Carmel Armv8.2 64-bit".into(),
+            cpus: 8,
+            memory_gb: 32.0,
+            accelerator: "512-core NVIDIA Volta (GPU)".into(),
+            platforms: vec!["ARM".into(), "AGX".into()],
+            slots: 1,
+        },
+    ]
+}
+
+impl Cluster {
+    pub fn new(nodes: Vec<NodeSpec>) -> Cluster {
+        let plugin_state = nodes
+            .iter()
+            .map(|n| {
+                let st = if n.arch == "arm64" {
+                    // Vendors ship no ARM device plugins (paper §V-A):
+                    // the node joins but its devices are invisible until
+                    // the Kube-API extension registers them.
+                    PluginState::NeedsKubeApiExtension
+                } else {
+                    PluginState::Registered
+                };
+                (n.name.clone(), st)
+            })
+            .collect();
+        Cluster { nodes, plugin_state, pods: Vec::new(), next_pod: 1 }
+    }
+
+    /// Build from a `[[node]]` config file (see `configs/cluster_paper.toml`).
+    pub fn from_config(cfg: &Config) -> Result<Cluster> {
+        let mut nodes = Vec::new();
+        for t in cfg.array("node") {
+            nodes.push(NodeSpec {
+                name: t.get("name")?.str()?.to_string(),
+                arch: t.str_or("arch", "x86_64"),
+                cpu_desc: t.str_or("cpu", ""),
+                cpus: t.usize_or("cpus", 8),
+                memory_gb: t.f64_or("memory_gb", 16.0),
+                accelerator: t.str_or("accelerator", "none"),
+                platforms: t.get("platforms")?.str_arr()?,
+                slots: t.usize_or("slots", 1),
+            });
+        }
+        if nodes.is_empty() {
+            bail!("config defines no [[node]] entries");
+        }
+        Ok(Cluster::new(nodes))
+    }
+
+    /// Apply the Kube-API extension: registers device plugins on ARM
+    /// nodes, making them schedulable (paper §V-A integration step).
+    pub fn apply_kube_api_extension(&mut self) {
+        for st in self.plugin_state.values_mut() {
+            if *st == PluginState::NeedsKubeApiExtension {
+                *st = PluginState::Registered;
+            }
+        }
+    }
+
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn pods(&self) -> &[Pod] {
+        &self.pods
+    }
+
+    fn node(&self, name: &str) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Is this node's device plugin registered (i.e. schedulable)?
+    pub fn is_schedulable(&self, node: &str) -> bool {
+        self.plugin_state.get(node) == Some(&PluginState::Registered)
+    }
+
+    /// Used accelerator slots on a node.  Only accelerator-backed
+    /// platforms consume device-plugin slots; plain CPU/ARM serving is
+    /// gated by memory alone.
+    fn used_slots(&self, node: &str) -> usize {
+        self.pods
+            .iter()
+            .filter(|p| p.node == node && p.state == PodState::Running)
+            .filter(|p| platform_needs_accelerator(&p.variant))
+            .count()
+    }
+
+    /// Used memory on a node (weights resident per running pod).
+    fn used_memory_gb(&self, node: &str) -> f64 {
+        self.pods
+            .iter()
+            .filter(|p| p.node == node && p.state == PodState::Running)
+            .map(|p| p.memory_gb)
+            .sum()
+    }
+
+    /// Scheduler *filter* phase: nodes that can host `variant`.
+    pub fn feasible_nodes(&self, variant: &str, memory_gb: f64) -> Vec<&NodeSpec> {
+        let platform = variant.trim_end_matches("_TF");
+        let wants_slot = platform_needs_accelerator(variant);
+        self.nodes
+            .iter()
+            .filter(|n| self.is_schedulable(&n.name))
+            .filter(|n| n.platforms.iter().any(|p| p == platform))
+            .filter(|n| !wants_slot || self.used_slots(&n.name) < n.slots)
+            .filter(|n| self.used_memory_gb(&n.name) + memory_gb <= n.memory_gb)
+            .collect()
+    }
+
+    /// Bind a pod to a node (scheduler *bind* phase).
+    pub fn bind(&mut self, aif: &str, variant: &str, node: &str, memory_gb: f64) -> Result<u64> {
+        let Some(spec) = self.node(node) else {
+            bail!("no such node {node:?}");
+        };
+        if !self.is_schedulable(node) {
+            bail!("node {node} has unregistered device plugins (run the Kube-API extension)");
+        }
+        let platform = variant.trim_end_matches("_TF");
+        if !spec.platforms.iter().any(|p| p == platform) {
+            bail!("node {node} does not expose platform {platform}");
+        }
+        if platform_needs_accelerator(variant) && self.used_slots(node) >= spec.slots {
+            bail!("node {node} has no free accelerator slots");
+        }
+        if self.used_memory_gb(node) + memory_gb > spec.memory_gb {
+            bail!("node {node} out of memory");
+        }
+        let id = self.next_pod;
+        self.next_pod += 1;
+        self.pods.push(Pod {
+            id,
+            aif: aif.to_string(),
+            variant: variant.to_string(),
+            node: node.to_string(),
+            state: PodState::Running,
+            memory_gb,
+        });
+        Ok(id)
+    }
+
+    /// Terminate a pod, releasing its slot and memory.
+    pub fn terminate(&mut self, pod_id: u64) -> Result<()> {
+        match self.pods.iter_mut().find(|p| p.id == pod_id) {
+            Some(p) if p.state == PodState::Running => {
+                p.state = PodState::Terminated;
+                Ok(())
+            }
+            Some(p) => bail!("pod {pod_id} is {:?}, not Running", p.state),
+            None => bail!("no such pod {pod_id}"),
+        }
+    }
+
+    /// Mark a pod failed (failure-injection hook for tests).
+    pub fn fail(&mut self, pod_id: u64) -> Result<()> {
+        match self.pods.iter_mut().find(|p| p.id == pod_id) {
+            Some(p) if p.state == PodState::Running => {
+                p.state = PodState::Failed;
+                Ok(())
+            }
+            Some(_) | None => bail!("pod {pod_id} not running"),
+        }
+    }
+
+    pub fn running_pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.iter().filter(|p| p.state == PodState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_nodes_need_kube_api_extension() {
+        let mut c = Cluster::new(paper_testbed());
+        assert!(!c.is_schedulable("FE"), "ARM node must start unschedulable");
+        assert!(c.is_schedulable("NE-1"));
+        assert!(c.feasible_nodes("ARM", 1.0).is_empty());
+        c.apply_kube_api_extension();
+        assert!(c.is_schedulable("FE"));
+        assert_eq!(c.feasible_nodes("ARM", 1.0).len(), 1);
+    }
+
+    #[test]
+    fn filter_respects_platform_slots_memory() {
+        let mut c = Cluster::new(paper_testbed());
+        c.apply_kube_api_extension();
+        // ALVEO only on NE-1.
+        let f = c.feasible_nodes("ALVEO", 1.0);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].name, "NE-1");
+        // Fill NE-1's single slot.
+        c.bind("aif1", "ALVEO", "NE-1", 1.0).unwrap();
+        assert!(c.feasible_nodes("ALVEO", 1.0).is_empty());
+        // Terminating frees it.
+        let id = c.running_pods().next().unwrap().id;
+        c.terminate(id).unwrap();
+        assert_eq!(c.feasible_nodes("ALVEO", 1.0).len(), 1);
+    }
+
+    #[test]
+    fn native_variants_map_to_base_platform() {
+        let mut c = Cluster::new(paper_testbed());
+        c.apply_kube_api_extension();
+        assert_eq!(c.feasible_nodes("GPU_TF", 1.0).len(), 1);
+        c.bind("aif", "GPU_TF", "NE-2", 1.0).unwrap();
+    }
+
+    #[test]
+    fn memory_pressure_rejects() {
+        let mut c = Cluster::new(paper_testbed());
+        assert!(c.bind("big", "CPU", "NE-1", 20.0).is_err(), "16GB node");
+        c.bind("ok", "CPU", "NE-1", 10.0).unwrap();
+    }
+
+    #[test]
+    fn bind_errors_are_specific() {
+        let mut c = Cluster::new(paper_testbed());
+        assert!(c.bind("a", "GPU", "NE-1", 1.0).is_err(), "wrong platform");
+        assert!(c.bind("a", "ARM", "FE", 1.0).is_err(), "plugin unregistered");
+        assert!(c.bind("a", "CPU", "nowhere", 1.0).is_err());
+    }
+
+    #[test]
+    fn double_terminate_fails() {
+        let mut c = Cluster::new(paper_testbed());
+        let id = c.bind("a", "CPU", "NE-1", 1.0).unwrap();
+        c.terminate(id).unwrap();
+        assert!(c.terminate(id).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! The Composer — stage 2 of the generation pipeline (paper Fig. 2 ③④⑤).
+//!
+//! Combines the converted model (artifact dir) with the platform Base
+//! Image (environment layer), the Base Server configuration and the
+//! user-provided interface/config into a deployable **AIF bundle**: a
+//! gzipped ustar archive of content-addressed layers (the Docker-image
+//! substitution, DESIGN.md §2).  A matching *client bundle* is composed
+//! for every server bundle (paper Feature 6).  For the ALVEO platform the
+//! composer additionally runs the DPU instruction compiler (`dpu.rs`),
+//! which is why ALVEO composes slowest — the Fig. 3 signature.
+
+pub mod dpu;
+pub mod tar;
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use sha2::{Digest, Sha256};
+
+use crate::artifact::Artifact;
+use crate::util::json::{n, obj, s, Json};
+
+/// One content-addressed layer of a bundle.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub digest: String,
+    pub data: Vec<u8>,
+}
+
+impl Layer {
+    fn new(name: &str, data: Vec<u8>) -> Layer {
+        let digest = hex_digest(&data);
+        Layer { name: name.to_string(), digest, data }
+    }
+}
+
+/// A composed bundle (server or client) ready for the registry.
+#[derive(Debug, Clone)]
+pub struct Bundle {
+    /// e.g. `lenet_AGX` or `lenet_AGX-client`.
+    pub tag: String,
+    pub kind: BundleKind,
+    pub layers: Vec<Layer>,
+    /// Manifest digest — the bundle identity.
+    pub digest: String,
+    pub compose_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BundleKind {
+    Server,
+    Client,
+}
+
+/// User-side compose options (paper §IV-C customking: batch size,
+/// networking, precision already fixed by the variant).
+#[derive(Debug, Clone)]
+pub struct ComposeOptions {
+    pub port: u16,
+    pub batch_size: usize,
+    pub extra_env: Vec<(String, String)>,
+}
+
+impl Default for ComposeOptions {
+    fn default() -> Self {
+        ComposeOptions { port: 8080, batch_size: 1, extra_env: vec![] }
+    }
+}
+
+/// Platform Base Image description — the environment layer.  The paper
+/// pins identical library versions across platforms where possible to
+/// avoid performance volatility; this is that pinned description.
+fn base_image_layer(platform_variant: &str) -> Layer {
+    let (base, runtime) = match platform_variant.trim_end_matches("_TF") {
+        "AGX" => ("l4t-r35.1", "onnxruntime-trt-8.4"),
+        "ARM" => ("ubuntu20.04-arm64", "tflite-2.11"),
+        "CPU" => ("ubuntu20.04-amd64", "tflite-2.11"),
+        "ALVEO" => ("ubuntu20.04-amd64+xrt", "vitis-ai-3.0"),
+        "GPU" => ("ubuntu20.04-amd64+cuda11.8", "onnxruntime-trt-8.4"),
+        other => (other, "unknown"),
+    };
+    let runtime = if platform_variant.ends_with("_TF") { "tensorflow-2.11" } else { runtime };
+    let env = obj(vec![
+        ("base", s(base)),
+        ("runtime", s(runtime)),
+        ("pjrt", s("xla_extension-0.5.1-cpu")),
+        ("pinned_libs", s("numpy-1.26, protobuf-4.25")),
+    ]);
+    Layer::new("env.json", env.to_string().into_bytes())
+}
+
+/// Compose the server bundle for one artifact.
+pub fn compose_server(artifact: &Artifact, opts: &ComposeOptions) -> Result<Bundle> {
+    let t0 = Instant::now();
+    let m = &artifact.manifest;
+    let mut layers = Vec::new();
+
+    // ① Base Image layer (platform environment).
+    layers.push(base_image_layer(&m.variant));
+
+    // ② Model layer: the converted artifact files.
+    for f in ["model.hlo.txt", "weights.bin", "manifest.json"] {
+        let data = std::fs::read(artifact.dir.join(f))
+            .with_context(|| format!("reading {f} for {}", m.id()))?;
+        layers.push(Layer::new(f, data));
+    }
+
+    // ③ Platform-specific layer: the Vitis-AI DPU instruction stream.
+    // The converter writes the schedule-optimized program into the
+    // artifact dir (the slow ALVEO step of Fig. 3); fall back to a quick
+    // compile for artifacts produced before the converter ran.
+    if m.variant == "ALVEO" {
+        let program = match std::fs::read(artifact.dir.join("dpu_program.bin")) {
+            Ok(p) => p,
+            Err(_) => dpu::compile_program(m, dpu::DPUCAHX8H),
+        };
+        layers.push(Layer::new("dpu_program.bin", program));
+    }
+
+    // ④ Server config layer (Base Server + user options).
+    let server_cfg = obj(vec![
+        ("aif", s(m.id())),
+        ("port", n(opts.port as f64)),
+        ("batch_size", n(opts.batch_size as f64)),
+        ("preprocess", s("per-image-standardize")),
+        ("postprocess", s("argmax")),
+        (
+            "env",
+            Json::Arr(
+                opts.extra_env
+                    .iter()
+                    .map(|(k, v)| s(format!("{k}={v}")))
+                    .collect(),
+            ),
+        ),
+    ]);
+    layers.push(Layer::new("server.json", server_cfg.to_string().into_bytes()));
+
+    finish_bundle(m.id(), BundleKind::Server, layers, t0)
+}
+
+/// Compose the matching client bundle (paper Feature 6: minimal config).
+pub fn compose_client(artifact: &Artifact, opts: &ComposeOptions) -> Result<Bundle> {
+    let t0 = Instant::now();
+    let m = &artifact.manifest;
+    let mut layers = Vec::new();
+    let client_cfg = obj(vec![
+        ("aif", s(m.id())),
+        ("endpoint", s(format!("aif-{}:{}", m.id(), opts.port))),
+        ("requests", n(1000.0)),
+        ("arrival", s("closed-loop")),
+        ("input_shape", Json::Arr(m.input_shape.iter().map(|&d| n(d as f64)).collect())),
+    ]);
+    layers.push(Layer::new("client.json", client_cfg.to_string().into_bytes()));
+    // Verification vectors ride along so the client can self-check the
+    // deployed service.
+    if artifact.dir.join("fixtures.bin").exists() {
+        layers.push(Layer::new(
+            "fixtures.bin",
+            std::fs::read(artifact.dir.join("fixtures.bin"))?,
+        ));
+    }
+    finish_bundle(format!("{}-client", m.id()), BundleKind::Client, layers, t0)
+}
+
+fn finish_bundle(
+    tag: String,
+    kind: BundleKind,
+    layers: Vec<Layer>,
+    t0: Instant,
+) -> Result<Bundle> {
+    // Bundle digest = hash over layer digests (manifest-of-layers).
+    let mut hasher = Sha256::new();
+    for l in &layers {
+        hasher.update(l.digest.as_bytes());
+    }
+    let digest = format!("sha256:{:x}", hasher.finalize());
+    Ok(Bundle { tag, kind, layers, digest, compose_s: t0.elapsed().as_secs_f64() })
+}
+
+impl Bundle {
+    /// Serialize to a gzipped ustar archive (`.aif` file).
+    pub fn to_archive(&self) -> Result<Vec<u8>> {
+        let mut entries = Vec::new();
+        let index = obj(vec![
+            ("tag", s(self.tag.clone())),
+            ("digest", s(self.digest.clone())),
+            (
+                "kind",
+                s(match self.kind {
+                    BundleKind::Server => "server",
+                    BundleKind::Client => "client",
+                }),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("name", s(l.name.clone())),
+                                ("digest", s(l.digest.clone())),
+                                ("size", n(l.data.len() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        entries.push(tar::Entry {
+            name: "index.json".into(),
+            data: index.to_string().into_bytes(),
+        });
+        for l in &self.layers {
+            entries.push(tar::Entry {
+                name: format!("layers/{}", l.name),
+                data: l.data.clone(),
+            });
+        }
+        let mut gz = GzEncoder::new(Vec::new(), Compression::fast());
+        tar::write(&mut gz, &entries)?;
+        gz.flush()?;
+        Ok(gz.finish()?)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.data.len()).sum()
+    }
+}
+
+fn hex_digest(data: &[u8]) -> String {
+    format!("sha256:{:x}", Sha256::digest(data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_images_differ_per_platform_but_share_pins() {
+        let a = base_image_layer("AGX");
+        let b = base_image_layer("GPU");
+        assert_ne!(a.digest, b.digest);
+        let aj = String::from_utf8(a.data).unwrap();
+        let bj = String::from_utf8(b.data).unwrap();
+        assert!(aj.contains("pinned_libs"));
+        assert!(bj.contains("pinned_libs"));
+    }
+
+    #[test]
+    fn native_tf_base_uses_tensorflow_runtime() {
+        let l = base_image_layer("CPU_TF");
+        let j = String::from_utf8(l.data).unwrap();
+        assert!(j.contains("tensorflow-2.11"), "{j}");
+    }
+
+    #[test]
+    fn layer_digests_are_content_addressed() {
+        let l1 = Layer::new("a", vec![1, 2, 3]);
+        let l2 = Layer::new("b", vec![1, 2, 3]);
+        let l3 = Layer::new("a", vec![9]);
+        assert_eq!(l1.digest, l2.digest, "same content, same digest");
+        assert_ne!(l1.digest, l3.digest);
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal ustar archive writer/reader — the container-image substrate.
+//!
+//! AIF bundles are tar archives of content-addressed layers (DESIGN.md §2:
+//! the Docker-image substitution).  No tar crate is vendored, so this
+//! implements the POSIX ustar subset the Composer needs: regular files,
+//! names ≤ 100 chars, sizes < 8 GiB.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// One file to archive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+const BLOCK: usize = 512;
+
+fn octal(buf: &mut [u8], value: u64) {
+    // Field is NUL-terminated octal, left-padded with zeros.
+    let digits = buf.len() - 1;
+    let s = format!("{value:0>width$o}", width = digits);
+    buf[..digits].copy_from_slice(s.as_bytes());
+    buf[digits] = 0;
+}
+
+fn header(name: &str, size: u64) -> Result<[u8; BLOCK]> {
+    if name.len() > 100 {
+        bail!("tar name too long: {name:?}");
+    }
+    let mut h = [0u8; BLOCK];
+    h[..name.len()].copy_from_slice(name.as_bytes()); // name
+    octal(&mut h[100..108], 0o644); // mode
+    octal(&mut h[108..116], 0); // uid
+    octal(&mut h[116..124], 0); // gid
+    octal(&mut h[124..136], size); // size
+    octal(&mut h[136..148], 0); // mtime (deterministic bundles)
+    h[156] = b'0'; // typeflag: regular file
+    h[257..262].copy_from_slice(b"ustar"); // magic
+    h[263..265].copy_from_slice(b"00"); // version
+    // checksum: spaces while summing
+    for b in &mut h[148..156] {
+        *b = b' ';
+    }
+    let sum: u64 = h.iter().map(|&b| b as u64).sum();
+    let s = format!("{sum:06o}\0 ");
+    h[148..156].copy_from_slice(s.as_bytes());
+    Ok(h)
+}
+
+/// Write entries as a ustar stream.
+pub fn write<W: Write>(mut w: W, entries: &[Entry]) -> Result<()> {
+    for e in entries {
+        w.write_all(&header(&e.name, e.data.len() as u64)?)?;
+        w.write_all(&e.data)?;
+        let pad = (BLOCK - e.data.len() % BLOCK) % BLOCK;
+        w.write_all(&vec![0u8; pad])?;
+    }
+    w.write_all(&[0u8; BLOCK * 2])?; // end-of-archive
+    Ok(())
+}
+
+/// Read every regular file from a ustar stream.
+pub fn read<R: Read>(mut r: R) -> Result<Vec<Entry>> {
+    let mut out = Vec::new();
+    let mut hdr = [0u8; BLOCK];
+    loop {
+        if let Err(e) = r.read_exact(&mut hdr) {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                break; // tolerate missing end blocks
+            }
+            return Err(e.into());
+        }
+        if hdr.iter().all(|&b| b == 0) {
+            break; // end-of-archive marker
+        }
+        let name_end = hdr[..100].iter().position(|&b| b == 0).unwrap_or(100);
+        let name = std::str::from_utf8(&hdr[..name_end])
+            .context("non-utf8 tar name")?
+            .to_string();
+        let size_field = std::str::from_utf8(&hdr[124..135])
+            .context("bad size field")?
+            .trim_matches(|c: char| c == '\0' || c == ' ')
+            .to_string();
+        let size = u64::from_str_radix(&size_field, 8).context("bad octal size")? as usize;
+        // Verify checksum.
+        let stored = std::str::from_utf8(&hdr[148..156])
+            .unwrap_or("")
+            .trim_matches(|c: char| c == '\0' || c == ' ')
+            .to_string();
+        let mut copy = hdr;
+        for b in &mut copy[148..156] {
+            *b = b' ';
+        }
+        let sum: u64 = copy.iter().map(|&b| b as u64).sum();
+        if u64::from_str_radix(&stored, 8).unwrap_or(u64::MAX) != sum {
+            bail!("tar checksum mismatch for {name:?}");
+        }
+        let mut data = vec![0u8; size];
+        r.read_exact(&mut data)?;
+        let pad = (BLOCK - size % BLOCK) % BLOCK;
+        if pad > 0 {
+            let mut sink = vec![0u8; pad];
+            r.read_exact(&mut sink)?;
+        }
+        if hdr[156] == b'0' || hdr[156] == 0 {
+            out.push(Entry { name, data });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let entries = vec![
+            Entry { name: "manifest.json".into(), data: b"{}".to_vec() },
+            Entry { name: "weights.bin".into(), data: vec![7u8; 1234] },
+            Entry { name: "empty".into(), data: vec![] },
+        ];
+        let mut buf = Vec::new();
+        write(&mut buf, &entries).unwrap();
+        assert_eq!(buf.len() % BLOCK, 0);
+        let back = read(&buf[..]).unwrap();
+        assert_eq!(back, entries);
+    }
+
+    #[test]
+    fn rejects_long_names() {
+        let e = Entry { name: "x".repeat(101), data: vec![] };
+        assert!(write(Vec::new(), &[e]).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let entries = vec![Entry { name: "a".into(), data: vec![1, 2, 3] }];
+        let mut buf = Vec::new();
+        write(&mut buf, &entries).unwrap();
+        buf[0] ^= 0xFF; // corrupt the name → checksum mismatch
+        assert!(read(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let entries = vec![Entry { name: "a".into(), data: vec![9; 100] }];
+        let mut b1 = Vec::new();
+        let mut b2 = Vec::new();
+        write(&mut b1, &entries).unwrap();
+        write(&mut b2, &entries).unwrap();
+        assert_eq!(b1, b2, "bundles must be reproducible");
+    }
+}

@@ -1,0 +1,288 @@
+//! User-facing configuration (paper §IV-C "customization options").
+//!
+//! A TOML-subset parser built in-repo (no external deps): `[section]` and
+//! `[[array-of-tables]]` headers, `key = value` with strings, numbers,
+//! booleans and flat arrays.  Covers the cluster spec (Table II), AIF
+//! build preferences (batch size, precision, networking) and bench
+//! parameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        let n = self.f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn str_arr(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|e| Ok(e.str()?.to_string())).collect(),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// One `[section]` (or one element of a `[[section]]` list).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.entries
+            .get(key)
+            .with_context(|| format!("missing config key {key:?}"))
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a Value) -> &'a Value {
+        self.entries.get(key).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.entries
+            .get(key)
+            .and_then(|v| v.str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.entries.get(key).and_then(|v| v.f64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.entries.get(key).and_then(|v| v.usize().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.entries.get(key).and_then(|v| v.bool().ok()).unwrap_or(default)
+    }
+}
+
+/// A parsed config file: top-level table, named tables, table arrays.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub root: Table,
+    pub tables: BTreeMap<String, Table>,
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl Config {
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Config::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        // Where do `key = value` lines currently land?
+        enum Target {
+            Root,
+            Table(String),
+            ArrayLast(String),
+        }
+        let mut target = Target::Root;
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                cfg.arrays.entry(name.clone()).or_default().push(Table::default());
+                target = Target::ArrayLast(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                cfg.tables.entry(name.clone()).or_default();
+                target = Target::Table(name);
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let val = parse_value(v.trim())
+                    .with_context(|| format!("config line {}: {raw:?}", lineno + 1))?;
+                let table = match &target {
+                    Target::Root => &mut cfg.root,
+                    Target::Table(name) => cfg.tables.get_mut(name).unwrap(),
+                    Target::ArrayLast(name) => {
+                        cfg.arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                table.entries.insert(key, val);
+            } else {
+                bail!("config line {}: cannot parse {raw:?}", lineno + 1);
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn table(&self, name: &str) -> Result<&Table> {
+        self.tables
+            .get(name)
+            .with_context(|| format!("missing config section [{name}]"))
+    }
+
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string: {s:?}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s:?}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # cluster config
+        name = "paper-testbed"
+        seed = 42
+        [backend]
+        policy = "min-latency"
+        verify = true
+        [[node]]
+        name = "NE-1"
+        arch = "x86_64"
+        platforms = ["CPU", "ALVEO"]
+        memory_gb = 16
+        [[node]]
+        name = "FE"
+        arch = "arm64"
+        platforms = ["ARM", "AGX"]
+        memory_gb = 32
+    "#;
+
+    #[test]
+    fn parses_cluster_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.root.get("name").unwrap().str().unwrap(), "paper-testbed");
+        assert_eq!(c.root.get("seed").unwrap().usize().unwrap(), 42);
+        assert!(c.table("backend").unwrap().bool_or("verify", false));
+        let nodes = c.array("node");
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(
+            nodes[1].get("platforms").unwrap().str_arr().unwrap(),
+            vec!["ARM", "AGX"]
+        );
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let c = Config::parse("a = \"x # not a comment\" # real comment").unwrap();
+        assert_eq!(c.root.get("a").unwrap().str().unwrap(), "x # not a comment");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("???").is_err());
+        assert!(Config::parse("a = [1, 2").is_err());
+        assert!(Config::parse("a = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("x = 5").unwrap();
+        assert_eq!(c.root.usize_or("x", 1), 5);
+        assert_eq!(c.root.usize_or("y", 7), 7);
+        assert_eq!(c.root.str_or("z", "d"), "d");
+    }
+}

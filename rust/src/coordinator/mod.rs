@@ -1,0 +1,207 @@
+//! The coordinator — TF2AIF's end-to-end flows, wired from the substrate
+//! modules.  This is what the CLI (`rust/src/main.rs`), the examples and
+//! the bench harnesses call.
+//!
+//! - [`generate`] — Converter ∥ Composer ∥ Registry push (paper Fig. 1/2,
+//!   the Fig. 3 experiment).
+//! - [`verify_all`] — fixture parity of every artifact through the PJRT
+//!   runtime (the client-container verification feature).
+//! - [`bench_fig4`] / [`bench_fig5`] — the paper's two serving
+//!   experiments, with real PJRT execution for numerics and the platform
+//!   cost models for service latency (DESIGN.md §2).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::artifact::{self, Artifact};
+use crate::client::{Client, ClientConfig};
+use crate::composer::{self, ComposeOptions};
+use crate::converter::{Converter, Job};
+use crate::platform::{self, Platform};
+use crate::registry::Registry;
+use crate::report::{GenRow, LatencyRow, SpeedupRow};
+use crate::runtime::{self, Engine};
+use crate::serving::{AifServer, ImageClassify};
+use crate::workload::Arrival;
+
+pub const MODELS: &[&str] = &["lenet", "mobilenetv1", "resnet50", "inceptionv4"];
+pub const VARIANTS: &[&str] = &["AGX", "ARM", "CPU", "ALVEO", "GPU"];
+pub const NATIVE_VARIANTS: &[&str] = &["AGX_TF", "ARM_TF", "CPU_TF", "GPU_TF"];
+
+/// Options for the generation pipeline.
+#[derive(Debug, Clone)]
+pub struct GenerateOptions {
+    pub models: Vec<String>,
+    pub variants: Vec<String>,
+    pub jobs: usize,
+    pub force: bool,
+    pub registry_dir: String,
+}
+
+impl Default for GenerateOptions {
+    fn default() -> Self {
+        GenerateOptions {
+            models: MODELS.iter().map(|s| s.to_string()).collect(),
+            variants: VARIANTS.iter().map(|s| s.to_string()).collect(),
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            force: false,
+            registry_dir: "registry".into(),
+        }
+    }
+}
+
+/// Run Converter → Composer → Registry for every (model × variant).
+/// Returns Fig. 3 rows (convert + compose split).
+pub fn generate(repo_root: impl AsRef<Path>, opts: &GenerateOptions) -> Result<Vec<GenRow>> {
+    let mut conv = Converter::new(&repo_root);
+    conv.jobs = opts.jobs;
+    conv.force = opts.force;
+
+    let jobs: Vec<Job> = opts
+        .models
+        .iter()
+        .flat_map(|m| {
+            opts.variants
+                .iter()
+                .map(move |v| Job { model: m.clone(), variant: v.clone() })
+        })
+        .collect();
+
+    let reports = conv.convert_all(jobs);
+    let registry = Registry::open(repo_root.as_ref().join(&opts.registry_dir))?;
+    let mut rows = Vec::new();
+    for rep in reports {
+        let rep = rep?;
+        let dir = conv.artifacts_dir.join(format!("{}_{}", rep.model, rep.variant));
+        let art = Artifact::load(&dir)?;
+        let copts = ComposeOptions::default();
+        let server = composer::compose_server(&art, &copts)?;
+        let client = composer::compose_client(&art, &copts)?;
+        registry.push(&server)?;
+        registry.push(&client)?;
+        rows.push(GenRow {
+            model: rep.model,
+            variant: rep.variant,
+            // Conversion = python (fold/quant/lower) + the ALVEO DPU
+            // instruction compile (part of Vitis-AI conversion).
+            convert_s: rep.convert_s + rep.lower_s + rep.dpu_s,
+            compose_s: server.compose_s + client.compose_s,
+            bundle_mb: server.total_bytes() as f64 / 1e6,
+        });
+    }
+    Ok(rows)
+}
+
+/// Fixture-parity verification of every artifact under `dir`.
+/// Returns (id, max |Δ| vs build-time logits) per artifact.
+pub fn verify_all(engine: &Engine, dir: impl AsRef<Path>) -> Result<Vec<(String, f64)>> {
+    let artifacts = artifact::scan(dir)?;
+    let mut out = Vec::new();
+    for a in &artifacts {
+        let (_, delta) = runtime::load_verified(engine, a)
+            .with_context(|| format!("verifying {}", a.manifest.id()))?;
+        out.push((a.manifest.id(), delta));
+    }
+    Ok(out)
+}
+
+/// Fig. 4 options.
+#[derive(Debug, Clone)]
+pub struct Fig4Options {
+    /// Service-latency samples per variant (paper: 1000).
+    pub requests: usize,
+    /// Real PJRT executions per variant (numeric validation + real-compute
+    /// channel; capped because InceptionV4 on an interpret-mode CPU path
+    /// is ~seconds, not ms).
+    pub real_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig4Options {
+    fn default() -> Self {
+        Fig4Options { requests: 1000, real_requests: 16, seed: 0xF16_4 }
+    }
+}
+
+/// Run the Fig. 4 experiment over the given artifacts (accelerated
+/// variants of every model by default).
+pub fn bench_fig4(
+    engine: &Engine,
+    dir: impl AsRef<Path>,
+    opts: &Fig4Options,
+) -> Result<Vec<LatencyRow>> {
+    let artifacts = artifact::scan(dir)?;
+    let mut rows = Vec::new();
+    for model in MODELS {
+        for variant in VARIANTS {
+            let Some(a) = artifacts
+                .iter()
+                .find(|a| a.manifest.model == *model && a.manifest.variant == *variant)
+            else {
+                continue;
+            };
+            rows.push(bench_one(engine, a, opts)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Bench a single artifact: real executions + modeled service series.
+pub fn bench_one(engine: &Engine, a: &Artifact, opts: &Fig4Options) -> Result<LatencyRow> {
+    let m = &a.manifest;
+    let server = Arc::new(AifServer::deploy(engine, a, Arc::new(ImageClassify))?);
+    server.reseed(opts.seed ^ m.id().len() as u64);
+    let client = Client::new(Arc::clone(&server));
+    let run = client.run(&ClientConfig {
+        requests: opts.real_requests,
+        arrival: Arrival::ClosedLoop,
+        seed: opts.seed,
+    })?;
+    // Service channel: full-size series from the calibrated cost model
+    // (what the paper's testbed would report for 1000 requests).
+    let plat = platform::get(&m.variant).context("platform")?;
+    let native = Platform::is_native_variant(&m.variant);
+    let mut service = plat.service_series(m.gflops, native, opts.requests, opts.seed);
+    Ok(LatencyRow {
+        model: m.model.clone(),
+        variant: m.variant.clone(),
+        service: service.boxplot(),
+        real_mean_ms: run.real_compute_ms.mean(),
+        requests: opts.requests,
+    })
+}
+
+/// Fig. 5: accelerated vs native-TF mean service latency per platform.
+pub fn bench_fig5(
+    engine: &Engine,
+    dir: impl AsRef<Path>,
+    opts: &Fig4Options,
+) -> Result<Vec<SpeedupRow>> {
+    let artifacts = artifact::scan(dir)?;
+    let mut rows = Vec::new();
+    for model in MODELS {
+        for native_variant in NATIVE_VARIANTS {
+            let base = native_variant.trim_end_matches("_TF");
+            let accel = artifacts
+                .iter()
+                .find(|a| a.manifest.model == *model && a.manifest.variant == base);
+            let native = artifacts
+                .iter()
+                .find(|a| a.manifest.model == *model && a.manifest.variant == *native_variant);
+            let (Some(accel), Some(native)) = (accel, native) else { continue };
+            // Both graphs execute for real (numeric sanity)…
+            let a_row = bench_one(engine, accel, opts)?;
+            let n_row = bench_one(engine, native, opts)?;
+            // …and the reported means come from the service channel.
+            rows.push(SpeedupRow {
+                model: model.to_string(),
+                platform: base.to_string(),
+                accel_mean_ms: a_row.service.mean,
+                native_mean_ms: n_row.service.mean,
+            });
+        }
+    }
+    Ok(rows)
+}

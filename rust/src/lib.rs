@@ -1,0 +1,39 @@
+//! # TF2AIF — accelerated AI-function generation and serving
+//!
+//! Reproduction of *"TF2AIF: Facilitating development and deployment of
+//! accelerated AI models on the cloud-edge continuum"* (EuCNC/6G Summit
+//! 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1 (Pallas)** — precision-specialized GEMM kernels
+//!   (`python/compile/kernels/`), the stand-ins for TensorRT / TFLite /
+//!   Vitis-AI compute paths.
+//! - **Layer 2 (JAX)** — the Table III model zoo, converter (BN folding,
+//!   PTQ calibration, quantization) and AOT export to HLO text
+//!   (`python/compile/`).  Python runs once, at build time.
+//! - **Layer 3 (this crate)** — the TF2AIF system itself: the
+//!   Converter/Composer generation pipeline, the bundle registry, the
+//!   Kubernetes-substrate cluster simulator, the variant-selection
+//!   backend, and the AIF serving runtime over PJRT.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a module + bench.
+
+pub mod artifact;
+pub mod backend;
+pub mod client;
+pub mod cluster;
+pub mod composer;
+pub mod config;
+pub mod converter;
+pub mod coordinator;
+pub mod metrics;
+pub mod platform;
+pub mod registry;
+pub mod report;
+pub mod runtime;
+pub mod serving;
+pub mod util;
+pub mod workload;
+
+/// Repo-relative default artifact directory.
+pub const ARTIFACTS_DIR: &str = "artifacts";

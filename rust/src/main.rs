@@ -1,0 +1,262 @@
+//! `tf2aif` — the leader CLI.
+//!
+//! Subcommands mirror the paper's workflow:
+//!
+//! - `build`    — Converter ∥ Composer ∥ Registry (generate AIF bundles).
+//! - `verify`   — fixture parity of every artifact through PJRT.
+//! - `serve`    — deploy one AIF and run the generated client against it.
+//! - `cluster`  — Table II cluster simulation + backend auto-placement.
+//! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::client::{Client, ClientConfig};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::config::Config;
+use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
+use tf2aif::report;
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{AifServer, ImageClassify};
+use tf2aif::workload::Arrival;
+use tf2aif::{artifact, ARTIFACTS_DIR};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags { args: &args[1..] };
+    match cmd.as_str() {
+        "build" => cmd_build(&flags),
+        "verify" => cmd_verify(&flags),
+        "serve" => cmd_serve(&flags),
+        "cluster" => cmd_cluster(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `tf2aif help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "tf2aif — accelerated AI-function generation and serving\n\n\
+         USAGE: tf2aif <command> [flags]\n\n\
+         COMMANDS:\n  \
+         build    [--models a,b] [--variants x,y] [--jobs N] [--force] [--native]\n  \
+         verify   [--artifacts DIR]\n  \
+         serve    --aif <model_variant> [--requests N] [--rps R]\n  \
+         cluster  [--config FILE] [--policy min-latency|prefer-edge|min-energy] [--model M]\n  \
+         report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
+    );
+}
+
+fn csv_list(s: Option<&str>, default: &[&str]) -> Vec<String> {
+    match s {
+        Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
+        None => default.iter().map(|x| x.to_string()).collect(),
+    }
+}
+
+fn cmd_build(flags: &Flags) -> Result<()> {
+    let mut variants = csv_list(flags.get("--variants"), coordinator::VARIANTS);
+    if flags.has("--native") {
+        variants.extend(coordinator::NATIVE_VARIANTS.iter().map(|s| s.to_string()));
+    }
+    let opts = GenerateOptions {
+        models: csv_list(flags.get("--models"), coordinator::MODELS),
+        variants,
+        jobs: flags.usize_or("--jobs", GenerateOptions::default().jobs)?,
+        force: flags.has("--force"),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let rows = coordinator::generate(".", &opts)?;
+    let (h, r) = report::fig3(&rows);
+    print!("{}", report::render_table(&h, &r));
+    println!(
+        "\n{} AIF bundles (server+client) in {:.1}s wall",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_verify(flags: &Flags) -> Result<()> {
+    let dir = flags.get("--artifacts").unwrap_or(ARTIFACTS_DIR);
+    let engine = Engine::cpu()?;
+    let results = coordinator::verify_all(&engine, dir)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(id, d)| vec![id.clone(), format!("{d:.3e}"), "OK".into()])
+        .collect();
+    print!(
+        "{}",
+        report::render_table(&["AIF", "max |Δ| vs build-time logits", "status"], &rows)
+    );
+    println!("\n{} artifacts verified on {}", results.len(), engine.platform_name());
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let aif = flags.get("--aif").context("--aif <model_variant> required")?;
+    let requests = flags.usize_or("--requests", 100)?;
+    let arrival = match flags.get("--rps") {
+        Some(r) => Arrival::Poisson { rps: r.parse().context("bad --rps")? },
+        None => Arrival::ClosedLoop,
+    };
+    let engine = Engine::cpu()?;
+    let art = artifact::Artifact::load(format!("{ARTIFACTS_DIR}/{aif}"))?;
+    let server = Arc::new(AifServer::deploy(&engine, &art, Arc::new(ImageClassify))?);
+    println!(
+        "deployed {} (compile {:.2}s, weights {:.2}s, {} tensors)",
+        aif, server.model.compile_time_s, server.model.weight_upload_time_s,
+        server.model.num_weights()
+    );
+    let client = Client::new(Arc::clone(&server));
+    let verified = client.verify(&art)?;
+    println!("client verification: {verified} fixtures OK");
+    let run = client.run(&ClientConfig { requests, arrival, seed: 7 })?;
+    let mut svc = run.service_ms.clone();
+    let bp = svc.boxplot();
+    println!(
+        "\n{requests} requests | service*: median {:.2} ms  q1 {:.2}  q3 {:.2} | \
+         real compute: mean {:.2} ms | throughput {:.1} rps\n(* simulated {} platform)",
+        bp.median,
+        bp.q1,
+        bp.q3,
+        run.real_compute_ms.mean(),
+        run.throughput_rps(),
+        server.platform().name,
+    );
+    Ok(())
+}
+
+fn cmd_cluster(flags: &Flags) -> Result<()> {
+    let mut cluster = match flags.get("--config") {
+        Some(path) => Cluster::from_config(&Config::load(path)?)?,
+        None => Cluster::new(paper_testbed()),
+    };
+    let policy = Policy::parse(flags.get("--policy").unwrap_or("min-latency"))?;
+    println!("cluster nodes:");
+    let (h, r) = report::table2(cluster.nodes());
+    print!("{}", report::render_table(&h, &r));
+    println!("\napplying Kube-API extension (registers ARM device plugins)…");
+    cluster.apply_kube_api_extension();
+
+    let artifacts = artifact::scan(ARTIFACTS_DIR)?;
+    let backend = Backend::new(artifacts, policy);
+    let engine = Engine::cpu()?;
+    let models = match flags.get("--model") {
+        Some(m) => vec![m.to_string()],
+        None => backend.models().iter().map(|s| s.to_string()).collect(),
+    };
+    for model in &models {
+        let dep = backend.deploy(model, &mut cluster, &engine)?;
+        println!(
+            "{model}: deployed variant {} on node {} (pod {}, modeled {:.2} ms)",
+            dep.decision.variant, dep.decision.node, dep.pod, dep.decision.modeled_ms
+        );
+    }
+    println!("\nrunning pods:");
+    for p in cluster.running_pods() {
+        println!("  pod {} {} [{}] on {}", p.id, p.aif, p.variant, p.node);
+    }
+    Ok(())
+}
+
+fn cmd_report(flags: &Flags) -> Result<()> {
+    let what = flags.args.first().map(String::as_str).unwrap_or("all");
+    let opts = Fig4Options {
+        requests: flags.usize_or("--requests", 1000)?,
+        real_requests: flags.usize_or("--real", 4)?,
+        ..Default::default()
+    };
+    let artifacts = artifact::scan(ARTIFACTS_DIR).unwrap_or_default();
+
+    if matches!(what, "table1" | "all") {
+        println!("\nTABLE I — Inference Acceleration Frameworks by Platform and Precision");
+        let (h, r) = report::table1();
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/table1.csv", &h, &r)?;
+    }
+    if matches!(what, "table2" | "all") {
+        println!("\nTABLE II — Experimental setup (simulated cluster)");
+        let (h, r) = report::table2(&paper_testbed());
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/table2.csv", &h, &r)?;
+    }
+    if matches!(what, "table3" | "all") {
+        println!("\nTABLE III — Model characteristics (paper vs ours, DESIGN.md §7)");
+        let (h, r) = report::table3(&artifacts);
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/table3.csv", &h, &r)?;
+    }
+    if matches!(what, "fig3" | "all") {
+        println!("\nFIG 3 — AI service variant generation time (cached conversions show python-measured times)");
+        let rows = coordinator::generate(".", &GenerateOptions::default())?;
+        let (h, r) = report::fig3(&rows);
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/fig3.csv", &h, &r)?;
+    }
+    if matches!(what, "fig4" | "all") {
+        println!("\nFIG 4 — Request latency per AI-framework-platform variant (* = simulated platform, DESIGN.md §2)");
+        let engine = Engine::cpu()?;
+        let rows = coordinator::bench_fig4(&engine, ARTIFACTS_DIR, &opts)?;
+        let (h, r) = report::fig4(&rows);
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/fig4.csv", &h, &r)?;
+    }
+    if matches!(what, "fig5" | "all") {
+        println!("\nFIG 5 — Accelerated vs native TensorFlow (* = simulated platform)");
+        let engine = Engine::cpu()?;
+        let rows = coordinator::bench_fig5(&engine, ARTIFACTS_DIR, &opts)?;
+        let (h, r) = report::fig5(&rows);
+        print!("{}", report::render_table(&h, &r));
+        report::write_csv("reports/fig5.csv", &h, &r)?;
+        println!("\nAverage speedup per platform (paper: AGX 5.5x, ARM 2.7x, CPU 3.6x, GPU 7.6x):");
+        for (p, s) in report::fig5_summary(&rows) {
+            println!("  {p}: {s:.2}x");
+        }
+    }
+    Ok(())
+}

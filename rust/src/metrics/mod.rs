@@ -1,0 +1,119 @@
+//! Integrated metrics collector (paper §IV-A: "an integrated metrics
+//! collector that provides performance statistics").
+//!
+//! Each AIF server owns a `Collector`; the report layer snapshots them to
+//! produce the Fig. 4 boxplots and Fig. 5 averages.  Two latency channels
+//! are kept strictly apart (DESIGN.md §2):
+//!
+//! - `real_compute_ms` — wall-clock of the actual PJRT execution on this
+//!   testbed's CPU (honest measurement, used by the §Perf work);
+//! - `service_ms`      — the calibrated platform cost-model sample (what
+//!   the paper's heterogeneous testbed would have reported; clearly
+//!   labelled simulated in every report).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{Boxplot, Series};
+
+/// Point-in-time snapshot of one server's counters.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub service_ms: Series,
+    pub real_compute_ms: Series,
+    pub queue_wait_ms: Series,
+}
+
+impl Snapshot {
+    pub fn service_boxplot(&self) -> Boxplot {
+        self.service_ms.clone().boxplot()
+    }
+
+    pub fn real_boxplot(&self) -> Boxplot {
+        self.real_compute_ms.clone().boxplot()
+    }
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Collector {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    service_ms: Series,
+    real_compute_ms: Series,
+    queue_wait_ms: Series,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, service_ms: f64, real_compute: Duration, queue_wait: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.service_ms.push(service_ms);
+        g.real_compute_ms.push(real_compute.as_secs_f64() * 1e3);
+        g.queue_wait_ms.push(queue_wait.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            requests: g.requests,
+            errors: g.errors,
+            service_ms: g.service_ms.clone(),
+            real_compute_ms: g.real_compute_ms.clone(),
+            queue_wait_ms: g.queue_wait_ms.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let c = Collector::new();
+        c.record(5.0, Duration::from_millis(2), Duration::ZERO);
+        c.record(7.0, Duration::from_millis(4), Duration::ZERO);
+        c.record_error();
+        let s = c.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.service_ms.len(), 2);
+        assert!((s.service_boxplot().mean - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let c = Arc::new(Collector::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        c.record(i as f64, Duration::ZERO, Duration::ZERO);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.snapshot().requests, 800);
+    }
+}

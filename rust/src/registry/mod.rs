@@ -1,0 +1,222 @@
+//! Bundle registry — the container-registry substrate.
+//!
+//! Stores composed AIF bundles with Docker-registry semantics: layers are
+//! content-addressed blobs (deduplicated across bundles — every server
+//! bundle for the same platform shares its Base Image layer), tags point
+//! at bundle manifests, push/pull round-trips are byte-exact.  Backed by
+//! a plain directory so the cluster simulator's "nodes" can pull from it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+use crate::composer::{Bundle, BundleKind, Layer};
+use crate::util::json::{n, obj, s, Json};
+
+/// On-disk registry layout:
+/// `blobs/<digest>` (layer contents) + `manifests/<tag>.json`.
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    pub fn open(root: impl AsRef<Path>) -> Result<Registry> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("blobs"))?;
+        std::fs::create_dir_all(root.join("manifests"))?;
+        Ok(Registry { root })
+    }
+
+    fn blob_path(&self, digest: &str) -> PathBuf {
+        // digests look like "sha256:<hex>"; ':' is fine on linux but keep
+        // the file name tame anyway.
+        self.root.join("blobs").join(digest.replace(':', "_"))
+    }
+
+    fn manifest_path(&self, tag: &str) -> PathBuf {
+        self.root.join("manifests").join(format!("{tag}.json"))
+    }
+
+    /// Push a bundle: store missing layers, write the tag manifest.
+    /// Returns the number of layer blobs actually uploaded (dedup metric).
+    pub fn push(&self, bundle: &Bundle) -> Result<usize> {
+        let mut uploaded = 0;
+        for layer in &bundle.layers {
+            let p = self.blob_path(&layer.digest);
+            if !p.exists() {
+                std::fs::write(&p, &layer.data)?;
+                uploaded += 1;
+            }
+        }
+        let manifest = obj(vec![
+            ("tag", s(bundle.tag.clone())),
+            ("digest", s(bundle.digest.clone())),
+            (
+                "kind",
+                s(match bundle.kind {
+                    BundleKind::Server => "server",
+                    BundleKind::Client => "client",
+                }),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    bundle
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("name", s(l.name.clone())),
+                                ("digest", s(l.digest.clone())),
+                                ("size", n(l.data.len() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(self.manifest_path(&bundle.tag), manifest.to_string())?;
+        Ok(uploaded)
+    }
+
+    /// Pull a bundle by tag, verifying every layer digest.
+    pub fn pull(&self, tag: &str) -> Result<Bundle> {
+        let msrc = std::fs::read_to_string(self.manifest_path(tag))
+            .with_context(|| format!("no such tag {tag:?}"))?;
+        let m = Json::parse(&msrc)?;
+        let kind = match m.get("kind")?.str()? {
+            "server" => BundleKind::Server,
+            "client" => BundleKind::Client,
+            other => bail!("bad bundle kind {other:?}"),
+        };
+        let mut layers = Vec::new();
+        for lj in m.get("layers")?.arr()? {
+            let digest = lj.get("digest")?.str()?.to_string();
+            let data = std::fs::read(self.blob_path(&digest))
+                .with_context(|| format!("missing blob {digest}"))?;
+            let actual = format!("sha256:{:x}", Sha256::digest(&data));
+            if actual != digest {
+                bail!("layer {digest} corrupted in registry (got {actual})");
+            }
+            layers.push(Layer { name: lj.get("name")?.str()?.to_string(), digest, data });
+        }
+        Ok(Bundle {
+            tag: m.get("tag")?.str()?.to_string(),
+            kind,
+            layers,
+            digest: m.get("digest")?.str()?.to_string(),
+            compose_s: 0.0,
+        })
+    }
+
+    /// All tags, sorted.
+    pub fn tags(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(self.root.join("manifests"))? {
+            let name = e?.file_name().to_string_lossy().to_string();
+            if let Some(tag) = name.strip_suffix(".json") {
+                out.push(tag.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Storage accounting: unique blobs and their total size.
+    pub fn stats(&self) -> Result<RegistryStats> {
+        let mut blobs = 0usize;
+        let mut bytes = 0u64;
+        for e in std::fs::read_dir(self.root.join("blobs"))? {
+            blobs += 1;
+            bytes += e?.metadata()?.len();
+        }
+        let mut kinds = BTreeMap::new();
+        for tag in self.tags()? {
+            let msrc = std::fs::read_to_string(self.manifest_path(&tag))?;
+            let m = Json::parse(&msrc)?;
+            *kinds.entry(m.get("kind")?.str()?.to_string()).or_insert(0usize) += 1;
+        }
+        Ok(RegistryStats { blobs, bytes, tags_by_kind: kinds })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RegistryStats {
+    pub blobs: usize,
+    pub bytes: u64,
+    pub tags_by_kind: BTreeMap<String, usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_bundle(tag: &str, layers: Vec<(&str, Vec<u8>)>) -> Bundle {
+        let layers: Vec<Layer> = layers
+            .into_iter()
+            .map(|(name, data)| {
+                let digest = format!("sha256:{:x}", Sha256::digest(&data));
+                Layer { name: name.into(), digest, data }
+            })
+            .collect();
+        let mut h = Sha256::new();
+        for l in &layers {
+            h.update(l.digest.as_bytes());
+        }
+        Bundle {
+            tag: tag.into(),
+            kind: BundleKind::Server,
+            digest: format!("sha256:{:x}", h.finalize()),
+            layers,
+            compose_s: 0.0,
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tf2aif-registry-test-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn push_pull_roundtrip() {
+        let reg = Registry::open(tmpdir("rt")).unwrap();
+        let b = mk_bundle("lenet_CPU", vec![("env.json", b"{}".to_vec()), ("w", vec![5; 99])]);
+        assert_eq!(reg.push(&b).unwrap(), 2);
+        let back = reg.pull("lenet_CPU").unwrap();
+        assert_eq!(back.digest, b.digest);
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[1].data, vec![5; 99]);
+    }
+
+    #[test]
+    fn layer_dedup_across_bundles() {
+        let reg = Registry::open(tmpdir("dedup")).unwrap();
+        let shared = ("env.json", b"same-base-image".to_vec());
+        let b1 = mk_bundle("a", vec![shared.clone(), ("m1", vec![1])]);
+        let b2 = mk_bundle("b", vec![shared, ("m2", vec![2])]);
+        assert_eq!(reg.push(&b1).unwrap(), 2);
+        // Shared env layer is already present: only one new blob.
+        assert_eq!(reg.push(&b2).unwrap(), 1);
+        assert_eq!(reg.stats().unwrap().blobs, 3);
+    }
+
+    #[test]
+    fn pull_detects_corruption() {
+        let reg = Registry::open(tmpdir("corrupt")).unwrap();
+        let b = mk_bundle("x", vec![("data", vec![7; 32])]);
+        reg.push(&b).unwrap();
+        // Corrupt the blob on disk.
+        let digest = &b.layers[0].digest;
+        std::fs::write(reg.blob_path(digest), b"tampered").unwrap();
+        assert!(reg.pull("x").is_err());
+    }
+
+    #[test]
+    fn missing_tag_errors() {
+        let reg = Registry::open(tmpdir("missing")).unwrap();
+        assert!(reg.pull("nope").is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! Table/figure renderers — prints the same rows/series the paper reports.
+//!
+//! Pure formatting: data comes from the coordinator.  Every renderer also
+//! emits CSV (under `reports/`) so the figures can be re-plotted.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::artifact::Artifact;
+use crate::cluster::NodeSpec;
+use crate::platform::PLATFORMS;
+use crate::util::stats::Boxplot;
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            let _ = write!(out, "| {:<w$} ", c, w = widths[i]);
+        }
+        out.push_str("|\n");
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    for (i, w) in widths.iter().enumerate() {
+        let _ = write!(out, "|{:-<w$}", "", w = w + 2);
+        if i == widths.len() - 1 {
+            out.push_str("|\n");
+        }
+    }
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Write rows as CSV.
+pub fn write_csv(path: impl AsRef<Path>, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut s = headers.join(",");
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+/// Table I: Inference Acceleration Frameworks by Platform and Precision.
+pub fn table1() -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec!["Name", "Platform", "Inf. Accel. Framework", "Precision"];
+    let rows = PLATFORMS
+        .iter()
+        .map(|p| {
+            vec![
+                p.name.to_string(),
+                p.hw.to_string(),
+                p.framework.to_string(),
+                p.precision.to_string(),
+            ]
+        })
+        .collect();
+    (headers, rows)
+}
+
+/// Table II: experimental setup (cluster nodes).
+pub fn table2(nodes: &[NodeSpec]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec!["Node", "Architecture", "CPU", "Memory (GB)", "Accelerator"];
+    let rows = nodes
+        .iter()
+        .map(|n| {
+            vec![
+                n.name.clone(),
+                n.cpu_desc.clone(),
+                n.cpus.to_string(),
+                format!("{}", n.memory_gb),
+                n.accelerator.clone(),
+            ]
+        })
+        .collect();
+    (headers, rows)
+}
+
+/// Table III: model characteristics — paper numbers next to ours
+/// (DESIGN.md §7 records the scale-down).
+pub fn table3(artifacts: &[Artifact]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let paper: &[(&str, &str, f64, f64)] = &[
+        ("lenet", "Tiny", 0.38, 0.001),
+        ("mobilenetv1", "Small", 18.37, 1.14),
+        ("resnet50", "Medium", 102.78, 7.73),
+        ("inceptionv4", "Large", 177.71, 24.55),
+    ];
+    let headers = vec![
+        "Model",
+        "CNN Type",
+        "Paper Size (MB)",
+        "Ours (MB)",
+        "Paper GFLOPs",
+        "Ours GFLOPs",
+        "Layers",
+    ];
+    let rows = paper
+        .iter()
+        .map(|(name, kind, pmb, pgf)| {
+            // Any non-quantized variant carries the master size; prefer CPU.
+            let art = artifacts
+                .iter()
+                .find(|a| a.manifest.model == *name && a.manifest.variant == "CPU")
+                .or_else(|| artifacts.iter().find(|a| a.manifest.model == *name));
+            match art {
+                Some(a) => vec![
+                    name.to_string(),
+                    kind.to_string(),
+                    format!("{pmb:.2}"),
+                    format!("{:.2}", a.manifest.master_size_mb),
+                    format!("{pgf:.3}"),
+                    format!("{:.3}", a.manifest.gflops),
+                    a.manifest.layers.to_string(),
+                ],
+                None => vec![
+                    name.to_string(),
+                    kind.to_string(),
+                    format!("{pmb:.2}"),
+                    "-".into(),
+                    format!("{pgf:.3}"),
+                    "-".into(),
+                    "-".into(),
+                ],
+            }
+        })
+        .collect();
+    (headers, rows)
+}
+
+/// One Fig. 3 row: generation time split per variant.
+#[derive(Debug, Clone)]
+pub struct GenRow {
+    pub model: String,
+    pub variant: String,
+    pub convert_s: f64,
+    pub compose_s: f64,
+    pub bundle_mb: f64,
+}
+
+pub fn fig3(rows: &[GenRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers =
+        vec!["Model", "Variant", "Convert (s)", "Compose (s)", "Total (s)", "Bundle (MB)"];
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.variant.clone(),
+                format!("{:.2}", r.convert_s),
+                format!("{:.3}", r.compose_s),
+                format!("{:.2}", r.convert_s + r.compose_s),
+                format!("{:.2}", r.bundle_mb),
+            ]
+        })
+        .collect();
+    (headers, out)
+}
+
+/// One Fig. 4 row: latency boxplot for one (model, variant).
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub model: String,
+    pub variant: String,
+    /// Simulated platform service latency (labelled as such).
+    pub service: Boxplot,
+    /// Real measured PJRT compute on this testbed.
+    pub real_mean_ms: f64,
+    pub requests: usize,
+}
+
+pub fn fig4(rows: &[LatencyRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "Model",
+        "Variant",
+        "n",
+        "min (ms)*",
+        "q1*",
+        "median*",
+        "q3*",
+        "max*",
+        "mean*",
+        "real mean (ms)",
+    ];
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.variant.clone(),
+                r.requests.to_string(),
+                format!("{:.2}", r.service.min),
+                format!("{:.2}", r.service.q1),
+                format!("{:.2}", r.service.median),
+                format!("{:.2}", r.service.q3),
+                format!("{:.2}", r.service.max),
+                format!("{:.2}", r.service.mean),
+                format!("{:.2}", r.real_mean_ms),
+            ]
+        })
+        .collect();
+    (headers, out)
+}
+
+/// One Fig. 5 row: accelerated vs native mean latency per platform/model.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub model: String,
+    pub platform: String,
+    pub accel_mean_ms: f64,
+    pub native_mean_ms: f64,
+}
+
+impl SpeedupRow {
+    pub fn speedup(&self) -> f64 {
+        self.native_mean_ms / self.accel_mean_ms
+    }
+}
+
+pub fn fig5(rows: &[SpeedupRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "Platform",
+        "Model",
+        "Accel mean (ms)*",
+        "Native-TF mean (ms)*",
+        "Speedup",
+        "Paper avg",
+    ];
+    let paper_avg = |p: &str| match p {
+        "AGX" => "5.5x",
+        "ARM" => "2.7x",
+        "CPU" => "3.6x",
+        "GPU" => "7.6x",
+        _ => "-",
+    };
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.platform.clone(),
+                r.model.clone(),
+                format!("{:.2}", r.accel_mean_ms),
+                format!("{:.2}", r.native_mean_ms),
+                format!("{:.2}x", r.speedup()),
+                paper_avg(&r.platform).to_string(),
+            ]
+        })
+        .collect();
+    (headers, out)
+}
+
+/// Per-platform average speedups (the Fig. 5 headline vector).
+pub fn fig5_summary(rows: &[SpeedupRow]) -> Vec<(String, f64)> {
+    let mut acc: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+    for r in rows {
+        let e = acc.entry(r.platform.clone()).or_insert((0.0, 0));
+        e.0 += r.speedup();
+        e.1 += 1;
+    }
+    acc.into_iter().map(|(k, (sum, n))| (k, sum / n as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(&["A", "Bee"], &[vec!["1".into(), "x".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        let (_, rows) = table1();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[3][2], "Vitis AI");
+        assert_eq!(rows[4][3], "FP16");
+    }
+
+    #[test]
+    fn speedup_math() {
+        let r = SpeedupRow {
+            model: "m".into(),
+            platform: "GPU".into(),
+            accel_mean_ms: 2.0,
+            native_mean_ms: 15.0,
+        };
+        assert!((r.speedup() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig5_summary_averages() {
+        let rows = vec![
+            SpeedupRow { model: "a".into(), platform: "CPU".into(), accel_mean_ms: 1.0, native_mean_ms: 3.0 },
+            SpeedupRow { model: "b".into(), platform: "CPU".into(), accel_mean_ms: 1.0, native_mean_ms: 5.0 },
+        ];
+        let s = fig5_summary(&rows);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].1 - 4.0).abs() < 1e-12);
+    }
+}

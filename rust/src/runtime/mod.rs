@@ -1,0 +1,320 @@
+//! PJRT runtime — the only place the `xla` crate is touched.
+//!
+//! Python lowers each variant once (build time); this module loads the HLO
+//! **text** (`HloModuleProto::from_text_file` — the text parser reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
+//! xla_extension 0.5.1 rejects), compiles it on the PJRT CPU client, pins
+//! the weight tensors on-device once, and serves `infer()` calls with only
+//! the activation transfer on the hot path.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's handles are thread-confined (`Rc` client internals,
+//! raw PJRT pointers), so all PJRT state lives on one **runtime host
+//! thread** per [`Engine`].  `Engine` and [`LoadedModel`] are cheap
+//! `Send + Sync` handles that funnel commands over a channel — the same
+//! shape as a real accelerator runtime (one submission queue per device).
+//! XLA:CPU parallelizes *inside* an execution via its own Eigen pool, so
+//! serializing submissions costs little on this substrate; the §Perf
+//! bench quantifies the channel overhead (~µs against ms-scale models).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::artifact::{Artifact, DType};
+
+fn element_type(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::Bf16 => xla::ElementType::Bf16,
+    }
+}
+
+// ───────────────────────── host-thread side ─────────────────────────────
+
+struct HostModel {
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// TFRT's `CopyFromLiteral` is asynchronous: the device buffer may
+    /// still be reading from the host literal after
+    /// `buffer_from_host_literal` returns.  The literals must outlive the
+    /// buffers or the copy thread reads freed memory (observed segfault
+    /// in `ShapeUtil::ByteSizeOfElements`).
+    _weight_literals: Vec<xla::Literal>,
+    input_shape: Vec<usize>,
+    output_elems: usize,
+    id: String,
+}
+
+struct Host {
+    client: xla::PjRtClient,
+    models: Vec<Option<HostModel>>,
+}
+
+/// Metadata returned by a load.
+#[derive(Debug, Clone)]
+struct LoadInfo {
+    slot: usize,
+    compile_time_s: f64,
+    weight_upload_time_s: f64,
+    num_weights: usize,
+}
+
+enum Cmd {
+    PlatformName(mpsc::Sender<String>),
+    Load(Box<Artifact>, mpsc::Sender<Result<LoadInfo>>),
+    Infer {
+        slot: usize,
+        input: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Unload(usize),
+}
+
+impl Host {
+    fn load(&mut self, artifact: &Artifact) -> Result<LoadInfo> {
+        let t0 = Instant::now();
+        let hlo = artifact.hlo_path();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", artifact.manifest.id()))?;
+        let compile_time_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let weights = artifact.load_weights()?;
+        let mut weight_literals = Vec::with_capacity(weights.params().len());
+        let mut weight_bufs = Vec::with_capacity(weights.params().len());
+        for p in weights.params() {
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                element_type(p.dtype),
+                &p.shape,
+                weights.raw(p),
+            )
+            .with_context(|| format!("literal for {}", p.name))?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .with_context(|| format!("uploading {}", p.name))?;
+            weight_literals.push(lit);
+            weight_bufs.push(buf);
+        }
+        let weight_upload_time_s = t1.elapsed().as_secs_f64();
+
+        let model = HostModel {
+            exe,
+            weight_bufs,
+            _weight_literals: weight_literals,
+            input_shape: artifact.manifest.input_shape.clone(),
+            output_elems: artifact.manifest.output_elems(),
+            id: artifact.manifest.id(),
+        };
+        let num_weights = model.weight_bufs.len();
+        let slot = match self.models.iter().position(Option::is_none) {
+            Some(i) => {
+                self.models[i] = Some(model);
+                i
+            }
+            None => {
+                self.models.push(Some(model));
+                self.models.len() - 1
+            }
+        };
+        Ok(LoadInfo { slot, compile_time_s, weight_upload_time_s, num_weights })
+    }
+
+    fn infer(&self, slot: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let m = self
+            .models
+            .get(slot)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow!("model slot {slot} not loaded"))?;
+        let expect: usize = m.input_shape.iter().product();
+        if input.len() != expect {
+            bail!("{}: input has {} elements, expected {expect}", m.id, input.len());
+        }
+        let in_buf = self.client.buffer_from_host_buffer(input, &m.input_shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + m.weight_bufs.len());
+        args.push(&in_buf);
+        args.extend(m.weight_bufs.iter());
+        let result = m.exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        if v.len() != m.output_elems {
+            bail!("{}: output has {} elements, expected {}", m.id, v.len(), m.output_elems);
+        }
+        Ok(v)
+    }
+}
+
+fn host_loop(rx: mpsc::Receiver<Cmd>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("runtime host: cannot create PJRT CPU client: {e}");
+            return;
+        }
+    };
+    let mut host = Host { client, models: Vec::new() };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::PlatformName(reply) => {
+                let _ = reply.send(host.client.platform_name());
+            }
+            Cmd::Load(artifact, reply) => {
+                let _ = reply.send(host.load(&artifact));
+            }
+            Cmd::Infer { slot, input, reply } => {
+                let _ = reply.send(host.infer(slot, &input));
+            }
+            Cmd::Unload(slot) => {
+                if let Some(m) = host.models.get_mut(slot) {
+                    *m = None;
+                }
+            }
+        }
+    }
+}
+
+// ───────────────────────── public Send handles ──────────────────────────
+
+/// Handle to a runtime host thread; cheap to clone, `Send + Sync`.
+#[derive(Clone)]
+pub struct Engine {
+    tx: mpsc::Sender<Cmd>,
+    _keepalive: Arc<EngineGuard>,
+}
+
+struct EngineGuard;
+
+impl Engine {
+    /// Spawn the runtime host thread with a PJRT CPU client (the testbed
+    /// substrate — DESIGN.md §2).
+    pub fn cpu() -> Result<Engine> {
+        let (tx, rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("pjrt-runtime-host".into())
+            // The C++ HLO text parser recurses deeply on large modules;
+            // the default 2 MiB thread stack segfaults on InceptionV4-
+            // sized HLO.  Give the host thread a main-thread-sized stack.
+            .stack_size(64 << 20)
+            .spawn(move || host_loop(rx))
+            .context("spawning runtime host")?;
+        let engine = Engine { tx, _keepalive: Arc::new(EngineGuard) };
+        // Fail fast if the client could not be created.
+        engine.platform_name_checked()?;
+        Ok(engine)
+    }
+
+    fn platform_name_checked(&self) -> Result<String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::PlatformName(rtx))
+            .map_err(|_| anyhow!("runtime host thread died (PJRT init failure?)"))?;
+        rrx.recv().context("runtime host dropped reply")
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform_name_checked().unwrap_or_else(|_| "unavailable".into())
+    }
+
+    /// Compile an artifact and pin its weights on the host thread.
+    pub fn load(&self, artifact: &Artifact) -> Result<LoadedModel> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Load(Box::new(artifact.clone()), rtx))
+            .map_err(|_| anyhow!("runtime host thread died"))?;
+        let info = rrx.recv().context("runtime host dropped reply")??;
+        Ok(LoadedModel {
+            tx: self.tx.clone(),
+            slot: info.slot,
+            input_shape: artifact.manifest.input_shape.clone(),
+            output_elems: artifact.manifest.output_elems(),
+            id: artifact.manifest.id(),
+            compile_time_s: info.compile_time_s,
+            weight_upload_time_s: info.weight_upload_time_s,
+            num_weights: info.num_weights,
+        })
+    }
+}
+
+/// A compiled, weight-pinned AIF ready to serve.  `Send + Sync`: submits
+/// executions to the runtime host's queue.
+#[derive(Clone)]
+pub struct LoadedModel {
+    tx: mpsc::Sender<Cmd>,
+    slot: usize,
+    pub input_shape: Vec<usize>,
+    pub output_elems: usize,
+    pub id: String,
+    pub compile_time_s: f64,
+    pub weight_upload_time_s: f64,
+    num_weights: usize,
+}
+
+impl LoadedModel {
+    /// Run one inference: f32 activations in, f32 logits out.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        self.infer_owned(input.to_vec())
+    }
+
+    /// Owned-input variant of [`infer`](Self::infer): the serving hot path
+    /// already owns the preprocessed tensor, so handing it to the runtime
+    /// host avoids one full activation copy per request (§Perf L3-1).
+    pub fn infer_owned(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Infer { slot: self.slot, input, reply: rtx })
+            .map_err(|_| anyhow!("runtime host thread died"))?;
+        rrx.recv().context("runtime host dropped reply")?
+    }
+
+    /// Release the device-pinned weights (pods call this on terminate).
+    pub fn unload(self) {
+        let _ = self.tx.send(Cmd::Unload(self.slot));
+    }
+
+    pub fn num_weights(&self) -> usize {
+        self.num_weights
+    }
+}
+
+/// Load + fixture-check an artifact in one call; returns the model and the
+/// max |Δ| observed across fixtures.  This is the paper's "client container
+/// verifies the AIF service" feature, folded into deployment.
+pub fn load_verified(engine: &Engine, artifact: &Artifact) -> Result<(LoadedModel, f64)> {
+    let model = engine.load(artifact)?;
+    let fixtures = artifact.load_fixtures()?;
+    let mut max_delta = 0f64;
+    for (i, fx) in fixtures.iter().enumerate() {
+        let got = model.infer(&fx.input)?;
+        if got.len() != fx.expected.len() {
+            bail!("{}: fixture {i} length mismatch", model.id);
+        }
+        for (a, b) in got.iter().zip(fx.expected.iter()) {
+            let d = (a - b).abs() as f64;
+            if d > max_delta {
+                max_delta = d;
+            }
+        }
+    }
+    Ok((model, max_delta))
+}
+
+/// Convenience: load an artifact directory by path.
+pub fn load_dir(engine: &Engine, dir: impl AsRef<Path>) -> Result<LoadedModel> {
+    let artifact = Artifact::load(dir)?;
+    engine.load(&artifact)
+}

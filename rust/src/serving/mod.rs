@@ -1,0 +1,259 @@
+//! AIF serving runtime — the Global Server Code of paper Fig. 2.
+//!
+//! One `AifServer` wraps a compiled, weight-pinned model (L1+L2 artifact)
+//! with the platform-independent server machinery the paper factors out of
+//! the per-platform Base Servers: the pre/post-processing interface, the
+//! request loop, dynamic batching, and the metrics collector.  Rust owns
+//! the event loop (std threads + channels; python never runs here).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::artifact::Artifact;
+use crate::metrics::Collector;
+use crate::platform::{self, Platform};
+use crate::runtime::{Engine, LoadedModel};
+use crate::util::rng::Rng;
+use crate::workload;
+
+/// The user-provided pre/post-processing interface (paper §IV-C: "the user
+/// can implement an interface related to the pre/post-processing of data",
+/// ~100 lines of elementary scripting, AI-framework-agnostic).
+pub trait PrePost: Send + Sync {
+    /// Raw request payload → model input tensor (f32, manifest shape).
+    fn preprocess(&self, raw: &[f32]) -> Vec<f32>;
+    /// Model logits → prediction.
+    fn postprocess(&self, logits: &[f32]) -> Prediction;
+}
+
+/// Top-1 classification result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub class: usize,
+    pub score: f32,
+}
+
+/// Default image-classification interface: per-image standardization in,
+/// argmax out — exactly what the paper's evaluated variants used.
+pub struct ImageClassify;
+
+impl PrePost for ImageClassify {
+    fn preprocess(&self, raw: &[f32]) -> Vec<f32> {
+        let mut v = raw.to_vec();
+        workload::standardize(&mut v);
+        v
+    }
+
+    fn postprocess(&self, logits: &[f32]) -> Prediction {
+        let (class, score) = logits
+            .iter()
+            .enumerate()
+            .fold((0, f32::NEG_INFINITY), |(bi, bs), (i, &s)| {
+                if s > bs {
+                    (i, s)
+                } else {
+                    (bi, bs)
+                }
+            });
+        Prediction { class, score }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub payload: Vec<f32>,
+}
+
+/// One inference response with both latency channels.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub prediction: Prediction,
+    /// Simulated service latency on the variant's platform (cost model).
+    pub service_ms: f64,
+    /// Measured wall-clock of the real PJRT execution here.
+    pub real_compute_ms: f64,
+    /// Time spent queued before a worker picked the request up.
+    pub queue_wait_ms: f64,
+}
+
+/// A deployed AIF service instance.
+pub struct AifServer {
+    pub model: LoadedModel,
+    pub variant: String,
+    pub model_name: String,
+    platform: &'static Platform,
+    native: bool,
+    gflops: f64,
+    prepost: Arc<dyn PrePost>,
+    pub metrics: Arc<Collector>,
+    rng: std::sync::Mutex<Rng>,
+}
+
+impl AifServer {
+    /// Deploy an artifact: compile, pin weights, wire the interface.
+    pub fn deploy(engine: &Engine, artifact: &Artifact, prepost: Arc<dyn PrePost>) -> Result<Self> {
+        let m = &artifact.manifest;
+        let plat = platform::get(&m.variant)
+            .with_context(|| format!("no platform for variant {}", m.variant))?;
+        let model = engine.load(artifact)?;
+        Ok(AifServer {
+            model,
+            variant: m.variant.clone(),
+            model_name: m.model.clone(),
+            platform: plat,
+            native: Platform::is_native_variant(&m.variant),
+            gflops: m.gflops,
+            prepost,
+            metrics: Arc::new(Collector::new()),
+            rng: std::sync::Mutex::new(Rng::new(0xA1F0 ^ m.id().len() as u64)),
+        })
+    }
+
+    /// Reseed the cost-model noise (benches pin this for reproducibility).
+    pub fn reseed(&self, seed: u64) {
+        *self.rng.lock().unwrap() = Rng::new(seed);
+    }
+
+    /// Handle one request synchronously (the hot path).
+    pub fn handle(&self, req: &Request) -> Result<Response> {
+        self.handle_queued(req, 0.0)
+    }
+
+    fn handle_queued(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        let input = self.prepost.preprocess(&req.payload);
+        let t0 = Instant::now();
+        // Owned handoff: no second copy of the activation (§Perf L3-1).
+        let logits = match self.model.infer_owned(input) {
+            Ok(l) => l,
+            Err(e) => {
+                self.metrics.record_error();
+                return Err(e);
+            }
+        };
+        let real = t0.elapsed();
+        let prediction = self.prepost.postprocess(&logits);
+        let service_ms = {
+            let mut rng = self.rng.lock().unwrap();
+            self.platform.sample_latency_ms(self.gflops, self.native, &mut rng)
+        };
+        self.metrics.record(
+            service_ms,
+            real,
+            std::time::Duration::from_secs_f64(queue_wait_ms / 1e3),
+        );
+        Ok(Response {
+            id: req.id,
+            prediction,
+            service_ms,
+            real_compute_ms: real.as_secs_f64() * 1e3,
+            queue_wait_ms,
+        })
+    }
+
+    /// Platform this variant runs on.
+    pub fn platform(&self) -> &'static Platform {
+        self.platform
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.gflops
+    }
+
+    pub fn is_native(&self) -> bool {
+        self.native
+    }
+}
+
+/// Dynamic batcher config (paper §IV-C: batch size is a user
+/// customization option).
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Max requests drained per wakeup.
+    pub max_batch: usize,
+    /// Worker threads executing drained batches.
+    pub workers: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, workers: 1 }
+    }
+}
+
+/// Async handle to a running AIF server loop.
+pub struct ServerHandle {
+    tx: mpsc::Sender<(Request, Instant, mpsc::Sender<Result<Response, String>>)>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pub inflight: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Spawn the server event loop: a shared queue drained by N workers.
+    pub fn spawn(server: Arc<AifServer>, cfg: BatcherConfig) -> ServerHandle {
+        type Item = (Request, Instant, mpsc::Sender<Result<Response, String>>);
+        let (tx, rx) = mpsc::channel::<Item>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let inflight = Arc::new(AtomicU64::new(0));
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let server = Arc::clone(&server);
+                let inflight = Arc::clone(&inflight);
+                let max_batch = cfg.max_batch.max(1);
+                thread::spawn(move || loop {
+                    // Drain up to max_batch requests in one lock take —
+                    // the dynamic-batching amortization.
+                    let mut batch = Vec::with_capacity(max_batch);
+                    {
+                        let g = rx.lock().unwrap();
+                        match g.recv() {
+                            Ok(item) => batch.push(item),
+                            Err(_) => break,
+                        }
+                        while batch.len() < max_batch {
+                            match g.try_recv() {
+                                Ok(item) => batch.push(item),
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    for (req, enq, reply) in batch {
+                        let wait_ms = enq.elapsed().as_secs_f64() * 1e3;
+                        let resp = server
+                            .handle_queued(&req, wait_ms)
+                            .map_err(|e| e.to_string());
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = reply.send(resp);
+                    }
+                })
+            })
+            .collect();
+        ServerHandle { tx, workers, inflight }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Result<Response, String>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send((req, Instant::now(), rtx))
+            .expect("server loop terminated");
+        rrx
+    }
+
+    /// Shut down: close the queue and join workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}

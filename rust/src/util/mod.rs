@@ -1,0 +1,8 @@
+//! Substrate utilities built in-repo (the environment vendors no serde/
+//! tokio/criterion, so the JSON codec, PRNG, statistics, and thread pool
+//! the coordinator needs are first-class modules here).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,151 @@
+//! Latency statistics: the measurement substrate behind Figs. 4 and 5.
+//!
+//! `Series` stores raw samples (1000-request benchmark scale — exact
+//! percentiles beat streaming sketches at this size) and derives the
+//! boxplot five-number summary the paper plots.
+
+/// A sample series in milliseconds (or any unit — unit-agnostic).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+/// Five-number summary + mean, the boxplot glyph of Fig. 4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Boxplot {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
+        self.samples.extend(vs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolation percentile (NIST R-7), p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty series");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+    }
+
+    pub fn boxplot(&mut self) -> Boxplot {
+        Boxplot {
+            min: self.percentile(0.0),
+            q1: self.percentile(25.0),
+            median: self.percentile(50.0),
+            q3: self.percentile(75.0),
+            max: self.percentile(100.0),
+            mean: self.mean(),
+            n: self.len(),
+        }
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Throughput helper: requests / wall-clock seconds.
+pub fn throughput_rps(n_requests: usize, wall_s: f64) -> f64 {
+    if wall_s <= 0.0 {
+        return f64::NAN;
+    }
+    n_requests as f64 / wall_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_small() {
+        let mut s = Series::new();
+        s.extend([4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        assert_eq!(s.percentile(50.0), 2.5);
+    }
+
+    #[test]
+    fn boxplot_summary() {
+        let mut s = Series::new();
+        s.extend((1..=100).map(|i| i as f64));
+        let b = s.boxplot();
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 100.0);
+        assert!((b.median - 50.5).abs() < 1e-9);
+        assert!((b.q1 - 25.75).abs() < 1e-9);
+        assert!((b.q3 - 75.25).abs() < 1e-9);
+        assert_eq!(b.n, 100);
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Series::new();
+        s.extend([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_percentile_panics() {
+        Series::new().percentile(50.0);
+    }
+}

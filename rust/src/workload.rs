@@ -1,0 +1,110 @@
+//! Synthetic request workload — image-like inputs + arrival processes.
+//!
+//! Mirrors `python/compile/calib.py::image_like` in spirit (smooth
+//! low-frequency field + sparse highlights, per-image standardization) so
+//! the serving path sees calibration-representative activations, and
+//! provides the arrival-time generators the client benchmark uses (the
+//! paper's 1000-request closed loop plus open-loop Poisson for the
+//! extension benches).
+
+use crate::util::rng::Rng;
+
+/// Generate one image-like input of `h*w*c` f32 values, standardized.
+pub fn image_like(rng: &mut Rng, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (ch, cw) = ((h / 8).max(2), (w / 8).max(2));
+    // Coarse noise field.
+    let coarse: Vec<f32> = (0..ch * cw * c).map(|_| rng.normal() as f32).collect();
+    let mut img = vec![0f32; h * w * c];
+    for y in 0..h {
+        for x in 0..w {
+            let cy = (y * ch / h).min(ch - 1);
+            let cx = (x * cw / w).min(cw - 1);
+            for ci in 0..c {
+                img[(y * w + x) * c + ci] = coarse[(cy * cw + cx) * c + ci];
+            }
+        }
+    }
+    // Sparse highlights.
+    for v in img.iter_mut() {
+        if rng.f64() < 0.01 {
+            *v += rng.normal() as f32 * 3.0;
+        }
+    }
+    // Per-image standardization (the user preprocess interface).
+    standardize(&mut img);
+    img
+}
+
+/// In-place per-image standardization — the same "preprocess" the python
+/// exporter records in the manifest (`per-image-standardize`).
+pub fn standardize(img: &mut [f32]) {
+    let n = img.len() as f32;
+    let mean = img.iter().sum::<f32>() / n;
+    let var = img.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / n;
+    let std = var.sqrt() + 1e-6;
+    for v in img.iter_mut() {
+        *v = (*v - mean) / std;
+    }
+}
+
+/// Request arrival pattern for the client driver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Paper §V-C: issue the next request when the previous returns.
+    ClosedLoop,
+    /// Open loop with Poisson arrivals at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// Open loop with a fixed inter-arrival gap.
+    Uniform { rps: f64 },
+}
+
+impl Arrival {
+    /// Next inter-arrival gap in seconds (None for closed-loop).
+    pub fn next_gap_s(&self, rng: &mut Rng) -> Option<f64> {
+        match self {
+            Arrival::ClosedLoop => None,
+            Arrival::Poisson { rps } => Some(rng.exponential(1.0 / rps)),
+            Arrival::Uniform { rps } => Some(1.0 / rps),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_is_standardized() {
+        let mut rng = Rng::new(5);
+        let img = image_like(&mut rng, 32, 32, 3);
+        assert_eq!(img.len(), 32 * 32 * 3);
+        let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+        let var: f32 =
+            img.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / img.len() as f32;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "var {var}");
+    }
+
+    #[test]
+    fn deterministic_workload() {
+        let a = image_like(&mut Rng::new(11), 16, 16, 1);
+        let b = image_like(&mut Rng::new(11), 16, 16, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn poisson_mean_gap() {
+        let mut rng = Rng::new(2);
+        let arr = Arrival::Poisson { rps: 100.0 };
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| arr.next_gap_s(&mut rng).unwrap()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.01).abs() < 0.001, "mean gap {mean}");
+    }
+
+    #[test]
+    fn closed_loop_has_no_gap() {
+        let mut rng = Rng::new(2);
+        assert_eq!(Arrival::ClosedLoop.next_gap_s(&mut rng), None);
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: the generation pipeline — Converter freshness, Composer
+//! bundles, Registry round-trips, archives, and the backend+cluster
+//! deployment flow over real artifacts.
+
+use tf2aif::artifact::Artifact;
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::composer::{self, tar, ComposeOptions};
+use tf2aif::converter::{Converter, Job};
+use tf2aif::registry::Registry;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/lenet_CPU/manifest.json").exists()
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tf2aif-it-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn converter_is_idempotent_on_fresh_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    let conv = Converter::new(".");
+    let jobs: Vec<Job> = ["CPU", "GPU", "ALVEO"]
+        .iter()
+        .map(|v| Job { model: "lenet".into(), variant: v.to_string() })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let reports = conv.convert_all(jobs);
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "fresh artifacts must be near-instant");
+    for r in reports {
+        let r = r.unwrap();
+        assert!(r.skipped, "{}_{} re-ran despite freshness", r.model, r.variant);
+        assert!(r.convert_s >= 0.0 && r.lower_s >= 0.0);
+    }
+}
+
+#[test]
+fn composed_bundle_roundtrips_through_registry_and_archive() {
+    if !have_artifacts() {
+        return;
+    }
+    let art = Artifact::load("artifacts/mobilenetv1_ALVEO").unwrap();
+    let opts = ComposeOptions { port: 9000, batch_size: 4, extra_env: vec![
+        ("LOG_LEVEL".into(), "debug".into()),
+    ]};
+    let server = composer::compose_server(&art, &opts).unwrap();
+    let client = composer::compose_client(&art, &opts).unwrap();
+
+    // ALVEO carries the DPU program; layer set is complete.
+    let names: Vec<&str> = server.layers.iter().map(|l| l.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["env.json", "model.hlo.txt", "weights.bin", "manifest.json",
+             "dpu_program.bin", "server.json"]
+    );
+    assert!(client.layers.iter().any(|l| l.name == "fixtures.bin"));
+
+    // Registry round-trip is byte-exact.
+    let reg = Registry::open(tmpdir("pipeline")).unwrap();
+    reg.push(&server).unwrap();
+    reg.push(&client).unwrap();
+    let back = reg.pull("mobilenetv1_ALVEO").unwrap();
+    assert_eq!(back.digest, server.digest);
+    for (a, b) in back.layers.iter().zip(&server.layers) {
+        assert_eq!(a.data, b.data, "layer {} corrupted", a.name);
+    }
+
+    // Archive (gzipped ustar) round-trips.
+    let gz = server.to_archive().unwrap();
+    let mut dec = flate2::read::GzDecoder::new(&gz[..]);
+    let entries = tar::read(&mut dec).unwrap();
+    assert_eq!(entries.len(), 1 + server.layers.len(), "index + layers");
+    assert_eq!(entries[0].name, "index.json");
+    let weights = entries.iter().find(|e| e.name == "layers/weights.bin").unwrap();
+    assert_eq!(
+        weights.data.len() as u64,
+        art.manifest.weights_bytes,
+        "weights layer intact"
+    );
+}
+
+#[test]
+fn bundle_digests_are_stable_and_config_sensitive() {
+    if !have_artifacts() {
+        return;
+    }
+    let art = Artifact::load("artifacts/lenet_GPU").unwrap();
+    let o1 = ComposeOptions::default();
+    let b1 = composer::compose_server(&art, &o1).unwrap();
+    let b2 = composer::compose_server(&art, &o1).unwrap();
+    assert_eq!(b1.digest, b2.digest, "composition must be reproducible");
+    let o2 = ComposeOptions { batch_size: 16, ..ComposeOptions::default() };
+    let b3 = composer::compose_server(&art, &o2).unwrap();
+    assert_ne!(b1.digest, b3.digest, "user config must change identity");
+}
+
+#[test]
+fn dpu_program_only_for_alveo_and_scales() {
+    if !have_artifacts() {
+        return;
+    }
+    let opts = ComposeOptions::default();
+    let has_dpu = |id: &str| {
+        let art = Artifact::load(format!("artifacts/{id}")).unwrap();
+        let b = composer::compose_server(&art, &opts).unwrap();
+        b.layers
+            .iter()
+            .find(|l| l.name == "dpu_program.bin")
+            .map(|l| l.data.len())
+    };
+    assert_eq!(has_dpu("lenet_GPU"), None);
+    assert_eq!(has_dpu("lenet_ARM"), None, "int8 but not a DPU target");
+    let small = has_dpu("lenet_ALVEO").expect("ALVEO ships a DPU program");
+    let large = has_dpu("resnet50_ALVEO").expect("ALVEO ships a DPU program");
+    assert!(large > 5 * small, "DPU program must scale with model: {small} vs {large}");
+}
+
+#[test]
+fn backend_deploys_all_four_models_on_paper_testbed() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cluster = Cluster::new(paper_testbed());
+    cluster.apply_kube_api_extension();
+    let backend = Backend::new(tf2aif::artifact::scan("artifacts").unwrap(), Policy::MinLatency);
+    // Selection only (no PJRT compile) keeps this test fast.
+    let mut used_nodes = std::collections::BTreeSet::new();
+    for model in ["lenet", "mobilenetv1", "resnet50", "inceptionv4"] {
+        let d = backend.select(model, &cluster).unwrap();
+        cluster
+            .bind(&d.aif, &d.variant, &d.node, 0.5)
+            .unwrap_or_else(|e| panic!("{model}: {e}"));
+        used_nodes.insert(d.node.clone());
+        assert!(!d.variant.ends_with("_TF"));
+    }
+    assert!(used_nodes.len() >= 2, "load should spread across nodes");
+}
+
+#[test]
+fn registry_tags_cover_server_and_client() {
+    if !have_artifacts() {
+        return;
+    }
+    let reg = Registry::open(tmpdir("tags")).unwrap();
+    for id in ["lenet_CPU", "lenet_GPU"] {
+        let art = Artifact::load(format!("artifacts/{id}")).unwrap();
+        let o = ComposeOptions::default();
+        reg.push(&composer::compose_server(&art, &o).unwrap()).unwrap();
+        reg.push(&composer::compose_client(&art, &o).unwrap()).unwrap();
+    }
+    let tags = reg.tags().unwrap();
+    assert_eq!(
+        tags,
+        vec!["lenet_CPU", "lenet_CPU-client", "lenet_GPU", "lenet_GPU-client"]
+    );
+    let stats = reg.stats().unwrap();
+    assert_eq!(stats.tags_by_kind.get("server"), Some(&2));
+    assert_eq!(stats.tags_by_kind.get("client"), Some(&2));
+}

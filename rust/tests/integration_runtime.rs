@@ -1,0 +1,138 @@
+//! Integration: artifacts → PJRT runtime → numeric parity with the python
+//! build (the cross-layer contract of the whole architecture).
+//!
+//! Requires `make artifacts` to have run; tests skip gracefully when the
+//! artifacts directory is absent so `cargo test` stays usable mid-setup.
+
+use tf2aif::artifact::{self, Artifact};
+use tf2aif::runtime::{load_verified, Engine};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/lenet_CPU/manifest.json").exists()
+}
+
+#[test]
+fn lenet_all_variants_match_python_fixtures() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    for variant in ["AGX", "ARM", "CPU", "ALVEO", "GPU", "CPU_TF", "GPU_TF"] {
+        let a = Artifact::load(format!("artifacts/lenet_{variant}")).unwrap();
+        let (_, delta) = load_verified(&engine, &a).unwrap();
+        // Same HLO, same inputs, same XLA backend as the python jit —
+        // parity should be at float-noise level.
+        assert!(delta < 1e-3, "lenet_{variant}: fixture delta {delta}");
+    }
+}
+
+#[test]
+fn mobilenet_int8_and_bf16_parity() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    // INT8: integer accumulation is exact, only the f32 epilogue can
+    // drift → tight bound.  bf16: XLA may fuse differently than the
+    // python jit, re-rounding intermediates → bf16-scale bound.
+    for (variant, tol) in [("ARM", 1e-2), ("GPU", 0.1)] {
+        let a = Artifact::load(format!("artifacts/mobilenetv1_{variant}")).unwrap();
+        let (model, delta) = load_verified(&engine, &a).unwrap();
+        assert!(delta < tol, "mobilenetv1_{variant}: delta {delta}");
+        assert_eq!(model.output_elems, 200);
+    }
+}
+
+#[test]
+fn infer_validates_input_shape() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let model = engine.load(&a).unwrap();
+    assert!(model.infer(&[0.0; 3]).is_err(), "wrong input size must error");
+    assert!(model.infer(&vec![0.0; 32 * 32]).is_ok());
+}
+
+#[test]
+fn unload_frees_slot_and_later_infer_fails() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let model = engine.load(&a).unwrap();
+    let clone = model.clone();
+    model.unload();
+    assert!(clone.infer(&vec![0.0; 32 * 32]).is_err(), "unloaded slot must error");
+}
+
+#[test]
+fn engine_is_shared_across_threads() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let model = engine.load(&a).unwrap();
+    let fixtures = a.load_fixtures().unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let m = model.clone();
+            let fx = fixtures[0].clone();
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let out = m.infer(&fx.input).unwrap();
+                    assert_eq!(out.len(), fx.expected.len());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn scan_finds_full_matrix() {
+    if !have_artifacts() {
+        return;
+    }
+    let arts = artifact::scan("artifacts").unwrap();
+    assert!(arts.len() >= 20, "expected ≥20 artifacts, got {}", arts.len());
+    // Every Table I variant present for every Table III model.
+    for model in ["lenet", "mobilenetv1", "resnet50", "inceptionv4"] {
+        for variant in ["AGX", "ARM", "CPU", "ALVEO", "GPU"] {
+            assert!(
+                arts.iter()
+                    .any(|a| a.manifest.model == model && a.manifest.variant == variant),
+                "missing {model}_{variant}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_stats_are_sane() {
+    if !have_artifacts() {
+        return;
+    }
+    for a in artifact::scan("artifacts").unwrap() {
+        let m = &a.manifest;
+        assert!(m.gflops > 0.0, "{}", m.id());
+        assert!(m.param_count > 0);
+        assert_eq!(m.input_shape.len(), 4, "NHWC");
+        assert_eq!(m.output_shape[1] as u64 % 10, 0, "10 or 200 classes");
+        let weights = a.load_weights().unwrap();
+        assert_eq!(weights.total_bytes() as u64, m.weights_bytes);
+        if m.mode == "int8" {
+            assert!(
+                m.params.iter().any(|p| p.name.ends_with("/wq")),
+                "{} int8 without quantized weights",
+                m.id()
+            );
+        }
+    }
+}

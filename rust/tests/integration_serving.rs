@@ -1,0 +1,153 @@
+//! Integration: serving stack — deploy, client runs, batching under load,
+//! failure injection, metrics accounting.
+
+use std::sync::Arc;
+
+use tf2aif::artifact::Artifact;
+use tf2aif::client::{Client, ClientConfig};
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{
+    AifServer, BatcherConfig, ImageClassify, PrePost, Prediction, Request, ServerHandle,
+};
+use tf2aif::util::rng::Rng;
+use tf2aif::workload::{image_like, Arrival};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/lenet_CPU/manifest.json").exists()
+}
+
+fn deploy(variant: &str) -> Option<Arc<AifServer>> {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a = Artifact::load(format!("artifacts/lenet_{variant}")).unwrap();
+    Some(Arc::new(AifServer::deploy(&engine, &a, Arc::new(ImageClassify)).unwrap()))
+}
+
+#[test]
+fn closed_loop_client_collects_full_series() {
+    let Some(server) = deploy("CPU") else { return };
+    let client = Client::new(Arc::clone(&server));
+    let run = client
+        .run(&ClientConfig { requests: 40, arrival: Arrival::ClosedLoop, seed: 1 })
+        .unwrap();
+    assert_eq!(run.service_ms.len(), 40);
+    assert_eq!(run.real_compute_ms.len(), 40);
+    assert_eq!(run.errors, 0);
+    assert!(run.throughput_rps() > 0.0);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 40);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn client_verify_checks_served_predictions() {
+    let Some(server) = deploy("ALVEO") else { return };
+    let a = Artifact::load("artifacts/lenet_ALVEO").unwrap();
+    let client = Client::new(Arc::clone(&server));
+    assert_eq!(client.verify(&a).unwrap(), 4);
+}
+
+#[test]
+fn service_latency_is_reproducible_with_seed() {
+    let Some(server) = deploy("GPU") else { return };
+    let client = Client::new(Arc::clone(&server));
+    server.reseed(99);
+    let r1 = client
+        .run(&ClientConfig { requests: 10, arrival: Arrival::ClosedLoop, seed: 5 })
+        .unwrap();
+    server.reseed(99);
+    let r2 = client
+        .run(&ClientConfig { requests: 10, arrival: Arrival::ClosedLoop, seed: 5 })
+        .unwrap();
+    assert_eq!(r1.service_ms.samples(), r2.service_ms.samples());
+}
+
+#[test]
+fn batched_loop_serves_burst_without_loss() {
+    let Some(server) = deploy("CPU") else { return };
+    let handle = ServerHandle::spawn(
+        Arc::clone(&server),
+        BatcherConfig { max_batch: 4, workers: 3 },
+    );
+    let mut rng = Rng::new(2);
+    let pending: Vec<_> = (0..100)
+        .map(|i| handle.submit(Request { id: i, payload: image_like(&mut rng, 32, 32, 1) }))
+        .collect();
+    let mut ids = Vec::new();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, i as u64, "responses must be matched to requests");
+        ids.push(resp.id);
+        assert!(resp.prediction.class < 10);
+    }
+    assert_eq!(ids.len(), 100);
+    handle.shutdown();
+    assert_eq!(server.metrics.snapshot().requests, 100);
+}
+
+#[test]
+fn failure_injection_bad_input_is_counted_not_fatal() {
+    let Some(server) = deploy("CPU") else { return };
+    // Payload of the wrong size: preprocess passes it through, infer must
+    // reject it, metrics must count it, server must keep serving.
+    let bad = Request { id: 1, payload: vec![0.0; 7] };
+    assert!(server.handle(&bad).is_err());
+    assert_eq!(server.metrics.snapshot().errors, 1);
+    let mut rng = Rng::new(3);
+    let good = Request { id: 2, payload: image_like(&mut rng, 32, 32, 1) };
+    assert!(server.handle(&good).is_ok(), "server must survive bad requests");
+}
+
+#[test]
+fn custom_prepost_interface_is_honored() {
+    // The paper's user interface: ~100 lines of custom pre/post. Here: a
+    // scale-by-2 preprocess and a top-1-with-softmax postprocess.
+    struct Custom;
+    impl PrePost for Custom {
+        fn preprocess(&self, raw: &[f32]) -> Vec<f32> {
+            raw.iter().map(|v| v * 2.0).collect()
+        }
+        fn postprocess(&self, logits: &[f32]) -> Prediction {
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|l| (l - m).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let (class, score) = exps
+                .iter()
+                .enumerate()
+                .fold((0, 0f32), |acc, (i, &e)| if e > acc.1 { (i, e) } else { acc });
+            Prediction { class, score: score / sum }
+        }
+    }
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let server = AifServer::deploy(&engine, &a, Arc::new(Custom)).unwrap();
+    let mut rng = Rng::new(4);
+    let resp = server
+        .handle(&Request { id: 0, payload: image_like(&mut rng, 32, 32, 1) })
+        .unwrap();
+    assert!(resp.prediction.score > 0.0 && resp.prediction.score <= 1.0, "softmax");
+}
+
+#[test]
+fn native_variant_uses_native_cost_model() {
+    let Some(accel) = deploy("CPU") else { return };
+    let Some(native) = deploy("CPU_TF") else { return };
+    assert!(!accel.is_native());
+    assert!(native.is_native());
+    let mut rng = Rng::new(5);
+    let img = image_like(&mut rng, 32, 32, 1);
+    let a = accel.handle(&Request { id: 0, payload: img.clone() }).unwrap();
+    let n = native.handle(&Request { id: 0, payload: img }).unwrap();
+    assert!(
+        n.service_ms > a.service_ms * 1.5,
+        "native {} vs accel {}",
+        n.service_ms,
+        a.service_ms
+    );
+}

@@ -1,0 +1,298 @@
+//! Property tests on the coordinator invariants (routing, scheduling,
+//! state management) — an in-repo proptest substrate (no proptest crate in
+//! the vendored set): deterministic PRNG generates random operation
+//! sequences; failures print the seed for replay.
+
+use std::collections::BTreeMap;
+
+use tf2aif::backend::Policy;
+use tf2aif::cluster::{paper_testbed, platform_needs_accelerator, Cluster, NodeSpec, PodState};
+use tf2aif::config::Config;
+use tf2aif::util::json::Json;
+use tf2aif::util::rng::Rng;
+use tf2aif::util::stats::Series;
+
+const CASES: u64 = 200;
+
+/// Mini property harness: run `f` across seeds, report the failing seed.
+fn forall(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBEEF0000 ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_cluster(rng: &mut Rng) -> Cluster {
+    let n_nodes = 1 + rng.below(5);
+    let all_platforms = ["AGX", "ARM", "CPU", "ALVEO", "GPU"];
+    let nodes = (0..n_nodes)
+        .map(|i| {
+            let k = 1 + rng.below(3);
+            let mut plats: Vec<String> = Vec::new();
+            for _ in 0..k {
+                let p = all_platforms[rng.below(5)].to_string();
+                if !plats.contains(&p) {
+                    plats.push(p);
+                }
+            }
+            let arm = plats.iter().any(|p| p == "ARM" || p == "AGX");
+            NodeSpec {
+                name: format!("n{i}"),
+                arch: if arm { "arm64".into() } else { "x86_64".into() },
+                cpu_desc: String::new(),
+                cpus: 4 + rng.below(16),
+                memory_gb: 2.0 + rng.f64() * 30.0,
+                accelerator: "sim".into(),
+                platforms: plats,
+                slots: 1 + rng.below(3),
+            }
+        })
+        .collect();
+    let mut c = Cluster::new(nodes);
+    c.apply_kube_api_extension();
+    c
+}
+
+/// INVARIANT: whatever sequence of bind/terminate/fail ops runs, per-node
+/// accelerator slots and memory are never over-committed, and feasibility
+/// always implies a successful bind.
+#[test]
+fn prop_scheduler_never_overcommits() {
+    forall("scheduler_never_overcommits", CASES, |rng| {
+        let mut cluster = random_cluster(rng);
+        let variants = ["AGX", "ARM", "CPU", "ALVEO", "GPU", "CPU_TF", "GPU_TF"];
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..30 {
+            let roll = rng.f64();
+            if roll < 0.6 {
+                let v = variants[rng.below(variants.len())];
+                let mem = 0.1 + rng.f64() * 8.0;
+                let feasible: Vec<String> =
+                    cluster.feasible_nodes(v, mem).iter().map(|n| n.name.clone()).collect();
+                if let Some(node) = feasible.first() {
+                    let id = cluster
+                        .bind(&format!("aif{step}"), v, node, mem)
+                        .expect("feasible bind must succeed");
+                    live.push(id);
+                }
+            } else if roll < 0.85 {
+                if !live.is_empty() {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    cluster.terminate(id).expect("terminate running pod");
+                }
+            } else if !live.is_empty() {
+                let id = live.swap_remove(rng.below(live.len()));
+                cluster.fail(id).expect("fail running pod");
+            }
+
+            // Check global invariants after every step.
+            let mut slots: BTreeMap<&str, usize> = BTreeMap::new();
+            let mut mem: BTreeMap<&str, f64> = BTreeMap::new();
+            for p in cluster.pods().iter().filter(|p| p.state == PodState::Running) {
+                if platform_needs_accelerator(&p.variant) {
+                    *slots.entry(p.node.as_str()).or_default() += 1;
+                }
+                *mem.entry(p.node.as_str()).or_default() += p.memory_gb;
+            }
+            for n in cluster.nodes() {
+                assert!(
+                    slots.get(n.name.as_str()).copied().unwrap_or(0) <= n.slots,
+                    "slot overcommit on {}",
+                    n.name
+                );
+                assert!(
+                    mem.get(n.name.as_str()).copied().unwrap_or(0.0) <= n.memory_gb + 1e-9,
+                    "memory overcommit on {}",
+                    n.name
+                );
+            }
+        }
+    });
+}
+
+/// INVARIANT: feasible_nodes is exactly the set on which bind succeeds.
+#[test]
+fn prop_feasibility_matches_bind() {
+    forall("feasibility_matches_bind", CASES, |rng| {
+        let mut cluster = random_cluster(rng);
+        // Random pre-load.
+        for i in 0..rng.below(6) {
+            let v = ["AGX", "CPU", "GPU"][rng.below(3)];
+            let nodes: Vec<String> =
+                cluster.feasible_nodes(v, 1.0).iter().map(|n| n.name.clone()).collect();
+            if let Some(n) = nodes.first() {
+                cluster.bind(&format!("pre{i}"), v, n, 1.0).unwrap();
+            }
+        }
+        let v = ["AGX", "ARM", "CPU", "ALVEO", "GPU"][rng.below(5)];
+        let mem = 0.5 + rng.f64() * 4.0;
+        let feasible: Vec<String> =
+            cluster.feasible_nodes(v, mem).iter().map(|n| n.name.clone()).collect();
+        let node_names: Vec<String> =
+            cluster.nodes().iter().map(|n| n.name.clone()).collect();
+        for name in node_names {
+            let ok = cluster.bind("probe", v, &name, mem).is_ok();
+            assert_eq!(
+                ok,
+                feasible.contains(&name),
+                "bind({v},{name}) disagrees with feasibility"
+            );
+            if ok {
+                // Roll back so each probe sees the same state.
+                let id = cluster
+                    .pods()
+                    .iter()
+                    .rev()
+                    .find(|p| p.aif == "probe" && p.state == PodState::Running)
+                    .unwrap()
+                    .id;
+                cluster.terminate(id).unwrap();
+            }
+        }
+    });
+}
+
+/// INVARIANT: backend ranking is sorted by score and deterministic.
+#[test]
+fn prop_backend_ranking_sorted_deterministic() {
+    let Ok(artifacts) = tf2aif::artifact::scan("artifacts") else { return };
+    if artifacts.is_empty() {
+        return;
+    }
+    forall("backend_ranking", 40, |rng| {
+        let cluster = {
+            let mut c = Cluster::new(paper_testbed());
+            c.apply_kube_api_extension();
+            c
+        };
+        let policy = [Policy::MinLatency, Policy::PreferEdge, Policy::MinEnergy]
+            [rng.below(3)];
+        let backend = tf2aif::backend::Backend::new(
+            tf2aif::artifact::scan("artifacts").unwrap(),
+            policy,
+        );
+        let model = ["lenet", "mobilenetv1", "resnet50", "inceptionv4"][rng.below(4)];
+        let r1 = backend.rank(model, &cluster).unwrap();
+        let r2 = backend.rank(model, &cluster).unwrap();
+        assert_eq!(r1.len(), r2.len());
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.node, b.node);
+        }
+        for w in r1.windows(2) {
+            assert!(w[0].score <= w[1].score, "ranking not sorted");
+        }
+    });
+}
+
+/// INVARIANT: JSON round-trips arbitrary values built from our generators.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let chars = ['a', 'Z', '9', '"', '\\', '\n', 'é', '\t', ' '];
+                            chars[rng.below(chars.len())]
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json_roundtrip", 500, |rng| {
+        let v = gen_value(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(v, back, "roundtrip mismatch for {s:?}");
+    });
+}
+
+/// INVARIANT: percentile() agrees with a naive reference implementation.
+#[test]
+fn prop_percentile_matches_reference() {
+    forall("percentile_reference", 300, |rng| {
+        let n = 1 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        let mut series = Series::new();
+        series.extend(xs.iter().copied());
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+            let got = series.percentile(p);
+            // R-7 reference.
+            let rank = p / 100.0 * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            let want = sorted[lo] * (1.0 - frac) + sorted[hi.min(n - 1)] * frac;
+            assert!((got - want).abs() < 1e-9, "p{p}: {got} vs {want}");
+        }
+        // Monotonicity.
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=20 {
+            let v = series.percentile(p as f64 * 5.0);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+    });
+}
+
+/// INVARIANT: the config parser accepts what it emits conceptually —
+/// values written in TOML-subset syntax parse back to the same values.
+#[test]
+fn prop_config_values_roundtrip() {
+    forall("config_roundtrip", 300, |rng| {
+        let n = rng.below(8);
+        let mut src = String::new();
+        let mut expect: Vec<(String, f64)> = Vec::new();
+        for i in 0..n {
+            let v = (rng.f64() * 1e4).round() / 4.0;
+            src.push_str(&format!("key{i} = {v}\n"));
+            expect.push((format!("key{i}"), v));
+        }
+        let cfg = Config::parse(&src).unwrap();
+        for (k, v) in expect {
+            assert_eq!(cfg.root.get(&k).unwrap().f64().unwrap(), v);
+        }
+    });
+}
+
+/// INVARIANT: terminated/failed pods never come back; ids never reused.
+#[test]
+fn prop_pod_lifecycle_is_monotone() {
+    forall("pod_lifecycle", CASES, |rng| {
+        let mut cluster = random_cluster(rng);
+        let mut seen: Vec<u64> = Vec::new();
+        for i in 0..20 {
+            let v = ["CPU", "GPU", "AGX"][rng.below(3)];
+            let nodes: Vec<String> =
+                cluster.feasible_nodes(v, 0.5).iter().map(|n| n.name.clone()).collect();
+            if let Some(node) = nodes.first() {
+                let id = cluster.bind(&format!("a{i}"), v, node, 0.5).unwrap();
+                assert!(!seen.contains(&id), "pod id reuse");
+                seen.push(id);
+                if rng.f64() < 0.5 {
+                    cluster.terminate(id).unwrap();
+                    assert!(cluster.terminate(id).is_err(), "double terminate");
+                    assert!(cluster.fail(id).is_err(), "fail after terminate");
+                }
+            }
+        }
+    });
+}
