@@ -1,0 +1,81 @@
+//! Cluster-scale serving example: the full Table II testbed fronted by
+//! the sharded fabric router, driven by an open-loop Poisson workload.
+//!
+//! ```sh
+//! cargo run --release --example fabric_poisson
+//! ```
+//!
+//! Unlike `cluster_serving` (which needs `make artifacts` and drives one
+//! server at a time), this example uses the synthetic catalog and
+//! simulated pod executors, so it runs anywhere: the backend places up
+//! to three replicas of every Table III model across NE-1/NE-2/FE, the
+//! router sharding requests by least estimated work, bounded per-pod
+//! queues shedding at the admission bound, and measured latencies
+//! feeding back into the placement scores.
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::fabric::{sim, Fabric, FabricConfig};
+use tf2aif::report;
+use tf2aif::workload::Arrival;
+
+fn main() -> anyhow::Result<()> {
+    // ── 1. Cluster up (Table II) ────────────────────────────────────────
+    let mut cluster = Cluster::new(paper_testbed());
+    let (h, r) = report::table2(cluster.nodes());
+    println!("cluster:");
+    print!("{}", report::render_table(&h, &r));
+    cluster.apply_kube_api_extension();
+    println!("Kube-API extension applied: ARM devices registered\n");
+
+    // ── 2. Backend shards every model across the testbed ────────────────
+    let mut backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
+    let cfg = FabricConfig { queue_capacity: 12, workers: 2, ..Default::default() };
+    let fabric = Fabric::place_sim(&backend, &mut cluster, &cfg, None)?;
+    backend.feedback = Some(fabric.feedback());
+    println!("placed {} pods over {:?}:", fabric.plans().len(), fabric.nodes_spanned());
+    for p in fabric.plans() {
+        println!(
+            "  pod {:<3} {:<20} [{:<6}] on {:<4} (modeled {:.2} ms)",
+            p.pod_id, p.aif, p.variant, p.node, p.modeled_ms
+        );
+    }
+
+    // ── 3. Poisson workload through the router ──────────────────────────
+    let requests = 2000;
+    let arrival = Arrival::Poisson { rps: 800.0 };
+    println!("\nrouting {requests} Poisson requests at 800 rps…");
+    let run = fabric.run(requests, arrival, 42)?;
+    println!(
+        "routed {} | completed {} | shed {} | failed {} | {:.1} rps over {:.2}s",
+        run.submitted,
+        run.completed,
+        run.shed,
+        run.failed,
+        run.throughput_rps(),
+        run.wall_s
+    );
+    assert!(run.fully_accounted(), "every request must be accounted for");
+
+    // ── 4. Per-node and fleet tables ────────────────────────────────────
+    println!("\nper-pod:");
+    let (h, rows) = report::fabric_pods(&fabric.pod_reports(run.wall_s));
+    print!("{}", report::render_table(&h, &rows));
+    println!("\nfleet:");
+    let (h, rows) = report::fabric_fleet(&fabric.fleet_report(run.wall_s));
+    print!("{}", report::render_table(&h, &rows));
+
+    // ── 5. The feedback loop, visibly closed ────────────────────────────
+    println!("\nmeasured feedback re-scores placement:");
+    for model in ["lenet", "inceptionv4"] {
+        if let Ok(d) = backend.select(model, &cluster) {
+            println!(
+                "  {model:<12} → {} on {} (modeled {:.2} ms, estimated {:.2} ms)",
+                d.variant, d.node, d.modeled_ms, d.estimated_ms
+            );
+        }
+    }
+    fabric.shutdown();
+    println!("\nfabric shut down; queues drained");
+    Ok(())
+}

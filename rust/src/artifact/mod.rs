@@ -13,12 +13,16 @@ use crate::util::json::Json;
 /// Element type of an exported tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// Signed 8-bit integer (quantized weights).
     I8,
+    /// bfloat16.
     Bf16,
 }
 
 impl DType {
+    /// Parse a manifest dtype string.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "f32" => DType::F32,
@@ -28,6 +32,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             DType::F32 => 4,
@@ -36,6 +41,7 @@ impl DType {
         }
     }
 
+    /// The matching XLA primitive type.
     pub fn primitive(self) -> xla::PrimitiveType {
         match self {
             DType::F32 => xla::PrimitiveType::F32,
@@ -48,47 +54,76 @@ impl DType {
 /// One parameter tensor in `weights.bin`.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into `weights.bin`.
     pub offset: usize,
+    /// Byte length in `weights.bin`.
     pub nbytes: usize,
 }
 
 /// A fixture: input/expected-output offsets into `fixtures.bin`.
 #[derive(Debug, Clone)]
 pub struct FixtureSpec {
+    /// Input byte offset into `fixtures.bin`.
     pub input_offset: usize,
+    /// Expected-output byte offset into `fixtures.bin`.
     pub output_offset: usize,
+    /// Expected-output shape.
     pub output_shape: Vec<usize>,
 }
 
 /// Parsed `manifest.json` — everything the runtime and coordinator need.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name.
     pub model: String,
+    /// Platform variant.
     pub variant: String,
+    /// Platform class (Table I).
     pub platform: String,
+    /// Acceleration framework name.
     pub framework: String,
+    /// Numeric precision of the accelerated path.
     pub precision: String,
+    /// Conversion mode (e.g. `int8`, `fp32`).
     pub mode: String,
+    /// For `*_TF` baselines: the accelerated variant this is a baseline of.
     pub baseline_of: String,
+    /// NHWC input shape.
     pub input_shape: Vec<usize>,
+    /// Output logits shape.
     pub output_shape: Vec<usize>,
+    /// Parameter table for `weights.bin`.
     pub params: Vec<ParamSpec>,
+    /// Fixture table for `fixtures.bin`.
     pub fixtures: Vec<FixtureSpec>,
+    /// Total parameter count.
     pub param_count: u64,
+    /// Total bytes of `weights.bin`.
     pub weights_bytes: u64,
+    /// Master (FP32) model size, MB.
     pub master_size_mb: f64,
+    /// Multiply-accumulate count per inference.
     pub macs: u64,
+    /// Compute cost per inference, GFLOPs.
     pub gflops: f64,
+    /// Layer count.
     pub layers: u64,
+    /// Python-measured conversion time, s.
     pub convert_time_s: f64,
+    /// Python-measured lowering time, s.
     pub lower_time_s: f64,
+    /// PTQ calibration scheme description.
     pub calibration_scheme: String,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` source.
     pub fn parse(src: &str) -> Result<Self> {
         let j = Json::parse(src).context("manifest.json parse")?;
         let shape_of = |v: &Json| -> Result<Vec<usize>> {
@@ -156,10 +191,12 @@ impl Manifest {
         format!("{}_{}", self.model, self.variant)
     }
 
+    /// Input element count.
     pub fn input_elems(&self) -> usize {
         self.input_shape.iter().product()
     }
 
+    /// Output element count.
     pub fn output_elems(&self) -> usize {
         self.output_shape.iter().product()
     }
@@ -168,11 +205,14 @@ impl Manifest {
 /// An artifact directory on disk.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// The artifact directory.
     pub dir: PathBuf,
+    /// Parsed manifest.
     pub manifest: Manifest,
 }
 
 impl Artifact {
+    /// Load an artifact directory (parses its manifest).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let msrc = fs::read_to_string(dir.join("manifest.json"))
@@ -181,6 +221,7 @@ impl Artifact {
         Ok(Artifact { dir, manifest })
     }
 
+    /// Path of the lowered HLO text.
     pub fn hlo_path(&self) -> PathBuf {
         self.dir.join("model.hlo.txt")
     }
@@ -234,14 +275,17 @@ pub struct Weights {
 }
 
 impl Weights {
+    /// The parameter table.
     pub fn params(&self) -> &[ParamSpec] {
         &self.params
     }
 
+    /// Raw bytes of one parameter.
     pub fn raw(&self, p: &ParamSpec) -> &[u8] {
         &self.blob[p.offset..p.offset + p.nbytes]
     }
 
+    /// Total weight-blob size, bytes.
     pub fn total_bytes(&self) -> usize {
         self.blob.len()
     }
@@ -250,7 +294,9 @@ impl Weights {
 /// Serving-path parity vector.
 #[derive(Debug, Clone)]
 pub struct Fixture {
+    /// Input tensor, flattened.
     pub input: Vec<f32>,
+    /// Expected logits.
     pub expected: Vec<f32>,
 }
 

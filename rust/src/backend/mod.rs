@@ -1,5 +1,5 @@
 //! Deployment backend — the paper's §V-C "backend system, which operates
-//! in conjunction with Kubernetes [and], considering the available
+//! in conjunction with Kubernetes \[and\], considering the available
 //! hardware, automatically determines the most suitable
 //! AI-framework-platform model variant for deployment".
 //!
@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::artifact::Artifact;
 use crate::cluster::Cluster;
+use crate::metrics::FeedbackStore;
 use crate::platform::{self, Platform};
 use crate::runtime::Engine;
 use crate::serving::{AifServer, ImageClassify};
@@ -35,6 +36,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Parse a CLI policy name.
     pub fn parse(s: &str) -> Result<Policy> {
         Ok(match s {
             "min-latency" => Policy::MinLatency,
@@ -60,11 +62,20 @@ fn power_w(platform: &Platform) -> f64 {
 /// One placement decision.
 #[derive(Debug, Clone)]
 pub struct Decision {
+    /// AIF identity (`model_variant`).
     pub aif: String,
+    /// Selected platform variant.
     pub variant: String,
+    /// Target cluster node.
     pub node: String,
-    /// Modeled (noise-free) service latency used for ranking, ms.
+    /// Modeled (noise-free) service latency from the platform cost
+    /// model, ms.
     pub modeled_ms: f64,
+    /// Latency estimate actually used for ranking: the modeled latency
+    /// blended with measured fabric feedback when a [`FeedbackStore`] is
+    /// attached (equals `modeled_ms` otherwise).
+    pub estimated_ms: f64,
+    /// Policy score (lower is better).
     pub score: f64,
 }
 
@@ -72,6 +83,7 @@ pub struct Decision {
 pub struct Backend {
     /// model name → its artifacts (all variants found on disk).
     index: BTreeMap<String, Vec<Artifact>>,
+    /// Active selection policy.
     pub policy: Policy,
     /// Consider native `*_TF` variants during selection (off by default —
     /// the paper deploys accelerated variants; baselines are for Fig. 5).
@@ -79,27 +91,36 @@ pub struct Backend {
     /// When set, latency estimates come from the ML-trained model
     /// (Objective #4) instead of the analytic platform cost model.
     pub predictor: Option<predictor::LearnedLatency>,
+    /// When set, per-(variant, node) latency observations measured by the
+    /// serving fabric are blended into placement scores, so ranking
+    /// adapts to delivered performance instead of static platform
+    /// rankings (the fabric's feedback loop).
+    pub feedback: Option<Arc<FeedbackStore>>,
 }
 
 impl Backend {
+    /// Index artifacts by model under a policy.
     pub fn new(artifacts: Vec<Artifact>, policy: Policy) -> Backend {
         let mut index: BTreeMap<String, Vec<Artifact>> = BTreeMap::new();
         for a in artifacts {
             index.entry(a.manifest.model.clone()).or_default().push(a);
         }
-        Backend { index, policy, allow_native: false, predictor: None }
+        Backend { index, policy, allow_native: false, predictor: None, feedback: None }
     }
 
+    /// All model names with artifacts, sorted.
     pub fn models(&self) -> Vec<&str> {
         self.index.keys().map(String::as_str).collect()
     }
 
+    /// Every artifact (variant) of a model.
     pub fn variants_of(&self, model: &str) -> Vec<&Artifact> {
         self.index.get(model).map(|v| v.iter().collect()).unwrap_or_default()
     }
 
     /// Memory an AIF instance pins on a node, GB (weights + runtime pad).
-    fn pod_memory_gb(a: &Artifact) -> f64 {
+    /// Public so the serving fabric can bind replica pods itself.
+    pub fn pod_memory_gb(a: &Artifact) -> f64 {
         a.manifest.weights_bytes as f64 / 1e9 + 0.25
     }
 
@@ -122,20 +143,29 @@ impl Backend {
                 None => plat.latency_model_ms(m.gflops, native),
             };
             for node in cluster.feasible_nodes(&m.variant, Self::pod_memory_gb(a)) {
+                // Fabric feedback: prefer what the pod actually delivered
+                // over the static model once observations exist.  Keyed by
+                // the full AIF id — observations of other models on this
+                // (variant, node) must not leak in.
+                let estimated = match &self.feedback {
+                    Some(f) => f.blend(&FeedbackStore::key(&m.id(), &node.name), modeled),
+                    None => modeled,
+                };
                 let score = match self.policy {
-                    Policy::MinLatency => modeled,
+                    Policy::MinLatency => estimated,
                     Policy::PreferEdge => {
                         // Far-edge nodes (arm64) win by a large margin,
                         // latency breaks ties.
-                        if node.arch == "arm64" { modeled } else { modeled + 1e6 }
+                        if node.arch == "arm64" { estimated } else { estimated + 1e6 }
                     }
-                    Policy::MinEnergy => modeled * power_w(plat),
+                    Policy::MinEnergy => estimated * power_w(plat),
                 };
                 out.push(Decision {
                     aif: m.id(),
                     variant: m.variant.clone(),
                     node: node.name.clone(),
                     modeled_ms: modeled,
+                    estimated_ms: estimated,
                     score,
                 });
             }
@@ -176,8 +206,11 @@ impl Backend {
 
 /// A live deployment: decision + pod binding + serving instance.
 pub struct Deployment {
+    /// The ranked decision that was executed.
     pub decision: Decision,
+    /// Bound pod id.
     pub pod: u64,
+    /// The live serving instance.
     pub server: Arc<AifServer>,
 }
 
@@ -228,5 +261,41 @@ mod tests {
         for w in r.windows(2) {
             assert!(w[0].score <= w[1].score);
         }
+    }
+
+    #[test]
+    fn fabric_feedback_rescores_placements() {
+        // Synthetic catalog: no on-disk artifacts required.
+        let arts = crate::fabric::sim::synthetic_catalog();
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        let mut b = Backend::new(arts, Policy::MinLatency);
+
+        let cold = b.select("inceptionv4", &cluster).unwrap();
+        assert_eq!(cold.variant, "GPU", "cost model favors the V100");
+        assert!((cold.estimated_ms - cold.modeled_ms).abs() < 1e-12, "no feedback yet");
+
+        // The fabric measured the GPU pod badly degraded (say, a noisy
+        // neighbor): 100 observations at 50 ms.
+        let store = Arc::new(FeedbackStore::new(0.3));
+        let key = FeedbackStore::key("inceptionv4_GPU", "NE-2");
+        for _ in 0..100 {
+            store.observe(&key, 50.0);
+        }
+        b.feedback = Some(Arc::clone(&store));
+        let warm = b.select("inceptionv4", &cluster).unwrap();
+        assert_ne!(
+            (warm.variant.as_str(), warm.node.as_str()),
+            ("GPU", "NE-2"),
+            "measured degradation must dethrone the static winner"
+        );
+        // The degraded pod's estimate reflects the measurement.
+        let gpu = b
+            .rank("inceptionv4", &cluster)
+            .unwrap()
+            .into_iter()
+            .find(|d| d.variant == "GPU" && d.node == "NE-2")
+            .unwrap();
+        assert!(gpu.estimated_ms > 40.0, "estimated {}", gpu.estimated_ms);
     }
 }

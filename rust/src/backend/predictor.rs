@@ -16,9 +16,13 @@ use anyhow::{bail, Result};
 /// One training observation from a benchmark sweep.
 #[derive(Debug, Clone)]
 pub struct Observation {
+    /// Platform name.
     pub platform: String,
+    /// Whether the native-TF path was measured.
     pub native: bool,
+    /// Model compute cost, GFLOPs.
     pub gflops: f64,
+    /// Measured mean service latency, ms.
     pub mean_latency_ms: f64,
 }
 
@@ -94,6 +98,7 @@ impl LearnedLatency {
         acc / data.len() as f64
     }
 
+    /// Platforms the model was trained over.
     pub fn platforms(&self) -> &[String] {
         &self.platforms
     }

@@ -24,7 +24,9 @@ use crate::workload::{image_like, Arrival};
 pub struct ClientConfig {
     /// Number of requests (paper: 1000 per variant).
     pub requests: usize,
+    /// Arrival process pacing the requests.
     pub arrival: Arrival,
+    /// Workload RNG seed.
     pub seed: u64,
 }
 
@@ -37,17 +39,22 @@ impl Default for ClientConfig {
 /// Result of one client run against one AIF.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Variant served.
     pub variant: String,
+    /// Model name.
     pub model: String,
     /// Simulated platform service latency series (Fig. 4 channel).
     pub service_ms: Series,
     /// Real measured PJRT compute series.
     pub real_compute_ms: Series,
+    /// Failed requests.
     pub errors: usize,
+    /// Wall-clock of the whole run, seconds.
     pub wall_s: f64,
 }
 
 impl RunReport {
+    /// Served requests per wall-clock second.
     pub fn throughput_rps(&self) -> f64 {
         crate::util::stats::throughput_rps(self.service_ms.len(), self.wall_s)
     }
@@ -60,6 +67,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Wrap a deployed server (reads the input shape off its model).
     pub fn new(server: Arc<AifServer>) -> Client {
         let s = &server.model.input_shape;
         assert_eq!(s.len(), 4, "NHWC input expected");

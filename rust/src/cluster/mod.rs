@@ -16,12 +16,17 @@ use crate::config::Config;
 /// A cluster node (one Table II row).
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
+    /// Node name (Table II row label).
     pub name: String,
     /// "x86_64" | "arm64".
     pub arch: String,
+    /// CPU model description.
     pub cpu_desc: String,
+    /// CPU core count.
     pub cpus: usize,
+    /// Memory capacity, GB.
     pub memory_gb: f64,
+    /// Accelerator description.
     pub accelerator: String,
     /// Table I platform names servable here once plugins registered.
     pub platforms: Vec<String>,
@@ -41,20 +46,30 @@ pub enum PluginState {
 /// Pod lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PodState {
+    /// Scheduled but not yet bound.
     Pending,
+    /// Bound and serving.
     Running,
+    /// Terminated cleanly; resources released.
     Terminated,
+    /// Failed; resources released, kept for postmortem.
     Failed,
 }
 
 /// A scheduled AIF instance.
 #[derive(Debug, Clone)]
 pub struct Pod {
+    /// Cluster-assigned pod id.
     pub id: u64,
+    /// AIF identity (`model_variant`).
     pub aif: String,
+    /// Platform variant.
     pub variant: String,
+    /// Hosting node name.
     pub node: String,
+    /// Lifecycle state.
     pub state: PodState,
+    /// Memory the pod pins, GB.
     pub memory_gb: f64,
 }
 
@@ -110,6 +125,7 @@ pub fn paper_testbed() -> Vec<NodeSpec> {
 }
 
 impl Cluster {
+    /// Build a cluster; ARM nodes start with unregistered device plugins (paper §V-A).
     pub fn new(nodes: Vec<NodeSpec>) -> Cluster {
         let plugin_state = nodes
             .iter()
@@ -159,10 +175,12 @@ impl Cluster {
         }
     }
 
+    /// All node specs.
     pub fn nodes(&self) -> &[NodeSpec] {
         &self.nodes
     }
 
+    /// All pods, whatever their state.
     pub fn pods(&self) -> &[Pod] {
         &self.pods
     }
@@ -263,6 +281,7 @@ impl Cluster {
         }
     }
 
+    /// Pods currently in the `Running` state.
     pub fn running_pods(&self) -> impl Iterator<Item = &Pod> {
         self.pods.iter().filter(|p| p.state == PodState::Running)
     }

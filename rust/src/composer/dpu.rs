@@ -26,6 +26,7 @@ pub struct DpuGeometry {
     pub weight_buffer: usize,
 }
 
+/// The Alveo U280-class DPU geometry used by the composer.
 pub const DPUCAHX8H: DpuGeometry = DpuGeometry {
     icp: 16,
     ocp: 16,

@@ -26,8 +26,11 @@ use crate::util::json::{n, obj, s, Json};
 /// One content-addressed layer of a bundle.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Layer file name.
     pub name: String,
+    /// Content digest (`sha256:<hex>`).
     pub digest: String,
+    /// Layer bytes.
     pub data: Vec<u8>,
 }
 
@@ -43,25 +46,34 @@ impl Layer {
 pub struct Bundle {
     /// e.g. `lenet_AGX` or `lenet_AGX-client`.
     pub tag: String,
+    /// Server or client.
     pub kind: BundleKind,
+    /// Content-addressed layers.
     pub layers: Vec<Layer>,
     /// Manifest digest — the bundle identity.
     pub digest: String,
+    /// Wall seconds spent composing.
     pub compose_s: f64,
 }
 
+/// Bundle flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BundleKind {
+    /// A deployable AIF server bundle.
     Server,
+    /// The matching generated-client bundle.
     Client,
 }
 
-/// User-side compose options (paper §IV-C customking: batch size,
+/// User-side compose options (paper §IV-C customization: batch size,
 /// networking, precision already fixed by the variant).
 #[derive(Debug, Clone)]
 pub struct ComposeOptions {
+    /// Server port.
     pub port: u16,
+    /// Dynamic-batch size.
     pub batch_size: usize,
+    /// Extra environment variables.
     pub extra_env: Vec<(String, String)>,
 }
 
@@ -228,6 +240,7 @@ impl Bundle {
         Ok(gz.finish()?)
     }
 
+    /// Total layer bytes.
     pub fn total_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.data.len()).sum()
     }

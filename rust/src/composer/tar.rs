@@ -12,7 +12,9 @@ use anyhow::{bail, Context, Result};
 /// One file to archive.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Entry {
+    /// Entry file name.
     pub name: String,
+    /// Entry bytes.
     pub data: Vec<u8>,
 }
 

@@ -14,13 +14,18 @@ use anyhow::{bail, Context, Result};
 /// A configuration value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// A number (kept as `f64`).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// Borrow as a string.
     pub fn str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -28,6 +33,7 @@ impl Value {
         }
     }
 
+    /// Read as a number.
     pub fn f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -35,6 +41,7 @@ impl Value {
         }
     }
 
+    /// Read as a non-negative integer.
     pub fn usize(&self) -> Result<usize> {
         let n = self.f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -43,6 +50,7 @@ impl Value {
         Ok(n as usize)
     }
 
+    /// Read as a boolean.
     pub fn bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -50,6 +58,7 @@ impl Value {
         }
     }
 
+    /// Read as an array of strings.
     pub fn str_arr(&self) -> Result<Vec<String>> {
         match self {
             Value::Arr(v) => v.iter().map(|e| Ok(e.str()?.to_string())).collect(),
@@ -61,20 +70,24 @@ impl Value {
 /// One `[section]` (or one element of a `[[section]]` list).
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Key → value entries of this table.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Table {
+    /// Required key lookup.
     pub fn get(&self, key: &str) -> Result<&Value> {
         self.entries
             .get(key)
             .with_context(|| format!("missing config key {key:?}"))
     }
 
+    /// Key lookup with a fallback value.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a Value) -> &'a Value {
         self.entries.get(key).unwrap_or(default)
     }
 
+    /// String value, or `default` when absent/mistyped.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.entries
             .get(key)
@@ -82,14 +95,17 @@ impl Table {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Number value, or `default` when absent/mistyped.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.entries.get(key).and_then(|v| v.f64().ok()).unwrap_or(default)
     }
 
+    /// Integer value, or `default` when absent/mistyped.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.entries.get(key).and_then(|v| v.usize().ok()).unwrap_or(default)
     }
 
+    /// Boolean value, or `default` when absent/mistyped.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.entries.get(key).and_then(|v| v.bool().ok()).unwrap_or(default)
     }
@@ -98,18 +114,23 @@ impl Table {
 /// A parsed config file: top-level table, named tables, table arrays.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
+    /// Top-level `key = value` entries.
     pub root: Table,
+    /// Named `[section]` tables.
     pub tables: BTreeMap<String, Table>,
+    /// Named `[[section]]` table arrays.
     pub arrays: BTreeMap<String, Vec<Table>>,
 }
 
 impl Config {
+    /// Read and parse a config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Config> {
         let src = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Config::parse(&src)
     }
 
+    /// Parse config source text.
     pub fn parse(src: &str) -> Result<Config> {
         let mut cfg = Config::default();
         // Where do `key = value` lines currently land?
@@ -151,12 +172,14 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Required `[name]` section lookup.
     pub fn table(&self, name: &str) -> Result<&Table> {
         self.tables
             .get(name)
             .with_context(|| format!("missing config section [{name}]"))
     }
 
+    /// All `[[name]]` entries (empty when absent).
     pub fn array(&self, name: &str) -> &[Table] {
         self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }

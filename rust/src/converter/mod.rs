@@ -19,14 +19,18 @@ use crate::util::threadpool::ThreadPool;
 /// One (model, variant) generation job.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Model to convert.
     pub model: String,
+    /// Target variant.
     pub variant: String,
 }
 
 /// Outcome of one conversion.
 #[derive(Debug, Clone)]
 pub struct ConvertReport {
+    /// Model converted.
     pub model: String,
+    /// Variant converted.
     pub variant: String,
     /// Total wall time of this orchestration step (0 if fresh/skipped).
     pub wall_s: f64,
@@ -38,6 +42,7 @@ pub struct ConvertReport {
     /// ALVEO only: wall time of the DPU instruction compile (the Vitis-AI
     /// xcompiler substrate) — part of conversion in the paper's pipeline.
     pub dpu_s: f64,
+    /// Whether conversion was skipped as fresh.
     pub skipped: bool,
 }
 
@@ -46,13 +51,18 @@ pub struct ConvertReport {
 pub struct Converter {
     /// Repo root (contains `python/` and the artifacts dir).
     pub repo_root: PathBuf,
+    /// Artifact output directory.
     pub artifacts_dir: PathBuf,
+    /// Parallel job count.
     pub jobs: usize,
+    /// Convert even when fresh.
     pub force: bool,
+    /// Python interpreter to invoke.
     pub python: String,
 }
 
 impl Converter {
+    /// Converter rooted at the repo (canonicalized so python's cwd is safe).
     pub fn new(repo_root: impl AsRef<Path>) -> Converter {
         // Canonicalize so the `--out-dir` handed to the python subprocess
         // (which runs with cwd = repo_root/python) is absolute — a

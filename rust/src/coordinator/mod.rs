@@ -26,17 +26,25 @@ use crate::runtime::{self, Engine};
 use crate::serving::{AifServer, ImageClassify};
 use crate::workload::Arrival;
 
+/// The Table III model zoo.
 pub const MODELS: &[&str] = &["lenet", "mobilenetv1", "resnet50", "inceptionv4"];
+/// The Table I accelerated variants.
 pub const VARIANTS: &[&str] = &["AGX", "ARM", "CPU", "ALVEO", "GPU"];
+/// Native-TF baseline variants (the Fig. 5 comparison).
 pub const NATIVE_VARIANTS: &[&str] = &["AGX_TF", "ARM_TF", "CPU_TF", "GPU_TF"];
 
 /// Options for the generation pipeline.
 #[derive(Debug, Clone)]
 pub struct GenerateOptions {
+    /// Models to generate.
     pub models: Vec<String>,
+    /// Variants to generate.
     pub variants: Vec<String>,
+    /// Parallel conversion jobs.
     pub jobs: usize,
+    /// Regenerate even when fresh.
     pub force: bool,
+    /// Registry directory, relative to the repo root.
     pub registry_dir: String,
 }
 
@@ -116,6 +124,7 @@ pub struct Fig4Options {
     /// channel; capped because InceptionV4 on an interpret-mode CPU path
     /// is ~seconds, not ms).
     pub real_requests: usize,
+    /// Seed for the service-latency series.
     pub seed: u64,
 }
 

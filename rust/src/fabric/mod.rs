@@ -1,0 +1,730 @@
+//! Cluster-scale serving fabric — the closed loop over placement,
+//! serving, and measurement.
+//!
+//! The paper's premise is that TF2AIF emits *many* platform variants of
+//! one AI function so the orchestrator can place it anywhere on the
+//! cloud-edge continuum.  Before this module, the repo had the pieces but
+//! not the loop: `cluster` simulated placement without live traffic,
+//! `serving` drove a single `AifServer`, and `backend` ranked variants
+//! from static cost models.  The fabric wires them into one system:
+//!
+//! ```text
+//!             ┌────────────────────────── Fabric ─────────────────────────┐
+//!  requests   │  Router ──► per-pod BoundedQueue ──► batcher workers ──►  │
+//!  (Arrival)──┤     │            (admission bound,        (AifServer or   │
+//!             │     │shed         shed when full)          SimPod)        │
+//!             │     ▼                                        │            │
+//!             │  FeedbackStore ◄──── observed service latency┘            │
+//!             │     │                                                     │
+//!             │     └──► backend::Backend::rank (placement re-scoring)    │
+//!             └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! - **Sharding** — every AIF gets up to `replicas_per_model` pods bound
+//!   on distinct cluster nodes (scheduler filter + bind per
+//!   [`crate::cluster::Cluster`]); the router spreads requests across
+//!   them by least estimated work.
+//! - **Per-node queues & dynamic batching** — each pod owns a
+//!   [`queue::BoundedQueue`] drained in batches by its own workers, so a
+//!   slow far-edge pod queues independently of a fast cloud GPU pod.
+//! - **Admission control** — queues are bounded; when every replica's
+//!   queue is full the request is *shed* explicitly (counted, never
+//!   silently dropped).
+//! - **Feedback** — completed requests update a
+//!   [`crate::metrics::FeedbackStore`]; the router and
+//!   [`crate::backend::Backend::rank`] blend those measurements into
+//!   their scores, so routing and placement adapt to delivered
+//!   performance.
+//!
+//! See `docs/ARCHITECTURE.md` for the full request lifecycle and
+//! `examples/fabric_poisson.rs` or `tf2aif fabric` for runnable drivers.
+
+pub mod queue;
+pub mod sim;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::artifact::Artifact;
+use crate::backend::Backend;
+use crate::cluster::Cluster;
+use crate::metrics::{Collector, FeedbackStore, Snapshot};
+use crate::runtime::Engine;
+use crate::serving::{AifServer, ImageClassify, Request, Response};
+use crate::util::rng::Rng;
+use crate::util::stats::{throughput_rps, Boxplot, Series};
+use crate::workload::{image_like, Arrival};
+
+use queue::BoundedQueue;
+use sim::{Gate, SimPod};
+
+/// Anything that can serve one fabric request: a real PJRT-backed
+/// [`AifServer`] or a [`SimPod`] running the platform cost model.
+pub trait PodExecutor: Send + Sync {
+    /// Serve one request that waited `queue_wait_ms` in the pod queue.
+    fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response>;
+    /// The pod's metrics collector.
+    fn collector(&self) -> &Arc<Collector>;
+}
+
+impl PodExecutor for AifServer {
+    fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        self.handle_queued(req, queue_wait_ms)
+    }
+
+    fn collector(&self) -> &Arc<Collector> {
+        &self.metrics
+    }
+}
+
+impl PodExecutor for SimPod {
+    fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        SimPod::execute(self, req, queue_wait_ms)
+    }
+
+    fn collector(&self) -> &Arc<Collector> {
+        self.metrics()
+    }
+}
+
+/// Fabric tuning knobs.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Admission bound: queued requests per pod before shedding.
+    pub queue_capacity: usize,
+    /// Max requests one worker drains per wakeup (dynamic batch size).
+    pub max_batch: usize,
+    /// Batcher workers per pod.
+    pub workers: usize,
+    /// Max pods (on distinct nodes) per AIF.
+    pub replicas_per_model: usize,
+    /// EWMA smoothing for the feedback store.
+    pub feedback_alpha: f64,
+    /// Simulated pods: fraction of modeled latency really slept.
+    pub time_scale: f64,
+    /// Seed for simulated-pod noise.
+    pub seed: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            queue_capacity: 16,
+            max_batch: 8,
+            workers: 1,
+            replicas_per_model: 3,
+            feedback_alpha: 0.2,
+            time_scale: 0.05,
+            seed: 0xFAB,
+        }
+    }
+}
+
+/// One placed pod: the fabric's record of a scheduler bind.
+#[derive(Debug, Clone)]
+pub struct PodPlan {
+    /// AIF identity (`model_variant`).
+    pub aif: String,
+    /// Model served.
+    pub model: String,
+    /// Platform variant served.
+    pub variant: String,
+    /// Cluster node hosting the pod.
+    pub node: String,
+    /// Pod id from the cluster bind.
+    pub pod_id: u64,
+    /// Cost-model service latency used at placement time, ms.
+    pub modeled_ms: f64,
+}
+
+type Work = (Request, Instant, mpsc::Sender<Outcome>);
+
+/// Terminal state of one routed request.
+#[derive(Debug)]
+pub enum Outcome {
+    /// Served; full latency breakdown inside.
+    Completed(Response),
+    /// Reached a pod but the executor failed (counted in pod errors).
+    Failed(String),
+}
+
+/// Router verdict for one submission.
+pub enum Submission {
+    /// Admitted to a pod queue; the receiver yields the [`Outcome`].
+    Enqueued(mpsc::Receiver<Outcome>),
+    /// Every feasible replica's queue was at the admission bound; the
+    /// request was shed (and counted).
+    Shed,
+}
+
+struct PodRuntime {
+    plan: PodPlan,
+    key: String,
+    queue: Arc<BoundedQueue<Work>>,
+    /// Queued + executing requests (router backlog estimate).
+    backlog: Arc<AtomicU64>,
+    executor: Arc<dyn PodExecutor>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// The serving fabric: every placed pod plus the router state.
+pub struct Fabric {
+    pods: Vec<PodRuntime>,
+    by_model: BTreeMap<String, Vec<usize>>,
+    input_shapes: BTreeMap<String, (usize, usize, usize)>,
+    feedback: Arc<FeedbackStore>,
+    cfg: FabricConfig,
+    next_id: AtomicU64,
+    shed_total: AtomicU64,
+    shed_by_model: Mutex<BTreeMap<String, u64>>,
+}
+
+/// Plan replica placements for every model the backend knows, binding
+/// pods through the cluster scheduler (filter → score → bind).  Ranking
+/// is refreshed per model so later models see earlier binds' slot and
+/// memory consumption; a rank entry whose capacity raced away simply
+/// fails its bind and the next candidate is tried.
+fn plan_placements(
+    backend: &Backend,
+    cluster: &mut Cluster,
+    replicas: usize,
+) -> Result<Vec<(PodPlan, Artifact)>> {
+    let models: Vec<String> = backend.models().iter().map(|m| m.to_string()).collect();
+    if models.is_empty() {
+        bail!("backend has no models to place");
+    }
+    let mut out = Vec::new();
+    for model in &models {
+        let mut nodes_used: BTreeSet<String> = BTreeSet::new();
+        let ranked = backend.rank(model, cluster)?;
+        for d in ranked {
+            if nodes_used.len() >= replicas.max(1) {
+                break;
+            }
+            if nodes_used.contains(&d.node) {
+                continue;
+            }
+            let artifact = backend
+                .variants_of(model)
+                .into_iter()
+                .find(|a| a.manifest.variant == d.variant)
+                .context("ranked variant missing from index")?
+                .clone();
+            let mem = Backend::pod_memory_gb(&artifact);
+            let Ok(pod_id) = cluster.bind(&d.aif, &d.variant, &d.node, mem) else {
+                continue; // capacity raced away since ranking
+            };
+            nodes_used.insert(d.node.clone());
+            out.push((
+                PodPlan {
+                    aif: d.aif.clone(),
+                    model: model.clone(),
+                    variant: d.variant.clone(),
+                    node: d.node.clone(),
+                    pod_id,
+                    modeled_ms: d.modeled_ms,
+                },
+                artifact,
+            ));
+        }
+        if nodes_used.is_empty() {
+            bail!("no feasible placement for model {model:?}");
+        }
+    }
+    Ok(out)
+}
+
+impl Fabric {
+    /// Place and spawn the fabric with **simulated** pods (platform cost
+    /// models; no artifacts or PJRT needed).  `gate`, when provided, is
+    /// installed in every pod for deterministic overload tests.
+    pub fn place_sim(
+        backend: &Backend,
+        cluster: &mut Cluster,
+        cfg: &FabricConfig,
+        gate: Option<Arc<Gate>>,
+    ) -> Result<Fabric> {
+        let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
+        let mut pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)> = Vec::new();
+        for (plan, artifact) in plans {
+            let pod = SimPod::new(
+                &plan.variant,
+                artifact.manifest.gflops,
+                cfg.time_scale,
+                cfg.seed ^ plan.pod_id,
+                gate.clone(),
+            )?;
+            pods.push((plan, artifact, Arc::new(pod)));
+        }
+        Ok(Fabric::spawn(pods, cfg.clone()))
+    }
+
+    /// Place and spawn the fabric with **real** pods: one compiled,
+    /// weight-pinned [`AifServer`] per placement (requires on-disk
+    /// artifacts).
+    pub fn place_real(
+        backend: &Backend,
+        cluster: &mut Cluster,
+        engine: &Engine,
+        cfg: &FabricConfig,
+    ) -> Result<Fabric> {
+        let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
+        let mut pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)> = Vec::new();
+        for (plan, artifact) in plans {
+            let server = AifServer::deploy(engine, &artifact, Arc::new(ImageClassify))?;
+            pods.push((plan, artifact, Arc::new(server)));
+        }
+        Ok(Fabric::spawn(pods, cfg.clone()))
+    }
+
+    fn spawn(pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)>, cfg: FabricConfig) -> Fabric {
+        let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
+        let mut runtimes = Vec::new();
+        let mut by_model: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut input_shapes = BTreeMap::new();
+        for (idx, (plan, artifact, executor)) in pods.into_iter().enumerate() {
+            let s = &artifact.manifest.input_shape;
+            if s.len() == 4 {
+                input_shapes.entry(plan.model.clone()).or_insert((s[1], s[2], s[3]));
+            }
+            let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+            let backlog = Arc::new(AtomicU64::new(0));
+            let key = FeedbackStore::key(&plan.aif, &plan.node);
+            let workers = (0..cfg.workers.max(1))
+                .map(|_| {
+                    let queue = Arc::clone(&queue);
+                    let backlog = Arc::clone(&backlog);
+                    let executor = Arc::clone(&executor);
+                    let feedback = Arc::clone(&feedback);
+                    let key = key.clone();
+                    let max_batch = cfg.max_batch.max(1);
+                    thread::spawn(move || loop {
+                        let batch = queue.pop_batch(max_batch);
+                        if batch.is_empty() {
+                            break; // queue closed and drained
+                        }
+                        for (req, enqueued, reply) in batch {
+                            let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                            let outcome = match executor.execute(&req, wait_ms) {
+                                Ok(resp) => {
+                                    feedback.observe(&key, resp.service_ms);
+                                    Outcome::Completed(resp)
+                                }
+                                Err(e) => Outcome::Failed(format!("{e:#}")),
+                            };
+                            backlog.fetch_sub(1, Ordering::Relaxed);
+                            let _ = reply.send(outcome);
+                        }
+                    })
+                })
+                .collect();
+            by_model.entry(plan.model.clone()).or_default().push(idx);
+            runtimes.push(PodRuntime { plan, key, queue, backlog, executor, workers });
+        }
+        Fabric {
+            pods: runtimes,
+            by_model,
+            input_shapes,
+            feedback,
+            cfg,
+            next_id: AtomicU64::new(0),
+            shed_total: AtomicU64::new(0),
+            shed_by_model: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The shared feedback store (attach it to a
+    /// [`Backend`](crate::backend::Backend) via its `feedback` field so
+    /// future placements see fabric measurements).
+    pub fn feedback(&self) -> Arc<FeedbackStore> {
+        Arc::clone(&self.feedback)
+    }
+
+    /// The configuration the fabric was spawned with.
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// Placed pods, in placement order.
+    pub fn plans(&self) -> Vec<PodPlan> {
+        self.pods.iter().map(|p| p.plan.clone()).collect()
+    }
+
+    /// Distinct cluster nodes hosting at least one pod.
+    pub fn nodes_spanned(&self) -> BTreeSet<String> {
+        self.pods.iter().map(|p| p.plan.node.clone()).collect()
+    }
+
+    /// Models the fabric can route.
+    pub fn models(&self) -> Vec<String> {
+        self.by_model.keys().cloned().collect()
+    }
+
+    /// NHWC input shape for a model's requests, from its placed artifact.
+    pub fn input_shape(&self, model: &str) -> Option<(usize, usize, usize)> {
+        self.input_shapes.get(model).copied()
+    }
+
+    /// Router score for a pod: estimated per-request latency (feedback
+    /// blended over the cost model) scaled by its backlog — a
+    /// least-estimated-work-left policy.
+    fn score(&self, idx: usize) -> f64 {
+        let pod = &self.pods[idx];
+        let est = self.feedback.blend(&pod.key, pod.plan.modeled_ms);
+        let backlog = pod.backlog.load(Ordering::Relaxed) as f64;
+        est * (backlog + 1.0)
+    }
+
+    /// Route one request for `model`: try the replicas in ascending score
+    /// order, admit into the first queue with room, shed if every queue
+    /// is at the bound.  Shed requests are counted — nothing is silently
+    /// dropped.
+    pub fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
+        let Some(replicas) = self.by_model.get(model) else {
+            bail!("fabric serves no model {model:?} (have: {:?})", self.models());
+        };
+        let mut scored: Vec<(f64, usize)> =
+            replicas.iter().map(|&i| (self.score(i), i)).collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let mut work: Work = (Request { id, payload }, Instant::now(), tx);
+        for (_, idx) in scored {
+            let pod = &self.pods[idx];
+            pod.backlog.fetch_add(1, Ordering::Relaxed);
+            match pod.queue.try_push(work) {
+                Ok(()) => return Ok(Submission::Enqueued(rx)),
+                Err(returned) => {
+                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    work = returned;
+                }
+            }
+        }
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
+        *self.shed_by_model.lock().unwrap().entry(model.to_string()).or_insert(0) += 1;
+        Ok(Submission::Shed)
+    }
+
+    /// Total shed requests so far.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Shed counts per model.
+    pub fn shed_by_model(&self) -> BTreeMap<String, u64> {
+        self.shed_by_model.lock().unwrap().clone()
+    }
+
+    /// Drive a workload through the router: `requests` synthetic
+    /// image-classification requests spread round-robin over `models`
+    /// (all placed models when empty), paced by `arrival`.
+    ///
+    /// `Arrival::ClosedLoop` keeps exactly one request outstanding (the
+    /// paper's benchmark semantics, matching the single-AIF
+    /// [`Client`](crate::client::Client) driver — shedding cannot occur).
+    /// Open-loop arrivals submit asynchronously; real sleep per gap is
+    /// capped at 2 ms, mirroring the client driver.
+    pub fn run(&self, requests: usize, arrival: Arrival, seed: u64) -> Result<FabricRunReport> {
+        let models = self.models();
+        if models.is_empty() {
+            bail!("fabric has no pods");
+        }
+        let closed_loop = arrival == Arrival::ClosedLoop;
+        let mut rng = Rng::new(seed);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        let mut shed = 0usize;
+        let mut completed = 0usize;
+        let mut failed = 0usize;
+        let mut e2e_ms = Series::new();
+        fn account(
+            outcome: Option<Outcome>,
+            completed: &mut usize,
+            failed: &mut usize,
+            e2e_ms: &mut Series,
+        ) {
+            match outcome {
+                Some(Outcome::Completed(resp)) => {
+                    *completed += 1;
+                    e2e_ms.push(resp.queue_wait_ms + resp.service_ms);
+                }
+                Some(Outcome::Failed(_)) | None => *failed += 1,
+            }
+        }
+        for i in 0..requests {
+            if let Some(gap) = arrival.next_gap_s(&mut rng) {
+                std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.002)));
+            }
+            let model = &models[i % models.len()];
+            let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
+            let payload = image_like(&mut rng, h, w, c);
+            match self.submit(model, payload)? {
+                Submission::Enqueued(rx) => {
+                    if closed_loop {
+                        // One outstanding request: wait before issuing
+                        // the next (paper §V-C closed loop).
+                        account(rx.recv().ok(), &mut completed, &mut failed, &mut e2e_ms);
+                    } else {
+                        pending.push(rx);
+                    }
+                }
+                Submission::Shed => shed += 1,
+            }
+        }
+        for rx in pending {
+            account(rx.recv().ok(), &mut completed, &mut failed, &mut e2e_ms);
+        }
+        Ok(FabricRunReport {
+            submitted: requests,
+            completed,
+            shed,
+            failed,
+            e2e_ms,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Per-pod report rows (snapshot of each pod's collector).
+    pub fn pod_reports(&self, wall_s: f64) -> Vec<PodReport> {
+        self.pods
+            .iter()
+            .map(|p| {
+                let snap = p.executor.collector().snapshot();
+                PodReport::from_snapshot(&p.plan, snap, wall_s)
+            })
+            .collect()
+    }
+
+    /// Fleet-aggregate report (merged pod snapshots + shed counters).
+    pub fn fleet_report(&self, wall_s: f64) -> FleetReport {
+        let snaps: Vec<Snapshot> =
+            self.pods.iter().map(|p| p.executor.collector().snapshot()).collect();
+        let merged = Snapshot::merged(snaps);
+        FleetReport {
+            pods: self.pods.len(),
+            nodes: self.nodes_spanned().len(),
+            requests: merged.requests,
+            errors: merged.errors,
+            shed: self.shed_total(),
+            service: boxplot_opt(&merged.service_ms),
+            mean_queue_wait_ms: mean_opt(&merged.queue_wait_ms),
+            throughput_rps: throughput_rps(merged.requests as usize, wall_s),
+        }
+    }
+
+    /// Close every pod queue, drain backlogs, join workers.
+    pub fn shutdown(self) {
+        for p in &self.pods {
+            p.queue.close();
+        }
+        for p in self.pods {
+            for w in p.workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn boxplot_opt(s: &Series) -> Option<Boxplot> {
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.clone().boxplot())
+    }
+}
+
+fn mean_opt(s: &Series) -> f64 {
+    if s.is_empty() {
+        0.0
+    } else {
+        s.mean()
+    }
+}
+
+/// Result of one [`Fabric::run`] drive.
+#[derive(Debug, Clone)]
+pub struct FabricRunReport {
+    /// Requests submitted to the router.
+    pub submitted: usize,
+    /// Requests served to completion.
+    pub completed: usize,
+    /// Requests shed at the admission bound.
+    pub shed: usize,
+    /// Requests that reached a pod but failed there.
+    pub failed: usize,
+    /// End-to-end (queue wait + service) latencies of completed
+    /// requests, ms.
+    pub e2e_ms: Series,
+    /// Wall-clock of the whole drive, seconds.
+    pub wall_s: f64,
+}
+
+impl FabricRunReport {
+    /// Completed-request throughput over the drive wall-clock.
+    pub fn throughput_rps(&self) -> f64 {
+        throughput_rps(self.completed, self.wall_s)
+    }
+
+    /// Every submitted request must be accounted: completed, failed, or
+    /// explicitly shed.
+    pub fn fully_accounted(&self) -> bool {
+        self.completed + self.failed + self.shed == self.submitted
+    }
+}
+
+/// One pod's row in the fabric report.
+#[derive(Debug, Clone)]
+pub struct PodReport {
+    /// AIF identity (`model_variant`).
+    pub aif: String,
+    /// Platform variant.
+    pub variant: String,
+    /// Hosting node.
+    pub node: String,
+    /// Requests served.
+    pub requests: u64,
+    /// Executor errors.
+    pub errors: u64,
+    /// Service-latency five-number summary (None when idle).
+    pub service: Option<Boxplot>,
+    /// Mean time requests spent queued, ms.
+    pub mean_queue_wait_ms: f64,
+    /// Served throughput over the drive wall-clock.
+    pub throughput_rps: f64,
+}
+
+impl PodReport {
+    fn from_snapshot(plan: &PodPlan, snap: Snapshot, wall_s: f64) -> PodReport {
+        PodReport {
+            aif: plan.aif.clone(),
+            variant: plan.variant.clone(),
+            node: plan.node.clone(),
+            requests: snap.requests,
+            errors: snap.errors,
+            service: boxplot_opt(&snap.service_ms),
+            mean_queue_wait_ms: mean_opt(&snap.queue_wait_ms),
+            throughput_rps: throughput_rps(snap.requests as usize, wall_s),
+        }
+    }
+}
+
+/// Fleet-aggregate row in the fabric report.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Placed pods.
+    pub pods: usize,
+    /// Distinct nodes hosting pods.
+    pub nodes: usize,
+    /// Requests served fleet-wide.
+    pub requests: u64,
+    /// Executor errors fleet-wide.
+    pub errors: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Merged service-latency summary (None when idle).
+    pub service: Option<Boxplot>,
+    /// Mean queue wait fleet-wide, ms.
+    pub mean_queue_wait_ms: f64,
+    /// Fleet throughput over the drive wall-clock.
+    pub throughput_rps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Policy;
+    use crate::cluster::paper_testbed;
+
+    fn sim_fabric(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
+        let backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        Fabric::place_sim(&backend, &mut cluster, cfg, gate).unwrap()
+    }
+
+    #[test]
+    fn placement_shards_models_across_nodes() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        assert_eq!(fabric.models().len(), 4, "all Table III models placed");
+        assert!(
+            fabric.nodes_spanned().len() >= 3,
+            "fleet must span the Table II testbed, got {:?}",
+            fabric.nodes_spanned()
+        );
+        for model in fabric.models() {
+            let nodes: BTreeSet<_> = fabric
+                .plans()
+                .into_iter()
+                .filter(|p| p.model == model)
+                .map(|p| p.node)
+                .collect();
+            assert!(!nodes.is_empty(), "{model} unplaced");
+            assert!(nodes.len() <= cfg.replicas_per_model);
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn replicas_land_on_distinct_nodes() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        for model in fabric.models() {
+            let nodes: Vec<_> = fabric
+                .plans()
+                .into_iter()
+                .filter(|p| p.model == model)
+                .map(|p| p.node)
+                .collect();
+            let distinct: BTreeSet<_> = nodes.iter().cloned().collect();
+            assert_eq!(nodes.len(), distinct.len(), "{model}: replica nodes must differ");
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_run_completes_everything() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        let report = fabric.run(40, Arrival::ClosedLoop, 11).unwrap();
+        assert!(report.fully_accounted());
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.completed + report.shed, 40);
+        assert!(report.completed > 0);
+        let fleet = fabric.fleet_report(report.wall_s);
+        assert_eq!(fleet.requests, report.completed as u64);
+        assert_eq!(fleet.shed as usize, report.shed);
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn feedback_store_learns_from_traffic() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        fabric.run(60, Arrival::ClosedLoop, 3).unwrap();
+        let store = fabric.feedback();
+        assert!(
+            !store.all().is_empty(),
+            "completed traffic must produce feedback observations"
+        );
+        for (key, fb) in store.all() {
+            assert!(fb.ewma_service_ms > 0.0, "{key}");
+            assert!(fb.observations > 0);
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_silent_drop() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        assert!(fabric.submit("not-a-model", vec![]).is_err());
+        fabric.shutdown();
+    }
+}

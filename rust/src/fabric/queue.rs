@@ -1,0 +1,173 @@
+//! Bounded MPMC work queue with blocking batch pop — the admission-control
+//! primitive under every fabric pod.
+//!
+//! `try_push` never blocks: when the queue is at capacity the item comes
+//! straight back to the caller, which is what lets the router shed load
+//! at the bound instead of building unbounded backlog (the
+//! tail-latency-vs-drop tradeoff every overloaded serving system must
+//! make explicit).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// A fixed-capacity queue shared between the router (producer) and one
+/// pod's batcher workers (consumers).
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+}
+
+#[derive(Debug)]
+struct State<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue admitting at most `capacity` queued items.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity),
+                capacity,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Admit an item, or hand it back if the queue is full or closed
+    /// (the caller then sheds or retries elsewhere).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed || g.items.len() >= g.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one item is available, then drain up to
+    /// `max` items in one lock take (the dynamic-batching amortization).
+    /// Returns an empty vec once the queue is closed and drained —
+    /// the worker-shutdown signal.
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let max = max.max(1);
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let n = max.min(g.items.len());
+                return g.items.drain(..n).collect();
+            }
+            if g.closed {
+                return Vec::new();
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Number of items currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: subsequent pushes bounce, and workers drain the
+    /// remaining items then receive the shutdown signal.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bounces_at_capacity() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "third item must bounce");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn batch_pop_drains_up_to_max() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(3), vec![0, 1, 2]);
+        assert_eq!(q.pop_batch(8), vec![3, 4]);
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_batch(4));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_empty(), "closed+empty → shutdown signal");
+        assert_eq!(q.try_push(9), Err(9), "closed queue rejects pushes");
+    }
+
+    #[test]
+    fn close_lets_workers_drain_backlog() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop_batch(10), vec![1, 2], "backlog survives close");
+        assert!(q.pop_batch(10).is_empty());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let q = Arc::new(BoundedQueue::new(1024));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = 0usize;
+                    loop {
+                        let batch = q.pop_batch(16);
+                        if batch.is_empty() {
+                            return got;
+                        }
+                        got += batch.len();
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        // Capacity 1024 ≥ 4×200: pushes never bounce.
+                        q.try_push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 800);
+    }
+}

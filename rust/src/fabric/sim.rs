@@ -1,0 +1,244 @@
+//! Simulated pod executors and a synthetic artifact catalog.
+//!
+//! The fabric can run its pods in two modes: *real* (an
+//! [`crate::serving::AifServer`] per pod, which needs on-disk artifacts
+//! and the PJRT runtime) and *simulated* (this module), where a pod
+//! samples its service latency from the calibrated platform cost models
+//! (`crate::platform`) and occupies its batcher worker for a scaled
+//! slice of real time.  Simulated pods are what make the `tf2aif fabric`
+//! subcommand, the cluster-scale example and the fabric integration
+//! tests runnable on a machine with no artifacts built — queueing,
+//! admission control, shedding and feedback behave identically in both
+//! modes.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::artifact::{Artifact, Manifest};
+use crate::coordinator::VARIANTS;
+use crate::metrics::Collector;
+use crate::platform::{self, Platform};
+use crate::serving::{Prediction, Request, Response};
+use crate::util::rng::Rng;
+
+/// A test gate: while closed, simulated executors block at the start of
+/// every request.  Integration tests close the gate, flood the router,
+/// and get a *deterministic* accepted-count bound (queue capacity plus
+/// in-worker batches) before opening it to drain.
+#[derive(Debug, Default)]
+pub struct Gate {
+    closed: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    /// A new gate, initially open.
+    pub fn open_gate() -> Arc<Gate> {
+        Arc::new(Gate::default())
+    }
+
+    /// A new gate, initially closed.
+    pub fn closed_gate() -> Arc<Gate> {
+        let g = Gate::default();
+        *g.closed.lock().unwrap() = true;
+        Arc::new(g)
+    }
+
+    /// Close the gate: executors block before serving their next request.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+    }
+
+    /// Open the gate and wake every blocked executor.
+    pub fn open(&self) {
+        *self.closed.lock().unwrap() = false;
+        self.cv.notify_all();
+    }
+
+    /// Block while the gate is closed.
+    pub fn wait_open(&self) {
+        let mut g = self.closed.lock().unwrap();
+        while *g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// A simulated AIF pod: platform cost model in place of real inference.
+pub struct SimPod {
+    platform: &'static Platform,
+    gflops: f64,
+    native: bool,
+    /// Fraction of the modeled service latency the executor really
+    /// sleeps, so queue dynamics (and therefore shedding) are exercised
+    /// without paying full simulated latencies in wall-clock.
+    time_scale: f64,
+    rng: Mutex<Rng>,
+    metrics: Arc<Collector>,
+    gate: Option<Arc<Gate>>,
+}
+
+impl SimPod {
+    /// Create a simulated pod serving `variant` for a model of `gflops`.
+    pub fn new(
+        variant: &str,
+        gflops: f64,
+        time_scale: f64,
+        seed: u64,
+        gate: Option<Arc<Gate>>,
+    ) -> Result<SimPod> {
+        let plat = platform::get(variant)
+            .with_context(|| format!("no platform for variant {variant}"))?;
+        Ok(SimPod {
+            platform: plat,
+            gflops,
+            native: Platform::is_native_variant(variant),
+            time_scale: time_scale.max(0.0),
+            rng: Mutex::new(Rng::new(seed)),
+            metrics: Arc::new(Collector::new()),
+            gate,
+        })
+    }
+
+    /// This pod's metrics collector.
+    pub fn metrics(&self) -> &Arc<Collector> {
+        &self.metrics
+    }
+
+    /// Serve one request: sample the platform cost model, occupy the
+    /// worker for the scaled latency, return a deterministic prediction.
+    pub fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        if let Some(g) = &self.gate {
+            g.wait_open();
+        }
+        let service_ms = {
+            let mut rng = self.rng.lock().unwrap();
+            self.platform.sample_latency_ms(self.gflops, self.native, &mut rng)
+        };
+        let t0 = Instant::now();
+        if self.time_scale > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(service_ms * self.time_scale / 1e3));
+        }
+        let real = t0.elapsed();
+        self.metrics.record(
+            service_ms,
+            real,
+            Duration::from_secs_f64(queue_wait_ms / 1e3),
+        );
+        // Deterministic stand-in prediction: requests hash to a class.
+        let prediction = Prediction { class: (req.id % 10) as usize, score: 1.0 };
+        Ok(Response {
+            id: req.id,
+            prediction,
+            service_ms,
+            real_compute_ms: real.as_secs_f64() * 1e3,
+            queue_wait_ms,
+        })
+    }
+}
+
+/// Per-model (gflops, weights_bytes, input_shape) for the synthetic
+/// catalog — the Table III scale the repo's python exporter produces.
+const MODEL_SPECS: &[(&str, f64, u64, [usize; 4])] = &[
+    ("lenet", 0.001, 200_000, [1, 32, 32, 1]),
+    ("mobilenetv1", 0.025, 4_000_000, [1, 64, 64, 3]),
+    ("resnet50", 0.168, 25_000_000, [1, 64, 64, 3]),
+    ("inceptionv4", 0.529, 43_000_000, [1, 75, 75, 3]),
+];
+
+/// Build an in-memory artifact catalog covering every Table III model ×
+/// Table I accelerated variant, with manifests carrying the measured
+/// GFLOPs/weight scales.  No files are read or written: simulated pods
+/// never open `model.hlo.txt`, so the backend can rank and the fabric can
+/// place without `make artifacts` having run.
+pub fn synthetic_catalog() -> Vec<Artifact> {
+    let mut out = Vec::new();
+    for (model, gflops, weights_bytes, input_shape) in MODEL_SPECS {
+        for variant in VARIANTS {
+            let plat = platform::get(variant).expect("catalog variant");
+            let manifest = Manifest {
+                model: model.to_string(),
+                variant: variant.to_string(),
+                platform: plat.hw.to_string(),
+                framework: plat.framework.to_string(),
+                precision: plat.precision.to_string(),
+                mode: if plat.precision == "INT8" { "int8" } else { "fp32" }.to_string(),
+                baseline_of: String::new(),
+                input_shape: input_shape.to_vec(),
+                output_shape: vec![1, 10],
+                params: Vec::new(),
+                fixtures: Vec::new(),
+                param_count: weights_bytes / 4,
+                weights_bytes: *weights_bytes,
+                master_size_mb: *weights_bytes as f64 / 1e6,
+                macs: (*gflops * 5e8) as u64,
+                gflops: *gflops,
+                layers: 0,
+                convert_time_s: 0.0,
+                lower_time_s: 0.0,
+                calibration_scheme: "simulated".to_string(),
+            };
+            out.push(Artifact {
+                dir: PathBuf::from(format!("sim://{model}_{variant}")),
+                manifest,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MODELS;
+
+    #[test]
+    fn catalog_covers_models_times_variants() {
+        let c = synthetic_catalog();
+        assert_eq!(c.len(), MODELS.len() * VARIANTS.len());
+        for a in &c {
+            assert!(a.manifest.gflops > 0.0);
+            assert!(a.manifest.weights_bytes > 0);
+            assert_eq!(a.manifest.input_shape.len(), 4, "NHWC");
+        }
+    }
+
+    #[test]
+    fn sim_pod_records_metrics() {
+        let pod = SimPod::new("GPU", 0.1, 0.0, 7, None).unwrap();
+        let resp = pod
+            .execute(&Request { id: 3, payload: vec![0.0; 4] }, 1.5)
+            .unwrap();
+        assert_eq!(resp.id, 3);
+        assert_eq!(resp.prediction.class, 3);
+        assert!(resp.service_ms > 0.0);
+        assert!((resp.queue_wait_ms - 1.5).abs() < 1e-12);
+        let snap = pod.metrics().snapshot();
+        assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn gate_blocks_until_open() {
+        let gate = Gate::closed_gate();
+        let pod =
+            Arc::new(SimPod::new("CPU", 0.001, 0.0, 1, Some(Arc::clone(&gate))).unwrap());
+        let p2 = Arc::clone(&pod);
+        let h = std::thread::spawn(move || {
+            p2.execute(&Request { id: 0, payload: vec![] }, 0.0).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(pod.metrics().snapshot().requests, 0, "gated executor must not serve");
+        gate.open();
+        let resp = h.join().unwrap();
+        assert_eq!(resp.id, 0);
+        assert_eq!(pod.metrics().snapshot().requests, 1);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(SimPod::new("NPU", 1.0, 0.0, 1, None).is_err());
+    }
+}

@@ -11,12 +11,53 @@
 //!   PTQ calibration, quantization) and AOT export to HLO text
 //!   (`python/compile/`).  Python runs once, at build time.
 //! - **Layer 3 (this crate)** — the TF2AIF system itself: the
-//!   Converter/Composer generation pipeline, the bundle registry, the
-//!   Kubernetes-substrate cluster simulator, the variant-selection
-//!   backend, and the AIF serving runtime over PJRT.
+//!   Converter/Composer generation pipeline ([`converter`], [`composer`],
+//!   [`registry`]), the Kubernetes-substrate cluster simulator
+//!   ([`cluster`]), the variant-selection backend ([`backend`]), the AIF
+//!   serving runtime over PJRT ([`runtime`], [`serving`]), and the
+//!   cluster-scale serving fabric ([`fabric`]) that routes live traffic
+//!   across every placed variant.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every paper table/figure to a module + bench.
+//! See `docs/ARCHITECTURE.md` for the paper-concept → module map and the
+//! request lifecycle, and `docs/CLI.md` for the `tf2aif` command-line
+//! surface.
+//!
+//! ## Worked example: shard a fleet, route traffic, adapt placement
+//!
+//! The fabric runs end-to-end on simulated pods (no artifacts needed), so
+//! this example is self-contained:
+//!
+//! ```
+//! use tf2aif::backend::{Backend, Policy};
+//! use tf2aif::cluster::{paper_testbed, Cluster};
+//! use tf2aif::fabric::{sim, Fabric, FabricConfig};
+//! use tf2aif::workload::Arrival;
+//!
+//! // Table II testbed; the Kube-API extension registers ARM devices.
+//! let mut cluster = Cluster::new(paper_testbed());
+//! cluster.apply_kube_api_extension();
+//!
+//! // Backend indexes one artifact per (model × variant); the fabric
+//! // shards every model across distinct nodes and spawns per-pod
+//! // batcher workers behind bounded admission queues.
+//! let mut backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
+//! let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+//! let fabric = Fabric::place_sim(&backend, &mut cluster, &cfg, None).unwrap();
+//! assert!(fabric.nodes_spanned().len() >= 3);
+//!
+//! // Route a small workload; every request is completed or shed,
+//! // never silently dropped.
+//! let run = fabric.run(32, Arrival::ClosedLoop, 7).unwrap();
+//! assert!(run.fully_accounted());
+//!
+//! // Measured latencies feed back into placement scoring.
+//! backend.feedback = Some(fabric.feedback());
+//! let d = backend.rank("lenet", &cluster).unwrap().remove(0);
+//! assert!(d.estimated_ms.is_finite());
+//! fabric.shutdown();
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod artifact;
 pub mod backend;
@@ -26,6 +67,7 @@ pub mod composer;
 pub mod config;
 pub mod converter;
 pub mod coordinator;
+pub mod fabric;
 pub mod metrics;
 pub mod platform;
 pub mod registry;

@@ -6,6 +6,9 @@
 //! - `verify`   — fixture parity of every artifact through PJRT.
 //! - `serve`    — deploy one AIF and run the generated client against it.
 //! - `cluster`  — Table II cluster simulation + backend auto-placement.
+//! - `fabric`   — cluster-scale serving: shard every AIF across the
+//!   testbed, route an open-loop workload with admission control, report
+//!   per-node + fleet tables (see `docs/CLI.md`).
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
@@ -17,6 +20,7 @@ use tf2aif::client::{Client, ClientConfig};
 use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::config::Config;
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
+use tf2aif::fabric::{sim, Fabric, FabricConfig};
 use tf2aif::report;
 use tf2aif::runtime::Engine;
 use tf2aif::serving::{AifServer, ImageClassify};
@@ -68,6 +72,7 @@ fn run(args: &[String]) -> Result<()> {
         "verify" => cmd_verify(&flags),
         "serve" => cmd_serve(&flags),
         "cluster" => cmd_cluster(&flags),
+        "fabric" => cmd_fabric(&flags),
         "report" => cmd_report(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -86,6 +91,9 @@ fn print_usage() {
          verify   [--artifacts DIR]\n  \
          serve    --aif <model_variant> [--requests N] [--rps R]\n  \
          cluster  [--config FILE] [--policy min-latency|prefer-edge|min-energy] [--model M]\n  \
+         fabric   [--requests N] [--arrival closed|poisson:RPS|uniform:RPS] [--models a,b]\n           \
+         [--replicas N] [--queue N] [--batch N] [--workers N] [--policy P]\n           \
+         [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n  \
          report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
     );
 }
@@ -201,6 +209,127 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     for p in cluster.running_pods() {
         println!("  pod {} {} [{}] on {}", p.id, p.aif, p.variant, p.node);
     }
+    Ok(())
+}
+
+fn cmd_fabric(flags: &Flags) -> Result<()> {
+    // ── Cluster + backend ───────────────────────────────────────────────
+    let mut cluster = match flags.get("--config") {
+        Some(path) => Cluster::from_config(&Config::load(path)?)?,
+        None => Cluster::new(paper_testbed()),
+    };
+    cluster.apply_kube_api_extension();
+    let policy = Policy::parse(flags.get("--policy").unwrap_or("min-latency"))?;
+
+    let real = flags.has("--real");
+    let artifacts = if real {
+        artifact::scan(ARTIFACTS_DIR)?
+    } else {
+        sim::synthetic_catalog()
+    };
+    let artifacts = match flags.get("--models") {
+        Some(ms) => {
+            let wanted = csv_list(Some(ms), &[]);
+            artifacts
+                .into_iter()
+                .filter(|a| wanted.iter().any(|m| *m == a.manifest.model))
+                .collect()
+        }
+        None => artifacts,
+    };
+    if artifacts.is_empty() {
+        bail!("no artifacts to place (with --real, run `tf2aif build` first)");
+    }
+    let mut backend = Backend::new(artifacts, policy);
+
+    let cfg = FabricConfig {
+        queue_capacity: flags.usize_or("--queue", FabricConfig::default().queue_capacity)?,
+        max_batch: flags.usize_or("--batch", FabricConfig::default().max_batch)?,
+        workers: flags.usize_or("--workers", FabricConfig::default().workers)?,
+        replicas_per_model: flags
+            .usize_or("--replicas", FabricConfig::default().replicas_per_model)?,
+        time_scale: match flags.get("--time-scale") {
+            Some(v) => v.parse().with_context(|| format!("bad --time-scale: {v:?}"))?,
+            None => FabricConfig::default().time_scale,
+        },
+        seed: flags.usize_or("--seed", FabricConfig::default().seed as usize)? as u64,
+        ..Default::default()
+    };
+
+    // ── Place + spawn the fleet ─────────────────────────────────────────
+    let fabric = if real {
+        let engine = Engine::cpu()?;
+        Fabric::place_real(&backend, &mut cluster, &engine, &cfg)?
+    } else {
+        Fabric::place_sim(&backend, &mut cluster, &cfg, None)?
+    };
+    // Close the loop: placement scoring now sees fabric measurements.
+    backend.feedback = Some(fabric.feedback());
+
+    println!(
+        "fabric: {} pods over {} nodes ({} mode, queue bound {}, batch {}, {} worker(s)/pod)",
+        fabric.plans().len(),
+        fabric.nodes_spanned().len(),
+        if real { "real PJRT" } else { "simulated" },
+        cfg.queue_capacity,
+        cfg.max_batch,
+        cfg.workers,
+    );
+    for p in fabric.plans() {
+        println!(
+            "  pod {:<3} {:<20} [{:<6}] on {:<4} (modeled {:.2} ms)",
+            p.pod_id, p.aif, p.variant, p.node, p.modeled_ms
+        );
+    }
+
+    // ── Drive the workload ──────────────────────────────────────────────
+    let requests = flags.usize_or("--requests", 1000)?;
+    let arrival = Arrival::parse(flags.get("--arrival").unwrap_or("poisson:500"))?;
+    let seed = flags.usize_or("--run-seed", 7)? as u64;
+    println!("\nrouting {requests} requests ({arrival:?}) across the fleet…");
+    let run = fabric.run(requests, arrival, seed)?;
+
+    println!(
+        "\nrouted {} | completed {} | shed {} | failed {} | wall {:.2}s | {:.1} rps",
+        run.submitted,
+        run.completed,
+        run.shed,
+        run.failed,
+        run.wall_s,
+        run.throughput_rps()
+    );
+    if !run.e2e_ms.is_empty() {
+        let bp = run.e2e_ms.clone().boxplot();
+        println!(
+            "e2e (queue+service): median {:.2} ms  q3 {:.2}  max {:.2}  (* simulated platforms)",
+            bp.median, bp.q3, bp.max
+        );
+    }
+
+    println!("\nper-pod:");
+    let (h, rows) = report::fabric_pods(&fabric.pod_reports(run.wall_s));
+    print!("{}", report::render_table(&h, &rows));
+    report::write_csv("reports/fabric_pods.csv", &h, &rows)?;
+
+    println!("\nfleet:");
+    let (h, rows) = report::fabric_fleet(&fabric.fleet_report(run.wall_s));
+    print!("{}", report::render_table(&h, &rows));
+    report::write_csv("reports/fabric_fleet.csv", &h, &rows)?;
+
+    println!("\nmeasured feedback (model_variant@node → EWMA service ms):");
+    for (key, fb) in fabric.feedback().all() {
+        println!("  {key:<14} {:.2} ms over {} obs", fb.ewma_service_ms, fb.observations);
+    }
+    // Demonstrate the adapted placement scores.
+    if let Some(model) = backend.models().first().map(|m| m.to_string()) {
+        if let Ok(d) = backend.select(&model, &cluster) {
+            println!(
+                "\nre-ranked {model}: {} on {} (modeled {:.2} ms → estimated {:.2} ms)",
+                d.variant, d.node, d.modeled_ms, d.estimated_ms
+            );
+        }
+    }
+    fabric.shutdown();
     Ok(())
 }
 

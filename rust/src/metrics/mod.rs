@@ -11,6 +11,7 @@
 //!   the paper's heterogeneous testbed would have reported; clearly
 //!   labelled simulated in every report).
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -19,20 +20,53 @@ use crate::util::stats::{Boxplot, Series};
 /// Point-in-time snapshot of one server's counters.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
+    /// Requests served.
     pub requests: u64,
+    /// Failed requests.
     pub errors: u64,
+    /// Simulated platform service latencies, ms.
     pub service_ms: Series,
+    /// Measured PJRT compute latencies, ms.
     pub real_compute_ms: Series,
+    /// Time spent queued before execution, ms.
     pub queue_wait_ms: Series,
 }
 
 impl Snapshot {
+    /// Boxplot of the simulated service-latency channel.
     pub fn service_boxplot(&self) -> Boxplot {
         self.service_ms.clone().boxplot()
     }
 
+    /// Boxplot of the measured PJRT-compute channel.
     pub fn real_boxplot(&self) -> Boxplot {
         self.real_compute_ms.clone().boxplot()
+    }
+
+    /// An empty snapshot (identity element for [`Snapshot::merged`]).
+    pub fn empty() -> Snapshot {
+        Snapshot {
+            requests: 0,
+            errors: 0,
+            service_ms: Series::new(),
+            real_compute_ms: Series::new(),
+            queue_wait_ms: Series::new(),
+        }
+    }
+
+    /// Merge per-server snapshots into one fleet-aggregate snapshot
+    /// (counter sums, concatenated sample series) — the data behind the
+    /// fabric's fleet table.
+    pub fn merged(snaps: impl IntoIterator<Item = Snapshot>) -> Snapshot {
+        let mut out = Snapshot::empty();
+        for s in snaps {
+            out.requests += s.requests;
+            out.errors += s.errors;
+            out.service_ms.extend(s.service_ms.samples().iter().copied());
+            out.real_compute_ms.extend(s.real_compute_ms.samples().iter().copied());
+            out.queue_wait_ms.extend(s.queue_wait_ms.samples().iter().copied());
+        }
+        out
     }
 }
 
@@ -52,10 +86,12 @@ struct Inner {
 }
 
 impl Collector {
+    /// A fresh collector.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one served request's latencies.
     pub fn record(&self, service_ms: f64, real_compute: Duration, queue_wait: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
@@ -64,10 +100,12 @@ impl Collector {
         g.queue_wait_ms.push(queue_wait.as_secs_f64() * 1e3);
     }
 
+    /// Count one failed request.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Point-in-time copy of the counters.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -77,6 +115,86 @@ impl Collector {
             real_compute_ms: g.real_compute_ms.clone(),
             queue_wait_ms: g.queue_wait_ms.clone(),
         }
+    }
+}
+
+/// One pod's exponentially-weighted performance observation.
+#[derive(Debug, Clone, Copy)]
+pub struct Feedback {
+    /// EWMA of observed service latency, ms.
+    pub ewma_service_ms: f64,
+    /// Number of observations folded into the EWMA.
+    pub observations: u64,
+}
+
+/// Shared store of measured per-pod serving performance, keyed by
+/// `model_variant@node` (see [`FeedbackStore::key`]).  The AIF identity
+/// (not just the variant) is part of the key: two models sharing a
+/// (variant, node) pair can differ in compute cost by orders of
+/// magnitude, so their observations must never mix.
+///
+/// The serving fabric's workers feed completed-request latencies in; the
+/// router and `backend::Backend::rank` read blended estimates out, which
+/// is how placement and routing adapt to *measured* performance instead
+/// of the static platform cost models (ROADMAP: close the
+/// placement→serving loop).
+#[derive(Debug)]
+pub struct FeedbackStore {
+    alpha: f64,
+    inner: Mutex<BTreeMap<String, Feedback>>,
+}
+
+impl FeedbackStore {
+    /// Create a store with EWMA smoothing factor `alpha` in (0, 1];
+    /// higher alpha weighs recent observations more.
+    pub fn new(alpha: f64) -> FeedbackStore {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        FeedbackStore { alpha, inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Canonical observation key for an (AIF, node) pod placement,
+    /// where `aif` is the `model_variant` identity.
+    pub fn key(aif: &str, node: &str) -> String {
+        format!("{aif}@{node}")
+    }
+
+    /// Fold one observed service latency into the pod's EWMA.
+    pub fn observe(&self, key: &str, service_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        match g.get_mut(key) {
+            Some(f) => {
+                f.ewma_service_ms = self.alpha * service_ms + (1.0 - self.alpha) * f.ewma_service_ms;
+                f.observations += 1;
+            }
+            None => {
+                g.insert(key.to_string(), Feedback { ewma_service_ms: service_ms, observations: 1 });
+            }
+        }
+    }
+
+    /// Current observation for a pod, if any.
+    pub fn get(&self, key: &str) -> Option<Feedback> {
+        self.inner.lock().unwrap().get(key).copied()
+    }
+
+    /// Blend a modeled latency with the measured EWMA.  With no
+    /// observations this returns `modeled_ms` unchanged; confidence in
+    /// the measurement grows with the observation count (capped at 90%),
+    /// so a cold pod is ranked by the cost model and a warm pod by what
+    /// it actually delivered.
+    pub fn blend(&self, key: &str, modeled_ms: f64) -> f64 {
+        match self.get(key) {
+            None => modeled_ms,
+            Some(f) => {
+                let w = (f.observations as f64 / (f.observations as f64 + 5.0)).min(0.9);
+                (1.0 - w) * modeled_ms + w * f.ewma_service_ms
+            }
+        }
+    }
+
+    /// Copy of every (key, feedback) pair, for reporting.
+    pub fn all(&self) -> BTreeMap<String, Feedback> {
+        self.inner.lock().unwrap().clone()
     }
 }
 
@@ -115,5 +233,50 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.snapshot().requests, 800);
+    }
+
+    #[test]
+    fn merged_snapshot_aggregates() {
+        let a = Collector::new();
+        a.record(5.0, Duration::ZERO, Duration::ZERO);
+        a.record_error();
+        let b = Collector::new();
+        b.record(7.0, Duration::ZERO, Duration::from_millis(2));
+        b.record(9.0, Duration::ZERO, Duration::ZERO);
+        let m = Snapshot::merged([a.snapshot(), b.snapshot()]);
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.service_ms.len(), 3);
+        assert!((m.service_boxplot().mean - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feedback_blend_warms_up() {
+        let f = FeedbackStore::new(0.5);
+        let key = FeedbackStore::key("inceptionv4_GPU", "NE-2");
+        assert_eq!(key, "inceptionv4_GPU@NE-2");
+        // Cold: pure model.
+        assert_eq!(f.blend(&key, 10.0), 10.0);
+        // One observation at 2 ms: estimate moves toward measurement.
+        f.observe(&key, 2.0);
+        let est1 = f.blend(&key, 10.0);
+        assert!(est1 < 10.0 && est1 > 2.0, "{est1}");
+        // Many observations: estimate approaches the EWMA (90% cap).
+        for _ in 0..100 {
+            f.observe(&key, 2.0);
+        }
+        let est2 = f.blend(&key, 10.0);
+        assert!(est2 < est1);
+        assert!((est2 - (0.1 * 10.0 + 0.9 * 2.0)).abs() < 1e-9, "{est2}");
+    }
+
+    #[test]
+    fn feedback_ewma_tracks_recent() {
+        let f = FeedbackStore::new(0.5);
+        f.observe("k", 10.0);
+        f.observe("k", 20.0);
+        let fb = f.get("k").unwrap();
+        assert_eq!(fb.observations, 2);
+        assert!((fb.ewma_service_ms - 15.0).abs() < 1e-12);
     }
 }

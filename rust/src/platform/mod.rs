@@ -110,6 +110,7 @@ pub const PLATFORMS: &[Platform] = &[
     },
 ];
 
+/// Look up a platform by variant name (`*_TF` maps to its base platform).
 pub fn get(name: &str) -> Option<&'static Platform> {
     // `*_TF` baselines map onto the same hardware's native path.
     let base = name.strip_suffix("_TF").unwrap_or(name);

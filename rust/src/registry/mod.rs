@@ -22,6 +22,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Open (creating directories if needed) a registry rooted at `root`.
     pub fn open(root: impl AsRef<Path>) -> Result<Registry> {
         let root = root.as_ref().to_path_buf();
         std::fs::create_dir_all(root.join("blobs"))?;
@@ -143,9 +144,13 @@ impl Registry {
 }
 
 #[derive(Debug, Clone)]
+/// Registry storage accounting.
 pub struct RegistryStats {
+    /// Unique layer blobs stored.
     pub blobs: usize,
+    /// Total blob bytes.
     pub bytes: u64,
+    /// Tag counts by bundle kind.
     pub tags_by_kind: BTreeMap<String, usize>,
 }
 

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::artifact::Artifact;
 use crate::cluster::NodeSpec;
+use crate::fabric::{FleetReport, PodReport};
 use crate::platform::PLATFORMS;
 use crate::util::stats::Boxplot;
 
@@ -147,13 +148,19 @@ pub fn table3(artifacts: &[Artifact]) -> (Vec<&'static str>, Vec<Vec<String>>) {
 /// One Fig. 3 row: generation time split per variant.
 #[derive(Debug, Clone)]
 pub struct GenRow {
+    /// Model name.
     pub model: String,
+    /// Variant generated.
     pub variant: String,
+    /// Conversion time (python + DPU compile), s.
     pub convert_s: f64,
+    /// Compose time, s.
     pub compose_s: f64,
+    /// Server bundle size, MB.
     pub bundle_mb: f64,
 }
 
+/// Render Fig. 3 rows (generation-time split).
 pub fn fig3(rows: &[GenRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers =
         vec!["Model", "Variant", "Convert (s)", "Compose (s)", "Total (s)", "Bundle (MB)"];
@@ -176,15 +183,19 @@ pub fn fig3(rows: &[GenRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
 /// One Fig. 4 row: latency boxplot for one (model, variant).
 #[derive(Debug, Clone)]
 pub struct LatencyRow {
+    /// Model name.
     pub model: String,
+    /// Variant measured.
     pub variant: String,
     /// Simulated platform service latency (labelled as such).
     pub service: Boxplot,
     /// Real measured PJRT compute on this testbed.
     pub real_mean_ms: f64,
+    /// Sample count of the service series.
     pub requests: usize,
 }
 
+/// Render Fig. 4 rows (latency five-number summaries).
 pub fn fig4(rows: &[LatencyRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "Model",
@@ -221,18 +232,24 @@ pub fn fig4(rows: &[LatencyRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
 /// One Fig. 5 row: accelerated vs native mean latency per platform/model.
 #[derive(Debug, Clone)]
 pub struct SpeedupRow {
+    /// Model name.
     pub model: String,
+    /// Platform measured.
     pub platform: String,
+    /// Accelerated-path mean service latency, ms.
     pub accel_mean_ms: f64,
+    /// Native-TF mean service latency, ms.
     pub native_mean_ms: f64,
 }
 
 impl SpeedupRow {
+    /// Native/accelerated mean-latency ratio.
     pub fn speedup(&self) -> f64 {
         self.native_mean_ms / self.accel_mean_ms
     }
 }
 
+/// Render Fig. 5 rows (accelerated vs native).
 pub fn fig5(rows: &[SpeedupRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "Platform",
@@ -263,6 +280,80 @@ pub fn fig5(rows: &[SpeedupRow]) -> (Vec<&'static str>, Vec<Vec<String>>) {
         })
         .collect();
     (headers, out)
+}
+
+/// Fabric per-pod table: one row per placed pod with its latency
+/// five-number summary, queue wait and throughput (* marks the simulated
+/// service channel, as in Fig. 4).
+pub fn fabric_pods(rows: &[PodReport]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "AIF",
+        "variant",
+        "node",
+        "served",
+        "errors",
+        "median (ms)*",
+        "p75*",
+        "max*",
+        "queue wait (ms)",
+        "rps",
+    ];
+    let fmt = |b: &Option<Boxplot>, f: fn(&Boxplot) -> f64| match b {
+        Some(b) => format!("{:.2}", f(b)),
+        None => "-".into(),
+    };
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.aif.clone(),
+                r.variant.clone(),
+                r.node.clone(),
+                r.requests.to_string(),
+                r.errors.to_string(),
+                fmt(&r.service, |b| b.median),
+                fmt(&r.service, |b| b.q3),
+                fmt(&r.service, |b| b.max),
+                format!("{:.2}", r.mean_queue_wait_ms),
+                format!("{:.1}", r.throughput_rps),
+            ]
+        })
+        .collect();
+    (headers, out)
+}
+
+/// Fabric fleet-aggregate table: a single row summarizing the whole
+/// deployment (pods, nodes, served/shed counters, merged latency).
+pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "pods",
+        "nodes",
+        "served",
+        "errors",
+        "shed",
+        "median (ms)*",
+        "p75*",
+        "max*",
+        "queue wait (ms)",
+        "fleet rps",
+    ];
+    let fmt = |f: fn(&Boxplot) -> f64| match &fleet.service {
+        Some(b) => format!("{:.2}", f(b)),
+        None => "-".into(),
+    };
+    let row = vec![
+        fleet.pods.to_string(),
+        fleet.nodes.to_string(),
+        fleet.requests.to_string(),
+        fleet.errors.to_string(),
+        fleet.shed.to_string(),
+        fmt(|b| b.median),
+        fmt(|b| b.q3),
+        fmt(|b| b.max),
+        format!("{:.2}", fleet.mean_queue_wait_ms),
+        format!("{:.1}", fleet.throughput_rps),
+    ];
+    (headers, vec![row])
 }
 
 /// Per-platform average speedups (the Fig. 5 headline vector).
@@ -305,6 +396,49 @@ mod tests {
             native_mean_ms: 15.0,
         };
         assert!((r.speedup() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fabric_tables_render_idle_and_busy_pods() {
+        let busy = PodReport {
+            aif: "lenet_CPU".into(),
+            variant: "CPU".into(),
+            node: "NE-1".into(),
+            requests: 10,
+            errors: 0,
+            service: Some(Boxplot {
+                min: 1.0,
+                q1: 1.5,
+                median: 2.0,
+                q3: 2.5,
+                max: 3.0,
+                mean: 2.0,
+                n: 10,
+            }),
+            mean_queue_wait_ms: 0.4,
+            throughput_rps: 123.4,
+        };
+        let idle = PodReport { requests: 0, service: None, ..busy.clone() };
+        let (h, rows) = fabric_pods(&[busy, idle]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), h.len());
+        assert_eq!(rows[0][5], "2.00");
+        assert_eq!(rows[1][5], "-", "idle pod renders dashes, not a panic");
+
+        let fleet = FleetReport {
+            pods: 2,
+            nodes: 1,
+            requests: 10,
+            errors: 0,
+            shed: 3,
+            service: None,
+            mean_queue_wait_ms: 0.0,
+            throughput_rps: 99.0,
+        };
+        let (h, rows) = fabric_fleet(&fleet);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), h.len());
+        assert_eq!(rows[0][4], "3", "shed count is reported");
     }
 
     #[test]

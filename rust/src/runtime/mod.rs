@@ -226,6 +226,7 @@ impl Engine {
         rrx.recv().context("runtime host dropped reply")
     }
 
+    /// Platform name of the backing PJRT client ("unavailable" if the host died).
     pub fn platform_name(&self) -> String {
         self.platform_name_checked().unwrap_or_else(|_| "unavailable".into())
     }
@@ -256,10 +257,15 @@ impl Engine {
 pub struct LoadedModel {
     tx: mpsc::Sender<Cmd>,
     slot: usize,
+    /// NHWC input shape from the manifest.
     pub input_shape: Vec<usize>,
+    /// Number of output logits.
     pub output_elems: usize,
+    /// Artifact identity (`model_variant`).
     pub id: String,
+    /// Wall seconds spent compiling the HLO.
     pub compile_time_s: f64,
+    /// Wall seconds spent pinning weights on-device.
     pub weight_upload_time_s: f64,
     num_weights: usize,
 }
@@ -286,6 +292,7 @@ impl LoadedModel {
         let _ = self.tx.send(Cmd::Unload(self.slot));
     }
 
+    /// Number of weight tensors pinned on-device.
     pub fn num_weights(&self) -> usize {
         self.num_weights
     }

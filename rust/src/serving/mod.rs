@@ -34,7 +34,9 @@ pub trait PrePost: Send + Sync {
 /// Top-1 classification result.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Prediction {
+    /// Predicted class index.
     pub class: usize,
+    /// Score of the predicted class.
     pub score: f32,
 }
 
@@ -67,14 +69,18 @@ impl PrePost for ImageClassify {
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-assigned request id.
     pub id: u64,
+    /// Raw input payload (preprocess runs server-side).
     pub payload: Vec<f32>,
 }
 
 /// One inference response with both latency channels.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Id of the answered request.
     pub id: u64,
+    /// The model's prediction.
     pub prediction: Prediction,
     /// Simulated service latency on the variant's platform (cost model).
     pub service_ms: f64,
@@ -86,13 +92,17 @@ pub struct Response {
 
 /// A deployed AIF service instance.
 pub struct AifServer {
+    /// The compiled, weight-pinned model.
     pub model: LoadedModel,
+    /// Platform variant served.
     pub variant: String,
+    /// Model name.
     pub model_name: String,
     platform: &'static Platform,
     native: bool,
     gflops: f64,
     prepost: Arc<dyn PrePost>,
+    /// Per-server metrics collector.
     pub metrics: Arc<Collector>,
     rng: std::sync::Mutex<Rng>,
 }
@@ -127,7 +137,10 @@ impl AifServer {
         self.handle_queued(req, 0.0)
     }
 
-    fn handle_queued(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+    /// Handle one request that already waited `queue_wait_ms` in an
+    /// external queue (the fabric's per-node batchers use this so queue
+    /// time is attributed in the metrics).
+    pub fn handle_queued(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
         let input = self.prepost.preprocess(&req.payload);
         let t0 = Instant::now();
         // Owned handoff: no second copy of the activation (§Perf L3-1).
@@ -163,10 +176,12 @@ impl AifServer {
         self.platform
     }
 
+    /// Model compute cost in GFLOPs (from the manifest).
     pub fn gflops(&self) -> f64 {
         self.gflops
     }
 
+    /// Whether this is a native `*_TF` baseline variant.
     pub fn is_native(&self) -> bool {
         self.native
     }
@@ -192,6 +207,7 @@ impl Default for BatcherConfig {
 pub struct ServerHandle {
     tx: mpsc::Sender<(Request, Instant, mpsc::Sender<Result<Response, String>>)>,
     workers: Vec<thread::JoinHandle<()>>,
+    /// Requests submitted but not yet answered.
     pub inflight: Arc<AtomicU64>,
 }
 

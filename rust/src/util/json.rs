@@ -7,30 +7,56 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (kept as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+/// Errors produced by parsing or typed access.  (Hand-implemented
+/// `Display`/`Error` — the vendored set carries no `thiserror`.)
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
+    /// Syntax error at a byte offset.
     Parse(usize, String),
-    #[error("json type error: expected {expected} at {path}")]
-    Type { expected: &'static str, path: String },
-    #[error("json missing key {0:?}")]
+    /// A value had the wrong JSON type.
+    Type {
+        /// The type the accessor wanted.
+        expected: &'static str,
+        /// Where in the document (best-effort key path).
+        path: String,
+    },
+    /// A required object key was absent.
     Missing(String),
 }
 
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "json parse error at byte {at}: {msg}"),
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: src.as_bytes(), i: 0 };
         p.skip_ws();
@@ -43,6 +69,7 @@ impl Json {
     }
 
     // -- typed accessors ----------------------------------------------------
+    /// Required object key lookup.
     pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| JsonError::Missing(key.into())),
@@ -50,6 +77,7 @@ impl Json {
         }
     }
 
+    /// Optional object key lookup.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -57,6 +85,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string.
     pub fn str(&self) -> Result<&str, JsonError> {
         match self {
             Json::Str(s) => Ok(s),
@@ -64,6 +93,7 @@ impl Json {
         }
     }
 
+    /// Read as a number.
     pub fn f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -71,6 +101,7 @@ impl Json {
         }
     }
 
+    /// Read as a lossless unsigned integer.
     pub fn u64(&self) -> Result<u64, JsonError> {
         let n = self.f64()?;
         if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) {
@@ -80,10 +111,12 @@ impl Json {
         }
     }
 
+    /// Read as a lossless `usize`.
     pub fn usize(&self) -> Result<usize, JsonError> {
         Ok(self.u64()? as usize)
     }
 
+    /// Borrow as an array.
     pub fn arr(&self) -> Result<&[Json], JsonError> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -91,6 +124,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object.
     pub fn obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -166,10 +200,12 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// String value builder.
 pub fn s(v: impl Into<String>) -> Json {
     Json::Str(v.into())
 }
 
+/// Number value builder.
 pub fn n(v: f64) -> Json {
     Json::Num(v)
 }

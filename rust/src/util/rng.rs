@@ -9,6 +9,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64-expanded into the xoshiro state).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the xoshiro state.
         let mut x = seed;
@@ -22,6 +23,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

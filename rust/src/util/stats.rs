@@ -14,38 +14,51 @@ pub struct Series {
 /// Five-number summary + mean, the boxplot glyph of Fig. 4.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Boxplot {
+    /// Minimum sample.
     pub min: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Maximum sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl Series {
+    /// An empty series.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one sample.
     pub fn push(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Append many samples.
     pub fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
         self.samples.extend(vs);
         self.sorted = false;
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether the series has no samples.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -53,6 +66,7 @@ impl Series {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Sample standard deviation (0 for fewer than two samples).
     pub fn std(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -84,6 +98,7 @@ impl Series {
         self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
     }
 
+    /// Five-number summary plus mean.
     pub fn boxplot(&mut self) -> Boxplot {
         Boxplot {
             min: self.percentile(0.0),
@@ -96,6 +111,7 @@ impl Series {
         }
     }
 
+    /// Borrow the raw samples (insertion order).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }

@@ -15,6 +15,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `threads` workers.
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -34,6 +35,7 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    /// Queue a job on the pool.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

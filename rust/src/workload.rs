@@ -59,6 +59,29 @@ pub enum Arrival {
 }
 
 impl Arrival {
+    /// Parse the CLI syntax: `closed`, `poisson:<rps>` or
+    /// `uniform:<rps>`.
+    pub fn parse(s: &str) -> anyhow::Result<Arrival> {
+        if s == "closed" || s == "closed-loop" {
+            return Ok(Arrival::ClosedLoop);
+        }
+        let parse_rps = |r: &str| -> anyhow::Result<f64> {
+            let rps: f64 =
+                r.parse().map_err(|_| anyhow::anyhow!("bad arrival rate {r:?}"))?;
+            if !(rps > 0.0) {
+                anyhow::bail!("arrival rate must be positive, got {rps}");
+            }
+            Ok(rps)
+        };
+        match s.split_once(':') {
+            Some(("poisson", r)) => Ok(Arrival::Poisson { rps: parse_rps(r)? }),
+            Some(("uniform", r)) => Ok(Arrival::Uniform { rps: parse_rps(r)? }),
+            _ => anyhow::bail!(
+                "unknown arrival {s:?} (expected closed, poisson:<rps> or uniform:<rps>)"
+            ),
+        }
+    }
+
     /// Next inter-arrival gap in seconds (None for closed-loop).
     pub fn next_gap_s(&self, rng: &mut Rng) -> Option<f64> {
         match self {
@@ -106,5 +129,15 @@ mod tests {
     fn closed_loop_has_no_gap() {
         let mut rng = Rng::new(2);
         assert_eq!(Arrival::ClosedLoop.next_gap_s(&mut rng), None);
+    }
+
+    #[test]
+    fn arrival_parse_cli_syntax() {
+        assert_eq!(Arrival::parse("closed").unwrap(), Arrival::ClosedLoop);
+        assert_eq!(Arrival::parse("poisson:250").unwrap(), Arrival::Poisson { rps: 250.0 });
+        assert_eq!(Arrival::parse("uniform:10.5").unwrap(), Arrival::Uniform { rps: 10.5 });
+        assert!(Arrival::parse("poisson:-1").is_err());
+        assert!(Arrival::parse("burst:9").is_err());
+        assert!(Arrival::parse("poisson:abc").is_err());
     }
 }

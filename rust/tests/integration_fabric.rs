@@ -1,0 +1,225 @@
+//! Integration: the cluster-scale serving fabric — placement across the
+//! paper testbed, routed traffic, deterministic load-shedding at the
+//! admission bound, full request accounting, and the measurement→
+//! placement feedback loop.
+//!
+//! Runs entirely on the simulated executors (synthetic catalog + platform
+//! cost models), so no `make artifacts` is needed.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::fabric::sim::{synthetic_catalog, Gate};
+use tf2aif::fabric::{Fabric, FabricConfig, Outcome, Submission};
+use tf2aif::metrics::FeedbackStore;
+use tf2aif::workload::Arrival;
+
+fn testbed() -> Cluster {
+    let mut c = Cluster::new(paper_testbed());
+    c.apply_kube_api_extension();
+    c
+}
+
+fn place(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
+    let backend = Backend::new(synthetic_catalog(), Policy::MinLatency);
+    let mut cluster = testbed();
+    Fabric::place_sim(&backend, &mut cluster, cfg, gate).unwrap()
+}
+
+#[test]
+fn fleet_spans_all_three_testbed_nodes() {
+    let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+    let fabric = place(&cfg, None);
+    let nodes = fabric.nodes_spanned();
+    for n in ["NE-1", "NE-2", "FE"] {
+        assert!(nodes.contains(n), "fleet missing node {n}: {nodes:?}");
+    }
+    // Every model got at least one pod, none more than the replica cap,
+    // and replica nodes are distinct.
+    for model in fabric.models() {
+        let pods: Vec<_> =
+            fabric.plans().into_iter().filter(|p| p.model == model).collect();
+        assert!(!pods.is_empty(), "{model} unplaced");
+        assert!(pods.len() <= cfg.replicas_per_model);
+        let distinct: BTreeSet<_> = pods.iter().map(|p| p.node.clone()).collect();
+        assert_eq!(distinct.len(), pods.len(), "{model} replicas share a node");
+    }
+    fabric.shutdown();
+}
+
+#[test]
+fn poisson_overload_routes_across_nodes_and_accounts_every_request() {
+    // Small queues + full-latency simulated pods: the Poisson burst
+    // builds real backlog, so the least-estimated-work router must spill
+    // every model onto its 2nd and 3rd replicas (backlog multiplies each
+    // pod's score) before shedding.
+    let cfg = FabricConfig {
+        queue_capacity: 2,
+        max_batch: 2,
+        workers: 1,
+        // 5× the modeled latency really slept: drain (≈0.7k rps/model)
+        // is far below the offered load, so queues must overflow.
+        time_scale: 5.0,
+        ..Default::default()
+    };
+    let fabric = place(&cfg, None);
+    let run = fabric.run(400, Arrival::Poisson { rps: 50_000.0 }, 9).unwrap();
+    assert!(run.fully_accounted(), "completed+failed+shed must equal submitted");
+    assert_eq!(run.failed, 0, "simulated pods never fail");
+    assert!(run.completed > 0);
+    assert!(run.shed > 0, "sustained overload of bounded queues must shed");
+    // Backlog-aware routing reached the whole testbed.
+    let busy_nodes: BTreeSet<_> = fabric
+        .pod_reports(run.wall_s)
+        .into_iter()
+        .filter(|r| r.requests > 0)
+        .map(|r| r.node)
+        .collect();
+    assert!(busy_nodes.len() >= 3, "traffic only reached {busy_nodes:?}");
+    // Fleet aggregate matches the run accounting.
+    let fleet = fabric.fleet_report(run.wall_s);
+    assert_eq!(fleet.requests as usize, run.completed);
+    assert_eq!(fleet.shed as usize, run.shed);
+    assert!(fleet.service.is_some());
+    fabric.shutdown();
+}
+
+#[test]
+fn shedding_kicks_in_exactly_at_the_admission_bound() {
+    // Gate the executors closed so nothing drains, then flood one model.
+    // Deterministic capacity while gated: every replica queue holds
+    // `queue_capacity`, and each worker can hold one in-flight batch of
+    // up to `max_batch` requests it popped before blocking on the gate.
+    let cfg = FabricConfig {
+        queue_capacity: 8,
+        max_batch: 4,
+        workers: 1,
+        time_scale: 0.0,
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place(&cfg, Some(Arc::clone(&gate)));
+    let model = "lenet";
+    let replicas = fabric
+        .plans()
+        .into_iter()
+        .filter(|p| p.model == model)
+        .count();
+    assert!(replicas >= 2, "need sharded replicas for this test");
+    let max_admitted = replicas * (cfg.queue_capacity + cfg.workers * cfg.max_batch);
+
+    let flood = max_admitted + 50;
+    let mut pending = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..flood {
+        match fabric.submit(model, vec![0.0; 4]).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => shed += 1,
+        }
+    }
+    assert!(shed >= 50, "flood past the bound must shed, got {shed}");
+    assert!(
+        pending.len() <= max_admitted,
+        "admitted {} > deterministic bound {max_admitted}",
+        pending.len()
+    );
+    assert_eq!(pending.len() + shed, flood, "no request may vanish at submit");
+    assert_eq!(fabric.shed_total() as usize, shed);
+    assert_eq!(fabric.shed_by_model().get(model).copied().unwrap_or(0) as usize, shed);
+
+    // Open the gate: every admitted request must complete — shedding is
+    // explicit, never a silent drop.
+    gate.open();
+    let mut completed = 0usize;
+    for rx in pending {
+        match rx.recv().expect("worker must answer every admitted request") {
+            Outcome::Completed(resp) => {
+                completed += 1;
+                assert!(resp.service_ms > 0.0);
+            }
+            Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    assert_eq!(completed + shed, flood);
+    fabric.shutdown();
+}
+
+#[test]
+fn measured_latency_feeds_back_into_placement_scores() {
+    let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+    let fabric = place(&cfg, None);
+    let run = fabric.run(200, Arrival::ClosedLoop, 5).unwrap();
+    assert!(run.completed > 0);
+
+    // The store the fabric filled re-scores a backend's rankings.
+    let store = fabric.feedback();
+    assert!(!store.all().is_empty());
+    let mut backend = Backend::new(synthetic_catalog(), Policy::MinLatency);
+    backend.feedback = Some(Arc::clone(&store));
+    let cluster = testbed();
+    let mut observed_placements = 0usize;
+    for d in backend.rank("inceptionv4", &cluster).unwrap() {
+        let key = FeedbackStore::key(&d.aif, &d.node);
+        match store.get(&key) {
+            Some(fb) => {
+                observed_placements += 1;
+                // rank must have plumbed exactly the store's blend in.
+                let expect = store.blend(&key, d.modeled_ms);
+                assert!(
+                    (d.estimated_ms - expect).abs() < 1e-9,
+                    "{key}: estimated {} != blend {expect}",
+                    d.estimated_ms
+                );
+                // With a real measurement the estimate must have moved
+                // off the pure cost model (noise makes ties a.s. absent).
+                if (fb.ewma_service_ms - d.modeled_ms).abs() > 1e-9 {
+                    assert_ne!(d.estimated_ms, d.modeled_ms, "{key}: feedback ignored");
+                }
+            }
+            None => assert_eq!(d.estimated_ms, d.modeled_ms, "no obs → pure model"),
+        }
+        assert!(d.estimated_ms.is_finite());
+    }
+    assert!(
+        observed_placements > 0,
+        "routed traffic must have produced observations for ranked placements"
+    );
+    fabric.shutdown();
+}
+
+#[test]
+fn queue_bound_sheds_under_sustained_overload_then_recovers() {
+    // Slow pods (time_scale 1.0 → real sleeps at full modeled latency)
+    // and tiny queues: an instantaneous burst must shed; after draining,
+    // a trickle must be admitted again.
+    let cfg = FabricConfig {
+        queue_capacity: 2,
+        max_batch: 1,
+        workers: 1,
+        replicas_per_model: 1,
+        time_scale: 1.0,
+        ..Default::default()
+    };
+    let fabric = place(&cfg, None);
+    let model = "inceptionv4";
+    let mut pending = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..64 {
+        match fabric.submit(model, vec![0.0; 4]).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => shed += 1,
+        }
+    }
+    assert!(shed > 0, "64-deep instantaneous burst into a 2-deep queue must shed");
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    // Recovered: a single request is admitted again.
+    assert!(matches!(
+        fabric.submit(model, vec![0.0; 4]).unwrap(),
+        Submission::Enqueued(_)
+    ));
+    fabric.shutdown();
+}

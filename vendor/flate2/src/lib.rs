@@ -1,0 +1,250 @@
+//! In-repo substrate for the `flate2` crate.
+//!
+//! Provides `write::GzEncoder` and `read::GzDecoder` over the gzip
+//! container format (RFC 1952).  The deflate payload uses **stored
+//! (uncompressed) blocks** only (RFC 1951 §3.2.4): output is a fully
+//! spec-compliant gzip stream any decompressor can read, but no actual
+//! compression is performed — the build environment vendors no DEFLATE
+//! implementation and the workspace only round-trips its own archives.
+//! The decoder accordingly accepts the stored-block streams this encoder
+//! emits (and errors clearly on Huffman-compressed input).
+
+use std::io::{self, Read, Write};
+
+/// Compression level selector (accepted for API compatibility; stored
+/// blocks ignore it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    /// Fastest setting.
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    /// Best-ratio setting.
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    /// No compression.
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    /// The numeric level.
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+/// IEEE CRC-32 (the gzip checksum), bitwise implementation with a
+/// lazily-built table.
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, e) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *e = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Writer-side encoders.
+pub mod write {
+    use super::*;
+
+    /// Gzip encoder wrapping a `Write` sink; buffers the payload and
+    /// emits the gzip stream on [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        /// Wrap `inner`; `level` is accepted for API compatibility.
+        pub fn new(inner: W, _level: Compression) -> GzEncoder<W> {
+            GzEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Emit the gzip stream and return the underlying writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // Header: magic, CM=deflate, no flags, no mtime, XFL=0, OS=unknown.
+            self.inner.write_all(&[0x1F, 0x8B, 8, 0, 0, 0, 0, 0, 0, 0xFF])?;
+            // Deflate payload: stored blocks of up to 65535 bytes.
+            let mut chunks = self.buf.chunks(0xFFFF).peekable();
+            if chunks.peek().is_none() {
+                // Empty payload still needs one final stored block.
+                self.inner.write_all(&[0x01, 0x00, 0x00, 0xFF, 0xFF])?;
+            }
+            while let Some(chunk) = chunks.next() {
+                let bfinal = if chunks.peek().is_none() { 1u8 } else { 0u8 };
+                let len = chunk.len() as u16;
+                self.inner.write_all(&[bfinal])?;
+                self.inner.write_all(&len.to_le_bytes())?;
+                self.inner.write_all(&(!len).to_le_bytes())?;
+                self.inner.write_all(chunk)?;
+            }
+            // Trailer: CRC32 + ISIZE (mod 2^32), little-endian.
+            self.inner.write_all(&crc32(&self.buf).to_le_bytes())?;
+            self.inner
+                .write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+/// Reader-side decoders.
+pub mod read {
+    use super::*;
+
+    /// Gzip decoder wrapping a `Read` source; decodes eagerly on first
+    /// read.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        /// Wrap a gzip stream.
+        pub fn new(inner: R) -> GzDecoder<R> {
+            GzDecoder { inner: Some(inner), out: Vec::new(), pos: 0 }
+        }
+
+        fn decode_all(&mut self) -> io::Result<()> {
+            let Some(mut r) = self.inner.take() else { return Ok(()) };
+            let mut raw = Vec::new();
+            r.read_to_end(&mut raw)?;
+            let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+            if raw.len() < 18 || raw[0] != 0x1F || raw[1] != 0x8B || raw[2] != 8 {
+                return Err(bad("not a gzip stream"));
+            }
+            if raw[3] != 0 {
+                return Err(bad("gzip FLG bits unsupported by the in-repo substrate"));
+            }
+            let mut i = 10usize;
+            loop {
+                if i >= raw.len() {
+                    return Err(bad("truncated deflate stream"));
+                }
+                let hdr = raw[i];
+                i += 1;
+                let bfinal = hdr & 1;
+                let btype = (hdr >> 1) & 3;
+                if btype != 0 {
+                    return Err(bad(
+                        "compressed deflate block: the in-repo substrate reads only the \
+                         stored blocks its own encoder emits",
+                    ));
+                }
+                if i + 4 > raw.len() {
+                    return Err(bad("truncated stored-block header"));
+                }
+                let len = u16::from_le_bytes([raw[i], raw[i + 1]]) as usize;
+                let nlen = u16::from_le_bytes([raw[i + 2], raw[i + 3]]);
+                if nlen != !(len as u16) {
+                    return Err(bad("stored-block LEN/NLEN mismatch"));
+                }
+                i += 4;
+                if i + len > raw.len() {
+                    return Err(bad("truncated stored block"));
+                }
+                self.out.extend_from_slice(&raw[i..i + len]);
+                i += len;
+                if bfinal == 1 {
+                    break;
+                }
+            }
+            if i + 8 > raw.len() {
+                return Err(bad("missing gzip trailer"));
+            }
+            let crc = u32::from_le_bytes([raw[i], raw[i + 1], raw[i + 2], raw[i + 3]]);
+            if crc != crc32(&self.out) {
+                return Err(bad("gzip CRC mismatch"));
+            }
+            let isize = u32::from_le_bytes([raw[i + 4], raw[i + 5], raw[i + 6], raw[i + 7]]);
+            if isize != self.out.len() as u32 {
+                return Err(bad("gzip ISIZE mismatch"));
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.decode_all()?;
+            let n = buf.len().min(self.out.len() - self.pos);
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(data).unwrap();
+        let gz = enc.finish().unwrap();
+        let mut dec = read::GzDecoder::new(&gz[..]);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrips() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"hello world"), b"hello world");
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        assert_eq!(roundtrip(&big), big);
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        assert_eq!(crc32(b"hello world"), 0x0D4A1185);
+    }
+
+    #[test]
+    fn header_is_gzip() {
+        let enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        let gz = enc.finish().unwrap();
+        assert_eq!(&gz[..3], &[0x1F, 0x8B, 8]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut dec = read::GzDecoder::new(&b"not gzip at all"[..]);
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+    }
+}

@@ -1,0 +1,319 @@
+//! PJRT-less simulation substrate for the `xla` bindings.
+//!
+//! The real deployment builds against the `xla` crate (Rust bindings over
+//! `xla_extension`: HLO parsing, XLA compilation, PJRT buffers and
+//! executables).  That native toolchain is not present in this build
+//! environment, so this crate provides the same API surface with
+//! simulated semantics:
+//!
+//! - `HloModuleProto::from_text_file` reads the HLO **text** and records
+//!   the entry computation's result shape (no verification of the body);
+//! - `PjRtClient::compile` produces an executable whose `execute_b`
+//!   returns a zero-filled tensor of the recorded result shape;
+//! - buffers/literals are plain host byte vectors.
+//!
+//! Everything *around* the runtime (serving loops, batching, routing,
+//! placement, metrics, the platform cost models) behaves identically;
+//! only the numeric values coming out of `execute` are zeros, so
+//! fixture-parity checks (`tf2aif verify`) will report deltas when run on
+//! this substrate.  Swap the `xla` path dependency in the workspace
+//! `Cargo.toml` for the real bindings to get bit-true execution.
+
+use std::fmt;
+
+/// Error type for every fallible operation in this substrate.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(sim): {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Result alias used across the substrate.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Literal element types (subset the workspace stores in artifacts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float.
+    F32,
+    /// Signed 8-bit integer.
+    S8,
+    /// bfloat16.
+    Bf16,
+}
+
+/// HLO primitive types (mirror of the proto enum subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    /// 32-bit IEEE float.
+    F32,
+    /// Signed 8-bit integer.
+    S8,
+    /// bfloat16.
+    Bf16,
+}
+
+/// Parsed HLO module metadata (text form; body is not interpreted).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    /// Element count of the entry computation's (first) result tensor.
+    result_elems: usize,
+}
+
+/// Parse the first shape's dimension product out of `s`, e.g.
+/// `"(f32[1,10])"` or `"f32[1,10]{1,0}"` → 10.  Dimensionless shapes
+/// (`f32[]`) are scalars (1 element).
+fn parse_result_elems(s: &str) -> Option<usize> {
+    let open = s.find('[')?;
+    let close = s[open..].find(']')? + open;
+    let dims = s[open + 1..close].trim();
+    if dims.is_empty() {
+        return Some(1);
+    }
+    let mut product = 1usize;
+    for d in dims.split(',') {
+        product = product.checked_mul(d.trim().parse::<usize>().ok()?)?;
+    }
+    Some(product)
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file and record the ENTRY computation's result
+    /// shape (the `-> shape` annotation on the ENTRY line).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading {path}: {e}")))?;
+        let mut result_elems = 0usize;
+        for line in text.lines() {
+            let t = line.trim_start();
+            if t.starts_with("ENTRY") {
+                if let Some((_, after)) = t.split_once("->") {
+                    if let Some(n) = parse_result_elems(after) {
+                        result_elems = n;
+                        break;
+                    }
+                }
+            }
+        }
+        if result_elems == 0 {
+            return Err(XlaError::new(format!("{path}: no parsable ENTRY result shape")));
+        }
+        Ok(HloModuleProto { result_elems })
+    }
+}
+
+/// A computation handle (wraps the parsed module metadata).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    result_elems: usize,
+}
+
+impl XlaComputation {
+    /// Build a computation from a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { result_elems: proto.result_elems }
+    }
+}
+
+/// A device-resident buffer (simulated: host bytes + element count).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    /// f32 view of the buffer contents (empty for non-f32 uploads).
+    data: Vec<f32>,
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal { data: self.data.clone() })
+    }
+}
+
+/// A host literal (simulated: f32 payload only is retained).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Build a literal from raw bytes of the given element type/shape.
+    /// Non-f32 payloads are accepted and retained opaquely (weights are
+    /// never read back in the simulation).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        let expect = elems
+            * match ty {
+                ElementType::F32 => 4,
+                ElementType::S8 => 1,
+                ElementType::Bf16 => 2,
+            };
+        if data.len() != expect {
+            return Err(XlaError::new(format!(
+                "literal size mismatch: {} bytes for {:?}{:?}",
+                data.len(),
+                ty,
+                dims
+            )));
+        }
+        let data = match ty {
+            ElementType::F32 => data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(Literal { data })
+    }
+
+    /// Unwrap a 1-tuple result (the workspace lowers with
+    /// `return_tuple=True`).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Copy out as a typed vector (f32 only in the simulation).
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Element conversion used by [`Literal::to_vec`].
+pub trait FromF32 {
+    /// Convert one f32 element.
+    fn from_f32(v: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// A compiled executable (simulated: remembers the result shape).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    result_elems: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with buffer arguments; returns one zero-filled result
+    /// tensor of the entry computation's shape per device (one device).
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Ok(vec![vec![PjRtBuffer { data: vec![0.0; self.result_elems] }]])
+    }
+}
+
+/// A PJRT client (simulated CPU device).
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "sim-cpu" })
+    }
+
+    /// Platform name of the backing device.
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { result_elems: comp.result_elems })
+    }
+
+    /// Upload a host literal to the device.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { data: literal.data.clone() })
+    }
+
+    /// Upload a typed host slice to the device.
+    pub fn buffer_from_host_buffer<T: Copy + Into<f64>>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems {
+            return Err(XlaError::new(format!(
+                "host buffer has {} elements, shape {:?} wants {elems}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(PjRtBuffer {
+            data: data
+                .iter()
+                .map(|&v| {
+                    let x: f64 = v.into();
+                    x as f32
+                })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entry_result_shapes() {
+        assert_eq!(parse_result_elems("(f32[1,10])"), Some(10));
+        assert_eq!(parse_result_elems(" f32[2,3,4]{2,1,0} {"), Some(24));
+        assert_eq!(parse_result_elems("f32[]"), Some(1));
+        assert_eq!(parse_result_elems("no shape here"), None);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let bytes: Vec<u8> = [1.0f32, 2.0, 3.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn execute_returns_result_shape() {
+        let exe = PjRtLoadedExecutable { result_elems: 10 };
+        let out = exe.execute_b(&[]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 10);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 3])
+                .is_err()
+        );
+    }
+}
