@@ -23,7 +23,10 @@ fn main() -> Result<()> {
     let real: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
     let engine = Engine::cpu()?;
-    let artifacts = artifact::scan(ARTIFACTS_DIR)?;
+    // `Arc` per artifact: each deploy/verify shares it with the runtime
+    // host instead of cloning the weights table across the load channel.
+    let artifacts: Vec<std::sync::Arc<artifact::Artifact>> =
+        artifact::scan(ARTIFACTS_DIR)?.into_iter().map(std::sync::Arc::new).collect();
     println!(
         "sweeping {} artifacts ({} service samples, {} real executions each)…\n",
         artifacts.len(),

@@ -1,0 +1,38 @@
+//! Fused-batch sweep, scripted: for each (batch × rate) point, drive the
+//! simulated fabric twice — fused dispatch vs the per-item reference
+//! path — and print the amortization curve (also written to
+//! `BENCH_fabric.json`, the trajectory file future perf PRs beat).
+//!
+//! ```sh
+//! cargo run --release --example fused_batch_bench
+//! ```
+//!
+//! The same sweep is available as `tf2aif bench` with full flag control
+//! (see `docs/CLI.md`).
+
+use anyhow::Result;
+
+use tf2aif::fabric::bench::{self, BenchConfig};
+use tf2aif::report;
+
+fn main() -> Result<()> {
+    let cfg = BenchConfig {
+        requests: 250,
+        rates: vec![1000.0, 8000.0],
+        ..Default::default()
+    };
+    println!(
+        "sweeping batches {:?} × rates {:?} ({} requests/point, fused vs per-item)…\n",
+        cfg.batches, cfg.rates, cfg.requests
+    );
+    let points = bench::run_sweep(&cfg)?;
+    let (h, rows) = report::bench_table(&points);
+    print!("{}", report::render_table(&h, &rows));
+    bench::write_json("BENCH_fabric.json", &cfg, &points)?;
+    println!(
+        "\nwrote BENCH_fabric.json — fused beats per-item at batch ≥ 4: {} (best {:.2}x)",
+        if bench::fused_beats_per_item_at_batch_ge4(&points) { "YES" } else { "NO" },
+        bench::best_speedup_at_batch_ge4(&points).unwrap_or(0.0),
+    );
+    Ok(())
+}

@@ -19,7 +19,8 @@ use tf2aif::workload::Arrival;
 
 fn main() -> Result<()> {
     // 1. Pick an artifact the build pipeline produced (model × variant).
-    let artifact = Artifact::load("artifacts/mobilenetv1_GPU")?;
+    //    (`Arc`: deployment shares it with the runtime host, no clone.)
+    let artifact = Arc::new(Artifact::load("artifacts/mobilenetv1_GPU")?);
     println!(
         "AIF {}: {} on {} ({}, {} layers, {:.3} GFLOPs)",
         artifact.manifest.id(),

@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("skipping {id}: run `make artifacts`");
             continue;
         };
+        let art = Arc::new(art);
         let server = Arc::new(AifServer::deploy(&engine, &art, Arc::new(ImageClassify))?);
         let shape = server.model.input_shape.clone();
         let (h, w, c) = (shape[1], shape[2], shape[3]);

@@ -199,7 +199,9 @@ impl Backend {
             .find(|a| a.manifest.variant == d.variant)
             .unwrap();
         let pod = cluster.bind(&d.aif, &d.variant, &d.node, Self::pod_memory_gb(artifact))?;
-        let server = AifServer::deploy(engine, artifact, Arc::new(ImageClassify))?;
+        // One placement-time clone, then shared with the runtime host.
+        let artifact = Arc::new(artifact.clone());
+        let server = AifServer::deploy(engine, &artifact, Arc::new(ImageClassify))?;
         Ok(Deployment { decision: d, pod, server: Arc::new(server) })
     }
 }

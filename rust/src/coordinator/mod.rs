@@ -105,12 +105,13 @@ pub fn generate(repo_root: impl AsRef<Path>, opts: &GenerateOptions) -> Result<V
 /// Fixture-parity verification of every artifact under `dir`.
 /// Returns (id, max |Δ| vs build-time logits) per artifact.
 pub fn verify_all(engine: &Engine, dir: impl AsRef<Path>) -> Result<Vec<(String, f64)>> {
-    let artifacts = artifact::scan(dir)?;
     let mut out = Vec::new();
-    for a in &artifacts {
-        let (_, delta) = runtime::load_verified(engine, a)
-            .with_context(|| format!("verifying {}", a.manifest.id()))?;
-        out.push((a.manifest.id(), delta));
+    for a in artifact::scan(dir)? {
+        let id = a.manifest.id();
+        let a = Arc::new(a);
+        let (_, delta) = runtime::load_verified(engine, &a)
+            .with_context(|| format!("verifying {id}"))?;
+        out.push((id, delta));
     }
     Ok(out)
 }
@@ -141,7 +142,8 @@ pub fn bench_fig4(
     dir: impl AsRef<Path>,
     opts: &Fig4Options,
 ) -> Result<Vec<LatencyRow>> {
-    let artifacts = artifact::scan(dir)?;
+    let artifacts: Vec<Arc<Artifact>> =
+        artifact::scan(dir)?.into_iter().map(Arc::new).collect();
     let mut rows = Vec::new();
     for model in MODELS {
         for variant in VARIANTS {
@@ -158,7 +160,7 @@ pub fn bench_fig4(
 }
 
 /// Bench a single artifact: real executions + modeled service series.
-pub fn bench_one(engine: &Engine, a: &Artifact, opts: &Fig4Options) -> Result<LatencyRow> {
+pub fn bench_one(engine: &Engine, a: &Arc<Artifact>, opts: &Fig4Options) -> Result<LatencyRow> {
     let m = &a.manifest;
     let server = Arc::new(AifServer::deploy(engine, a, Arc::new(ImageClassify))?);
     server.reseed(opts.seed ^ m.id().len() as u64);
@@ -188,7 +190,8 @@ pub fn bench_fig5(
     dir: impl AsRef<Path>,
     opts: &Fig4Options,
 ) -> Result<Vec<SpeedupRow>> {
-    let artifacts = artifact::scan(dir)?;
+    let artifacts: Vec<Arc<Artifact>> =
+        artifact::scan(dir)?.into_iter().map(Arc::new).collect();
     let mut rows = Vec::new();
     for model in MODELS {
         for native_variant in NATIVE_VARIANTS {

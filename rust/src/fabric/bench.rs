@@ -1,0 +1,378 @@
+//! `tf2aif bench` — the fused-batch throughput sweep.
+//!
+//! For every (batch size × arrival rate) point the sweep spins up a fresh
+//! simulated fabric twice — once with fused batch execution (one device
+//! dispatch per drained batch) and once on the per-item reference path
+//! (one dispatch per request) — drives an identical open-loop Poisson
+//! workload through the router, and records completed throughput, e2e
+//! p50/p99 and shed rate for both sides.  Results are printed as a table
+//! and written to machine-readable `BENCH_fabric.json`, so every future
+//! performance PR has a trajectory to beat.
+//!
+//! Dedup is disabled for the measurement (the payload pool recycles
+//! tensors, and collapsing them would measure memoization, not batching),
+//! and both sides share the workload seed, the placement, and the
+//! submission loop — the only variable is how the drained batch reaches
+//! the device.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::backend::{Backend, Policy};
+use crate::cluster::{paper_testbed, Cluster};
+use crate::util::json::{n, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::workload::{image_like, Arrival};
+
+use super::{sim, Fabric, FabricConfig};
+
+/// Sweep configuration (CLI: `tf2aif bench`, see `docs/CLI.md`).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Batch sizes to sweep (`max_batch` per point).
+    pub batches: Vec<usize>,
+    /// Poisson arrival rates to sweep, requests/second.
+    pub rates: Vec<f64>,
+    /// Requests routed per (batch, rate, side) run.
+    pub requests: usize,
+    /// Models placed (empty = every catalog model).  The default sweeps
+    /// an overhead-dominated model so the amortization curve is clean.
+    pub models: Vec<String>,
+    /// Replicas per model (distinct nodes).
+    pub replicas: usize,
+    /// Per-pod admission bound.
+    pub queue_capacity: usize,
+    /// Batcher workers per pod.
+    pub workers: usize,
+    /// Fraction of modeled latency really slept by simulated pods (1.0 =
+    /// full fidelity, so queueing and saturation are real).
+    pub time_scale: f64,
+    /// Distinct payloads pre-generated per model (cycled during the
+    /// drive, keeping payload synthesis off the submission path).
+    pub payload_pool: usize,
+    /// Workload + pod-noise seed.
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            batches: vec![1, 2, 4, 8],
+            rates: vec![500.0, 2000.0, 8000.0],
+            requests: 400,
+            models: vec!["mobilenetv1".to_string()],
+            replicas: 3,
+            queue_capacity: 32,
+            workers: 1,
+            time_scale: 1.0,
+            payload_pool: 32,
+            seed: 0xBE7C,
+        }
+    }
+}
+
+/// One side (fused or per-item) of one sweep point.
+#[derive(Debug, Clone)]
+pub struct BenchSide {
+    /// Requests offered to the router.
+    pub submitted: usize,
+    /// Requests served to completion.
+    pub completed: usize,
+    /// Requests shed at the admission bound.
+    pub shed: usize,
+    /// Requests that failed at a pod (0 on simulated pods).
+    pub failed: usize,
+    /// Wall-clock of the whole drive, seconds.
+    pub wall_s: f64,
+    /// Completed-request throughput over the drive wall-clock.
+    pub throughput_rps: f64,
+    /// Median end-to-end (queue wait + service) latency, ms (0 when
+    /// nothing completed).
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, ms (0 when nothing completed).
+    pub p99_ms: f64,
+    /// Shed fraction of submitted requests.
+    pub shed_rate: f64,
+}
+
+/// One (batch × rate) sweep point: fused vs per-item under the same load.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    /// `max_batch` for this point.
+    pub batch: usize,
+    /// Poisson arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Fused-dispatch side (one execution per drained batch).
+    pub fused: BenchSide,
+    /// Per-item reference side (one execution per request).
+    pub per_item: BenchSide,
+}
+
+impl BenchPoint {
+    /// Fused over per-item completed throughput.
+    pub fn speedup(&self) -> f64 {
+        self.fused.throughput_rps / self.per_item.throughput_rps.max(1e-9)
+    }
+}
+
+/// Best fused-over-per-item throughput ratio across points with
+/// batch ≥ 4 (`None` when the sweep had no such point).
+pub fn best_speedup_at_batch_ge4(points: &[BenchPoint]) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.batch >= 4)
+        .map(BenchPoint::speedup)
+        .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+}
+
+/// The acceptance property: every swept batch size ≥ 4 has at least one
+/// arrival rate where fused throughput strictly beats per-item.
+pub fn fused_beats_per_item_at_batch_ge4(points: &[BenchPoint]) -> bool {
+    let batches: std::collections::BTreeSet<usize> =
+        points.iter().filter(|p| p.batch >= 4).map(|p| p.batch).collect();
+    !batches.is_empty()
+        && batches.iter().all(|&b| {
+            points
+                .iter()
+                .filter(|p| p.batch == b)
+                .map(BenchPoint::speedup)
+                .fold(f64::MIN, f64::max)
+                > 1.0
+        })
+}
+
+/// Run the full sweep: every batch × rate, fused and per-item.
+pub fn run_sweep(cfg: &BenchConfig) -> Result<Vec<BenchPoint>> {
+    if cfg.batches.is_empty() || cfg.rates.is_empty() {
+        bail!("bench sweep needs at least one batch size and one rate");
+    }
+    let mut points = Vec::with_capacity(cfg.batches.len() * cfg.rates.len());
+    for &batch in &cfg.batches {
+        for &rate in &cfg.rates {
+            let fused = run_point(cfg, batch, rate, true)
+                .with_context(|| format!("fused run (batch {batch}, rate {rate})"))?;
+            let per_item = run_point(cfg, batch, rate, false)
+                .with_context(|| format!("per-item run (batch {batch}, rate {rate})"))?;
+            points.push(BenchPoint { batch, rate_rps: rate, fused, per_item });
+        }
+    }
+    Ok(points)
+}
+
+/// One measured drive: fresh placement, identical workload, one side.
+fn run_point(cfg: &BenchConfig, batch: usize, rate: f64, fused: bool) -> Result<BenchSide> {
+    let catalog: Vec<_> = sim::synthetic_catalog()
+        .into_iter()
+        .filter(|a| cfg.models.is_empty() || cfg.models.iter().any(|m| *m == a.manifest.model))
+        .collect();
+    if catalog.is_empty() {
+        bail!("no catalog models match {:?}", cfg.models);
+    }
+    let backend = Backend::new(catalog, Policy::MinLatency);
+    let mut cluster = Cluster::new(paper_testbed());
+    cluster.apply_kube_api_extension();
+    let fcfg = FabricConfig {
+        queue_capacity: cfg.queue_capacity.max(1),
+        max_batch: batch.max(1),
+        workers: cfg.workers.max(1),
+        replicas_per_model: cfg.replicas.max(1),
+        time_scale: cfg.time_scale,
+        seed: cfg.seed,
+        fused,
+        // Pool payloads recycle — dedup would measure memoization, not
+        // batching.
+        dedup: false,
+        ..Default::default()
+    };
+    let fabric = Fabric::place_sim(&backend, &mut cluster, &fcfg, None)?;
+
+    // Pre-generate the payload pool so payload synthesis stays off the
+    // submission path; the drive itself is Fabric's own loop, so pacing
+    // and accounting are identical to `tf2aif fabric`.
+    let models = fabric.models();
+    let mut pool_rng = Rng::new(cfg.seed ^ 0x9E37_79B9);
+    let pools: BTreeMap<String, Vec<Vec<f32>>> = models
+        .iter()
+        .map(|m| {
+            let (h, w, c) = fabric.input_shape(m).unwrap_or((8, 8, 1));
+            let pool = (0..cfg.payload_pool.max(1))
+                .map(|_| image_like(&mut pool_rng, h, w, c))
+                .collect();
+            (m.clone(), pool)
+        })
+        .collect();
+
+    let report = fabric.run_with(
+        cfg.requests,
+        Arrival::Poisson { rps: rate },
+        cfg.seed,
+        |_rng: &mut Rng, model: &str, i: usize| {
+            let pool = &pools[model];
+            pool[(i / models.len()) % pool.len()].clone()
+        },
+    )?;
+    fabric.shutdown();
+
+    let mut e2e = report.e2e_ms.clone();
+    let (p50_ms, p99_ms) = if e2e.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (e2e.percentile(50.0), e2e.percentile(99.0))
+    };
+    Ok(BenchSide {
+        submitted: report.submitted,
+        completed: report.completed,
+        shed: report.shed,
+        failed: report.failed,
+        wall_s: report.wall_s,
+        throughput_rps: report.throughput_rps(),
+        p50_ms,
+        p99_ms,
+        shed_rate: report.shed as f64 / report.submitted.max(1) as f64,
+    })
+}
+
+/// Write the sweep as machine-readable `BENCH_fabric.json` (schema in
+/// `docs/CLI.md`) — the perf trajectory future PRs measure against.
+pub fn write_json(
+    path: impl AsRef<Path>,
+    cfg: &BenchConfig,
+    points: &[BenchPoint],
+) -> Result<()> {
+    let side = |b: &BenchSide| {
+        obj(vec![
+            ("submitted", n(b.submitted as f64)),
+            ("completed", n(b.completed as f64)),
+            ("shed", n(b.shed as f64)),
+            ("failed", n(b.failed as f64)),
+            ("wall_s", n(b.wall_s)),
+            ("throughput_rps", n(b.throughput_rps)),
+            ("p50_ms", n(b.p50_ms)),
+            ("p99_ms", n(b.p99_ms)),
+            ("shed_rate", n(b.shed_rate)),
+        ])
+    };
+    let pts: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("batch", n(p.batch as f64)),
+                ("rate_rps", n(p.rate_rps)),
+                ("fused", side(&p.fused)),
+                ("per_item", side(&p.per_item)),
+                ("fused_speedup", n(p.speedup())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("tf2aif fused-batch fabric sweep")),
+        ("version", n(1.0)),
+        (
+            "config",
+            obj(vec![
+                ("requests_per_point", n(cfg.requests as f64)),
+                ("models", Json::Arr(cfg.models.iter().map(|m| s(m.clone())).collect())),
+                ("replicas", n(cfg.replicas as f64)),
+                ("queue_capacity", n(cfg.queue_capacity as f64)),
+                ("workers", n(cfg.workers as f64)),
+                ("time_scale", n(cfg.time_scale)),
+                ("payload_pool", n(cfg.payload_pool as f64)),
+                ("seed", n(cfg.seed as f64)),
+            ]),
+        ),
+        ("points", Json::Arr(pts)),
+        (
+            "fused_beats_per_item_at_batch_ge4",
+            Json::Bool(fused_beats_per_item_at_batch_ge4(points)),
+        ),
+        (
+            "best_speedup_at_batch_ge4",
+            n(best_speedup_at_batch_ge4(points).unwrap_or(0.0)),
+        ),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path.as_ref(), doc.to_string() + "\n")
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn side(throughput: f64) -> BenchSide {
+        BenchSide {
+            submitted: 100,
+            completed: 90,
+            shed: 10,
+            failed: 0,
+            wall_s: 1.0,
+            throughput_rps: throughput,
+            p50_ms: 2.0,
+            p99_ms: 9.0,
+            shed_rate: 0.1,
+        }
+    }
+
+    #[test]
+    fn speedup_and_acceptance_predicates() {
+        let good = BenchPoint {
+            batch: 4,
+            rate_rps: 1000.0,
+            fused: side(300.0),
+            per_item: side(100.0),
+        };
+        assert!((good.speedup() - 3.0).abs() < 1e-9);
+        let tie = BenchPoint {
+            batch: 8,
+            rate_rps: 100.0,
+            fused: side(100.0),
+            per_item: side(100.0),
+        };
+        let pts = vec![good.clone(), tie];
+        // Batch 4 wins somewhere and batch 8 never does → not accepted.
+        assert!(!fused_beats_per_item_at_batch_ge4(&pts));
+        let winning8 = BenchPoint {
+            batch: 8,
+            rate_rps: 1000.0,
+            fused: side(500.0),
+            per_item: side(100.0),
+        };
+        let pts = vec![good, winning8];
+        assert!(fused_beats_per_item_at_batch_ge4(&pts));
+        assert!((best_speedup_at_batch_ge4(&pts).unwrap() - 5.0).abs() < 1e-9);
+        assert!(best_speedup_at_batch_ge4(&[]).is_none());
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let p = BenchPoint {
+            batch: 4,
+            rate_rps: 2000.0,
+            fused: side(400.0),
+            per_item: side(150.0),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("tf2aif_bench_{}.json", std::process::id()));
+        write_json(&path, &BenchConfig::default(), &[p]).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&src).unwrap();
+        let pts = doc.get("points").unwrap().arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        let p0 = &pts[0];
+        assert_eq!(p0.get("batch").unwrap().usize().unwrap(), 4);
+        let fused = p0.get("fused").unwrap();
+        assert!(fused.get("throughput_rps").unwrap().f64().unwrap() > 0.0);
+        assert!(matches!(
+            doc.get("fused_beats_per_item_at_batch_ge4").unwrap(),
+            Json::Bool(true)
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -11,10 +11,14 @@
 //! ```text
 //!             ┌────────────────────────── Fabric ─────────────────────────┐
 //!  requests   │  Router ──► per-pod BoundedQueue ──► batcher workers ──►  │
-//!  (Arrival)──┤     │            (admission bound,        (AifServer or   │
-//!             │     │shed         shed when full)          SimPod)        │
-//!             │     ▼                                        │            │
-//!             │  FeedbackStore ◄──── observed service latency┘            │
+//!  (Arrival)──┤   │  │          (admission bound,     ONE fused dispatch  │
+//!             │   │  │shed       shed when full)      per drained batch   │
+//!             │   │  ▼                                (AifServer|SimPod)  │
+//!             │   │ dedup: identical in-flight            │               │
+//!             │   │ requests collapse into one            │               │
+//!             │   │ execution, responses fan out          │               │
+//!             │   ▼                                       │               │
+//!             │  FeedbackStore ◄─── observed service latency              │
 //!             │     │                                                     │
 //!             │     └──► backend::Backend::rank (placement re-scoring)    │
 //!             └───────────────────────────────────────────────────────────┘
@@ -24,9 +28,16 @@
 //!   on distinct cluster nodes (scheduler filter + bind per
 //!   [`crate::cluster::Cluster`]); the router spreads requests across
 //!   them by least estimated work.
-//! - **Per-node queues & dynamic batching** — each pod owns a
+//! - **Per-node queues & fused dynamic batching** — each pod owns a
 //!   [`queue::BoundedQueue`] drained in batches by its own workers, so a
-//!   slow far-edge pod queues independently of a fast cloud GPU pod.
+//!   slow far-edge pod queues independently of a fast cloud GPU pod; the
+//!   drained batch then executes as ONE device dispatch
+//!   ([`PodExecutor::execute_batch`]), amortizing per-dispatch overhead
+//!   over the batch (`tf2aif bench` measures the curve).
+//! - **Request dedup / response memoization** — identical concurrent
+//!   (model, payload) submissions collapse into one execution keyed by
+//!   input hash; every caller gets a response re-stamped with its own
+//!   request id.
 //! - **Admission control** — queues are bounded; when every replica's
 //!   queue is full the request is *shed* explicitly (counted, never
 //!   silently dropped).
@@ -39,16 +50,18 @@
 //! See `docs/ARCHITECTURE.md` for the full request lifecycle and
 //! `examples/fabric_poisson.rs` or `tf2aif fabric` for runnable drivers.
 
+pub mod bench;
 pub mod queue;
 pub mod sim;
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
 use anyhow::{bail, Context as _, Result};
+use sha2::{Digest as _, Sha256};
 
 use crate::artifact::Artifact;
 use crate::backend::Backend;
@@ -63,11 +76,14 @@ use crate::workload::{image_like, Arrival};
 use queue::BoundedQueue;
 use sim::{Gate, SimPod};
 
-/// Anything that can serve one fabric request: a real PJRT-backed
+/// Anything that can serve fabric requests: a real PJRT-backed
 /// [`AifServer`] or a [`SimPod`] running the platform cost model.
 pub trait PodExecutor: Send + Sync {
     /// Serve one request that waited `queue_wait_ms` in the pod queue.
     fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response>;
+    /// Serve a whole drained batch as ONE fused dispatch (per-item
+    /// results in request order — a malformed item fails alone).
+    fn execute_batch(&self, reqs: &[Request], queue_wait_ms: &[f64]) -> Vec<Result<Response>>;
     /// The pod's metrics collector.
     fn collector(&self) -> &Arc<Collector>;
 }
@@ -75,6 +91,10 @@ pub trait PodExecutor: Send + Sync {
 impl PodExecutor for AifServer {
     fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
         self.handle_queued(req, queue_wait_ms)
+    }
+
+    fn execute_batch(&self, reqs: &[Request], queue_wait_ms: &[f64]) -> Vec<Result<Response>> {
+        self.handle_batch(reqs, queue_wait_ms)
     }
 
     fn collector(&self) -> &Arc<Collector> {
@@ -85,6 +105,10 @@ impl PodExecutor for AifServer {
 impl PodExecutor for SimPod {
     fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
         SimPod::execute(self, req, queue_wait_ms)
+    }
+
+    fn execute_batch(&self, reqs: &[Request], queue_wait_ms: &[f64]) -> Vec<Result<Response>> {
+        SimPod::execute_batch(self, reqs, queue_wait_ms)
     }
 
     fn collector(&self) -> &Arc<Collector> {
@@ -109,6 +133,15 @@ pub struct FabricConfig {
     pub time_scale: f64,
     /// Seed for simulated-pod noise.
     pub seed: u64,
+    /// Fused batch execution: a drained batch becomes ONE device
+    /// dispatch.  `false` restores the per-item reference path (each
+    /// drained request dispatched individually) — the baseline the
+    /// `tf2aif bench` sweep measures fusion against.
+    pub fused: bool,
+    /// In-flight request dedup: identical concurrent (model, payload)
+    /// submissions collapse into one execution whose response is fanned
+    /// back out to every caller (memoized while in flight).
+    pub dedup: bool,
 }
 
 impl Default for FabricConfig {
@@ -121,6 +154,8 @@ impl Default for FabricConfig {
             feedback_alpha: 0.2,
             time_scale: 0.05,
             seed: 0xFAB,
+            fused: true,
+            dedup: true,
         }
     }
 }
@@ -142,15 +177,70 @@ pub struct PodPlan {
     pub modeled_ms: f64,
 }
 
-type Work = (Request, Instant, mpsc::Sender<Outcome>);
+type Work = (Request, Instant, Arc<Fanout>);
 
 /// Terminal state of one routed request.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum Outcome {
     /// Served; full latency breakdown inside.
     Completed(Response),
     /// Reached a pod but the executor failed (counted in pod errors).
     Failed(String),
+}
+
+/// Delivery record for one admitted (leader) request: the waiters are
+/// every caller whose submission collapsed onto this execution — the
+/// leader itself plus any dedup'd followers that attached while it was in
+/// flight.
+struct Fanout {
+    /// Dedup-map key to unregister on completion (`None` when dedup is
+    /// off for this submission).
+    key: Option<[u8; 32]>,
+    waiters: Mutex<Vec<(u64, mpsc::Sender<Outcome>)>>,
+}
+
+/// In-flight dedup index: content hash → the execution to piggyback on.
+type DedupMap = Mutex<HashMap<[u8; 32], Arc<Fanout>>>;
+
+/// Content hash of a routed request — the dedup/memoization key.  The
+/// model name is part of the digest so identical tensors aimed at
+/// different AIFs never collapse.
+fn dedup_key(model: &str, payload: &[f32]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(model.as_bytes());
+    h.update([0u8]);
+    // Stream fixed-size chunks through a stack buffer: no payload-sized
+    // allocation on the admission path.
+    let mut buf = [0u8; 4096];
+    for chunk in payload.chunks(buf.len() / 4) {
+        let mut n = 0;
+        for v in chunk {
+            buf[n..n + 4].copy_from_slice(&v.to_le_bytes());
+            n += 4;
+        }
+        h.update(&buf[..n]);
+    }
+    *h.finalize().as_bytes()
+}
+
+/// Unregister a completed execution from the dedup index, then fan its
+/// outcome out to every waiter (each response re-stamped with the
+/// waiter's own request id).  Removal happens under the map lock *before*
+/// delivery, so a new identical submission either attached in time (and
+/// is in `waiters`) or starts a fresh execution — nobody can attach to a
+/// completed entry and hang.
+fn deliver(dedup: &DedupMap, fan: &Fanout, outcome: Outcome) {
+    if let Some(key) = &fan.key {
+        dedup.lock().unwrap().remove(key);
+    }
+    let waiters = std::mem::take(&mut *fan.waiters.lock().unwrap());
+    for (id, tx) in waiters {
+        let personalized = match &outcome {
+            Outcome::Completed(resp) => Outcome::Completed(Response { id, ..resp.clone() }),
+            Outcome::Failed(e) => Outcome::Failed(e.clone()),
+        };
+        let _ = tx.send(personalized);
+    }
 }
 
 /// Router verdict for one submission.
@@ -182,6 +272,9 @@ pub struct Fabric {
     next_id: AtomicU64,
     shed_total: AtomicU64,
     shed_by_model: Mutex<BTreeMap<String, u64>>,
+    /// In-flight dedup index, shared with every pod worker.
+    dedup: Arc<DedupMap>,
+    dedup_hits: AtomicU64,
 }
 
 /// Plan replica placements for every model the backend knows, binding
@@ -193,7 +286,7 @@ fn plan_placements(
     backend: &Backend,
     cluster: &mut Cluster,
     replicas: usize,
-) -> Result<Vec<(PodPlan, Artifact)>> {
+) -> Result<Vec<(PodPlan, Arc<Artifact>)>> {
     let models: Vec<String> = backend.models().iter().map(|m| m.to_string()).collect();
     if models.is_empty() {
         bail!("backend has no models to place");
@@ -209,12 +302,16 @@ fn plan_placements(
             if nodes_used.contains(&d.node) {
                 continue;
             }
-            let artifact = backend
-                .variants_of(model)
-                .into_iter()
-                .find(|a| a.manifest.variant == d.variant)
-                .context("ranked variant missing from index")?
-                .clone();
+            // One clone at placement time, shared (`Arc`) with the pod
+            // executor and the runtime host from here on.
+            let artifact = Arc::new(
+                backend
+                    .variants_of(model)
+                    .into_iter()
+                    .find(|a| a.manifest.variant == d.variant)
+                    .context("ranked variant missing from index")?
+                    .clone(),
+            );
             let mem = Backend::pod_memory_gb(&artifact);
             let Ok(pod_id) = cluster.bind(&d.aif, &d.variant, &d.node, mem) else {
                 continue; // capacity raced away since ranking
@@ -250,7 +347,7 @@ impl Fabric {
         gate: Option<Arc<Gate>>,
     ) -> Result<Fabric> {
         let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
-        let mut pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)> = Vec::new();
+        let mut pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)> = Vec::new();
         for (plan, artifact) in plans {
             let pod = SimPod::new(
                 &plan.variant,
@@ -274,7 +371,7 @@ impl Fabric {
         cfg: &FabricConfig,
     ) -> Result<Fabric> {
         let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
-        let mut pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)> = Vec::new();
+        let mut pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)> = Vec::new();
         for (plan, artifact) in plans {
             let server = AifServer::deploy(engine, &artifact, Arc::new(ImageClassify))?;
             pods.push((plan, artifact, Arc::new(server)));
@@ -282,8 +379,12 @@ impl Fabric {
         Ok(Fabric::spawn(pods, cfg.clone()))
     }
 
-    fn spawn(pods: Vec<(PodPlan, Artifact, Arc<dyn PodExecutor>)>, cfg: FabricConfig) -> Fabric {
+    fn spawn(
+        pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)>,
+        cfg: FabricConfig,
+    ) -> Fabric {
         let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
+        let dedup: Arc<DedupMap> = Arc::new(Mutex::new(HashMap::new()));
         let mut runtimes = Vec::new();
         let mut by_model: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         let mut input_shapes = BTreeMap::new();
@@ -301,16 +402,13 @@ impl Fabric {
                     let backlog = Arc::clone(&backlog);
                     let executor = Arc::clone(&executor);
                     let feedback = Arc::clone(&feedback);
+                    let dedup = Arc::clone(&dedup);
                     let key = key.clone();
                     let max_batch = cfg.max_batch.max(1);
-                    thread::spawn(move || loop {
-                        let batch = queue.pop_batch(max_batch);
-                        if batch.is_empty() {
-                            break; // queue closed and drained
-                        }
-                        for (req, enqueued, reply) in batch {
-                            let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-                            let outcome = match executor.execute(&req, wait_ms) {
+                    let fused = cfg.fused;
+                    thread::spawn(move || {
+                        let finish = |fan: Arc<Fanout>, result: Result<Response>| {
+                            let outcome = match result {
                                 Ok(resp) => {
                                     feedback.observe(&key, resp.service_ms);
                                     Outcome::Completed(resp)
@@ -318,7 +416,43 @@ impl Fabric {
                                 Err(e) => Outcome::Failed(format!("{e:#}")),
                             };
                             backlog.fetch_sub(1, Ordering::Relaxed);
-                            let _ = reply.send(outcome);
+                            deliver(&dedup, &fan, outcome);
+                        };
+                        loop {
+                            // `None` = closed and drained: the
+                            // unambiguous shutdown signal (workers
+                            // block, never spin).
+                            let Some(batch) = queue.pop_batch(max_batch) else {
+                                break;
+                            };
+                            if fused {
+                                // The whole drained batch is ONE device
+                                // dispatch; every item stops waiting at
+                                // dispatch time.
+                                let mut reqs = Vec::with_capacity(batch.len());
+                                let mut waits = Vec::with_capacity(batch.len());
+                                let mut fans = Vec::with_capacity(batch.len());
+                                for (req, enqueued, fan) in batch {
+                                    waits.push(enqueued.elapsed().as_secs_f64() * 1e3);
+                                    reqs.push(req);
+                                    fans.push(fan);
+                                }
+                                let results = executor.execute_batch(&reqs, &waits);
+                                for (fan, result) in fans.into_iter().zip(results) {
+                                    finish(fan, result);
+                                }
+                            } else {
+                                // Per-item reference path (the bench
+                                // baseline): one dispatch per request,
+                                // and each item's queue wait is taken at
+                                // its OWN execution time so the in-batch
+                                // serial wait is attributed honestly.
+                                for (req, enqueued, fan) in batch {
+                                    let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                                    let result = executor.execute(&req, wait_ms);
+                                    finish(fan, result);
+                                }
+                            }
                         }
                     })
                 })
@@ -335,6 +469,8 @@ impl Fabric {
             next_id: AtomicU64::new(0),
             shed_total: AtomicU64::new(0),
             shed_by_model: Mutex::new(BTreeMap::new()),
+            dedup,
+            dedup_hits: AtomicU64::new(0),
         }
     }
 
@@ -380,10 +516,11 @@ impl Fabric {
         est * (backlog + 1.0)
     }
 
-    /// Route one request for `model`: try the replicas in ascending score
-    /// order, admit into the first queue with room, shed if every queue
-    /// is at the bound.  Shed requests are counted — nothing is silently
-    /// dropped.
+    /// Route one request for `model`: collapse onto an identical
+    /// in-flight request when dedup is on, otherwise try the replicas in
+    /// ascending score order, admit into the first queue with room, and
+    /// shed if every queue is at the bound.  Shed requests are counted —
+    /// nothing is silently dropped.
     pub fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
         let Some(replicas) = self.by_model.get(model) else {
             bail!("fabric serves no model {model:?} (have: {:?})", self.models());
@@ -394,16 +531,38 @@ impl Fabric {
 
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let mut work: Work = (Request { id, payload }, Instant::now(), tx);
-        for (_, idx) in scored {
-            let pod = &self.pods[idx];
-            pod.backlog.fetch_add(1, Ordering::Relaxed);
-            match pod.queue.try_push(work) {
-                Ok(()) => return Ok(Submission::Enqueued(rx)),
-                Err(returned) => {
-                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
-                    work = returned;
-                }
+
+        if self.cfg.dedup {
+            let key = dedup_key(model, &payload);
+            // The map lock is held across attach/route/register so a
+            // completing worker (which also takes it, in `deliver`)
+            // cannot unregister an entry between our lookup and our
+            // attach — a waiter either rides the in-flight execution or
+            // becomes a fresh leader, never neither.  The critical
+            // section is small: replica scoring already happened above,
+            // so under the lock we only do backlog atomics and at most
+            // `replicas` O(1) queue pushes.  (Registering before routing
+            // would shrink it further but forces shed-time notification
+            // of any followers that attached in the window — a worse
+            // semantics trade.)
+            let mut map = self.dedup.lock().unwrap();
+            if let Some(entry) = map.get(&key) {
+                entry.waiters.lock().unwrap().push((id, tx));
+                self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Submission::Enqueued(rx));
+            }
+            let fan =
+                Arc::new(Fanout { key: Some(key), waiters: Mutex::new(vec![(id, tx)]) });
+            let work: Work = (Request { id, payload }, Instant::now(), Arc::clone(&fan));
+            if self.try_route(&scored, work) {
+                map.insert(key, fan);
+                return Ok(Submission::Enqueued(rx));
+            }
+        } else {
+            let fan = Arc::new(Fanout { key: None, waiters: Mutex::new(vec![(id, tx)]) });
+            let work: Work = (Request { id, payload }, Instant::now(), fan);
+            if self.try_route(&scored, work) {
+                return Ok(Submission::Enqueued(rx));
             }
         }
         self.shed_total.fetch_add(1, Ordering::Relaxed);
@@ -411,9 +570,32 @@ impl Fabric {
         Ok(Submission::Shed)
     }
 
+    /// Try each scored replica in order; `true` when a queue admitted the
+    /// work, `false` when every queue was at the admission bound.
+    fn try_route(&self, scored: &[(f64, usize)], mut work: Work) -> bool {
+        for &(_, idx) in scored {
+            let pod = &self.pods[idx];
+            pod.backlog.fetch_add(1, Ordering::Relaxed);
+            match pod.queue.try_push(work) {
+                Ok(()) => return true,
+                Err(returned) => {
+                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    work = returned;
+                }
+            }
+        }
+        false
+    }
+
     /// Total shed requests so far.
     pub fn shed_total(&self) -> u64 {
         self.shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Submissions that collapsed onto an identical in-flight request
+    /// (served by memoized fan-out instead of a fresh execution).
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits.load(Ordering::Relaxed)
     }
 
     /// Shed counts per model.
@@ -431,6 +613,25 @@ impl Fabric {
     /// Open-loop arrivals submit asynchronously; real sleep per gap is
     /// capped at 2 ms, mirroring the client driver.
     pub fn run(&self, requests: usize, arrival: Arrival, seed: u64) -> Result<FabricRunReport> {
+        self.run_with(requests, arrival, seed, |rng: &mut Rng, model: &str, _i: usize| {
+            let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
+            image_like(rng, h, w, c)
+        })
+    }
+
+    /// [`run`](Self::run) with a caller-supplied payload source — the
+    /// single drive loop shared by `tf2aif fabric` (fresh image-like
+    /// payloads) and the `tf2aif bench` sweep (pre-generated payload
+    /// pool), so pacing and accounting can never diverge between them.
+    /// `payload_for` receives the workload RNG, the target model and the
+    /// request index.
+    pub fn run_with(
+        &self,
+        requests: usize,
+        arrival: Arrival,
+        seed: u64,
+        mut payload_for: impl FnMut(&mut Rng, &str, usize) -> Vec<f32>,
+    ) -> Result<FabricRunReport> {
         let models = self.models();
         if models.is_empty() {
             bail!("fabric has no pods");
@@ -462,8 +663,7 @@ impl Fabric {
                 std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.002)));
             }
             let model = &models[i % models.len()];
-            let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
-            let payload = image_like(&mut rng, h, w, c);
+            let payload = payload_for(&mut rng, model, i);
             match self.submit(model, payload)? {
                 Submission::Enqueued(rx) => {
                     if closed_loop {
@@ -512,6 +712,7 @@ impl Fabric {
             requests: merged.requests,
             errors: merged.errors,
             shed: self.shed_total(),
+            deduped: self.dedup_hits(),
             service: boxplot_opt(&merged.service_ms),
             mean_queue_wait_ms: mean_opt(&merged.queue_wait_ms),
             throughput_rps: throughput_rps(merged.requests as usize, wall_s),
@@ -627,6 +828,8 @@ pub struct FleetReport {
     pub errors: u64,
     /// Requests shed at admission.
     pub shed: u64,
+    /// Submissions answered by in-flight dedup (no fresh execution).
+    pub deduped: u64,
     /// Merged service-latency summary (None when idle).
     pub service: Option<Boxplot>,
     /// Mean queue wait fleet-wide, ms.
@@ -726,5 +929,37 @@ mod tests {
         let fabric = sim_fabric(&cfg, None);
         assert!(fabric.submit("not-a-model", vec![]).is_err());
         fabric.shutdown();
+    }
+
+    #[test]
+    fn dedup_entry_is_removed_after_completion() {
+        // Without a gate the execution completes quickly; afterwards the
+        // same payload must start a fresh execution (memoization is
+        // in-flight only, never stale).
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        for round in 0..3 {
+            match fabric.submit("lenet", vec![1.0; 32]).unwrap() {
+                Submission::Enqueued(rx) => {
+                    assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)), "{round}");
+                }
+                Submission::Shed => panic!("no load — must admit"),
+            }
+        }
+        // Sequential identical submissions never overlapped → no hits,
+        // three real executions.
+        assert_eq!(fabric.dedup_hits(), 0);
+        let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+        assert_eq!(served, 3);
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn dedup_key_separates_models_and_payloads() {
+        let a = dedup_key("lenet", &[1.0, 2.0]);
+        assert_eq!(a, dedup_key("lenet", &[1.0, 2.0]), "deterministic");
+        assert_ne!(a, dedup_key("resnet50", &[1.0, 2.0]), "model is part of the key");
+        assert_ne!(a, dedup_key("lenet", &[1.0, 2.5]), "payload is part of the key");
+        assert_ne!(a, dedup_key("lenet", &[1.0]), "length is part of the key");
     }
 }

@@ -54,19 +54,24 @@ impl<T> BoundedQueue<T> {
 
     /// Block until at least one item is available, then drain up to
     /// `max` items in one lock take (the dynamic-batching amortization).
-    /// Returns an empty vec once the queue is closed and drained —
-    /// the worker-shutdown signal.
-    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+    ///
+    /// `Some(batch)` is always non-empty; `None` means the queue is
+    /// closed **and** drained — the unambiguous worker-shutdown signal.
+    /// Spurious condvar wakes never escape this loop, so a worker can
+    /// never observe an "empty batch" and spin: it either blocks here or
+    /// exits on `None`.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.state.lock().unwrap();
         loop {
             if !g.items.is_empty() {
                 let n = max.min(g.items.len());
-                return g.items.drain(..n).collect();
+                return Some(g.items.drain(..n).collect());
             }
             if g.closed {
-                return Vec::new();
+                return None;
             }
+            // Spurious wake → re-check, re-wait; never returns empty.
             g = self.not_empty.wait(g).unwrap();
         }
     }
@@ -109,8 +114,22 @@ mod tests {
         for i in 0..5 {
             q.try_push(i).unwrap();
         }
-        assert_eq!(q.pop_batch(3), vec![0, 1, 2]);
-        assert_eq!(q.pop_batch(8), vec![3, 4]);
+        assert_eq!(q.pop_batch(3), Some(vec![0, 1, 2]));
+        assert_eq!(q.pop_batch(8), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn batch_pop_drains_exactly_max_when_backlog_matches() {
+        // Boundary: backlog == max_batch must drain in ONE pop, leaving
+        // the queue empty (no off-by-one splitting the batch).
+        let q = BoundedQueue::new(8);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(4), Some(vec![0, 1, 2, 3]));
+        assert!(q.is_empty());
+        q.close();
+        assert_eq!(q.pop_batch(4), None);
     }
 
     #[test]
@@ -120,18 +139,23 @@ mod tests {
         let h = std::thread::spawn(move || q2.pop_batch(4));
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
-        assert!(h.join().unwrap().is_empty(), "closed+empty → shutdown signal");
+        assert_eq!(h.join().unwrap(), None, "closed+empty → shutdown signal");
         assert_eq!(q.try_push(9), Err(9), "closed queue rejects pushes");
     }
 
     #[test]
     fn close_lets_workers_drain_backlog() {
-        let q = BoundedQueue::new(4);
-        q.try_push(1).unwrap();
-        q.try_push(2).unwrap();
+        // Drain across shutdown: items pushed before close come out in
+        // (possibly partial) batches, then the shutdown signal.
+        let q = BoundedQueue::new(8);
+        for i in 1..=5 {
+            q.try_push(i).unwrap();
+        }
         q.close();
-        assert_eq!(q.pop_batch(10), vec![1, 2], "backlog survives close");
-        assert!(q.pop_batch(10).is_empty());
+        assert_eq!(q.pop_batch(2), Some(vec![1, 2]), "backlog survives close");
+        assert_eq!(q.pop_batch(10), Some(vec![3, 4, 5]), "partial final batch");
+        assert_eq!(q.pop_batch(10), None);
+        assert_eq!(q.pop_batch(10), None, "shutdown signal is idempotent");
     }
 
     #[test]
@@ -142,13 +166,11 @@ mod tests {
                 let q = Arc::clone(&q);
                 std::thread::spawn(move || {
                     let mut got = 0usize;
-                    loop {
-                        let batch = q.pop_batch(16);
-                        if batch.is_empty() {
-                            return got;
-                        }
+                    while let Some(batch) = q.pop_batch(16) {
+                        assert!(!batch.is_empty(), "Some(batch) is never empty");
                         got += batch.len();
                     }
+                    got
                 })
             })
             .collect();

@@ -110,33 +110,59 @@ impl SimPod {
 
     /// Serve one request: sample the platform cost model, occupy the
     /// worker for the scaled latency, return a deterministic prediction.
+    /// A fused batch of one — identical draws and accounting.
     pub fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        self.execute_batch(std::slice::from_ref(req), &[queue_wait_ms]).remove(0)
+    }
+
+    /// Serve a drained batch as ONE fused dispatch: the platform's
+    /// per-dispatch overhead is charged once and marginal per-item
+    /// compute scales with the batch
+    /// ([`Platform::batch_latency_model_ms`]), so the simulator exhibits
+    /// the same amortization curve a real accelerator does.  The worker
+    /// sleeps the scaled total once (one dispatch, one occupancy window),
+    /// and the cost is attributed evenly across items.
+    pub fn execute_batch(
+        &self,
+        reqs: &[Request],
+        queue_wait_ms: &[f64],
+    ) -> Vec<Result<Response>> {
+        assert_eq!(reqs.len(), queue_wait_ms.len(), "one queue wait per request");
+        if reqs.is_empty() {
+            return Vec::new();
+        }
         if let Some(g) = &self.gate {
             g.wait_open();
         }
-        let service_ms = {
+        let n = reqs.len();
+        let total_ms = {
             let mut rng = self.rng.lock().unwrap();
-            self.platform.sample_latency_ms(self.gflops, self.native, &mut rng)
+            self.platform
+                .sample_batch_latency_ms(self.gflops, self.native, n, &mut rng)
         };
         let t0 = Instant::now();
         if self.time_scale > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(service_ms * self.time_scale / 1e3));
+            std::thread::sleep(Duration::from_secs_f64(total_ms * self.time_scale / 1e3));
         }
-        let real = t0.elapsed();
-        self.metrics.record(
-            service_ms,
-            real,
-            Duration::from_secs_f64(queue_wait_ms / 1e3),
-        );
-        // Deterministic stand-in prediction: requests hash to a class.
-        let prediction = Prediction { class: (req.id % 10) as usize, score: 1.0 };
-        Ok(Response {
-            id: req.id,
-            prediction,
-            service_ms,
-            real_compute_ms: real.as_secs_f64() * 1e3,
-            queue_wait_ms,
-        })
+        let real = t0.elapsed() / n as u32;
+        let service_ms = total_ms / n as f64;
+        reqs.iter()
+            .zip(queue_wait_ms)
+            .map(|(req, &wait)| {
+                self.metrics
+                    .record(service_ms, real, Duration::from_secs_f64(wait / 1e3));
+                // Deterministic stand-in prediction: requests hash to a
+                // class.
+                let prediction = Prediction { class: (req.id % 10) as usize, score: 1.0 };
+                Ok(Response {
+                    id: req.id,
+                    prediction,
+                    service_ms,
+                    real_compute_ms: real.as_secs_f64() * 1e3,
+                    queue_wait_ms: wait,
+                })
+            })
+            .collect()
     }
 }
 
@@ -218,6 +244,22 @@ mod tests {
         assert!((resp.queue_wait_ms - 1.5).abs() < 1e-12);
         let snap = pod.metrics().snapshot();
         assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn fused_batch_amortizes_platform_overhead() {
+        let pod = SimPod::new("GPU", 0.025, 0.0, 9, None).unwrap();
+        let reqs: Vec<Request> =
+            (0..8).map(|i| Request { id: i, payload: vec![] }).collect();
+        let out = pod.execute_batch(&reqs, &[0.0; 8]);
+        assert_eq!(out.len(), 8);
+        let batched_ms = out[0].as_ref().unwrap().service_ms;
+        let single_ms = pod.execute(&reqs[0], 0.0).unwrap().service_ms;
+        assert!(
+            batched_ms < single_ms,
+            "fused per-item {batched_ms} must beat per-item dispatch {single_ms}"
+        );
+        assert_eq!(pod.metrics().snapshot().requests, 9);
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! - `fabric`   — cluster-scale serving: shard every AIF across the
 //!   testbed, route an open-loop workload with admission control, report
 //!   per-node + fleet tables (see `docs/CLI.md`).
+//! - `bench`    — fused-batch sweep: batch size × arrival rate, fused vs
+//!   per-item execution, writes `BENCH_fabric.json`.
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
@@ -20,6 +22,7 @@ use tf2aif::client::{Client, ClientConfig};
 use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::config::Config;
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
+use tf2aif::fabric::bench::{self, BenchConfig};
 use tf2aif::fabric::{sim, Fabric, FabricConfig};
 use tf2aif::report;
 use tf2aif::runtime::Engine;
@@ -73,6 +76,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&flags),
         "cluster" => cmd_cluster(&flags),
         "fabric" => cmd_fabric(&flags),
+        "bench" => cmd_bench(&flags),
         "report" => cmd_report(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -93,7 +97,11 @@ fn print_usage() {
          cluster  [--config FILE] [--policy min-latency|prefer-edge|min-energy] [--model M]\n  \
          fabric   [--requests N] [--arrival closed|poisson:RPS|uniform:RPS] [--models a,b]\n           \
          [--replicas N] [--queue N] [--batch N] [--workers N] [--policy P]\n           \
-         [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n  \
+         [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n           \
+         [--per-item] [--no-dedup]\n  \
+         bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
+         [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
+         [--seed N] [--out FILE]\n  \
          report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
     );
 }
@@ -102,6 +110,20 @@ fn csv_list(s: Option<&str>, default: &[&str]) -> Vec<String> {
     match s {
         Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
         None => default.iter().map(|x| x.to_string()).collect(),
+    }
+}
+
+fn csv_nums<T>(s: Option<&str>, default: &[T]) -> Result<Vec<T>>
+where
+    T: std::str::FromStr + Clone,
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    match s {
+        Some(v) => v
+            .split(',')
+            .map(|x| x.trim().parse().with_context(|| format!("bad list entry {x:?}")))
+            .collect(),
+        None => Ok(default.to_vec()),
     }
 }
 
@@ -153,7 +175,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         None => Arrival::ClosedLoop,
     };
     let engine = Engine::cpu()?;
-    let art = artifact::Artifact::load(format!("{ARTIFACTS_DIR}/{aif}"))?;
+    let art = Arc::new(artifact::Artifact::load(format!("{ARTIFACTS_DIR}/{aif}"))?);
     let server = Arc::new(AifServer::deploy(&engine, &art, Arc::new(ImageClassify))?);
     println!(
         "deployed {} (compile {:.2}s, weights {:.2}s, {} tensors)",
@@ -253,6 +275,8 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
             None => FabricConfig::default().time_scale,
         },
         seed: flags.usize_or("--seed", FabricConfig::default().seed as usize)? as u64,
+        fused: !flags.has("--per-item"),
+        dedup: !flags.has("--no-dedup"),
         ..Default::default()
     };
 
@@ -267,13 +291,16 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     backend.feedback = Some(fabric.feedback());
 
     println!(
-        "fabric: {} pods over {} nodes ({} mode, queue bound {}, batch {}, {} worker(s)/pod)",
+        "fabric: {} pods over {} nodes ({} mode, queue bound {}, batch {} [{}], \
+         {} worker(s)/pod, dedup {})",
         fabric.plans().len(),
         fabric.nodes_spanned().len(),
         if real { "real PJRT" } else { "simulated" },
         cfg.queue_capacity,
         cfg.max_batch,
+        if cfg.fused { "fused" } else { "per-item" },
         cfg.workers,
+        if cfg.dedup { "on" } else { "off" },
     );
     for p in fabric.plans() {
         println!(
@@ -290,10 +317,11 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     let run = fabric.run(requests, arrival, seed)?;
 
     println!(
-        "\nrouted {} | completed {} | shed {} | failed {} | wall {:.2}s | {:.1} rps",
+        "\nrouted {} | completed {} | shed {} | deduped {} | failed {} | wall {:.2}s | {:.1} rps",
         run.submitted,
         run.completed,
         run.shed,
+        fabric.dedup_hits(),
         run.failed,
         run.wall_s,
         run.throughput_rps()
@@ -330,6 +358,53 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         }
     }
     fabric.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(flags: &Flags) -> Result<()> {
+    let d = BenchConfig::default();
+    let cfg = BenchConfig {
+        batches: csv_nums(flags.get("--batches"), &d.batches)?,
+        rates: csv_nums(flags.get("--rates"), &d.rates)?,
+        requests: flags.usize_or("--requests", d.requests)?,
+        models: match flags.get("--models") {
+            Some(m) => csv_list(Some(m), &[]),
+            None => d.models.clone(),
+        },
+        replicas: flags.usize_or("--replicas", d.replicas)?,
+        queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
+        workers: flags.usize_or("--workers", d.workers)?,
+        time_scale: match flags.get("--time-scale") {
+            Some(v) => v.parse().with_context(|| format!("bad --time-scale: {v:?}"))?,
+            None => d.time_scale,
+        },
+        payload_pool: flags.usize_or("--pool", d.payload_pool)?,
+        seed: flags.usize_or("--seed", d.seed as usize)? as u64,
+    };
+    println!(
+        "sweeping {} batch sizes × {} rates × 2 execution modes \
+         ({} requests/point, models {:?}, time-scale {})…\n",
+        cfg.batches.len(),
+        cfg.rates.len(),
+        cfg.requests,
+        cfg.models,
+        cfg.time_scale,
+    );
+    let points = bench::run_sweep(&cfg)?;
+    let (h, rows) = report::bench_table(&points);
+    print!("{}", report::render_table(&h, &rows));
+
+    let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
+    bench::write_json(out, &cfg, &points)?;
+    let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
+    match bench::best_speedup_at_batch_ge4(&points) {
+        Some(best) => println!(
+            "\nfused beats per-item at batch ≥ 4: {} (best {:.2}x) — wrote {out}",
+            if beats { "YES" } else { "NO" },
+            best
+        ),
+        None => println!("\n(no batch ≥ 4 in the sweep) — wrote {out}"),
+    }
     Ok(())
 }
 

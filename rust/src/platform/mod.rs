@@ -126,13 +126,22 @@ impl Platform {
     /// Deterministic (noise-free) service latency in ms for a model of
     /// `gflops` on this platform.
     pub fn latency_model_ms(&self, gflops: f64, native: bool) -> f64 {
+        self.batch_latency_model_ms(gflops, native, 1)
+    }
+
+    /// Deterministic service latency of ONE fused dispatch over `batch`
+    /// stacked requests: the per-request overhead (driver/launch/transfer
+    /// setup) is charged once per dispatch, while compute scales with the
+    /// batch — the amortization curve batching exists to buy (§IV-C makes
+    /// batch size the user-tunable throughput lever).
+    pub fn batch_latency_model_ms(&self, gflops: f64, native: bool, batch: usize) -> f64 {
         let (thr, ovh) = if native {
             (self.native_gflops, self.native_overhead_ms)
         } else {
             (self.accel_gflops, self.accel_overhead_ms)
         };
         assert!(thr > 0.0, "{} has no native path", self.name);
-        ovh + gflops / thr * 1e3
+        ovh + batch as f64 * gflops / thr * 1e3
     }
 
     /// A full service-latency series (the Fig. 4 "1000 requests" channel).
@@ -153,7 +162,20 @@ impl Platform {
 
     /// One sampled service latency with platform noise.
     pub fn sample_latency_ms(&self, gflops: f64, native: bool, rng: &mut Rng) -> f64 {
-        let base = self.latency_model_ms(gflops, native);
+        self.sample_batch_latency_ms(gflops, native, 1, rng)
+    }
+
+    /// One sampled fused-dispatch latency (total for the whole batch)
+    /// with platform noise.  Draw-for-draw identical to
+    /// [`sample_latency_ms`](Self::sample_latency_ms) at `batch == 1`.
+    pub fn sample_batch_latency_ms(
+        &self,
+        gflops: f64,
+        native: bool,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> f64 {
+        let base = self.batch_latency_model_ms(gflops, native, batch);
         let mut v = rng.lognormal(base, self.noise_sigma);
         if rng.f64() < self.outlier_p {
             // Context-switch / interference spike.
@@ -218,6 +240,33 @@ mod tests {
         assert!(lat("ALVEO") < lat("AGX"));
         assert!(lat("AGX") < lat("CPU"));
         assert!(lat("CPU") < lat("ARM"));
+    }
+
+    #[test]
+    fn batch_dispatch_amortizes_overhead() {
+        for p in PLATFORMS {
+            let g = 0.025;
+            assert_eq!(
+                p.batch_latency_model_ms(g, false, 1),
+                p.latency_model_ms(g, false),
+                "{}: batch-1 must equal the per-item model",
+                p.name
+            );
+            // Per-item cost strictly decreases with batch (overhead is
+            // charged once per dispatch), approaching pure compute.
+            let per = |b: usize| p.batch_latency_model_ms(g, false, b) / b as f64;
+            assert!(per(4) < per(1), "{}", p.name);
+            assert!(per(16) < per(4), "{}", p.name);
+            assert!(per(1024) > g / p.accel_gflops * 1e3, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn batch_sample_matches_single_sample_draw_for_draw() {
+        let p = get("GPU").unwrap();
+        let a = p.sample_latency_ms(0.1, false, &mut Rng::new(42));
+        let b = p.sample_batch_latency_ms(0.1, false, 1, &mut Rng::new(42));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::artifact::Artifact;
 use crate::cluster::NodeSpec;
+use crate::fabric::bench::BenchPoint;
 use crate::fabric::{FleetReport, PodReport};
 use crate::platform::PLATFORMS;
 use crate::util::stats::Boxplot;
@@ -331,6 +332,7 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         "served",
         "errors",
         "shed",
+        "deduped",
         "median (ms)*",
         "p75*",
         "max*",
@@ -347,6 +349,7 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         fleet.requests.to_string(),
         fleet.errors.to_string(),
         fleet.shed.to_string(),
+        fleet.deduped.to_string(),
         fmt(|b| b.median),
         fmt(|b| b.q3),
         fmt(|b| b.max),
@@ -354,6 +357,44 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         format!("{:.1}", fleet.throughput_rps),
     ];
     (headers, vec![row])
+}
+
+/// `tf2aif bench` sweep table: per (batch × rate) point, fused vs
+/// per-item completed throughput, tail latency and shed rate (* marks the
+/// simulated service channel).
+pub fn bench_table(points: &[BenchPoint]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "batch",
+        "rate (rps)",
+        "fused rps",
+        "per-item rps",
+        "speedup",
+        "fused p50 (ms)*",
+        "fused p99*",
+        "per-item p50*",
+        "per-item p99*",
+        "fused shed %",
+        "per-item shed %",
+    ];
+    let rows = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.batch.to_string(),
+                format!("{:.0}", p.rate_rps),
+                format!("{:.1}", p.fused.throughput_rps),
+                format!("{:.1}", p.per_item.throughput_rps),
+                format!("{:.2}x", p.speedup()),
+                format!("{:.2}", p.fused.p50_ms),
+                format!("{:.2}", p.fused.p99_ms),
+                format!("{:.2}", p.per_item.p50_ms),
+                format!("{:.2}", p.per_item.p99_ms),
+                format!("{:.1}", p.fused.shed_rate * 100.0),
+                format!("{:.1}", p.per_item.shed_rate * 100.0),
+            ]
+        })
+        .collect();
+    (headers, rows)
 }
 
 /// Per-platform average speedups (the Fig. 5 headline vector).
@@ -431,6 +472,7 @@ mod tests {
             requests: 10,
             errors: 0,
             shed: 3,
+            deduped: 5,
             service: None,
             mean_queue_wait_ms: 0.0,
             throughput_rps: 99.0,
@@ -439,6 +481,34 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].len(), h.len());
         assert_eq!(rows[0][4], "3", "shed count is reported");
+        assert_eq!(rows[0][5], "5", "dedup hits are reported");
+    }
+
+    #[test]
+    fn bench_table_renders_fused_vs_per_item() {
+        use crate::fabric::bench::{BenchPoint, BenchSide};
+        let side = |rps: f64| BenchSide {
+            submitted: 100,
+            completed: 80,
+            shed: 20,
+            failed: 0,
+            wall_s: 1.0,
+            throughput_rps: rps,
+            p50_ms: 1.5,
+            p99_ms: 6.0,
+            shed_rate: 0.2,
+        };
+        let p = BenchPoint {
+            batch: 4,
+            rate_rps: 2000.0,
+            fused: side(300.0),
+            per_item: side(100.0),
+        };
+        let (h, rows) = bench_table(&[p]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), h.len());
+        assert_eq!(rows[0][0], "4");
+        assert_eq!(rows[0][4], "3.00x");
     }
 
     #[test]

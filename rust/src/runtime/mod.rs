@@ -5,7 +5,10 @@
 //! instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
 //! xla_extension 0.5.1 rejects), compiles it on the PJRT CPU client, pins
 //! the weight tensors on-device once, and serves `infer()` calls with only
-//! the activation transfer on the hot path.
+//! the activation transfer on the hot path.  Fused batches
+//! (`infer_batch`) pack N requests into one `[N, …dims]` literal and pay
+//! ONE device dispatch for the whole drained batch, with a reusable
+//! staging buffer so steady-state serving stops allocating per request.
 //!
 //! ## Threading model
 //!
@@ -46,9 +49,15 @@ struct HostModel {
     /// buffers or the copy thread reads freed memory (observed segfault
     /// in `ShapeUtil::ByteSizeOfElements`).
     _weight_literals: Vec<xla::Literal>,
-    input_shape: Vec<usize>,
+    /// Shared with the [`LoadedModel`] handle — one allocation per load,
+    /// never re-cloned per request.
+    input_shape: Arc<Vec<usize>>,
     output_elems: usize,
     id: String,
+    /// Reusable packing buffer for fused batches: cleared and refilled
+    /// per dispatch so the hot path stops allocating a fresh staging
+    /// tensor for every drained batch.
+    staging: Vec<f32>,
 }
 
 struct Host {
@@ -63,15 +72,28 @@ struct LoadInfo {
     compile_time_s: f64,
     weight_upload_time_s: f64,
     num_weights: usize,
+    /// The manifest input shape, shared between host and handle.
+    input_shape: Arc<Vec<usize>>,
 }
 
 enum Cmd {
     PlatformName(mpsc::Sender<String>),
-    Load(Box<Artifact>, mpsc::Sender<Result<LoadInfo>>),
+    /// `Arc`, not a boxed clone: the artifact (weights table, fixtures,
+    /// manifest) crosses to the host thread without copying.
+    Load(Arc<Artifact>, mpsc::Sender<Result<LoadInfo>>),
     Infer {
         slot: usize,
         input: Vec<f32>,
         reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    InferBatch {
+        slot: usize,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Dispatches {
+        slot: usize,
+        reply: mpsc::Sender<Result<u64>>,
     },
     Unload(usize),
 }
@@ -111,13 +133,15 @@ impl Host {
         }
         let weight_upload_time_s = t1.elapsed().as_secs_f64();
 
+        let input_shape = Arc::new(artifact.manifest.input_shape.clone());
         let model = HostModel {
             exe,
             weight_bufs,
             _weight_literals: weight_literals,
-            input_shape: artifact.manifest.input_shape.clone(),
+            input_shape: Arc::clone(&input_shape),
             output_elems: artifact.manifest.output_elems(),
             id: artifact.manifest.id(),
+            staging: Vec::new(),
         };
         let num_weights = model.weight_bufs.len();
         let slot = match self.models.iter().position(Option::is_none) {
@@ -130,7 +154,7 @@ impl Host {
                 self.models.len() - 1
             }
         };
-        Ok(LoadInfo { slot, compile_time_s, weight_upload_time_s, num_weights })
+        Ok(LoadInfo { slot, compile_time_s, weight_upload_time_s, num_weights, input_shape })
     }
 
     fn infer(&self, slot: usize, input: &[f32]) -> Result<Vec<f32>> {
@@ -157,6 +181,71 @@ impl Host {
         }
         Ok(v)
     }
+
+    /// Fused batch execution: pack N inputs into one `[N, …dims]`
+    /// literal, perform a SINGLE device dispatch, slice the stacked
+    /// output back into per-request logits.  The packing reuses the
+    /// model's staging buffer, so steady-state serving performs no
+    /// per-batch staging allocation.
+    fn infer_batch(&mut self, slot: usize, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let m = self
+            .models
+            .get_mut(slot)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| anyhow!("model slot {slot} not loaded"))?;
+        let n = inputs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let expect: usize = m.input_shape.iter().product();
+        for (i, input) in inputs.iter().enumerate() {
+            if input.len() != expect {
+                bail!(
+                    "{}: batch item {i} has {} elements, expected {expect}",
+                    m.id,
+                    input.len()
+                );
+            }
+        }
+        // Manifest shapes carry a leading batch-1 dimension; the fused
+        // literal replaces it with the drained batch size.
+        let mut shape: Vec<usize> = m.input_shape.as_slice().to_vec();
+        if shape.first() == Some(&1) {
+            shape[0] = n;
+        } else {
+            shape.insert(0, n);
+        }
+        m.staging.clear();
+        m.staging.reserve(n * expect);
+        for input in inputs {
+            m.staging.extend_from_slice(input);
+        }
+        let in_buf = self.client.buffer_from_host_buffer(&m.staging, &shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + m.weight_bufs.len());
+        args.push(&in_buf);
+        args.extend(m.weight_bufs.iter());
+        let result = m.exe.execute_batched_b(&args, n)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?.to_vec::<f32>()?;
+        if out.len() != n * m.output_elems {
+            bail!(
+                "{}: batched output has {} elements, expected {}",
+                m.id,
+                out.len(),
+                n * m.output_elems
+            );
+        }
+        Ok(out.chunks_exact(m.output_elems).map(<[f32]>::to_vec).collect())
+    }
+
+    fn dispatches(&self, slot: usize) -> Result<u64> {
+        let m = self
+            .models
+            .get(slot)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow!("model slot {slot} not loaded"))?;
+        Ok(m.exe.dispatch_count())
+    }
 }
 
 fn host_loop(rx: mpsc::Receiver<Cmd>) {
@@ -178,6 +267,12 @@ fn host_loop(rx: mpsc::Receiver<Cmd>) {
             }
             Cmd::Infer { slot, input, reply } => {
                 let _ = reply.send(host.infer(slot, &input));
+            }
+            Cmd::InferBatch { slot, inputs, reply } => {
+                let _ = reply.send(host.infer_batch(slot, &inputs));
+            }
+            Cmd::Dispatches { slot, reply } => {
+                let _ = reply.send(host.dispatches(slot));
             }
             Cmd::Unload(slot) => {
                 if let Some(m) = host.models.get_mut(slot) {
@@ -231,22 +326,27 @@ impl Engine {
         self.platform_name_checked().unwrap_or_else(|_| "unavailable".into())
     }
 
-    /// Compile an artifact and pin its weights on the host thread.
-    pub fn load(&self, artifact: &Artifact) -> Result<LoadedModel> {
+    /// Compile an artifact and pin its weights on the host thread.  Takes
+    /// an `Arc` so the artifact crosses to the host thread by reference
+    /// count — no whole-`Artifact` clone rides the load channel, and the
+    /// input shape is shared between host and handle.
+    pub fn load(&self, artifact: &Arc<Artifact>) -> Result<LoadedModel> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Cmd::Load(Box::new(artifact.clone()), rtx))
+            .send(Cmd::Load(Arc::clone(artifact), rtx))
             .map_err(|_| anyhow!("runtime host thread died"))?;
         let info = rrx.recv().context("runtime host dropped reply")??;
+        let LoadInfo { slot, compile_time_s, weight_upload_time_s, num_weights, input_shape } =
+            info;
         Ok(LoadedModel {
             tx: self.tx.clone(),
-            slot: info.slot,
-            input_shape: artifact.manifest.input_shape.clone(),
+            slot,
+            input_shape,
             output_elems: artifact.manifest.output_elems(),
             id: artifact.manifest.id(),
-            compile_time_s: info.compile_time_s,
-            weight_upload_time_s: info.weight_upload_time_s,
-            num_weights: info.num_weights,
+            compile_time_s,
+            weight_upload_time_s,
+            num_weights,
         })
     }
 }
@@ -257,8 +357,9 @@ impl Engine {
 pub struct LoadedModel {
     tx: mpsc::Sender<Cmd>,
     slot: usize,
-    /// NHWC input shape from the manifest.
-    pub input_shape: Vec<usize>,
+    /// NHWC input shape from the manifest (shared with the runtime host —
+    /// handle clones bump a refcount instead of copying the dims).
+    pub input_shape: Arc<Vec<usize>>,
     /// Number of output logits.
     pub output_elems: usize,
     /// Artifact identity (`model_variant`).
@@ -287,6 +388,41 @@ impl LoadedModel {
         rrx.recv().context("runtime host dropped reply")?
     }
 
+    /// Fused batch inference: N inputs → ONE device dispatch → N logit
+    /// vectors, in submission order.  Bit-identical to N sequential
+    /// [`infer`](Self::infer) calls on the same weights, but the
+    /// per-dispatch overhead (launch, transfer setup) is paid once for
+    /// the whole batch.  An empty batch returns an empty vec without
+    /// touching the device.
+    pub fn infer_batch(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.infer_batch_owned(inputs.iter().map(|i| i.to_vec()).collect())
+    }
+
+    /// Owned-input variant of [`infer_batch`](Self::infer_batch): the
+    /// serving hot path already owns the preprocessed tensors, so handing
+    /// them to the runtime host avoids one full activation copy per item.
+    pub fn infer_batch_owned(&self, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::InferBatch { slot: self.slot, inputs, reply: rtx })
+            .map_err(|_| anyhow!("runtime host thread died"))?;
+        rrx.recv().context("runtime host dropped reply")?
+    }
+
+    /// Number of device dispatches this model has performed so far (a
+    /// fused batch counts once).  Benchmarks and tests use this to prove
+    /// the amortization reached the device.
+    pub fn dispatch_count(&self) -> Result<u64> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Dispatches { slot: self.slot, reply: rtx })
+            .map_err(|_| anyhow!("runtime host thread died"))?;
+        rrx.recv().context("runtime host dropped reply")?
+    }
+
     /// Release the device-pinned weights (pods call this on terminate).
     pub fn unload(self) {
         let _ = self.tx.send(Cmd::Unload(self.slot));
@@ -301,7 +437,7 @@ impl LoadedModel {
 /// Load + fixture-check an artifact in one call; returns the model and the
 /// max |Δ| observed across fixtures.  This is the paper's "client container
 /// verifies the AIF service" feature, folded into deployment.
-pub fn load_verified(engine: &Engine, artifact: &Artifact) -> Result<(LoadedModel, f64)> {
+pub fn load_verified(engine: &Engine, artifact: &Arc<Artifact>) -> Result<(LoadedModel, f64)> {
     let model = engine.load(artifact)?;
     let fixtures = artifact.load_fixtures()?;
     let mut max_delta = 0f64;
@@ -322,6 +458,6 @@ pub fn load_verified(engine: &Engine, artifact: &Artifact) -> Result<(LoadedMode
 
 /// Convenience: load an artifact directory by path.
 pub fn load_dir(engine: &Engine, dir: impl AsRef<Path>) -> Result<LoadedModel> {
-    let artifact = Artifact::load(dir)?;
+    let artifact = Arc::new(Artifact::load(dir)?);
     engine.load(&artifact)
 }

@@ -5,6 +5,12 @@
 //! the per-platform Base Servers: the pre/post-processing interface, the
 //! request loop, dynamic batching, and the metrics collector.  Rust owns
 //! the event loop (std threads + channels; python never runs here).
+//!
+//! Batching is fused end-to-end: a drained batch executes as ONE device
+//! dispatch ([`AifServer::handle_batch`] →
+//! [`LoadedModel::infer_batch_owned`]), with pre/post-processing per item
+//! around it — the per-dispatch overhead is amortized over the batch
+//! instead of being paid per request.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -12,7 +18,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::artifact::Artifact;
 use crate::metrics::Collector;
@@ -109,7 +115,13 @@ pub struct AifServer {
 
 impl AifServer {
     /// Deploy an artifact: compile, pin weights, wire the interface.
-    pub fn deploy(engine: &Engine, artifact: &Artifact, prepost: Arc<dyn PrePost>) -> Result<Self> {
+    /// Takes an `Arc` so the artifact is shared with the runtime host
+    /// thread instead of cloned into it.
+    pub fn deploy(
+        engine: &Engine,
+        artifact: &Arc<Artifact>,
+        prepost: Arc<dyn PrePost>,
+    ) -> Result<Self> {
         let m = &artifact.manifest;
         let plat = platform::get(&m.variant)
             .with_context(|| format!("no platform for variant {}", m.variant))?;
@@ -139,36 +151,93 @@ impl AifServer {
 
     /// Handle one request that already waited `queue_wait_ms` in an
     /// external queue (the fabric's per-node batchers use this so queue
-    /// time is attributed in the metrics).
+    /// time is attributed in the metrics).  A batch of one through the
+    /// fused path — bit-identical logits, identical cost-model draws.
     pub fn handle_queued(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
-        let input = self.prepost.preprocess(&req.payload);
-        let t0 = Instant::now();
-        // Owned handoff: no second copy of the activation (§Perf L3-1).
-        let logits = match self.model.infer_owned(input) {
-            Ok(l) => l,
-            Err(e) => {
+        self.handle_batch(std::slice::from_ref(req), &[queue_wait_ms]).remove(0)
+    }
+
+    /// Handle a drained batch with ONE fused device dispatch.
+    ///
+    /// Pre/post-processing runs per item around a single
+    /// [`LoadedModel::infer_batch_owned`] execution, so the per-dispatch
+    /// overhead is paid once for the whole batch (the paper's §IV-C batch
+    /// lever, finally reaching the device).  Results come back in request
+    /// order.  Malformed items (wrong input size) fail alone — they are
+    /// excluded from the fused dispatch instead of poisoning it; a failure
+    /// of the fused execution itself fails every fused item.
+    pub fn handle_batch(
+        &self,
+        reqs: &[Request],
+        queue_wait_ms: &[f64],
+    ) -> Vec<Result<Response>> {
+        assert_eq!(reqs.len(), queue_wait_ms.len(), "one queue wait per request");
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let expect: usize = self.model.input_shape.iter().product();
+        let mut out: Vec<Option<Result<Response>>> = (0..reqs.len()).map(|_| None).collect();
+        let mut inputs = Vec::with_capacity(reqs.len());
+        let mut fused_idx = Vec::with_capacity(reqs.len());
+        for (i, req) in reqs.iter().enumerate() {
+            let input = self.prepost.preprocess(&req.payload);
+            if input.len() == expect {
+                inputs.push(input);
+                fused_idx.push(i);
+            } else {
                 self.metrics.record_error();
-                return Err(e);
+                out[i] = Some(Err(anyhow!(
+                    "{}: input has {} elements, expected {expect}",
+                    self.model.id,
+                    input.len()
+                )));
             }
-        };
-        let real = t0.elapsed();
-        let prediction = self.prepost.postprocess(&logits);
-        let service_ms = {
-            let mut rng = self.rng.lock().unwrap();
-            self.platform.sample_latency_ms(self.gflops, self.native, &mut rng)
-        };
-        self.metrics.record(
-            service_ms,
-            real,
-            std::time::Duration::from_secs_f64(queue_wait_ms / 1e3),
-        );
-        Ok(Response {
-            id: req.id,
-            prediction,
-            service_ms,
-            real_compute_ms: real.as_secs_f64() * 1e3,
-            queue_wait_ms,
-        })
+        }
+        if !fused_idx.is_empty() {
+            let n = fused_idx.len();
+            let t0 = Instant::now();
+            // Owned handoff: no second copy of the activations (§Perf L3-1).
+            match self.model.infer_batch_owned(inputs) {
+                Ok(logits) => {
+                    // One dispatch: attribute the measured wall and the
+                    // sampled fused-dispatch latency evenly across items.
+                    let real = t0.elapsed() / n as u32;
+                    let total_ms = {
+                        let mut rng = self.rng.lock().unwrap();
+                        self.platform.sample_batch_latency_ms(
+                            self.gflops,
+                            self.native,
+                            n,
+                            &mut rng,
+                        )
+                    };
+                    let service_ms = total_ms / n as f64;
+                    for (&i, lg) in fused_idx.iter().zip(&logits) {
+                        let prediction = self.prepost.postprocess(lg);
+                        self.metrics.record(
+                            service_ms,
+                            real,
+                            std::time::Duration::from_secs_f64(queue_wait_ms[i] / 1e3),
+                        );
+                        out[i] = Some(Ok(Response {
+                            id: reqs[i].id,
+                            prediction,
+                            service_ms,
+                            real_compute_ms: real.as_secs_f64() * 1e3,
+                            queue_wait_ms: queue_wait_ms[i],
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &i in &fused_idx {
+                        self.metrics.record_error();
+                        out[i] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every batched request answered")).collect()
     }
 
     /// Platform this variant runs on.
@@ -241,13 +310,20 @@ impl ServerHandle {
                             }
                         }
                     }
+                    // The whole drained batch executes as ONE fused
+                    // dispatch; responses fan back out per request.
+                    let mut reqs = Vec::with_capacity(batch.len());
+                    let mut waits = Vec::with_capacity(batch.len());
+                    let mut replies = Vec::with_capacity(batch.len());
                     for (req, enq, reply) in batch {
-                        let wait_ms = enq.elapsed().as_secs_f64() * 1e3;
-                        let resp = server
-                            .handle_queued(&req, wait_ms)
-                            .map_err(|e| e.to_string());
+                        waits.push(enq.elapsed().as_secs_f64() * 1e3);
+                        reqs.push(req);
+                        replies.push(reply);
+                    }
+                    let results = server.handle_batch(&reqs, &waits);
+                    for (result, reply) in results.into_iter().zip(&replies) {
                         inflight.fetch_sub(1, Ordering::Relaxed);
-                        let _ = reply.send(resp);
+                        let _ = reply.send(result.map_err(|e| e.to_string()));
                     }
                 })
             })

@@ -1,0 +1,160 @@
+//! Integration: fused batch execution — bit-identical equivalence with
+//! sequential inference, single-dispatch accounting, per-item fault
+//! isolation, and the fused server batcher.
+//!
+//! Runs on a synthetic on-disk artifact (HLO text + empty weights), so no
+//! `make artifacts` is needed: the vendored substrate executes the graph
+//! shape-faithfully and counts device dispatches.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tf2aif::artifact::{Artifact, Manifest};
+use tf2aif::runtime::Engine;
+use tf2aif::serving::{AifServer, BatcherConfig, ImageClassify, Request, ServerHandle};
+
+/// A loadable artifact directory: ENTRY result shape `f32[1,10]`, input
+/// `[1, 4, 4, 1]` (16 elements), no weight tensors.
+fn synthetic_artifact(tag: &str) -> Arc<Artifact> {
+    let dir: PathBuf = std::env::temp_dir()
+        .join(format!("tf2aif_batch_{}_{tag}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(
+        dir.join("model.hlo.txt"),
+        "HloModule tiny\n\nENTRY main (p0: f32[1,4,4,1]) -> (f32[1,10]) {\n  \
+         ROOT t = tuple()\n}\n",
+    )
+    .unwrap();
+    fs::write(dir.join("weights.bin"), b"").unwrap();
+    let manifest = Manifest {
+        model: "tiny".to_string(),
+        variant: "CPU".to_string(),
+        platform: "x86 CPU".to_string(),
+        framework: "TensorFlow Lite".to_string(),
+        precision: "FP32".to_string(),
+        mode: "fp32".to_string(),
+        baseline_of: String::new(),
+        input_shape: vec![1, 4, 4, 1],
+        output_shape: vec![1, 10],
+        params: Vec::new(),
+        fixtures: Vec::new(),
+        param_count: 0,
+        weights_bytes: 0,
+        master_size_mb: 0.0,
+        macs: 1000,
+        gflops: 0.001,
+        layers: 1,
+        convert_time_s: 0.0,
+        lower_time_s: 0.0,
+        calibration_scheme: "none".to_string(),
+    };
+    Arc::new(Artifact { dir, manifest })
+}
+
+#[test]
+fn infer_batch_matches_sequential_infer_bit_for_bit() {
+    let artifact = synthetic_artifact("equiv");
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load(&artifact).unwrap();
+    let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32 * 0.5; 16]).collect();
+    let sequential: Vec<Vec<f32>> =
+        inputs.iter().map(|x| model.infer(x).unwrap()).collect();
+    let views: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
+    let fused = model.infer_batch(&views).unwrap();
+    assert_eq!(fused.len(), sequential.len());
+    for (f, s) in fused.iter().zip(&sequential) {
+        assert_eq!(f.len(), 10);
+        assert_eq!(f, s, "fused and sequential logits must be bit-identical");
+    }
+    // 5 sequential dispatches + exactly ONE fused dispatch for the batch.
+    assert_eq!(model.dispatch_count().unwrap(), 6);
+}
+
+#[test]
+fn infer_batch_validates_every_item_and_handles_empty() {
+    let artifact = synthetic_artifact("validate");
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load(&artifact).unwrap();
+    let good = [0.0f32; 16];
+    let bad = [0.0f32; 3];
+    assert!(
+        model.infer_batch(&[&good[..], &bad[..]]).is_err(),
+        "a malformed item must fail the runtime-level batch"
+    );
+    assert_eq!(model.dispatch_count().unwrap(), 0, "rejected before dispatch");
+    let empty: Vec<&[f32]> = Vec::new();
+    assert!(model.infer_batch(&empty).unwrap().is_empty());
+    assert_eq!(model.dispatch_count().unwrap(), 0, "empty batch touches no device");
+}
+
+#[test]
+fn server_batcher_fuses_and_answers_every_request() {
+    let artifact = synthetic_artifact("serve");
+    let engine = Engine::cpu().unwrap();
+    let server =
+        Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify)).unwrap());
+    let handle =
+        ServerHandle::spawn(Arc::clone(&server), BatcherConfig { max_batch: 4, workers: 2 });
+    let pending: Vec<_> = (0..40)
+        .map(|i| handle.submit(Request { id: i, payload: vec![0.25 * (i as f32 + 1.0); 16] }))
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, i as u64, "responses matched to requests across fused batches");
+        assert!(resp.prediction.class < 10);
+        assert!(resp.service_ms > 0.0);
+    }
+    handle.shutdown();
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 40);
+    assert_eq!(snap.errors, 0);
+    let dispatches = server.model.dispatch_count().unwrap();
+    assert!(
+        dispatches >= 1 && dispatches <= 40,
+        "fused dispatches must never exceed requests, got {dispatches}"
+    );
+}
+
+#[test]
+fn handle_batch_isolates_malformed_items() {
+    let artifact = synthetic_artifact("isolate");
+    let engine = Engine::cpu().unwrap();
+    let server =
+        Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify)).unwrap());
+    let reqs = vec![
+        Request { id: 0, payload: vec![0.1; 16] },
+        Request { id: 1, payload: vec![0.1; 7] },
+        Request { id: 2, payload: vec![0.2; 16] },
+    ];
+    let out = server.handle_batch(&reqs, &[0.0, 0.0, 0.0]);
+    assert_eq!(out.len(), 3);
+    assert!(out[0].is_ok(), "well-formed item served");
+    assert!(out[1].is_err(), "malformed item fails alone");
+    assert!(out[2].is_ok(), "…without poisoning the rest of the batch");
+    assert_eq!(out[0].as_ref().unwrap().id, 0);
+    assert_eq!(out[2].as_ref().unwrap().id, 2);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.errors, 1);
+    // The two good items rode ONE fused dispatch.
+    assert_eq!(server.model.dispatch_count().unwrap(), 1);
+}
+
+#[test]
+fn handle_queued_is_a_fused_batch_of_one() {
+    let artifact = synthetic_artifact("single");
+    let engine = Engine::cpu().unwrap();
+    let server =
+        Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify)).unwrap());
+    let resp = server.handle(&Request { id: 7, payload: vec![0.5; 16] }).unwrap();
+    assert_eq!(resp.id, 7);
+    assert_eq!(server.model.dispatch_count().unwrap(), 1);
+    assert!(server.handle(&Request { id: 8, payload: vec![0.5; 3] }).is_err());
+    assert_eq!(server.metrics.snapshot().errors, 1);
+    assert_eq!(
+        server.model.dispatch_count().unwrap(),
+        1,
+        "malformed single request never reaches the device"
+    );
+}

@@ -97,6 +97,9 @@ fn shedding_kicks_in_exactly_at_the_admission_bound() {
         max_batch: 4,
         workers: 1,
         time_scale: 0.0,
+        // The flood reuses one payload; dedup would collapse it into a
+        // single execution — this test is about the admission bound.
+        dedup: false,
         ..Default::default()
     };
     let gate = Gate::closed_gate();
@@ -200,6 +203,9 @@ fn queue_bound_sheds_under_sustained_overload_then_recovers() {
         workers: 1,
         replicas_per_model: 1,
         time_scale: 1.0,
+        // Identical burst payloads: dedup off, this test is about
+        // shedding and recovery at the admission bound.
+        dedup: false,
         ..Default::default()
     };
     let fabric = place(&cfg, None);
@@ -222,4 +228,78 @@ fn queue_bound_sheds_under_sustained_overload_then_recovers() {
         Submission::Enqueued(_)
     ));
     fabric.shutdown();
+}
+
+#[test]
+fn identical_concurrent_requests_collapse_into_one_execution() {
+    // Gate the executors closed so the leader stays in flight, then
+    // submit K identical payloads: one execution, K personalized
+    // responses (router-level dedup / response memoization).
+    let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+    let gate = Gate::closed_gate();
+    let fabric = place(&cfg, Some(Arc::clone(&gate)));
+    let payload = vec![0.5; 64];
+    let k = 8u64;
+    let mut rxs = Vec::new();
+    for _ in 0..k {
+        match fabric.submit("lenet", payload.clone()).unwrap() {
+            Submission::Enqueued(rx) => rxs.push(rx),
+            Submission::Shed => panic!("dedup'd submissions must not shed"),
+        }
+    }
+    assert_eq!(fabric.dedup_hits(), k - 1, "K-1 followers piggyback on the leader");
+    gate.open();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().expect("every caller must be answered") {
+            Outcome::Completed(resp) => assert_eq!(
+                resp.id, i as u64,
+                "memoized response carries the caller's own request id"
+            ),
+            Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 1, "K identical concurrent requests → ONE execution");
+    assert_eq!(fabric.fleet_report(1.0).deduped, k - 1);
+
+    // The in-flight entry was unregistered on completion: the same
+    // payload now executes afresh.
+    match fabric.submit("lenet", payload).unwrap() {
+        Submission::Enqueued(rx) => {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        Submission::Shed => panic!("idle fabric must admit"),
+    }
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 2, "post-completion resubmission is a fresh execution");
+    fabric.shutdown();
+}
+
+#[test]
+fn fused_batching_beats_per_item_execution_under_overload() {
+    // The tentpole's acceptance property, as a fast smoke: at batch 4 on
+    // overloaded simulated pods, fused dispatch (overhead paid once per
+    // drained batch) must sustain strictly more completed throughput
+    // than the per-item reference path (overhead paid per request).
+    use tf2aif::fabric::bench::{run_sweep, BenchConfig};
+    let cfg = BenchConfig {
+        batches: vec![4],
+        rates: vec![20_000.0],
+        requests: 200,
+        time_scale: 2.0,
+        models: vec!["mobilenetv1".into()],
+        payload_pool: 8,
+        ..Default::default()
+    };
+    let points = run_sweep(&cfg).unwrap();
+    assert_eq!(points.len(), 1);
+    let p = &points[0];
+    assert_eq!(p.batch, 4);
+    assert!(p.fused.completed > 0 && p.per_item.completed > 0);
+    assert!(
+        p.fused.throughput_rps > p.per_item.throughput_rps * 1.2,
+        "fused {:.0} rps must clearly beat per-item {:.0} rps",
+        p.fused.throughput_rps,
+        p.per_item.throughput_rps
+    );
 }

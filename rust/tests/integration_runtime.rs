@@ -4,6 +4,8 @@
 //! Requires `make artifacts` to have run; tests skip gracefully when the
 //! artifacts directory is absent so `cargo test` stays usable mid-setup.
 
+use std::sync::Arc;
+
 use tf2aif::artifact::{self, Artifact};
 use tf2aif::runtime::{load_verified, Engine};
 
@@ -19,7 +21,7 @@ fn lenet_all_variants_match_python_fixtures() {
     }
     let engine = Engine::cpu().unwrap();
     for variant in ["AGX", "ARM", "CPU", "ALVEO", "GPU", "CPU_TF", "GPU_TF"] {
-        let a = Artifact::load(format!("artifacts/lenet_{variant}")).unwrap();
+        let a = Arc::new(Artifact::load(format!("artifacts/lenet_{variant}")).unwrap());
         let (_, delta) = load_verified(&engine, &a).unwrap();
         // Same HLO, same inputs, same XLA backend as the python jit —
         // parity should be at float-noise level.
@@ -37,7 +39,7 @@ fn mobilenet_int8_and_bf16_parity() {
     // drift → tight bound.  bf16: XLA may fuse differently than the
     // python jit, re-rounding intermediates → bf16-scale bound.
     for (variant, tol) in [("ARM", 1e-2), ("GPU", 0.1)] {
-        let a = Artifact::load(format!("artifacts/mobilenetv1_{variant}")).unwrap();
+        let a = Arc::new(Artifact::load(format!("artifacts/mobilenetv1_{variant}")).unwrap());
         let (model, delta) = load_verified(&engine, &a).unwrap();
         assert!(delta < tol, "mobilenetv1_{variant}: delta {delta}");
         assert_eq!(model.output_elems, 200);
@@ -50,7 +52,7 @@ fn infer_validates_input_shape() {
         return;
     }
     let engine = Engine::cpu().unwrap();
-    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let a = Arc::new(Artifact::load("artifacts/lenet_CPU").unwrap());
     let model = engine.load(&a).unwrap();
     assert!(model.infer(&[0.0; 3]).is_err(), "wrong input size must error");
     assert!(model.infer(&vec![0.0; 32 * 32]).is_ok());
@@ -62,7 +64,7 @@ fn unload_frees_slot_and_later_infer_fails() {
         return;
     }
     let engine = Engine::cpu().unwrap();
-    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let a = Arc::new(Artifact::load("artifacts/lenet_CPU").unwrap());
     let model = engine.load(&a).unwrap();
     let clone = model.clone();
     model.unload();
@@ -75,7 +77,7 @@ fn engine_is_shared_across_threads() {
         return;
     }
     let engine = Engine::cpu().unwrap();
-    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let a = Arc::new(Artifact::load("artifacts/lenet_CPU").unwrap());
     let model = engine.load(&a).unwrap();
     let fixtures = a.load_fixtures().unwrap();
     let handles: Vec<_> = (0..4)

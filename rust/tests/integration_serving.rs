@@ -22,7 +22,7 @@ fn deploy(variant: &str) -> Option<Arc<AifServer>> {
         return None;
     }
     let engine = Engine::cpu().unwrap();
-    let a = Artifact::load(format!("artifacts/lenet_{variant}")).unwrap();
+    let a = Arc::new(Artifact::load(format!("artifacts/lenet_{variant}")).unwrap());
     Some(Arc::new(AifServer::deploy(&engine, &a, Arc::new(ImageClassify)).unwrap()))
 }
 
@@ -125,7 +125,7 @@ fn custom_prepost_interface_is_honored() {
         return;
     }
     let engine = Engine::cpu().unwrap();
-    let a = Artifact::load("artifacts/lenet_CPU").unwrap();
+    let a = Arc::new(Artifact::load("artifacts/lenet_CPU").unwrap());
     let server = AifServer::deploy(&engine, &a, Arc::new(Custom)).unwrap();
     let mut rng = Rng::new(4);
     let resp = server

@@ -10,6 +10,10 @@
 //!   the entry computation's result shape (no verification of the body);
 //! - `PjRtClient::compile` produces an executable whose `execute_b`
 //!   returns a zero-filled tensor of the recorded result shape;
+//! - `execute_batched_b` models fused cross-request batching: one device
+//!   dispatch for N stacked inputs, result scaled by N along the leading
+//!   batch dimension, with a per-executable dispatch counter so callers
+//!   can assert the amortization actually happened;
 //! - buffers/literals are plain host byte vectors.
 //!
 //! Everything *around* the runtime (serving loops, batching, routing,
@@ -17,9 +21,16 @@
 //! only the numeric values coming out of `execute` are zeros, so
 //! fixture-parity checks (`tf2aif verify`) will report deltas when run on
 //! this substrate.  Swap the `xla` path dependency in the workspace
-//! `Cargo.toml` for the real bindings to get bit-true execution.
+//! `Cargo.toml` for the real bindings to get bit-true execution — note
+//! that since the fused-batch work the runtime also calls
+//! `execute_batched_b` / `dispatch_count`, which the real
+//! `PjRtLoadedExecutable` does not expose: the swap needs a thin adapter
+//! that re-specializes (caches) one executable per seen batch size — or
+//! lowers with a dynamic leading dimension — and counts executes.
 
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Error type for every fallible operation in this substrate.
 #[derive(Debug, Clone)]
@@ -206,17 +217,48 @@ impl FromF32 for f32 {
     }
 }
 
-/// A compiled executable (simulated: remembers the result shape).
+/// A compiled executable (simulated: remembers the result shape and
+/// counts dispatches so callers can assert batching amortization).
 #[derive(Debug, Clone)]
 pub struct PjRtLoadedExecutable {
     result_elems: usize,
+    /// Dispatch counter, shared across clones of the handle — one
+    /// increment per `execute*` call, regardless of batch size (the
+    /// real PJRT submits one device program per execute).
+    dispatches: Arc<AtomicU64>,
 }
 
 impl PjRtLoadedExecutable {
     /// Execute with buffer arguments; returns one zero-filled result
     /// tensor of the entry computation's shape per device (one device).
-    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Ok(vec![vec![PjRtBuffer { data: vec![0.0; self.result_elems] }]])
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_batched_b(args, 1)
+    }
+
+    /// Execute a fused batch: the leading (batch) dimension of the input
+    /// literal carries `batch` stacked items, and the result tensor is
+    /// the entry computation's shape scaled by `batch` along that
+    /// dimension.  This is ONE device dispatch — the amortization
+    /// cross-request batching exists to buy.  On the real bindings this
+    /// corresponds to executing a computation lowered with a dynamic (or
+    /// re-specialized) leading batch dimension.
+    pub fn execute_batched_b(
+        &self,
+        _args: &[&PjRtBuffer],
+        batch: usize,
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if batch == 0 {
+            return Err(XlaError::new("batched execution with batch size 0"));
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        Ok(vec![vec![PjRtBuffer { data: vec![0.0; batch * self.result_elems] }]])
+    }
+
+    /// Number of device dispatches this executable (and its clones) has
+    /// performed.  A fused batch of N counts once; N per-item calls count
+    /// N times.
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
     }
 }
 
@@ -239,7 +281,10 @@ impl PjRtClient {
 
     /// Compile a computation for this client.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Ok(PjRtLoadedExecutable { result_elems: comp.result_elems })
+        Ok(PjRtLoadedExecutable {
+            result_elems: comp.result_elems,
+            dispatches: Arc::new(AtomicU64::new(0)),
+        })
     }
 
     /// Upload a host literal to the device.
@@ -301,12 +346,38 @@ mod tests {
         assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
     }
 
+    fn test_exe(result_elems: usize) -> PjRtLoadedExecutable {
+        PjRtLoadedExecutable { result_elems, dispatches: Arc::new(AtomicU64::new(0)) }
+    }
+
     #[test]
     fn execute_returns_result_shape() {
-        let exe = PjRtLoadedExecutable { result_elems: 10 };
+        let exe = test_exe(10);
         let out = exe.execute_b(&[]).unwrap();
         let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
         assert_eq!(v.len(), 10);
+    }
+
+    #[test]
+    fn batched_execute_scales_result_and_counts_one_dispatch() {
+        let exe = test_exe(10);
+        let out = exe.execute_batched_b(&[], 4).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 40, "batch of 4 → 4× the entry result elems");
+        assert_eq!(exe.dispatch_count(), 1, "a fused batch is ONE device dispatch");
+        for _ in 0..3 {
+            exe.execute_b(&[]).unwrap();
+        }
+        assert_eq!(exe.dispatch_count(), 4, "per-item calls count individually");
+        assert!(exe.execute_batched_b(&[], 0).is_err());
+    }
+
+    #[test]
+    fn dispatch_counter_is_shared_across_clones() {
+        let exe = test_exe(2);
+        let clone = exe.clone();
+        clone.execute_b(&[]).unwrap();
+        assert_eq!(exe.dispatch_count(), 1);
     }
 
     #[test]
