@@ -30,8 +30,16 @@ fn main() -> anyhow::Result<()> {
 
     // ── 2. Backend shards every model across the testbed ────────────────
     let mut backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
-    let cfg = FabricConfig { queue_capacity: 12, workers: 2, ..Default::default() };
-    let fabric = Fabric::place_sim(&backend, &mut cluster, &cfg, None)?;
+    // Adaptive batch sizing on: each pod picks its drain size from
+    // backlog + latency feedback instead of a hand-tuned constant.
+    let cfg = FabricConfig {
+        queue_capacity: 12,
+        workers: 2,
+        adaptive: true,
+        max_batch: 16,
+        ..Default::default()
+    };
+    let fabric = Fabric::place_sim(&backend, cluster, &cfg, None)?;
     backend.feedback = Some(fabric.feedback());
     println!("placed {} pods over {:?}:", fabric.plans().len(), fabric.nodes_spanned());
     for p in fabric.plans() {
@@ -68,12 +76,16 @@ fn main() -> anyhow::Result<()> {
     // ── 5. The feedback loop, visibly closed ────────────────────────────
     println!("\nmeasured feedback re-scores placement:");
     for model in ["lenet", "inceptionv4"] {
-        if let Ok(d) = backend.select(model, &cluster) {
+        if let Ok(d) = fabric.with_cluster(|cluster| backend.select(model, cluster)) {
             println!(
                 "  {model:<12} → {} on {} (modeled {:.2} ms, estimated {:.2} ms)",
                 d.variant, d.node, d.modeled_ms, d.estimated_ms
             );
         }
+    }
+    println!("\nadaptive batch targets after the run (pod → drain size):");
+    for (key, target) in fabric.batch_targets() {
+        println!("  {key:<22} {target}");
     }
     fabric.shutdown();
     println!("\nfabric shut down; queues drained");

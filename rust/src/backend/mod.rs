@@ -282,7 +282,7 @@ mod tests {
         let store = Arc::new(FeedbackStore::new(0.3));
         let key = FeedbackStore::key("inceptionv4_GPU", "NE-2");
         for _ in 0..100 {
-            store.observe(&key, 50.0);
+            store.observe(&key, 50.0, 0.0);
         }
         b.feedback = Some(Arc::clone(&store));
         let warm = b.select("inceptionv4", &cluster).unwrap();

@@ -1,19 +1,26 @@
-//! `tf2aif bench` — the fused-batch throughput sweep.
+//! `tf2aif bench` — fabric performance sweeps and their trajectory file.
 //!
-//! For every (batch size × arrival rate) point the sweep spins up a fresh
-//! simulated fabric twice — once with fused batch execution (one device
-//! dispatch per drained batch) and once on the per-item reference path
-//! (one dispatch per request) — drives an identical open-loop Poisson
-//! workload through the router, and records completed throughput, e2e
-//! p50/p99 and shed rate for both sides.  Results are printed as a table
-//! and written to machine-readable `BENCH_fabric.json`, so every future
-//! performance PR has a trajectory to beat.
+//! Three measurements, all driven through the identical `Fabric::run_with`
+//! loop and written to machine-readable `BENCH_fabric.json` so every
+//! future performance PR has a trajectory to beat:
 //!
-//! Dedup is disabled for the measurement (the payload pool recycles
-//! tensors, and collapsing them would measure memoization, not batching),
-//! and both sides share the workload seed, the placement, and the
-//! submission loop — the only variable is how the drained batch reaches
-//! the device.
+//! 1. **Fused sweep** (PR 2): for every (batch size × arrival rate)
+//!    point, fused batch execution (one device dispatch per drained
+//!    batch) vs the per-item reference path under the same Poisson load.
+//! 2. **Control sweep** (this PR): for every arrival rate, the adaptive
+//!    batch controller vs every fixed `max_batch` setting — the claim
+//!    under test is that one self-tuning controller matches the best
+//!    hand-picked constant at high load while holding the tail inside
+//!    the SLO at low load.
+//! 3. **Autoscale comparison**: the same overload against a fixed
+//!    single-replica fleet and against the backlog-driven autoscaler —
+//!    the claim under test is that scaling out absorbs load the fixed
+//!    replica count sheds.
+//!
+//! Dedup and the response cache are disabled for every measurement (the
+//! payload pool recycles tensors; collapsing them would measure
+//! memoization, not batching or scaling), and compared sides share the
+//! workload seed, the placement, and the submission loop.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -26,12 +33,13 @@ use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::workload::{image_like, Arrival};
 
-use super::{sim, Fabric, FabricConfig};
+use super::{sim, AutoscaleConfig, Fabric, FabricConfig};
 
 /// Sweep configuration (CLI: `tf2aif bench`, see `docs/CLI.md`).
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
-    /// Batch sizes to sweep (`max_batch` per point).
+    /// Batch sizes to sweep (`max_batch` per fixed point; their max is
+    /// the adaptive controller's upper bound).
     pub batches: Vec<usize>,
     /// Poisson arrival rates to sweep, requests/second.
     pub rates: Vec<f64>,
@@ -40,7 +48,8 @@ pub struct BenchConfig {
     /// Models placed (empty = every catalog model).  The default sweeps
     /// an overhead-dominated model so the amortization curve is clean.
     pub models: Vec<String>,
-    /// Replicas per model (distinct nodes).
+    /// Replicas per model (distinct nodes); also the autoscaler's
+    /// ceiling in the autoscale comparison.
     pub replicas: usize,
     /// Per-pod admission bound.
     pub queue_capacity: usize,
@@ -52,6 +61,9 @@ pub struct BenchConfig {
     /// Distinct payloads pre-generated per model (cycled during the
     /// drive, keeping payload synthesis off the submission path).
     pub payload_pool: usize,
+    /// Tail-latency objective handed to the adaptive controller in the
+    /// control sweep, ms end-to-end.
+    pub slo_p99_ms: f64,
     /// Workload + pod-noise seed.
     pub seed: u64,
 }
@@ -68,12 +80,13 @@ impl Default for BenchConfig {
             workers: 1,
             time_scale: 1.0,
             payload_pool: 32,
+            slo_p99_ms: 50.0,
             seed: 0xBE7C,
         }
     }
 }
 
-/// One side (fused or per-item) of one sweep point.
+/// One measured drive of one fabric configuration.
 #[derive(Debug, Clone)]
 pub struct BenchSide {
     /// Requests offered to the router.
@@ -95,6 +108,23 @@ pub struct BenchSide {
     pub p99_ms: f64,
     /// Shed fraction of submitted requests.
     pub shed_rate: f64,
+    /// Fleet-wide device dispatches during the drive.
+    pub dispatches: u64,
+    /// Fleet-wide average fused batch size (`completed / dispatches`).
+    pub avg_batch: f64,
+}
+
+/// One drive plus the control-plane counters it ended with.
+#[derive(Debug, Clone)]
+pub struct DriveOutcome {
+    /// The measured side.
+    pub side: BenchSide,
+    /// Replicas the autoscaler added during the drive.
+    pub scale_ups: u64,
+    /// Replicas the autoscaler retired during the drive.
+    pub scale_downs: u64,
+    /// Active pods when the drive finished.
+    pub pods_end: usize,
 }
 
 /// One (batch × rate) sweep point: fused vs per-item under the same load.
@@ -117,6 +147,84 @@ impl BenchPoint {
     }
 }
 
+/// One fixed-`max_batch` side of a control-sweep point.
+#[derive(Debug, Clone)]
+pub struct FixedPoint {
+    /// The hand-picked `max_batch` constant.
+    pub batch: usize,
+    /// Its measured drive.
+    pub side: BenchSide,
+}
+
+/// One arrival rate of the control sweep: every fixed batch setting vs
+/// the adaptive controller.
+#[derive(Debug, Clone)]
+pub struct ControlPoint {
+    /// Poisson arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Fixed-knob baselines, one per swept batch size.
+    pub fixed: Vec<FixedPoint>,
+    /// The adaptive controller (bounded by the largest swept batch).
+    pub adaptive: BenchSide,
+}
+
+/// The adaptive-vs-fixed comparison across arrival rates.
+#[derive(Debug, Clone)]
+pub struct ControlSweep {
+    /// SLO handed to the adaptive controller, ms.
+    pub slo_p99_ms: f64,
+    /// The adaptive controller's drain-size upper bound.
+    pub max_batch: usize,
+    /// One entry per swept arrival rate.
+    pub points: Vec<ControlPoint>,
+}
+
+/// Acceptance summary of a [`ControlSweep`].
+#[derive(Debug, Clone, Copy)]
+pub struct ControlVerdict {
+    /// At the highest swept rate, adaptive throughput is within
+    /// tolerance of (or better than) the best fixed setting.
+    pub throughput_match_at_peak: bool,
+    /// At the highest swept rate, adaptive p99 is within tolerance of
+    /// the best (lowest) fixed p99.
+    pub p99_le_best_fixed_at_peak: bool,
+    /// At the lowest swept rate, adaptive p99 sits inside the SLO.
+    pub p99_within_slo_at_low_rate: bool,
+}
+
+/// The fixed-replicas vs autoscaled comparison under one overload.
+#[derive(Debug, Clone)]
+pub struct AutoscaleCompare {
+    /// Poisson arrival rate of the overload, requests/second.
+    pub rate_rps: f64,
+    /// Fixed fleet: one replica per model, no scaling.
+    pub fixed: BenchSide,
+    /// Autoscaled fleet: starts at one replica, scales on backlog/shed.
+    pub autoscaled: BenchSide,
+    /// Replicas the autoscaler added.
+    pub scale_ups: u64,
+    /// Active pods at the end of the autoscaled drive.
+    pub pods_end: usize,
+}
+
+impl AutoscaleCompare {
+    /// The autoscaler never does worse on sheds than the fixed fleet
+    /// (and strictly better whenever the fixed fleet shed at all).
+    pub fn helps(&self) -> bool {
+        if self.fixed.shed > 0 {
+            self.autoscaled.shed < self.fixed.shed
+        } else {
+            self.autoscaled.shed == 0
+        }
+    }
+
+    /// The strong property: the fixed fleet shed, the autoscaled fleet
+    /// shed nothing.
+    pub fn eliminates_sheds(&self) -> bool {
+        self.fixed.shed > 0 && self.autoscaled.shed == 0
+    }
+}
+
 /// Best fused-over-per-item throughput ratio across points with
 /// batch ≥ 4 (`None` when the sweep had no such point).
 pub fn best_speedup_at_batch_ge4(points: &[BenchPoint]) -> Option<f64> {
@@ -127,8 +235,8 @@ pub fn best_speedup_at_batch_ge4(points: &[BenchPoint]) -> Option<f64> {
         .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
 }
 
-/// The acceptance property: every swept batch size ≥ 4 has at least one
-/// arrival rate where fused throughput strictly beats per-item.
+/// The PR 2 acceptance property: every swept batch size ≥ 4 has at least
+/// one arrival rate where fused throughput strictly beats per-item.
 pub fn fused_beats_per_item_at_batch_ge4(points: &[BenchPoint]) -> bool {
     let batches: std::collections::BTreeSet<usize> =
         points.iter().filter(|p| p.batch >= 4).map(|p| p.batch).collect();
@@ -143,26 +251,72 @@ pub fn fused_beats_per_item_at_batch_ge4(points: &[BenchPoint]) -> bool {
         })
 }
 
-/// Run the full sweep: every batch × rate, fused and per-item.
-pub fn run_sweep(cfg: &BenchConfig) -> Result<Vec<BenchPoint>> {
-    if cfg.batches.is_empty() || cfg.rates.is_empty() {
-        bail!("bench sweep needs at least one batch size and one rate");
+/// Compute the [`ControlVerdict`] with the tolerances the CI gate uses:
+/// at the peak rate the adaptive controller must reach ≥ 85% of the
+/// best fixed throughput, and its p99 must stay within
+/// `max(1.5 × best fixed p99, SLO)` — 1.5× absorbs scheduler noise,
+/// and the SLO floor exists because the controller's latency contract
+/// is the SLO, not beating a hand-tuned constant during its first
+/// convergence dispatches.  A controller stuck at small batches still
+/// fails: its p99 under overload is queue-bound and blows through both
+/// bounds, and its throughput misses the 85% bar.
+pub fn control_verdict(sweep: &ControlSweep) -> ControlVerdict {
+    let peak = sweep
+        .points
+        .iter()
+        .max_by(|a, b| a.rate_rps.partial_cmp(&b.rate_rps).unwrap());
+    let low = sweep
+        .points
+        .iter()
+        .min_by(|a, b| a.rate_rps.partial_cmp(&b.rate_rps).unwrap());
+    let (Some(peak), Some(low)) = (peak, low) else {
+        return ControlVerdict {
+            throughput_match_at_peak: false,
+            p99_le_best_fixed_at_peak: false,
+            p99_within_slo_at_low_rate: false,
+        };
+    };
+    let best_fixed_thr = peak
+        .fixed
+        .iter()
+        .map(|f| f.side.throughput_rps)
+        .fold(0.0f64, f64::max);
+    let best_fixed_p99 = peak
+        .fixed
+        .iter()
+        .filter(|f| f.side.completed > 0)
+        .map(|f| f.side.p99_ms)
+        .fold(f64::INFINITY, f64::min);
+    ControlVerdict {
+        throughput_match_at_peak: peak.adaptive.completed > 0
+            && peak.adaptive.throughput_rps >= 0.85 * best_fixed_thr,
+        p99_le_best_fixed_at_peak: best_fixed_p99.is_finite()
+            && peak.adaptive.completed > 0
+            && peak.adaptive.p99_ms <= f64::max(1.5 * best_fixed_p99, sweep.slo_p99_ms),
+        p99_within_slo_at_low_rate: low.adaptive.completed > 0
+            && low.adaptive.p99_ms <= sweep.slo_p99_ms,
     }
-    let mut points = Vec::with_capacity(cfg.batches.len() * cfg.rates.len());
-    for &batch in &cfg.batches {
-        for &rate in &cfg.rates {
-            let fused = run_point(cfg, batch, rate, true)
-                .with_context(|| format!("fused run (batch {batch}, rate {rate})"))?;
-            let per_item = run_point(cfg, batch, rate, false)
-                .with_context(|| format!("per-item run (batch {batch}, rate {rate})"))?;
-            points.push(BenchPoint { batch, rate_rps: rate, fused, per_item });
-        }
-    }
-    Ok(points)
 }
 
-/// One measured drive: fresh placement, identical workload, one side.
-fn run_point(cfg: &BenchConfig, batch: usize, rate: f64, fused: bool) -> Result<BenchSide> {
+fn base_fabric_config(cfg: &BenchConfig) -> FabricConfig {
+    FabricConfig {
+        queue_capacity: cfg.queue_capacity.max(1),
+        workers: cfg.workers.max(1),
+        replicas_per_model: cfg.replicas.max(1),
+        time_scale: cfg.time_scale,
+        seed: cfg.seed,
+        fused: true,
+        // Pool payloads recycle — dedup or the cache would measure
+        // memoization, not batching/scaling.
+        dedup: false,
+        cache_capacity: 0,
+        ..Default::default()
+    }
+}
+
+/// One measured drive: fresh placement, pooled payloads, one fabric
+/// configuration.
+fn drive(cfg: &BenchConfig, fcfg: &FabricConfig, rate: f64) -> Result<DriveOutcome> {
     let catalog: Vec<_> = sim::synthetic_catalog()
         .into_iter()
         .filter(|a| cfg.models.is_empty() || cfg.models.iter().any(|m| *m == a.manifest.model))
@@ -173,20 +327,7 @@ fn run_point(cfg: &BenchConfig, batch: usize, rate: f64, fused: bool) -> Result<
     let backend = Backend::new(catalog, Policy::MinLatency);
     let mut cluster = Cluster::new(paper_testbed());
     cluster.apply_kube_api_extension();
-    let fcfg = FabricConfig {
-        queue_capacity: cfg.queue_capacity.max(1),
-        max_batch: batch.max(1),
-        workers: cfg.workers.max(1),
-        replicas_per_model: cfg.replicas.max(1),
-        time_scale: cfg.time_scale,
-        seed: cfg.seed,
-        fused,
-        // Pool payloads recycle — dedup would measure memoization, not
-        // batching.
-        dedup: false,
-        ..Default::default()
-    };
-    let fabric = Fabric::place_sim(&backend, &mut cluster, &fcfg, None)?;
+    let fabric = Fabric::place_sim(&backend, cluster, fcfg, None)?;
 
     // Pre-generate the payload pool so payload synthesis stays off the
     // submission path; the drive itself is Fabric's own loop, so pacing
@@ -213,6 +354,13 @@ fn run_point(cfg: &BenchConfig, batch: usize, rate: f64, fused: bool) -> Result<
             pool[(i / models.len()) % pool.len()].clone()
         },
     )?;
+
+    let fleet = fabric.fleet_report(report.wall_s);
+    let pod_reports = fabric.pod_reports(report.wall_s);
+    let dispatches: u64 = pod_reports.iter().map(|r| r.dispatches).sum();
+    let scale_ups = fleet.scale_ups;
+    let scale_downs = fleet.scale_downs;
+    let pods_end = fleet.active_pods;
     fabric.shutdown();
 
     let mut e2e = report.e2e_ms.clone();
@@ -221,54 +369,187 @@ fn run_point(cfg: &BenchConfig, batch: usize, rate: f64, fused: bool) -> Result<
     } else {
         (e2e.percentile(50.0), e2e.percentile(99.0))
     };
-    Ok(BenchSide {
-        submitted: report.submitted,
-        completed: report.completed,
-        shed: report.shed,
-        failed: report.failed,
-        wall_s: report.wall_s,
-        throughput_rps: report.throughput_rps(),
-        p50_ms,
-        p99_ms,
-        shed_rate: report.shed as f64 / report.submitted.max(1) as f64,
+    Ok(DriveOutcome {
+        side: BenchSide {
+            submitted: report.submitted,
+            completed: report.completed,
+            shed: report.shed,
+            failed: report.failed,
+            wall_s: report.wall_s,
+            throughput_rps: report.throughput_rps(),
+            p50_ms,
+            p99_ms,
+            shed_rate: report.shed as f64 / report.submitted.max(1) as f64,
+            dispatches,
+            avg_batch: if dispatches > 0 {
+                report.completed as f64 / dispatches as f64
+            } else {
+                0.0
+            },
+        },
+        scale_ups,
+        scale_downs,
+        pods_end,
     })
 }
 
-/// Write the sweep as machine-readable `BENCH_fabric.json` (schema in
+/// Run the fused-vs-per-item sweep: every batch × rate, both sides.
+pub fn run_sweep(cfg: &BenchConfig) -> Result<Vec<BenchPoint>> {
+    if cfg.batches.is_empty() || cfg.rates.is_empty() {
+        bail!("bench sweep needs at least one batch size and one rate");
+    }
+    let mut points = Vec::with_capacity(cfg.batches.len() * cfg.rates.len());
+    for &batch in &cfg.batches {
+        for &rate in &cfg.rates {
+            let fcfg =
+                FabricConfig { max_batch: batch.max(1), ..base_fabric_config(cfg) };
+            let fused = drive(cfg, &fcfg, rate)
+                .with_context(|| format!("fused run (batch {batch}, rate {rate})"))?;
+            let per_item = drive(cfg, &FabricConfig { fused: false, ..fcfg.clone() }, rate)
+                .with_context(|| format!("per-item run (batch {batch}, rate {rate})"))?;
+            points.push(BenchPoint {
+                batch,
+                rate_rps: rate,
+                fused: fused.side,
+                per_item: per_item.side,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Run the adaptive-vs-fixed control sweep: for every rate, one fixed
+/// baseline per batch size plus one adaptive drive bounded by the
+/// largest.  A fixed baseline is configured identically to the fused
+/// sweep's fused side (same `FabricConfig`, seed and workload), so any
+/// matching measurement in `fused_points` is reused instead of paying
+/// a duplicate drive; pass `&[]` to measure every baseline fresh.
+pub fn run_control_sweep(
+    cfg: &BenchConfig,
+    fused_points: &[BenchPoint],
+) -> Result<ControlSweep> {
+    if cfg.batches.is_empty() || cfg.rates.is_empty() {
+        bail!("control sweep needs at least one batch size and one rate");
+    }
+    let max_batch = cfg.batches.iter().copied().max().unwrap_or(1).max(1);
+    let mut points = Vec::with_capacity(cfg.rates.len());
+    for &rate in &cfg.rates {
+        let mut fixed = Vec::with_capacity(cfg.batches.len());
+        for &batch in &cfg.batches {
+            let reused = fused_points
+                .iter()
+                .find(|p| p.batch == batch && p.rate_rps == rate)
+                .map(|p| p.fused.clone());
+            let side = match reused {
+                Some(side) => side,
+                None => {
+                    let fcfg =
+                        FabricConfig { max_batch: batch.max(1), ..base_fabric_config(cfg) };
+                    drive(cfg, &fcfg, rate)
+                        .with_context(|| format!("fixed run (batch {batch}, rate {rate})"))?
+                        .side
+                }
+            };
+            fixed.push(FixedPoint { batch, side });
+        }
+        let fcfg = FabricConfig {
+            max_batch,
+            adaptive: true,
+            min_batch: 1,
+            slo_p99_ms: cfg.slo_p99_ms,
+            ..base_fabric_config(cfg)
+        };
+        let adaptive = drive(cfg, &fcfg, rate)
+            .with_context(|| format!("adaptive run (rate {rate})"))?;
+        points.push(ControlPoint { rate_rps: rate, fixed, adaptive: adaptive.side });
+    }
+    Ok(ControlSweep { slo_p99_ms: cfg.slo_p99_ms, max_batch, points })
+}
+
+/// Run the autoscale comparison at the highest swept rate: a fixed
+/// single-replica fleet vs the backlog-driven autoscaler (1 →
+/// `cfg.replicas` replicas), both with adaptive batching, double the
+/// sweep's request count so scale-ups have time to matter.
+pub fn run_autoscale_compare(cfg: &BenchConfig) -> Result<AutoscaleCompare> {
+    let rate = cfg.rates.iter().copied().fold(f64::NAN, f64::max);
+    if !rate.is_finite() {
+        bail!("autoscale comparison needs at least one rate");
+    }
+    let max_batch = cfg.batches.iter().copied().max().unwrap_or(1).max(1);
+    let long_cfg = BenchConfig { requests: cfg.requests * 2, ..cfg.clone() };
+    let base = FabricConfig {
+        max_batch,
+        adaptive: true,
+        min_batch: 1,
+        slo_p99_ms: cfg.slo_p99_ms,
+        replicas_per_model: 1,
+        ..base_fabric_config(cfg)
+    };
+    let fixed = drive(&long_cfg, &base, rate).context("fixed single-replica run")?;
+    let auto_cfg = FabricConfig {
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: cfg.replicas.max(1),
+            scale_up_backlog: 4.0,
+            scale_down_backlog: 0.5,
+            hold_ticks: 1,
+            cooldown_ticks: 2,
+            interval_ms: 2,
+        }),
+        ..base.clone()
+    };
+    let auto = drive(&long_cfg, &auto_cfg, rate).context("autoscaled run")?;
+    Ok(AutoscaleCompare {
+        rate_rps: rate,
+        fixed: fixed.side,
+        autoscaled: auto.side,
+        scale_ups: auto.scale_ups,
+        pods_end: auto.pods_end,
+    })
+}
+
+fn side_json(b: &BenchSide) -> Json {
+    obj(vec![
+        ("submitted", n(b.submitted as f64)),
+        ("completed", n(b.completed as f64)),
+        ("shed", n(b.shed as f64)),
+        ("failed", n(b.failed as f64)),
+        ("wall_s", n(b.wall_s)),
+        ("throughput_rps", n(b.throughput_rps)),
+        ("p50_ms", n(b.p50_ms)),
+        ("p99_ms", n(b.p99_ms)),
+        ("shed_rate", n(b.shed_rate)),
+        ("dispatches", n(b.dispatches as f64)),
+        ("avg_batch", n(b.avg_batch)),
+    ])
+}
+
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema in
 /// `docs/CLI.md`) — the perf trajectory future PRs measure against.
+/// `control` and `autoscale` are optional sections; the PR 2 fused
+/// sweep is always present.
 pub fn write_json(
     path: impl AsRef<Path>,
     cfg: &BenchConfig,
     points: &[BenchPoint],
+    control: Option<&ControlSweep>,
+    autoscale: Option<&AutoscaleCompare>,
 ) -> Result<()> {
-    let side = |b: &BenchSide| {
-        obj(vec![
-            ("submitted", n(b.submitted as f64)),
-            ("completed", n(b.completed as f64)),
-            ("shed", n(b.shed as f64)),
-            ("failed", n(b.failed as f64)),
-            ("wall_s", n(b.wall_s)),
-            ("throughput_rps", n(b.throughput_rps)),
-            ("p50_ms", n(b.p50_ms)),
-            ("p99_ms", n(b.p99_ms)),
-            ("shed_rate", n(b.shed_rate)),
-        ])
-    };
     let pts: Vec<Json> = points
         .iter()
         .map(|p| {
             obj(vec![
                 ("batch", n(p.batch as f64)),
                 ("rate_rps", n(p.rate_rps)),
-                ("fused", side(&p.fused)),
-                ("per_item", side(&p.per_item)),
+                ("fused", side_json(&p.fused)),
+                ("per_item", side_json(&p.per_item)),
                 ("fused_speedup", n(p.speedup())),
             ])
         })
         .collect();
-    let doc = obj(vec![
-        ("bench", s("tf2aif fused-batch fabric sweep")),
-        ("version", n(1.0)),
+    let mut top = vec![
+        ("bench", s("tf2aif fabric sweeps")),
+        ("version", n(2.0)),
         (
             "config",
             obj(vec![
@@ -279,6 +560,7 @@ pub fn write_json(
                 ("workers", n(cfg.workers as f64)),
                 ("time_scale", n(cfg.time_scale)),
                 ("payload_pool", n(cfg.payload_pool as f64)),
+                ("slo_p99_ms", n(cfg.slo_p99_ms)),
                 ("seed", n(cfg.seed as f64)),
             ]),
         ),
@@ -291,7 +573,57 @@ pub fn write_json(
             "best_speedup_at_batch_ge4",
             n(best_speedup_at_batch_ge4(points).unwrap_or(0.0)),
         ),
-    ]);
+    ];
+    if let Some(sweep) = control {
+        let verdict = control_verdict(sweep);
+        let cpts: Vec<Json> = sweep
+            .points
+            .iter()
+            .map(|p| {
+                let fixed: Vec<Json> = p
+                    .fixed
+                    .iter()
+                    .map(|f| {
+                        obj(vec![("batch", n(f.batch as f64)), ("side", side_json(&f.side))])
+                    })
+                    .collect();
+                obj(vec![
+                    ("rate_rps", n(p.rate_rps)),
+                    ("fixed", Json::Arr(fixed)),
+                    ("adaptive", side_json(&p.adaptive)),
+                ])
+            })
+            .collect();
+        top.push((
+            "control",
+            obj(vec![
+                ("slo_p99_ms", n(sweep.slo_p99_ms)),
+                ("max_batch", n(sweep.max_batch as f64)),
+                ("points", Json::Arr(cpts)),
+                ("throughput_match_at_peak", Json::Bool(verdict.throughput_match_at_peak)),
+                ("p99_le_best_fixed_at_peak", Json::Bool(verdict.p99_le_best_fixed_at_peak)),
+                (
+                    "p99_within_slo_at_low_rate",
+                    Json::Bool(verdict.p99_within_slo_at_low_rate),
+                ),
+            ]),
+        ));
+    }
+    if let Some(cmp) = autoscale {
+        top.push((
+            "autoscale",
+            obj(vec![
+                ("rate_rps", n(cmp.rate_rps)),
+                ("fixed", side_json(&cmp.fixed)),
+                ("autoscaled", side_json(&cmp.autoscaled)),
+                ("scale_ups", n(cmp.scale_ups as f64)),
+                ("pods_end", n(cmp.pods_end as f64)),
+                ("autoscaler_helps", Json::Bool(cmp.helps())),
+                ("autoscaler_eliminates_sheds", Json::Bool(cmp.eliminates_sheds())),
+            ]),
+        ));
+    }
+    let doc = obj(top);
     if let Some(parent) = path.as_ref().parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -306,17 +638,19 @@ pub fn write_json(
 mod tests {
     use super::*;
 
-    fn side(throughput: f64) -> BenchSide {
+    fn side(throughput: f64, p99: f64, shed: usize) -> BenchSide {
         BenchSide {
             submitted: 100,
-            completed: 90,
-            shed: 10,
+            completed: 100 - shed,
+            shed,
             failed: 0,
             wall_s: 1.0,
             throughput_rps: throughput,
             p50_ms: 2.0,
-            p99_ms: 9.0,
-            shed_rate: 0.1,
+            p99_ms: p99,
+            shed_rate: shed as f64 / 100.0,
+            dispatches: 25,
+            avg_batch: 4.0,
         }
     }
 
@@ -325,15 +659,15 @@ mod tests {
         let good = BenchPoint {
             batch: 4,
             rate_rps: 1000.0,
-            fused: side(300.0),
-            per_item: side(100.0),
+            fused: side(300.0, 9.0, 10),
+            per_item: side(100.0, 9.0, 10),
         };
         assert!((good.speedup() - 3.0).abs() < 1e-9);
         let tie = BenchPoint {
             batch: 8,
             rate_rps: 100.0,
-            fused: side(100.0),
-            per_item: side(100.0),
+            fused: side(100.0, 9.0, 10),
+            per_item: side(100.0, 9.0, 10),
         };
         let pts = vec![good.clone(), tie];
         // Batch 4 wins somewhere and batch 8 never does → not accepted.
@@ -341,8 +675,8 @@ mod tests {
         let winning8 = BenchPoint {
             batch: 8,
             rate_rps: 1000.0,
-            fused: side(500.0),
-            per_item: side(100.0),
+            fused: side(500.0, 9.0, 10),
+            per_item: side(100.0, 9.0, 10),
         };
         let pts = vec![good, winning8];
         assert!(fused_beats_per_item_at_batch_ge4(&pts));
@@ -351,16 +685,91 @@ mod tests {
     }
 
     #[test]
-    fn json_report_round_trips() {
+    fn control_verdict_checks_peak_and_low_rates() {
+        let sweep = ControlSweep {
+            slo_p99_ms: 50.0,
+            max_batch: 16,
+            points: vec![
+                ControlPoint {
+                    rate_rps: 500.0,
+                    fixed: vec![FixedPoint { batch: 1, side: side(400.0, 3.0, 0) }],
+                    adaptive: side(400.0, 3.5, 0),
+                },
+                ControlPoint {
+                    rate_rps: 16000.0,
+                    fixed: vec![
+                        FixedPoint { batch: 1, side: side(1000.0, 60.0, 80) },
+                        FixedPoint { batch: 16, side: side(9000.0, 8.0, 2) },
+                    ],
+                    adaptive: side(8800.0, 9.0, 2),
+                },
+            ],
+        };
+        let v = control_verdict(&sweep);
+        assert!(v.throughput_match_at_peak, "8800 >= 0.85 * 9000");
+        assert!(v.p99_le_best_fixed_at_peak, "9 <= 1.5 * 8");
+        assert!(v.p99_within_slo_at_low_rate, "3.5 <= 50");
+
+        // An adaptive controller stuck at batch 1 must fail the match.
+        let mut bad = sweep.clone();
+        bad.points[1].adaptive = side(1100.0, 55.0, 70);
+        let v = control_verdict(&bad);
+        assert!(!v.throughput_match_at_peak);
+        assert!(!v.p99_le_best_fixed_at_peak);
+    }
+
+    #[test]
+    fn autoscale_verdicts() {
+        let cmp = AutoscaleCompare {
+            rate_rps: 16000.0,
+            fixed: side(2000.0, 20.0, 40),
+            autoscaled: side(5000.0, 12.0, 0),
+            scale_ups: 2,
+            pods_end: 3,
+        };
+        assert!(cmp.helps());
+        assert!(cmp.eliminates_sheds());
+        let worse = AutoscaleCompare {
+            autoscaled: side(2000.0, 20.0, 40),
+            ..cmp.clone()
+        };
+        assert!(!worse.helps(), "equal sheds with fixed sheds > 0 is not helping");
+        let both_clean = AutoscaleCompare {
+            fixed: side(2000.0, 5.0, 0),
+            autoscaled: side(2000.0, 5.0, 0),
+            ..cmp
+        };
+        assert!(both_clean.helps(), "no sheds anywhere is fine");
+        assert!(!both_clean.eliminates_sheds(), "nothing to eliminate");
+    }
+
+    #[test]
+    fn json_report_round_trips_with_all_sections() {
         let p = BenchPoint {
             batch: 4,
             rate_rps: 2000.0,
-            fused: side(400.0),
-            per_item: side(150.0),
+            fused: side(400.0, 9.0, 10),
+            per_item: side(150.0, 9.0, 10),
+        };
+        let sweep = ControlSweep {
+            slo_p99_ms: 50.0,
+            max_batch: 8,
+            points: vec![ControlPoint {
+                rate_rps: 2000.0,
+                fixed: vec![FixedPoint { batch: 4, side: side(400.0, 9.0, 10) }],
+                adaptive: side(420.0, 8.0, 8),
+            }],
+        };
+        let cmp = AutoscaleCompare {
+            rate_rps: 2000.0,
+            fixed: side(200.0, 30.0, 50),
+            autoscaled: side(390.0, 10.0, 0),
+            scale_ups: 2,
+            pods_end: 3,
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p]).unwrap();
+        write_json(&path, &BenchConfig::default(), &[p], Some(&sweep), Some(&cmp)).unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
         let doc = Json::parse(&src).unwrap();
         let pts = doc.get("points").unwrap().arr().unwrap();
@@ -369,10 +778,40 @@ mod tests {
         assert_eq!(p0.get("batch").unwrap().usize().unwrap(), 4);
         let fused = p0.get("fused").unwrap();
         assert!(fused.get("throughput_rps").unwrap().f64().unwrap() > 0.0);
+        assert!(fused.get("avg_batch").unwrap().f64().unwrap() > 0.0);
         assert!(matches!(
             doc.get("fused_beats_per_item_at_batch_ge4").unwrap(),
             Json::Bool(true)
         ));
+        let control = doc.get("control").unwrap();
+        assert!((control.get("slo_p99_ms").unwrap().f64().unwrap() - 50.0).abs() < 1e-9);
+        assert!(matches!(
+            control.get("p99_le_best_fixed_at_peak").unwrap(),
+            Json::Bool(true)
+        ));
+        let auto = doc.get("autoscale").unwrap();
+        assert!(matches!(auto.get("autoscaler_helps").unwrap(), Json::Bool(true)));
+        assert!(matches!(
+            auto.get("autoscaler_eliminates_sheds").unwrap(),
+            Json::Bool(true)
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn json_report_omits_missing_sections() {
+        let p = BenchPoint {
+            batch: 4,
+            rate_rps: 2000.0,
+            fused: side(400.0, 9.0, 10),
+            per_item: side(150.0, 9.0, 10),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
+        write_json(&path, &BenchConfig::default(), &[p], None, None).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.opt("control").is_none());
+        assert!(doc.opt("autoscale").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,313 @@
+//! Persistent response cache — memoization *beyond* in-flight dedup.
+//!
+//! PR 2's router dedup collapses identical **concurrent** submissions
+//! into one execution, but the memo dies the instant the leader
+//! completes.  This cache keeps the completed response around for a
+//! bounded TTL, so identical requests arriving *after* completion are
+//! answered without touching a pod queue at all (ROADMAP: "persistent
+//! response cache (beyond in-flight memoization, with
+//! TTL/invalidation)").
+//!
+//! Keys are the same `sha256(model, payload)` digest the dedup map
+//! uses, so the two layers compose: a submission first consults the
+//! cache (fresh hit → immediate response, re-stamped with the caller's
+//! request id), then the in-flight map, then the router.  Capacity is
+//! bounded with FIFO eviction; staleness is bounded by the TTL.  Every
+//! decision is counted — hits, misses, evictions, expiries — and
+//! surfaced in the fleet report, because an invisible cache is a
+//! correctness hazard.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::serving::Response;
+
+/// Point-in-time cache counters for reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    /// Lookups answered by a fresh entry.
+    pub hits: u64,
+    /// Lookups that found nothing usable (includes expiries).
+    pub misses: u64,
+    /// Entries dropped to hold the capacity bound.
+    pub evicted: u64,
+    /// Entries dropped because their TTL had lapsed at lookup.
+    pub expired: u64,
+    /// Live entries right now.
+    pub entries: usize,
+}
+
+struct Entry {
+    resp: Response,
+    stored: Instant,
+    gen: u64,
+}
+
+struct CacheInner {
+    map: HashMap<[u8; 32], Entry>,
+    /// Insertion order as (key, generation) — a popped pair only evicts
+    /// the mapped entry when the generations match, so a key that was
+    /// expired and later re-inserted is never killed by its stale
+    /// predecessor's order slot.
+    order: VecDeque<([u8; 32], u64)>,
+    next_gen: u64,
+}
+
+/// Bounded, TTL'd response store shared by the router and every pod
+/// worker (workers insert on delivery, the router consults on submit).
+pub struct ResponseCache {
+    capacity: usize,
+    ttl: Duration,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evicted: AtomicU64,
+    expired: AtomicU64,
+}
+
+impl ResponseCache {
+    /// New cache holding at most `capacity` responses, each valid for
+    /// `ttl` after insertion.
+    pub fn new(capacity: usize, ttl: Duration) -> ResponseCache {
+        assert!(capacity > 0, "cache capacity must be positive");
+        ResponseCache {
+            capacity,
+            ttl,
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                next_gen: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+        }
+    }
+
+    /// The TTL entries live for.
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    /// Look up a response; a fresh entry is a hit, an expired entry is
+    /// removed and counted as both an expiry and a miss.
+    pub fn get(&self, key: &[u8; 32]) -> Option<Response> {
+        self.get_at(key, Instant::now())
+    }
+
+    fn get_at(&self, key: &[u8; 32], now: Instant) -> Option<Response> {
+        // Remove-then-reinsert keeps the hot path free of aliasing
+        // between the lookup borrow and the expiry mutation: the entry
+        // is owned while inspected, and a still-fresh one goes straight
+        // back under the same generation (its eviction slot stays
+        // valid).
+        let looked_up = {
+            let mut g = self.inner.lock().unwrap();
+            match g.map.remove(key) {
+                Some(e) if now.duration_since(e.stored) <= self.ttl => {
+                    let resp = e.resp.clone();
+                    g.map.insert(*key, e);
+                    Ok(resp)
+                }
+                Some(_) => Err(true), // expired: stays removed
+                None => Err(false),
+            }
+        };
+        match looked_up {
+            Ok(resp) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(resp)
+            }
+            Err(expired) => {
+                if expired {
+                    self.expired.fetch_add(1, Ordering::Relaxed);
+                }
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a completed response, evicting oldest entries past the
+    /// capacity bound.  Re-inserting a live key refreshes its payload
+    /// but keeps its original eviction slot (FIFO, not LRU — the cache
+    /// protects pods from repeat traffic, not from scans).
+    pub fn insert(&self, key: [u8; 32], resp: Response) {
+        self.insert_at(key, resp, Instant::now());
+    }
+
+    fn insert_at(&self, key: [u8; 32], resp: Response, now: Instant) {
+        let mut g = self.inner.lock().unwrap();
+        let gen = g.next_gen;
+        g.next_gen += 1;
+        if g.map.insert(key, Entry { resp, stored: now, gen }).is_none() {
+            g.order.push_back((key, gen));
+        } else if let Some(slot) = g.order.iter_mut().find(|(k, _)| *k == key) {
+            // Live re-insert: point the existing order slot at the new
+            // generation so a later pop evicts the refreshed entry.
+            slot.1 = gen;
+        } else {
+            // The old generation expired out of the map; its order slot
+            // (if any) is stale, so this insert needs a fresh slot.
+            g.order.push_back((key, gen));
+        }
+        let mut evictions = 0u64;
+        while g.map.len() > self.capacity {
+            let Some((old_key, old_gen)) = g.order.pop_front() else {
+                break;
+            };
+            // A popped slot only evicts when generations match; a stale
+            // slot (entry expired, or refreshed under a newer gen) is
+            // discarded without touching the live entry.
+            let live = g.map.get(&old_key).map_or(false, |e| e.gen == old_gen);
+            if live {
+                g.map.remove(&old_key);
+                evictions += 1;
+            }
+        }
+        // Stale slots (from expiries and refreshes) are normally
+        // reclaimed lazily when they reach the front of the eviction
+        // queue, but a cache whose entries expire faster than capacity
+        // fills would otherwise grow `order` without bound.  Compact
+        // whenever the deque exceeds twice the capacity — amortized
+        // O(1) per insert, and `order` stays O(capacity).
+        if g.order.len() > self.capacity.saturating_mul(2).max(8) {
+            let inner = &mut *g;
+            let map = &inner.map;
+            inner.order.retain(|(k, gen)| map.get(k).map_or(false, |e| e.gen == *gen));
+        }
+        drop(g);
+        if evictions > 0 {
+            self.evicted.fetch_add(evictions, Ordering::Relaxed);
+        }
+    }
+
+    /// Eviction-queue slots currently held (test hook: proves the
+    /// stale-slot compaction bounds the deque).
+    #[cfg(test)]
+    fn order_len(&self) -> usize {
+        self.inner.lock().unwrap().order.len()
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::Prediction;
+
+    fn resp(id: u64) -> Response {
+        Response {
+            id,
+            prediction: Prediction { class: 3, score: 1.0 },
+            service_ms: 2.0,
+            real_compute_ms: 0.1,
+            queue_wait_ms: 0.5,
+        }
+    }
+
+    fn key(b: u8) -> [u8; 32] {
+        [b; 32]
+    }
+
+    #[test]
+    fn hit_within_ttl_miss_after() {
+        let c = ResponseCache::new(4, Duration::from_millis(100));
+        let t0 = Instant::now();
+        c.insert_at(key(1), resp(7), t0);
+        let got = c.get_at(&key(1), t0 + Duration::from_millis(50)).unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.prediction.class, 3);
+        assert!(
+            c.get_at(&key(1), t0 + Duration::from_millis(150)).is_none(),
+            "entry past its TTL must not be served"
+        );
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.expired, s.entries), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_first() {
+        let c = ResponseCache::new(2, Duration::from_secs(60));
+        let t0 = Instant::now();
+        c.insert_at(key(1), resp(1), t0);
+        c.insert_at(key(2), resp(2), t0);
+        c.insert_at(key(3), resp(3), t0);
+        assert!(c.get_at(&key(1), t0).is_none(), "oldest entry must have been evicted");
+        assert!(c.get_at(&key(2), t0).is_some());
+        assert!(c.get_at(&key(3), t0).is_some());
+        let s = c.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn reinsert_after_expiry_is_served_fresh() {
+        // Regression shape: key expires, is re-inserted, and its stale
+        // order slot must NOT evict the fresh entry.
+        let c = ResponseCache::new(2, Duration::from_millis(10));
+        let t0 = Instant::now();
+        c.insert_at(key(1), resp(1), t0);
+        assert!(c.get_at(&key(1), t0 + Duration::from_millis(50)).is_none(), "expired");
+        c.insert_at(key(1), resp(11), t0 + Duration::from_millis(60));
+        // Fill to capacity: pops the stale (key 1, gen 0) slot, which
+        // must be ignored, then stays within bounds.
+        c.insert_at(key(2), resp(2), t0 + Duration::from_millis(61));
+        c.insert_at(key(3), resp(3), t0 + Duration::from_millis(62));
+        let got = c.get_at(&key(3), t0 + Duration::from_millis(63));
+        assert!(got.is_some(), "newest entry survives");
+        assert!(c.stats().entries <= 2, "capacity bound held");
+    }
+
+    #[test]
+    fn expiry_churn_does_not_grow_the_eviction_queue_unboundedly() {
+        // Leak shape: entries expire before capacity ever fills, so the
+        // eviction loop never runs — the compaction must still bound
+        // the order deque.
+        let c = ResponseCache::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        for i in 0..200u64 {
+            let t = t0 + Duration::from_millis(i * 20);
+            c.insert_at(key((i % 251) as u8), resp(i), t);
+            // Expired by the next round's lookup: map stays near-empty.
+            assert!(c.get_at(&key((i % 251) as u8), t + Duration::from_millis(15)).is_none());
+        }
+        assert!(
+            c.order_len() <= 16,
+            "stale slots must be compacted, got {}",
+            c.order_len()
+        );
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.stats().expired, 200);
+    }
+
+    #[test]
+    fn live_reinsert_refreshes_payload_without_duplicating_slots() {
+        let c = ResponseCache::new(2, Duration::from_secs(60));
+        let t0 = Instant::now();
+        c.insert_at(key(1), resp(1), t0);
+        c.insert_at(key(1), resp(99), t0 + Duration::from_millis(1));
+        assert_eq!(c.get_at(&key(1), t0 + Duration::from_millis(2)).unwrap().id, 99);
+        c.insert_at(key(2), resp(2), t0 + Duration::from_millis(3));
+        c.insert_at(key(3), resp(3), t0 + Duration::from_millis(4));
+        // key(1) held one order slot despite two inserts: exactly one
+        // eviction brings the map back to capacity.
+        let s = c.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.entries, 2);
+        assert!(c.get_at(&key(1), t0 + Duration::from_millis(5)).is_none(), "FIFO evicts 1");
+    }
+}

@@ -1,0 +1,378 @@
+//! Closed-loop controllers — the fabric's control plane.
+//!
+//! PR 1 built the data plane (sharded router, bounded queues, shedding)
+//! and PR 2 made batches cheap (one fused dispatch per drained batch).
+//! Both still ran on hand-picked constants: a fixed `max_batch` and a
+//! fixed replica count per model.  This module holds the two controllers
+//! that replace those knobs with feedback loops:
+//!
+//! - [`BatchController`] — per-pod **adaptive batch sizing**.  Each
+//!   drain cycle it picks how many requests the worker should take from
+//!   the pod queue, growing the batch under backlog (to ride the
+//!   amortization curve `Platform::batch_latency_model_ms` models and
+//!   `tf2aif bench` measures) and shrinking it when the observed tail
+//!   latency approaches the configured SLO.
+//! - [`HysteresisGate`] — the debounce element of the **backlog-driven
+//!   autoscaler**.  The fabric's control thread classifies each model as
+//!   overloaded / idle / in-band every tick; the gate requires the
+//!   signal to *hold* for several consecutive ticks before a scale
+//!   decision fires, so oscillating load cannot flap replicas up and
+//!   down.
+//!
+//! Both controllers are deliberately tiny state machines over already-
+//! measured signals (queue depth, shed counters, the EWMA service /
+//! queue-wait feedback in [`crate::metrics::FeedbackStore`]): no
+//! modeling, no clocks of their own, fully unit-testable.
+
+use std::sync::Mutex;
+
+use crate::metrics::Feedback;
+
+/// Tuning for one pod's [`BatchController`].
+#[derive(Debug, Clone)]
+pub struct BatchControlConfig {
+    /// Smallest drain size the controller may pick.
+    pub min_batch: usize,
+    /// Largest drain size the controller may pick (the fused-dispatch
+    /// packing bound).
+    pub max_batch: usize,
+    /// Tail-latency objective, ms end-to-end (queue wait + service).
+    /// `<= 0` disables the SLO term (pure backlog adaptation).
+    pub slo_p99_ms: f64,
+    /// Fraction of the SLO at which the controller starts shrinking
+    /// batches — backing off *before* the objective is breached.
+    pub headroom: f64,
+    /// EWMA smoothing for the observed batch tail latency.
+    pub alpha: f64,
+}
+
+impl Default for BatchControlConfig {
+    fn default() -> Self {
+        BatchControlConfig {
+            min_batch: 1,
+            max_batch: 8,
+            slo_p99_ms: 50.0,
+            headroom: 0.9,
+            alpha: 0.3,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct CtlState {
+    target: usize,
+    ewma_tail_ms: f64,
+}
+
+/// Per-pod adaptive batch-size controller (slow-start + AIMD shape).
+///
+/// The worker asks [`drain_size`](Self::drain_size) before every
+/// `pop_batch` and reports what happened via
+/// [`observe`](Self::observe).  Policy, in priority order:
+///
+/// 1. **SLO pressure** — when the EWMA of the observed batch tail
+///    (worst queue-wait + service in the batch, blended with the pod's
+///    `FeedbackStore` EWMAs) exceeds `headroom × slo_p99_ms`, the
+///    target halves (multiplicative decrease).
+/// 2. **Backlog growth** — when the drain came back full *and* requests
+///    are still queued, the target doubles up to `max_batch`
+///    (slow-start: under sustained backlog the controller reaches the
+///    deep-batch amortization regime in O(log max_batch) dispatches).
+/// 3. **Idle decay** — when the queue drained dry on a half-empty
+///    batch, the target steps down by one, so a quiet pod returns to
+///    small low-latency batches instead of lingering at its high-water
+///    mark.
+pub struct BatchController {
+    cfg: BatchControlConfig,
+    state: Mutex<CtlState>,
+}
+
+impl BatchController {
+    /// New controller.  The initial target starts a quarter of the way
+    /// up (clamped to the configured bounds) so a pod that is born into
+    /// backlog converges in a couple of dispatches while an idle pod
+    /// decays to `min_batch` just as fast.
+    pub fn new(cfg: BatchControlConfig) -> BatchController {
+        let min = cfg.min_batch.max(1);
+        let max = cfg.max_batch.max(min);
+        let target = (max / 4).clamp(min, max);
+        BatchController { cfg, state: Mutex::new(CtlState { target, ewma_tail_ms: 0.0 }) }
+    }
+
+    /// Drain size the worker should request this cycle.
+    pub fn drain_size(&self) -> usize {
+        self.state.lock().unwrap().target
+    }
+
+    /// Current target (alias of [`drain_size`](Self::drain_size), for
+    /// reports).
+    pub fn target(&self) -> usize {
+        self.drain_size()
+    }
+
+    /// Smoothed tail-latency estimate the SLO term currently sees, ms.
+    pub fn ewma_tail_ms(&self) -> f64 {
+        self.state.lock().unwrap().ewma_tail_ms
+    }
+
+    /// Fold one drain cycle back into the controller: `drained` items
+    /// were taken, `depth_after` remained queued after the dispatch,
+    /// `batch_tail_ms` is the worst end-to-end latency (queue wait +
+    /// service) observed inside the batch, and `fb` is the pod's
+    /// current [`FeedbackStore`](crate::metrics::FeedbackStore) entry
+    /// (EWMA service + queue wait), when it has one.
+    pub fn observe(
+        &self,
+        drained: usize,
+        depth_after: usize,
+        batch_tail_ms: f64,
+        fb: Option<Feedback>,
+    ) {
+        let min = self.cfg.min_batch.max(1);
+        let max = self.cfg.max_batch.max(min);
+        let fb_tail_ms = fb.map_or(0.0, |f| f.ewma_service_ms + f.ewma_queue_wait_ms);
+        let tail = batch_tail_ms.max(fb_tail_ms);
+        let mut s = self.state.lock().unwrap();
+        s.ewma_tail_ms = if s.ewma_tail_ms == 0.0 {
+            tail
+        } else {
+            self.cfg.alpha * tail + (1.0 - self.cfg.alpha) * s.ewma_tail_ms
+        };
+        if self.cfg.slo_p99_ms > 0.0 && s.ewma_tail_ms > self.cfg.headroom * self.cfg.slo_p99_ms
+        {
+            s.target = (s.target / 2).clamp(min, max);
+        } else if drained >= s.target && depth_after > 0 {
+            s.target = (s.target.saturating_mul(2)).clamp(min, max);
+        } else if depth_after == 0 && drained * 2 <= s.target {
+            s.target = s.target.saturating_sub(1).clamp(min, max);
+        }
+    }
+}
+
+/// Which way a scale decision points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    /// Add a replica.
+    Up,
+    /// Retire a replica.
+    Down,
+}
+
+/// Debounce element of the autoscaler: a scale decision fires only
+/// after the overload (or idle) classification has held for `hold`
+/// consecutive ticks, and any counter-signal resets the streak — the
+/// hysteresis that keeps oscillating load from flapping replicas.
+#[derive(Debug, Clone, Default)]
+pub struct HysteresisGate {
+    above: u32,
+    below: u32,
+}
+
+impl HysteresisGate {
+    /// Feed one tick's classification; `Some(direction)` when the
+    /// streak reached `hold` (the streak resets so the next decision
+    /// needs a fresh hold — cooldown is the caller's policy on top).
+    pub fn decide(&mut self, overloaded: bool, idle: bool, hold: u32) -> Option<ScaleDirection> {
+        let hold = hold.max(1);
+        if overloaded {
+            self.above += 1;
+            self.below = 0;
+        } else if idle {
+            self.below += 1;
+            self.above = 0;
+        } else {
+            self.above = 0;
+            self.below = 0;
+        }
+        if self.above >= hold {
+            self.above = 0;
+            return Some(ScaleDirection::Up);
+        }
+        if self.below >= hold {
+            self.below = 0;
+            return Some(ScaleDirection::Down);
+        }
+        None
+    }
+}
+
+/// Autoscaler tuning — the fabric's per-model replica control loop.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Floor of active replicas per model.
+    pub min_replicas: usize,
+    /// Ceiling of active replicas per model (platform-specific ceilings
+    /// in [`crate::platform::Platform::max_replicas_per_model`] bound
+    /// each placement on top of this).
+    pub max_replicas: usize,
+    /// Mean backlog per active replica at which a model counts as
+    /// overloaded (shed activity since the last tick also counts).
+    pub scale_up_backlog: f64,
+    /// Mean backlog per active replica at or below which a model counts
+    /// as idle — strictly below `scale_up_backlog`, the hysteresis
+    /// dead band.
+    pub scale_down_backlog: f64,
+    /// Consecutive ticks the overload/idle signal must hold before a
+    /// scale decision fires.
+    pub hold_ticks: u32,
+    /// Ticks to ignore a model's signals after acting on it.
+    pub cooldown_ticks: u32,
+    /// Control-thread period, ms.  `0` spawns no thread — the loop is
+    /// stepped manually via `Fabric::autoscale_tick` (deterministic
+    /// tests, external schedulers).
+    pub interval_ms: u64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            scale_up_backlog: 4.0,
+            scale_down_backlog: 0.5,
+            hold_ticks: 2,
+            cooldown_ticks: 2,
+            interval_ms: 20,
+        }
+    }
+}
+
+/// One autoscaler action, timestamped against the fabric epoch — the
+/// replica timeline `tf2aif fabric` prints after a run.
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// Milliseconds since the fabric spawned.
+    pub at_ms: f64,
+    /// Model whose replica set changed.
+    pub model: String,
+    /// `Up` spawned a pod, `Down` retired one.
+    pub direction: ScaleDirection,
+    /// AIF identity of the pod added or retired.
+    pub aif: String,
+    /// Node hosting that pod.
+    pub node: String,
+    /// Active replicas of the model after the action.
+    pub replicas_after: usize,
+    /// Human-readable signal that triggered the action.
+    pub trigger: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(max: usize, slo: f64) -> BatchController {
+        BatchController::new(BatchControlConfig {
+            min_batch: 1,
+            max_batch: max,
+            slo_p99_ms: slo,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn initial_target_is_between_bounds() {
+        assert_eq!(ctl(16, 50.0).drain_size(), 4);
+        assert_eq!(ctl(8, 50.0).drain_size(), 2);
+        assert_eq!(ctl(1, 50.0).drain_size(), 1);
+        let c = BatchController::new(BatchControlConfig {
+            min_batch: 6,
+            max_batch: 16,
+            ..Default::default()
+        });
+        assert_eq!(c.drain_size(), 6, "initial target respects min_batch");
+    }
+
+    #[test]
+    fn sustained_backlog_converges_to_max_batch() {
+        let c = ctl(16, 50.0);
+        for _ in 0..8 {
+            let t = c.drain_size();
+            // Full drain, queue still deep, latency far under SLO.
+            c.observe(t, 32, 2.0, None);
+        }
+        assert_eq!(c.drain_size(), 16, "slow-start must reach the bound");
+    }
+
+    #[test]
+    fn load_drop_decays_back_toward_min_batch() {
+        let c = ctl(16, 50.0);
+        for _ in 0..8 {
+            c.observe(c.drain_size(), 32, 2.0, None);
+        }
+        assert_eq!(c.drain_size(), 16);
+        // Quiet pod: tiny drains, queue empty afterwards.
+        for _ in 0..20 {
+            c.observe(1, 0, 2.0, None);
+        }
+        assert_eq!(c.drain_size(), 1, "idle decay must return to min");
+    }
+
+    #[test]
+    fn slo_pressure_shrinks_batches_multiplicatively() {
+        let c = ctl(16, 10.0);
+        for _ in 0..8 {
+            c.observe(c.drain_size(), 32, 2.0, None);
+        }
+        assert_eq!(c.drain_size(), 16);
+        // Tail blows through the SLO: halve, repeatedly, despite backlog.
+        c.observe(16, 32, 100.0, None);
+        assert_eq!(c.drain_size(), 8, "breach must halve the target");
+        c.observe(8, 32, 100.0, None);
+        c.observe(8, 32, 100.0, None);
+        c.observe(8, 32, 100.0, None);
+        assert_eq!(c.drain_size(), 1, "sustained breach pins the floor");
+    }
+
+    #[test]
+    fn feedback_store_tail_counts_toward_the_slo() {
+        let c = ctl(16, 10.0);
+        let fb = Feedback { ewma_service_ms: 30.0, ewma_queue_wait_ms: 20.0, observations: 9 };
+        // Batch itself looked fast, but the pod's EWMA says 50 ms e2e.
+        c.observe(4, 32, 1.0, Some(fb));
+        assert!(c.ewma_tail_ms() >= 50.0 * 0.3 - 1e-9);
+        c.observe(4, 32, 1.0, Some(fb));
+        c.observe(4, 32, 1.0, Some(fb));
+        assert!(c.drain_size() < 4, "EWMA feedback alone must trigger the back-off");
+    }
+
+    #[test]
+    fn slo_zero_disables_the_latency_term() {
+        let c = ctl(8, 0.0);
+        for _ in 0..6 {
+            c.observe(c.drain_size(), 16, 1e9, None);
+        }
+        assert_eq!(c.drain_size(), 8, "no SLO → pure backlog adaptation");
+    }
+
+    #[test]
+    fn hysteresis_fires_only_after_hold() {
+        let mut g = HysteresisGate::default();
+        assert_eq!(g.decide(true, false, 3), None);
+        assert_eq!(g.decide(true, false, 3), None);
+        assert_eq!(g.decide(true, false, 3), Some(ScaleDirection::Up));
+        // Streak reset after firing.
+        assert_eq!(g.decide(true, false, 3), None);
+        // Idle side symmetric.
+        assert_eq!(g.decide(false, true, 2), None);
+        assert_eq!(g.decide(false, true, 2), Some(ScaleDirection::Down));
+    }
+
+    #[test]
+    fn oscillating_load_never_flaps() {
+        let mut g = HysteresisGate::default();
+        for i in 0..64 {
+            let overloaded = i % 2 == 0;
+            assert_eq!(
+                g.decide(overloaded, !overloaded, 2),
+                None,
+                "alternating signal must never fire with hold 2 (tick {i})"
+            );
+        }
+        // In-band samples also reset both streaks.
+        let mut g = HysteresisGate::default();
+        assert_eq!(g.decide(true, false, 2), None);
+        assert_eq!(g.decide(false, false, 2), None);
+        assert_eq!(g.decide(true, false, 2), None, "in-band tick broke the streak");
+    }
+}

@@ -14,13 +14,14 @@
 //!  (Arrival)──┤   │  │          (admission bound,     ONE fused dispatch  │
 //!             │   │  │shed       shed when full)      per drained batch   │
 //!             │   │  ▼                                (AifServer|SimPod)  │
-//!             │   │ dedup: identical in-flight            │               │
-//!             │   │ requests collapse into one            │               │
-//!             │   │ execution, responses fan out          │               │
+//!             │   │ cache: fresh identical response?      │               │
+//!             │   │ dedup: identical in-flight request?   │               │
 //!             │   ▼                                       │               │
-//!             │  FeedbackStore ◄─── observed service latency              │
-//!             │     │                                                     │
-//!             │     └──► backend::Backend::rank (placement re-scoring)    │
+//!             │  FeedbackStore ◄─── observed service + queue-wait        │
+//!             │     │                                     │               │
+//!             │     ├──► backend::Backend::rank (placement re-scoring)    │
+//!             │     ├──► BatchController (adaptive drain size per pod)    │
+//!             │     └──► autoscaler (spawn/retire replicas per model)     │
 //!             └───────────────────────────────────────────────────────────┘
 //! ```
 //!
@@ -29,50 +30,67 @@
 //!   [`crate::cluster::Cluster`]); the router spreads requests across
 //!   them by least estimated work.
 //! - **Per-node queues & fused dynamic batching** — each pod owns a
-//!   [`queue::BoundedQueue`] drained in batches by its own workers, so a
-//!   slow far-edge pod queues independently of a fast cloud GPU pod; the
+//!   [`queue::BoundedQueue`] drained in batches by its own workers; the
 //!   drained batch then executes as ONE device dispatch
 //!   ([`PodExecutor::execute_batch`]), amortizing per-dispatch overhead
 //!   over the batch (`tf2aif bench` measures the curve).
+//! - **Adaptive batch sizing** (`FabricConfig::adaptive`) — each pod's
+//!   [`control::BatchController`] picks the drain size per cycle from
+//!   observed queue depth and the EWMA service/queue-wait feedback,
+//!   growing batches under backlog and shrinking them when the tail
+//!   approaches `slo_p99_ms` — the knob tunes itself.
+//! - **Backlog-driven autoscaling** (`FabricConfig::autoscale`) — a
+//!   control loop spawns and retires pod replicas per model from
+//!   sustained backlog and shed counters, with hysteresis, cooldown and
+//!   per-platform replica ceilings, placing new pods through the same
+//!   `backend` ranking (feedback-blended) the initial placement used.
+//! - **Response cache** (`FabricConfig::cache_capacity`) — a bounded,
+//!   TTL'd `sha256(model, payload) → response` store answers repeats of
+//!   recently completed requests without touching a queue.
 //! - **Request dedup / response memoization** — identical concurrent
 //!   (model, payload) submissions collapse into one execution keyed by
 //!   input hash; every caller gets a response re-stamped with its own
 //!   request id.
 //! - **Admission control** — queues are bounded; when every replica's
-//!   queue is full the request is *shed* explicitly (counted, never
-//!   silently dropped).
+//!   queue is full the request is *shed* (counted, never silent).
 //! - **Feedback** — completed requests update a
-//!   [`crate::metrics::FeedbackStore`]; the router and
-//!   [`crate::backend::Backend::rank`] blend those measurements into
-//!   their scores, so routing and placement adapt to delivered
-//!   performance.
+//!   [`crate::metrics::FeedbackStore`]; the router,
+//!   [`crate::backend::Backend::rank`], the batch controllers and the
+//!   autoscaler all blend those measurements into their decisions.
 //!
-//! See `docs/ARCHITECTURE.md` for the full request lifecycle and
+//! See `docs/ARCHITECTURE.md` (§Control plane) for the loops and
 //! `examples/fabric_poisson.rs` or `tf2aif fabric` for runnable drivers.
 
 pub mod bench;
+pub mod cache;
+pub mod control;
 pub mod queue;
 pub mod sim;
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 use sha2::{Digest as _, Sha256};
 
 use crate::artifact::Artifact;
-use crate::backend::Backend;
+use crate::backend::{Backend, Policy};
 use crate::cluster::Cluster;
 use crate::metrics::{Collector, FeedbackStore, Snapshot};
+use crate::platform;
 use crate::runtime::Engine;
 use crate::serving::{AifServer, ImageClassify, Request, Response};
 use crate::util::rng::Rng;
 use crate::util::stats::{throughput_rps, Boxplot, Series};
 use crate::workload::{image_like, Arrival};
 
+use cache::ResponseCache;
+pub use cache::CacheStats;
+use control::{BatchControlConfig, BatchController, HysteresisGate};
+pub use control::{AutoscaleConfig, ScaleDirection, ScaleEvent};
 use queue::BoundedQueue;
 use sim::{Gate, SimPod};
 
@@ -86,6 +104,9 @@ pub trait PodExecutor: Send + Sync {
     fn execute_batch(&self, reqs: &[Request], queue_wait_ms: &[f64]) -> Vec<Result<Response>>;
     /// The pod's metrics collector.
     fn collector(&self) -> &Arc<Collector>;
+    /// Device dispatches performed so far (the amortization
+    /// denominator: `requests / dispatches` = average fused batch).
+    fn dispatches(&self) -> u64;
 }
 
 impl PodExecutor for AifServer {
@@ -99,6 +120,10 @@ impl PodExecutor for AifServer {
 
     fn collector(&self) -> &Arc<Collector> {
         &self.metrics
+    }
+
+    fn dispatches(&self) -> u64 {
+        AifServer::dispatches(self)
     }
 }
 
@@ -114,6 +139,10 @@ impl PodExecutor for SimPod {
     fn collector(&self) -> &Arc<Collector> {
         self.metrics()
     }
+
+    fn dispatches(&self) -> u64 {
+        SimPod::dispatches(self)
+    }
 }
 
 /// Fabric tuning knobs.
@@ -121,11 +150,26 @@ impl PodExecutor for SimPod {
 pub struct FabricConfig {
     /// Admission bound: queued requests per pod before shedding.
     pub queue_capacity: usize,
-    /// Max requests one worker drains per wakeup (dynamic batch size).
+    /// Max requests one worker drains per wakeup.  With `adaptive` off
+    /// this IS the drain size; with it on, it is the controller's upper
+    /// bound.
     pub max_batch: usize,
+    /// Adaptive batch sizing: each pod's drain size is chosen per cycle
+    /// by a [`control::BatchController`] from queue depth and latency
+    /// feedback instead of being pinned at `max_batch`.
+    pub adaptive: bool,
+    /// Smallest drain size the adaptive controller may pick.
+    pub min_batch: usize,
+    /// Tail-latency objective for the adaptive controller, ms
+    /// end-to-end; `<= 0` disables the SLO term.
+    pub slo_p99_ms: f64,
+    /// Batch coalescing: a worker facing a less-than-full queue waits
+    /// up to this long for the batch to fill before dispatching.  `0`
+    /// (default) drains whatever is present immediately.
+    pub batch_linger_ms: f64,
     /// Batcher workers per pod.
     pub workers: usize,
-    /// Max pods (on distinct nodes) per AIF.
+    /// Max pods (on distinct nodes) per AIF at placement time.
     pub replicas_per_model: usize,
     /// EWMA smoothing for the feedback store.
     pub feedback_alpha: f64,
@@ -142,6 +186,15 @@ pub struct FabricConfig {
     /// submissions collapse into one execution whose response is fanned
     /// back out to every caller (memoized while in flight).
     pub dedup: bool,
+    /// Response cache capacity (entries); `0` disables the cache.
+    /// When on, completed responses are memoized for `cache_ttl_ms` and
+    /// identical later submissions are answered without execution.
+    pub cache_capacity: usize,
+    /// Response-cache entry lifetime, ms.
+    pub cache_ttl_ms: u64,
+    /// Backlog-driven autoscaling of replicas per model; `None` keeps
+    /// the placed replica count fixed.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for FabricConfig {
@@ -149,6 +202,10 @@ impl Default for FabricConfig {
         FabricConfig {
             queue_capacity: 16,
             max_batch: 8,
+            adaptive: false,
+            min_batch: 1,
+            slo_p99_ms: 50.0,
+            batch_linger_ms: 0.0,
             workers: 1,
             replicas_per_model: 3,
             feedback_alpha: 0.2,
@@ -156,6 +213,9 @@ impl Default for FabricConfig {
             seed: 0xFAB,
             fused: true,
             dedup: true,
+            cache_capacity: 0,
+            cache_ttl_ms: 250,
+            autoscale: None,
         }
     }
 }
@@ -193,8 +253,9 @@ pub enum Outcome {
 /// leader itself plus any dedup'd followers that attached while it was in
 /// flight.
 struct Fanout {
-    /// Dedup-map key to unregister on completion (`None` when dedup is
-    /// off for this submission).
+    /// Content digest of the request: the dedup-map key to unregister on
+    /// completion and the response-cache key to memoize under (`None`
+    /// when both dedup and the cache are off).
     key: Option<[u8; 32]>,
     waiters: Mutex<Vec<(u64, mpsc::Sender<Outcome>)>>,
 }
@@ -223,15 +284,19 @@ fn dedup_key(model: &str, payload: &[f32]) -> [u8; 32] {
     *h.finalize().as_bytes()
 }
 
-/// Unregister a completed execution from the dedup index, then fan its
-/// outcome out to every waiter (each response re-stamped with the
-/// waiter's own request id).  Removal happens under the map lock *before*
-/// delivery, so a new identical submission either attached in time (and
-/// is in `waiters`) or starts a fresh execution — nobody can attach to a
+/// Unregister a completed execution from the dedup index, memoize the
+/// response in the cache (when one is configured), then fan the outcome
+/// out to every waiter (each response re-stamped with the waiter's own
+/// request id).  Removal happens under the map lock *before* delivery,
+/// so a new identical submission either attached in time (and is in
+/// `waiters`) or starts a fresh execution — nobody can attach to a
 /// completed entry and hang.
-fn deliver(dedup: &DedupMap, fan: &Fanout, outcome: Outcome) {
+fn deliver(dedup: &DedupMap, cache: Option<&ResponseCache>, fan: &Fanout, outcome: Outcome) {
     if let Some(key) = &fan.key {
         dedup.lock().unwrap().remove(key);
+        if let (Some(c), Outcome::Completed(resp)) = (cache, &outcome) {
+            c.insert(*key, resp.clone());
+        }
     }
     let waiters = std::mem::take(&mut *fan.waiters.lock().unwrap());
     for (id, tx) in waiters {
@@ -245,7 +310,8 @@ fn deliver(dedup: &DedupMap, fan: &Fanout, outcome: Outcome) {
 
 /// Router verdict for one submission.
 pub enum Submission {
-    /// Admitted to a pod queue; the receiver yields the [`Outcome`].
+    /// Admitted (or answered from the cache / an in-flight dedup
+    /// attach); the receiver yields the [`Outcome`].
     Enqueued(mpsc::Receiver<Outcome>),
     /// Every feasible replica's queue was at the admission bound; the
     /// request was shed (and counted).
@@ -258,23 +324,104 @@ struct PodRuntime {
     queue: Arc<BoundedQueue<Work>>,
     /// Queued + executing requests (router backlog estimate).
     backlog: Arc<AtomicU64>,
-    executor: Arc<dyn PodExecutor>,
-    workers: Vec<thread::JoinHandle<()>>,
+    /// `None` once a retired pod has been reaped: the executor (for a
+    /// real pod, a compiled model with pinned weights) is the memory a
+    /// scale-down exists to release, so it must not live as long as the
+    /// fabric.  Workers clone the `Arc` out once at startup.
+    executor: Mutex<Option<Arc<dyn PodExecutor>>>,
+    /// Adaptive drain-size controller (None with fixed `max_batch`).
+    controller: Option<Arc<BatchController>>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Set by the autoscaler: the router skips retired pods; their
+    /// queues are closed so workers drain the admitted backlog and exit.
+    retired: AtomicBool,
+    /// Frozen (snapshot, dispatches) captured when the pod was reaped,
+    /// so retired pods keep their report row after the executor is
+    /// gone.
+    final_report: Mutex<Option<(Snapshot, u64)>>,
+    /// Milliseconds after the fabric epoch this pod spawned.
+    born_ms: f64,
+    /// Milliseconds after the fabric epoch this pod retired, if it did.
+    retired_ms: Mutex<Option<f64>>,
 }
 
-/// The serving fabric: every placed pod plus the router state.
-pub struct Fabric {
-    pods: Vec<PodRuntime>,
+impl PodRuntime {
+    /// Live (snapshot, dispatch count) while the executor exists, the
+    /// frozen reap-time copy afterwards.
+    fn stats(&self) -> (Snapshot, u64) {
+        if let Some(e) = self.executor.lock().unwrap().as_ref() {
+            return (e.collector().snapshot(), e.dispatches());
+        }
+        self.final_report
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| (Snapshot::empty(), 0))
+    }
+}
+
+/// Builds a pod executor for a plan — simulated or real, decided once at
+/// `place_*` time and reused by the autoscaler for scale-ups.
+type PodFactory = Box<dyn Fn(&PodPlan, &Arc<Artifact>) -> Result<Arc<dyn PodExecutor>> + Send + Sync>;
+
+/// The mutable pod set: every spawned pod (active and retired) plus the
+/// per-model index into it.
+struct Registry {
+    pods: Vec<Arc<PodRuntime>>,
     by_model: BTreeMap<String, Vec<usize>>,
+}
+
+/// Per-model autoscaler bookkeeping.
+#[derive(Default)]
+struct ModelScale {
+    gate: HysteresisGate,
+    cooldown: u32,
+    last_shed: u64,
+}
+
+/// Autoscaler state: its own (feedback-blended) placement backend plus
+/// hysteresis counters and the scale-event log.
+struct ScalerState {
+    auto: AutoscaleConfig,
+    backend: Backend,
+    per_model: Mutex<BTreeMap<String, ModelScale>>,
+    events: Mutex<Vec<ScaleEvent>>,
+    ups: AtomicU64,
+    downs: AtomicU64,
+    /// Most recent pod-spawn failure (factory error at scale-up) —
+    /// surfaced via [`Fabric::last_scale_error`] so a wedged scale-up
+    /// is diagnosable instead of silent.
+    last_spawn_error: Mutex<Option<String>>,
+}
+
+/// Shared fabric state: the router, every pod, and the control plane.
+struct FabricInner {
+    registry: RwLock<Registry>,
     input_shapes: BTreeMap<String, (usize, usize, usize)>,
     feedback: Arc<FeedbackStore>,
     cfg: FabricConfig,
+    /// The cluster the fabric owns: autoscaler binds/terminates pods
+    /// against the same slot and memory accounting placement used.
+    cluster: Mutex<Cluster>,
+    factory: PodFactory,
+    scaler: Option<ScalerState>,
+    cache: Option<Arc<ResponseCache>>,
+    /// Birth instant; scale events and pod lifetimes are offsets from it.
+    epoch: Instant,
     next_id: AtomicU64,
     shed_total: AtomicU64,
     shed_by_model: Mutex<BTreeMap<String, u64>>,
     /// In-flight dedup index, shared with every pod worker.
     dedup: Arc<DedupMap>,
     dedup_hits: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The serving fabric: every placed pod plus the router and control
+/// plane.  All methods are callable while traffic flows.
+pub struct Fabric {
+    inner: Arc<FabricInner>,
+    scaler_thread: Option<thread::JoinHandle<()>>,
 }
 
 /// Plan replica placements for every model the backend knows, binding
@@ -336,271 +483,310 @@ fn plan_placements(
     Ok(out)
 }
 
+/// A full catalog snapshot of a backend's artifact index — what the
+/// autoscaler ranks scale-up placements from.
+fn catalog_of(backend: &Backend) -> Vec<Artifact> {
+    backend
+        .models()
+        .into_iter()
+        .flat_map(|m| backend.variants_of(m).into_iter().cloned())
+        .collect()
+}
+
+/// Everything `Fabric::spawn` needs beyond the pods themselves.
+struct SpawnEnv {
+    cluster: Cluster,
+    factory: PodFactory,
+    catalog: Vec<Artifact>,
+    policy: Policy,
+    allow_native: bool,
+    predictor: Option<crate::backend::predictor::LearnedLatency>,
+}
+
+impl SpawnEnv {
+    fn from_backend(backend: &Backend, cluster: Cluster, factory: PodFactory) -> SpawnEnv {
+        SpawnEnv {
+            cluster,
+            factory,
+            catalog: catalog_of(backend),
+            policy: backend.policy,
+            allow_native: backend.allow_native,
+            predictor: backend.predictor.clone(),
+        }
+    }
+}
+
 impl Fabric {
     /// Place and spawn the fabric with **simulated** pods (platform cost
-    /// models; no artifacts or PJRT needed).  `gate`, when provided, is
-    /// installed in every pod for deterministic overload tests.
+    /// models; no artifacts or PJRT needed).  The fabric takes ownership
+    /// of the cluster so its autoscaler can bind and terminate pods
+    /// against live slot/memory accounting; inspect it later through
+    /// [`with_cluster`](Self::with_cluster).  `gate`, when provided, is
+    /// installed in every pod (including autoscaled ones) for
+    /// deterministic overload tests.
     pub fn place_sim(
         backend: &Backend,
-        cluster: &mut Cluster,
+        mut cluster: Cluster,
         cfg: &FabricConfig,
         gate: Option<Arc<Gate>>,
     ) -> Result<Fabric> {
-        let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
-        let mut pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)> = Vec::new();
-        for (plan, artifact) in plans {
+        let plans = plan_placements(backend, &mut cluster, cfg.replicas_per_model)?;
+        let time_scale = cfg.time_scale;
+        let seed = cfg.seed;
+        let factory: PodFactory = Box::new(move |plan, artifact| {
             let pod = SimPod::new(
                 &plan.variant,
                 artifact.manifest.gflops,
-                cfg.time_scale,
-                cfg.seed ^ plan.pod_id,
+                time_scale,
+                seed ^ plan.pod_id,
                 gate.clone(),
             )?;
-            pods.push((plan, artifact, Arc::new(pod)));
+            Ok(Arc::new(pod) as Arc<dyn PodExecutor>)
+        });
+        let mut pods = Vec::new();
+        for (plan, artifact) in plans {
+            let executor = (factory)(&plan, &artifact)?;
+            pods.push((plan, artifact, executor));
         }
-        Ok(Fabric::spawn(pods, cfg.clone()))
+        let env = SpawnEnv::from_backend(backend, cluster, factory);
+        Ok(Fabric::spawn(pods, cfg.clone(), env))
     }
 
     /// Place and spawn the fabric with **real** pods: one compiled,
     /// weight-pinned [`AifServer`] per placement (requires on-disk
-    /// artifacts).
+    /// artifacts).  The engine handle is kept so the autoscaler can
+    /// compile additional replicas at scale-up time.
     pub fn place_real(
         backend: &Backend,
-        cluster: &mut Cluster,
-        engine: &Engine,
+        mut cluster: Cluster,
+        engine: Engine,
         cfg: &FabricConfig,
     ) -> Result<Fabric> {
-        let plans = plan_placements(backend, cluster, cfg.replicas_per_model)?;
-        let mut pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)> = Vec::new();
+        let plans = plan_placements(backend, &mut cluster, cfg.replicas_per_model)?;
+        // `Engine` is Send but not Sync (a channel handle to the runtime
+        // host); the mutex makes the factory shareable with the control
+        // thread.
+        let engine = Mutex::new(engine);
+        let factory: PodFactory = Box::new(move |_plan, artifact| {
+            let engine = engine.lock().unwrap();
+            let server = AifServer::deploy(&engine, artifact, Arc::new(ImageClassify))?;
+            Ok(Arc::new(server) as Arc<dyn PodExecutor>)
+        });
+        let mut pods = Vec::new();
         for (plan, artifact) in plans {
-            let server = AifServer::deploy(engine, &artifact, Arc::new(ImageClassify))?;
-            pods.push((plan, artifact, Arc::new(server)));
+            let executor = (factory)(&plan, &artifact)?;
+            pods.push((plan, artifact, executor));
         }
-        Ok(Fabric::spawn(pods, cfg.clone()))
+        let env = SpawnEnv::from_backend(backend, cluster, factory);
+        Ok(Fabric::spawn(pods, cfg.clone(), env))
     }
 
     fn spawn(
         pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)>,
         cfg: FabricConfig,
+        env: SpawnEnv,
     ) -> Fabric {
         let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
-        let dedup: Arc<DedupMap> = Arc::new(Mutex::new(HashMap::new()));
-        let mut runtimes = Vec::new();
-        let mut by_model: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let cache = (cfg.cache_capacity > 0).then(|| {
+            Arc::new(ResponseCache::new(
+                cfg.cache_capacity,
+                Duration::from_millis(cfg.cache_ttl_ms),
+            ))
+        });
+        let scaler = cfg.autoscale.clone().map(|auto| {
+            // The scaler ranks scale-up placements with its own backend
+            // over the same catalog, wired to the live feedback store —
+            // so replicas land where measured (not just modeled)
+            // latency says they should.
+            let mut backend = Backend::new(env.catalog.clone(), env.policy);
+            backend.allow_native = env.allow_native;
+            // Same ranking inputs as the placing backend: learned
+            // predictor (when trained) AND the live feedback store —
+            // scale-ups must not silently rank by a different cost
+            // model than initial placement did.
+            backend.predictor = env.predictor.clone();
+            backend.feedback = Some(Arc::clone(&feedback));
+            ScalerState {
+                auto,
+                backend,
+                per_model: Mutex::new(BTreeMap::new()),
+                events: Mutex::new(Vec::new()),
+                ups: AtomicU64::new(0),
+                downs: AtomicU64::new(0),
+                last_spawn_error: Mutex::new(None),
+            }
+        });
+        let epoch = Instant::now();
+        let mut registry = Registry { pods: Vec::new(), by_model: BTreeMap::new() };
         let mut input_shapes = BTreeMap::new();
-        for (idx, (plan, artifact, executor)) in pods.into_iter().enumerate() {
+        for (plan, artifact, executor) in pods {
             let s = &artifact.manifest.input_shape;
             if s.len() == 4 {
                 input_shapes.entry(plan.model.clone()).or_insert((s[1], s[2], s[3]));
             }
-            let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-            let backlog = Arc::new(AtomicU64::new(0));
-            let key = FeedbackStore::key(&plan.aif, &plan.node);
-            let workers = (0..cfg.workers.max(1))
-                .map(|_| {
-                    let queue = Arc::clone(&queue);
-                    let backlog = Arc::clone(&backlog);
-                    let executor = Arc::clone(&executor);
-                    let feedback = Arc::clone(&feedback);
-                    let dedup = Arc::clone(&dedup);
-                    let key = key.clone();
-                    let max_batch = cfg.max_batch.max(1);
-                    let fused = cfg.fused;
-                    thread::spawn(move || {
-                        let finish = |fan: Arc<Fanout>, result: Result<Response>| {
-                            let outcome = match result {
-                                Ok(resp) => {
-                                    feedback.observe(&key, resp.service_ms);
-                                    Outcome::Completed(resp)
-                                }
-                                Err(e) => Outcome::Failed(format!("{e:#}")),
-                            };
-                            backlog.fetch_sub(1, Ordering::Relaxed);
-                            deliver(&dedup, &fan, outcome);
-                        };
-                        loop {
-                            // `None` = closed and drained: the
-                            // unambiguous shutdown signal (workers
-                            // block, never spin).
-                            let Some(batch) = queue.pop_batch(max_batch) else {
-                                break;
-                            };
-                            if fused {
-                                // The whole drained batch is ONE device
-                                // dispatch; every item stops waiting at
-                                // dispatch time.
-                                let mut reqs = Vec::with_capacity(batch.len());
-                                let mut waits = Vec::with_capacity(batch.len());
-                                let mut fans = Vec::with_capacity(batch.len());
-                                for (req, enqueued, fan) in batch {
-                                    waits.push(enqueued.elapsed().as_secs_f64() * 1e3);
-                                    reqs.push(req);
-                                    fans.push(fan);
-                                }
-                                let results = executor.execute_batch(&reqs, &waits);
-                                for (fan, result) in fans.into_iter().zip(results) {
-                                    finish(fan, result);
-                                }
-                            } else {
-                                // Per-item reference path (the bench
-                                // baseline): one dispatch per request,
-                                // and each item's queue wait is taken at
-                                // its OWN execution time so the in-batch
-                                // serial wait is attributed honestly.
-                                for (req, enqueued, fan) in batch {
-                                    let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-                                    let result = executor.execute(&req, wait_ms);
-                                    finish(fan, result);
-                                }
-                            }
-                        }
-                    })
-                })
-                .collect();
-            by_model.entry(plan.model.clone()).or_default().push(idx);
-            runtimes.push(PodRuntime { plan, key, queue, backlog, executor, workers });
+            let idx = registry.pods.len();
+            registry.by_model.entry(plan.model.clone()).or_default().push(idx);
+            registry.pods.push(Arc::new(new_runtime(plan, executor, &cfg, 0.0)));
         }
-        Fabric {
-            pods: runtimes,
-            by_model,
+        let inner = Arc::new(FabricInner {
+            registry: RwLock::new(registry),
             input_shapes,
             feedback,
             cfg,
+            cluster: Mutex::new(env.cluster),
+            factory: env.factory,
+            scaler,
+            cache,
+            epoch,
             next_id: AtomicU64::new(0),
             shed_total: AtomicU64::new(0),
             shed_by_model: Mutex::new(BTreeMap::new()),
-            dedup,
+            dedup: Arc::new(Mutex::new(HashMap::new())),
             dedup_hits: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let initial: Vec<Arc<PodRuntime>> = inner.registry.read().unwrap().pods.clone();
+        for pod in &initial {
+            start_workers(&inner, pod);
         }
+        let interval_ms = inner.scaler.as_ref().map_or(0, |sc| sc.auto.interval_ms);
+        let scaler_thread = (interval_ms > 0).then(|| {
+            let inner = Arc::clone(&inner);
+            let interval = Duration::from_millis(interval_ms);
+            thread::spawn(move || {
+                while !inner.stop.load(Ordering::Relaxed) {
+                    autoscale_tick(&inner);
+                    thread::sleep(interval);
+                }
+            })
+        });
+        Fabric { inner, scaler_thread }
     }
 
     /// The shared feedback store (attach it to a
     /// [`Backend`](crate::backend::Backend) via its `feedback` field so
     /// future placements see fabric measurements).
     pub fn feedback(&self) -> Arc<FeedbackStore> {
-        Arc::clone(&self.feedback)
+        Arc::clone(&self.inner.feedback)
     }
 
     /// The configuration the fabric was spawned with.
     pub fn config(&self) -> &FabricConfig {
-        &self.cfg
+        &self.inner.cfg
     }
 
-    /// Placed pods, in placement order.
+    /// Every spawned pod's plan, in spawn order (includes pods the
+    /// autoscaler has since retired — the full replica timeline).
     pub fn plans(&self) -> Vec<PodPlan> {
-        self.pods.iter().map(|p| p.plan.clone()).collect()
+        self.inner.registry.read().unwrap().pods.iter().map(|p| p.plan.clone()).collect()
     }
 
-    /// Distinct cluster nodes hosting at least one pod.
+    /// Distinct cluster nodes hosting at least one **active** pod.
     pub fn nodes_spanned(&self) -> BTreeSet<String> {
-        self.pods.iter().map(|p| p.plan.node.clone()).collect()
+        self.inner
+            .registry
+            .read()
+            .unwrap()
+            .pods
+            .iter()
+            .filter(|p| !p.retired.load(Ordering::Relaxed))
+            .map(|p| p.plan.node.clone())
+            .collect()
     }
 
     /// Models the fabric can route.
     pub fn models(&self) -> Vec<String> {
-        self.by_model.keys().cloned().collect()
+        self.inner.registry.read().unwrap().by_model.keys().cloned().collect()
     }
 
     /// NHWC input shape for a model's requests, from its placed artifact.
     pub fn input_shape(&self, model: &str) -> Option<(usize, usize, usize)> {
-        self.input_shapes.get(model).copied()
+        self.inner.input_shapes.get(model).copied()
     }
 
-    /// Router score for a pod: estimated per-request latency (feedback
-    /// blended over the cost model) scaled by its backlog — a
-    /// least-estimated-work-left policy.
-    fn score(&self, idx: usize) -> f64 {
-        let pod = &self.pods[idx];
-        let est = self.feedback.blend(&pod.key, pod.plan.modeled_ms);
-        let backlog = pod.backlog.load(Ordering::Relaxed) as f64;
-        est * (backlog + 1.0)
+    /// Active (non-retired) replicas of a model right now.
+    pub fn active_replicas(&self, model: &str) -> usize {
+        let reg = self.inner.registry.read().unwrap();
+        reg.by_model.get(model).map_or(0, |idxs| {
+            idxs.iter().filter(|&&i| !reg.pods[i].retired.load(Ordering::Relaxed)).count()
+        })
     }
 
-    /// Route one request for `model`: collapse onto an identical
-    /// in-flight request when dedup is on, otherwise try the replicas in
-    /// ascending score order, admit into the first queue with room, and
-    /// shed if every queue is at the bound.  Shed requests are counted —
-    /// nothing is silently dropped.
+    /// Route one request for `model`: consult the response cache (a
+    /// fresh identical response answers immediately), collapse onto an
+    /// identical in-flight request when dedup is on, otherwise try the
+    /// replicas in ascending score order, admit into the first queue
+    /// with room, and shed if every queue is at the bound.  Shed
+    /// requests are counted — nothing is silently dropped.
     pub fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
-        let Some(replicas) = self.by_model.get(model) else {
-            bail!("fabric serves no model {model:?} (have: {:?})", self.models());
-        };
-        let mut scored: Vec<(f64, usize)> =
-            replicas.iter().map(|&i| (self.score(i), i)).collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-
-        if self.cfg.dedup {
-            let key = dedup_key(model, &payload);
-            // The map lock is held across attach/route/register so a
-            // completing worker (which also takes it, in `deliver`)
-            // cannot unregister an entry between our lookup and our
-            // attach — a waiter either rides the in-flight execution or
-            // becomes a fresh leader, never neither.  The critical
-            // section is small: replica scoring already happened above,
-            // so under the lock we only do backlog atomics and at most
-            // `replicas` O(1) queue pushes.  (Registering before routing
-            // would shrink it further but forces shed-time notification
-            // of any followers that attached in the window — a worse
-            // semantics trade.)
-            let mut map = self.dedup.lock().unwrap();
-            if let Some(entry) = map.get(&key) {
-                entry.waiters.lock().unwrap().push((id, tx));
-                self.dedup_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(Submission::Enqueued(rx));
-            }
-            let fan =
-                Arc::new(Fanout { key: Some(key), waiters: Mutex::new(vec![(id, tx)]) });
-            let work: Work = (Request { id, payload }, Instant::now(), Arc::clone(&fan));
-            if self.try_route(&scored, work) {
-                map.insert(key, fan);
-                return Ok(Submission::Enqueued(rx));
-            }
-        } else {
-            let fan = Arc::new(Fanout { key: None, waiters: Mutex::new(vec![(id, tx)]) });
-            let work: Work = (Request { id, payload }, Instant::now(), fan);
-            if self.try_route(&scored, work) {
-                return Ok(Submission::Enqueued(rx));
-            }
-        }
-        self.shed_total.fetch_add(1, Ordering::Relaxed);
-        *self.shed_by_model.lock().unwrap().entry(model.to_string()).or_insert(0) += 1;
-        Ok(Submission::Shed)
-    }
-
-    /// Try each scored replica in order; `true` when a queue admitted the
-    /// work, `false` when every queue was at the admission bound.
-    fn try_route(&self, scored: &[(f64, usize)], mut work: Work) -> bool {
-        for &(_, idx) in scored {
-            let pod = &self.pods[idx];
-            pod.backlog.fetch_add(1, Ordering::Relaxed);
-            match pod.queue.try_push(work) {
-                Ok(()) => return true,
-                Err(returned) => {
-                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
-                    work = returned;
-                }
-            }
-        }
-        false
+        self.inner.submit(model, payload)
     }
 
     /// Total shed requests so far.
     pub fn shed_total(&self) -> u64 {
-        self.shed_total.load(Ordering::Relaxed)
+        self.inner.shed_total.load(Ordering::Relaxed)
     }
 
     /// Submissions that collapsed onto an identical in-flight request
     /// (served by memoized fan-out instead of a fresh execution).
     pub fn dedup_hits(&self) -> u64 {
-        self.dedup_hits.load(Ordering::Relaxed)
+        self.inner.dedup_hits.load(Ordering::Relaxed)
     }
 
     /// Shed counts per model.
     pub fn shed_by_model(&self) -> BTreeMap<String, u64> {
-        self.shed_by_model.lock().unwrap().clone()
+        self.inner.shed_by_model.lock().unwrap().clone()
+    }
+
+    /// Response-cache counters (None when the cache is disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.inner.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Most recent autoscaler pod-spawn failure, if any (None when
+    /// autoscaling is off or every spawn succeeded).
+    pub fn last_scale_error(&self) -> Option<String> {
+        self.inner
+            .scaler
+            .as_ref()
+            .and_then(|s| s.last_spawn_error.lock().unwrap().clone())
+    }
+
+    /// Every autoscaler action so far, oldest first.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        self.inner
+            .scaler
+            .as_ref()
+            .map(|s| s.events.lock().unwrap().clone())
+            .unwrap_or_default()
+    }
+
+    /// Current adaptive drain-size target per active pod, as
+    /// `(feedback key, target)` pairs (empty with `adaptive` off).
+    pub fn batch_targets(&self) -> Vec<(String, usize)> {
+        self.inner
+            .registry
+            .read()
+            .unwrap()
+            .pods
+            .iter()
+            .filter(|p| !p.retired.load(Ordering::Relaxed))
+            .filter_map(|p| p.controller.as_ref().map(|c| (p.key.clone(), c.target())))
+            .collect()
+    }
+
+    /// Run one autoscaler control step now.  This is the same function
+    /// the background control thread calls every `interval_ms`; with
+    /// `interval_ms == 0` it is the ONLY driver, which is what the
+    /// deterministic tests use.  No-op when autoscaling is off.
+    pub fn autoscale_tick(&self) {
+        autoscale_tick(&self.inner);
+    }
+
+    /// Inspect the fabric-owned cluster (placement accounting, pod
+    /// states) without exposing the lock.
+    pub fn with_cluster<R>(&self, f: impl FnOnce(&Cluster) -> R) -> R {
+        f(&self.inner.cluster.lock().unwrap())
     }
 
     /// Drive a workload through the router: `requests` synthetic
@@ -690,45 +876,566 @@ impl Fabric {
         })
     }
 
-    /// Per-pod report rows (snapshot of each pod's collector).
+    /// Per-pod report rows (snapshot of each pod's collector), spawn
+    /// order, retired pods included — the replica timeline.
     pub fn pod_reports(&self, wall_s: f64) -> Vec<PodReport> {
-        self.pods
+        self.inner
+            .registry
+            .read()
+            .unwrap()
+            .pods
             .iter()
             .map(|p| {
-                let snap = p.executor.collector().snapshot();
-                PodReport::from_snapshot(&p.plan, snap, wall_s)
+                let (snap, dispatches) = p.stats();
+                PodReport::from_parts(
+                    &p.plan,
+                    snap,
+                    dispatches,
+                    wall_s,
+                    p.born_ms,
+                    *p.retired_ms.lock().unwrap(),
+                )
             })
             .collect()
     }
 
-    /// Fleet-aggregate report (merged pod snapshots + shed counters).
+    /// Fleet-aggregate report (merged pod snapshots + shed / dedup /
+    /// cache / scale counters).
     pub fn fleet_report(&self, wall_s: f64) -> FleetReport {
-        let snaps: Vec<Snapshot> =
-            self.pods.iter().map(|p| p.executor.collector().snapshot()).collect();
+        let (snaps, pods, active_pods): (Vec<Snapshot>, usize, usize) = {
+            let reg = self.inner.registry.read().unwrap();
+            let snaps = reg.pods.iter().map(|p| p.stats().0).collect();
+            let active =
+                reg.pods.iter().filter(|p| !p.retired.load(Ordering::Relaxed)).count();
+            (snaps, reg.pods.len(), active)
+        };
         let merged = Snapshot::merged(snaps);
         FleetReport {
-            pods: self.pods.len(),
+            pods,
+            active_pods,
             nodes: self.nodes_spanned().len(),
             requests: merged.requests,
             errors: merged.errors,
             shed: self.shed_total(),
             deduped: self.dedup_hits(),
+            cache: self.cache_stats(),
+            scale_ups: self.inner.scaler.as_ref().map_or(0, |s| s.ups.load(Ordering::Relaxed)),
+            scale_downs: self
+                .inner
+                .scaler
+                .as_ref()
+                .map_or(0, |s| s.downs.load(Ordering::Relaxed)),
             service: boxplot_opt(&merged.service_ms),
             mean_queue_wait_ms: mean_opt(&merged.queue_wait_ms),
             throughput_rps: throughput_rps(merged.requests as usize, wall_s),
         }
     }
 
-    /// Close every pod queue, drain backlogs, join workers.
-    pub fn shutdown(self) {
-        for p in &self.pods {
+    /// Stop the control thread, close every pod queue, drain backlogs,
+    /// join workers.
+    pub fn shutdown(mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scaler_thread.take() {
+            let _ = h.join();
+        }
+        let pods: Vec<Arc<PodRuntime>> = self.inner.registry.read().unwrap().pods.clone();
+        for p in &pods {
             p.queue.close();
         }
-        for p in self.pods {
-            for w in p.workers {
+        for p in &pods {
+            for w in p.workers.lock().unwrap().drain(..) {
                 let _ = w.join();
             }
         }
+    }
+}
+
+/// Build (but do not start) a pod runtime.
+fn new_runtime(
+    plan: PodPlan,
+    executor: Arc<dyn PodExecutor>,
+    cfg: &FabricConfig,
+    born_ms: f64,
+) -> PodRuntime {
+    let controller = cfg.adaptive.then(|| {
+        Arc::new(BatchController::new(BatchControlConfig {
+            min_batch: cfg.min_batch,
+            max_batch: cfg.max_batch,
+            slo_p99_ms: cfg.slo_p99_ms,
+            ..Default::default()
+        }))
+    });
+    let key = FeedbackStore::key(&plan.aif, &plan.node);
+    PodRuntime {
+        plan,
+        key,
+        queue: Arc::new(BoundedQueue::new(cfg.queue_capacity)),
+        backlog: Arc::new(AtomicU64::new(0)),
+        executor: Mutex::new(Some(executor)),
+        controller,
+        workers: Mutex::new(Vec::new()),
+        retired: AtomicBool::new(false),
+        final_report: Mutex::new(None),
+        born_ms,
+        retired_ms: Mutex::new(None),
+    }
+}
+
+/// Spawn one pod's batcher workers (free function: worker threads hold
+/// an `Arc` of the whole fabric state, which `&self` methods cannot
+/// mint on stable Rust).
+fn start_workers(inner: &Arc<FabricInner>, pod: &Arc<PodRuntime>) {
+    let n = inner.cfg.workers.max(1);
+    let handles: Vec<thread::JoinHandle<()>> = (0..n)
+        .map(|_| {
+            let inner = Arc::clone(inner);
+            let pod = Arc::clone(pod);
+            thread::spawn(move || inner.worker_loop(&pod))
+        })
+        .collect();
+    pod.workers.lock().unwrap().extend(handles);
+}
+
+impl FabricInner {
+    /// One batcher worker: drain (adaptive) batches, execute them fused
+    /// (or per-item on the reference path), deliver outcomes, feed the
+    /// controller.
+    fn worker_loop(&self, pod: &Arc<PodRuntime>) {
+        let linger = Duration::from_secs_f64(self.cfg.batch_linger_ms.max(0.0) / 1e3);
+        let max_batch = self.cfg.max_batch.max(1);
+        // One clone up front: the executor slot is emptied only after
+        // every worker has been joined, so a running worker always
+        // owns a live handle without re-locking per batch.
+        let Some(executor) = pod.executor.lock().unwrap().clone() else {
+            return;
+        };
+        loop {
+            let take = pod.controller.as_ref().map_or(max_batch, |c| c.drain_size());
+            // `None` = closed and drained: the unambiguous shutdown
+            // signal (workers block, never spin).
+            let Some(batch) = pod.queue.pop_batch_linger(take, linger) else {
+                break;
+            };
+            let drained = batch.len();
+            let mut tail_ms = 0.0f64;
+            {
+                let mut finish = |fan: Arc<Fanout>, result: Result<Response>| {
+                    let outcome = match result {
+                        Ok(resp) => {
+                            self.feedback.observe(&pod.key, resp.service_ms, resp.queue_wait_ms);
+                            let e2e = resp.queue_wait_ms + resp.service_ms;
+                            if e2e > tail_ms {
+                                tail_ms = e2e;
+                            }
+                            Outcome::Completed(resp)
+                        }
+                        Err(e) => Outcome::Failed(format!("{e:#}")),
+                    };
+                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    deliver(&self.dedup, self.cache.as_deref(), &fan, outcome);
+                };
+                if self.cfg.fused {
+                    // The whole drained batch is ONE device dispatch;
+                    // every item stops waiting at dispatch time.
+                    let mut reqs = Vec::with_capacity(batch.len());
+                    let mut waits = Vec::with_capacity(batch.len());
+                    let mut fans = Vec::with_capacity(batch.len());
+                    for (req, enqueued, fan) in batch {
+                        waits.push(enqueued.elapsed().as_secs_f64() * 1e3);
+                        reqs.push(req);
+                        fans.push(fan);
+                    }
+                    let results = executor.execute_batch(&reqs, &waits);
+                    for (fan, result) in fans.into_iter().zip(results) {
+                        finish(fan, result);
+                    }
+                } else {
+                    // Per-item reference path (the bench baseline): one
+                    // dispatch per request, and each item's queue wait
+                    // is taken at its OWN execution time so the
+                    // in-batch serial wait is attributed honestly.
+                    for (req, enqueued, fan) in batch {
+                        let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                        let result = executor.execute(&req, wait_ms);
+                        finish(fan, result);
+                    }
+                }
+            }
+            if let Some(c) = &pod.controller {
+                c.observe(drained, pod.queue.len(), tail_ms, self.feedback.get(&pod.key));
+            }
+        }
+    }
+
+    /// Router score for a pod: estimated per-request latency (feedback
+    /// blended over the cost model) scaled by its backlog — a
+    /// least-estimated-work-left policy.
+    fn score(&self, pod: &PodRuntime) -> f64 {
+        let est = self.feedback.blend(&pod.key, pod.plan.modeled_ms);
+        let backlog = pod.backlog.load(Ordering::Relaxed) as f64;
+        est * (backlog + 1.0)
+    }
+
+    /// Active replicas of `model`, sorted by ascending router score.
+    /// Errors for unknown models; an empty vec (every replica retired)
+    /// lets the caller shed.
+    fn candidates(&self, model: &str) -> Result<Vec<Arc<PodRuntime>>> {
+        let reg = self.registry.read().unwrap();
+        let Some(idxs) = reg.by_model.get(model) else {
+            let have: Vec<&String> = reg.by_model.keys().collect();
+            bail!("fabric serves no model {model:?} (have: {have:?})");
+        };
+        let mut scored: Vec<(f64, Arc<PodRuntime>)> = idxs
+            .iter()
+            .map(|&i| &reg.pods[i])
+            .filter(|p| !p.retired.load(Ordering::Relaxed))
+            .map(|p| (self.score(p), Arc::clone(p)))
+            .collect();
+        drop(reg);
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Ok(scored.into_iter().map(|(_, p)| p).collect())
+    }
+
+    fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
+        let scored = self.candidates(model)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let keyed = self.cfg.dedup || self.cache.is_some();
+        let key = if keyed { Some(dedup_key(model, &payload)) } else { None };
+
+        // Layer 1 — response cache: a fresh completed response for the
+        // same (model, payload) answers immediately, re-stamped with
+        // this caller's id.  No queue slot, no execution — and the
+        // latency fields are zeroed, because this caller waited for
+        // nothing: reporting the leader's historical service time here
+        // would poison the e2e percentiles the cache exists to improve.
+        if let (Some(cache), Some(k)) = (&self.cache, &key) {
+            if let Some(resp) = cache.get(k) {
+                let _ = tx.send(Outcome::Completed(Response {
+                    id,
+                    service_ms: 0.0,
+                    real_compute_ms: 0.0,
+                    queue_wait_ms: 0.0,
+                    ..resp
+                }));
+                return Ok(Submission::Enqueued(rx));
+            }
+        }
+
+        if self.cfg.dedup {
+            let k = key.expect("dedup implies a content key");
+            // Layer 2 — in-flight dedup.  The map lock is held across
+            // attach/route/register so a completing worker (which also
+            // takes it, in `deliver`) cannot unregister an entry between
+            // our lookup and our attach — a waiter either rides the
+            // in-flight execution or becomes a fresh leader, never
+            // neither.  The critical section is small: replica scoring
+            // already happened above, so under the lock we only do
+            // backlog atomics and at most `replicas` O(1) queue pushes.
+            let mut map = self.dedup.lock().unwrap();
+            if let Some(entry) = map.get(&k) {
+                entry.waiters.lock().unwrap().push((id, tx));
+                self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Submission::Enqueued(rx));
+            }
+            let fan =
+                Arc::new(Fanout { key: Some(k), waiters: Mutex::new(vec![(id, tx)]) });
+            let work: Work = (Request { id, payload }, Instant::now(), Arc::clone(&fan));
+            if self.try_route(&scored, work) {
+                map.insert(k, fan);
+                return Ok(Submission::Enqueued(rx));
+            }
+        } else {
+            let fan = Arc::new(Fanout { key, waiters: Mutex::new(vec![(id, tx)]) });
+            let work: Work = (Request { id, payload }, Instant::now(), fan);
+            if self.try_route(&scored, work) {
+                return Ok(Submission::Enqueued(rx));
+            }
+        }
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
+        *self.shed_by_model.lock().unwrap().entry(model.to_string()).or_insert(0) += 1;
+        Ok(Submission::Shed)
+    }
+
+    /// Try each scored replica in order; `true` when a queue admitted the
+    /// work, `false` when every queue was at the admission bound (or
+    /// closed by a concurrent retire — closed queues bounce pushes).
+    fn try_route(&self, scored: &[Arc<PodRuntime>], mut work: Work) -> bool {
+        for pod in scored {
+            pod.backlog.fetch_add(1, Ordering::Relaxed);
+            match pod.queue.try_push(work) {
+                Ok(()) => return true,
+                Err(returned) => {
+                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    work = returned;
+                }
+            }
+        }
+        false
+    }
+
+}
+
+/// One autoscaler step: classify every model from mean backlog per
+/// active replica and shed deltas, debounce through the hysteresis
+/// gate, then act within min/max (and per-platform) bounds.  A free
+/// function because scale-ups spawn worker threads that need an `Arc`
+/// of the fabric state.
+fn autoscale_tick(inner: &Arc<FabricInner>) {
+    let Some(sc) = &inner.scaler else { return };
+    inner.reap_retired();
+    let a = sc.auto.clone();
+    let models: Vec<String> =
+        inner.registry.read().unwrap().by_model.keys().cloned().collect();
+    for model in models {
+        let (active, backlog_sum) = {
+            let reg = inner.registry.read().unwrap();
+            let mut active = 0usize;
+            let mut backlog = 0u64;
+            if let Some(idxs) = reg.by_model.get(&model) {
+                for &i in idxs {
+                    let p = &reg.pods[i];
+                    if !p.retired.load(Ordering::Relaxed) {
+                        active += 1;
+                        backlog += p.backlog.load(Ordering::Relaxed);
+                    }
+                }
+            }
+            (active, backlog)
+        };
+        if active == 0 {
+            continue;
+        }
+        let shed_now =
+            inner.shed_by_model.lock().unwrap().get(&model).copied().unwrap_or(0);
+        let mut pm = sc.per_model.lock().unwrap();
+        let st = pm.entry(model.clone()).or_default();
+        let shed_delta = shed_now.saturating_sub(st.last_shed);
+        st.last_shed = shed_now;
+        if st.cooldown > 0 {
+            st.cooldown -= 1;
+            continue;
+        }
+        let mean_backlog = backlog_sum as f64 / active as f64;
+        let overloaded = mean_backlog >= a.scale_up_backlog || shed_delta > 0;
+        let idle = !overloaded && mean_backlog <= a.scale_down_backlog && shed_delta == 0;
+        match st.gate.decide(overloaded, idle, a.hold_ticks) {
+            Some(ScaleDirection::Up) if active < a.max_replicas => {
+                let trigger = if shed_delta > 0 {
+                    format!("shed +{shed_delta}")
+                } else {
+                    format!("backlog {mean_backlog:.1}/replica")
+                };
+                if scale_up(inner, &model, sc, active, &trigger) {
+                    st.cooldown = a.cooldown_ticks;
+                }
+            }
+            Some(ScaleDirection::Down) if active > a.min_replicas.max(1) => {
+                let trigger = format!("backlog {mean_backlog:.1}/replica");
+                if inner.scale_down(&model, sc, active, &trigger) {
+                    st.cooldown = a.cooldown_ticks;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Bind + spawn one more replica of `model`, placed by the scaler's
+/// feedback-blended backend ranking, on a node not already hosting the
+/// model and a platform still under its per-model ceiling.
+fn scale_up(
+    inner: &Arc<FabricInner>,
+    model: &str,
+    sc: &ScalerState,
+    active: usize,
+    trigger: &str,
+) -> bool {
+    let (nodes_used, plat_counts) = {
+        let reg = inner.registry.read().unwrap();
+        let mut nodes: BTreeSet<String> = BTreeSet::new();
+        let mut plats: BTreeMap<&'static str, usize> = BTreeMap::new();
+        if let Some(idxs) = reg.by_model.get(model) {
+            for &i in idxs {
+                let p = &reg.pods[i];
+                if p.retired.load(Ordering::Relaxed) {
+                    continue;
+                }
+                nodes.insert(p.plan.node.clone());
+                if let Some(plat) = platform::get(&p.plan.variant) {
+                    *plats.entry(plat.name).or_insert(0) += 1;
+                }
+            }
+        }
+        (nodes, plats)
+    };
+    // Rank under a short lock; each candidate's bind re-validates
+    // capacity, so a slightly stale ranking only costs a failed bind.
+    let ranked = {
+        let cluster = inner.cluster.lock().unwrap();
+        sc.backend.rank(model, &cluster)
+    };
+    let Ok(ranked) = ranked else {
+        return false;
+    };
+    for d in ranked {
+        if nodes_used.contains(&d.node) {
+            continue;
+        }
+        let Some(plat) = platform::get(&d.variant) else { continue };
+        if plat_counts.get(plat.name).copied().unwrap_or(0) >= plat.max_replicas_per_model() {
+            continue;
+        }
+        let Some(artifact) = sc
+            .backend
+            .variants_of(model)
+            .into_iter()
+            .find(|a| a.manifest.variant == d.variant)
+            .cloned()
+        else {
+            continue;
+        };
+        let artifact = Arc::new(artifact);
+        let mem = Backend::pod_memory_gb(&artifact);
+        let bound = {
+            let mut cluster = inner.cluster.lock().unwrap();
+            cluster.bind(&d.aif, &d.variant, &d.node, mem)
+        };
+        let Ok(pod_id) = bound else {
+            continue;
+        };
+        let plan = PodPlan {
+            aif: d.aif.clone(),
+            model: model.to_string(),
+            variant: d.variant.clone(),
+            node: d.node.clone(),
+            pod_id,
+            modeled_ms: d.modeled_ms,
+        };
+        // The slot is bound and the cluster lock released: for a real
+        // pod the factory is a PJRT compile taking seconds, and
+        // nothing else (router, `with_cluster`, other models'
+        // decisions) should stall behind it.
+        let executor = match (inner.factory)(&plan, &artifact) {
+            Ok(e) => e,
+            Err(e) => {
+                // Unwind this bind, remember why, and try the next
+                // ranked placement — one broken node must not wedge
+                // the autoscaler.
+                let _ = inner.cluster.lock().unwrap().terminate(pod_id);
+                *sc.last_spawn_error.lock().unwrap() =
+                    Some(format!("{}@{}: {e:#}", plan.aif, plan.node));
+                continue;
+            }
+        };
+        let born_ms = inner.epoch.elapsed().as_secs_f64() * 1e3;
+        let pod = Arc::new(new_runtime(plan, executor, &inner.cfg, born_ms));
+        start_workers(inner, &pod);
+        {
+            let mut reg = inner.registry.write().unwrap();
+            let idx = reg.pods.len();
+            reg.pods.push(Arc::clone(&pod));
+            reg.by_model.entry(model.to_string()).or_default().push(idx);
+        }
+        sc.ups.fetch_add(1, Ordering::Relaxed);
+        sc.events.lock().unwrap().push(ScaleEvent {
+            at_ms: born_ms,
+            model: model.to_string(),
+            direction: ScaleDirection::Up,
+            aif: pod.plan.aif.clone(),
+            node: pod.plan.node.clone(),
+            replicas_after: active + 1,
+            trigger: trigger.to_string(),
+        });
+        return true;
+    }
+    false
+}
+
+impl FabricInner {
+    /// Reap retired pods whose workers have finished draining: join
+    /// the threads, freeze the pod's report, and release the executor —
+    /// for a real pod that drops the compiled model and its pinned
+    /// weights, which is the memory a scale-down exists to reclaim.
+    /// Runs at the top of every autoscaler tick; pods still draining
+    /// are left for a later tick (never blocks).
+    fn reap_retired(&self) {
+        let retired: Vec<Arc<PodRuntime>> = self
+            .registry
+            .read()
+            .unwrap()
+            .pods
+            .iter()
+            .filter(|p| p.retired.load(Ordering::Relaxed))
+            .cloned()
+            .collect();
+        for pod in retired {
+            let mut workers = pod.workers.lock().unwrap();
+            if workers.is_empty() {
+                continue; // already reaped (or shutdown got there first)
+            }
+            if !workers.iter().all(|w| w.is_finished()) {
+                continue; // still draining admitted work
+            }
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+            drop(workers);
+            let mut slot = pod.executor.lock().unwrap();
+            if let Some(e) = slot.as_ref() {
+                *pod.final_report.lock().unwrap() =
+                    Some((e.collector().snapshot(), e.dispatches()));
+            }
+            *slot = None;
+        }
+    }
+
+    /// Retire the active replica of `model` with the worst estimated
+    /// latency (the inverse of placement ranking).  Graceful: the
+    /// router stops seeing the pod immediately (closed queues bounce
+    /// pushes), its workers drain everything already admitted and exit,
+    /// and the cluster releases the slot and memory.
+    fn scale_down(
+        &self,
+        model: &str,
+        sc: &ScalerState,
+        active: usize,
+        trigger: &str,
+    ) -> bool {
+        let victim: Option<Arc<PodRuntime>> = {
+            let reg = self.registry.read().unwrap();
+            let mut worst: Option<(f64, Arc<PodRuntime>)> = None;
+            if let Some(idxs) = reg.by_model.get(model) {
+                for &i in idxs {
+                    let p = &reg.pods[i];
+                    if p.retired.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let est = self.feedback.blend(&p.key, p.plan.modeled_ms);
+                    if worst.as_ref().map_or(true, |(w, _)| est > *w) {
+                        worst = Some((est, Arc::clone(p)));
+                    }
+                }
+            }
+            worst.map(|(_, p)| p)
+        };
+        let Some(pod) = victim else { return false };
+        pod.retired.store(true, Ordering::Relaxed);
+        pod.queue.close();
+        let at_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        *pod.retired_ms.lock().unwrap() = Some(at_ms);
+        let _ = self.cluster.lock().unwrap().terminate(pod.plan.pod_id);
+        sc.downs.fetch_add(1, Ordering::Relaxed);
+        sc.events.lock().unwrap().push(ScaleEvent {
+            at_ms,
+            model: model.to_string(),
+            direction: ScaleDirection::Down,
+            aif: pod.plan.aif.clone(),
+            node: pod.plan.node.clone(),
+            replicas_after: active - 1,
+            trigger: trigger.to_string(),
+        });
+        true
     }
 }
 
@@ -792,25 +1499,47 @@ pub struct PodReport {
     pub requests: u64,
     /// Executor errors.
     pub errors: u64,
+    /// Device dispatches performed (fused batches count once).
+    pub dispatches: u64,
+    /// Average fused batch size (`requests / dispatches`; 0 when idle) —
+    /// the amortization proof for production runs.
+    pub avg_batch: f64,
     /// Service-latency five-number summary (None when idle).
     pub service: Option<Boxplot>,
     /// Mean time requests spent queued, ms.
     pub mean_queue_wait_ms: f64,
     /// Served throughput over the drive wall-clock.
     pub throughput_rps: f64,
+    /// Milliseconds after the fabric epoch this pod spawned (0 for
+    /// initial placements).
+    pub born_ms: f64,
+    /// Milliseconds after the fabric epoch the autoscaler retired this
+    /// pod (None while active).
+    pub retired_ms: Option<f64>,
 }
 
 impl PodReport {
-    fn from_snapshot(plan: &PodPlan, snap: Snapshot, wall_s: f64) -> PodReport {
+    fn from_parts(
+        plan: &PodPlan,
+        snap: Snapshot,
+        dispatches: u64,
+        wall_s: f64,
+        born_ms: f64,
+        retired_ms: Option<f64>,
+    ) -> PodReport {
         PodReport {
             aif: plan.aif.clone(),
             variant: plan.variant.clone(),
             node: plan.node.clone(),
             requests: snap.requests,
             errors: snap.errors,
+            dispatches,
+            avg_batch: if dispatches > 0 { snap.requests as f64 / dispatches as f64 } else { 0.0 },
             service: boxplot_opt(&snap.service_ms),
             mean_queue_wait_ms: mean_opt(&snap.queue_wait_ms),
             throughput_rps: throughput_rps(snap.requests as usize, wall_s),
+            born_ms,
+            retired_ms,
         }
     }
 }
@@ -818,9 +1547,11 @@ impl PodReport {
 /// Fleet-aggregate row in the fabric report.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
-    /// Placed pods.
+    /// Pods spawned over the fabric's lifetime (retired included).
     pub pods: usize,
-    /// Distinct nodes hosting pods.
+    /// Pods currently active.
+    pub active_pods: usize,
+    /// Distinct nodes hosting active pods.
     pub nodes: usize,
     /// Requests served fleet-wide.
     pub requests: u64,
@@ -830,6 +1561,12 @@ pub struct FleetReport {
     pub shed: u64,
     /// Submissions answered by in-flight dedup (no fresh execution).
     pub deduped: u64,
+    /// Response-cache counters (None when the cache is off).
+    pub cache: Option<CacheStats>,
+    /// Replicas the autoscaler added.
+    pub scale_ups: u64,
+    /// Replicas the autoscaler retired.
+    pub scale_downs: u64,
     /// Merged service-latency summary (None when idle).
     pub service: Option<Boxplot>,
     /// Mean queue wait fleet-wide, ms.
@@ -841,14 +1578,13 @@ pub struct FleetReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::Policy;
     use crate::cluster::paper_testbed;
 
     fn sim_fabric(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
         let backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
         let mut cluster = Cluster::new(paper_testbed());
         cluster.apply_kube_api_extension();
-        Fabric::place_sim(&backend, &mut cluster, cfg, gate).unwrap()
+        Fabric::place_sim(&backend, cluster, cfg, gate).unwrap()
     }
 
     #[test]
@@ -903,6 +1639,7 @@ mod tests {
         let fleet = fabric.fleet_report(report.wall_s);
         assert_eq!(fleet.requests, report.completed as u64);
         assert_eq!(fleet.shed as usize, report.shed);
+        assert_eq!(fleet.active_pods, fleet.pods, "nothing retired without autoscaling");
         fabric.shutdown();
     }
 
@@ -918,6 +1655,7 @@ mod tests {
         );
         for (key, fb) in store.all() {
             assert!(fb.ewma_service_ms > 0.0, "{key}");
+            assert!(fb.ewma_queue_wait_ms >= 0.0, "{key}");
             assert!(fb.observations > 0);
         }
         fabric.shutdown();
@@ -935,7 +1673,7 @@ mod tests {
     fn dedup_entry_is_removed_after_completion() {
         // Without a gate the execution completes quickly; afterwards the
         // same payload must start a fresh execution (memoization is
-        // in-flight only, never stale).
+        // in-flight only — no cache configured here).
         let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
         let fabric = sim_fabric(&cfg, None);
         for round in 0..3 {
@@ -951,6 +1689,54 @@ mod tests {
         assert_eq!(fabric.dedup_hits(), 0);
         let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
         assert_eq!(served, 3);
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn response_cache_serves_repeats_without_reexecution() {
+        let cfg = FabricConfig {
+            time_scale: 0.0,
+            cache_capacity: 32,
+            cache_ttl_ms: 60_000,
+            ..Default::default()
+        };
+        let fabric = sim_fabric(&cfg, None);
+        let payload = vec![0.25; 64];
+        for round in 0u64..3 {
+            match fabric.submit("lenet", payload.clone()).unwrap() {
+                Submission::Enqueued(rx) => match rx.recv().unwrap() {
+                    Outcome::Completed(resp) => assert_eq!(
+                        resp.id, round,
+                        "cached responses are re-stamped per caller"
+                    ),
+                    Outcome::Failed(e) => panic!("{e}"),
+                },
+                Submission::Shed => panic!("idle fabric must admit"),
+            }
+        }
+        let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+        assert_eq!(served, 1, "rounds 2 and 3 must be cache hits, not executions");
+        let stats = fabric.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (2, 1));
+        let fleet = fabric.fleet_report(1.0);
+        assert_eq!(fleet.cache.unwrap().hits, 2, "cache counters surface in the fleet report");
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn pod_reports_prove_amortization_via_dispatch_counts() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        let run = fabric.run(80, Arrival::ClosedLoop, 17).unwrap();
+        assert!(run.completed > 0);
+        let reports = fabric.pod_reports(run.wall_s);
+        let served: u64 = reports.iter().map(|r| r.requests).sum();
+        let dispatches: u64 = reports.iter().map(|r| r.dispatches).sum();
+        assert!(dispatches > 0 && dispatches <= served, "{dispatches} vs {served}");
+        for r in reports.iter().filter(|r| r.requests > 0) {
+            assert!(r.avg_batch >= 1.0, "{}: avg batch {}", r.aif, r.avg_batch);
+            assert!(r.retired_ms.is_none(), "nothing retires without autoscaling");
+        }
         fabric.shutdown();
     }
 

@@ -9,6 +9,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// A fixed-capacity queue shared between the router (producer) and one
 /// pod's batcher workers (consumers).
@@ -61,10 +62,47 @@ impl<T> BoundedQueue<T> {
     /// never observe an "empty batch" and spin: it either blocks here or
     /// exits on `None`.
     pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
+        self.pop_batch_linger(max, Duration::ZERO)
+    }
+
+    /// [`pop_batch`](Self::pop_batch) with an optional *linger*: after
+    /// the first item arrives, a consumer facing a less-than-`max`
+    /// backlog waits up to `linger` for the batch to fill before
+    /// dispatching, trading a bounded latency add for a fuller fused
+    /// dispatch (the batch-coalescing lever `FabricConfig::
+    /// batch_linger_ms` exposes; `Duration::ZERO` is exactly the old
+    /// drain-what's-there behavior).
+    ///
+    /// The linger never outlives shutdown: closing the queue cuts it
+    /// short, and whatever is queued is returned immediately.  As with
+    /// `pop_batch`, `Some(batch)` is always non-empty and `None` means
+    /// closed **and** drained.
+    pub fn pop_batch_linger(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.state.lock().unwrap();
         loop {
             if !g.items.is_empty() {
+                if g.items.len() < max && !g.closed && !linger.is_zero() {
+                    // Coalesce: hold the dispatch back (bounded) while
+                    // the queue fills toward a full batch.
+                    let deadline = Instant::now() + linger;
+                    while g.items.len() < max && !g.closed {
+                        let now = Instant::now();
+                        let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                            break;
+                        };
+                        g = self.not_empty.wait_timeout(g, left).unwrap().0;
+                    }
+                }
+                // The lock is released during each timed wait, so a
+                // sibling consumer may have drained the queue under us
+                // — re-check before draining.
+                if g.items.is_empty() {
+                    if g.closed {
+                        return None;
+                    }
+                    continue;
+                }
                 let n = max.min(g.items.len());
                 return Some(g.items.drain(..n).collect());
             }
@@ -156,6 +194,57 @@ mod tests {
         assert_eq!(q.pop_batch(10), Some(vec![3, 4, 5]), "partial final batch");
         assert_eq!(q.pop_batch(10), None);
         assert_eq!(q.pop_batch(10), None, "shutdown signal is idempotent");
+    }
+
+    #[test]
+    fn linger_coalesces_a_fuller_batch() {
+        // Boundary: with a near-empty queue, a lingering consumer must
+        // pick up items that arrive inside the linger window instead of
+        // dispatching a batch of one.
+        let q = Arc::new(BoundedQueue::new(8));
+        q.try_push(0).unwrap();
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            q2.pop_batch_linger(4, std::time::Duration::from_millis(500))
+        });
+        // Arrivals well inside the window.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.try_push(1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        let batch = consumer.join().unwrap().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3], "full batch coalesced within the linger");
+    }
+
+    #[test]
+    fn zero_linger_is_the_old_drain_whats_there_behavior() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(
+            q.pop_batch_linger(4, std::time::Duration::ZERO),
+            Some(vec![1, 2]),
+            "linger off → partial batch returns immediately"
+        );
+    }
+
+    #[test]
+    fn close_cuts_a_linger_short() {
+        let q = Arc::new(BoundedQueue::new(8));
+        q.try_push(7).unwrap();
+        let q2 = Arc::clone(&q);
+        let t0 = std::time::Instant::now();
+        let consumer = std::thread::spawn(move || {
+            q2.pop_batch_linger(4, std::time::Duration::from_secs(30))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), Some(vec![7]), "queued item still delivered");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "close must cut the linger short, not wait it out"
+        );
     }
 
     #[test]

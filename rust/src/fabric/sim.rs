@@ -12,6 +12,7 @@
 //! modes.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -79,6 +80,10 @@ pub struct SimPod {
     rng: Mutex<Rng>,
     metrics: Arc<Collector>,
     gate: Option<Arc<Gate>>,
+    /// Device dispatches performed (one per fused batch) — the
+    /// simulated analog of the real executable's dispatch counter, so
+    /// `PodReport::avg_batch` proves amortization in both pod modes.
+    dispatches: AtomicU64,
 }
 
 impl SimPod {
@@ -100,12 +105,18 @@ impl SimPod {
             rng: Mutex::new(Rng::new(seed)),
             metrics: Arc::new(Collector::new()),
             gate,
+            dispatches: AtomicU64::new(0),
         })
     }
 
     /// This pod's metrics collector.
     pub fn metrics(&self) -> &Arc<Collector> {
         &self.metrics
+    }
+
+    /// Simulated device dispatches so far (one per fused batch).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
     }
 
     /// Serve one request: sample the platform cost model, occupy the
@@ -134,6 +145,7 @@ impl SimPod {
         if let Some(g) = &self.gate {
             g.wait_open();
         }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
         let n = reqs.len();
         let total_ms = {
             let mut rng = self.rng.lock().unwrap();
@@ -260,6 +272,7 @@ mod tests {
             "fused per-item {batched_ms} must beat per-item dispatch {single_ms}"
         );
         assert_eq!(pod.metrics().snapshot().requests, 9);
+        assert_eq!(pod.dispatches(), 2, "one fused batch + one single = two dispatches");
     }
 
     #[test]

@@ -38,11 +38,13 @@
 //! cluster.apply_kube_api_extension();
 //!
 //! // Backend indexes one artifact per (model × variant); the fabric
-//! // shards every model across distinct nodes and spawns per-pod
-//! // batcher workers behind bounded admission queues.
+//! // takes ownership of the cluster, shards every model across
+//! // distinct nodes and spawns per-pod batcher workers behind bounded
+//! // admission queues.  `adaptive` lets each pod's controller pick its
+//! // own drain size from backlog + latency feedback.
 //! let mut backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
-//! let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
-//! let fabric = Fabric::place_sim(&backend, &mut cluster, &cfg, None).unwrap();
+//! let cfg = FabricConfig { time_scale: 0.0, adaptive: true, ..Default::default() };
+//! let fabric = Fabric::place_sim(&backend, cluster, &cfg, None).unwrap();
 //! assert!(fabric.nodes_spanned().len() >= 3);
 //!
 //! // Route a small workload; every request is completed or shed,
@@ -52,7 +54,10 @@
 //!
 //! // Measured latencies feed back into placement scoring.
 //! backend.feedback = Some(fabric.feedback());
-//! let d = backend.rank("lenet", &cluster).unwrap().remove(0);
+//! let d = fabric
+//!     .with_cluster(|cluster| backend.rank("lenet", cluster))
+//!     .unwrap()
+//!     .remove(0);
 //! assert!(d.estimated_ms.is_finite());
 //! fabric.shutdown();
 //! ```

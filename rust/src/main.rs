@@ -9,8 +9,9 @@
 //! - `fabric`   — cluster-scale serving: shard every AIF across the
 //!   testbed, route an open-loop workload with admission control, report
 //!   per-node + fleet tables (see `docs/CLI.md`).
-//! - `bench`    — fused-batch sweep: batch size × arrival rate, fused vs
-//!   per-item execution, writes `BENCH_fabric.json`.
+//! - `bench`    — fabric sweeps: fused vs per-item, adaptive vs fixed
+//!   batch sizing, fixed replicas vs autoscaler; writes
+//!   `BENCH_fabric.json`.
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
@@ -23,7 +24,7 @@ use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::config::Config;
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
 use tf2aif::fabric::bench::{self, BenchConfig};
-use tf2aif::fabric::{sim, Fabric, FabricConfig};
+use tf2aif::fabric::{sim, AutoscaleConfig, Fabric, FabricConfig};
 use tf2aif::report;
 use tf2aif::runtime::Engine;
 use tf2aif::serving::{AifServer, ImageClassify};
@@ -98,10 +99,12 @@ fn print_usage() {
          fabric   [--requests N] [--arrival closed|poisson:RPS|uniform:RPS] [--models a,b]\n           \
          [--replicas N] [--queue N] [--batch N] [--workers N] [--policy P]\n           \
          [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n           \
-         [--per-item] [--no-dedup]\n  \
+         [--per-item] [--no-dedup] [--adaptive] [--min-batch N] [--slo MS]\n           \
+         [--linger MS] [--cache N] [--cache-ttl MS] [--autoscale MIN:MAX]\n           \
+         [--as-interval MS]\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
-         [--seed N] [--out FILE]\n  \
+         [--slo MS] [--seed N] [--out FILE] [--fused-only]\n  \
          report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
     );
 }
@@ -264,43 +267,91 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     }
     let mut backend = Backend::new(artifacts, policy);
 
+    let f64_flag = |key: &str, default: f64| -> Result<f64> {
+        match flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
+            None => Ok(default),
+        }
+    };
+    let d = FabricConfig::default();
+    let autoscale = match flags.get("--autoscale") {
+        Some(spec) => {
+            let (lo, hi) = spec
+                .split_once(':')
+                .with_context(|| format!("bad --autoscale {spec:?} (expected MIN:MAX)"))?;
+            let min_replicas: usize = lo.parse().with_context(|| format!("bad min {lo:?}"))?;
+            let max_replicas: usize = hi.parse().with_context(|| format!("bad max {hi:?}"))?;
+            if min_replicas < 1 || min_replicas > max_replicas {
+                bail!(
+                    "bad --autoscale {spec:?}: need 1 <= MIN <= MAX, \
+                     got {min_replicas}:{max_replicas}"
+                );
+            }
+            Some(AutoscaleConfig {
+                min_replicas,
+                max_replicas,
+                interval_ms: flags.usize_or(
+                    "--as-interval",
+                    AutoscaleConfig::default().interval_ms as usize,
+                )? as u64,
+                ..Default::default()
+            })
+        }
+        None => None,
+    };
     let cfg = FabricConfig {
-        queue_capacity: flags.usize_or("--queue", FabricConfig::default().queue_capacity)?,
-        max_batch: flags.usize_or("--batch", FabricConfig::default().max_batch)?,
-        workers: flags.usize_or("--workers", FabricConfig::default().workers)?,
-        replicas_per_model: flags
-            .usize_or("--replicas", FabricConfig::default().replicas_per_model)?,
-        time_scale: match flags.get("--time-scale") {
-            Some(v) => v.parse().with_context(|| format!("bad --time-scale: {v:?}"))?,
-            None => FabricConfig::default().time_scale,
-        },
-        seed: flags.usize_or("--seed", FabricConfig::default().seed as usize)? as u64,
+        queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
+        max_batch: flags.usize_or("--batch", d.max_batch)?,
+        adaptive: flags.has("--adaptive"),
+        min_batch: flags.usize_or("--min-batch", d.min_batch)?,
+        slo_p99_ms: f64_flag("--slo", d.slo_p99_ms)?,
+        batch_linger_ms: f64_flag("--linger", d.batch_linger_ms)?,
+        workers: flags.usize_or("--workers", d.workers)?,
+        replicas_per_model: flags.usize_or("--replicas", d.replicas_per_model)?,
+        time_scale: f64_flag("--time-scale", d.time_scale)?,
+        seed: flags.usize_or("--seed", d.seed as usize)? as u64,
         fused: !flags.has("--per-item"),
         dedup: !flags.has("--no-dedup"),
+        cache_capacity: flags.usize_or("--cache", d.cache_capacity)?,
+        cache_ttl_ms: flags.usize_or("--cache-ttl", d.cache_ttl_ms as usize)? as u64,
+        autoscale,
         ..Default::default()
     };
 
     // ── Place + spawn the fleet ─────────────────────────────────────────
     let fabric = if real {
         let engine = Engine::cpu()?;
-        Fabric::place_real(&backend, &mut cluster, &engine, &cfg)?
+        Fabric::place_real(&backend, cluster, engine, &cfg)?
     } else {
-        Fabric::place_sim(&backend, &mut cluster, &cfg, None)?
+        Fabric::place_sim(&backend, cluster, &cfg, None)?
     };
     // Close the loop: placement scoring now sees fabric measurements.
     backend.feedback = Some(fabric.feedback());
 
     println!(
         "fabric: {} pods over {} nodes ({} mode, queue bound {}, batch {} [{}], \
-         {} worker(s)/pod, dedup {})",
+         {} worker(s)/pod, dedup {}, cache {}, autoscale {})",
         fabric.plans().len(),
         fabric.nodes_spanned().len(),
         if real { "real PJRT" } else { "simulated" },
         cfg.queue_capacity,
-        cfg.max_batch,
+        if cfg.adaptive {
+            format!("adaptive ≤{} (SLO {:.0} ms)", cfg.max_batch, cfg.slo_p99_ms)
+        } else {
+            cfg.max_batch.to_string()
+        },
         if cfg.fused { "fused" } else { "per-item" },
         cfg.workers,
         if cfg.dedup { "on" } else { "off" },
+        if cfg.cache_capacity > 0 {
+            format!("{} entries / {} ms TTL", cfg.cache_capacity, cfg.cache_ttl_ms)
+        } else {
+            "off".to_string()
+        },
+        match &cfg.autoscale {
+            Some(a) => format!("{}..{} replicas", a.min_replicas, a.max_replicas),
+            None => "off".to_string(),
+        },
     );
     for p in fabric.plans() {
         println!(
@@ -344,13 +395,39 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     print!("{}", report::render_table(&h, &rows));
     report::write_csv("reports/fabric_fleet.csv", &h, &rows)?;
 
-    println!("\nmeasured feedback (model_variant@node → EWMA service ms):");
+    let events = fabric.scale_events();
+    if !events.is_empty() {
+        println!("\nreplica timeline (autoscaler):");
+        let (h, rows) = report::fabric_scale_events(&events);
+        print!("{}", report::render_table(&h, &rows));
+    }
+    if let Some(err) = fabric.last_scale_error() {
+        println!("\nautoscaler: last pod-spawn failure: {err}");
+    }
+    if let Some(stats) = fabric.cache_stats() {
+        println!(
+            "\nresponse cache: {} hits, {} misses, {} evicted, {} expired, {} live entries",
+            stats.hits, stats.misses, stats.evicted, stats.expired, stats.entries
+        );
+    }
+    let targets = fabric.batch_targets();
+    if !targets.is_empty() {
+        println!("\nadaptive batch targets (pod → drain size):");
+        for (key, target) in targets {
+            println!("  {key:<20} {target}");
+        }
+    }
+
+    println!("\nmeasured feedback (model_variant@node → EWMA service / queue-wait ms):");
     for (key, fb) in fabric.feedback().all() {
-        println!("  {key:<14} {:.2} ms over {} obs", fb.ewma_service_ms, fb.observations);
+        println!(
+            "  {key:<14} {:.2} / {:.2} ms over {} obs",
+            fb.ewma_service_ms, fb.ewma_queue_wait_ms, fb.observations
+        );
     }
     // Demonstrate the adapted placement scores.
     if let Some(model) = backend.models().first().map(|m| m.to_string()) {
-        if let Ok(d) = backend.select(&model, &cluster) {
+        if let Ok(d) = fabric.with_cluster(|cluster| backend.select(&model, cluster)) {
             println!(
                 "\nre-ranked {model}: {} on {} (modeled {:.2} ms → estimated {:.2} ms)",
                 d.variant, d.node, d.modeled_ms, d.estimated_ms
@@ -379,6 +456,10 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             None => d.time_scale,
         },
         payload_pool: flags.usize_or("--pool", d.payload_pool)?,
+        slo_p99_ms: match flags.get("--slo") {
+            Some(v) => v.parse().with_context(|| format!("bad --slo: {v:?}"))?,
+            None => d.slo_p99_ms,
+        },
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
     };
     println!(
@@ -394,8 +475,43 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let (h, rows) = report::bench_table(&points);
     print!("{}", report::render_table(&h, &rows));
 
+    // The control-plane comparisons (adaptive vs fixed batch sizing, and
+    // fixed replicas vs autoscaler) ride along unless --fused-only.
+    let (control, autoscale) = if flags.has("--fused-only") {
+        (None, None)
+    } else {
+        println!(
+            "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
+            cfg.rates.len(),
+            cfg.slo_p99_ms,
+        );
+        let sweep = bench::run_control_sweep(&cfg, &points)?;
+        let (h, rows) = report::control_table(&sweep);
+        print!("{}", report::render_table(&h, &rows));
+        let v = bench::control_verdict(&sweep);
+        println!(
+            "\nadaptive matches best fixed throughput at peak: {} | \
+             p99 ≤ best fixed at peak: {} | p99 within SLO at low rate: {}",
+            yn(v.throughput_match_at_peak),
+            yn(v.p99_le_best_fixed_at_peak),
+            yn(v.p99_within_slo_at_low_rate),
+        );
+
+        println!("\nfixed single replica vs autoscaler at the peak rate…\n");
+        let cmp = bench::run_autoscale_compare(&cfg)?;
+        let (h, rows) = report::autoscale_table(&cmp);
+        print!("{}", report::render_table(&h, &rows));
+        println!(
+            "\nautoscaler helps (no worse sheds, strictly fewer when fixed shed): {} | \
+             eliminates sheds outright: {}",
+            yn(cmp.helps()),
+            yn(cmp.eliminates_sheds()),
+        );
+        (Some(sweep), Some(cmp))
+    };
+
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
-    bench::write_json(out, &cfg, &points)?;
+    bench::write_json(out, &cfg, &points, control.as_ref(), autoscale.as_ref())?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {
         Some(best) => println!(
@@ -406,6 +522,14 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         None => println!("\n(no batch ≥ 4 in the sweep) — wrote {out}"),
     }
     Ok(())
+}
+
+fn yn(v: bool) -> &'static str {
+    if v {
+        "YES"
+    } else {
+        "NO"
+    }
 }
 
 fn cmd_report(flags: &Flags) -> Result<()> {

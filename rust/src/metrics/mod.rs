@@ -123,6 +123,10 @@ impl Collector {
 pub struct Feedback {
     /// EWMA of observed service latency, ms.
     pub ewma_service_ms: f64,
+    /// EWMA of time requests spent queued before execution, ms — the
+    /// congestion signal the fabric's adaptive batch controller and
+    /// autoscaler consume alongside the service channel.
+    pub ewma_queue_wait_ms: f64,
     /// Number of observations folded into the EWMA.
     pub observations: u64,
 }
@@ -158,16 +162,26 @@ impl FeedbackStore {
         format!("{aif}@{node}")
     }
 
-    /// Fold one observed service latency into the pod's EWMA.
-    pub fn observe(&self, key: &str, service_ms: f64) {
+    /// Fold one completed request's observed service latency and queue
+    /// wait into the pod's EWMAs.
+    pub fn observe(&self, key: &str, service_ms: f64, queue_wait_ms: f64) {
         let mut g = self.inner.lock().unwrap();
         match g.get_mut(key) {
             Some(f) => {
                 f.ewma_service_ms = self.alpha * service_ms + (1.0 - self.alpha) * f.ewma_service_ms;
+                f.ewma_queue_wait_ms =
+                    self.alpha * queue_wait_ms + (1.0 - self.alpha) * f.ewma_queue_wait_ms;
                 f.observations += 1;
             }
             None => {
-                g.insert(key.to_string(), Feedback { ewma_service_ms: service_ms, observations: 1 });
+                g.insert(
+                    key.to_string(),
+                    Feedback {
+                        ewma_service_ms: service_ms,
+                        ewma_queue_wait_ms: queue_wait_ms,
+                        observations: 1,
+                    },
+                );
             }
         }
     }
@@ -258,12 +272,12 @@ mod tests {
         // Cold: pure model.
         assert_eq!(f.blend(&key, 10.0), 10.0);
         // One observation at 2 ms: estimate moves toward measurement.
-        f.observe(&key, 2.0);
+        f.observe(&key, 2.0, 0.0);
         let est1 = f.blend(&key, 10.0);
         assert!(est1 < 10.0 && est1 > 2.0, "{est1}");
         // Many observations: estimate approaches the EWMA (90% cap).
         for _ in 0..100 {
-            f.observe(&key, 2.0);
+            f.observe(&key, 2.0, 0.0);
         }
         let est2 = f.blend(&key, 10.0);
         assert!(est2 < est1);
@@ -273,10 +287,11 @@ mod tests {
     #[test]
     fn feedback_ewma_tracks_recent() {
         let f = FeedbackStore::new(0.5);
-        f.observe("k", 10.0);
-        f.observe("k", 20.0);
+        f.observe("k", 10.0, 4.0);
+        f.observe("k", 20.0, 8.0);
         let fb = f.get("k").unwrap();
         assert_eq!(fb.observations, 2);
         assert!((fb.ewma_service_ms - 15.0).abs() < 1e-12);
+        assert!((fb.ewma_queue_wait_ms - 6.0).abs() < 1e-12, "queue-wait channel tracked too");
     }
 }

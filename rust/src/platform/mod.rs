@@ -123,6 +123,21 @@ impl Platform {
         variant.ends_with("_TF")
     }
 
+    /// Ceiling on replicas of ONE model this platform class will host —
+    /// the per-platform bound the fabric autoscaler enforces on top of
+    /// its global `max_replicas`.  Scarce accelerator boards (FPGA
+    /// cards, edge GPU modules) cap lower than commodity server parts:
+    /// an autoscaler that answered every backlog spike by binding more
+    /// ALVEO pods would exhaust the Table II testbed's single card per
+    /// node for one tenant.
+    pub fn max_replicas_per_model(&self) -> usize {
+        match self.name {
+            "ALVEO" | "AGX" => 2,
+            "ARM" => 3,
+            _ => 4, // CPU / GPU: server-class, slot-limited by the cluster itself
+        }
+    }
+
     /// Deterministic (noise-free) service latency in ms for a model of
     /// `gflops` on this platform.
     pub fn latency_model_ms(&self, gflops: f64, native: bool) -> f64 {
@@ -259,6 +274,18 @@ mod tests {
             assert!(per(16) < per(4), "{}", p.name);
             assert!(per(1024) > g / p.accel_gflops * 1e3, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn replica_ceilings_are_positive_and_scarce_boards_cap_lower() {
+        for p in PLATFORMS {
+            assert!(p.max_replicas_per_model() >= 1, "{}", p.name);
+        }
+        assert!(
+            get("ALVEO").unwrap().max_replicas_per_model()
+                < get("GPU").unwrap().max_replicas_per_model(),
+            "scarce FPGA cards must cap below server GPUs"
+        );
     }
 
     #[test]

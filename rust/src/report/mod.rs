@@ -10,8 +10,8 @@ use anyhow::Result;
 
 use crate::artifact::Artifact;
 use crate::cluster::NodeSpec;
-use crate::fabric::bench::BenchPoint;
-use crate::fabric::{FleetReport, PodReport};
+use crate::fabric::bench::{AutoscaleCompare, BenchPoint, ControlSweep};
+use crate::fabric::{FleetReport, PodReport, ScaleDirection, ScaleEvent};
 use crate::platform::PLATFORMS;
 use crate::util::stats::Boxplot;
 
@@ -293,11 +293,14 @@ pub fn fabric_pods(rows: &[PodReport]) -> (Vec<&'static str>, Vec<Vec<String>>) 
         "node",
         "served",
         "errors",
+        "dispatches",
+        "avg batch",
         "median (ms)*",
         "p75*",
         "max*",
         "queue wait (ms)",
         "rps",
+        "lifetime",
     ];
     let fmt = |b: &Option<Boxplot>, f: fn(&Boxplot) -> f64| match b {
         Some(b) => format!("{:.2}", f(b)),
@@ -306,17 +309,25 @@ pub fn fabric_pods(rows: &[PodReport]) -> (Vec<&'static str>, Vec<Vec<String>>) 
     let out = rows
         .iter()
         .map(|r| {
+            let lifetime = match r.retired_ms {
+                Some(end) => format!("{:.0}–{:.0}ms", r.born_ms, end),
+                None if r.born_ms > 0.0 => format!("{:.0}ms–", r.born_ms),
+                None => "start–".to_string(),
+            };
             vec![
                 r.aif.clone(),
                 r.variant.clone(),
                 r.node.clone(),
                 r.requests.to_string(),
                 r.errors.to_string(),
+                r.dispatches.to_string(),
+                if r.dispatches > 0 { format!("{:.2}", r.avg_batch) } else { "-".into() },
                 fmt(&r.service, |b| b.median),
                 fmt(&r.service, |b| b.q3),
                 fmt(&r.service, |b| b.max),
                 format!("{:.2}", r.mean_queue_wait_ms),
                 format!("{:.1}", r.throughput_rps),
+                lifetime,
             ]
         })
         .collect();
@@ -328,11 +339,14 @@ pub fn fabric_pods(rows: &[PodReport]) -> (Vec<&'static str>, Vec<Vec<String>>) 
 pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "pods",
+        "active",
         "nodes",
         "served",
         "errors",
         "shed",
         "deduped",
+        "cache h/m/e",
+        "scale +/-",
         "median (ms)*",
         "p75*",
         "max*",
@@ -343,13 +357,20 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         Some(b) => format!("{:.2}", f(b)),
         None => "-".into(),
     };
+    let cache = match &fleet.cache {
+        Some(c) => format!("{}/{}/{}", c.hits, c.misses, c.evicted),
+        None => "-".into(),
+    };
     let row = vec![
         fleet.pods.to_string(),
+        fleet.active_pods.to_string(),
         fleet.nodes.to_string(),
         fleet.requests.to_string(),
         fleet.errors.to_string(),
         fleet.shed.to_string(),
         fleet.deduped.to_string(),
+        cache,
+        format!("{}/{}", fleet.scale_ups, fleet.scale_downs),
         fmt(|b| b.median),
         fmt(|b| b.q3),
         fmt(|b| b.max),
@@ -357,6 +378,29 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         format!("{:.1}", fleet.throughput_rps),
     ];
     (headers, vec![row])
+}
+
+/// Autoscaler replica timeline: one row per scale event, oldest first.
+pub fn fabric_scale_events(events: &[ScaleEvent]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec!["t (ms)", "model", "event", "pod", "node", "replicas", "trigger"];
+    let rows = events
+        .iter()
+        .map(|e| {
+            vec![
+                format!("{:.0}", e.at_ms),
+                e.model.clone(),
+                match e.direction {
+                    ScaleDirection::Up => "scale-up".to_string(),
+                    ScaleDirection::Down => "retire".to_string(),
+                },
+                e.aif.clone(),
+                e.node.clone(),
+                e.replicas_after.to_string(),
+                e.trigger.clone(),
+            ]
+        })
+        .collect();
+    (headers, rows)
 }
 
 /// `tf2aif bench` sweep table: per (batch × rate) point, fused vs
@@ -394,6 +438,73 @@ pub fn bench_table(points: &[BenchPoint]) -> (Vec<&'static str>, Vec<Vec<String>
             ]
         })
         .collect();
+    (headers, rows)
+}
+
+/// `tf2aif bench` control-sweep table: per arrival rate, every fixed
+/// `max_batch` baseline and the adaptive controller (marked `adaptive`),
+/// with throughput, tail latency, shed rate and realized average batch.
+pub fn control_table(sweep: &ControlSweep) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "rate (rps)",
+        "batcher",
+        "rps",
+        "p50 (ms)*",
+        "p99*",
+        "shed %",
+        "avg batch",
+    ];
+    let mut rows = Vec::new();
+    for p in &sweep.points {
+        for f in &p.fixed {
+            rows.push(vec![
+                format!("{:.0}", p.rate_rps),
+                format!("fixed {}", f.batch),
+                format!("{:.1}", f.side.throughput_rps),
+                format!("{:.2}", f.side.p50_ms),
+                format!("{:.2}", f.side.p99_ms),
+                format!("{:.1}", f.side.shed_rate * 100.0),
+                format!("{:.2}", f.side.avg_batch),
+            ]);
+        }
+        rows.push(vec![
+            format!("{:.0}", p.rate_rps),
+            format!("adaptive ≤{}", sweep.max_batch),
+            format!("{:.1}", p.adaptive.throughput_rps),
+            format!("{:.2}", p.adaptive.p50_ms),
+            format!("{:.2}", p.adaptive.p99_ms),
+            format!("{:.1}", p.adaptive.shed_rate * 100.0),
+            format!("{:.2}", p.adaptive.avg_batch),
+        ]);
+    }
+    (headers, rows)
+}
+
+/// `tf2aif bench` autoscale-comparison table: fixed single replica vs
+/// the backlog-driven autoscaler under the same overload.
+pub fn autoscale_table(cmp: &AutoscaleCompare) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers =
+        vec!["fleet", "rps", "p99 (ms)*", "shed", "shed %", "pods at end", "scale-ups"];
+    let side = |name: &str, s: &crate::fabric::bench::BenchSide, pods: String, ups: String| {
+        vec![
+            name.to_string(),
+            format!("{:.1}", s.throughput_rps),
+            format!("{:.2}", s.p99_ms),
+            s.shed.to_string(),
+            format!("{:.1}", s.shed_rate * 100.0),
+            pods,
+            ups,
+        ]
+    };
+    let rows = vec![
+        side("fixed (1 replica)", &cmp.fixed, "1".into(), "-".into()),
+        side(
+            "autoscaled",
+            &cmp.autoscaled,
+            cmp.pods_end.to_string(),
+            cmp.scale_ups.to_string(),
+        ),
+    ];
     (headers, rows)
 }
 
@@ -447,6 +558,8 @@ mod tests {
             node: "NE-1".into(),
             requests: 10,
             errors: 0,
+            dispatches: 4,
+            avg_batch: 2.5,
             service: Some(Boxplot {
                 min: 1.0,
                 q1: 1.5,
@@ -458,21 +571,46 @@ mod tests {
             }),
             mean_queue_wait_ms: 0.4,
             throughput_rps: 123.4,
+            born_ms: 0.0,
+            retired_ms: None,
         };
-        let idle = PodReport { requests: 0, service: None, ..busy.clone() };
+        let idle = PodReport {
+            requests: 0,
+            dispatches: 0,
+            avg_batch: 0.0,
+            service: None,
+            born_ms: 120.0,
+            retired_ms: Some(450.0),
+            ..busy.clone()
+        };
         let (h, rows) = fabric_pods(&[busy, idle]);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].len(), h.len());
-        assert_eq!(rows[0][5], "2.00");
-        assert_eq!(rows[1][5], "-", "idle pod renders dashes, not a panic");
+        assert_eq!(rows[0][5], "4", "dispatch count is a column");
+        assert_eq!(rows[0][6], "2.50", "avg batch proves amortization");
+        assert_eq!(rows[0][7], "2.00");
+        assert_eq!(rows[0][12], "start–", "initial pods live from the start");
+        assert_eq!(rows[1][6], "-", "idle pod renders dashes, not a panic");
+        assert_eq!(rows[1][7], "-");
+        assert_eq!(rows[1][12], "120–450ms", "retired pods show their lifetime");
 
         let fleet = FleetReport {
-            pods: 2,
+            pods: 3,
+            active_pods: 2,
             nodes: 1,
             requests: 10,
             errors: 0,
             shed: 3,
             deduped: 5,
+            cache: Some(crate::fabric::CacheStats {
+                hits: 7,
+                misses: 2,
+                evicted: 1,
+                expired: 0,
+                entries: 2,
+            }),
+            scale_ups: 2,
+            scale_downs: 1,
             service: None,
             mean_queue_wait_ms: 0.0,
             throughput_rps: 99.0,
@@ -480,8 +618,45 @@ mod tests {
         let (h, rows) = fabric_fleet(&fleet);
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].len(), h.len());
-        assert_eq!(rows[0][4], "3", "shed count is reported");
-        assert_eq!(rows[0][5], "5", "dedup hits are reported");
+        assert_eq!(rows[0][1], "2", "active pod count is reported");
+        assert_eq!(rows[0][5], "3", "shed count is reported");
+        assert_eq!(rows[0][6], "5", "dedup hits are reported");
+        assert_eq!(rows[0][7], "7/2/1", "cache hit/miss/evict triple");
+        assert_eq!(rows[0][8], "2/1", "scale up/down pair");
+
+        let no_cache = FleetReport { cache: None, ..fleet };
+        let (_, rows) = fabric_fleet(&no_cache);
+        assert_eq!(rows[0][7], "-", "cache off renders a dash");
+    }
+
+    #[test]
+    fn scale_event_timeline_renders() {
+        let events = vec![
+            ScaleEvent {
+                at_ms: 42.0,
+                model: "lenet".into(),
+                direction: ScaleDirection::Up,
+                aif: "lenet_GPU".into(),
+                node: "NE-2".into(),
+                replicas_after: 2,
+                trigger: "backlog 6.0/replica".into(),
+            },
+            ScaleEvent {
+                at_ms: 900.0,
+                model: "lenet".into(),
+                direction: ScaleDirection::Down,
+                aif: "lenet_CPU".into(),
+                node: "NE-1".into(),
+                replicas_after: 1,
+                trigger: "backlog 0.0/replica".into(),
+            },
+        ];
+        let (h, rows) = fabric_scale_events(&events);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), h.len());
+        assert_eq!(rows[0][2], "scale-up");
+        assert_eq!(rows[1][2], "retire");
+        assert_eq!(rows[1][5], "1");
     }
 
     #[test]
@@ -497,6 +672,8 @@ mod tests {
             p50_ms: 1.5,
             p99_ms: 6.0,
             shed_rate: 0.2,
+            dispatches: 20,
+            avg_batch: 4.0,
         };
         let p = BenchPoint {
             batch: 4,
@@ -509,6 +686,57 @@ mod tests {
         assert_eq!(rows[0].len(), h.len());
         assert_eq!(rows[0][0], "4");
         assert_eq!(rows[0][4], "3.00x");
+    }
+
+    #[test]
+    fn control_and_autoscale_tables_render() {
+        use crate::fabric::bench::{
+            AutoscaleCompare, BenchSide, ControlPoint, ControlSweep, FixedPoint,
+        };
+        let side = |rps: f64, shed: usize| BenchSide {
+            submitted: 100,
+            completed: 100 - shed,
+            shed,
+            failed: 0,
+            wall_s: 1.0,
+            throughput_rps: rps,
+            p50_ms: 1.5,
+            p99_ms: 6.0,
+            shed_rate: shed as f64 / 100.0,
+            dispatches: 25,
+            avg_batch: 3.1,
+        };
+        let sweep = ControlSweep {
+            slo_p99_ms: 50.0,
+            max_batch: 16,
+            points: vec![ControlPoint {
+                rate_rps: 8000.0,
+                fixed: vec![
+                    FixedPoint { batch: 1, side: side(900.0, 40) },
+                    FixedPoint { batch: 16, side: side(4000.0, 2) },
+                ],
+                adaptive: side(3900.0, 2),
+            }],
+        };
+        let (h, rows) = control_table(&sweep);
+        assert_eq!(rows.len(), 3, "two fixed rows + one adaptive row");
+        assert!(rows.iter().all(|r| r.len() == h.len()));
+        assert_eq!(rows[0][1], "fixed 1");
+        assert_eq!(rows[2][1], "adaptive ≤16");
+
+        let cmp = AutoscaleCompare {
+            rate_rps: 8000.0,
+            fixed: side(1000.0, 60),
+            autoscaled: side(3500.0, 0),
+            scale_ups: 2,
+            pods_end: 3,
+        };
+        let (h, rows) = autoscale_table(&cmp);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.len() == h.len()));
+        assert_eq!(rows[0][0], "fixed (1 replica)");
+        assert_eq!(rows[1][5], "3", "end pod count shown");
+        assert_eq!(rows[1][6], "2", "scale-ups shown");
     }
 
     #[test]

@@ -245,6 +245,13 @@ impl AifServer {
         self.platform
     }
 
+    /// Device dispatches the pinned executable has performed (0 when
+    /// the runtime host is unreachable) — the counter behind the fabric
+    /// report's `avg_batch` amortization proof.
+    pub fn dispatches(&self) -> u64 {
+        self.model.dispatch_count().unwrap_or(0)
+    }
+
     /// Model compute cost in GFLOPs (from the manifest).
     pub fn gflops(&self) -> f64 {
         self.gflops

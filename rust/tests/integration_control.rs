@@ -1,0 +1,342 @@
+//! Integration: the fabric control plane — adaptive batch sizing
+//! converging with load, the backlog-driven autoscaler respecting its
+//! bounds and hysteresis, graceful replica retirement, and the response
+//! cache's TTL behavior inside the full router.
+//!
+//! Everything runs on simulated executors (synthetic catalog + platform
+//! cost models) with the test [`Gate`] making backlog deterministic:
+//! while the gate is closed, every pod blocks at the start of its next
+//! dispatch, so queue depths are exact and autoscaler ticks (stepped
+//! manually via `Fabric::autoscale_tick` with `interval_ms: 0`) see
+//! reproducible signals.
+
+use std::sync::Arc;
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::fabric::sim::{synthetic_catalog, Gate};
+use tf2aif::fabric::{AutoscaleConfig, Fabric, FabricConfig, Outcome, ScaleDirection, Submission};
+use tf2aif::workload::Arrival;
+
+fn testbed() -> Cluster {
+    let mut c = Cluster::new(paper_testbed());
+    c.apply_kube_api_extension();
+    c
+}
+
+/// Place a fabric over a single model so replica counts are exact.
+fn place_one_model(model: &str, cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
+    let catalog: Vec<_> = synthetic_catalog()
+        .into_iter()
+        .filter(|a| a.manifest.model == model)
+        .collect();
+    let backend = Backend::new(catalog, Policy::MinLatency);
+    Fabric::place_sim(&backend, testbed(), cfg, gate).unwrap()
+}
+
+/// Distinct payloads so neither dedup nor anything content-addressed can
+/// collapse the flood.
+fn distinct_payload(i: usize) -> Vec<f32> {
+    vec![i as f32; 16]
+}
+
+#[test]
+fn adaptive_batcher_converges_up_under_backlog_and_down_when_idle() {
+    let cfg = FabricConfig {
+        adaptive: true,
+        max_batch: 16,
+        min_batch: 1,
+        slo_p99_ms: 1000.0, // generous: this test is about backlog adaptation
+        queue_capacity: 64,
+        replicas_per_model: 1,
+        workers: 1,
+        time_scale: 0.0,
+        dedup: false,
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place_one_model("lenet", &cfg, Some(Arc::clone(&gate)));
+    let initial = fabric.batch_targets();
+    assert_eq!(initial.len(), 1, "one pod, one controller");
+    assert_eq!(initial[0].1, 4, "controller starts a quarter of the way up");
+
+    // Build a deep deterministic backlog, then let it drain: the
+    // controller must slow-start toward its bound.
+    let mut pending = Vec::new();
+    for i in 0..60 {
+        match fabric.submit("lenet", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => panic!("queue bound 64 must admit a 60-deep flood"),
+        }
+    }
+    gate.open();
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    let after_backlog = fabric.batch_targets()[0].1;
+    assert!(
+        after_backlog >= 8,
+        "sustained backlog must grow the drain size (got {after_backlog})"
+    );
+
+    // Quiet traffic (one request at a time) must decay it back down.
+    for i in 1000..1030 {
+        match fabric.submit("lenet", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => {
+                assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+            }
+            Submission::Shed => panic!("idle fabric must admit"),
+        }
+    }
+    let after_idle = fabric.batch_targets()[0].1;
+    assert!(
+        after_idle <= 4,
+        "idle traffic must decay the drain size (got {after_idle})"
+    );
+    fabric.shutdown();
+}
+
+#[test]
+fn adaptive_batching_amortizes_dispatches_under_real_overload() {
+    // No gate: a real open-loop overload on one slow pod.  The adaptive
+    // controller must reach deep batches, visible as fleet dispatches
+    // strictly below completed requests.
+    let cfg = FabricConfig {
+        adaptive: true,
+        max_batch: 16,
+        min_batch: 1,
+        slo_p99_ms: 1000.0,
+        queue_capacity: 64,
+        replicas_per_model: 1,
+        workers: 1,
+        time_scale: 2.0,
+        dedup: false,
+        ..Default::default()
+    };
+    let fabric = place_one_model("lenet", &cfg, None);
+    let run = fabric.run(300, Arrival::Poisson { rps: 20_000.0 }, 21).unwrap();
+    assert!(run.fully_accounted());
+    assert!(run.completed > 0);
+    let reports = fabric.pod_reports(run.wall_s);
+    let dispatches: u64 = reports.iter().map(|r| r.dispatches).sum();
+    let served: u64 = reports.iter().map(|r| r.requests).sum();
+    assert!(
+        dispatches > 0 && dispatches < served,
+        "adaptive batching must amortize: {dispatches} dispatches for {served} served"
+    );
+    fabric.shutdown();
+}
+
+fn manual_autoscale(min: usize, max: usize, hold: u32, cooldown: u32) -> Option<AutoscaleConfig> {
+    Some(AutoscaleConfig {
+        min_replicas: min,
+        max_replicas: max,
+        scale_up_backlog: 2.0,
+        scale_down_backlog: 0.25,
+        hold_ticks: hold,
+        cooldown_ticks: cooldown,
+        interval_ms: 0, // stepped manually: deterministic
+    })
+}
+
+#[test]
+fn autoscaler_scales_up_to_max_and_back_down_to_min() {
+    let cfg = FabricConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        replicas_per_model: 1,
+        time_scale: 0.0,
+        dedup: false,
+        autoscale: manual_autoscale(1, 3, 2, 1),
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place_one_model("lenet", &cfg, Some(Arc::clone(&gate)));
+    assert_eq!(fabric.active_replicas("lenet"), 1);
+
+    // Deterministic backlog: 40 gated requests on the single replica.
+    let mut pending = Vec::new();
+    for i in 0..40 {
+        match fabric.submit("lenet", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => panic!("40-deep flood must fit a 64-deep queue"),
+        }
+    }
+
+    // Sustained overload: hold 2 → second tick scales, cooldown 1 eats a
+    // tick, then two more ticks for the next scale-up.  Extra ticks past
+    // the ceiling must do nothing.
+    for _ in 0..12 {
+        fabric.autoscale_tick();
+    }
+    assert_eq!(
+        fabric.active_replicas("lenet"),
+        3,
+        "sustained backlog must reach max_replicas"
+    );
+    for _ in 0..6 {
+        fabric.autoscale_tick();
+    }
+    assert_eq!(fabric.active_replicas("lenet"), 3, "ceiling respected: no overshoot");
+    let events = fabric.scale_events();
+    assert_eq!(events.len(), 2, "exactly two scale-ups, counted once each");
+    assert!(events.iter().all(|e| e.direction == ScaleDirection::Up));
+    let nodes: std::collections::BTreeSet<_> =
+        fabric.plans().into_iter().map(|p| p.node).collect();
+    assert_eq!(nodes.len(), 3, "replicas must land on distinct nodes");
+
+    // Drain, then sustained idle must retire back down to the floor and
+    // no further.
+    gate.open();
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    for _ in 0..16 {
+        fabric.autoscale_tick();
+    }
+    assert_eq!(fabric.active_replicas("lenet"), 1, "idle fleet must shrink to min");
+    for _ in 0..6 {
+        fabric.autoscale_tick();
+    }
+    assert_eq!(fabric.active_replicas("lenet"), 1, "floor respected: never below min");
+    let events = fabric.scale_events();
+    assert_eq!(
+        events.iter().filter(|e| e.direction == ScaleDirection::Down).count(),
+        2,
+        "two retires back to the floor"
+    );
+    // The replica timeline survives in the report: retired pods stay
+    // visible with their lifetimes.
+    let reports = fabric.pod_reports(1.0);
+    assert_eq!(reports.len(), 3, "retired pods remain in the report");
+    assert_eq!(reports.iter().filter(|r| r.retired_ms.is_some()).count(), 2);
+    let fleet = fabric.fleet_report(1.0);
+    assert_eq!((fleet.scale_ups, fleet.scale_downs), (2, 2));
+    assert_eq!(fleet.active_pods, 1);
+    fabric.shutdown();
+}
+
+#[test]
+fn shed_burst_counts_as_overload_signal() {
+    // Even with backlog thresholds set absurdly high, shedding since the
+    // last tick must classify the model as overloaded and scale it up.
+    let cfg = FabricConfig {
+        queue_capacity: 2,
+        max_batch: 1,
+        replicas_per_model: 1,
+        time_scale: 0.0,
+        dedup: false,
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            scale_up_backlog: 1e12,
+            scale_down_backlog: 0.0,
+            hold_ticks: 1,
+            cooldown_ticks: 0,
+            interval_ms: 0,
+        }),
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place_one_model("lenet", &cfg, Some(Arc::clone(&gate)));
+    let mut pending = Vec::new();
+    let mut shed = 0;
+    for i in 0..16 {
+        match fabric.submit("lenet", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => shed += 1,
+        }
+    }
+    assert!(shed > 0, "a 16-deep burst into a 2-deep queue must shed");
+    fabric.autoscale_tick();
+    assert_eq!(fabric.active_replicas("lenet"), 2, "shed delta alone must trigger scale-up");
+    gate.open();
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    fabric.shutdown();
+}
+
+#[test]
+fn retiring_a_replica_never_drops_admitted_requests() {
+    // Two active replicas with queued (gated) work; force a scale-down
+    // while the victim's queue is non-empty.  Every admitted request
+    // must still complete — retirement is graceful.
+    let cfg = FabricConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        replicas_per_model: 2,
+        time_scale: 0.0,
+        dedup: false,
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            // Thresholds rigged so ANY backlog level reads as idle:
+            // the tick immediately retires one replica.
+            scale_up_backlog: 1e12,
+            scale_down_backlog: 1e12,
+            hold_ticks: 1,
+            cooldown_ticks: 0,
+            interval_ms: 0,
+        }),
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place_one_model("lenet", &cfg, Some(Arc::clone(&gate)));
+    assert_eq!(fabric.active_replicas("lenet"), 2);
+    let mut pending = Vec::new();
+    for i in 0..24 {
+        match fabric.submit("lenet", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => panic!("two 64-deep queues must admit 24 requests"),
+        }
+    }
+    fabric.autoscale_tick();
+    assert_eq!(fabric.active_replicas("lenet"), 1, "one replica retired under load");
+
+    gate.open();
+    let mut completed = 0;
+    for rx in pending {
+        match rx.recv().expect("retired pods must still answer admitted requests") {
+            Outcome::Completed(_) => completed += 1,
+            Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    assert_eq!(completed, 24, "graceful retire: nothing admitted is dropped");
+    // New traffic still flows through the survivor.
+    match fabric.submit("lenet", distinct_payload(9999)).unwrap() {
+        Submission::Enqueued(rx) => {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        Submission::Shed => panic!("survivor must admit"),
+    }
+    fabric.shutdown();
+}
+
+#[test]
+fn cache_ttl_expiry_forces_reexecution() {
+    let cfg = FabricConfig {
+        time_scale: 0.0,
+        cache_capacity: 8,
+        cache_ttl_ms: 1,
+        ..Default::default()
+    };
+    let fabric = place_one_model("lenet", &cfg, None);
+    let payload = vec![0.5; 32];
+    for _ in 0..2 {
+        match fabric.submit("lenet", payload.clone()).unwrap() {
+            Submission::Enqueued(rx) => {
+                assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+            }
+            Submission::Shed => panic!("must admit"),
+        }
+        // Far past the 1 ms TTL: the memo must be stale on resubmit.
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 2, "expired cache entries must not be served");
+    let stats = fabric.cache_stats().unwrap();
+    assert_eq!(stats.hits, 0);
+    assert!(stats.expired >= 1, "expiry must be counted, got {stats:?}");
+    fabric.shutdown();
+}

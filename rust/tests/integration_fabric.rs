@@ -24,8 +24,7 @@ fn testbed() -> Cluster {
 
 fn place(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
     let backend = Backend::new(synthetic_catalog(), Policy::MinLatency);
-    let mut cluster = testbed();
-    Fabric::place_sim(&backend, &mut cluster, cfg, gate).unwrap()
+    Fabric::place_sim(&backend, testbed(), cfg, gate).unwrap()
 }
 
 #[test]
@@ -71,13 +70,22 @@ fn poisson_overload_routes_across_nodes_and_accounts_every_request() {
     assert!(run.completed > 0);
     assert!(run.shed > 0, "sustained overload of bounded queues must shed");
     // Backlog-aware routing reached the whole testbed.
-    let busy_nodes: BTreeSet<_> = fabric
-        .pod_reports(run.wall_s)
-        .into_iter()
+    let reports = fabric.pod_reports(run.wall_s);
+    let busy_nodes: BTreeSet<_> = reports
+        .iter()
         .filter(|r| r.requests > 0)
-        .map(|r| r.node)
+        .map(|r| r.node.clone())
         .collect();
     assert!(busy_nodes.len() >= 3, "traffic only reached {busy_nodes:?}");
+    // Under overload the fused batcher must have amortized: strictly
+    // fewer dispatches than served requests somewhere in the fleet.
+    let served: u64 = reports.iter().map(|r| r.requests).sum();
+    let dispatches: u64 = reports.iter().map(|r| r.dispatches).sum();
+    assert!(dispatches > 0 && dispatches < served, "{dispatches} vs {served}");
+    assert!(
+        reports.iter().any(|r| r.avg_batch > 1.0),
+        "overloaded pods must report avg batch > 1"
+    );
     // Fleet aggregate matches the run accounting.
     let fleet = fabric.fleet_report(run.wall_s);
     assert_eq!(fleet.requests as usize, run.completed);
