@@ -16,6 +16,13 @@
 //!    single-replica fleet and against the backlog-driven autoscaler —
 //!    the claim under test is that scaling out absorbs load the fixed
 //!    replica count sheds.
+//! 4. **Tenancy** (this PR, schema v3): the deterministic fairness /
+//!    quota / priority-shed scenarios ([`tenancy::run_scenarios`]) plus
+//!    a real asymmetric drive — a hot tenant offering 10× the cold
+//!    tenant's load through the same fleet — with per-tenant admission
+//!    and latency accounting.  The claim under test is that
+//!    weighted-fair draining holds the hot tenant to its share
+//!    (`fair_share_within_tolerance`, CI-gated).
 //!
 //! Dedup and the response cache are disabled for every measurement (the
 //! payload pool recycles tensors; collapsing them would measure
@@ -31,8 +38,9 @@ use crate::backend::{Backend, Policy};
 use crate::cluster::{paper_testbed, Cluster};
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::Rng;
-use crate::workload::{image_like, Arrival};
+use crate::workload::{image_like, Arrival, TenantMix};
 
+use super::tenancy::{self, ScenarioVerdicts, TenantReport, TenantSpec};
 use super::{sim, AutoscaleConfig, Fabric, FabricConfig};
 
 /// Sweep configuration (CLI: `tf2aif bench`, see `docs/CLI.md`).
@@ -314,20 +322,24 @@ fn base_fabric_config(cfg: &BenchConfig) -> FabricConfig {
     }
 }
 
-/// One measured drive: fresh placement, pooled payloads, one fabric
-/// configuration.
-fn drive(cfg: &BenchConfig, fcfg: &FabricConfig, rate: f64) -> Result<DriveOutcome> {
-    let catalog: Vec<_> = sim::synthetic_catalog()
-        .into_iter()
-        .filter(|a| cfg.models.is_empty() || cfg.models.iter().any(|m| *m == a.manifest.model))
-        .collect();
+/// Place a simulated fleet over the bench's model set (fresh placement
+/// per drive, shared by every measurement in this module).
+fn sim_fabric(cfg: &BenchConfig, fcfg: &FabricConfig) -> Result<Fabric> {
+    let wanted: Vec<&str> = cfg.models.iter().map(String::as_str).collect();
+    let catalog = sim::synthetic_catalog_for(&wanted);
     if catalog.is_empty() {
         bail!("no catalog models match {:?}", cfg.models);
     }
     let backend = Backend::new(catalog, Policy::MinLatency);
     let mut cluster = Cluster::new(paper_testbed());
     cluster.apply_kube_api_extension();
-    let fabric = Fabric::place_sim(&backend, cluster, fcfg, None)?;
+    Fabric::place_sim(&backend, cluster, fcfg, None)
+}
+
+/// One measured drive: fresh placement, pooled payloads, one fabric
+/// configuration.
+fn drive(cfg: &BenchConfig, fcfg: &FabricConfig, rate: f64) -> Result<DriveOutcome> {
+    let fabric = sim_fabric(cfg, fcfg)?;
 
     // Pre-generate the payload pool so payload synthesis stays off the
     // submission path; the drive itself is Fabric's own loop, so pacing
@@ -508,6 +520,50 @@ pub fn run_autoscale_compare(cfg: &BenchConfig) -> Result<AutoscaleCompare> {
     })
 }
 
+/// The multi-tenant measurement: the deterministic fairness / quota /
+/// priority scenarios plus a real asymmetric drive (hot tenant offering
+/// `hot_factor`× the cold tenant's traffic through one fleet) with
+/// per-tenant accounting.
+#[derive(Debug, Clone)]
+pub struct TenancyBench {
+    /// Poisson arrival rate of the asymmetric drive, requests/second.
+    pub rate_rps: f64,
+    /// Offered-load ratio of the hot tenant over the cold tenant.
+    pub hot_factor: u32,
+    /// Per-tenant report rows at the end of the drive.
+    pub tenants: Vec<TenantReport>,
+    /// The deterministic scenario verdicts (`fair_share_within_tolerance`
+    /// is the CI gate).
+    pub verdicts: ScenarioVerdicts,
+}
+
+/// Run the tenancy measurement: deterministic scenarios first (no
+/// threads, no clock), then the asymmetric drive at the highest swept
+/// rate — two equal-weight tenants, the hot one offering 10× the cold
+/// one's load, so fair draining (not offered volume) decides service.
+pub fn run_tenancy_bench(cfg: &BenchConfig) -> Result<TenancyBench> {
+    let verdicts = tenancy::run_scenarios(cfg.seed);
+    let rate = cfg.rates.iter().copied().fold(f64::NAN, f64::max);
+    if !rate.is_finite() {
+        bail!("tenancy bench needs at least one rate");
+    }
+    let max_batch = cfg.batches.iter().copied().max().unwrap_or(1).max(1);
+    let hot_factor = 10u32;
+    let fcfg = FabricConfig {
+        max_batch,
+        tenants: vec![TenantSpec::new("hot"), TenantSpec::new("cold")],
+        ..base_fabric_config(cfg)
+    };
+    let fabric = sim_fabric(cfg, &fcfg)?;
+    let mix = TenantMix::new(&[("hot".to_string(), hot_factor), ("cold".to_string(), 1)])?;
+    fabric
+        .run_tenants(cfg.requests, Arrival::Poisson { rps: rate }, cfg.seed, &mix)
+        .context("asymmetric tenant drive")?;
+    let tenants = fabric.tenant_reports();
+    fabric.shutdown();
+    Ok(TenancyBench { rate_rps: rate, hot_factor, tenants, verdicts })
+}
+
 fn side_json(b: &BenchSide) -> Json {
     obj(vec![
         ("submitted", n(b.submitted as f64)),
@@ -524,16 +580,17 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema in
-/// `docs/CLI.md`) — the perf trajectory future PRs measure against.
-/// `control` and `autoscale` are optional sections; the PR 2 fused
-/// sweep is always present.
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v3,
+/// documented in `docs/CLI.md`) — the perf trajectory future PRs
+/// measure against.  `control`, `autoscale` and `tenancy` are optional
+/// sections; the PR 2 fused sweep is always present.
 pub fn write_json(
     path: impl AsRef<Path>,
     cfg: &BenchConfig,
     points: &[BenchPoint],
     control: Option<&ControlSweep>,
     autoscale: Option<&AutoscaleCompare>,
+    tenancy_bench: Option<&TenancyBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -549,7 +606,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(2.0)),
+        ("version", n(3.0)),
         (
             "config",
             obj(vec![
@@ -620,6 +677,59 @@ pub fn write_json(
                 ("pods_end", n(cmp.pods_end as f64)),
                 ("autoscaler_helps", Json::Bool(cmp.helps())),
                 ("autoscaler_eliminates_sheds", Json::Bool(cmp.eliminates_sheds())),
+            ]),
+        ));
+    }
+    if let Some(t) = tenancy_bench {
+        let rows: Vec<Json> = t
+            .tenants
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("id", s(r.id.clone())),
+                    ("weight", n(r.weight as f64)),
+                    ("priority", s(r.priority.name().to_string())),
+                    ("submitted", n(r.submitted as f64)),
+                    ("admitted", n(r.admitted as f64)),
+                    ("completed", n(r.completed as f64)),
+                    ("failed", n(r.failed as f64)),
+                    ("shed_quota", n(r.shed_quota as f64)),
+                    ("shed_capacity", n(r.shed_capacity as f64)),
+                    ("preempted", n(r.preempted as f64)),
+                    ("p50_ms", n(r.p50_ms)),
+                    ("p99_ms", n(r.p99_ms)),
+                ])
+            })
+            .collect();
+        let lanes: Vec<Json> = t
+            .verdicts
+            .served_per_lane
+            .iter()
+            .map(|(id, w, served)| {
+                obj(vec![
+                    ("tenant", s(id.clone())),
+                    ("weight", n(*w as f64)),
+                    ("served", n(*served as f64)),
+                ])
+            })
+            .collect();
+        top.push((
+            "tenancy",
+            obj(vec![
+                ("rate_rps", n(t.rate_rps)),
+                ("hot_factor", n(t.hot_factor as f64)),
+                ("tenants", Json::Arr(rows)),
+                ("fair_drain", Json::Arr(lanes)),
+                ("max_share_error", n(t.verdicts.max_share_error)),
+                (
+                    "fair_share_within_tolerance",
+                    Json::Bool(t.verdicts.fair_share_within_tolerance),
+                ),
+                ("quota_exact", Json::Bool(t.verdicts.quota_exact)),
+                (
+                    "shed_priority_ordered",
+                    Json::Bool(t.verdicts.shed_priority_ordered),
+                ),
             ]),
         ));
     }
@@ -767,9 +877,35 @@ mod tests {
             scale_ups: 2,
             pods_end: 3,
         };
+        let tb = TenancyBench {
+            rate_rps: 2000.0,
+            hot_factor: 10,
+            tenants: vec![TenantReport {
+                id: "hot".into(),
+                weight: 1,
+                priority: super::tenancy::Priority::Standard,
+                submitted: 100,
+                admitted: 60,
+                completed: 55,
+                failed: 0,
+                shed_quota: 10,
+                shed_capacity: 30,
+                preempted: 5,
+                p50_ms: 3.0,
+                p99_ms: 9.0,
+            }],
+            verdicts: ScenarioVerdicts {
+                served_per_lane: vec![("hot".into(), 1, 50)],
+                max_share_error: 0.02,
+                fair_share_within_tolerance: true,
+                quota_exact: true,
+                shed_priority_ordered: true,
+            },
+        };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], Some(&sweep), Some(&cmp)).unwrap();
+        write_json(&path, &BenchConfig::default(), &[p], Some(&sweep), Some(&cmp), Some(&tb))
+            .unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
         let doc = Json::parse(&src).unwrap();
         let pts = doc.get("points").unwrap().arr().unwrap();
@@ -795,6 +931,17 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 3);
+        let ten = doc.get("tenancy").unwrap();
+        assert!(matches!(
+            ten.get("fair_share_within_tolerance").unwrap(),
+            Json::Bool(true)
+        ));
+        assert!(matches!(ten.get("quota_exact").unwrap(), Json::Bool(true)));
+        assert!(matches!(ten.get("shed_priority_ordered").unwrap(), Json::Bool(true)));
+        let rows = ten.get("tenants").unwrap().arr().unwrap();
+        assert_eq!(rows[0].get("id").unwrap().str().unwrap(), "hot");
+        assert_eq!(rows[0].get("shed_quota").unwrap().usize().unwrap(), 10);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -808,10 +955,11 @@ mod tests {
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], None, None).unwrap();
+        write_json(&path, &BenchConfig::default(), &[p], None, None, None).unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(doc.opt("control").is_none());
         assert!(doc.opt("autoscale").is_none());
+        assert!(doc.opt("tenancy").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -12,8 +12,14 @@
 //! uses, so the two layers compose: a submission first consults the
 //! cache (fresh hit → immediate response, re-stamped with the caller's
 //! request id), then the in-flight map, then the router.  Capacity is
-//! bounded with FIFO eviction; staleness is bounded by the TTL.  Every
-//! decision is counted — hits, misses, evictions, expiries — and
+//! bounded with FIFO eviction; staleness is bounded by the TTL **and by
+//! a per-model generation**: redeploying a model's artifact bumps its
+//! generation ([`ResponseCache::invalidate`], exposed as
+//! [`Fabric::on_artifact_redeploy`](super::Fabric::on_artifact_redeploy)),
+//! so a response computed by the old weights can never be served after
+//! the redeploy — inserts carry the generation observed at admission
+//! and are dropped if a redeploy raced the execution.  Every decision
+//! is counted — hits, misses, evictions, expiries, invalidations — and
 //! surfaced in the fleet report, because an invisible cache is a
 //! correctness hazard.
 
@@ -29,12 +35,16 @@ use crate::serving::Response;
 pub struct CacheStats {
     /// Lookups answered by a fresh entry.
     pub hits: u64,
-    /// Lookups that found nothing usable (includes expiries).
+    /// Lookups that found nothing usable (includes expiries and
+    /// invalidations).
     pub misses: u64,
     /// Entries dropped to hold the capacity bound.
     pub evicted: u64,
     /// Entries dropped because their TTL had lapsed at lookup.
     pub expired: u64,
+    /// Entries dropped because their model was redeployed after they
+    /// were stored (generation mismatch at lookup).
+    pub invalidated: u64,
     /// Live entries right now.
     pub entries: usize,
 }
@@ -43,6 +53,10 @@ struct Entry {
     resp: Response,
     stored: Instant,
     gen: u64,
+    /// The model generation this response was computed under; a lookup
+    /// after [`ResponseCache::invalidate`] bumped the model's
+    /// generation treats the entry as stale.
+    model_gen: u64,
 }
 
 struct CacheInner {
@@ -53,6 +67,8 @@ struct CacheInner {
     /// predecessor's order slot.
     order: VecDeque<([u8; 32], u64)>,
     next_gen: u64,
+    /// Per-model redeploy generation (absent = 0).
+    model_gens: HashMap<String, u64>,
 }
 
 /// Bounded, TTL'd response store shared by the router and every pod
@@ -65,6 +81,7 @@ pub struct ResponseCache {
     misses: AtomicU64,
     evicted: AtomicU64,
     expired: AtomicU64,
+    invalidated: AtomicU64,
 }
 
 impl ResponseCache {
@@ -79,11 +96,13 @@ impl ResponseCache {
                 map: HashMap::new(),
                 order: VecDeque::new(),
                 next_gen: 0,
+                model_gens: HashMap::new(),
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             expired: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
         }
     }
 
@@ -92,28 +111,53 @@ impl ResponseCache {
         self.ttl
     }
 
-    /// Look up a response; a fresh entry is a hit, an expired entry is
-    /// removed and counted as both an expiry and a miss.
-    pub fn get(&self, key: &[u8; 32]) -> Option<Response> {
-        self.get_at(key, Instant::now())
+    /// Current redeploy generation of `model` (0 until the first
+    /// invalidation).  Captured at admission and passed back to
+    /// [`insert`](Self::insert) so a redeploy racing an in-flight
+    /// execution drops the stale memo instead of storing it.
+    pub fn generation(&self, model: &str) -> u64 {
+        self.inner.lock().unwrap().model_gens.get(model).copied().unwrap_or(0)
     }
 
-    fn get_at(&self, key: &[u8; 32], now: Instant) -> Option<Response> {
+    /// Bump `model`'s generation: every cached response computed before
+    /// this call becomes unservable (dropped and counted as
+    /// `invalidated` on its next lookup).  Returns the new generation.
+    pub fn invalidate(&self, model: &str) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let gen = g.model_gens.entry(model.to_string()).or_insert(0);
+        *gen += 1;
+        *gen
+    }
+
+    /// Look up a response for `model`; a fresh same-generation entry is
+    /// a hit, an expired or invalidated entry is removed and counted.
+    pub fn get(&self, key: &[u8; 32], model: &str) -> Option<Response> {
+        self.get_at(key, model, Instant::now())
+    }
+
+    fn get_at(&self, key: &[u8; 32], model: &str, now: Instant) -> Option<Response> {
         // Remove-then-reinsert keeps the hot path free of aliasing
         // between the lookup borrow and the expiry mutation: the entry
         // is owned while inspected, and a still-fresh one goes straight
         // back under the same generation (its eviction slot stays
         // valid).
+        enum Miss {
+            Absent,
+            Expired,
+            Invalidated,
+        }
         let looked_up = {
             let mut g = self.inner.lock().unwrap();
+            let current = g.model_gens.get(model).copied().unwrap_or(0);
             match g.map.remove(key) {
+                Some(e) if e.model_gen != current => Err(Miss::Invalidated),
                 Some(e) if now.duration_since(e.stored) <= self.ttl => {
                     let resp = e.resp.clone();
                     g.map.insert(*key, e);
                     Ok(resp)
                 }
-                Some(_) => Err(true), // expired: stays removed
-                None => Err(false),
+                Some(_) => Err(Miss::Expired), // stays removed
+                None => Err(Miss::Absent),
             }
         };
         match looked_up {
@@ -121,9 +165,15 @@ impl ResponseCache {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(resp)
             }
-            Err(expired) => {
-                if expired {
-                    self.expired.fetch_add(1, Ordering::Relaxed);
+            Err(miss) => {
+                match miss {
+                    Miss::Expired => {
+                        self.expired.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Miss::Invalidated => {
+                        self.invalidated.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Miss::Absent => {}
                 }
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
@@ -131,19 +181,35 @@ impl ResponseCache {
         }
     }
 
-    /// Store a completed response, evicting oldest entries past the
-    /// capacity bound.  Re-inserting a live key refreshes its payload
-    /// but keeps its original eviction slot (FIFO, not LRU — the cache
-    /// protects pods from repeat traffic, not from scans).
-    pub fn insert(&self, key: [u8; 32], resp: Response) {
-        self.insert_at(key, resp, Instant::now());
+    /// Store a completed response computed under `model`'s generation
+    /// `admitted_gen` (from [`generation`](Self::generation) at
+    /// admission), evicting oldest entries past the capacity bound.  If
+    /// the model was redeployed while the request was in flight
+    /// (`admitted_gen` is no longer current) the memo is silently
+    /// dropped — stale weights must never enter the cache.
+    /// Re-inserting a live key refreshes its payload but keeps its
+    /// original eviction slot (FIFO, not LRU — the cache protects pods
+    /// from repeat traffic, not from scans).
+    pub fn insert(&self, key: [u8; 32], model: &str, admitted_gen: u64, resp: Response) {
+        self.insert_at(key, model, admitted_gen, resp, Instant::now());
     }
 
-    fn insert_at(&self, key: [u8; 32], resp: Response, now: Instant) {
+    fn insert_at(
+        &self,
+        key: [u8; 32],
+        model: &str,
+        admitted_gen: u64,
+        resp: Response,
+        now: Instant,
+    ) {
         let mut g = self.inner.lock().unwrap();
+        if g.model_gens.get(model).copied().unwrap_or(0) != admitted_gen {
+            return; // redeployed mid-flight: drop the stale memo
+        }
         let gen = g.next_gen;
         g.next_gen += 1;
-        if g.map.insert(key, Entry { resp, stored: now, gen }).is_none() {
+        let entry = Entry { resp, stored: now, gen, model_gen: admitted_gen };
+        if g.map.insert(key, entry).is_none() {
             g.order.push_back((key, gen));
         } else if let Some(slot) = g.order.iter_mut().find(|(k, _)| *k == key) {
             // Live re-insert: point the existing order slot at the new
@@ -199,6 +265,7 @@ impl ResponseCache {
             misses: self.misses.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
+            invalidated: self.invalidated.load(Ordering::Relaxed),
             entries: self.inner.lock().unwrap().map.len(),
         }
     }
@@ -223,16 +290,18 @@ mod tests {
         [b; 32]
     }
 
+    const M: &str = "lenet";
+
     #[test]
     fn hit_within_ttl_miss_after() {
         let c = ResponseCache::new(4, Duration::from_millis(100));
         let t0 = Instant::now();
-        c.insert_at(key(1), resp(7), t0);
-        let got = c.get_at(&key(1), t0 + Duration::from_millis(50)).unwrap();
+        c.insert_at(key(1), M, 0, resp(7), t0);
+        let got = c.get_at(&key(1), M, t0 + Duration::from_millis(50)).unwrap();
         assert_eq!(got.id, 7);
         assert_eq!(got.prediction.class, 3);
         assert!(
-            c.get_at(&key(1), t0 + Duration::from_millis(150)).is_none(),
+            c.get_at(&key(1), M, t0 + Duration::from_millis(150)).is_none(),
             "entry past its TTL must not be served"
         );
         let s = c.stats();
@@ -243,12 +312,12 @@ mod tests {
     fn capacity_bound_evicts_oldest_first() {
         let c = ResponseCache::new(2, Duration::from_secs(60));
         let t0 = Instant::now();
-        c.insert_at(key(1), resp(1), t0);
-        c.insert_at(key(2), resp(2), t0);
-        c.insert_at(key(3), resp(3), t0);
-        assert!(c.get_at(&key(1), t0).is_none(), "oldest entry must have been evicted");
-        assert!(c.get_at(&key(2), t0).is_some());
-        assert!(c.get_at(&key(3), t0).is_some());
+        c.insert_at(key(1), M, 0, resp(1), t0);
+        c.insert_at(key(2), M, 0, resp(2), t0);
+        c.insert_at(key(3), M, 0, resp(3), t0);
+        assert!(c.get_at(&key(1), M, t0).is_none(), "oldest entry must have been evicted");
+        assert!(c.get_at(&key(2), M, t0).is_some());
+        assert!(c.get_at(&key(3), M, t0).is_some());
         let s = c.stats();
         assert_eq!(s.evicted, 1);
         assert_eq!(s.entries, 2);
@@ -260,14 +329,14 @@ mod tests {
         // order slot must NOT evict the fresh entry.
         let c = ResponseCache::new(2, Duration::from_millis(10));
         let t0 = Instant::now();
-        c.insert_at(key(1), resp(1), t0);
-        assert!(c.get_at(&key(1), t0 + Duration::from_millis(50)).is_none(), "expired");
-        c.insert_at(key(1), resp(11), t0 + Duration::from_millis(60));
+        c.insert_at(key(1), M, 0, resp(1), t0);
+        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(50)).is_none(), "expired");
+        c.insert_at(key(1), M, 0, resp(11), t0 + Duration::from_millis(60));
         // Fill to capacity: pops the stale (key 1, gen 0) slot, which
         // must be ignored, then stays within bounds.
-        c.insert_at(key(2), resp(2), t0 + Duration::from_millis(61));
-        c.insert_at(key(3), resp(3), t0 + Duration::from_millis(62));
-        let got = c.get_at(&key(3), t0 + Duration::from_millis(63));
+        c.insert_at(key(2), M, 0, resp(2), t0 + Duration::from_millis(61));
+        c.insert_at(key(3), M, 0, resp(3), t0 + Duration::from_millis(62));
+        let got = c.get_at(&key(3), M, t0 + Duration::from_millis(63));
         assert!(got.is_some(), "newest entry survives");
         assert!(c.stats().entries <= 2, "capacity bound held");
     }
@@ -281,9 +350,11 @@ mod tests {
         let t0 = Instant::now();
         for i in 0..200u64 {
             let t = t0 + Duration::from_millis(i * 20);
-            c.insert_at(key((i % 251) as u8), resp(i), t);
+            c.insert_at(key((i % 251) as u8), M, 0, resp(i), t);
             // Expired by the next round's lookup: map stays near-empty.
-            assert!(c.get_at(&key((i % 251) as u8), t + Duration::from_millis(15)).is_none());
+            assert!(c
+                .get_at(&key((i % 251) as u8), M, t + Duration::from_millis(15))
+                .is_none());
         }
         assert!(
             c.order_len() <= 16,
@@ -298,16 +369,67 @@ mod tests {
     fn live_reinsert_refreshes_payload_without_duplicating_slots() {
         let c = ResponseCache::new(2, Duration::from_secs(60));
         let t0 = Instant::now();
-        c.insert_at(key(1), resp(1), t0);
-        c.insert_at(key(1), resp(99), t0 + Duration::from_millis(1));
-        assert_eq!(c.get_at(&key(1), t0 + Duration::from_millis(2)).unwrap().id, 99);
-        c.insert_at(key(2), resp(2), t0 + Duration::from_millis(3));
-        c.insert_at(key(3), resp(3), t0 + Duration::from_millis(4));
+        c.insert_at(key(1), M, 0, resp(1), t0);
+        c.insert_at(key(1), M, 0, resp(99), t0 + Duration::from_millis(1));
+        assert_eq!(c.get_at(&key(1), M, t0 + Duration::from_millis(2)).unwrap().id, 99);
+        c.insert_at(key(2), M, 0, resp(2), t0 + Duration::from_millis(3));
+        c.insert_at(key(3), M, 0, resp(3), t0 + Duration::from_millis(4));
         // key(1) held one order slot despite two inserts: exactly one
         // eviction brings the map back to capacity.
         let s = c.stats();
         assert_eq!(s.evicted, 1);
         assert_eq!(s.entries, 2);
-        assert!(c.get_at(&key(1), t0 + Duration::from_millis(5)).is_none(), "FIFO evicts 1");
+        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(5)).is_none(), "FIFO evicts 1");
+    }
+
+    #[test]
+    fn redeploy_invalidates_cached_responses_within_ttl() {
+        let c = ResponseCache::new(4, Duration::from_secs(60));
+        let t0 = Instant::now();
+        assert_eq!(c.generation(M), 0);
+        c.insert_at(key(1), M, 0, resp(1), t0);
+        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(1)).is_some());
+        // Redeploy: the entry is far inside its TTL and must still die.
+        assert_eq!(c.invalidate(M), 1);
+        assert!(
+            c.get_at(&key(1), M, t0 + Duration::from_millis(2)).is_none(),
+            "pre-redeploy response served after redeploy"
+        );
+        let s = c.stats();
+        assert_eq!(s.invalidated, 1);
+        assert_eq!(s.entries, 0, "the stale entry was dropped, not kept");
+        // A fresh post-redeploy insert under the new generation serves.
+        c.insert_at(key(1), M, 1, resp(2), t0 + Duration::from_millis(3));
+        assert_eq!(
+            c.get_at(&key(1), M, t0 + Duration::from_millis(4)).unwrap().id,
+            2
+        );
+    }
+
+    #[test]
+    fn redeploy_scopes_to_the_named_model_only() {
+        let c = ResponseCache::new(4, Duration::from_secs(60));
+        let t0 = Instant::now();
+        c.insert_at(key(1), "lenet", 0, resp(1), t0);
+        c.insert_at(key(2), "resnet50", 0, resp(2), t0);
+        c.invalidate("lenet");
+        assert!(c.get_at(&key(1), "lenet", t0).is_none());
+        assert!(
+            c.get_at(&key(2), "resnet50", t0).is_some(),
+            "other models' entries survive a redeploy"
+        );
+    }
+
+    #[test]
+    fn stale_insert_after_redeploy_is_dropped() {
+        // A redeploy racing an in-flight execution: the memo carries the
+        // admission-time generation and must not be stored.
+        let c = ResponseCache::new(4, Duration::from_secs(60));
+        let t0 = Instant::now();
+        let admitted_gen = c.generation(M);
+        c.invalidate(M); // redeploy lands while the request executes
+        c.insert_at(key(1), M, admitted_gen, resp(1), t0);
+        assert_eq!(c.stats().entries, 0, "stale memo must not enter the cache");
+        assert!(c.get_at(&key(1), M, t0).is_none());
     }
 }

@@ -10,7 +10,7 @@
 //!
 //! ```text
 //!             ┌────────────────────────── Fabric ─────────────────────────┐
-//!  requests   │  Router ──► per-pod BoundedQueue ──► batcher workers ──►  │
+//!  requests   │  Router ──► per-pod TenantQueue ──► batcher workers ──►   │
 //!  (Arrival)──┤   │  │          (admission bound,     ONE fused dispatch  │
 //!             │   │  │shed       shed when full)      per drained batch   │
 //!             │   │  ▼                                (AifServer|SimPod)  │
@@ -30,7 +30,7 @@
 //!   [`crate::cluster::Cluster`]); the router spreads requests across
 //!   them by least estimated work.
 //! - **Per-node queues & fused dynamic batching** — each pod owns a
-//!   [`queue::BoundedQueue`] drained in batches by its own workers; the
+//!   [`queue::TenantQueue`] drained in batches by its own workers; the
 //!   drained batch then executes as ONE device dispatch
 //!   ([`PodExecutor::execute_batch`]), amortizing per-dispatch overhead
 //!   over the batch (`tf2aif bench` measures the curve).
@@ -51,8 +51,17 @@
 //!   (model, payload) submissions collapse into one execution keyed by
 //!   input hash; every caller gets a response re-stamped with its own
 //!   request id.
+//! - **Multi-tenancy** (`FabricConfig::tenants`) — requests carry a
+//!   tenant id ([`Fabric::submit_as`]) with a priority class; admission
+//!   enforces **per-tenant token-bucket quotas** and per-tenant queue
+//!   shares *before* global capacity checks, workers drain batches
+//!   **weighted-fair** across tenants (one hot tenant cannot starve the
+//!   rest), and under pressure the shed path **preempts queued work by
+//!   ascending priority** instead of bouncing the newcomer.  See
+//!   [`tenancy`] and `docs/ARCHITECTURE.md` §Tenancy & fairness.
 //! - **Admission control** — queues are bounded; when every replica's
-//!   queue is full the request is *shed* (counted, never silent).
+//!   queue is full (of equal-or-higher-priority work) the request is
+//!   *shed* (counted, never silent).
 //! - **Feedback** — completed requests update a
 //!   [`crate::metrics::FeedbackStore`]; the router,
 //!   [`crate::backend::Backend::rank`], the batch controllers and the
@@ -66,6 +75,7 @@ pub mod cache;
 pub mod control;
 pub mod queue;
 pub mod sim;
+pub mod tenancy;
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -91,8 +101,10 @@ use cache::ResponseCache;
 pub use cache::CacheStats;
 use control::{BatchControlConfig, BatchController, HysteresisGate};
 pub use control::{AutoscaleConfig, ScaleDirection, ScaleEvent};
-use queue::BoundedQueue;
+use queue::{LaneConfig, Push, TenantQueue};
 use sim::{Gate, SimPod};
+use tenancy::{TenantRegistry, TenantState};
+pub use tenancy::{Priority, TenancyError, TenantReport, TenantSpec, DEFAULT_TENANT};
 
 /// Anything that can serve fabric requests: a real PJRT-backed
 /// [`AifServer`] or a [`SimPod`] running the platform cost model.
@@ -195,6 +207,12 @@ pub struct FabricConfig {
     /// Backlog-driven autoscaling of replicas per model; `None` keeps
     /// the placed replica count fixed.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Tenant set: per-tenant weights, priorities, quotas and queue
+    /// shares (see [`tenancy`]).  Empty = a single unlimited
+    /// [`DEFAULT_TENANT`]; a `"default"` tenant is appended when the
+    /// list does not define one, so anonymous [`Fabric::submit`]
+    /// traffic always has a home.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for FabricConfig {
@@ -216,6 +234,7 @@ impl Default for FabricConfig {
             cache_capacity: 0,
             cache_ttl_ms: 250,
             autoscale: None,
+            tenants: Vec::new(),
         }
     }
 }
@@ -237,7 +256,18 @@ pub struct PodPlan {
     pub modeled_ms: f64,
 }
 
-type Work = (Request, Instant, Arc<Fanout>);
+/// One queued unit: the admitted request, its enqueue instant, its
+/// fan-out, and the tenancy coordinates the pod queue drains and
+/// preempts by.
+struct Work {
+    req: Request,
+    enqueued: Instant,
+    fan: Arc<Fanout>,
+    /// Tenant lane index in every pod queue.
+    lane: usize,
+    /// Priority rank (the queue's eviction ordering key).
+    prio: u8,
+}
 
 /// Terminal state of one routed request.
 #[derive(Debug, Clone)]
@@ -246,7 +276,15 @@ pub enum Outcome {
     Completed(Response),
     /// Reached a pod but the executor failed (counted in pod errors).
     Failed(String),
+    /// Admitted, then evicted from its queue by higher-priority work
+    /// before executing (counted per tenant as a preemption and in the
+    /// fleet shed totals — explicit, never silent).
+    Shed,
 }
+
+/// One caller awaiting an outcome: its request id, the tenant to
+/// account the verdict to, and its reply channel.
+type Waiter = (u64, Arc<TenantState>, mpsc::Sender<Outcome>);
 
 /// Delivery record for one admitted (leader) request: the waiters are
 /// every caller whose submission collapsed onto this execution — the
@@ -257,7 +295,13 @@ struct Fanout {
     /// completion and the response-cache key to memoize under (`None`
     /// when both dedup and the cache are off).
     key: Option<[u8; 32]>,
-    waiters: Mutex<Vec<(u64, mpsc::Sender<Outcome>)>>,
+    /// Model this execution serves — the response cache's invalidation
+    /// namespace and the dedup purge handle on artifact redeploy.
+    model: String,
+    /// Cache generation of `model` observed at admission; the insert is
+    /// dropped if [`Fabric::on_artifact_redeploy`] bumped it mid-flight.
+    cache_gen: u64,
+    waiters: Mutex<Vec<Waiter>>,
 }
 
 /// In-flight dedup index: content hash → the execution to piggyback on.
@@ -285,43 +329,75 @@ fn dedup_key(model: &str, payload: &[f32]) -> [u8; 32] {
 }
 
 /// Unregister a completed execution from the dedup index, memoize the
-/// response in the cache (when one is configured), then fan the outcome
-/// out to every waiter (each response re-stamped with the waiter's own
-/// request id).  Removal happens under the map lock *before* delivery,
-/// so a new identical submission either attached in time (and is in
-/// `waiters`) or starts a fresh execution — nobody can attach to a
-/// completed entry and hang.
-fn deliver(dedup: &DedupMap, cache: Option<&ResponseCache>, fan: &Fanout, outcome: Outcome) {
+/// response in the cache (when one is configured — dropped if the model
+/// was redeployed mid-flight), then fan the outcome out to every waiter
+/// (each response re-stamped with the waiter's own request id, each
+/// verdict accounted to the waiter's tenant).  Removal happens under
+/// the map lock *before* delivery, so a new identical submission either
+/// attached in time (and is in `waiters`) or starts a fresh execution —
+/// nobody can attach to a completed entry and hang.  Returns the number
+/// of waiters delivered to, so fleet counters can stay per-caller
+/// consistent with the per-tenant accounting done here.
+fn deliver(
+    dedup: &DedupMap,
+    cache: Option<&ResponseCache>,
+    fan: &Arc<Fanout>,
+    outcome: Outcome,
+) -> u64 {
     if let Some(key) = &fan.key {
-        dedup.lock().unwrap().remove(key);
+        {
+            // Remove only OUR entry: after `on_artifact_redeploy` purged
+            // this execution from the map, an identical post-redeploy
+            // submission may have re-registered the same key as a fresh
+            // leader — completing here must not evict that live entry.
+            let mut map = dedup.lock().unwrap();
+            if map.get(key).map_or(false, |entry| Arc::ptr_eq(entry, fan)) {
+                map.remove(key);
+            }
+        }
         if let (Some(c), Outcome::Completed(resp)) = (cache, &outcome) {
-            c.insert(*key, resp.clone());
+            c.insert(*key, &fan.model, fan.cache_gen, resp.clone());
         }
     }
     let waiters = std::mem::take(&mut *fan.waiters.lock().unwrap());
-    for (id, tx) in waiters {
+    let delivered = waiters.len() as u64;
+    for (id, tenant, tx) in waiters {
         let personalized = match &outcome {
-            Outcome::Completed(resp) => Outcome::Completed(Response { id, ..resp.clone() }),
-            Outcome::Failed(e) => Outcome::Failed(e.clone()),
+            Outcome::Completed(resp) => {
+                tenant.stats.note_completed(resp.queue_wait_ms + resp.service_ms);
+                Outcome::Completed(Response { id, ..resp.clone() })
+            }
+            Outcome::Failed(e) => {
+                tenant.stats.note_failed();
+                Outcome::Failed(e.clone())
+            }
+            Outcome::Shed => {
+                tenant.stats.note_preempted();
+                Outcome::Shed
+            }
         };
         let _ = tx.send(personalized);
     }
+    delivered
 }
 
 /// Router verdict for one submission.
 pub enum Submission {
     /// Admitted (or answered from the cache / an in-flight dedup
-    /// attach); the receiver yields the [`Outcome`].
+    /// attach); the receiver yields the [`Outcome`].  An admitted
+    /// request can still be preempted later by higher-priority work, in
+    /// which case the receiver yields [`Outcome::Shed`].
     Enqueued(mpsc::Receiver<Outcome>),
-    /// Every feasible replica's queue was at the admission bound; the
-    /// request was shed (and counted).
+    /// Shed at admission: the tenant's quota was exhausted, or every
+    /// feasible replica's queue was at the bound with nothing
+    /// lower-priority to displace.  Counted either way.
     Shed,
 }
 
 struct PodRuntime {
     plan: PodPlan,
     key: String,
-    queue: Arc<BoundedQueue<Work>>,
+    queue: Arc<TenantQueue<Work>>,
     /// Queued + executing requests (router backlog estimate).
     backlog: Arc<AtomicU64>,
     /// `None` once a retired pod has been reaped: the executor (for a
@@ -376,7 +452,9 @@ struct Registry {
 struct ModelScale {
     gate: HysteresisGate,
     cooldown: u32,
-    last_shed: u64,
+    /// Priority-weighted shed pressure at the last tick (deltas against
+    /// `FabricInner::pressure_by_model` classify overload).
+    last_pressure: f64,
 }
 
 /// Autoscaler state: its own (feedback-blended) placement backend plus
@@ -400,6 +478,11 @@ struct FabricInner {
     input_shapes: BTreeMap<String, (usize, usize, usize)>,
     feedback: Arc<FeedbackStore>,
     cfg: FabricConfig,
+    /// The tenant set (specs resolved to lanes + live quota buckets).
+    tenants: TenantRegistry,
+    /// Lane layout shared by every pod queue (computed once from the
+    /// tenant registry and `queue_capacity`; reused at scale-up).
+    lanes: Vec<LaneConfig>,
     /// The cluster the fabric owns: autoscaler binds/terminates pods
     /// against the same slot and memory accounting placement used.
     cluster: Mutex<Cluster>,
@@ -409,8 +492,22 @@ struct FabricInner {
     /// Birth instant; scale events and pod lifetimes are offsets from it.
     epoch: Instant,
     next_id: AtomicU64,
+    /// Every shed, whatever the reason (quota, capacity, preemption) —
+    /// the receiver-side accounting invariant: `completed + failed +
+    /// shed == submitted`.
     shed_total: AtomicU64,
+    /// Quota (token-bucket) sheds — policy rejections, split out so
+    /// they never read as capacity pressure.
+    quota_shed_total: AtomicU64,
+    /// Queued requests evicted by higher-priority work.
+    preempted_total: AtomicU64,
     shed_by_model: Mutex<BTreeMap<String, u64>>,
+    /// Priority-weighted shed pressure per model (each capacity shed or
+    /// preemption adds `1 + priority rank`), the autoscaler's overload
+    /// signal: losing high-priority work pushes scale-up harder than
+    /// losing best-effort work.  Quota sheds add nothing — a tenant at
+    /// its own quota is not a capacity problem.
+    pressure_by_model: Mutex<BTreeMap<String, f64>>,
     /// In-flight dedup index, shared with every pod worker.
     dedup: Arc<DedupMap>,
     dedup_hits: AtomicU64,
@@ -549,7 +646,7 @@ impl Fabric {
             pods.push((plan, artifact, executor));
         }
         let env = SpawnEnv::from_backend(backend, cluster, factory);
-        Ok(Fabric::spawn(pods, cfg.clone(), env))
+        Fabric::spawn(pods, cfg.clone(), env)
     }
 
     /// Place and spawn the fabric with **real** pods: one compiled,
@@ -578,14 +675,18 @@ impl Fabric {
             pods.push((plan, artifact, executor));
         }
         let env = SpawnEnv::from_backend(backend, cluster, factory);
-        Ok(Fabric::spawn(pods, cfg.clone(), env))
+        Fabric::spawn(pods, cfg.clone(), env)
     }
 
     fn spawn(
         pods: Vec<(PodPlan, Arc<Artifact>, Arc<dyn PodExecutor>)>,
         cfg: FabricConfig,
         env: SpawnEnv,
-    ) -> Fabric {
+    ) -> Result<Fabric> {
+        // Tenant misconfiguration (zero quota, bad share, duplicates)
+        // surfaces here as a typed error, before any thread spawns.
+        let tenants = TenantRegistry::build(&cfg.tenants).map_err(anyhow::Error::new)?;
+        let lanes = tenants.lane_configs(cfg.queue_capacity);
         let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
         let cache = (cfg.cache_capacity > 0).then(|| {
             Arc::new(ResponseCache::new(
@@ -626,13 +727,15 @@ impl Fabric {
             }
             let idx = registry.pods.len();
             registry.by_model.entry(plan.model.clone()).or_default().push(idx);
-            registry.pods.push(Arc::new(new_runtime(plan, executor, &cfg, 0.0)));
+            registry.pods.push(Arc::new(new_runtime(plan, executor, &cfg, 0.0, &lanes)));
         }
         let inner = Arc::new(FabricInner {
             registry: RwLock::new(registry),
             input_shapes,
             feedback,
             cfg,
+            tenants,
+            lanes,
             cluster: Mutex::new(env.cluster),
             factory: env.factory,
             scaler,
@@ -640,7 +743,10 @@ impl Fabric {
             epoch,
             next_id: AtomicU64::new(0),
             shed_total: AtomicU64::new(0),
+            quota_shed_total: AtomicU64::new(0),
+            preempted_total: AtomicU64::new(0),
             shed_by_model: Mutex::new(BTreeMap::new()),
+            pressure_by_model: Mutex::new(BTreeMap::new()),
             dedup: Arc::new(Mutex::new(HashMap::new())),
             dedup_hits: AtomicU64::new(0),
             stop: AtomicBool::new(false),
@@ -660,7 +766,7 @@ impl Fabric {
                 }
             })
         });
-        Fabric { inner, scaler_thread }
+        Ok(Fabric { inner, scaler_thread })
     }
 
     /// The shared feedback store (attach it to a
@@ -712,19 +818,68 @@ impl Fabric {
         })
     }
 
-    /// Route one request for `model`: consult the response cache (a
-    /// fresh identical response answers immediately), collapse onto an
-    /// identical in-flight request when dedup is on, otherwise try the
-    /// replicas in ascending score order, admit into the first queue
-    /// with room, and shed if every queue is at the bound.  Shed
-    /// requests are counted — nothing is silently dropped.
+    /// Route one request for `model` on behalf of the
+    /// [`DEFAULT_TENANT`]: check the tenant's quota, consult the
+    /// response cache (a fresh identical response answers immediately),
+    /// collapse onto an identical in-flight request when dedup is on,
+    /// otherwise try the replicas in ascending score order, admit into
+    /// the first queue with room at this tenant's priority (possibly
+    /// preempting strictly-lower-priority queued work), and shed if
+    /// every queue is at the bound.  Shed requests are counted —
+    /// nothing is silently dropped.
     pub fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
-        self.inner.submit(model, payload)
+        self.inner.submit_as(DEFAULT_TENANT, model, payload)
     }
 
-    /// Total shed requests so far.
+    /// [`submit`](Self::submit) on behalf of a named tenant.  An
+    /// unknown tenant id is a typed error
+    /// ([`TenancyError::UnknownTenant`], downcastable), never a panic
+    /// and never a silent drop.
+    pub fn submit_as(
+        &self,
+        tenant: &str,
+        model: &str,
+        payload: Vec<f32>,
+    ) -> Result<Submission> {
+        self.inner.submit_as(tenant, model, payload)
+    }
+
+    /// Per-tenant report rows (configuration + every admission verdict
+    /// + completed-latency percentiles), in lane order.
+    pub fn tenant_reports(&self) -> Vec<TenantReport> {
+        self.inner.tenants.all().iter().map(|t| TenantReport::from_state(t)).collect()
+    }
+
+    /// Artifact-redeploy hook: call after re-generating or re-deploying
+    /// `model`'s artifact.  Bumps the model's response-cache generation
+    /// (no cached pre-redeploy response can be served again, and a memo
+    /// from an execution still in flight is dropped on insert) and
+    /// purges the model's in-flight dedup entries so new identical
+    /// submissions execute fresh instead of piggybacking on a
+    /// pre-redeploy execution.  Callers already attached keep their
+    /// in-flight result — they submitted before the redeploy.
+    pub fn on_artifact_redeploy(&self, model: &str) {
+        if let Some(cache) = &self.inner.cache {
+            cache.invalidate(model);
+        }
+        self.inner.dedup.lock().unwrap().retain(|_, fan| fan.model != model);
+    }
+
+    /// Total shed requests so far (quota + capacity + preemptions).
     pub fn shed_total(&self) -> u64 {
         self.inner.shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Submissions shed by per-tenant token-bucket quotas.
+    pub fn quota_shed_total(&self) -> u64 {
+        self.inner.quota_shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Callers whose admitted request was evicted by higher-priority
+    /// work (dedup'd followers of an evicted leader each count — the
+    /// fleet total matches the per-tenant `preempted` columns).
+    pub fn preempted_total(&self) -> u64 {
+        self.inner.preempted_total.load(Ordering::Relaxed)
     }
 
     /// Submissions that collapsed onto an identical in-flight request
@@ -816,7 +971,45 @@ impl Fabric {
         requests: usize,
         arrival: Arrival,
         seed: u64,
+        payload_for: impl FnMut(&mut Rng, &str, usize) -> Vec<f32>,
+    ) -> Result<FabricRunReport> {
+        self.run_with_tenants(requests, arrival, seed, payload_for, |_| {
+            DEFAULT_TENANT.to_string()
+        })
+    }
+
+    /// Drive a multi-tenant workload: image-like payloads, requests
+    /// attributed to tenants by the deterministic weighted interleave
+    /// of `mix` (see [`TenantMix`](crate::workload::TenantMix)).
+    pub fn run_tenants(
+        &self,
+        requests: usize,
+        arrival: Arrival,
+        seed: u64,
+        mix: &crate::workload::TenantMix,
+    ) -> Result<FabricRunReport> {
+        self.run_with_tenants(
+            requests,
+            arrival,
+            seed,
+            |rng: &mut Rng, model: &str, _i: usize| {
+                let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
+                image_like(rng, h, w, c)
+            },
+            |i| mix.pick(i).to_string(),
+        )
+    }
+
+    /// The fully general drive loop: caller-supplied payload source AND
+    /// tenant attribution per request index.  Everything every other
+    /// `run*` method does funnels through here.
+    pub fn run_with_tenants(
+        &self,
+        requests: usize,
+        arrival: Arrival,
+        seed: u64,
         mut payload_for: impl FnMut(&mut Rng, &str, usize) -> Vec<f32>,
+        mut tenant_for: impl FnMut(usize) -> String,
     ) -> Result<FabricRunReport> {
         let models = self.models();
         if models.is_empty() {
@@ -834,6 +1027,7 @@ impl Fabric {
             outcome: Option<Outcome>,
             completed: &mut usize,
             failed: &mut usize,
+            shed: &mut usize,
             e2e_ms: &mut Series,
         ) {
             match outcome {
@@ -841,6 +1035,9 @@ impl Fabric {
                     *completed += 1;
                     e2e_ms.push(resp.queue_wait_ms + resp.service_ms);
                 }
+                // Admitted then preempted by higher-priority work: an
+                // explicit shed, not a failure.
+                Some(Outcome::Shed) => *shed += 1,
                 Some(Outcome::Failed(_)) | None => *failed += 1,
             }
         }
@@ -850,12 +1047,19 @@ impl Fabric {
             }
             let model = &models[i % models.len()];
             let payload = payload_for(&mut rng, model, i);
-            match self.submit(model, payload)? {
+            let tenant = tenant_for(i);
+            match self.submit_as(&tenant, model, payload)? {
                 Submission::Enqueued(rx) => {
                     if closed_loop {
                         // One outstanding request: wait before issuing
                         // the next (paper §V-C closed loop).
-                        account(rx.recv().ok(), &mut completed, &mut failed, &mut e2e_ms);
+                        account(
+                            rx.recv().ok(),
+                            &mut completed,
+                            &mut failed,
+                            &mut shed,
+                            &mut e2e_ms,
+                        );
                     } else {
                         pending.push(rx);
                     }
@@ -864,7 +1068,7 @@ impl Fabric {
             }
         }
         for rx in pending {
-            account(rx.recv().ok(), &mut completed, &mut failed, &mut e2e_ms);
+            account(rx.recv().ok(), &mut completed, &mut failed, &mut shed, &mut e2e_ms);
         }
         Ok(FabricRunReport {
             submitted: requests,
@@ -917,6 +1121,8 @@ impl Fabric {
             requests: merged.requests,
             errors: merged.errors,
             shed: self.shed_total(),
+            quota_shed: self.quota_shed_total(),
+            preempted: self.preempted_total(),
             deduped: self.dedup_hits(),
             cache: self.cache_stats(),
             scale_ups: self.inner.scaler.as_ref().map_or(0, |s| s.ups.load(Ordering::Relaxed)),
@@ -956,6 +1162,7 @@ fn new_runtime(
     executor: Arc<dyn PodExecutor>,
     cfg: &FabricConfig,
     born_ms: f64,
+    lanes: &[LaneConfig],
 ) -> PodRuntime {
     let controller = cfg.adaptive.then(|| {
         Arc::new(BatchController::new(BatchControlConfig {
@@ -969,7 +1176,7 @@ fn new_runtime(
     PodRuntime {
         plan,
         key,
-        queue: Arc::new(BoundedQueue::new(cfg.queue_capacity)),
+        queue: Arc::new(TenantQueue::new(cfg.queue_capacity, lanes.to_vec())),
         backlog: Arc::new(AtomicU64::new(0)),
         executor: Mutex::new(Some(executor)),
         controller,
@@ -1040,10 +1247,10 @@ impl FabricInner {
                     let mut reqs = Vec::with_capacity(batch.len());
                     let mut waits = Vec::with_capacity(batch.len());
                     let mut fans = Vec::with_capacity(batch.len());
-                    for (req, enqueued, fan) in batch {
-                        waits.push(enqueued.elapsed().as_secs_f64() * 1e3);
-                        reqs.push(req);
-                        fans.push(fan);
+                    for work in batch {
+                        waits.push(work.enqueued.elapsed().as_secs_f64() * 1e3);
+                        reqs.push(work.req);
+                        fans.push(work.fan);
                     }
                     let results = executor.execute_batch(&reqs, &waits);
                     for (fan, result) in fans.into_iter().zip(results) {
@@ -1054,10 +1261,10 @@ impl FabricInner {
                     // dispatch per request, and each item's queue wait
                     // is taken at its OWN execution time so the
                     // in-batch serial wait is attributed honestly.
-                    for (req, enqueued, fan) in batch {
-                        let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-                        let result = executor.execute(&req, wait_ms);
-                        finish(fan, result);
+                    for work in batch {
+                        let wait_ms = work.enqueued.elapsed().as_secs_f64() * 1e3;
+                        let result = executor.execute(&work.req, wait_ms);
+                        finish(work.fan, result);
                     }
                 }
             }
@@ -1096,8 +1303,31 @@ impl FabricInner {
         Ok(scored.into_iter().map(|(_, p)| p).collect())
     }
 
-    fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
+    fn submit_as(&self, tenant_id: &str, model: &str, payload: Vec<f32>) -> Result<Submission> {
+        // Unknown tenants and unknown models are typed errors — config
+        // and addressing mistakes, not load to account.
+        let tenant = Arc::clone(
+            self.tenants
+                .get(tenant_id)
+                .ok_or_else(|| {
+                    anyhow::Error::new(TenancyError::UnknownTenant(tenant_id.to_string()))
+                })?,
+        );
         let scored = self.candidates(model)?;
+        tenant.stats.note_submitted();
+
+        // Layer 0 — the tenant's own quota, BEFORE any global capacity
+        // check: a tenant past its token bucket is shed no matter how
+        // idle the fleet is.  Quota sheds are policy, not pressure —
+        // they count toward the tenant and the run accounting but never
+        // toward the autoscaler's overload signal.
+        if !tenant.try_admit_quota() {
+            tenant.stats.note_quota_shed();
+            self.quota_shed_total.fetch_add(1, Ordering::Relaxed);
+            self.shed_total.fetch_add(1, Ordering::Relaxed);
+            return Ok(Submission::Shed);
+        }
+
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let keyed = self.cfg.dedup || self.cache.is_some();
@@ -1110,7 +1340,9 @@ impl FabricInner {
         // nothing: reporting the leader's historical service time here
         // would poison the e2e percentiles the cache exists to improve.
         if let (Some(cache), Some(k)) = (&self.cache, &key) {
-            if let Some(resp) = cache.get(k) {
+            if let Some(resp) = cache.get(k, model) {
+                tenant.stats.note_admitted();
+                tenant.stats.note_completed(0.0);
                 let _ = tx.send(Outcome::Completed(Response {
                     id,
                     service_ms: 0.0,
@@ -1121,7 +1353,13 @@ impl FabricInner {
                 return Ok(Submission::Enqueued(rx));
             }
         }
-
+        let cache_gen = match (&self.cache, &key) {
+            (Some(c), Some(_)) => c.generation(model),
+            _ => 0,
+        };
+        let lane = tenant.lane;
+        let prio = tenant.spec.priority.rank();
+        let routed;
         if self.cfg.dedup {
             let k = key.expect("dedup implies a content key");
             // Layer 2 — in-flight dedup.  The map lock is held across
@@ -1131,49 +1369,126 @@ impl FabricInner {
             // in-flight execution or becomes a fresh leader, never
             // neither.  The critical section is small: replica scoring
             // already happened above, so under the lock we only do
-            // backlog atomics and at most `replicas` O(1) queue pushes.
+            // backlog atomics and at most `replicas` O(1) queue pushes
+            // (preemption delivery is deferred until the lock drops —
+            // `deliver` re-takes it).
             let mut map = self.dedup.lock().unwrap();
             if let Some(entry) = map.get(&k) {
-                entry.waiters.lock().unwrap().push((id, tx));
+                entry.waiters.lock().unwrap().push((id, Arc::clone(&tenant), tx));
                 self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                tenant.stats.note_admitted();
                 return Ok(Submission::Enqueued(rx));
             }
-            let fan =
-                Arc::new(Fanout { key: Some(k), waiters: Mutex::new(vec![(id, tx)]) });
-            let work: Work = (Request { id, payload }, Instant::now(), Arc::clone(&fan));
-            if self.try_route(&scored, work) {
+            let fan = Arc::new(Fanout {
+                key: Some(k),
+                model: model.to_string(),
+                cache_gen,
+                waiters: Mutex::new(vec![(id, Arc::clone(&tenant), tx)]),
+            });
+            let work = Work {
+                req: Request { id, payload },
+                enqueued: Instant::now(),
+                fan: Arc::clone(&fan),
+                lane,
+                prio,
+            };
+            routed = self.try_route(&scored, work);
+            if routed.admitted {
                 map.insert(k, fan);
-                return Ok(Submission::Enqueued(rx));
             }
         } else {
-            let fan = Arc::new(Fanout { key, waiters: Mutex::new(vec![(id, tx)]) });
-            let work: Work = (Request { id, payload }, Instant::now(), fan);
-            if self.try_route(&scored, work) {
-                return Ok(Submission::Enqueued(rx));
-            }
+            let fan = Arc::new(Fanout {
+                key,
+                model: model.to_string(),
+                cache_gen,
+                waiters: Mutex::new(vec![(id, Arc::clone(&tenant), tx)]),
+            });
+            let work = Work {
+                req: Request { id, payload },
+                enqueued: Instant::now(),
+                fan,
+                lane,
+                prio,
+            };
+            routed = self.try_route(&scored, work);
         }
+        // Deliver preemption sheds OUTSIDE the dedup lock: each evicted
+        // entry may be a dedup leader whose unregistration (`deliver`)
+        // takes the same lock.  `deliver` reports how many callers it
+        // reached (the leader plus any dedup'd followers), so the fleet
+        // counters stay per-caller consistent with the per-tenant
+        // accounting and the run invariant `completed + failed + shed ==
+        // submitted`.
+        for evicted in routed.evicted {
+            let callers =
+                deliver(&self.dedup, self.cache.as_deref(), &evicted.fan, Outcome::Shed);
+            self.note_preemption(&evicted, callers);
+        }
+        if routed.admitted {
+            tenant.stats.note_admitted();
+            return Ok(Submission::Enqueued(rx));
+        }
+        tenant.stats.note_capacity_shed();
         self.shed_total.fetch_add(1, Ordering::Relaxed);
         *self.shed_by_model.lock().unwrap().entry(model.to_string()).or_insert(0) += 1;
+        self.add_pressure(model, prio);
         Ok(Submission::Shed)
     }
 
-    /// Try each scored replica in order; `true` when a queue admitted the
-    /// work, `false` when every queue was at the admission bound (or
-    /// closed by a concurrent retire — closed queues bounce pushes).
-    fn try_route(&self, scored: &[Arc<PodRuntime>], mut work: Work) -> bool {
+    /// Try each scored replica in order.  `admitted` is true when a
+    /// queue took the work — possibly by preempting strictly-lower-
+    /// priority queued entries, which come back in `evicted` for the
+    /// caller to shed explicitly.  Not admitted means every queue was at
+    /// the admission bound for this priority (or closed by a concurrent
+    /// retire — closed queues bounce pushes).
+    fn try_route(&self, scored: &[Arc<PodRuntime>], mut work: Work) -> RouteOutcome {
+        let (lane, prio) = (work.lane, work.prio);
         for pod in scored {
             pod.backlog.fetch_add(1, Ordering::Relaxed);
-            match pod.queue.try_push(work) {
-                Ok(()) => return true,
-                Err(returned) => {
+            match pod.queue.push(lane, prio, work) {
+                Push::Admitted(evicted) => {
+                    // Each evicted entry held a backlog slot on THIS pod.
+                    for _ in &evicted {
+                        pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    return RouteOutcome { admitted: true, evicted };
+                }
+                Push::Rejected(returned) => {
                     pod.backlog.fetch_sub(1, Ordering::Relaxed);
                     work = returned;
                 }
             }
         }
-        false
+        RouteOutcome { admitted: false, evicted: Vec::new() }
     }
 
+    /// Account one preempted queue entry that affected `callers` waiters
+    /// (the leader plus any dedup'd followers — `deliver`'s count, so
+    /// fleet totals match the per-tenant columns and every affected
+    /// caller's `Outcome::Shed` is mirrored in `shed_total`).  Pressure
+    /// is charged once per evicted entry: one *execution's* worth of
+    /// capacity was lost, however many callers had collapsed onto it.
+    fn note_preemption(&self, work: &Work, callers: u64) {
+        self.preempted_total.fetch_add(callers, Ordering::Relaxed);
+        self.shed_total.fetch_add(callers, Ordering::Relaxed);
+        let model = work.fan.model.clone();
+        *self.shed_by_model.lock().unwrap().entry(model.clone()).or_insert(0) += callers;
+        self.add_pressure(&model, work.prio);
+    }
+
+    /// Fold one capacity shed / preemption into the model's
+    /// priority-weighted pressure (the autoscaler's overload signal).
+    fn add_pressure(&self, model: &str, prio: u8) {
+        *self.pressure_by_model.lock().unwrap().entry(model.to_string()).or_insert(0.0) +=
+            1.0 + prio as f64;
+    }
+}
+
+/// Result of routing one admitted-or-not submission across replicas.
+struct RouteOutcome {
+    admitted: bool,
+    /// Lower-priority queue entries preempted to admit the work.
+    evicted: Vec<Work>,
 }
 
 /// One autoscaler step: classify every model from mean backlog per
@@ -1206,23 +1521,28 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
         if active == 0 {
             continue;
         }
-        let shed_now =
-            inner.shed_by_model.lock().unwrap().get(&model).copied().unwrap_or(0);
+        // Priority-weighted shed pressure (capacity sheds + preemptions,
+        // each scaled by 1 + priority rank): losing protected traffic
+        // pushes scale-up harder than losing best-effort traffic, and
+        // per-tenant quota sheds never register here at all.
+        let pressure_now =
+            inner.pressure_by_model.lock().unwrap().get(&model).copied().unwrap_or(0.0);
         let mut pm = sc.per_model.lock().unwrap();
         let st = pm.entry(model.clone()).or_default();
-        let shed_delta = shed_now.saturating_sub(st.last_shed);
-        st.last_shed = shed_now;
+        let pressure_delta = (pressure_now - st.last_pressure).max(0.0);
+        st.last_pressure = pressure_now;
         if st.cooldown > 0 {
             st.cooldown -= 1;
             continue;
         }
         let mean_backlog = backlog_sum as f64 / active as f64;
-        let overloaded = mean_backlog >= a.scale_up_backlog || shed_delta > 0;
-        let idle = !overloaded && mean_backlog <= a.scale_down_backlog && shed_delta == 0;
+        let overloaded = mean_backlog >= a.scale_up_backlog || pressure_delta > 0.0;
+        let idle =
+            !overloaded && mean_backlog <= a.scale_down_backlog && pressure_delta == 0.0;
         match st.gate.decide(overloaded, idle, a.hold_ticks) {
             Some(ScaleDirection::Up) if active < a.max_replicas => {
-                let trigger = if shed_delta > 0 {
-                    format!("shed +{shed_delta}")
+                let trigger = if pressure_delta > 0.0 {
+                    format!("shed pressure +{pressure_delta:.1}")
                 } else {
                     format!("backlog {mean_backlog:.1}/replica")
                 };
@@ -1329,7 +1649,7 @@ fn scale_up(
             }
         };
         let born_ms = inner.epoch.elapsed().as_secs_f64() * 1e3;
-        let pod = Arc::new(new_runtime(plan, executor, &inner.cfg, born_ms));
+        let pod = Arc::new(new_runtime(plan, executor, &inner.cfg, born_ms, &inner.lanes));
         start_workers(inner, &pod);
         {
             let mut reg = inner.registry.write().unwrap();
@@ -1557,8 +1877,16 @@ pub struct FleetReport {
     pub requests: u64,
     /// Executor errors fleet-wide.
     pub errors: u64,
-    /// Requests shed at admission.
+    /// Every shed (quota + capacity + preemptions).
     pub shed: u64,
+    /// Of `shed`: submissions rejected by per-tenant token-bucket
+    /// quotas (policy, not capacity — excluded from autoscaler
+    /// pressure).
+    pub quota_shed: u64,
+    /// Of `shed`: callers whose admitted request was evicted by
+    /// higher-priority work (dedup'd followers each count, matching the
+    /// per-tenant columns).
+    pub preempted: u64,
     /// Submissions answered by in-flight dedup (no fresh execution).
     pub deduped: u64,
     /// Response-cache counters (None when the cache is off).
@@ -1667,6 +1995,45 @@ mod tests {
         let fabric = sim_fabric(&cfg, None);
         assert!(fabric.submit("not-a-model", vec![]).is_err());
         fabric.shutdown();
+    }
+
+    #[test]
+    fn unknown_tenant_is_a_typed_error_not_a_panic() {
+        let cfg = FabricConfig { time_scale: 0.0, ..Default::default() };
+        let fabric = sim_fabric(&cfg, None);
+        let err = fabric.submit_as("nobody", "lenet", vec![1.0; 4]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TenancyError>(),
+                Some(TenancyError::UnknownTenant(id)) if id == "nobody"
+            ),
+            "expected a typed UnknownTenant error, got: {err:#}"
+        );
+        // The default tenant still serves.
+        assert!(matches!(
+            fabric.submit_as(DEFAULT_TENANT, "lenet", vec![1.0; 4]).unwrap(),
+            Submission::Enqueued(_)
+        ));
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn zero_quota_tenant_config_is_rejected_at_spawn() {
+        let mut spec = TenantSpec::new("broken");
+        spec.rate_rps = Some(0.0);
+        let cfg =
+            FabricConfig { time_scale: 0.0, tenants: vec![spec], ..Default::default() };
+        let backend = Backend::new(sim::synthetic_catalog(), Policy::MinLatency);
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        let err = Fabric::place_sim(&backend, cluster, &cfg, None).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TenancyError>(),
+                Some(TenancyError::ZeroQuota(id)) if id == "broken"
+            ),
+            "expected a typed ZeroQuota error, got: {err:#}"
+        );
     }
 
     #[test]

@@ -1,66 +1,220 @@
-//! Bounded MPMC work queue with blocking batch pop — the admission-control
-//! primitive under every fabric pod.
+//! Bounded MPMC work queues — the admission-control primitive under
+//! every fabric pod.
 //!
-//! `try_push` never blocks: when the queue is at capacity the item comes
-//! straight back to the caller, which is what lets the router shed load
-//! at the bound instead of building unbounded backlog (the
-//! tail-latency-vs-drop tradeoff every overloaded serving system must
-//! make explicit).
+//! Two layers live here:
+//!
+//! - [`TenantQueue`] — the multi-tenant queue the fabric actually runs
+//!   on: one FIFO *lane* per tenant under a shared capacity bound, with
+//!   per-lane slot caps (a tenant's max share of the queue),
+//!   **weighted-fair batch draining** across lanes (smooth weighted
+//!   round-robin, so a hot tenant cannot starve the rest), and
+//!   **priority-aware shedding**: a push into a full queue preempts the
+//!   newest strictly-lower-priority queued item instead of bouncing the
+//!   newcomer — under pressure the lowest-value work is dropped first.
+//! - [`BoundedQueue`] — the original single-lane FIFO, now a thin
+//!   wrapper over a one-lane [`TenantQueue`].  `try_push` never blocks:
+//!   when the queue is at capacity the item comes straight back to the
+//!   caller, which is what lets the router shed load at the bound
+//!   instead of building unbounded backlog.
+//!
+//! In both layers `Some(batch)` from a pop is always non-empty and
+//! `None` means closed **and** drained — the unambiguous worker-shutdown
+//! signal (workers block, never spin).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// A fixed-capacity queue shared between the router (producer) and one
-/// pod's batcher workers (consumers).
+/// Per-lane (per-tenant) configuration of a [`TenantQueue`].
+#[derive(Debug, Clone, Copy)]
+pub struct LaneConfig {
+    /// Drain share of this lane relative to the other lanes: while
+    /// several lanes are backlogged, batches pull items from them in
+    /// proportion to their weights.
+    pub weight: u32,
+    /// Hard cap on queued items from this lane — the tenant's maximum
+    /// share of the bounded queue.  At the cap, a push from this lane
+    /// may only displace the lane's own lower-priority work.
+    pub max_slots: usize,
+}
+
+/// Verdict of a [`TenantQueue::push`].
 #[derive(Debug)]
-pub struct BoundedQueue<T> {
-    state: Mutex<State<T>>,
+pub enum Push<T> {
+    /// The item was queued.  Any items carried inside were **preempted**
+    /// — evicted from the queue (each strictly lower priority than the
+    /// newcomer, lowest and newest first) to make room; the caller owns
+    /// delivering their shed notification.
+    Admitted(Vec<T>),
+    /// No room at this item's priority: the queue (or the item's lane
+    /// cap) is full of equal-or-higher-priority work, or the queue is
+    /// closed.  The item comes back to the caller, which sheds or
+    /// retries elsewhere.
+    Rejected(T),
+}
+
+#[derive(Debug)]
+struct Lane<T> {
+    /// FIFO of `(priority, admission seq, item)` — arrival order within
+    /// a lane is preserved; priority only governs eviction.
+    items: VecDeque<(u8, u64, T)>,
+    cfg: LaneConfig,
+    /// Smooth-weighted-round-robin credit (the nginx SWRR scheme).
+    current: i64,
+}
+
+#[derive(Debug)]
+struct TqState<T> {
+    lanes: Vec<Lane<T>>,
+    /// Total queued items across lanes (≤ `capacity`).
+    len: usize,
+    capacity: usize,
+    closed: bool,
+    next_seq: u64,
+}
+
+/// A fixed-capacity multi-lane queue shared between the router
+/// (producer) and one pod's batcher workers (consumers).  See the
+/// module docs for the fairness and shedding semantics.
+#[derive(Debug)]
+pub struct TenantQueue<T> {
+    state: Mutex<TqState<T>>,
     not_empty: Condvar,
 }
 
-#[derive(Debug)]
-struct State<T> {
-    items: VecDeque<T>,
-    capacity: usize,
-    closed: bool,
+/// Find the eviction victim among `lanes` for an incoming item of
+/// priority `below`: the queued item with the lowest priority strictly
+/// under `below`; among equals, the newest (highest admission seq), so
+/// older admitted work survives longest.  `only` restricts the scan to
+/// one lane (the within-lane-cap case).
+fn find_victim<T>(lanes: &[Lane<T>], only: Option<usize>, below: u8) -> Option<(usize, usize)> {
+    let mut best: Option<(u8, u64, usize, usize)> = None;
+    for (li, lane) in lanes.iter().enumerate() {
+        if only.map_or(false, |o| o != li) {
+            continue;
+        }
+        for (pos, (p, seq, _)) in lane.items.iter().enumerate() {
+            if *p >= below {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bp, bseq, _, _)) => *p < *bp || (*p == *bp && *seq > *bseq),
+            };
+            if better {
+                best = Some((*p, *seq, li, pos));
+            }
+        }
+    }
+    best.map(|(_, _, li, pos)| (li, pos))
 }
 
-impl<T> BoundedQueue<T> {
-    /// Create a queue admitting at most `capacity` queued items.
-    pub fn new(capacity: usize) -> BoundedQueue<T> {
+/// One smooth-weighted-round-robin selection among non-empty lanes:
+/// every non-empty lane earns its weight, the richest lane wins (ties
+/// to the lowest index) and pays the total back — over any window where
+/// a set of lanes stays backlogged, picks are proportional to weights.
+fn pick_lane<T>(lanes: &mut [Lane<T>]) -> Option<usize> {
+    let total: i64 =
+        lanes.iter().filter(|l| !l.items.is_empty()).map(|l| l.cfg.weight as i64).sum();
+    if total == 0 {
+        return None;
+    }
+    for l in lanes.iter_mut() {
+        if !l.items.is_empty() {
+            l.current += l.cfg.weight as i64;
+        }
+    }
+    let mut best: Option<usize> = None;
+    for i in 0..lanes.len() {
+        if lanes[i].items.is_empty() {
+            continue;
+        }
+        if best.map_or(true, |b| lanes[i].current > lanes[b].current) {
+            best = Some(i);
+        }
+    }
+    if let Some(b) = best {
+        lanes[b].current -= total;
+    }
+    best
+}
+
+impl<T> TenantQueue<T> {
+    /// Create a queue admitting at most `capacity` items total, with one
+    /// lane per entry of `lanes` (weights ≥ 1, per-lane slot caps ≥ 1).
+    pub fn new(capacity: usize, lanes: Vec<LaneConfig>) -> TenantQueue<T> {
         assert!(capacity > 0, "queue capacity must be positive");
-        BoundedQueue {
-            state: Mutex::new(State {
-                items: VecDeque::with_capacity(capacity),
-                capacity,
-                closed: false,
-            }),
+        assert!(!lanes.is_empty(), "a tenant queue needs at least one lane");
+        let lanes = lanes
+            .into_iter()
+            .map(|cfg| {
+                assert!(cfg.weight >= 1, "lane weight must be >= 1");
+                assert!(cfg.max_slots >= 1, "lane max_slots must be >= 1");
+                Lane { items: VecDeque::new(), cfg, current: 0 }
+            })
+            .collect();
+        TenantQueue {
+            state: Mutex::new(TqState { lanes, len: 0, capacity, closed: false, next_seq: 0 }),
             not_empty: Condvar::new(),
         }
     }
 
-    /// Admit an item, or hand it back if the queue is full or closed
-    /// (the caller then sheds or retries elsewhere).
-    pub fn try_push(&self, item: T) -> Result<(), T> {
+    /// Admit an item into `lane` at `prio`.  When the lane is at its
+    /// slot cap, or the whole queue is at capacity, the push may
+    /// *preempt* strictly-lower-priority queued work (newest-of-lowest
+    /// first) — the evicted items come back in [`Push::Admitted`] so the
+    /// caller can shed them explicitly.  With nothing lower-priority to
+    /// displace the item itself is [`Push::Rejected`].
+    pub fn push(&self, lane: usize, prio: u8, item: T) -> Push<T> {
         let mut g = self.state.lock().unwrap();
-        if g.closed || g.items.len() >= g.capacity {
-            return Err(item);
+        if g.closed {
+            return Push::Rejected(item);
         }
-        g.items.push_back(item);
+        assert!(lane < g.lanes.len(), "lane {lane} out of range");
+        let mut evicted = Vec::new();
+        let mut evict = |g: &mut TqState<T>, li: usize, pos: usize, out: &mut Vec<T>| {
+            let (_, _, v) = g.lanes[li].items.remove(pos).expect("victim position valid");
+            g.len -= 1;
+            if g.lanes[li].items.is_empty() {
+                // Same rule as the pop path: a drained lane re-enters
+                // the rotation neutral — stale credit must not buy its
+                // next burst a disproportionate share.
+                g.lanes[li].current = 0;
+            }
+            out.push(v);
+        };
+        if g.lanes[lane].items.len() >= g.lanes[lane].cfg.max_slots {
+            // Over the tenant's share: it may only displace its own
+            // lower-priority work, never another tenant's.
+            let Some((li, pos)) = find_victim(&g.lanes, Some(lane), prio) else {
+                return Push::Rejected(item);
+            };
+            evict(&mut g, li, pos, &mut evicted);
+        }
+        if g.len >= g.capacity {
+            let Some((li, pos)) = find_victim(&g.lanes, None, prio) else {
+                // Full of equal-or-higher-priority work; nothing was
+                // displaced above (a lane-cap eviction would have freed
+                // a slot), so no state changed.
+                return Push::Rejected(item);
+            };
+            evict(&mut g, li, pos, &mut evicted);
+        }
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.lanes[lane].items.push_back((prio, seq, item));
+        g.len += 1;
         drop(g);
         self.not_empty.notify_one();
-        Ok(())
+        Push::Admitted(evicted)
     }
 
     /// Block until at least one item is available, then drain up to
-    /// `max` items in one lock take (the dynamic-batching amortization).
+    /// `max` items in one lock take, selected **weighted-fair** across
+    /// non-empty lanes (FIFO within each lane).
     ///
     /// `Some(batch)` is always non-empty; `None` means the queue is
     /// closed **and** drained — the unambiguous worker-shutdown signal.
-    /// Spurious condvar wakes never escape this loop, so a worker can
-    /// never observe an "empty batch" and spin: it either blocks here or
-    /// exits on `None`.
     pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
         self.pop_batch_linger(max, Duration::ZERO)
     }
@@ -69,26 +223,22 @@ impl<T> BoundedQueue<T> {
     /// the first item arrives, a consumer facing a less-than-`max`
     /// backlog waits up to `linger` for the batch to fill before
     /// dispatching, trading a bounded latency add for a fuller fused
-    /// dispatch (the batch-coalescing lever `FabricConfig::
-    /// batch_linger_ms` exposes; `Duration::ZERO` is exactly the old
-    /// drain-what's-there behavior).
-    ///
-    /// The linger never outlives shutdown: closing the queue cuts it
-    /// short, and whatever is queued is returned immediately.  As with
-    /// `pop_batch`, `Some(batch)` is always non-empty and `None` means
-    /// closed **and** drained.
+    /// dispatch.  The linger never outlives shutdown: closing the queue
+    /// cuts it short and whatever is queued is returned immediately.
     pub fn pop_batch_linger(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.state.lock().unwrap();
         loop {
-            if !g.items.is_empty() {
-                if g.items.len() < max && !g.closed && !linger.is_zero() {
+            if g.len > 0 {
+                if g.len < max && !g.closed && !linger.is_zero() {
                     // Coalesce: hold the dispatch back (bounded) while
                     // the queue fills toward a full batch.
                     let deadline = Instant::now() + linger;
-                    while g.items.len() < max && !g.closed {
+                    while g.len < max && !g.closed {
                         let now = Instant::now();
-                        let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                        let Some(left) =
+                            deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+                        else {
                             break;
                         };
                         g = self.not_empty.wait_timeout(g, left).unwrap().0;
@@ -97,14 +247,29 @@ impl<T> BoundedQueue<T> {
                 // The lock is released during each timed wait, so a
                 // sibling consumer may have drained the queue under us
                 // — re-check before draining.
-                if g.items.is_empty() {
+                if g.len == 0 {
                     if g.closed {
                         return None;
                     }
                     continue;
                 }
-                let n = max.min(g.items.len());
-                return Some(g.items.drain(..n).collect());
+                let n = max.min(g.len);
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let Some(li) = pick_lane(&mut g.lanes) else { break };
+                    let (_, _, item) =
+                        g.lanes[li].items.pop_front().expect("picked lane non-empty");
+                    if g.lanes[li].items.is_empty() {
+                        // A drained lane re-enters the rotation neutral:
+                        // stale credit must not buy its next burst a
+                        // disproportionate share.
+                        g.lanes[li].current = 0;
+                    }
+                    g.len -= 1;
+                    out.push(item);
+                }
+                debug_assert!(!out.is_empty(), "len > 0 guarantees at least one pick");
+                return Some(out);
             }
             if g.closed {
                 return None;
@@ -114,9 +279,14 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Number of items currently queued.
+    /// Total items currently queued across all lanes.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.state.lock().unwrap().len
+    }
+
+    /// Items currently queued in one lane.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.state.lock().unwrap().lanes[lane].items.len()
     }
 
     /// Whether the queue is currently empty.
@@ -129,6 +299,70 @@ impl<T> BoundedQueue<T> {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.not_empty.notify_all();
+    }
+}
+
+/// A fixed-capacity single-lane FIFO queue — a one-lane
+/// [`TenantQueue`] with uniform priority, preserved as the simple
+/// primitive (and public API) the multi-tenant queue generalizes.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    inner: TenantQueue<T>,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue admitting at most `capacity` queued items.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: TenantQueue::new(capacity, vec![LaneConfig { weight: 1, max_slots: capacity }]),
+        }
+    }
+
+    /// Admit an item, or hand it back if the queue is full or closed
+    /// (the caller then sheds or retries elsewhere).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        match self.inner.push(0, 0, item) {
+            Push::Admitted(evicted) => {
+                debug_assert!(evicted.is_empty(), "uniform priority never preempts");
+                Ok(())
+            }
+            Push::Rejected(item) => Err(item),
+        }
+    }
+
+    /// Block until at least one item is available, then drain up to
+    /// `max` items in one lock take (the dynamic-batching amortization).
+    ///
+    /// `Some(batch)` is always non-empty; `None` means the queue is
+    /// closed **and** drained — the unambiguous worker-shutdown signal.
+    /// Spurious condvar wakes never escape this loop, so a worker can
+    /// never observe an "empty batch" and spin: it either blocks here or
+    /// exits on `None`.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
+        self.inner.pop_batch(max)
+    }
+
+    /// [`pop_batch`](Self::pop_batch) with an optional *linger* (see
+    /// [`TenantQueue::pop_batch_linger`]); `Duration::ZERO` is exactly
+    /// the drain-what's-there behavior.
+    pub fn pop_batch_linger(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
+        self.inner.pop_batch_linger(max, linger)
+    }
+
+    /// Number of items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Close the queue: subsequent pushes bounce, and workers drain the
+    /// remaining items then receive the shutdown signal.
+    pub fn close(&self) {
+        self.inner.close()
     }
 }
 
@@ -280,5 +514,133 @@ mod tests {
         q.close();
         let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
         assert_eq!(total, 800);
+    }
+
+    // ── TenantQueue: weighted-fair drain + priority shedding ────────────
+
+    fn lanes(specs: &[(u32, usize)]) -> Vec<LaneConfig> {
+        specs.iter().map(|&(weight, max_slots)| LaneConfig { weight, max_slots }).collect()
+    }
+
+    fn admit<T>(q: &TenantQueue<T>, lane: usize, prio: u8, item: T) {
+        match q.push(lane, prio, item) {
+            Push::Admitted(ev) => assert!(ev.is_empty(), "unexpected preemption"),
+            Push::Rejected(_) => panic!("push must admit"),
+        }
+    }
+
+    #[test]
+    fn weighted_fair_drain_is_exact_while_lanes_stay_backlogged() {
+        // Lanes weighted 3:1, both kept full: any window of 4 picks must
+        // contain exactly 3 from lane 0 and 1 from lane 1.
+        let q = TenantQueue::new(64, lanes(&[(3, 32), (1, 32)]));
+        for i in 0..24 {
+            admit(&q, 0, 1, (0, i));
+            admit(&q, 1, 1, (1, i));
+        }
+        let mut counts = [0usize; 2];
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            for (lane, _) in q.pop_batch(4).unwrap() {
+                counts[lane] += 1;
+                order.push(lane);
+            }
+        }
+        assert_eq!(counts, [12, 4], "3:1 weights must yield exact 3:1 service: {order:?}");
+        // FIFO within each lane.
+        let rest = q.pop_batch(64).unwrap();
+        let mut last = [-1i64; 2];
+        for (lane, seq) in rest {
+            assert!(seq as i64 > last[lane], "lane {lane} FIFO violated");
+            last[lane] = seq as i64;
+        }
+    }
+
+    #[test]
+    fn hot_lane_cannot_starve_a_backlogged_cold_lane() {
+        // 10:1 offered load into equal weights: while both lanes hold
+        // items, service is split evenly — the fairness guarantee.
+        let q = TenantQueue::new(64, lanes(&[(1, 60), (1, 60)]));
+        for i in 0..40 {
+            admit(&q, 0, 1, (0, i)); // hot
+            if i % 10 == 0 {
+                admit(&q, 1, 1, (1, i)); // cold
+            }
+        }
+        // First 8 picks: 4 hot, 4 cold (cold has 4 items queued).
+        let mut counts = [0usize; 2];
+        for (lane, _) in q.pop_batch(8).unwrap() {
+            counts[lane] += 1;
+        }
+        assert_eq!(counts, [4, 4], "equal weights → equal service while backlogged");
+    }
+
+    #[test]
+    fn lane_cap_bounds_a_tenants_queue_share() {
+        let q = TenantQueue::new(8, lanes(&[(1, 2), (1, 8)]));
+        admit(&q, 0, 1, 0);
+        admit(&q, 0, 1, 1);
+        assert!(
+            matches!(q.push(0, 1, 2), Push::Rejected(2)),
+            "lane at its slot cap must bounce (queue itself has room)"
+        );
+        admit(&q, 1, 1, 10);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.lane_len(0), 2);
+    }
+
+    #[test]
+    fn full_queue_preempts_lowest_priority_newest_first() {
+        let q = TenantQueue::new(4, lanes(&[(1, 4), (1, 4)]));
+        admit(&q, 0, 0, "low-a");
+        admit(&q, 0, 0, "low-b");
+        admit(&q, 1, 1, "std-a");
+        admit(&q, 1, 1, "std-b");
+        // High-priority push into the full queue: the NEWEST of the
+        // LOWEST class goes first.
+        match q.push(1, 2, "high-a") {
+            Push::Admitted(ev) => assert_eq!(ev, vec!["low-b"]),
+            Push::Rejected(_) => panic!("high priority must preempt"),
+        }
+        match q.push(1, 2, "high-b") {
+            Push::Admitted(ev) => assert_eq!(ev, vec!["low-a"], "lows evicted before stds"),
+            Push::Rejected(_) => panic!("high priority must preempt"),
+        }
+        match q.push(1, 2, "high-c") {
+            Push::Admitted(ev) => assert_eq!(ev, vec!["std-b"], "then the newest standard"),
+            Push::Rejected(_) => panic!("high priority must preempt"),
+        }
+        // Equal priority never preempts equal priority.
+        assert!(matches!(q.push(0, 1, "std-c"), Push::Rejected("std-c")));
+        // And nothing ever preempts the top class.
+        let drained: Vec<&str> = std::iter::from_fn(|| q.pop_batch(8)).flatten().take(4).collect();
+        assert!(drained.contains(&"high-a") && drained.contains(&"high-b"));
+    }
+
+    #[test]
+    fn lane_cap_preemption_only_displaces_own_lower_priority_work() {
+        let q = TenantQueue::new(8, lanes(&[(1, 2), (1, 8)]));
+        admit(&q, 0, 0, "mine-low");
+        admit(&q, 0, 2, "mine-high");
+        admit(&q, 1, 0, "other-low");
+        // Lane 0 at its cap: its high push may evict only ITS low item.
+        match q.push(0, 2, "mine-high-2") {
+            Push::Admitted(ev) => assert_eq!(ev, vec!["mine-low"]),
+            Push::Rejected(_) => panic!("own lower-priority work must yield"),
+        }
+        assert_eq!(q.lane_len(1), 1, "the other tenant's work is untouched");
+        // At the cap with nothing of its own to displace: rejected even
+        // though another lane holds lower-priority work.
+        assert!(matches!(q.push(0, 2, "mine-high-3"), Push::Rejected(_)));
+    }
+
+    #[test]
+    fn closed_tenant_queue_rejects_and_drains() {
+        let q = TenantQueue::new(4, lanes(&[(1, 4)]));
+        admit(&q, 0, 1, 7);
+        q.close();
+        assert!(matches!(q.push(0, 9, 8), Push::Rejected(8)), "closed bounces all pushes");
+        assert_eq!(q.pop_batch(4), Some(vec![7]), "backlog survives close");
+        assert_eq!(q.pop_batch(4), None, "then the shutdown signal");
     }
 }

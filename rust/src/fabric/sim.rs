@@ -228,6 +228,16 @@ pub fn synthetic_catalog() -> Vec<Artifact> {
     out
 }
 
+/// [`synthetic_catalog`] restricted to the named models (all of them
+/// when `models` is empty) — the filter every single-model fabric test
+/// and bench drive performs, in one place.
+pub fn synthetic_catalog_for(models: &[&str]) -> Vec<Artifact> {
+    synthetic_catalog()
+        .into_iter()
+        .filter(|a| models.is_empty() || models.contains(&a.manifest.model.as_str()))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +252,14 @@ mod tests {
             assert!(a.manifest.weights_bytes > 0);
             assert_eq!(a.manifest.input_shape.len(), 4, "NHWC");
         }
+    }
+
+    #[test]
+    fn catalog_filter_selects_models() {
+        let c = synthetic_catalog_for(&["lenet"]);
+        assert!(!c.is_empty());
+        assert!(c.iter().all(|a| a.manifest.model == "lenet"));
+        assert_eq!(synthetic_catalog_for(&[]).len(), synthetic_catalog().len());
     }
 
     #[test]

@@ -1,0 +1,682 @@
+//! Multi-tenant admission — tenant identity, quotas, priority classes,
+//! and the deterministic scenarios that prove the fairness guarantees.
+//!
+//! TF2AIF's premise is one AI function served to *many* consumers across
+//! the continuum; the AIaaS-on-B5G line of work makes multi-tenant
+//! service delivery the explicit operating model.  This module gives the
+//! fabric its tenancy vocabulary:
+//!
+//! - [`TenantSpec`] — a tenant's identity plus its three levers: a
+//!   **weight** (its fair share of every pod's drain bandwidth), a
+//!   [`Priority`] class (who gets shed first under pressure), and an
+//!   optional **token-bucket quota** (rate + burst, enforced at
+//!   admission *before* any capacity check).
+//! - [`parse_tenant_specs`] — the `--tenants` CLI grammar, rejecting
+//!   malformed entries with a typed [`TenancyError`] (never a panic).
+//! - `TenantRegistry` / `TenantState` (crate-internal) — the runtime
+//!   side: one lane index per tenant into every pod's
+//!   [`TenantQueue`](super::queue::TenantQueue), a live token bucket,
+//!   and a [`TenantCollector`] counting every verdict.
+//! - [`run_scenarios`] — the seedable scenario driver behind both the
+//!   `rust/tests/integration_tenancy.rs` suite and the `tf2aif bench`
+//!   fairness verdicts: quota enforcement exact at the burst bound,
+//!   weighted-fair drain within tolerance under a 10:1 hot-tenant load,
+//!   and shedding strictly by ascending priority.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::{TenantCollector, TenantSnapshot};
+use crate::serving::Request;
+use crate::util::rng::Rng;
+use crate::util::stats::Series;
+
+use super::control::TokenBucket;
+use super::queue::{LaneConfig, Push, TenantQueue};
+use super::sim::SimPod;
+
+/// The tenant id every unattributed submission is accounted under (and
+/// the only tenant a fabric spawned with no [`TenantSpec`]s has).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Shed/evict class of a tenant's traffic.  Under pressure the fabric
+/// drops work in ascending priority order: `Low` is preempted first,
+/// `High` last — and never by anything beneath it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Best-effort: first to be shed or preempted.
+    Low,
+    /// The default class.
+    Standard,
+    /// Protected: sheds only to make room for nothing (top class).
+    High,
+}
+
+impl Priority {
+    /// Numeric rank (ascending value: `Low` = 0, `High` = 2) — the
+    /// eviction ordering key inside the queues.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Standard => 1,
+            Priority::High => 2,
+        }
+    }
+
+    /// Parse `low` / `standard` / `high` (or their ranks `0`/`1`/`2`).
+    pub fn parse(s: &str) -> Result<Priority, TenancyError> {
+        match s {
+            "low" | "0" => Ok(Priority::Low),
+            "standard" | "std" | "1" => Ok(Priority::Standard),
+            "high" | "2" => Ok(Priority::High),
+            other => Err(TenancyError::Malformed {
+                entry: other.to_string(),
+                reason: "priority must be low, standard or high".to_string(),
+            }),
+        }
+    }
+
+    /// Lower-case class name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Standard => "standard",
+            Priority::High => "high",
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tenant's configuration — identity plus the fairness levers.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Tenant identity; requests carry it via
+    /// [`Fabric::submit_as`](super::Fabric::submit_as).
+    pub id: String,
+    /// Weighted-fair drain share relative to the other tenants (≥ 1).
+    pub weight: u32,
+    /// Shed/evict class.
+    pub priority: Priority,
+    /// Token-bucket refill rate, requests/second; `None` = unlimited.
+    /// A configured rate must be positive — a tenant with a zero quota
+    /// could never admit anything and is rejected as a config error.
+    pub rate_rps: Option<f64>,
+    /// Token-bucket depth: the instantaneous burst allowance (≥ 1;
+    /// meaningful only with `rate_rps` set).
+    pub burst: f64,
+    /// Maximum fraction of each pod queue this tenant may occupy, in
+    /// (0, 1].  At the cap a tenant may only displace its *own*
+    /// lower-priority queued work, never another tenant's.
+    pub max_queue_share: f64,
+}
+
+impl TenantSpec {
+    /// A spec with the neutral defaults: weight 1, `Standard` priority,
+    /// no quota, full queue share.
+    pub fn new(id: impl Into<String>) -> TenantSpec {
+        TenantSpec {
+            id: id.into(),
+            weight: 1,
+            priority: Priority::Standard,
+            rate_rps: None,
+            burst: 1.0,
+            max_queue_share: 1.0,
+        }
+    }
+
+    /// Validate the spec's invariants (typed errors, never panics).
+    pub fn validate(&self) -> Result<(), TenancyError> {
+        if self.id.is_empty() {
+            return Err(TenancyError::Malformed {
+                entry: String::new(),
+                reason: "tenant id must be non-empty".to_string(),
+            });
+        }
+        if self.weight == 0 {
+            return Err(TenancyError::ZeroWeight(self.id.clone()));
+        }
+        if let Some(rate) = self.rate_rps {
+            if !(rate > 0.0) {
+                return Err(TenancyError::ZeroQuota(self.id.clone()));
+            }
+            if !(self.burst >= 1.0) {
+                return Err(TenancyError::Malformed {
+                    entry: self.id.clone(),
+                    reason: format!("burst must be >= 1, got {}", self.burst),
+                });
+            }
+        }
+        if !(self.max_queue_share > 0.0 && self.max_queue_share <= 1.0) {
+            return Err(TenancyError::BadShare(self.id.clone()));
+        }
+        Ok(())
+    }
+}
+
+/// Typed tenancy failure — configuration and admission errors surface
+/// as values (downcastable through `anyhow`), never as panics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TenancyError {
+    /// `--tenants` was given but contained no tenant entries.
+    EmptySpec,
+    /// An entry or field failed to parse; the reason says what and why.
+    Malformed {
+        /// The offending entry (or field) as written.
+        entry: String,
+        /// What was wrong with it.
+        reason: String,
+    },
+    /// The same tenant id appeared twice.
+    DuplicateTenant(String),
+    /// A tenant was configured with weight 0 (it could never be served).
+    ZeroWeight(String),
+    /// A tenant was configured with a rate quota of zero (it could
+    /// never admit a request).
+    ZeroQuota(String),
+    /// A tenant's queue share was outside (0, 1].
+    BadShare(String),
+    /// A submission named a tenant the fabric does not know.
+    UnknownTenant(String),
+}
+
+impl fmt::Display for TenancyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TenancyError::EmptySpec => write!(f, "tenant spec is empty"),
+            TenancyError::Malformed { entry, reason } => {
+                write!(f, "malformed tenant spec {entry:?}: {reason}")
+            }
+            TenancyError::DuplicateTenant(id) => write!(f, "duplicate tenant {id:?}"),
+            TenancyError::ZeroWeight(id) => {
+                write!(f, "tenant {id:?}: weight must be >= 1 (0 could never be served)")
+            }
+            TenancyError::ZeroQuota(id) => write!(
+                f,
+                "tenant {id:?}: rate quota must be positive (0 could never admit a request)"
+            ),
+            TenancyError::BadShare(id) => {
+                write!(f, "tenant {id:?}: queue share must be in (0, 1]")
+            }
+            TenancyError::UnknownTenant(id) => write!(f, "unknown tenant {id:?}"),
+        }
+    }
+}
+
+impl std::error::Error for TenancyError {}
+
+/// Parse the `--tenants` grammar: comma-separated tenants, each
+/// `name[:k=v]...` with keys `w` (weight), `p` (priority: low /
+/// standard / high), `rate` (token-bucket requests/second), `burst`
+/// (bucket depth; defaults to `ceil(rate)`), `share` (max queue
+/// fraction).  `default_rate` fills in `rate` for entries that omit it
+/// (`None` = unlimited); `default_share` likewise for `share`.
+///
+/// ```
+/// use tf2aif::fabric::tenancy::{parse_tenant_specs, Priority};
+/// let specs =
+///     parse_tenant_specs("gold:w=4:p=high:rate=100,free:w=1:p=low", None, 1.0).unwrap();
+/// assert_eq!(specs.len(), 2);
+/// assert_eq!(specs[0].weight, 4);
+/// assert_eq!(specs[0].priority, Priority::High);
+/// assert_eq!(specs[1].rate_rps, None);
+/// ```
+pub fn parse_tenant_specs(
+    spec: &str,
+    default_rate: Option<f64>,
+    default_share: f64,
+) -> Result<Vec<TenantSpec>, TenancyError> {
+    let mut out: Vec<TenantSpec> = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut fields = entry.split(':');
+        let name = fields.next().unwrap_or("").trim();
+        let mut t = TenantSpec::new(name);
+        t.max_queue_share = default_share;
+        let mut explicit_burst = false;
+        for field in fields {
+            let Some((k, v)) = field.split_once('=') else {
+                return Err(TenancyError::Malformed {
+                    entry: entry.to_string(),
+                    reason: format!("field {field:?} is not key=value"),
+                });
+            };
+            let bad = |reason: String| TenancyError::Malformed {
+                entry: entry.to_string(),
+                reason,
+            };
+            match k.trim() {
+                "w" | "weight" => {
+                    t.weight = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(format!("bad weight {v:?}")))?;
+                }
+                "p" | "prio" | "priority" => t.priority = Priority::parse(v.trim())?,
+                "rate" => {
+                    t.rate_rps = Some(
+                        v.trim().parse().map_err(|_| bad(format!("bad rate {v:?}")))?,
+                    );
+                }
+                "burst" => {
+                    t.burst =
+                        v.trim().parse().map_err(|_| bad(format!("bad burst {v:?}")))?;
+                    explicit_burst = true;
+                }
+                "share" => {
+                    t.max_queue_share =
+                        v.trim().parse().map_err(|_| bad(format!("bad share {v:?}")))?;
+                }
+                other => return Err(bad(format!("unknown field {other:?}"))),
+            }
+        }
+        if t.rate_rps.is_none() {
+            t.rate_rps = default_rate;
+        }
+        if let Some(rate) = t.rate_rps {
+            if !explicit_burst {
+                t.burst = rate.ceil().max(1.0);
+            }
+        }
+        if out.iter().any(|o| o.id == t.id) {
+            return Err(TenancyError::DuplicateTenant(t.id));
+        }
+        t.validate()?;
+        out.push(t);
+    }
+    if out.is_empty() {
+        return Err(TenancyError::EmptySpec);
+    }
+    Ok(out)
+}
+
+/// Runtime state of one tenant inside a fabric: its spec, its lane
+/// index into every pod queue, its live token bucket, and its counters.
+pub(crate) struct TenantState {
+    pub(crate) spec: TenantSpec,
+    /// Lane index of this tenant in every pod's `TenantQueue`.
+    pub(crate) lane: usize,
+    bucket: Option<Mutex<TokenBucket>>,
+    pub(crate) stats: TenantCollector,
+}
+
+impl TenantState {
+    fn new(spec: TenantSpec, lane: usize) -> TenantState {
+        let bucket =
+            spec.rate_rps.map(|rate| Mutex::new(TokenBucket::new(rate, spec.burst)));
+        TenantState { spec, lane, bucket, stats: TenantCollector::default() }
+    }
+
+    /// Take one quota token; `true` for unlimited tenants.
+    pub(crate) fn try_admit_quota(&self) -> bool {
+        self.bucket.as_ref().map_or(true, |b| b.lock().unwrap().try_take())
+    }
+}
+
+/// The fabric's tenant set: specs resolved to lanes, plus the implicit
+/// [`DEFAULT_TENANT`] when the configuration did not define one.
+pub(crate) struct TenantRegistry {
+    tenants: Vec<Arc<TenantState>>,
+    by_id: BTreeMap<String, usize>,
+}
+
+impl TenantRegistry {
+    /// Build the registry, validating every spec (typed errors).  The
+    /// default tenant is appended when absent so anonymous
+    /// [`Fabric::submit`](super::Fabric::submit) traffic always has a
+    /// home.
+    pub(crate) fn build(specs: &[TenantSpec]) -> Result<TenantRegistry, TenancyError> {
+        let mut all: Vec<TenantSpec> = specs.to_vec();
+        if !all.iter().any(|s| s.id == DEFAULT_TENANT) {
+            all.push(TenantSpec::new(DEFAULT_TENANT));
+        }
+        let mut tenants = Vec::with_capacity(all.len());
+        let mut by_id = BTreeMap::new();
+        for (lane, spec) in all.into_iter().enumerate() {
+            spec.validate()?;
+            if by_id.insert(spec.id.clone(), lane).is_some() {
+                return Err(TenancyError::DuplicateTenant(spec.id));
+            }
+            tenants.push(Arc::new(TenantState::new(spec, lane)));
+        }
+        Ok(TenantRegistry { tenants, by_id })
+    }
+
+    /// Resolve a tenant id.
+    pub(crate) fn get(&self, id: &str) -> Option<&Arc<TenantState>> {
+        self.by_id.get(id).map(|&i| &self.tenants[i])
+    }
+
+    /// Every tenant, in lane order.
+    pub(crate) fn all(&self) -> &[Arc<TenantState>] {
+        &self.tenants
+    }
+
+    /// Lane configurations for a pod queue of `queue_capacity`: one lane
+    /// per tenant, slots capped at its configured queue share (never
+    /// below one slot).
+    pub(crate) fn lane_configs(&self, queue_capacity: usize) -> Vec<LaneConfig> {
+        self.tenants
+            .iter()
+            .map(|t| LaneConfig {
+                weight: t.spec.weight,
+                max_slots: ((queue_capacity as f64 * t.spec.max_queue_share).floor()
+                    as usize)
+                    .clamp(1, queue_capacity),
+            })
+            .collect()
+    }
+}
+
+/// One tenant's row in the fabric report: configuration plus every
+/// admission verdict and the completed-latency percentiles.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant identity.
+    pub id: String,
+    /// Weighted-fair drain share.
+    pub weight: u32,
+    /// Shed/evict class.
+    pub priority: Priority,
+    /// Submissions offered.
+    pub submitted: u64,
+    /// Submissions admitted (enqueued, cache-answered, or dedup'd).
+    pub admitted: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests that reached an executor and failed there.
+    pub failed: u64,
+    /// Submissions shed by the tenant's token-bucket quota.
+    pub shed_quota: u64,
+    /// Submissions shed at the admission bound (no queue room at the
+    /// tenant's priority).
+    pub shed_capacity: u64,
+    /// Admitted requests preempted by higher-priority work.
+    pub preempted: u64,
+    /// Median end-to-end latency of completed requests, ms (0 if none).
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, ms (0 if none).
+    pub p99_ms: f64,
+}
+
+impl TenantReport {
+    pub(crate) fn from_state(state: &TenantState) -> TenantReport {
+        let snap: TenantSnapshot = state.stats.snapshot();
+        let mut e2e: Series = snap.e2e_ms;
+        let (p50_ms, p99_ms) = if e2e.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (e2e.percentile(50.0), e2e.percentile(99.0))
+        };
+        TenantReport {
+            id: state.spec.id.clone(),
+            weight: state.spec.weight,
+            priority: state.spec.priority,
+            submitted: snap.submitted,
+            admitted: snap.admitted,
+            completed: snap.completed,
+            failed: snap.failed,
+            shed_quota: snap.shed_quota,
+            shed_capacity: snap.shed_capacity,
+            preempted: snap.preempted,
+            p50_ms,
+            p99_ms,
+        }
+    }
+}
+
+/// Verdicts of the deterministic tenancy scenarios — the fairness
+/// acceptance criteria as machine-checkable booleans (`tf2aif bench`
+/// writes them into `BENCH_fabric.json` v3; CI gates on
+/// `fair_share_within_tolerance`).
+#[derive(Debug, Clone)]
+pub struct ScenarioVerdicts {
+    /// Items served per lane in the weighted-fair scenario, in
+    /// `(tenant, weight, served)` form.
+    pub served_per_lane: Vec<(String, u32, u64)>,
+    /// Worst relative error between a lane's observed drain share and
+    /// its configured weight share.
+    pub max_share_error: f64,
+    /// Every lane's drain share landed within 10% of its weight share
+    /// under the 10:1 hot-tenant load.
+    pub fair_share_within_tolerance: bool,
+    /// A burst-bound token bucket admitted exactly its burst.
+    pub quota_exact: bool,
+    /// Preemptions came out strictly by ascending priority (all `Low`
+    /// before any `Standard`; `High` never evicted; equal priority
+    /// never preempted).
+    pub shed_priority_ordered: bool,
+}
+
+/// Run the deterministic tenancy scenarios: a seedable multi-tenant
+/// `SimPod` driver pumping the exact queue/bucket code the fabric runs
+/// on, with no threads and no wall-clock dependence.
+///
+/// 1. **Weighted-fair drain** — three tenants weighted 5:3:1, the
+///    weight-1 tenant offering 10× everyone else's load, every lane kept
+///    backlogged; drained batches execute on a [`SimPod`] and served
+///    counts must match the weight shares within 10%.
+/// 2. **Quota exactness** — a rate-1/burst-5 token bucket offered 8
+///    instantaneous submissions admits exactly 5.
+/// 3. **Priority shed order** — a full queue preempts strictly by
+///    ascending priority, newest-first within a class, and never evicts
+///    the top class.
+pub fn run_scenarios(seed: u64) -> ScenarioVerdicts {
+    // ── 1. Weighted-fair drain under a 10:1 hot tenant ─────────────────
+    let weights: [(String, u32); 3] =
+        [("gold".into(), 5), ("silver".into(), 3), ("bronze".into(), 1)];
+    let lane_cfgs: Vec<LaneConfig> =
+        weights.iter().map(|&(_, w)| LaneConfig { weight: w, max_slots: 16 }).collect();
+    let queue: TenantQueue<Request> = TenantQueue::new(48, lane_cfgs);
+    let pod = SimPod::new("CPU", 0.001, 0.0, seed, None).expect("CPU platform exists");
+    let mut rng = Rng::new(seed);
+    let mut served = [0u64; 3];
+    let mut next_id = 0u64;
+    let top_up = |queue: &TenantQueue<Request>, next_id: &mut u64| {
+        // Cold tenants keep a steady backlog; the hot tenant (bronze,
+        // weight 1) offers 10 fresh submissions per round — far more
+        // than its fair drain — and the surplus bounces off its lane
+        // cap, which is exactly the admission story under a hot tenant.
+        for lane in [0usize, 1] {
+            while queue.lane_len(lane) < 8 {
+                let req = Request { id: *next_id * 3 + lane as u64, payload: vec![] };
+                *next_id += 1;
+                match queue.push(lane, 1, req) {
+                    Push::Admitted(ev) => debug_assert!(ev.is_empty()),
+                    Push::Rejected(_) => break,
+                }
+            }
+        }
+        for _ in 0..10 {
+            let req = Request { id: *next_id * 3 + 2, payload: vec![] };
+            *next_id += 1;
+            // At the hot lane's slot cap the surplus is rejected — the
+            // share bound doing its job mid-scenario.
+            let _ = queue.push(2, 1, req);
+        }
+    };
+    for _ in 0..100 {
+        top_up(&queue, &mut next_id);
+        let take = 1 + rng.below(6); // seeded batch-size jitter
+        let batch = queue.pop_batch(take).expect("topped-up queue is never empty");
+        let waits = vec![0.0; batch.len()];
+        for resp in pod.execute_batch(&batch, &waits) {
+            let resp = resp.expect("sim pods never fail");
+            served[(resp.id % 3) as usize] += 1;
+        }
+    }
+    let total: u64 = served.iter().sum();
+    let weight_total: u32 = weights.iter().map(|&(_, w)| w).sum();
+    let mut max_share_error = 0.0f64;
+    let mut served_per_lane = Vec::new();
+    for (i, (id, w)) in weights.iter().enumerate() {
+        let expected = *w as f64 / weight_total as f64;
+        let observed = served[i] as f64 / total as f64;
+        let err = (observed - expected).abs() / expected;
+        max_share_error = max_share_error.max(err);
+        served_per_lane.push((id.clone(), *w, served[i]));
+    }
+    let fair_share_within_tolerance = max_share_error <= 0.10;
+
+    // ── 2. Quota exactness at the burst bound ──────────────────────────
+    let mut bucket = TokenBucket::new(1.0, 5.0);
+    let now = Instant::now();
+    let admitted = (0..8).filter(|_| bucket.try_take_at(now)).count();
+    let quota_exact = admitted == 5;
+
+    // ── 3. Shedding strictly by ascending priority ─────────────────────
+    let q: TenantQueue<(u8, u64)> = TenantQueue::new(
+        6,
+        vec![
+            LaneConfig { weight: 1, max_slots: 6 },
+            LaneConfig { weight: 1, max_slots: 6 },
+            LaneConfig { weight: 1, max_slots: 6 },
+        ],
+    );
+    for i in 0..4u64 {
+        assert!(matches!(q.push(0, 0, (0, i)), Push::Admitted(_)));
+    }
+    for i in 0..2u64 {
+        assert!(matches!(q.push(1, 1, (1, i)), Push::Admitted(_)));
+    }
+    let mut evicted_prios = Vec::new();
+    let mut rejected_high = false;
+    for i in 0..7u64 {
+        match q.push(2, 2, (2, i)) {
+            Push::Admitted(ev) => evicted_prios.extend(ev.into_iter().map(|(p, _)| p)),
+            Push::Rejected(_) => rejected_high = true,
+        }
+    }
+    // 6 high pushes preempt the 4 lows then the 2 standards (ascending),
+    // and the 7th bounces off a queue now full of the top class.
+    let shed_priority_ordered = evicted_prios == vec![0, 0, 0, 0, 1, 1]
+        && rejected_high
+        && evicted_prios.windows(2).all(|w| w[0] <= w[1]);
+
+    ScenarioVerdicts {
+        served_per_lane,
+        max_share_error,
+        fair_share_within_tolerance,
+        quota_exact,
+        shed_priority_ordered,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_full_grammar() {
+        let specs = parse_tenant_specs(
+            "gold:w=4:p=high:rate=100:burst=20:share=0.5, free:w=1:p=low",
+            None,
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, "gold");
+        assert_eq!(specs[0].weight, 4);
+        assert_eq!(specs[0].priority, Priority::High);
+        assert_eq!(specs[0].rate_rps, Some(100.0));
+        assert_eq!(specs[0].burst, 20.0);
+        assert_eq!(specs[0].max_queue_share, 0.5);
+        assert_eq!(specs[1].priority, Priority::Low);
+        assert_eq!(specs[1].rate_rps, None, "no default rate → unlimited");
+    }
+
+    #[test]
+    fn spec_parse_applies_defaults() {
+        let specs = parse_tenant_specs("a,b:rate=7", Some(3.0), 0.25).unwrap();
+        assert_eq!(specs[0].rate_rps, Some(3.0), "default rate fills omissions");
+        assert_eq!(specs[0].burst, 3.0, "burst defaults to ceil(rate)");
+        assert_eq!(specs[0].max_queue_share, 0.25);
+        assert_eq!(specs[1].rate_rps, Some(7.0), "explicit rate wins");
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed_with_typed_errors() {
+        assert_eq!(parse_tenant_specs("", None, 1.0), Err(TenancyError::EmptySpec));
+        assert!(matches!(
+            parse_tenant_specs("a:w", None, 1.0),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert!(matches!(
+            parse_tenant_specs("a:nope=1", None, 1.0),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert!(matches!(
+            parse_tenant_specs("a:p=urgent", None, 1.0),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert_eq!(
+            parse_tenant_specs("a,a", None, 1.0),
+            Err(TenancyError::DuplicateTenant("a".into()))
+        );
+        assert_eq!(
+            parse_tenant_specs("a:w=0", None, 1.0),
+            Err(TenancyError::ZeroWeight("a".into()))
+        );
+        assert_eq!(
+            parse_tenant_specs("a:rate=0", None, 1.0),
+            Err(TenancyError::ZeroQuota("a".into())),
+            "a zero quota is a config error, not a silent never-admit"
+        );
+        assert_eq!(
+            parse_tenant_specs("a:share=1.5", None, 1.0),
+            Err(TenancyError::BadShare("a".into()))
+        );
+        assert_eq!(
+            parse_tenant_specs("a:share=0", None, 1.0),
+            Err(TenancyError::BadShare("a".into()))
+        );
+    }
+
+    #[test]
+    fn registry_appends_the_default_tenant_when_absent() {
+        let reg = TenantRegistry::build(&[TenantSpec::new("gold")]).unwrap();
+        assert_eq!(reg.all().len(), 2);
+        assert!(reg.get(DEFAULT_TENANT).is_some());
+        assert!(reg.get("gold").is_some());
+        assert!(reg.get("nobody").is_none());
+        // A user-defined default is NOT duplicated.
+        let reg = TenantRegistry::build(&[TenantSpec::new(DEFAULT_TENANT)]).unwrap();
+        assert_eq!(reg.all().len(), 1);
+    }
+
+    #[test]
+    fn lane_configs_respect_shares_with_a_one_slot_floor() {
+        let mut hog = TenantSpec::new("hog");
+        hog.max_queue_share = 0.25;
+        let mut sliver = TenantSpec::new("sliver");
+        sliver.max_queue_share = 0.01;
+        let reg = TenantRegistry::build(&[hog, sliver]).unwrap();
+        let lanes = reg.lane_configs(16);
+        assert_eq!(lanes[0].max_slots, 4, "25% of 16");
+        assert_eq!(lanes[1].max_slots, 1, "share floor is one slot");
+        assert_eq!(lanes[2].max_slots, 16, "default tenant gets the full bound");
+    }
+
+    #[test]
+    fn deterministic_scenarios_all_pass_and_reproduce() {
+        let a = run_scenarios(0xFA1);
+        assert!(a.quota_exact);
+        assert!(a.shed_priority_ordered);
+        assert!(
+            a.fair_share_within_tolerance,
+            "max share error {} > 10% over {:?}",
+            a.max_share_error,
+            a.served_per_lane
+        );
+        let b = run_scenarios(0xFA1);
+        assert_eq!(a.served_per_lane, b.served_per_lane, "seeded → reproducible");
+        // A different seed still satisfies the guarantee (the verdict is
+        // a property, not a golden value).
+        assert!(run_scenarios(7).fair_share_within_tolerance);
+    }
+}

@@ -24,7 +24,9 @@ use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::config::Config;
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
 use tf2aif::fabric::bench::{self, BenchConfig};
+use tf2aif::fabric::tenancy::{parse_tenant_specs, TenantSpec};
 use tf2aif::fabric::{sim, AutoscaleConfig, Fabric, FabricConfig};
+use tf2aif::workload::TenantMix;
 use tf2aif::report;
 use tf2aif::runtime::Engine;
 use tf2aif::serving::{AifServer, ImageClassify};
@@ -101,7 +103,8 @@ fn print_usage() {
          [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n           \
          [--per-item] [--no-dedup] [--adaptive] [--min-batch N] [--slo MS]\n           \
          [--linger MS] [--cache N] [--cache-ttl MS] [--autoscale MIN:MAX]\n           \
-         [--as-interval MS]\n  \
+         [--as-interval MS] [--tenants SPEC] [--quota RPS] [--tenant-share F]\n           \
+         (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F],...)\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
          [--slo MS] [--seed N] [--out FILE] [--fused-only]\n  \
@@ -299,6 +302,44 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         }
         None => None,
     };
+    // ── Tenancy: --tenants SPEC, --quota (default token rate), and
+    //    --tenant-share (default max queue fraction) ────────────────────
+    let default_share = f64_flag("--tenant-share", 1.0)?;
+    let default_quota = match flags.get("--quota") {
+        Some(v) => {
+            let q: f64 = v.parse().with_context(|| format!("bad --quota: {v:?}"))?;
+            if !(q > 0.0) {
+                bail!("--quota must be positive (a zero quota could never admit a request)");
+            }
+            Some(q)
+        }
+        None => None,
+    };
+    let tenants: Vec<TenantSpec> = match flags.get("--tenants") {
+        Some(spec) => parse_tenant_specs(spec, default_quota, default_share)
+            .map_err(anyhow::Error::new)?,
+        None => match default_quota {
+            // --quota without --tenants rate-limits the default tenant.
+            Some(q) => {
+                let mut t = TenantSpec::new(tf2aif::fabric::DEFAULT_TENANT);
+                t.rate_rps = Some(q);
+                t.burst = q.ceil().max(1.0);
+                t.max_queue_share = default_share;
+                vec![t]
+            }
+            None => Vec::new(),
+        },
+    };
+    if tenants.is_empty() && flags.get("--tenant-share").is_some() {
+        bail!("--tenant-share has no effect without --tenants or --quota");
+    }
+    let multi_tenant = !tenants.is_empty();
+    // Offered-load split for the drive: the configured tenants only
+    // (the implicit `default` tenant is a home for anonymous traffic,
+    // not a workload source), weighted by their drain weights.
+    let mix_entries: Vec<(String, u32)> =
+        tenants.iter().map(|t| (t.id.clone(), t.weight)).collect();
+
     let cfg = FabricConfig {
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
         max_batch: flags.usize_or("--batch", d.max_batch)?,
@@ -315,6 +356,7 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         cache_capacity: flags.usize_or("--cache", d.cache_capacity)?,
         cache_ttl_ms: flags.usize_or("--cache-ttl", d.cache_ttl_ms as usize)? as u64,
         autoscale,
+        tenants,
         ..Default::default()
     };
 
@@ -365,7 +407,12 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     let arrival = Arrival::parse(flags.get("--arrival").unwrap_or("poisson:500"))?;
     let seed = flags.usize_or("--run-seed", 7)? as u64;
     println!("\nrouting {requests} requests ({arrival:?}) across the fleet…");
-    let run = fabric.run(requests, arrival, seed)?;
+    let run = if multi_tenant {
+        let mix = TenantMix::new(&mix_entries)?;
+        fabric.run_tenants(requests, arrival, seed, &mix)?
+    } else {
+        fabric.run(requests, arrival, seed)?
+    };
 
     println!(
         "\nrouted {} | completed {} | shed {} | deduped {} | failed {} | wall {:.2}s | {:.1} rps",
@@ -394,6 +441,13 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     let (h, rows) = report::fabric_fleet(&fabric.fleet_report(run.wall_s));
     print!("{}", report::render_table(&h, &rows));
     report::write_csv("reports/fabric_fleet.csv", &h, &rows)?;
+
+    if multi_tenant {
+        println!("\nper-tenant:");
+        let (h, rows) = report::fabric_tenants(&fabric.tenant_reports());
+        print!("{}", report::render_table(&h, &rows));
+        report::write_csv("reports/fabric_tenants.csv", &h, &rows)?;
+    }
 
     let events = fabric.scale_events();
     if !events.is_empty() {
@@ -475,10 +529,11 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let (h, rows) = report::bench_table(&points);
     print!("{}", report::render_table(&h, &rows));
 
-    // The control-plane comparisons (adaptive vs fixed batch sizing, and
-    // fixed replicas vs autoscaler) ride along unless --fused-only.
-    let (control, autoscale) = if flags.has("--fused-only") {
-        (None, None)
+    // The control-plane comparisons (adaptive vs fixed batch sizing,
+    // fixed replicas vs autoscaler) and the tenancy measurement ride
+    // along unless --fused-only.
+    let (control, autoscale, tenancy) = if flags.has("--fused-only") {
+        (None, None, None)
     } else {
         println!(
             "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
@@ -507,11 +562,31 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             yn(cmp.helps()),
             yn(cmp.eliminates_sheds()),
         );
-        (Some(sweep), Some(cmp))
+
+        println!("\ntenancy: hot tenant at 10x offered load vs an equal-weight cold tenant…\n");
+        let ten = bench::run_tenancy_bench(&cfg)?;
+        let (h, rows) = report::fabric_tenants(&ten.tenants);
+        print!("{}", report::render_table(&h, &rows));
+        println!(
+            "\nweighted-fair drain within 10% of weights (deterministic, max err {:.1}%): {} | \
+             quota exact at the burst bound: {} | shed strictly by ascending priority: {}",
+            ten.verdicts.max_share_error * 100.0,
+            yn(ten.verdicts.fair_share_within_tolerance),
+            yn(ten.verdicts.quota_exact),
+            yn(ten.verdicts.shed_priority_ordered),
+        );
+        (Some(sweep), Some(cmp), Some(ten))
     };
 
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
-    bench::write_json(out, &cfg, &points, control.as_ref(), autoscale.as_ref())?;
+    bench::write_json(
+        out,
+        &cfg,
+        &points,
+        control.as_ref(),
+        autoscale.as_ref(),
+        tenancy.as_ref(),
+    )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {
         Some(best) => println!(

@@ -12,6 +12,7 @@
 //!   labelled simulated in every report).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -114,6 +115,99 @@ impl Collector {
             service_ms: g.service_ms.clone(),
             real_compute_ms: g.real_compute_ms.clone(),
             queue_wait_ms: g.queue_wait_ms.clone(),
+        }
+    }
+}
+
+/// Per-tenant serving counters — every verdict the tenancy layer can
+/// hand a submission, counted separately so the per-tenant report can
+/// distinguish *policy* rejections (quota) from *capacity* rejections
+/// (full queues) from *preemptions* (evicted by higher-priority work).
+#[derive(Debug, Default)]
+pub struct TenantCollector {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    shed_quota: AtomicU64,
+    shed_capacity: AtomicU64,
+    preempted: AtomicU64,
+    e2e_ms: Mutex<Series>,
+}
+
+/// Point-in-time copy of one tenant's counters.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// Submissions offered by (or on behalf of) the tenant.
+    pub submitted: u64,
+    /// Submissions admitted (enqueued, cache-answered, or attached to an
+    /// in-flight identical execution).
+    pub admitted: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests that reached an executor and failed there.
+    pub failed: u64,
+    /// Submissions shed by the tenant's own token-bucket quota.
+    pub shed_quota: u64,
+    /// Submissions shed because every feasible queue was full of
+    /// equal-or-higher-priority work.
+    pub shed_capacity: u64,
+    /// Admitted requests later evicted from a queue by higher-priority
+    /// work before executing.
+    pub preempted: u64,
+    /// End-to-end (queue wait + service) latencies of completed
+    /// requests, ms.
+    pub e2e_ms: Series,
+}
+
+impl TenantCollector {
+    /// Count one submission offered.
+    pub fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one submission admitted.
+    pub fn note_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one completion with its end-to-end latency.
+    pub fn note_completed(&self, e2e_ms: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.e2e_ms.lock().unwrap().push(e2e_ms);
+    }
+
+    /// Count one executor failure.
+    pub fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one quota (token-bucket) shed.
+    pub fn note_quota_shed(&self) {
+        self.shed_quota.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one capacity shed at admission.
+    pub fn note_capacity_shed(&self) {
+        self.shed_capacity.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one queued request preempted by higher-priority work.
+    pub fn note_preempted(&self) {
+        self.preempted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            shed_quota: self.shed_quota.load(Ordering::Relaxed),
+            shed_capacity: self.shed_capacity.load(Ordering::Relaxed),
+            preempted: self.preempted.load(Ordering::Relaxed),
+            e2e_ms: self.e2e_ms.lock().unwrap().clone(),
         }
     }
 }
@@ -262,6 +356,30 @@ mod tests {
         assert_eq!(m.errors, 1);
         assert_eq!(m.service_ms.len(), 3);
         assert!((m.service_boxplot().mean - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_collector_counts_every_verdict_separately() {
+        let t = TenantCollector::default();
+        for _ in 0..6 {
+            t.note_submitted();
+        }
+        t.note_admitted();
+        t.note_admitted();
+        t.note_completed(4.0);
+        t.note_completed(8.0);
+        t.note_failed();
+        t.note_quota_shed();
+        t.note_capacity_shed();
+        t.note_preempted();
+        let s = t.snapshot();
+        assert_eq!(
+            (s.submitted, s.admitted, s.completed, s.failed),
+            (6, 2, 2, 1)
+        );
+        assert_eq!((s.shed_quota, s.shed_capacity, s.preempted), (1, 1, 1));
+        assert_eq!(s.e2e_ms.len(), 2);
+        assert!((s.e2e_ms.mean() - 6.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::artifact::Artifact;
 use crate::cluster::NodeSpec;
 use crate::fabric::bench::{AutoscaleCompare, BenchPoint, ControlSweep};
-use crate::fabric::{FleetReport, PodReport, ScaleDirection, ScaleEvent};
+use crate::fabric::{FleetReport, PodReport, ScaleDirection, ScaleEvent, TenantReport};
 use crate::platform::PLATFORMS;
 use crate::util::stats::Boxplot;
 
@@ -352,6 +352,8 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         "max*",
         "queue wait (ms)",
         "fleet rps",
+        "quota shed",
+        "preempted",
     ];
     let fmt = |f: fn(&Boxplot) -> f64| match &fleet.service {
         Some(b) => format!("{:.2}", f(b)),
@@ -376,8 +378,50 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         fmt(|b| b.max),
         format!("{:.2}", fleet.mean_queue_wait_ms),
         format!("{:.1}", fleet.throughput_rps),
+        fleet.quota_shed.to_string(),
+        fleet.preempted.to_string(),
     ];
     (headers, vec![row])
+}
+
+/// Fabric per-tenant table: configuration (weight, priority, quota
+/// verdicts) plus every admission outcome and the completed-latency
+/// percentiles — the tenancy layer's visibility surface.
+pub fn fabric_tenants(rows: &[TenantReport]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "tenant",
+        "weight",
+        "priority",
+        "submitted",
+        "admitted",
+        "completed",
+        "failed",
+        "quota shed",
+        "cap shed",
+        "preempted",
+        "p50 (ms)*",
+        "p99*",
+    ];
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.id.clone(),
+                r.weight.to_string(),
+                r.priority.to_string(),
+                r.submitted.to_string(),
+                r.admitted.to_string(),
+                r.completed.to_string(),
+                r.failed.to_string(),
+                r.shed_quota.to_string(),
+                r.shed_capacity.to_string(),
+                r.preempted.to_string(),
+                format!("{:.2}", r.p50_ms),
+                format!("{:.2}", r.p99_ms),
+            ]
+        })
+        .collect();
+    (headers, out)
 }
 
 /// Autoscaler replica timeline: one row per scale event, oldest first.
@@ -601,12 +645,15 @@ mod tests {
             requests: 10,
             errors: 0,
             shed: 3,
+            quota_shed: 1,
+            preempted: 1,
             deduped: 5,
             cache: Some(crate::fabric::CacheStats {
                 hits: 7,
                 misses: 2,
                 evicted: 1,
                 expired: 0,
+                invalidated: 0,
                 entries: 2,
             }),
             scale_ups: 2,
@@ -623,10 +670,56 @@ mod tests {
         assert_eq!(rows[0][6], "5", "dedup hits are reported");
         assert_eq!(rows[0][7], "7/2/1", "cache hit/miss/evict triple");
         assert_eq!(rows[0][8], "2/1", "scale up/down pair");
+        assert_eq!(rows[0][14], "1", "quota sheds split out");
+        assert_eq!(rows[0][15], "1", "preemptions split out");
 
         let no_cache = FleetReport { cache: None, ..fleet };
         let (_, rows) = fabric_fleet(&no_cache);
         assert_eq!(rows[0][7], "-", "cache off renders a dash");
+    }
+
+    #[test]
+    fn tenant_table_renders_every_verdict_column() {
+        use crate::fabric::Priority;
+        let rows = vec![
+            TenantReport {
+                id: "gold".into(),
+                weight: 4,
+                priority: Priority::High,
+                submitted: 100,
+                admitted: 90,
+                completed: 88,
+                failed: 0,
+                shed_quota: 10,
+                shed_capacity: 0,
+                preempted: 2,
+                p50_ms: 2.5,
+                p99_ms: 8.0,
+            },
+            TenantReport {
+                id: "free".into(),
+                weight: 1,
+                priority: Priority::Low,
+                submitted: 0,
+                admitted: 0,
+                completed: 0,
+                failed: 0,
+                shed_quota: 0,
+                shed_capacity: 0,
+                preempted: 0,
+                p50_ms: 0.0,
+                p99_ms: 0.0,
+            },
+        ];
+        let (h, out) = fabric_tenants(&rows);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), h.len());
+        assert_eq!(out[0][0], "gold");
+        assert_eq!(out[0][2], "high");
+        assert_eq!(out[0][6], "0", "executor failures are a column");
+        assert_eq!(out[0][7], "10", "quota sheds are a column");
+        assert_eq!(out[1][2], "low");
+        assert_eq!(out[1][3], "0", "an idle tenant renders zeros, not a panic");
     }
 
     #[test]

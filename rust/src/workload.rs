@@ -92,6 +92,57 @@ impl Arrival {
     }
 }
 
+/// Deterministic weighted interleave of tenant ids over a request
+/// stream — the workload side of the fabric's tenancy layer.
+///
+/// Built once from `(tenant, weight)` pairs, [`pick`](Self::pick) maps
+/// a request index to a tenant such that any window of `sum(weights)`
+/// consecutive requests contains each tenant exactly `weight` times,
+/// smoothly interleaved (no long same-tenant runs) — the same smooth
+/// weighted-round-robin scheme the pod queues drain by, so offered load
+/// and fair service share speak the same proportions.
+#[derive(Debug, Clone)]
+pub struct TenantMix {
+    ids: Vec<String>,
+    cycle: Vec<usize>,
+}
+
+impl TenantMix {
+    /// Build a mix from `(tenant, weight)` pairs (weights ≥ 1).
+    pub fn new(entries: &[(String, u32)]) -> anyhow::Result<TenantMix> {
+        if entries.is_empty() {
+            anyhow::bail!("tenant mix needs at least one tenant");
+        }
+        if let Some((id, _)) = entries.iter().find(|(_, w)| *w == 0) {
+            anyhow::bail!("tenant {id:?}: mix weight must be >= 1");
+        }
+        let total: i64 = entries.iter().map(|&(_, w)| w as i64).sum();
+        let mut current = vec![0i64; entries.len()];
+        let mut cycle = Vec::with_capacity(total as usize);
+        for _ in 0..total {
+            for (i, (_, w)) in entries.iter().enumerate() {
+                current[i] += *w as i64;
+            }
+            let pick = (0..entries.len())
+                .max_by_key(|&i| (current[i], std::cmp::Reverse(i)))
+                .expect("non-empty entries");
+            current[pick] -= total;
+            cycle.push(pick);
+        }
+        Ok(TenantMix { ids: entries.iter().map(|(id, _)| id.clone()).collect(), cycle })
+    }
+
+    /// Tenant for request index `i` (the precomputed cycle repeats).
+    pub fn pick(&self, i: usize) -> &str {
+        &self.ids[self.cycle[i % self.cycle.len()]]
+    }
+
+    /// The tenant ids, in construction order.
+    pub fn ids(&self) -> &[String] {
+        &self.ids
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +180,25 @@ mod tests {
     fn closed_loop_has_no_gap() {
         let mut rng = Rng::new(2);
         assert_eq!(Arrival::ClosedLoop.next_gap_s(&mut rng), None);
+    }
+
+    #[test]
+    fn tenant_mix_is_proportional_and_smooth() {
+        let mix = TenantMix::new(&[("hot".into(), 10), ("cold".into(), 1)]).unwrap();
+        let window: Vec<&str> = (0..11).map(|i| mix.pick(i)).collect();
+        assert_eq!(window.iter().filter(|t| **t == "hot").count(), 10);
+        assert_eq!(window.iter().filter(|t| **t == "cold").count(), 1);
+        assert_eq!(mix.pick(0), mix.pick(11), "cycle repeats");
+
+        let even = TenantMix::new(&[("a".into(), 1), ("b".into(), 1)]).unwrap();
+        let window: Vec<&str> = (0..4).map(|i| even.pick(i)).collect();
+        assert_eq!(window, ["a", "b", "a", "b"], "equal weights alternate smoothly");
+    }
+
+    #[test]
+    fn tenant_mix_rejects_degenerate_inputs() {
+        assert!(TenantMix::new(&[]).is_err());
+        assert!(TenantMix::new(&[("a".into(), 0)]).is_err());
     }
 
     #[test]

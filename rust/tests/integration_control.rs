@@ -300,6 +300,7 @@ fn retiring_a_replica_never_drops_admitted_requests() {
         match rx.recv().expect("retired pods must still answer admitted requests") {
             Outcome::Completed(_) => completed += 1,
             Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+            Outcome::Shed => panic!("uniform priority never preempts admitted work"),
         }
     }
     assert_eq!(completed, 24, "graceful retire: nothing admitted is dropped");
@@ -310,6 +311,97 @@ fn retiring_a_replica_never_drops_admitted_requests() {
         }
         Submission::Shed => panic!("survivor must admit"),
     }
+    fabric.shutdown();
+}
+
+#[test]
+fn artifact_redeploy_invalidates_cached_responses() {
+    // Long TTL: only the redeploy hook can make the memo stale.
+    let cfg = FabricConfig {
+        time_scale: 0.0,
+        cache_capacity: 8,
+        cache_ttl_ms: 60_000,
+        ..Default::default()
+    };
+    let fabric = place_one_model("lenet", &cfg, None);
+    let payload = vec![0.5; 32];
+    let serve = |fabric: &Fabric| match fabric.submit("lenet", payload.clone()).unwrap() {
+        Submission::Enqueued(rx) => {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        Submission::Shed => panic!("must admit"),
+    };
+    serve(&fabric);
+    serve(&fabric);
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 1, "second round is a cache hit");
+    assert_eq!(fabric.cache_stats().unwrap().hits, 1);
+
+    // Redeploy: the cached response was computed by the old weights and
+    // must never be served again, TTL notwithstanding.
+    fabric.on_artifact_redeploy("lenet");
+    serve(&fabric);
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 2, "post-redeploy submission re-executes");
+    let stats = fabric.cache_stats().unwrap();
+    assert_eq!(stats.hits, 1, "no pre-redeploy payload was returned");
+    assert!(stats.invalidated >= 1, "invalidation is counted, got {stats:?}");
+
+    // The fresh post-redeploy response caches normally again.
+    serve(&fabric);
+    assert_eq!(fabric.cache_stats().unwrap().hits, 2);
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 2);
+    fabric.shutdown();
+}
+
+#[test]
+fn redeploy_mid_stream_never_serves_a_pre_redeploy_payload() {
+    // The race the generation stamp exists for: a leader is IN FLIGHT
+    // when the redeploy lands.  Its memo must be dropped on insert, its
+    // dedup entry purged so identical submissions execute fresh, and no
+    // later lookup may see a pre-redeploy response.
+    let cfg = FabricConfig {
+        time_scale: 0.0,
+        cache_capacity: 8,
+        cache_ttl_ms: 60_000,
+        replicas_per_model: 1,
+        ..Default::default()
+    };
+    let gate = Gate::closed_gate();
+    let fabric = place_one_model("lenet", &cfg, Some(Arc::clone(&gate)));
+    let payload = vec![0.25; 32];
+    let leader = match fabric.submit("lenet", payload.clone()).unwrap() {
+        Submission::Enqueued(rx) => rx,
+        Submission::Shed => panic!("must admit"),
+    };
+    // Redeploy while the leader is gated in flight.
+    fabric.on_artifact_redeploy("lenet");
+    // An identical submission must NOT piggyback on the pre-redeploy
+    // execution (dedup entry purged) — it becomes a fresh leader.
+    let follower = match fabric.submit("lenet", payload.clone()).unwrap() {
+        Submission::Enqueued(rx) => rx,
+        Submission::Shed => panic!("must admit"),
+    };
+    assert_eq!(fabric.dedup_hits(), 0, "post-redeploy submissions never attach");
+    gate.open();
+    assert!(matches!(leader.recv().unwrap(), Outcome::Completed(_)));
+    assert!(matches!(follower.recv().unwrap(), Outcome::Completed(_)));
+    let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();
+    assert_eq!(served, 2, "both executions ran — nothing was memoized across the redeploy");
+    // And the stale leader's memo was dropped at insert: a new identical
+    // submission may only hit a response computed AFTER the redeploy.
+    match fabric.submit("lenet", payload).unwrap() {
+        Submission::Enqueued(rx) => {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        Submission::Shed => panic!("must admit"),
+    }
+    let stats = fabric.cache_stats().unwrap();
+    assert_eq!(
+        stats.hits, 1,
+        "the only cache hit comes from the post-redeploy follower's memo: {stats:?}"
+    );
     fabric.shutdown();
 }
 

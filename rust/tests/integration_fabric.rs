@@ -151,6 +151,7 @@ fn shedding_kicks_in_exactly_at_the_admission_bound() {
                 assert!(resp.service_ms > 0.0);
             }
             Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+            Outcome::Shed => panic!("uniform priority never preempts admitted work"),
         }
     }
     assert_eq!(completed + shed, flood);
@@ -264,6 +265,7 @@ fn identical_concurrent_requests_collapse_into_one_execution() {
                 "memoized response carries the caller's own request id"
             ),
             Outcome::Failed(e) => panic!("unexpected failure: {e}"),
+            Outcome::Shed => panic!("uniform priority never preempts admitted work"),
         }
     }
     let served: u64 = fabric.pod_reports(1.0).iter().map(|r| r.requests).sum();

@@ -1,0 +1,208 @@
+//! Property-style tests for the fabric queues — randomized inputs under
+//! fixed seeds (deterministic, reproducible), checking the invariants
+//! the fabric's correctness rests on:
+//!
+//! - FIFO order is preserved per producer under concurrent producers.
+//! - A linger is cut short by `close`, never waited out.
+//! - Shutdown vs empty is unambiguous: consumers block or exit, they
+//!   never spin, and every admitted item is popped exactly once.
+//! - The multi-lane queue conserves items (admitted = popped + evicted
+//!   + remaining), holds its capacity and per-lane bounds, and only
+//!   ever preempts strictly-lower-priority work.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tf2aif::fabric::queue::{BoundedQueue, LaneConfig, Push, TenantQueue};
+use tf2aif::util::rng::Rng;
+
+#[test]
+fn fifo_order_per_producer_survives_concurrent_producers() {
+    // 4 producers × 300 items, one consumer popping random-size batches:
+    // within each producer's stream, sequence numbers must come out
+    // strictly increasing (the queue is FIFO per arrival order, and one
+    // producer's pushes are ordered by its own program order).
+    for seed in [3u64, 17, 99] {
+        let q = Arc::new(BoundedQueue::<(usize, usize)>::new(4096));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..300 {
+                        q.try_push((p, i)).expect("capacity 4096 never bounces");
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                let mut last_seen = [None::<usize>; 4];
+                let mut total = 0usize;
+                while let Some(batch) = q.pop_batch(1 + rng.below(16)) {
+                    assert!(!batch.is_empty(), "Some(batch) is never empty");
+                    for (p, i) in batch {
+                        if let Some(prev) = last_seen[p] {
+                            assert!(
+                                i > prev,
+                                "seed {seed}: producer {p} reordered ({prev} then {i})"
+                            );
+                        }
+                        last_seen[p] = Some(i);
+                        total += 1;
+                    }
+                }
+                total
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        assert_eq!(consumer.join().unwrap(), 1200, "seed {seed}: every item popped once");
+    }
+}
+
+#[test]
+fn linger_is_cut_short_by_close_under_randomized_timing() {
+    // Whatever the (seeded) arrival pattern inside the window, closing
+    // the queue must end a 30-second linger immediately and deliver
+    // everything that was queued.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xC105E ^ seed);
+        let q = Arc::new(BoundedQueue::<u64>::new(64));
+        q.try_push(seed).unwrap();
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            q2.pop_batch_linger(64, Duration::from_secs(30))
+        });
+        let extra = rng.below(5);
+        for i in 0..extra {
+            std::thread::sleep(Duration::from_millis(rng.below(10) as u64));
+            q.try_push(1000 + i as u64).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(rng.below(15) as u64));
+        let t0 = Instant::now();
+        q.close();
+        let batch = consumer.join().unwrap().expect("queued items must be delivered");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "seed {seed}: close must cut the linger short"
+        );
+        assert_eq!(batch.len(), 1 + extra, "seed {seed}: nothing lost in the window");
+        assert_eq!(q.pop_batch(8), None, "then the shutdown signal");
+    }
+}
+
+#[test]
+fn shutdown_vs_empty_never_spins_and_conserves_items() {
+    // 4 consumers over randomized bursty production.  `Some(batch)` is
+    // never empty, so a consumer's loop iterations are bounded by items
+    // popped — if the empty-vs-shutdown disambiguation were broken, a
+    // spinning consumer would blow through the iteration bound (or hang
+    // forever on a missed close, failing the join).
+    for seed in [5u64, 23, 2024] {
+        let q = Arc::new(BoundedQueue::<u64>::new(8192));
+        let wakeups = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let wakeups = Arc::clone(&wakeups);
+                std::thread::spawn(move || {
+                    let mut got = 0usize;
+                    while let Some(batch) = q.pop_batch(8) {
+                        wakeups.fetch_add(1, Ordering::Relaxed);
+                        assert!(!batch.is_empty());
+                        got += batch.len();
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut rng = Rng::new(seed);
+        let mut pushed = 0usize;
+        for _ in 0..50 {
+            let burst = rng.below(40);
+            for i in 0..burst {
+                q.try_push(i as u64).unwrap();
+                pushed += 1;
+            }
+            if rng.below(3) == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        q.close();
+        let got: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(got, pushed, "seed {seed}: admitted items are popped exactly once");
+        assert!(
+            wakeups.load(Ordering::Relaxed) <= pushed + 4,
+            "seed {seed}: a consumer woke without work — the shutdown-vs-empty \
+             disambiguation is spinning"
+        );
+    }
+}
+
+#[test]
+fn tenant_queue_randomized_invariants_hold() {
+    // Random (lane, priority) pushes against random pops: conservation,
+    // the capacity bound, per-lane caps, and the preemption contract
+    // (evicted work is always strictly lower priority than what
+    // displaced it) must hold at every step.
+    for seed in [11u64, 47, 0xFEED] {
+        let mut rng = Rng::new(seed);
+        let capacity = 1 + rng.below(24);
+        let n_lanes = 1 + rng.below(4);
+        let lanes: Vec<LaneConfig> = (0..n_lanes)
+            .map(|_| LaneConfig {
+                weight: 1 + rng.below(5) as u32,
+                max_slots: 1 + rng.below(capacity),
+            })
+            .collect();
+        let caps: Vec<usize> = lanes.iter().map(|l| l.max_slots).collect();
+        let q: TenantQueue<(usize, u8)> = TenantQueue::new(capacity, lanes);
+        let (mut admitted, mut popped, mut evicted) = (0usize, 0usize, 0usize);
+        for _ in 0..600 {
+            if rng.below(3) < 2 {
+                let lane = rng.below(n_lanes);
+                let prio = rng.below(3) as u8;
+                match q.push(lane, prio, (lane, prio)) {
+                    Push::Admitted(ev) => {
+                        admitted += 1;
+                        for (_, evicted_prio) in &ev {
+                            assert!(
+                                *evicted_prio < prio,
+                                "seed {seed}: preempted prio {evicted_prio} by {prio}"
+                            );
+                        }
+                        evicted += ev.len();
+                    }
+                    Push::Rejected((l, p)) => {
+                        assert_eq!((l, p), (lane, prio), "rejected item comes back intact");
+                    }
+                }
+            } else if !q.is_empty() {
+                popped += q.pop_batch(1 + rng.below(6)).expect("non-empty pops Some").len();
+            }
+            assert!(q.len() <= capacity, "seed {seed}: capacity bound violated");
+            for (lane, cap) in caps.iter().enumerate() {
+                assert!(
+                    q.lane_len(lane) <= *cap,
+                    "seed {seed}: lane {lane} above its slot cap"
+                );
+            }
+            assert_eq!(
+                admitted,
+                popped + evicted + q.len(),
+                "seed {seed}: items must be conserved"
+            );
+        }
+        // Drain everything; conservation must close out exactly.
+        q.close();
+        while let Some(batch) = q.pop_batch(16) {
+            popped += batch.len();
+        }
+        assert_eq!(admitted, popped + evicted, "seed {seed}: final conservation");
+    }
+}
