@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     let points = bench::run_sweep(&cfg)?;
     let (h, rows) = report::bench_table(&points);
     print!("{}", report::render_table(&h, &rows));
-    bench::write_json("BENCH_fabric.json", &cfg, &points, None, None, None)?;
+    bench::write_json("BENCH_fabric.json", &cfg, &points, None, None, None, None)?;
     println!(
         "\nwrote BENCH_fabric.json — fused beats per-item at batch ≥ 4: {} (best {:.2}x)",
         if bench::fused_beats_per_item_at_batch_ge4(&points) { "YES" } else { "NO" },

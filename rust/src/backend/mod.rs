@@ -31,7 +31,11 @@ pub enum Policy {
     /// Prefer far-edge placements (FE nodes), tie-break on latency —
     /// keeps near-edge servers free for heavier AIFs.
     PreferEdge,
-    /// Minimize modeled energy ∝ latency × platform power class.
+    /// Minimize modeled joules/request: the platform's
+    /// utilization-scaled power model ([`Platform::power_w`]) over the
+    /// (feedback-blended) latency estimate, evaluated at saturation —
+    /// placement assumes a busy pod; delivered utilization is what the
+    /// continuum's per-site energy accounting measures after the fact.
     MinEnergy,
 }
 
@@ -44,18 +48,6 @@ impl Policy {
             "min-energy" => Policy::MinEnergy,
             other => bail!("unknown policy {other:?}"),
         })
-    }
-}
-
-/// Rough platform power classes in watts (board TDP scale) for MinEnergy.
-fn power_w(platform: &Platform) -> f64 {
-    match platform.name {
-        "AGX" => 30.0,
-        "ARM" => 15.0,
-        "CPU" => 140.0,
-        "ALVEO" => 100.0,
-        "GPU" => 300.0,
-        _ => 100.0,
     }
 }
 
@@ -158,7 +150,9 @@ impl Backend {
                         // latency breaks ties.
                         if node.arch == "arm64" { estimated } else { estimated + 1e6 }
                     }
-                    Policy::MinEnergy => estimated * power_w(plat),
+                    // Modeled joules/request at saturation: the board's
+                    // peak draw over the estimated service time.
+                    Policy::MinEnergy => plat.energy_j(estimated, 1.0),
                 };
                 out.push(Decision {
                     aif: m.id(),
@@ -263,6 +257,23 @@ mod tests {
         for w in r.windows(2) {
             assert!(w[0].score <= w[1].score);
         }
+    }
+
+    #[test]
+    fn min_energy_prefers_the_low_power_edge_module() {
+        // Synthetic catalog: no on-disk artifacts required.  On
+        // joules/request the 30 W AGX module undercuts every server
+        // part for a large CNN, even though the V100 is faster.
+        let arts = crate::fabric::sim::synthetic_catalog();
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        let b = Backend::new(arts, Policy::MinEnergy);
+        let d = b.select("inceptionv4", &cluster).unwrap();
+        assert_eq!(d.variant, "AGX");
+        assert_eq!(d.node, "FE");
+        // The score IS the modeled joules/request at saturation.
+        let plat = platform::get("AGX").unwrap();
+        assert!((d.score - plat.energy_j(d.estimated_ms, 1.0)).abs() < 1e-12);
     }
 
     #[test]

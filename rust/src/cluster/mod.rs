@@ -7,7 +7,7 @@
 //! support natively (paper §V-A), pods with a lifecycle, and a scheduler
 //! with filter/score semantics.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
@@ -78,6 +78,9 @@ pub struct Pod {
 pub struct Cluster {
     nodes: Vec<NodeSpec>,
     plugin_state: BTreeMap<String, PluginState>,
+    /// Cordoned nodes: healthy but unschedulable (drain in progress) —
+    /// existing pods keep running, new binds are refused.
+    cordoned: BTreeSet<String>,
     pods: Vec<Pod>,
     next_pod: u64,
 }
@@ -141,7 +144,7 @@ impl Cluster {
                 (n.name.clone(), st)
             })
             .collect();
-        Cluster { nodes, plugin_state, pods: Vec::new(), next_pod: 1 }
+        Cluster { nodes, plugin_state, cordoned: BTreeSet::new(), pods: Vec::new(), next_pod: 1 }
     }
 
     /// Build from a `[[node]]` config file (see `configs/cluster_paper.toml`).
@@ -189,9 +192,37 @@ impl Cluster {
         self.nodes.iter().find(|n| n.name == name)
     }
 
-    /// Is this node's device plugin registered (i.e. schedulable)?
+    /// Is this node schedulable — device plugin registered and not
+    /// cordoned?
     pub fn is_schedulable(&self, node: &str) -> bool {
         self.plugin_state.get(node) == Some(&PluginState::Registered)
+            && !self.cordoned.contains(node)
+    }
+
+    /// Cordon a node (`kubectl cordon` semantics): existing pods keep
+    /// running, but the scheduler filter excludes it and new binds are
+    /// refused — the drain primitive the continuum planner replans
+    /// around.
+    pub fn cordon(&mut self, node: &str) -> Result<()> {
+        if self.node(node).is_none() {
+            bail!("no such node {node:?}");
+        }
+        self.cordoned.insert(node.to_string());
+        Ok(())
+    }
+
+    /// Undo a [`cordon`](Self::cordon): the node is schedulable again.
+    pub fn uncordon(&mut self, node: &str) -> Result<()> {
+        if self.node(node).is_none() {
+            bail!("no such node {node:?}");
+        }
+        self.cordoned.remove(node);
+        Ok(())
+    }
+
+    /// Is the node currently cordoned?
+    pub fn is_cordoned(&self, node: &str) -> bool {
+        self.cordoned.contains(node)
     }
 
     /// Used accelerator slots on a node.  Only accelerator-backed
@@ -232,6 +263,9 @@ impl Cluster {
         let Some(spec) = self.node(node) else {
             bail!("no such node {node:?}");
         };
+        if self.is_cordoned(node) {
+            bail!("node {node} is cordoned (drain in progress)");
+        }
         if !self.is_schedulable(node) {
             bail!("node {node} has unregistered device plugins (run the Kube-API extension)");
         }
@@ -340,6 +374,26 @@ mod tests {
         assert!(c.bind("a", "GPU", "NE-1", 1.0).is_err(), "wrong platform");
         assert!(c.bind("a", "ARM", "FE", 1.0).is_err(), "plugin unregistered");
         assert!(c.bind("a", "CPU", "nowhere", 1.0).is_err());
+    }
+
+    #[test]
+    fn cordon_excludes_from_scheduling_but_keeps_pods_running() {
+        let mut c = Cluster::new(paper_testbed());
+        c.apply_kube_api_extension();
+        let id = c.bind("a", "CPU", "NE-1", 1.0).unwrap();
+        c.cordon("NE-1").unwrap();
+        assert!(c.is_cordoned("NE-1"));
+        assert!(!c.is_schedulable("NE-1"));
+        // Existing pod unaffected; new binds refused; filter excludes it.
+        assert!(c.running_pods().any(|p| p.id == id));
+        assert!(c.bind("b", "CPU", "NE-1", 1.0).is_err());
+        assert!(c.feasible_nodes("ALVEO", 1.0).is_empty(), "ALVEO only lives on NE-1");
+        // Uncordon restores scheduling; unknown nodes are typed errors.
+        c.uncordon("NE-1").unwrap();
+        assert!(c.is_schedulable("NE-1"));
+        assert_eq!(c.feasible_nodes("ALVEO", 1.0).len(), 1);
+        assert!(c.cordon("nowhere").is_err());
+        assert!(c.uncordon("nowhere").is_err());
     }
 
     #[test]

@@ -1,0 +1,51 @@
+//! Continuum orchestration — multi-site deployment above the fabric.
+//!
+//! The paper's promise is an orchestrator that can "deploy the requested
+//! function on any peculiar node in the cloud-edge continuum, i.e.,
+//! leverage the performance/energy benefits of the underlying HW upon
+//! any circumstances."  The [`fabric`](crate::fabric) serves one flat
+//! cluster; this module is the layer above it:
+//!
+//! ```text
+//!            ┌────────────── ContinuumOrchestrator ───────────────┐
+//!  demand    │ DeploymentPlan (Planner: latency+energy scoring)   │
+//!  (site) ───┤   model → [site₁ ▸ site₂ ▸ site₃]  (ranked)        │
+//!            │        │ shed? spillover ─┐                        │
+//!            │        ▼                  ▼                        │
+//!            │   Fabric @ site₁     Fabric @ site₂   Fabric @ …   │
+//!            │   (own Cluster)      (own Cluster)                 │
+//!            │        ▲                                           │
+//!            │   fail_site / drain_node ──► deterministic replan  │
+//!            └─────────────────────────────────────────────────────┘
+//! ```
+//!
+//! - [`topology`] — named sites (cloud / edge / far-edge), each owning
+//!   one cluster's [`crate::cluster::NodeSpec`]s, connected by links
+//!   with modeled RTT + bandwidth; pair costs resolve over the cheapest
+//!   multi-hop path.
+//! - [`planner`] — a declarative [`DeploymentPlan`]: per model, the
+//!   ranked feasible sites under `min-latency | min-energy | balanced`,
+//!   scored by the `backend` cost model extended with link cost and the
+//!   platform's utilization-scaled energy model; primary replicas are
+//!   reserved through real `Cluster::bind`s, so plans never over-commit
+//!   memory or accelerator slots.
+//! - [`deploy`] — the [`ContinuumOrchestrator`]: one [`crate::fabric::Fabric`]
+//!   per planned site, nearest-feasible routing with explicit spillover,
+//!   graceful whole-site loss with deterministic replanning (no admitted
+//!   work dropped), and per-site joules/request accounting.
+//!
+//! `tf2aif continuum` drives it from the CLI; `tf2aif bench` records
+//! the scenario verdicts in `BENCH_fabric.json` v4
+//! (`spillover_recovers`, `replan_no_drop`, `energy_policy_tradeoff`).
+
+pub mod deploy;
+pub mod planner;
+pub mod topology;
+
+pub use deploy::{
+    energy_from_pods, run_scenarios, ContinuumOrchestrator, ContinuumRunReport,
+    ContinuumSubmission, ContinuumVerdicts, ReplanEvent, RoutedRequest, SiteEnergy,
+    SiteRunReport,
+};
+pub use planner::{DeploymentPlan, PlanPolicy, Planner, SitePlacement};
+pub use topology::{continuum_testbed, LinkSpec, SiteSpec, SiteTier, Topology};

@@ -1,0 +1,558 @@
+//! The continuum planner — which AIF variant runs at which site.
+//!
+//! A [`Planner`] scores every feasible (site, variant, node) candidate
+//! for every catalog model with the existing `backend` cost model
+//! extended by two continuum terms: the **link cost** from the demand
+//! site (path RTT + payload transfer over the bottleneck bandwidth, per
+//! [`Topology`]) and the **modeled energy** per request (the platform's
+//! utilization-scaled power model at saturation).  The policy folds the
+//! terms into one score; the output is a declarative
+//! [`DeploymentPlan`]: per model, the ranked feasible sites — primary
+//! first (with replica binds reserved through the scratch cluster, so a
+//! plan can never promise a node's memory or accelerator slots twice),
+//! spillover alternates after.
+//!
+//! Planning is **deterministic**: sites iterate in name order, rankings
+//! sort stably with explicit tie-breaks, and no clock or RNG is
+//! consulted — replanning after a site loss or node drain reproduces
+//! bit-identically for identical inputs (the property
+//! `rust/tests/proptest_planner.rs` checks under randomized
+//! topologies).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::artifact::Artifact;
+use crate::backend::{Backend, Policy};
+use crate::cluster::Cluster;
+use crate::platform::{self, Platform};
+
+use super::topology::Topology;
+
+/// Continuum placement objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// Minimize modeled end-to-end latency: device service time plus
+    /// the demand site's link cost.
+    MinLatency,
+    /// Minimize modeled joules/request (link latency only breaks ties —
+    /// moving bits is modeled as free relative to board power).
+    MinEnergy,
+    /// Normalize both terms against the best candidate and minimize
+    /// their sum — a placement that is nearly-fastest *and*
+    /// nearly-cheapest beats a winner on one axis that is terrible on
+    /// the other.
+    Balanced,
+}
+
+impl PlanPolicy {
+    /// Parse `min-latency` / `min-energy` / `balanced`.
+    pub fn parse(s: &str) -> Result<PlanPolicy> {
+        Ok(match s {
+            "min-latency" => PlanPolicy::MinLatency,
+            "min-energy" => PlanPolicy::MinEnergy,
+            "balanced" => PlanPolicy::Balanced,
+            other => {
+                bail!("unknown plan policy {other:?} (expected min-latency, min-energy or balanced)")
+            }
+        })
+    }
+
+    /// Lower-case policy name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPolicy::MinLatency => "min-latency",
+            PlanPolicy::MinEnergy => "min-energy",
+            PlanPolicy::Balanced => "balanced",
+        }
+    }
+}
+
+impl fmt::Display for PlanPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One ranked service point for a model: a site, the best variant
+/// there, and the modeled cost terms the policy scored it with.
+#[derive(Debug, Clone)]
+pub struct SitePlacement {
+    /// Model served.
+    pub model: String,
+    /// Hosting site.
+    pub site: String,
+    /// Chosen platform variant at that site.
+    pub variant: String,
+    /// Best-scored node for the variant (the first replica's home).
+    pub node: String,
+    /// Nodes the planner *bound* replicas on (primary placements only;
+    /// spillover alternates carry no reservation and leave this empty).
+    pub nodes: Vec<String>,
+    /// Replicas reserved at plan time (`nodes.len()`; 0 for alternates).
+    pub replicas: usize,
+    /// Modeled (noise-free) device service latency, ms.
+    pub device_ms: f64,
+    /// Link cost from the demand site: path RTT + payload transfer, ms.
+    pub link_ms: f64,
+    /// Modeled joules/request at saturation
+    /// ([`Platform::energy_j_per_request`]).
+    pub energy_j: f64,
+    /// Policy score (lower is better).
+    pub score: f64,
+}
+
+impl SitePlacement {
+    /// Modeled end-to-end latency a demand-site client sees, ms.
+    pub fn e2e_ms(&self) -> f64 {
+        self.device_ms + self.link_ms
+    }
+}
+
+/// A declarative multi-site deployment plan: per model, the ranked
+/// feasible sites (primary first, spillover alternates after).
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// Objective the plan was scored under.
+    pub policy: PlanPolicy,
+    /// Site the demand originates at (link costs are relative to it).
+    pub demand_site: String,
+    /// Per model, the ranked placements.
+    pub assignments: BTreeMap<String, Vec<SitePlacement>>,
+}
+
+impl DeploymentPlan {
+    /// The primary (best-ranked, capacity-reserved) placement of a model.
+    pub fn primary(&self, model: &str) -> Option<&SitePlacement> {
+        self.assignments.get(model).and_then(|v| v.first())
+    }
+
+    /// Every ranked placement of a model: the primary (best site that
+    /// could *reserve* capacity) first, then the spillover alternates
+    /// in score order — which may include a better-scored site whose
+    /// reservation failed at plan time.  Empty slice for unknown
+    /// models.
+    pub fn ranked(&self, model: &str) -> &[SitePlacement] {
+        self.assignments.get(model).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Planned model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        self.assignments.keys().map(String::as_str).collect()
+    }
+
+    /// Sites hosting at least one primary placement.
+    pub fn sites_used(&self) -> BTreeSet<&str> {
+        self.assignments.values().filter_map(|v| v.first()).map(|p| p.site.as_str()).collect()
+    }
+
+    /// Mean modeled joules/request over the primary placements.
+    pub fn mean_energy_j(&self) -> f64 {
+        let primaries: Vec<&SitePlacement> =
+            self.assignments.values().filter_map(|v| v.first()).collect();
+        if primaries.is_empty() {
+            return 0.0;
+        }
+        primaries.iter().map(|p| p.energy_j).sum::<f64>() / primaries.len() as f64
+    }
+
+    /// Mean modeled end-to-end (link + device) latency over the primary
+    /// placements, ms.
+    pub fn mean_latency_ms(&self) -> f64 {
+        let primaries: Vec<&SitePlacement> =
+            self.assignments.values().filter_map(|v| v.first()).collect();
+        if primaries.is_empty() {
+            return 0.0;
+        }
+        primaries.iter().map(|p| p.e2e_ms()).sum::<f64>() / primaries.len() as f64
+    }
+
+    /// Models whose primary site differs from `other`'s primary — the
+    /// replan diff, as `(model, other's site, this plan's site)`.
+    pub fn moved_models(&self, other: &DeploymentPlan) -> Vec<(String, String, String)> {
+        let mut moved = Vec::new();
+        for (model, placements) in &self.assignments {
+            let (Some(new), Some(old)) = (placements.first(), other.primary(model)) else {
+                continue;
+            };
+            if new.site != old.site {
+                moved.push((model.clone(), old.site.clone(), new.site.clone()));
+            }
+        }
+        moved
+    }
+}
+
+/// The multi-site placement planner (see the module docs for the
+/// scoring and determinism story).
+pub struct Planner {
+    /// The network of sites being planned over.
+    pub topology: Topology,
+    /// Artifact catalog (every model × variant on offer).
+    pub catalog: Vec<Artifact>,
+    /// Placement objective.
+    pub policy: PlanPolicy,
+    /// Site the demand originates at; link costs are charged from here.
+    pub demand_site: String,
+    /// Replicas the primary placement tries to reserve (distinct nodes,
+    /// capped by the site's actual capacity).
+    pub replicas_per_site: usize,
+    /// Sites excluded from planning entirely (lost / under maintenance).
+    pub lost_sites: BTreeSet<String>,
+    /// Individual `(site, node)` pairs cordoned out of planning (node
+    /// drains).
+    pub drained_nodes: BTreeSet<(String, String)>,
+}
+
+impl Planner {
+    /// A planner over `topology` with no losses or drains.
+    ///
+    /// Takes the catalog by value because [`Backend::new`] does; with
+    /// the synthetic (sim) catalogs the continuum runs on today those
+    /// are manifest-only clones.  Before a real-artifact continuum,
+    /// thread `Arc<Artifact>` through `Backend` so replans stop copying
+    /// weight bytes (ROADMAP).
+    pub fn new(
+        topology: Topology,
+        catalog: Vec<Artifact>,
+        policy: PlanPolicy,
+        demand_site: impl Into<String>,
+    ) -> Result<Planner> {
+        let demand_site = demand_site.into();
+        if topology.site(&demand_site).is_none() {
+            bail!("demand site {demand_site:?} is not in the topology");
+        }
+        Ok(Planner {
+            topology,
+            catalog,
+            policy,
+            demand_site,
+            replicas_per_site: 1,
+            lost_sites: BTreeSet::new(),
+            drained_nodes: BTreeSet::new(),
+        })
+    }
+
+    /// Produce the deployment plan.  Fails (typed, with the model named)
+    /// when a model has no feasible placement on any surviving site.
+    pub fn plan(&self) -> Result<DeploymentPlan> {
+        // One scratch cluster per surviving site: primary placements
+        // BIND into it as models are assigned, so the plan can never
+        // promise memory or accelerator slots twice.
+        let mut clusters: BTreeMap<String, Cluster> = BTreeMap::new();
+        for site in self.topology.sites() {
+            if self.lost_sites.contains(&site.name) {
+                continue;
+            }
+            let mut c = Cluster::new(site.nodes.clone());
+            c.apply_kube_api_extension();
+            for (s, node) in &self.drained_nodes {
+                if *s == site.name {
+                    c.cordon(node)?;
+                }
+            }
+            clusters.insert(site.name.clone(), c);
+        }
+        if clusters.is_empty() {
+            bail!("no surviving sites to plan over");
+        }
+        let backend = Backend::new(self.catalog.clone(), Policy::MinLatency);
+        let models: Vec<String> = backend.models().iter().map(|m| m.to_string()).collect();
+        if models.is_empty() {
+            bail!("catalog has no models to place");
+        }
+        let mut assignments: BTreeMap<String, Vec<SitePlacement>> = BTreeMap::new();
+        for model in &models {
+            let bytes = backend
+                .variants_of(model)
+                .first()
+                .map(|a| a.manifest.input_shape.iter().product::<usize>() as u64 * 4)
+                .unwrap_or(0);
+            // Every feasible (site, variant, node) option with its raw
+            // cost terms, site-name then rank order (deterministic).
+            struct Cand {
+                site: String,
+                variant: String,
+                node: String,
+                device_ms: f64,
+                link_ms: f64,
+                energy_j: f64,
+                mem_gb: f64,
+            }
+            let mut options: Vec<Cand> = Vec::new();
+            for (site_name, cluster) in &clusters {
+                let Some(link_ms) =
+                    self.topology.link_cost_ms(&self.demand_site, site_name, bytes)
+                else {
+                    continue; // disconnected from the demand
+                };
+                for d in backend.rank(model, cluster)? {
+                    let Some(plat) = platform::get(&d.variant) else { continue };
+                    let native = Platform::is_native_variant(&d.variant);
+                    let Some(artifact) = backend
+                        .variants_of(model)
+                        .into_iter()
+                        .find(|a| a.manifest.variant == d.variant)
+                    else {
+                        continue;
+                    };
+                    options.push(Cand {
+                        site: site_name.clone(),
+                        variant: d.variant,
+                        node: d.node,
+                        device_ms: d.modeled_ms,
+                        link_ms,
+                        energy_j: plat.energy_j_per_request(
+                            artifact.manifest.gflops,
+                            native,
+                            1.0,
+                        ),
+                        mem_gb: Backend::pod_memory_gb(artifact),
+                    });
+                }
+            }
+            if options.is_empty() {
+                bail!("model {model:?} has no feasible placement on any surviving site");
+            }
+            // Normalization anchors for the balanced policy (overheads
+            // make both strictly positive).
+            let best_e2e = options
+                .iter()
+                .map(|c| c.device_ms + c.link_ms)
+                .fold(f64::INFINITY, f64::min);
+            let best_energy =
+                options.iter().map(|c| c.energy_j).fold(f64::INFINITY, f64::min);
+            let score = |c: &Cand| -> f64 {
+                let e2e = c.device_ms + c.link_ms;
+                match self.policy {
+                    PlanPolicy::MinLatency => e2e,
+                    // Joules dominate; latency breaks ties between
+                    // equal-energy variants.
+                    PlanPolicy::MinEnergy => c.energy_j * 1e3 + e2e * 1e-6,
+                    PlanPolicy::Balanced => e2e / best_e2e + c.energy_j / best_energy,
+                }
+            };
+            // Best option per site (first wins ties — options are in
+            // deterministic order), then sites ranked by score.
+            let mut per_site: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+            for (i, c) in options.iter().enumerate() {
+                let s = score(c);
+                match per_site.get(&c.site) {
+                    Some(&(best, _)) if best <= s => {}
+                    _ => {
+                        per_site.insert(c.site.clone(), (s, i));
+                    }
+                }
+            }
+            let mut site_rank: Vec<(f64, usize)> = per_site.into_values().collect();
+            site_rank.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap()
+                    .then_with(|| options[a.1].site.cmp(&options[b.1].site))
+            });
+            // Primary: the first ranked site whose replicas actually
+            // bind (capacity may have gone to earlier models).  A
+            // better-ranked site whose reservation failed is NOT
+            // dropped — it stays in the list as an unbound spillover
+            // alternate: per-request it is still the best-scored
+            // fallback even though it could not reserve whole pods.
+            let mut primary: Option<SitePlacement> = None;
+            let mut alternates: Vec<SitePlacement> = Vec::new();
+            for (s, idx) in &site_rank {
+                let c = &options[*idx];
+                let placement = |nodes: Vec<String>| SitePlacement {
+                    model: model.clone(),
+                    site: c.site.clone(),
+                    variant: c.variant.clone(),
+                    node: c.node.clone(),
+                    replicas: nodes.len(),
+                    nodes,
+                    device_ms: c.device_ms,
+                    link_ms: c.link_ms,
+                    energy_j: c.energy_j,
+                    score: *s,
+                };
+                if primary.is_none() {
+                    let cluster = clusters.get_mut(&c.site).expect("option site survives");
+                    let nodes = bind_replicas(
+                        cluster,
+                        &format!("{model}_{}", c.variant),
+                        &c.variant,
+                        c.mem_gb,
+                        &c.node,
+                        self.replicas_per_site,
+                    );
+                    if !nodes.is_empty() {
+                        primary = Some(placement(nodes));
+                        continue;
+                    }
+                }
+                alternates.push(placement(Vec::new()));
+            }
+            let Some(primary) = primary else {
+                bail!(
+                    "model {model:?}: every feasible site's capacity was consumed by \
+                     earlier placements"
+                );
+            };
+            let mut placements = vec![primary];
+            placements.append(&mut alternates);
+            assignments.insert(model.clone(), placements);
+        }
+        Ok(DeploymentPlan {
+            policy: self.policy,
+            demand_site: self.demand_site.clone(),
+            assignments,
+        })
+    }
+}
+
+/// Reserve up to `want` replicas of `variant` on distinct nodes of one
+/// site's scratch cluster — the scored node first, then any other
+/// feasible node.  Every reservation goes through [`Cluster::bind`], so
+/// memory and accelerator-slot accounting is enforced by the same code
+/// the runtime uses.  Returns the bound nodes (possibly empty).
+fn bind_replicas(
+    cluster: &mut Cluster,
+    aif: &str,
+    variant: &str,
+    mem_gb: f64,
+    first_node: &str,
+    want: usize,
+) -> Vec<String> {
+    let mut nodes = Vec::new();
+    if cluster.bind(aif, variant, first_node, mem_gb).is_ok() {
+        nodes.push(first_node.to_string());
+    }
+    while nodes.len() < want.max(1) {
+        let next = cluster
+            .feasible_nodes(variant, mem_gb)
+            .into_iter()
+            .map(|n| n.name.clone())
+            .find(|n| !nodes.contains(n));
+        let Some(node) = next else { break };
+        if cluster.bind(aif, variant, &node, mem_gb).is_err() {
+            break;
+        }
+        nodes.push(node);
+    }
+    nodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::continuum::topology::continuum_testbed;
+    use crate::fabric::sim::synthetic_catalog_for;
+
+    fn planner(policy: PlanPolicy, demand: &str) -> Planner {
+        Planner::new(
+            continuum_testbed(),
+            synthetic_catalog_for(&["inceptionv4", "mobilenetv1"]),
+            policy,
+            demand,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn min_latency_from_the_edge_stays_on_the_edge_gpu() {
+        let plan = planner(PlanPolicy::MinLatency, "edge").plan().unwrap();
+        let p = plan.primary("inceptionv4").unwrap();
+        assert_eq!((p.site.as_str(), p.variant.as_str()), ("edge", "GPU"));
+        assert_eq!(p.link_ms, 0.0, "local demand pays no link cost");
+        assert_eq!(p.replicas, p.nodes.len());
+        assert!(p.replicas >= 1);
+        // Alternates cover the other reachable sites, ranked.
+        let ranked = plan.ranked("inceptionv4");
+        assert!(ranked.len() >= 2, "spillover alternates exist");
+        assert!(ranked.windows(2).all(|w| w[0].score <= w[1].score));
+    }
+
+    #[test]
+    fn min_energy_trades_latency_for_joules() {
+        let lat = planner(PlanPolicy::MinLatency, "edge").plan().unwrap();
+        let nrg = planner(PlanPolicy::MinEnergy, "edge").plan().unwrap();
+        // The energy plan ships inference to the 30 W AGX module on the
+        // far edge instead of the 300 W V100 next door.
+        let p = nrg.primary("inceptionv4").unwrap();
+        assert_eq!((p.site.as_str(), p.variant.as_str()), ("far-edge", "AGX"));
+        assert!(
+            nrg.mean_energy_j() < 0.5 * lat.mean_energy_j(),
+            "joules/request must drop measurably: {} vs {}",
+            nrg.mean_energy_j(),
+            lat.mean_energy_j()
+        );
+        assert!(
+            nrg.mean_latency_ms() > lat.mean_latency_ms(),
+            "the latency cost of the trade is visible: {} vs {}",
+            nrg.mean_latency_ms(),
+            lat.mean_latency_ms()
+        );
+    }
+
+    #[test]
+    fn balanced_sits_between_the_extremes() {
+        let lat = planner(PlanPolicy::MinLatency, "edge").plan().unwrap();
+        let nrg = planner(PlanPolicy::MinEnergy, "edge").plan().unwrap();
+        let bal = planner(PlanPolicy::Balanced, "edge").plan().unwrap();
+        assert!(bal.mean_energy_j() <= lat.mean_energy_j() + 1e-12);
+        assert!(bal.mean_latency_ms() <= nrg.mean_latency_ms() + 1e-12);
+    }
+
+    #[test]
+    fn lost_sites_are_excluded_and_the_diff_is_reported() {
+        let base = planner(PlanPolicy::MinLatency, "edge");
+        let before = base.plan().unwrap();
+        let mut replanner = planner(PlanPolicy::MinLatency, "edge");
+        replanner.lost_sites.insert("edge".into());
+        let after = replanner.plan().unwrap();
+        for (_, placements) in &after.assignments {
+            assert!(placements.iter().all(|p| p.site != "edge"));
+        }
+        let moved = after.moved_models(&before);
+        assert!(!moved.is_empty(), "losing the primary site must move models");
+        for (_, from, _) in &moved {
+            assert_eq!(from, "edge");
+        }
+    }
+
+    #[test]
+    fn drained_nodes_are_cordoned_out_of_the_plan() {
+        let mut p = planner(PlanPolicy::MinLatency, "edge");
+        p.drained_nodes.insert(("edge".into(), "NE-2".into()));
+        let plan = p.plan().unwrap();
+        for placements in plan.assignments.values() {
+            for sp in placements {
+                assert!(
+                    !(sp.site == "edge" && (sp.node == "NE-2" || sp.nodes.contains(&"NE-2".into()))),
+                    "drained node must not appear: {sp:?}"
+                );
+            }
+        }
+        // inceptionv4's edge GPU lived on NE-2: its edge candidate is
+        // gone or degraded, so the primary moved off that node.
+        let prim = plan.primary("inceptionv4").unwrap();
+        assert!(!(prim.site == "edge" && prim.variant == "GPU"));
+    }
+
+    #[test]
+    fn unknown_demand_site_is_an_error() {
+        assert!(Planner::new(
+            continuum_testbed(),
+            synthetic_catalog_for(&["lenet"]),
+            PlanPolicy::MinLatency,
+            "nowhere",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let a = planner(PlanPolicy::Balanced, "far-edge").plan().unwrap();
+        let b = planner(PlanPolicy::Balanced, "far-edge").plan().unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

@@ -1,0 +1,420 @@
+//! Sites, tiers and links — the continuum's network model.
+//!
+//! A [`Topology`] is a set of named [`SiteSpec`]s (cloud / edge /
+//! far-edge), each owning the [`NodeSpec`]s of one Kubernetes cluster,
+//! connected by [`LinkSpec`]s with modeled RTT and bandwidth.  Pair
+//! costs are resolved over the *cheapest multi-hop path* (Floyd–
+//! Warshall at construction time), with the path's bottleneck bandwidth
+//! carried along, so a cloud site two hops from the far edge is charged
+//! both links' RTT and the slower link's transfer time.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{paper_testbed, NodeSpec};
+use crate::config::Config;
+
+/// Where a site sits on the cloud-edge continuum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SiteTier {
+    /// Data-center capacity, far from the demand.
+    Cloud,
+    /// Near-edge serving capacity (the paper's NE nodes).
+    Edge,
+    /// Far-edge devices co-located with the demand (the paper's FE node).
+    FarEdge,
+}
+
+impl SiteTier {
+    /// Parse `cloud` / `edge` / `far-edge`.
+    pub fn parse(s: &str) -> Result<SiteTier> {
+        Ok(match s {
+            "cloud" => SiteTier::Cloud,
+            "edge" => SiteTier::Edge,
+            "far-edge" | "faredge" => SiteTier::FarEdge,
+            other => bail!("unknown site tier {other:?} (expected cloud, edge or far-edge)"),
+        })
+    }
+
+    /// Lower-case tier name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteTier::Cloud => "cloud",
+            SiteTier::Edge => "edge",
+            SiteTier::FarEdge => "far-edge",
+        }
+    }
+}
+
+impl fmt::Display for SiteTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One named site: a tier plus the cluster nodes it owns.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    /// Site name (link endpoints and plans refer to it).
+    pub name: String,
+    /// Continuum tier.
+    pub tier: SiteTier,
+    /// The site's cluster nodes (Table II rows).
+    pub nodes: Vec<NodeSpec>,
+}
+
+/// A bidirectional link between two sites with modeled round-trip time
+/// and bandwidth.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    /// One endpoint site.
+    pub a: String,
+    /// The other endpoint site.
+    pub b: String,
+    /// Round-trip time across the link, ms.
+    pub rtt_ms: f64,
+    /// Link bandwidth, Gbit/s — request payloads pay a transfer time
+    /// over the path's bottleneck.
+    pub gbps: f64,
+}
+
+/// The multi-site topology the continuum planner places over.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    sites: Vec<SiteSpec>,
+    links: Vec<LinkSpec>,
+    /// Site name → index into `sites` (and the matrices below).
+    index: BTreeMap<String, usize>,
+    /// Cheapest-path RTT between every site pair, ms (∞ = unreachable).
+    rtt: Vec<Vec<f64>>,
+    /// Bottleneck bandwidth along that cheapest path, Gbit/s (∞ within
+    /// a site — no transfer cost).
+    bw: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    /// Build and validate a topology, resolving all-pairs path costs.
+    pub fn new(sites: Vec<SiteSpec>, links: Vec<LinkSpec>) -> Result<Topology> {
+        if sites.is_empty() {
+            bail!("topology needs at least one site");
+        }
+        let mut index = BTreeMap::new();
+        for (i, s) in sites.iter().enumerate() {
+            if s.name.is_empty() {
+                bail!("site names must be non-empty");
+            }
+            if index.insert(s.name.clone(), i).is_some() {
+                bail!("duplicate site {:?}", s.name);
+            }
+            if s.nodes.is_empty() {
+                bail!("site {:?} has no nodes", s.name);
+            }
+            let mut names = std::collections::BTreeSet::new();
+            for n in &s.nodes {
+                if !names.insert(n.name.clone()) {
+                    bail!("site {:?} has duplicate node {:?}", s.name, n.name);
+                }
+            }
+        }
+        let n = sites.len();
+        let mut rtt = vec![vec![f64::INFINITY; n]; n];
+        let mut bw = vec![vec![f64::INFINITY; n]; n];
+        for (i, row) in rtt.iter_mut().enumerate() {
+            row[i] = 0.0;
+        }
+        for l in &links {
+            let (Some(&i), Some(&j)) = (index.get(&l.a), index.get(&l.b)) else {
+                bail!("link {:?} ↔ {:?} references an unknown site", l.a, l.b);
+            };
+            if i == j {
+                bail!("link {:?} ↔ {:?} is a self-loop", l.a, l.b);
+            }
+            if !(l.rtt_ms >= 0.0) {
+                bail!("link {:?} ↔ {:?}: RTT must be >= 0, got {}", l.a, l.b, l.rtt_ms);
+            }
+            if !(l.gbps > 0.0) {
+                bail!("link {:?} ↔ {:?}: bandwidth must be positive, got {}", l.a, l.b, l.gbps);
+            }
+            // Parallel links: keep the cheaper RTT.
+            if l.rtt_ms < rtt[i][j] {
+                rtt[i][j] = l.rtt_ms;
+                rtt[j][i] = l.rtt_ms;
+                bw[i][j] = l.gbps;
+                bw[j][i] = l.gbps;
+            }
+        }
+        // Floyd–Warshall, relaxing the bottleneck bandwidth alongside
+        // the RTT (strict improvement only, so ties keep the first —
+        // deterministic — path).
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let via = rtt[i][k] + rtt[k][j];
+                    if via < rtt[i][j] {
+                        rtt[i][j] = via;
+                        bw[i][j] = bw[i][k].min(bw[k][j]);
+                    }
+                }
+            }
+        }
+        Ok(Topology { sites, links, index, rtt, bw })
+    }
+
+    /// Build from a config file with `[[site]]` (name, tier), `[[node]]`
+    /// (site + the `tf2aif cluster` node fields) and `[[link]]`
+    /// (a, b, rtt_ms, gbps) entries — see `docs/CLI.md` §continuum.
+    pub fn from_config(cfg: &Config) -> Result<Topology> {
+        let mut sites = Vec::new();
+        for t in cfg.array("site") {
+            sites.push(SiteSpec {
+                name: t.get("name")?.str()?.to_string(),
+                tier: SiteTier::parse(&t.str_or("tier", "edge"))?,
+                nodes: Vec::new(),
+            });
+        }
+        if sites.is_empty() {
+            bail!("config defines no [[site]] entries");
+        }
+        for t in cfg.array("node") {
+            let site_name = t.get("site")?.str()?.to_string();
+            let Some(site) = sites.iter_mut().find(|s| s.name == site_name) else {
+                bail!("node references unknown site {site_name:?}");
+            };
+            site.nodes.push(NodeSpec {
+                name: t.get("name")?.str()?.to_string(),
+                arch: t.str_or("arch", "x86_64"),
+                cpu_desc: t.str_or("cpu", ""),
+                cpus: t.usize_or("cpus", 8),
+                memory_gb: t.f64_or("memory_gb", 16.0),
+                accelerator: t.str_or("accelerator", "none"),
+                platforms: t.get("platforms")?.str_arr()?,
+                slots: t.usize_or("slots", 1),
+            });
+        }
+        let mut links = Vec::new();
+        for t in cfg.array("link") {
+            links.push(LinkSpec {
+                a: t.get("a")?.str()?.to_string(),
+                b: t.get("b")?.str()?.to_string(),
+                rtt_ms: t.f64_or("rtt_ms", 10.0),
+                gbps: t.f64_or("gbps", 1.0),
+            });
+        }
+        Topology::new(sites, links)
+    }
+
+    /// All sites, in declaration order.
+    pub fn sites(&self) -> &[SiteSpec] {
+        &self.sites
+    }
+
+    /// Look a site up by name.
+    pub fn site(&self, name: &str) -> Option<&SiteSpec> {
+        self.index.get(name).map(|&i| &self.sites[i])
+    }
+
+    /// All links, in declaration order.
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
+    }
+
+    /// Cheapest-path RTT between two sites, ms: `0` within a site,
+    /// `None` when unreachable or either site is unknown.
+    pub fn rtt_ms(&self, from: &str, to: &str) -> Option<f64> {
+        let (&i, &j) = (self.index.get(from)?, self.index.get(to)?);
+        let v = self.rtt[i][j];
+        v.is_finite().then_some(v)
+    }
+
+    /// Modeled transfer time of `bytes` over the cheapest path's
+    /// bottleneck bandwidth, ms (`0` within a site).
+    pub fn transfer_ms(&self, from: &str, to: &str, bytes: u64) -> Option<f64> {
+        let (&i, &j) = (self.index.get(from)?, self.index.get(to)?);
+        if !self.rtt[i][j].is_finite() {
+            return None;
+        }
+        let gbps = self.bw[i][j];
+        if gbps.is_finite() {
+            Some(bytes as f64 * 8.0 / (gbps * 1e9) * 1e3)
+        } else {
+            Some(0.0)
+        }
+    }
+
+    /// The link cost one request pays to be served at `to` from demand
+    /// originating at `from`: path RTT plus the payload's transfer time
+    /// over the bottleneck.  `None` when the sites are disconnected.
+    pub fn link_cost_ms(&self, from: &str, to: &str, payload_bytes: u64) -> Option<f64> {
+        Some(self.rtt_ms(from, to)? + self.transfer_ms(from, to, payload_bytes)?)
+    }
+}
+
+/// The built-in 3-site testbed: the paper's Table II cluster split into
+/// its near-edge (NE-1, NE-2) and far-edge (FE) halves, plus a cloud
+/// site above them with server-class GPU and FPGA capacity.  The cloud
+/// reaches the far edge only through the edge site (two hops), so link
+/// costs genuinely shape placement.
+pub fn continuum_testbed() -> Topology {
+    let paper = paper_testbed();
+    let edge_nodes: Vec<NodeSpec> =
+        paper.iter().filter(|n| n.name.starts_with("NE")).cloned().collect();
+    let far_nodes: Vec<NodeSpec> = paper.iter().filter(|n| n.name == "FE").cloned().collect();
+    let cloud_nodes = vec![
+        NodeSpec {
+            name: "C-1".into(),
+            arch: "x86_64".into(),
+            cpu_desc: "AMD EPYC 7543 @ 2.80GHz".into(),
+            cpus: 64,
+            memory_gb: 128.0,
+            accelerator: "NVIDIA V100 (GPU) ×2".into(),
+            platforms: vec!["CPU".into(), "GPU".into()],
+            slots: 2,
+        },
+        NodeSpec {
+            name: "C-2".into(),
+            arch: "x86_64".into(),
+            cpu_desc: "AMD EPYC 7543 @ 2.80GHz".into(),
+            cpus: 48,
+            memory_gb: 64.0,
+            accelerator: "Xilinx Alveo U280 (FPGA)".into(),
+            platforms: vec!["CPU".into(), "ALVEO".into()],
+            slots: 1,
+        },
+    ];
+    Topology::new(
+        vec![
+            SiteSpec { name: "cloud".into(), tier: SiteTier::Cloud, nodes: cloud_nodes },
+            SiteSpec { name: "edge".into(), tier: SiteTier::Edge, nodes: edge_nodes },
+            SiteSpec { name: "far-edge".into(), tier: SiteTier::FarEdge, nodes: far_nodes },
+        ],
+        vec![
+            LinkSpec { a: "cloud".into(), b: "edge".into(), rtt_ms: 18.0, gbps: 10.0 },
+            LinkSpec { a: "edge".into(), b: "far-edge".into(), rtt_ms: 4.0, gbps: 1.0 },
+        ],
+    )
+    .expect("built-in testbed is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_has_three_tiers_and_multi_hop_costs() {
+        let t = continuum_testbed();
+        assert_eq!(t.sites().len(), 3);
+        assert_eq!(t.site("cloud").unwrap().tier, SiteTier::Cloud);
+        assert_eq!(t.site("far-edge").unwrap().tier, SiteTier::FarEdge);
+        assert_eq!(t.rtt_ms("edge", "edge"), Some(0.0));
+        assert_eq!(t.rtt_ms("cloud", "edge"), Some(18.0));
+        assert_eq!(t.rtt_ms("edge", "far-edge"), Some(4.0));
+        // No direct cloud↔far-edge link: the cost is the two-hop sum.
+        assert_eq!(t.rtt_ms("cloud", "far-edge"), Some(22.0));
+        assert_eq!(t.rtt_ms("cloud", "nowhere"), None);
+    }
+
+    #[test]
+    fn transfer_uses_the_bottleneck_bandwidth() {
+        let t = continuum_testbed();
+        // 1 MB within a site: free.
+        assert_eq!(t.transfer_ms("edge", "edge", 1_000_000), Some(0.0));
+        // Over the 1 Gbit/s edge↔far-edge link: 8 ms per MB.
+        let direct = t.transfer_ms("edge", "far-edge", 1_000_000).unwrap();
+        assert!((direct - 8.0).abs() < 1e-9, "{direct}");
+        // Cloud→far-edge crosses 10 and 1 Gbit/s links: the bottleneck
+        // (1 Gbit/s) governs.
+        let two_hop = t.transfer_ms("cloud", "far-edge", 1_000_000).unwrap();
+        assert!((two_hop - 8.0).abs() < 1e-9, "{two_hop}");
+        let cost = t.link_cost_ms("cloud", "far-edge", 1_000_000).unwrap();
+        assert!((cost - 30.0).abs() < 1e-9, "22 ms RTT + 8 ms transfer, got {cost}");
+    }
+
+    #[test]
+    fn disconnected_sites_have_no_cost() {
+        let island = SiteSpec {
+            name: "island".into(),
+            tier: SiteTier::Edge,
+            nodes: paper_testbed(),
+        };
+        let mainland = SiteSpec {
+            name: "mainland".into(),
+            tier: SiteTier::Cloud,
+            nodes: paper_testbed(),
+        };
+        let t = Topology::new(vec![island, mainland], vec![]).unwrap();
+        assert_eq!(t.rtt_ms("island", "mainland"), None);
+        assert_eq!(t.link_cost_ms("island", "mainland", 64), None);
+        assert_eq!(t.rtt_ms("island", "island"), Some(0.0));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_topologies() {
+        let site = |name: &str| SiteSpec {
+            name: name.into(),
+            tier: SiteTier::Edge,
+            nodes: paper_testbed(),
+        };
+        assert!(Topology::new(vec![], vec![]).is_err(), "no sites");
+        assert!(Topology::new(vec![site("a"), site("a")], vec![]).is_err(), "duplicate");
+        let empty =
+            SiteSpec { name: "e".into(), tier: SiteTier::Edge, nodes: vec![] };
+        assert!(Topology::new(vec![empty], vec![]).is_err(), "no nodes");
+        let bad_link = LinkSpec { a: "a".into(), b: "ghost".into(), rtt_ms: 1.0, gbps: 1.0 };
+        assert!(Topology::new(vec![site("a")], vec![bad_link]).is_err(), "unknown endpoint");
+        let self_loop = LinkSpec { a: "a".into(), b: "a".into(), rtt_ms: 1.0, gbps: 1.0 };
+        assert!(Topology::new(vec![site("a")], vec![self_loop]).is_err());
+        let neg = LinkSpec { a: "a".into(), b: "b".into(), rtt_ms: -1.0, gbps: 1.0 };
+        assert!(Topology::new(vec![site("a"), site("b")], vec![neg]).is_err());
+        let zero_bw = LinkSpec { a: "a".into(), b: "b".into(), rtt_ms: 1.0, gbps: 0.0 };
+        assert!(Topology::new(vec![site("a"), site("b")], vec![zero_bw]).is_err());
+    }
+
+    #[test]
+    fn config_round_trip() {
+        let cfg = Config::parse(
+            r#"
+[[site]]
+name = "core"
+tier = "cloud"
+
+[[site]]
+name = "street"
+tier = "far-edge"
+
+[[node]]
+site = "core"
+name = "big"
+platforms = ["CPU", "GPU"]
+memory_gb = 64.0
+slots = 2
+
+[[node]]
+site = "street"
+name = "cam"
+arch = "arm64"
+platforms = ["ARM", "AGX"]
+memory_gb = 8.0
+
+[[link]]
+a = "core"
+b = "street"
+rtt_ms = 25.0
+gbps = 0.5
+"#,
+        )
+        .unwrap();
+        let t = Topology::from_config(&cfg).unwrap();
+        assert_eq!(t.sites().len(), 2);
+        assert_eq!(t.site("core").unwrap().tier, SiteTier::Cloud);
+        assert_eq!(t.site("street").unwrap().nodes[0].arch, "arm64");
+        assert_eq!(t.rtt_ms("core", "street"), Some(25.0));
+        // A node naming a ghost site is an error.
+        let bad = Config::parse(
+            "[[site]]\nname = \"a\"\n\n[[node]]\nsite = \"ghost\"\nname = \"n\"\nplatforms = [\"CPU\"]\n",
+        )
+        .unwrap();
+        assert!(Topology::from_config(&bad).is_err());
+    }
+}

@@ -1,13 +1,14 @@
 //! `tf2aif bench` — fabric performance sweeps and their trajectory file.
 //!
-//! Three measurements, all driven through the identical `Fabric::run_with`
-//! loop and written to machine-readable `BENCH_fabric.json` so every
-//! future performance PR has a trajectory to beat:
+//! Five measurements, the fabric-level ones all driven through the
+//! identical `Fabric::run_with` loop and written to machine-readable
+//! `BENCH_fabric.json` so every future performance PR has a trajectory
+//! to beat:
 //!
 //! 1. **Fused sweep** (PR 2): for every (batch size × arrival rate)
 //!    point, fused batch execution (one device dispatch per drained
 //!    batch) vs the per-item reference path under the same Poisson load.
-//! 2. **Control sweep** (this PR): for every arrival rate, the adaptive
+//! 2. **Control sweep** (PR 3): for every arrival rate, the adaptive
 //!    batch controller vs every fixed `max_batch` setting — the claim
 //!    under test is that one self-tuning controller matches the best
 //!    hand-picked constant at high load while holding the tail inside
@@ -16,13 +17,19 @@
 //!    single-replica fleet and against the backlog-driven autoscaler —
 //!    the claim under test is that scaling out absorbs load the fixed
 //!    replica count sheds.
-//! 4. **Tenancy** (this PR, schema v3): the deterministic fairness /
-//!    quota / priority-shed scenarios ([`tenancy::run_scenarios`]) plus
-//!    a real asymmetric drive — a hot tenant offering 10× the cold
-//!    tenant's load through the same fleet — with per-tenant admission
-//!    and latency accounting.  The claim under test is that
-//!    weighted-fair draining holds the hot tenant to its share
+//! 4. **Tenancy** (schema v3): the deterministic fairness / quota /
+//!    priority-shed scenarios ([`tenancy::run_scenarios`]) plus a real
+//!    asymmetric drive — a hot tenant offering 10× the cold tenant's
+//!    load through the same fleet — with per-tenant admission and
+//!    latency accounting.  The claim under test is that weighted-fair
+//!    draining holds the hot tenant to its share
 //!    (`fair_share_within_tolerance`, CI-gated).
+//! 5. **Continuum** (schema v4): the deterministic multi-site scenarios
+//!    ([`crate::continuum::run_scenarios`]) — spillover past a saturated
+//!    preferred site, mid-stream site loss with no admitted work
+//!    dropped, min-energy vs min-latency plan divergence — plus a mixed
+//!    drive over the 3-site testbed with per-site joules/request rows.
+//!    CI gates on `spillover_recovers` and `replan_no_drop`.
 //!
 //! Dedup and the response cache are disabled for every measurement (the
 //! payload pool recycles tensors; collapsing them would measure
@@ -36,6 +43,10 @@ use anyhow::{bail, Context as _, Result};
 
 use crate::backend::{Backend, Policy};
 use crate::cluster::{paper_testbed, Cluster};
+use crate::continuum::{
+    continuum_testbed, ContinuumOrchestrator, ContinuumRunReport, ContinuumVerdicts,
+    PlanPolicy,
+};
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::workload::{image_like, Arrival, TenantMix};
@@ -507,6 +518,7 @@ pub fn run_autoscale_compare(cfg: &BenchConfig) -> Result<AutoscaleCompare> {
             hold_ticks: 1,
             cooldown_ticks: 2,
             interval_ms: 2,
+            predictive: false,
         }),
         ..base.clone()
     };
@@ -564,6 +576,60 @@ pub fn run_tenancy_bench(cfg: &BenchConfig) -> Result<TenancyBench> {
     Ok(TenancyBench { rate_rps: rate, hot_factor, tenants, verdicts })
 }
 
+/// The continuum measurement (schema v4): the deterministic multi-site
+/// scenario verdicts ([`crate::continuum::run_scenarios`]) plus a real
+/// mixed drive across the 3-site testbed with a mid-stream loss of the
+/// edge site, reported per site with joules/request.
+#[derive(Debug, Clone)]
+pub struct ContinuumBench {
+    /// Poisson arrival rate of the mixed drive, requests/second.
+    pub rate_rps: f64,
+    /// The deterministic scenario verdicts (`spillover_recovers` and
+    /// `replan_no_drop` are CI gates).
+    pub verdicts: ContinuumVerdicts,
+    /// Accounting of the mixed drive, per-site rows included
+    /// (`drive.per_site`; the lost site frozen at loss time).
+    pub drive: ContinuumRunReport,
+}
+
+/// Run the continuum measurement: scenarios first (deterministic, no
+/// wall-clock sensitivity — these carry the verdicts), then a mixed
+/// full-catalog drive over the built-in 3-site testbed under the
+/// `balanced` policy, killing the edge site halfway through so the
+/// per-site table shows replanned traffic and energy.
+pub fn run_continuum_bench(cfg: &BenchConfig) -> Result<ContinuumBench> {
+    let verdicts = crate::continuum::run_scenarios(cfg.seed);
+    let rate = cfg.rates.iter().copied().fold(f64::NAN, f64::max);
+    if !rate.is_finite() {
+        bail!("continuum bench needs at least one rate");
+    }
+    let max_batch = cfg.batches.iter().copied().max().unwrap_or(1).max(1);
+    let fcfg = FabricConfig { max_batch, ..base_fabric_config(cfg) };
+    let mut orch = ContinuumOrchestrator::deploy_sim(
+        continuum_testbed(),
+        sim::synthetic_catalog(),
+        PlanPolicy::Balanced,
+        "edge",
+        &fcfg,
+        &BTreeMap::new(),
+    )
+    .context("deploying the continuum testbed")?;
+    let entries: Vec<(String, u32)> =
+        orch.plan().models().iter().map(|m| (m.to_string(), 1)).collect();
+    let mix = TenantMix::new(&entries)?;
+    let drive = orch
+        .run(
+            cfg.requests,
+            Arrival::Poisson { rps: rate },
+            cfg.seed,
+            &mix,
+            Some((cfg.requests / 2, "edge")),
+        )
+        .context("mixed continuum drive")?;
+    orch.shutdown();
+    Ok(ContinuumBench { rate_rps: rate, verdicts, drive })
+}
+
 fn side_json(b: &BenchSide) -> Json {
     obj(vec![
         ("submitted", n(b.submitted as f64)),
@@ -580,10 +646,10 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v3,
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v4,
 /// documented in `docs/CLI.md`) — the perf trajectory future PRs
-/// measure against.  `control`, `autoscale` and `tenancy` are optional
-/// sections; the PR 2 fused sweep is always present.
+/// measure against.  `control`, `autoscale`, `tenancy` and `continuum`
+/// are optional sections; the PR 2 fused sweep is always present.
 pub fn write_json(
     path: impl AsRef<Path>,
     cfg: &BenchConfig,
@@ -591,6 +657,7 @@ pub fn write_json(
     control: Option<&ControlSweep>,
     autoscale: Option<&AutoscaleCompare>,
     tenancy_bench: Option<&TenancyBench>,
+    continuum: Option<&ContinuumBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -606,7 +673,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(3.0)),
+        ("version", n(4.0)),
         (
             "config",
             obj(vec![
@@ -730,6 +797,59 @@ pub fn write_json(
                     "shed_priority_ordered",
                     Json::Bool(t.verdicts.shed_priority_ordered),
                 ),
+            ]),
+        ));
+    }
+    if let Some(c) = continuum {
+        let v = &c.verdicts;
+        let site_rows: Vec<Json> = c
+            .drive
+            .per_site
+            .iter()
+            .map(|row| {
+                obj(vec![
+                    ("site", s(row.site.clone())),
+                    ("tier", s(row.tier.name().to_string())),
+                    ("lost", Json::Bool(row.lost)),
+                    ("pods", n(row.pods as f64)),
+                    ("completed", n(row.completed as f64)),
+                    ("shed", n(row.shed as f64)),
+                    ("admitted", n(row.admitted as f64)),
+                    ("spillover_in", n(row.spillover_in as f64)),
+                    ("joules", n(row.energy.joules)),
+                    ("j_per_request", n(row.energy.j_per_request)),
+                    ("mean_utilization", n(row.energy.mean_utilization)),
+                    ("throughput_rps", n(row.throughput_rps)),
+                ])
+            })
+            .collect();
+        top.push((
+            "continuum",
+            obj(vec![
+                ("rate_rps", n(c.rate_rps)),
+                ("spilled", n(v.spilled as f64)),
+                ("spill_completed", n(v.spill_completed as f64)),
+                ("spillover_recovers", Json::Bool(v.spillover_recovers)),
+                ("replan_moves", n(v.replan_moves as f64)),
+                ("replan_no_drop", Json::Bool(v.replan_no_drop)),
+                ("min_latency_energy_j", n(v.min_latency_energy_j)),
+                ("min_energy_energy_j", n(v.min_energy_energy_j)),
+                ("min_latency_ms", n(v.min_latency_ms)),
+                ("min_energy_ms", n(v.min_energy_ms)),
+                ("energy_policy_tradeoff", Json::Bool(v.energy_policy_tradeoff)),
+                (
+                    "drive",
+                    obj(vec![
+                        ("submitted", n(c.drive.submitted as f64)),
+                        ("completed", n(c.drive.completed as f64)),
+                        ("shed", n(c.drive.shed as f64)),
+                        ("failed", n(c.drive.failed as f64)),
+                        ("spilled", n(c.drive.spilled as f64)),
+                        ("spill_completed", n(c.drive.spill_completed as f64)),
+                        ("wall_s", n(c.drive.wall_s)),
+                    ]),
+                ),
+                ("sites", Json::Arr(site_rows)),
             ]),
         ));
     }
@@ -902,10 +1022,60 @@ mod tests {
                 shed_priority_ordered: true,
             },
         };
+        let cb = ContinuumBench {
+            rate_rps: 2000.0,
+            verdicts: ContinuumVerdicts {
+                spilled: 12,
+                spill_completed: 12,
+                spillover_recovers: true,
+                replan_moves: 1,
+                replan_no_drop: true,
+                min_latency_energy_j: 0.2,
+                min_energy_energy_j: 0.05,
+                min_latency_ms: 1.1,
+                min_energy_ms: 6.5,
+                energy_policy_tradeoff: true,
+            },
+            drive: ContinuumRunReport {
+                submitted: 100,
+                completed: 98,
+                shed: 2,
+                failed: 0,
+                spilled: 5,
+                spill_completed: 5,
+                e2e_ms: crate::util::stats::Series::new(),
+                wall_s: 1.0,
+                per_site: vec![crate::continuum::SiteRunReport {
+                    site: "edge".into(),
+                    tier: crate::continuum::SiteTier::Edge,
+                    lost: true,
+                    pods: 4,
+                    completed: 50,
+                    shed: 1,
+                    admitted: 51,
+                    spillover_in: 0,
+                    energy: crate::continuum::SiteEnergy {
+                        joules: 120.0,
+                        j_per_request: 2.4,
+                        mean_utilization: 0.6,
+                    },
+                    throughput_rps: 50.0,
+                    mean_service_ms: 1.2,
+                }],
+            },
+        };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], Some(&sweep), Some(&cmp), Some(&tb))
-            .unwrap();
+        write_json(
+            &path,
+            &BenchConfig::default(),
+            &[p],
+            Some(&sweep),
+            Some(&cmp),
+            Some(&tb),
+            Some(&cb),
+        )
+        .unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
         let doc = Json::parse(&src).unwrap();
         let pts = doc.get("points").unwrap().arr().unwrap();
@@ -931,7 +1101,15 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
-        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 3);
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 4);
+        let cont = doc.get("continuum").unwrap();
+        assert!(matches!(cont.get("spillover_recovers").unwrap(), Json::Bool(true)));
+        assert!(matches!(cont.get("replan_no_drop").unwrap(), Json::Bool(true)));
+        assert!(matches!(cont.get("energy_policy_tradeoff").unwrap(), Json::Bool(true)));
+        let cont_sites = cont.get("sites").unwrap().arr().unwrap();
+        assert_eq!(cont_sites[0].get("site").unwrap().str().unwrap(), "edge");
+        assert!(matches!(cont_sites[0].get("lost").unwrap(), Json::Bool(true)));
+        assert!(cont_sites[0].get("j_per_request").unwrap().f64().unwrap() > 0.0);
         let ten = doc.get("tenancy").unwrap();
         assert!(matches!(
             ten.get("fair_share_within_tolerance").unwrap(),
@@ -955,11 +1133,12 @@ mod tests {
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], None, None, None).unwrap();
+        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None).unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(doc.opt("control").is_none());
         assert!(doc.opt("autoscale").is_none());
         assert!(doc.opt("tenancy").is_none());
+        assert!(doc.opt("continuum").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -89,6 +89,98 @@ impl TokenBucket {
     }
 }
 
+/// Observations an [`ArrivalRate`] needs before it reports a rate —
+/// a couple of early requests must not produce a wild forecast.
+const ARRIVAL_MIN_OBS: u64 = 8;
+
+/// Silence after which an [`ArrivalRate`] reports no rate at all
+/// instead of an ever-decaying one: a stream that stopped this long
+/// ago is no demand signal, and a strictly-positive stale estimate
+/// would otherwise block "scale down only when fully idle"
+/// configurations (`scale_down_backlog == 0`) forever.
+const ARRIVAL_IDLE_RESET_S: f64 = 5.0;
+
+/// EWMA arrival-rate estimator — the predictive autoscaler's demand
+/// signal.  Every submission (admitted or shed) feeds one observation;
+/// the estimate is the reciprocal of the smoothed inter-arrival gap,
+/// decayed naturally by silence: the gap used is never smaller than the
+/// time since the last arrival, so a stream that stops reads as a
+/// falling rate instead of a frozen one.  Time is passed explicitly
+/// ([`observe_at`](Self::observe_at) / [`rate_rps_at`](Self::rate_rps_at))
+/// so the estimator is exactly testable, mirroring [`TokenBucket`].
+#[derive(Debug)]
+pub struct ArrivalRate {
+    alpha: f64,
+    state: Mutex<ArrivalState>,
+}
+
+#[derive(Debug, Default)]
+struct ArrivalState {
+    last: Option<Instant>,
+    ewma_gap_s: f64,
+    observations: u64,
+}
+
+impl ArrivalRate {
+    /// New estimator with EWMA smoothing `alpha` in (0, 1].
+    pub fn new(alpha: f64) -> ArrivalRate {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        ArrivalRate { alpha, state: Mutex::new(ArrivalState::default()) }
+    }
+
+    /// Fold one arrival at `now` into the gap EWMA.  Backwards `now`
+    /// values count as a zero gap and never rewind the clock.
+    pub fn observe_at(&self, now: Instant) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(last) = s.last {
+            let gap = now.saturating_duration_since(last).as_secs_f64();
+            s.ewma_gap_s = if s.observations <= 1 {
+                gap
+            } else {
+                self.alpha * gap + (1.0 - self.alpha) * s.ewma_gap_s
+            };
+            s.last = Some(last.max(now));
+        } else {
+            s.last = Some(now);
+        }
+        s.observations += 1;
+    }
+
+    /// [`observe_at`](Self::observe_at) against the real clock.
+    pub fn observe(&self) {
+        self.observe_at(Instant::now());
+    }
+
+    /// Estimated arrival rate as of `now`, requests/second — `None`
+    /// until enough observations accumulated, while the measured gap is
+    /// zero (indistinguishable timestamps), or after
+    /// `ARRIVAL_IDLE_RESET_S` of silence (the stream stopped; the
+    /// estimator reads as cold rather than asymptotically slow).
+    pub fn rate_rps_at(&self, now: Instant) -> Option<f64> {
+        let s = self.state.lock().unwrap();
+        if s.observations < ARRIVAL_MIN_OBS {
+            return None;
+        }
+        let last = s.last?;
+        let idle = now.saturating_duration_since(last).as_secs_f64();
+        if idle > ARRIVAL_IDLE_RESET_S {
+            return None;
+        }
+        let gap = s.ewma_gap_s.max(idle);
+        (gap > 0.0).then(|| 1.0 / gap)
+    }
+
+    /// [`rate_rps_at`](Self::rate_rps_at) against the real clock.
+    pub fn rate_rps(&self) -> Option<f64> {
+        self.rate_rps_at(Instant::now())
+    }
+
+    /// Arrivals observed so far.
+    pub fn observations(&self) -> u64 {
+        self.state.lock().unwrap().observations
+    }
+}
+
 /// Tuning for one pod's [`BatchController`].
 #[derive(Debug, Clone)]
 pub struct BatchControlConfig {
@@ -189,8 +281,27 @@ impl BatchController {
         batch_tail_ms: f64,
         fb: Option<Feedback>,
     ) {
+        self.observe_with_slo(drained, depth_after, batch_tail_ms, fb, None);
+    }
+
+    /// [`observe`](Self::observe) with a per-cycle SLO override: when
+    /// the drained batch was dominated by a tenant carrying its own p99
+    /// target (`TenantSpec::slo_p99_ms`), the back-off term measures
+    /// against *that* target instead of the fabric-wide one — a strict
+    /// tenant's traffic shrinks batches sooner, a lax tenant's lets
+    /// them ride the amortization curve longer.  `None` uses the
+    /// configured global SLO.
+    pub fn observe_with_slo(
+        &self,
+        drained: usize,
+        depth_after: usize,
+        batch_tail_ms: f64,
+        fb: Option<Feedback>,
+        slo_override: Option<f64>,
+    ) {
         let min = self.cfg.min_batch.max(1);
         let max = self.cfg.max_batch.max(min);
+        let slo_p99_ms = slo_override.unwrap_or(self.cfg.slo_p99_ms);
         let fb_tail_ms = fb.map_or(0.0, |f| f.ewma_service_ms + f.ewma_queue_wait_ms);
         let tail = batch_tail_ms.max(fb_tail_ms);
         let mut s = self.state.lock().unwrap();
@@ -199,8 +310,7 @@ impl BatchController {
         } else {
             self.cfg.alpha * tail + (1.0 - self.cfg.alpha) * s.ewma_tail_ms
         };
-        if self.cfg.slo_p99_ms > 0.0 && s.ewma_tail_ms > self.cfg.headroom * self.cfg.slo_p99_ms
-        {
+        if slo_p99_ms > 0.0 && s.ewma_tail_ms > self.cfg.headroom * slo_p99_ms {
             s.target = (s.target / 2).clamp(min, max);
         } else if drained >= s.target && depth_after > 0 {
             s.target = (s.target.saturating_mul(2)).clamp(min, max);
@@ -282,6 +392,13 @@ pub struct AutoscaleConfig {
     /// stepped manually via `Fabric::autoscale_tick` (deterministic
     /// tests, external schedulers).
     pub interval_ms: u64,
+    /// Predictive scaling: fold the per-model arrival-rate EWMA
+    /// ([`ArrivalRate`]) into the overload signal and scale on the
+    /// *forecast* per-replica concurrency (Little's law: offered rate ×
+    /// estimated latency / active replicas) instead of waiting for the
+    /// backlog to materialize.  The reactive backlog/shed path stays
+    /// active underneath as the fallback.
+    pub predictive: bool,
 }
 
 impl Default for AutoscaleConfig {
@@ -294,6 +411,7 @@ impl Default for AutoscaleConfig {
             hold_ticks: 2,
             cooldown_ticks: 2,
             interval_ms: 20,
+            predictive: false,
         }
     }
 }
@@ -446,6 +564,81 @@ mod tests {
             c.observe(c.drain_size(), 16, 1e9, None);
         }
         assert_eq!(c.drain_size(), 8, "no SLO → pure backlog adaptation");
+    }
+
+    #[test]
+    fn tenant_slo_override_backs_off_where_the_global_slo_would_not() {
+        // Global SLO 100 ms: a 30 ms tail is comfortable.  A strict
+        // tenant's 10 ms override must halve the target on the same
+        // observation.
+        let lax = ctl(16, 100.0);
+        let strict = ctl(16, 100.0);
+        for _ in 0..8 {
+            lax.observe_with_slo(lax.drain_size(), 32, 30.0, None, None);
+            strict.observe_with_slo(strict.drain_size(), 32, 30.0, None, Some(10.0));
+        }
+        assert_eq!(lax.drain_size(), 16, "30 ms is inside a 100 ms SLO");
+        assert_eq!(strict.drain_size(), 1, "the 10 ms override must pin the floor");
+        // And a lax override relaxes a strict global SLO symmetrically.
+        let relaxed = ctl(16, 10.0);
+        for _ in 0..8 {
+            relaxed.observe_with_slo(relaxed.drain_size(), 32, 30.0, None, Some(1000.0));
+        }
+        assert_eq!(relaxed.drain_size(), 16, "the override replaces the global SLO");
+    }
+
+    #[test]
+    fn arrival_rate_estimates_a_steady_stream() {
+        let r = ArrivalRate::new(0.3);
+        let t0 = Instant::now();
+        // 1 arrival per ms → 1000 rps.
+        for i in 0..20u64 {
+            r.observe_at(t0 + Duration::from_millis(i));
+        }
+        let at = t0 + Duration::from_millis(19);
+        let rate = r.rate_rps_at(at).expect("20 observations suffice");
+        assert!((rate - 1000.0).abs() < 1.0, "rate {rate}");
+        assert_eq!(r.observations(), 20);
+    }
+
+    #[test]
+    fn arrival_rate_warms_up_and_decays_with_silence() {
+        let r = ArrivalRate::new(0.3);
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            r.observe_at(t0 + Duration::from_millis(i));
+        }
+        assert!(r.rate_rps_at(t0 + Duration::from_millis(4)).is_none(), "below min obs");
+        for i in 4..12u64 {
+            r.observe_at(t0 + Duration::from_millis(i));
+        }
+        let fresh = r.rate_rps_at(t0 + Duration::from_millis(11)).unwrap();
+        // One second of silence: the effective gap grows to the idle
+        // span, so the estimate falls instead of freezing.
+        let stale = r.rate_rps_at(t0 + Duration::from_millis(1011)).unwrap();
+        assert!(stale < fresh / 100.0, "fresh {fresh} vs stale {stale}");
+        assert!((stale - 1.0).abs() < 0.1, "1 s since last arrival → ~1 rps");
+        // Past the reset horizon the stream reads as cold, not as an
+        // asymptotically tiny (but forever positive) rate.
+        assert!(
+            r.rate_rps_at(t0 + Duration::from_secs(60)).is_none(),
+            "long silence must reset the estimator"
+        );
+    }
+
+    #[test]
+    fn arrival_rate_never_credits_backwards_time() {
+        let r = ArrivalRate::new(0.5);
+        let t0 = Instant::now();
+        for i in 0..10u64 {
+            r.observe_at(t0 + Duration::from_millis(10 * i));
+        }
+        let before = r.rate_rps_at(t0 + Duration::from_millis(90)).unwrap();
+        // A backwards timestamp is a zero gap, pushing the EWMA up
+        // (faster), never rewinding the clock.
+        r.observe_at(t0);
+        let after = r.rate_rps_at(t0 + Duration::from_millis(90)).unwrap();
+        assert!(after >= before, "{after} vs {before}");
     }
 
     #[test]

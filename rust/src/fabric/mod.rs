@@ -38,12 +38,19 @@
 //!   [`control::BatchController`] picks the drain size per cycle from
 //!   observed queue depth and the EWMA service/queue-wait feedback,
 //!   growing batches under backlog and shrinking them when the tail
-//!   approaches `slo_p99_ms` — the knob tunes itself.
+//!   approaches `slo_p99_ms` — the knob tunes itself.  A batch
+//!   dominated by a tenant carrying its own SLO
+//!   (`TenantSpec::slo_p99_ms`, `--tenant-slo`) backs off against that
+//!   tenant's target instead of the global one.
 //! - **Backlog-driven autoscaling** (`FabricConfig::autoscale`) — a
 //!   control loop spawns and retires pod replicas per model from
 //!   sustained backlog and shed counters, with hysteresis, cooldown and
 //!   per-platform replica ceilings, placing new pods through the same
 //!   `backend` ranking (feedback-blended) the initial placement used.
+//!   With `AutoscaleConfig::predictive` the per-model offered-arrival
+//!   EWMA is folded in as a forecast (Little's law), so the fleet
+//!   scales on demand it can *see coming* instead of waiting for the
+//!   backlog to materialize — the reactive path stays as the fallback.
 //! - **Response cache** (`FabricConfig::cache_capacity`) — a bounded,
 //!   TTL'd `sha256(model, payload) → response` store answers repeats of
 //!   recently completed requests without touching a queue.
@@ -99,7 +106,7 @@ use crate::workload::{image_like, Arrival};
 
 use cache::ResponseCache;
 pub use cache::CacheStats;
-use control::{BatchControlConfig, BatchController, HysteresisGate};
+use control::{ArrivalRate, BatchControlConfig, BatchController, HysteresisGate};
 pub use control::{AutoscaleConfig, ScaleDirection, ScaleEvent};
 use queue::{LaneConfig, Push, TenantQueue};
 use sim::{Gate, SimPod};
@@ -483,6 +490,17 @@ struct FabricInner {
     /// Lane layout shared by every pod queue (computed once from the
     /// tenant registry and `queue_capacity`; reused at scale-up).
     lanes: Vec<LaneConfig>,
+    /// Per-lane SLO overrides: a drained batch dominated by lane `i`
+    /// backs its pod's adaptive controller off against `lane_slos[i]`
+    /// (when set) instead of the fabric-wide `slo_p99_ms`.
+    lane_slos: Vec<Option<f64>>,
+    /// Per-model offered-arrival EWMAs (every submission counts, admitted
+    /// or not) — the predictive autoscaler's demand signal.  Built once
+    /// at spawn (the model set is fixed; the autoscaler only adds
+    /// replicas of existing models) and empty unless predictive scaling
+    /// is configured, so the admission path pays at most one lock-free
+    /// map lookup plus the estimator's own mutex.
+    arrivals: BTreeMap<String, ArrivalRate>,
     /// The cluster the fabric owns: autoscaler binds/terminates pods
     /// against the same slot and memory accounting placement used.
     cluster: Mutex<Cluster>,
@@ -687,6 +705,7 @@ impl Fabric {
         // surfaces here as a typed error, before any thread spawns.
         let tenants = TenantRegistry::build(&cfg.tenants).map_err(anyhow::Error::new)?;
         let lanes = tenants.lane_configs(cfg.queue_capacity);
+        let lane_slos = tenants.lane_slos();
         let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
         let cache = (cfg.cache_capacity > 0).then(|| {
             Arc::new(ResponseCache::new(
@@ -729,6 +748,18 @@ impl Fabric {
             registry.by_model.entry(plan.model.clone()).or_default().push(idx);
             registry.pods.push(Arc::new(new_runtime(plan, executor, &cfg, 0.0, &lanes)));
         }
+        // One estimator per model, up front: the model set never grows
+        // after spawn, so the admission path reads an immutable map.
+        let arrivals: BTreeMap<String, ArrivalRate> =
+            if cfg.autoscale.as_ref().map_or(false, |a| a.predictive) {
+                registry
+                    .by_model
+                    .keys()
+                    .map(|m| (m.clone(), ArrivalRate::new(0.2)))
+                    .collect()
+            } else {
+                BTreeMap::new()
+            };
         let inner = Arc::new(FabricInner {
             registry: RwLock::new(registry),
             input_shapes,
@@ -736,6 +767,8 @@ impl Fabric {
             cfg,
             tenants,
             lanes,
+            lane_slos,
+            arrivals,
             cluster: Mutex::new(env.cluster),
             factory: env.factory,
             scaler,
@@ -1137,13 +1170,15 @@ impl Fabric {
         }
     }
 
-    /// Stop the control thread, close every pod queue, drain backlogs,
-    /// join workers.
-    pub fn shutdown(mut self) {
+    /// Close every pod queue and join the batcher workers, draining all
+    /// admitted work to completion, WITHOUT consuming the fabric —
+    /// reports stay queryable afterwards, so a caller that needs
+    /// post-drain counters (the continuum's graceful whole-site loss
+    /// freezes its report row from them) can read before the final
+    /// [`shutdown`](Self::shutdown).  Signals the control thread to
+    /// stop but does not join it; idempotent.
+    pub fn drain(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.scaler_thread.take() {
-            let _ = h.join();
-        }
         let pods: Vec<Arc<PodRuntime>> = self.inner.registry.read().unwrap().pods.clone();
         for p in &pods {
             p.queue.close();
@@ -1153,6 +1188,16 @@ impl Fabric {
                 let _ = w.join();
             }
         }
+    }
+
+    /// Stop the control thread, close every pod queue, drain backlogs,
+    /// join workers.
+    pub fn shutdown(mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scaler_thread.take() {
+            let _ = h.join();
+        }
+        self.drain();
     }
 }
 
@@ -1188,6 +1233,21 @@ fn new_runtime(
     }
 }
 
+/// Lane holding a plurality of the drained batch's items — the batch's
+/// dominant tenant.  Ties break toward the lower lane index, so the
+/// outcome is deterministic whatever the drain interleaving was.
+/// `None` only for an empty batch.
+fn dominant_lane(batch: &[Work]) -> Option<usize> {
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for w in batch {
+        *counts.entry(w.lane).or_insert(0) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(lane, _)| lane)
+}
+
 /// Spawn one pod's batcher workers (free function: worker threads hold
 /// an `Arc` of the whole fabric state, which `&self` methods cannot
 /// mint on stable Rust).
@@ -1210,6 +1270,9 @@ impl FabricInner {
     fn worker_loop(&self, pod: &Arc<PodRuntime>) {
         let linger = Duration::from_secs_f64(self.cfg.batch_linger_ms.max(0.0) / 1e3);
         let max_batch = self.cfg.max_batch.max(1);
+        // Dominant-tenant resolution is only worth the per-batch count
+        // when some tenant actually carries an SLO override.
+        let slos_active = self.lane_slos.iter().any(Option::is_some);
         // One clone up front: the executor slot is emptied only after
         // every worker has been joined, so a running worker always
         // owns a live handle without re-locking per batch.
@@ -1224,6 +1287,14 @@ impl FabricInner {
                 break;
             };
             let drained = batch.len();
+            // Per-tenant SLOs: the batch's dominant tenant decides the
+            // target the controller backs off against this cycle.
+            let slo_override = if slos_active {
+                dominant_lane(&batch)
+                    .and_then(|lane| self.lane_slos.get(lane).copied().flatten())
+            } else {
+                None
+            };
             let mut tail_ms = 0.0f64;
             {
                 let mut finish = |fan: Arc<Fanout>, result: Result<Response>| {
@@ -1269,7 +1340,13 @@ impl FabricInner {
                 }
             }
             if let Some(c) = &pod.controller {
-                c.observe(drained, pod.queue.len(), tail_ms, self.feedback.get(&pod.key));
+                c.observe_with_slo(
+                    drained,
+                    pod.queue.len(),
+                    tail_ms,
+                    self.feedback.get(&pod.key),
+                    slo_override,
+                );
             }
         }
     }
@@ -1315,6 +1392,13 @@ impl FabricInner {
         );
         let scored = self.candidates(model)?;
         tenant.stats.note_submitted();
+        // Offered demand — admitted or not — feeds the predictive
+        // autoscaler's arrival-rate estimate: load a fleet sheds is
+        // exactly the load a forecast must see.  (The map is empty
+        // unless predictive scaling is on.)
+        if let Some(rate) = self.arrivals.get(model) {
+            rate.observe();
+        }
 
         // Layer 0 — the tenant's own quota, BEFORE any global capacity
         // check: a tenant past its token bucket is shed no matter how
@@ -1491,6 +1575,20 @@ struct RouteOutcome {
     evicted: Vec<Work>,
 }
 
+/// Forecast level (per-replica concurrency) below which predictive
+/// demand reads as idle — see the idle gate in [`autoscale_tick`].
+const FORECAST_IDLE_EPS: f64 = 0.01;
+
+/// Forecast level at which predictive demand reads as overloaded.  The
+/// forecast is per-replica *concurrency* (Little's law: offered rate ×
+/// service time / replicas) — at 1.0 the offered load exactly saturates
+/// the active replicas and any excess MUST become queue depth, so the
+/// predictive path scales at the saturation boundary instead of
+/// borrowing `scale_up_backlog` (a queue-depth threshold in different
+/// units, which would defer predictive scale-ups until the backlog it
+/// exists to prevent was already inevitable).
+const FORECAST_SATURATION: f64 = 1.0;
+
 /// One autoscaler step: classify every model from mean backlog per
 /// active replica and shed deltas, debounce through the hysteresis
 /// gate, then act within min/max (and per-platform) bounds.  A free
@@ -1503,24 +1601,44 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
     let models: Vec<String> =
         inner.registry.read().unwrap().by_model.keys().cloned().collect();
     for model in models {
-        let (active, backlog_sum) = {
+        let (active, backlog_sum, est_sum_ms) = {
             let reg = inner.registry.read().unwrap();
             let mut active = 0usize;
             let mut backlog = 0u64;
+            let mut est_ms = 0.0f64;
             if let Some(idxs) = reg.by_model.get(&model) {
                 for &i in idxs {
                     let p = &reg.pods[i];
                     if !p.retired.load(Ordering::Relaxed) {
                         active += 1;
                         backlog += p.backlog.load(Ordering::Relaxed);
+                        est_ms += inner.feedback.blend(&p.key, p.plan.modeled_ms);
                     }
                 }
             }
-            (active, backlog)
+            (active, backlog, est_ms)
         };
         if active == 0 {
             continue;
         }
+        // Predictive signal — Little's law over the offered-arrival
+        // EWMA: the per-replica concurrency the current demand WILL
+        // sustain (rate × estimated service time / replicas), compared
+        // against the same thresholds the measured backlog is.  Zero
+        // when predictive scaling is off or the estimator is cold, so
+        // the reactive path below is always the fallback.
+        let forecast = if a.predictive {
+            inner
+                .arrivals
+                .get(&model)
+                .and_then(|r| r.rate_rps())
+                .map_or(0.0, |rate| {
+                    let mean_est_s = est_sum_ms / active as f64 / 1e3;
+                    rate * mean_est_s / active as f64
+                })
+        } else {
+            0.0
+        };
         // Priority-weighted shed pressure (capacity sheds + preemptions,
         // each scaled by 1 + priority rank): losing protected traffic
         // pushes scale-up harder than losing best-effort traffic, and
@@ -1536,15 +1654,26 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
             continue;
         }
         let mean_backlog = backlog_sum as f64 / active as f64;
-        let overloaded = mean_backlog >= a.scale_up_backlog || pressure_delta > 0.0;
-        let idle =
-            !overloaded && mean_backlog <= a.scale_down_backlog && pressure_delta == 0.0;
+        let overloaded = mean_backlog >= a.scale_up_backlog
+            || pressure_delta > 0.0
+            || forecast >= FORECAST_SATURATION;
+        // The forecast is continuous (unlike the integer backlog, it
+        // never hits an exact 0 while any trickle of demand flows), so
+        // the idle gate grants it a small floor: a forecast occupying
+        // under 1% of one replica must not pin a
+        // `scale_down_backlog == 0` fleet at its high-water mark.
+        let idle = !overloaded
+            && mean_backlog <= a.scale_down_backlog
+            && pressure_delta == 0.0
+            && forecast <= FORECAST_IDLE_EPS;
         match st.gate.decide(overloaded, idle, a.hold_ticks) {
             Some(ScaleDirection::Up) if active < a.max_replicas => {
                 let trigger = if pressure_delta > 0.0 {
                     format!("shed pressure +{pressure_delta:.1}")
-                } else {
+                } else if mean_backlog >= a.scale_up_backlog {
                     format!("backlog {mean_backlog:.1}/replica")
+                } else {
+                    format!("forecast {forecast:.1}/replica")
                 };
                 if scale_up(inner, &model, sc, active, &trigger) {
                     st.cooldown = a.cooldown_ticks;

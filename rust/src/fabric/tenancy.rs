@@ -115,6 +115,13 @@ pub struct TenantSpec {
     /// (0, 1].  At the cap a tenant may only displace its *own*
     /// lower-priority queued work, never another tenant's.
     pub max_queue_share: f64,
+    /// Per-tenant p99 SLO, ms end-to-end: batches *dominated* by this
+    /// tenant drive the pod's adaptive
+    /// [`BatchController`](super::control::BatchController) back-off
+    /// against this target instead of the fabric-wide
+    /// `FabricConfig::slo_p99_ms` (CLI: `--tenant-slo NAME:MS` or the
+    /// `slo=` spec field).  `None` = the global SLO applies.
+    pub slo_p99_ms: Option<f64>,
 }
 
 impl TenantSpec {
@@ -128,6 +135,7 @@ impl TenantSpec {
             rate_rps: None,
             burst: 1.0,
             max_queue_share: 1.0,
+            slo_p99_ms: None,
         }
     }
 
@@ -155,6 +163,14 @@ impl TenantSpec {
         }
         if !(self.max_queue_share > 0.0 && self.max_queue_share <= 1.0) {
             return Err(TenancyError::BadShare(self.id.clone()));
+        }
+        if let Some(slo) = self.slo_p99_ms {
+            if !(slo > 0.0) {
+                return Err(TenancyError::Malformed {
+                    entry: self.id.clone(),
+                    reason: format!("tenant SLO must be positive, got {slo}"),
+                });
+            }
         }
         Ok(())
     }
@@ -272,6 +288,11 @@ pub fn parse_tenant_specs(
                     t.max_queue_share =
                         v.trim().parse().map_err(|_| bad(format!("bad share {v:?}")))?;
                 }
+                "slo" => {
+                    t.slo_p99_ms = Some(
+                        v.trim().parse().map_err(|_| bad(format!("bad slo {v:?}")))?,
+                    );
+                }
                 other => return Err(bad(format!("unknown field {other:?}"))),
             }
         }
@@ -293,6 +314,38 @@ pub fn parse_tenant_specs(
         return Err(TenancyError::EmptySpec);
     }
     Ok(out)
+}
+
+/// Apply `--tenant-slo` overrides (`NAME:MS[,NAME:MS]...`) onto parsed
+/// specs.  Every named tenant must already exist in `specs` (the
+/// override attaches an SLO to a configured tenant, it does not invent
+/// one); unknown tenants, malformed entries and non-positive targets
+/// are typed errors.
+pub fn apply_tenant_slos(specs: &mut [TenantSpec], arg: &str) -> Result<(), TenancyError> {
+    for entry in arg.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((name, ms)) = entry.split_once(':') else {
+            return Err(TenancyError::Malformed {
+                entry: entry.to_string(),
+                reason: "expected NAME:MS".to_string(),
+            });
+        };
+        let name = name.trim();
+        let ms: f64 = ms.trim().parse().map_err(|_| TenancyError::Malformed {
+            entry: entry.to_string(),
+            reason: format!("bad SLO milliseconds {:?}", ms.trim()),
+        })?;
+        if !(ms > 0.0) {
+            return Err(TenancyError::Malformed {
+                entry: entry.to_string(),
+                reason: format!("tenant SLO must be positive, got {ms}"),
+            });
+        }
+        let Some(spec) = specs.iter_mut().find(|s| s.id == name) else {
+            return Err(TenancyError::UnknownTenant(name.to_string()));
+        };
+        spec.slo_p99_ms = Some(ms);
+    }
+    Ok(())
 }
 
 /// Runtime state of one tenant inside a fabric: its spec, its lane
@@ -355,6 +408,13 @@ impl TenantRegistry {
     /// Every tenant, in lane order.
     pub(crate) fn all(&self) -> &[Arc<TenantState>] {
         &self.tenants
+    }
+
+    /// Per-lane SLO overrides, in lane order — what the fabric's
+    /// workers consult to pick the SLO a drained batch's dominant
+    /// tenant is entitled to.
+    pub(crate) fn lane_slos(&self) -> Vec<Option<f64>> {
+        self.tenants.iter().map(|t| t.spec.slo_p99_ms).collect()
     }
 
     /// Lane configurations for a pod queue of `queue_capacity`: one lane
@@ -635,6 +695,42 @@ mod tests {
             parse_tenant_specs("a:share=0", None, 1.0),
             Err(TenancyError::BadShare("a".into()))
         );
+    }
+
+    #[test]
+    fn spec_parse_and_override_carry_tenant_slos() {
+        let mut specs =
+            parse_tenant_specs("gold:slo=12.5,free", None, 1.0).unwrap();
+        assert_eq!(specs[0].slo_p99_ms, Some(12.5), "slo= grammar field");
+        assert_eq!(specs[1].slo_p99_ms, None);
+        apply_tenant_slos(&mut specs, "free:80, gold:10").unwrap();
+        assert_eq!(specs[0].slo_p99_ms, Some(10.0), "--tenant-slo overrides the spec");
+        assert_eq!(specs[1].slo_p99_ms, Some(80.0));
+        // Typed failures: unknown tenant, malformed entry, bad target.
+        assert_eq!(
+            apply_tenant_slos(&mut specs, "nobody:5"),
+            Err(TenancyError::UnknownTenant("nobody".into()))
+        );
+        assert!(matches!(
+            apply_tenant_slos(&mut specs, "gold"),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert!(matches!(
+            apply_tenant_slos(&mut specs, "gold:-3"),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert!(matches!(
+            parse_tenant_specs("a:slo=0", None, 1.0),
+            Err(TenancyError::Malformed { .. }),
+        ), "a zero SLO is a config error");
+    }
+
+    #[test]
+    fn registry_exposes_lane_slos_in_lane_order() {
+        let mut gold = TenantSpec::new("gold");
+        gold.slo_p99_ms = Some(15.0);
+        let reg = TenantRegistry::build(&[gold, TenantSpec::new("free")]).unwrap();
+        assert_eq!(reg.lane_slos(), vec![Some(15.0), None, None], "default tenant appended");
     }
 
     #[test]

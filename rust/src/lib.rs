@@ -16,7 +16,9 @@
 //!   ([`cluster`]), the variant-selection backend ([`backend`]), the AIF
 //!   serving runtime over PJRT ([`runtime`], [`serving`]), and the
 //!   cluster-scale serving fabric ([`fabric`]) that routes live traffic
-//!   across every placed variant.
+//!   across every placed variant, and the continuum orchestrator
+//!   ([`continuum`]) that plans and serves across multiple sites with
+//!   spillover and failure-driven replanning.
 //!
 //! See `docs/ARCHITECTURE.md` for the paper-concept → module map and the
 //! request lifecycle, and `docs/CLI.md` for the `tf2aif` command-line
@@ -70,6 +72,7 @@ pub mod client;
 pub mod cluster;
 pub mod composer;
 pub mod config;
+pub mod continuum;
 pub mod converter;
 pub mod coordinator;
 pub mod fabric;

@@ -9,9 +9,12 @@
 //! - `fabric`   — cluster-scale serving: shard every AIF across the
 //!   testbed, route an open-loop workload with admission control, report
 //!   per-node + fleet tables (see `docs/CLI.md`).
+//! - `continuum` — multi-site orchestration: plan placements across
+//!   cloud/edge/far-edge sites under a latency/energy policy, route a
+//!   workload with spillover, kill sites mid-stream and replan.
 //! - `bench`    — fabric sweeps: fused vs per-item, adaptive vs fixed
-//!   batch sizing, fixed replicas vs autoscaler; writes
-//!   `BENCH_fabric.json`.
+//!   batch sizing, fixed replicas vs autoscaler, tenancy fairness, and
+//!   the continuum scenario verdicts; writes `BENCH_fabric.json`.
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
@@ -22,9 +25,10 @@ use tf2aif::backend::{Backend, Policy};
 use tf2aif::client::{Client, ClientConfig};
 use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::config::Config;
+use tf2aif::continuum::{self, ContinuumOrchestrator, PlanPolicy, Topology};
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
 use tf2aif::fabric::bench::{self, BenchConfig};
-use tf2aif::fabric::tenancy::{parse_tenant_specs, TenantSpec};
+use tf2aif::fabric::tenancy::{apply_tenant_slos, parse_tenant_specs, TenantSpec};
 use tf2aif::fabric::{sim, AutoscaleConfig, Fabric, FabricConfig};
 use tf2aif::workload::TenantMix;
 use tf2aif::report;
@@ -65,6 +69,13 @@ impl<'a> Flags<'a> {
             None => Ok(default),
         }
     }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -79,6 +90,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&flags),
         "cluster" => cmd_cluster(&flags),
         "fabric" => cmd_fabric(&flags),
+        "continuum" => cmd_continuum(&flags),
         "bench" => cmd_bench(&flags),
         "report" => cmd_report(&flags),
         "help" | "--help" | "-h" => {
@@ -103,8 +115,13 @@ fn print_usage() {
          [--config FILE] [--real] [--time-scale F] [--seed N] [--run-seed N]\n           \
          [--per-item] [--no-dedup] [--adaptive] [--min-batch N] [--slo MS]\n           \
          [--linger MS] [--cache N] [--cache-ttl MS] [--autoscale MIN:MAX]\n           \
-         [--as-interval MS] [--tenants SPEC] [--quota RPS] [--tenant-share F]\n           \
-         (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F],...)\n  \
+         [--as-interval MS] [--as-predict] [--tenants SPEC] [--quota RPS]\n           \
+         [--tenant-share F] [--tenant-slo NAME:MS,...]\n           \
+         (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F][:slo=MS],...)\n  \
+         continuum [--config FILE] [--policy min-latency|min-energy|balanced] [--site NAME]\n           \
+         [--requests N] [--arrival A] [--models a,b] [--replicas N] [--queue N]\n           \
+         [--batch N] [--workers N] [--time-scale F] [--seed N] [--run-seed N]\n           \
+         [--fail-site NAME] [--fail-at I] [--scenarios]\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
          [--slo MS] [--seed N] [--out FILE] [--fused-only]\n  \
@@ -270,12 +287,6 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     }
     let mut backend = Backend::new(artifacts, policy);
 
-    let f64_flag = |key: &str, default: f64| -> Result<f64> {
-        match flags.get(key) {
-            Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
-            None => Ok(default),
-        }
-    };
     let d = FabricConfig::default();
     let autoscale = match flags.get("--autoscale") {
         Some(spec) => {
@@ -297,6 +308,7 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
                     "--as-interval",
                     AutoscaleConfig::default().interval_ms as usize,
                 )? as u64,
+                predictive: flags.has("--as-predict"),
                 ..Default::default()
             })
         }
@@ -304,7 +316,7 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     };
     // ── Tenancy: --tenants SPEC, --quota (default token rate), and
     //    --tenant-share (default max queue fraction) ────────────────────
-    let default_share = f64_flag("--tenant-share", 1.0)?;
+    let default_share = flags.f64_or("--tenant-share", 1.0)?;
     let default_quota = match flags.get("--quota") {
         Some(v) => {
             let q: f64 = v.parse().with_context(|| format!("bad --quota: {v:?}"))?;
@@ -315,7 +327,7 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         }
         None => None,
     };
-    let tenants: Vec<TenantSpec> = match flags.get("--tenants") {
+    let mut tenants: Vec<TenantSpec> = match flags.get("--tenants") {
         Some(spec) => parse_tenant_specs(spec, default_quota, default_share)
             .map_err(anyhow::Error::new)?,
         None => match default_quota {
@@ -333,6 +345,12 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     if tenants.is_empty() && flags.get("--tenant-share").is_some() {
         bail!("--tenant-share has no effect without --tenants or --quota");
     }
+    if let Some(slos) = flags.get("--tenant-slo") {
+        if tenants.is_empty() {
+            bail!("--tenant-slo needs --tenants (or --quota) to define the tenants first");
+        }
+        apply_tenant_slos(&mut tenants, slos).map_err(anyhow::Error::new)?;
+    }
     let multi_tenant = !tenants.is_empty();
     // Offered-load split for the drive: the configured tenants only
     // (the implicit `default` tenant is a home for anonymous traffic,
@@ -345,11 +363,11 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         max_batch: flags.usize_or("--batch", d.max_batch)?,
         adaptive: flags.has("--adaptive"),
         min_batch: flags.usize_or("--min-batch", d.min_batch)?,
-        slo_p99_ms: f64_flag("--slo", d.slo_p99_ms)?,
-        batch_linger_ms: f64_flag("--linger", d.batch_linger_ms)?,
+        slo_p99_ms: flags.f64_or("--slo", d.slo_p99_ms)?,
+        batch_linger_ms: flags.f64_or("--linger", d.batch_linger_ms)?,
         workers: flags.usize_or("--workers", d.workers)?,
         replicas_per_model: flags.usize_or("--replicas", d.replicas_per_model)?,
-        time_scale: f64_flag("--time-scale", d.time_scale)?,
+        time_scale: flags.f64_or("--time-scale", d.time_scale)?,
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
         fused: !flags.has("--per-item"),
         dedup: !flags.has("--no-dedup"),
@@ -492,6 +510,166 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_continuum(flags: &Flags) -> Result<()> {
+    let d = FabricConfig::default();
+    let cfg = FabricConfig {
+        queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
+        max_batch: flags.usize_or("--batch", d.max_batch)?,
+        workers: flags.usize_or("--workers", d.workers)?,
+        replicas_per_model: flags.usize_or("--replicas", d.replicas_per_model)?,
+        time_scale: flags.f64_or("--time-scale", d.time_scale)?,
+        seed: flags.usize_or("--seed", d.seed as usize)? as u64,
+        ..Default::default()
+    };
+    if flags.has("--scenarios") {
+        // The scenario suite runs the built-in testbed under fixed
+        // policies; flags it would silently ignore are errors, matching
+        // this CLI's no-effect-flag convention.
+        for flag in [
+            "--config",
+            "--policy",
+            "--site",
+            "--models",
+            "--fail-site",
+            "--fail-at",
+            "--requests",
+            "--arrival",
+            "--run-seed",
+        ] {
+            if flags.get(flag).is_some() {
+                bail!(
+                    "{flag} has no effect with --scenarios (the scenario suite runs \
+                     the built-in 3-site testbed under fixed policies)"
+                );
+            }
+        }
+        println!("running the deterministic continuum scenarios (3-site testbed)…");
+        let v = continuum::run_scenarios(cfg.seed);
+        println!(
+            "spillover recovers on the next-ranked site: {} ({} spilled, {} completed there)\n\
+             mid-stream site loss drops nothing: {} ({} models moved)\n\
+             energy-policy tradeoff visible: {} (min-energy {:.4} J/req vs min-latency {:.4}; \
+             latency {:.2} → {:.2} ms)",
+            yn(v.spillover_recovers),
+            v.spilled,
+            v.spill_completed,
+            yn(v.replan_no_drop),
+            v.replan_moves,
+            yn(v.energy_policy_tradeoff),
+            v.min_energy_energy_j,
+            v.min_latency_energy_j,
+            v.min_latency_ms,
+            v.min_energy_ms,
+        );
+        return Ok(());
+    }
+    let topology = match flags.get("--config") {
+        Some(path) => Topology::from_config(&Config::load(path)?)?,
+        None => continuum::continuum_testbed(),
+    };
+    let policy = PlanPolicy::parse(flags.get("--policy").unwrap_or("min-latency"))?;
+    // Demand originates at the lowest tier by default (far-edge first).
+    let demand_site = match flags.get("--site") {
+        Some(name) => name.to_string(),
+        None => topology
+            .sites()
+            .iter()
+            .max_by_key(|s| s.tier)
+            .map(|s| s.name.clone())
+            .expect("validated topology has sites"),
+    };
+    let catalog = match flags.get("--models") {
+        Some(ms) => {
+            let wanted = csv_list(Some(ms), &[]);
+            sim::synthetic_catalog()
+                .into_iter()
+                .filter(|a| wanted.iter().any(|m| *m == a.manifest.model))
+                .collect()
+        }
+        None => sim::synthetic_catalog(),
+    };
+    if catalog.is_empty() {
+        bail!("no catalog models match --models");
+    }
+    let mut orch = ContinuumOrchestrator::deploy_sim(
+        topology,
+        catalog,
+        policy,
+        &demand_site,
+        &cfg,
+        &std::collections::BTreeMap::new(),
+    )?;
+    println!(
+        "continuum: {} sites, policy {policy}, demand at {demand_site} \
+         (modeled plan mean: {:.2} ms e2e, {:.4} J/request)\n\nplan:",
+        orch.active_sites().len(),
+        orch.plan().mean_latency_ms(),
+        orch.plan().mean_energy_j(),
+    );
+    let (h, rows) = report::continuum_plan(orch.plan());
+    print!("{}", report::render_table(&h, &rows));
+    report::write_csv("reports/continuum_plan.csv", &h, &rows)?;
+
+    let requests = flags.usize_or("--requests", 1000)?;
+    let arrival = Arrival::parse(flags.get("--arrival").unwrap_or("poisson:500"))?;
+    let run_seed = flags.usize_or("--run-seed", 7)? as u64;
+    let entries: Vec<(String, u32)> =
+        orch.plan().models().iter().map(|m| (m.to_string(), 1)).collect();
+    let mix = TenantMix::new(&entries)?;
+    let fail = flags
+        .get("--fail-site")
+        .map(|site| Ok::<_, anyhow::Error>((flags.usize_or("--fail-at", requests / 2)?, site)))
+        .transpose()?;
+    if fail.is_none() && flags.get("--fail-at").is_some() {
+        bail!("--fail-at has no effect without --fail-site");
+    }
+    match &fail {
+        Some((at, site)) => println!(
+            "\nrouting {requests} requests ({arrival:?}); killing site {site:?} before \
+             request {at}…"
+        ),
+        None => println!("\nrouting {requests} requests ({arrival:?})…"),
+    }
+    let run = orch.run(requests, arrival, run_seed, &mix, fail)?;
+    println!(
+        "\nrouted {} | completed {} | shed {} | failed {} | spilled {} (completed {}) | \
+         wall {:.2}s",
+        run.submitted,
+        run.completed,
+        run.shed,
+        run.failed,
+        run.spilled,
+        run.spill_completed,
+        run.wall_s,
+    );
+    if !run.e2e_ms.is_empty() {
+        let bp = run.e2e_ms.clone().boxplot();
+        println!(
+            "e2e (link+queue+service): median {:.2} ms  q3 {:.2}  max {:.2}  \
+             (* simulated platforms)",
+            bp.median, bp.q3, bp.max
+        );
+    }
+    println!("\nper-site:");
+    let (h, rows) = report::continuum_sites(&run.per_site);
+    print!("{}", report::render_table(&h, &rows));
+    report::write_csv("reports/continuum_sites.csv", &h, &rows)?;
+    for ev in orch.replans() {
+        println!("\nreplan ({}): {} model(s) moved", ev.reason, ev.moved.len());
+        for (model, from, to) in &ev.moved {
+            println!("  {model}: {from} → {to}");
+        }
+        if !ev.stranded.is_empty() {
+            println!(
+                "  WARNING: no surviving fabric hosts {:?} — that demand will shed",
+                ev.stranded
+            );
+        }
+    }
+    orch.shutdown();
+    Ok(())
+}
+
 fn cmd_bench(flags: &Flags) -> Result<()> {
     let d = BenchConfig::default();
     let cfg = BenchConfig {
@@ -505,15 +683,9 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         replicas: flags.usize_or("--replicas", d.replicas)?,
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
         workers: flags.usize_or("--workers", d.workers)?,
-        time_scale: match flags.get("--time-scale") {
-            Some(v) => v.parse().with_context(|| format!("bad --time-scale: {v:?}"))?,
-            None => d.time_scale,
-        },
+        time_scale: flags.f64_or("--time-scale", d.time_scale)?,
         payload_pool: flags.usize_or("--pool", d.payload_pool)?,
-        slo_p99_ms: match flags.get("--slo") {
-            Some(v) => v.parse().with_context(|| format!("bad --slo: {v:?}"))?,
-            None => d.slo_p99_ms,
-        },
+        slo_p99_ms: flags.f64_or("--slo", d.slo_p99_ms)?,
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
     };
     println!(
@@ -532,8 +704,8 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     // The control-plane comparisons (adaptive vs fixed batch sizing,
     // fixed replicas vs autoscaler) and the tenancy measurement ride
     // along unless --fused-only.
-    let (control, autoscale, tenancy) = if flags.has("--fused-only") {
-        (None, None, None)
+    let (control, autoscale, tenancy, continuum_bench) = if flags.has("--fused-only") {
+        (None, None, None, None)
     } else {
         println!(
             "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
@@ -575,7 +747,27 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             yn(ten.verdicts.quota_exact),
             yn(ten.verdicts.shed_priority_ordered),
         );
-        (Some(sweep), Some(cmp), Some(ten))
+
+        println!(
+            "\ncontinuum: spillover, replan and energy-policy scenarios over the \
+             3-site testbed…\n"
+        );
+        let cont = bench::run_continuum_bench(&cfg)?;
+        let (h, rows) = report::continuum_sites(&cont.drive.per_site);
+        print!("{}", report::render_table(&h, &rows));
+        println!(
+            "\nspillover recovers on the next-ranked site: {} | mid-stream site loss \
+             drops nothing: {} | energy-policy tradeoff visible: {} \
+             (min-energy {:.4} J/req vs min-latency {:.4}; latency {:.2} → {:.2} ms)",
+            yn(cont.verdicts.spillover_recovers),
+            yn(cont.verdicts.replan_no_drop),
+            yn(cont.verdicts.energy_policy_tradeoff),
+            cont.verdicts.min_energy_energy_j,
+            cont.verdicts.min_latency_energy_j,
+            cont.verdicts.min_latency_ms,
+            cont.verdicts.min_energy_ms,
+        );
+        (Some(sweep), Some(cmp), Some(ten), Some(cont))
     };
 
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
@@ -586,6 +778,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         control.as_ref(),
         autoscale.as_ref(),
         tenancy.as_ref(),
+        continuum_bench.as_ref(),
     )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {

@@ -39,6 +39,11 @@ pub struct Platform {
     pub noise_sigma: f64,
     /// Probability of an OS-noise outlier (adds 1–4× median).
     pub outlier_p: f64,
+    /// Board idle power draw, W — burned whether or not requests flow,
+    /// which is why per-request energy blows up at low utilization.
+    pub idle_w: f64,
+    /// Board power draw at full utilization, W (board TDP scale).
+    pub peak_w: f64,
 }
 
 /// The five Table I platforms with calibrated cost models.
@@ -58,6 +63,8 @@ pub const PLATFORMS: &[Platform] = &[
         native_overhead_ms: 8.2,
         noise_sigma: 0.06,
         outlier_p: 0.01,
+        idle_w: 5.0,
+        peak_w: 30.0,
     },
     Platform {
         name: "ARM",
@@ -70,6 +77,8 @@ pub const PLATFORMS: &[Platform] = &[
         native_overhead_ms: 5.05,
         noise_sigma: 0.05,
         outlier_p: 0.008,
+        idle_w: 2.0,
+        peak_w: 15.0,
     },
     Platform {
         name: "CPU",
@@ -82,6 +91,8 @@ pub const PLATFORMS: &[Platform] = &[
         native_overhead_ms: 2.75,
         noise_sigma: 0.18,
         outlier_p: 0.05,
+        idle_w: 60.0,
+        peak_w: 140.0,
     },
     Platform {
         name: "ALVEO",
@@ -95,6 +106,8 @@ pub const PLATFORMS: &[Platform] = &[
         native_overhead_ms: 0.0,
         noise_sigma: 0.03,
         outlier_p: 0.003,
+        idle_w: 25.0,
+        peak_w: 100.0,
     },
     Platform {
         name: "GPU",
@@ -107,6 +120,8 @@ pub const PLATFORMS: &[Platform] = &[
         native_overhead_ms: 7.1,
         noise_sigma: 0.05,
         outlier_p: 0.006,
+        idle_w: 50.0,
+        peak_w: 300.0,
     },
 ];
 
@@ -157,6 +172,37 @@ impl Platform {
         };
         assert!(thr > 0.0, "{} has no native path", self.name);
         ovh + batch as f64 * gflops / thr * 1e3
+    }
+
+    /// Modeled electrical draw at `utilization` ∈ \[0, 1\], W: linear
+    /// interpolation between the board's idle and peak power — the
+    /// energy model behind the `MinEnergy` placement policies and the
+    /// continuum's per-site joules/request accounting.
+    pub fn power_w(&self, utilization: f64) -> f64 {
+        let u = utilization.clamp(0.0, 1.0);
+        self.idle_w + (self.peak_w - self.idle_w) * u
+    }
+
+    /// Energy attributed to one request served in `latency_ms` on a
+    /// board running at `utilization`, joules.  The board draws
+    /// [`power_w`](Self::power_w) continuously and completes
+    /// `utilization / latency` requests per second, so each request
+    /// carries `power × latency / utilization` joules: at full
+    /// utilization that is the peak draw over one service time; at low
+    /// utilization the (mostly idle) board's draw is amortized over few
+    /// requests and the per-request cost balloons.  Utilization is
+    /// floored at 5% so a near-idle board reads as expensive, not as a
+    /// division blow-up.
+    pub fn energy_j(&self, latency_ms: f64, utilization: f64) -> f64 {
+        let u = utilization.clamp(0.05, 1.0);
+        self.power_w(u) * (latency_ms / 1e3) / u
+    }
+
+    /// [`energy_j`](Self::energy_j) over the deterministic cost-model
+    /// latency for a model of `gflops` — the planner's modeled
+    /// joules/request for a placement candidate.
+    pub fn energy_j_per_request(&self, gflops: f64, native: bool, utilization: f64) -> f64 {
+        self.energy_j(self.latency_model_ms(gflops, native), utilization)
     }
 
     /// A full service-latency series (the Fig. 4 "1000 requests" channel).
@@ -314,5 +360,56 @@ mod tests {
     #[should_panic]
     fn alveo_native_panics() {
         get("ALVEO").unwrap().latency_model_ms(1.0, true);
+    }
+
+    #[test]
+    fn power_interpolates_between_idle_and_peak() {
+        for p in PLATFORMS {
+            assert!(p.idle_w > 0.0 && p.peak_w > p.idle_w, "{}", p.name);
+            assert_eq!(p.power_w(0.0), p.idle_w, "{}", p.name);
+            assert_eq!(p.power_w(1.0), p.peak_w, "{}", p.name);
+            let mid = p.power_w(0.5);
+            assert!(mid > p.idle_w && mid < p.peak_w, "{}", p.name);
+            // Clamped outside [0, 1].
+            assert_eq!(p.power_w(7.0), p.peak_w);
+            assert_eq!(p.power_w(-1.0), p.idle_w);
+        }
+    }
+
+    #[test]
+    fn energy_at_full_utilization_is_peak_times_latency() {
+        let p = get("GPU").unwrap();
+        let lat = p.latency_model_ms(0.529, false);
+        assert!((p.energy_j(lat, 1.0) - p.peak_w * lat / 1e3).abs() < 1e-12);
+        assert_eq!(p.energy_j_per_request(0.529, false, 1.0), p.energy_j(lat, 1.0));
+    }
+
+    #[test]
+    fn low_utilization_raises_per_request_energy() {
+        // A mostly idle board amortizes its idle draw over few requests:
+        // per-request energy must rise monotonically as utilization
+        // falls, and the 5% floor keeps it finite.
+        for p in PLATFORMS {
+            let lat = p.latency_model_ms(0.168, false);
+            let full = p.energy_j(lat, 1.0);
+            let half = p.energy_j(lat, 0.5);
+            let idle = p.energy_j(lat, 0.0);
+            assert!(half > full, "{}: {half} vs {full}", p.name);
+            assert!(idle > half, "{}", p.name);
+            assert!(idle.is_finite(), "{}: utilization floor must hold", p.name);
+            assert_eq!(p.energy_j(lat, 0.0), p.energy_j(lat, 0.05), "floored at 5%");
+        }
+    }
+
+    #[test]
+    fn edge_accelerators_are_cheaper_per_request_than_the_server_gpu() {
+        // The continuum's MinEnergy story: for the Table III models the
+        // AGX edge module undercuts the V100 on joules/request even
+        // though the V100 is faster.
+        for gflops in [0.025, 0.168, 0.529] {
+            let agx = get("AGX").unwrap().energy_j_per_request(gflops, false, 1.0);
+            let gpu = get("GPU").unwrap().energy_j_per_request(gflops, false, 1.0);
+            assert!(agx < gpu, "at {gflops} GFLOPs: AGX {agx} vs GPU {gpu}");
+        }
     }
 }

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::artifact::Artifact;
 use crate::cluster::NodeSpec;
+use crate::continuum::{DeploymentPlan, SiteRunReport};
 use crate::fabric::bench::{AutoscaleCompare, BenchPoint, ControlSweep};
 use crate::fabric::{FleetReport, PodReport, ScaleDirection, ScaleEvent, TenantReport};
 use crate::platform::PLATFORMS;
@@ -550,6 +551,84 @@ pub fn autoscale_table(cmp: &AutoscaleCompare) -> (Vec<&'static str>, Vec<Vec<St
         ),
     ];
     (headers, rows)
+}
+
+/// Continuum deployment-plan table: per model, the ranked sites
+/// (primary first, spillover alternates after) with the modeled cost
+/// terms the policy scored them by.
+pub fn continuum_plan(plan: &DeploymentPlan) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "model",
+        "rank",
+        "site",
+        "variant",
+        "node",
+        "replicas",
+        "device (ms)",
+        "link (ms)",
+        "e2e (ms)",
+        "J/req",
+        "score",
+    ];
+    let mut rows = Vec::new();
+    for (model, placements) in &plan.assignments {
+        for (rank, p) in placements.iter().enumerate() {
+            rows.push(vec![
+                model.clone(),
+                if rank == 0 { "primary".to_string() } else { format!("alt {rank}") },
+                p.site.clone(),
+                p.variant.clone(),
+                p.node.clone(),
+                p.replicas.to_string(),
+                format!("{:.2}", p.device_ms),
+                format!("{:.2}", p.link_ms),
+                format!("{:.2}", p.e2e_ms()),
+                format!("{:.4}", p.energy_j),
+                format!("{:.3}", p.score),
+            ]);
+        }
+    }
+    (headers, rows)
+}
+
+/// Continuum per-site table: serving counters, spillover traffic and
+/// the utilization-scaled energy accounting (* marks the simulated
+/// service channel).
+pub fn continuum_sites(rows: &[SiteRunReport]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "site",
+        "tier",
+        "state",
+        "pods",
+        "served",
+        "shed",
+        "admitted",
+        "spill in",
+        "util",
+        "J/req",
+        "rps",
+        "service (ms)*",
+    ];
+    let out = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.site.clone(),
+                r.tier.to_string(),
+                if r.lost { "lost".to_string() } else { "up".to_string() },
+                r.pods.to_string(),
+                r.completed.to_string(),
+                r.shed.to_string(),
+                r.admitted.to_string(),
+                r.spillover_in.to_string(),
+                format!("{:.2}", r.energy.mean_utilization),
+                format!("{:.4}", r.energy.j_per_request),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.2}", r.mean_service_ms),
+            ]
+        })
+        .collect();
+    (headers, out)
 }
 
 /// Per-platform average speedups (the Fig. 5 headline vector).

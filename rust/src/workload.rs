@@ -137,6 +137,15 @@ impl TenantMix {
         &self.ids[self.cycle[i % self.cycle.len()]]
     }
 
+    /// Index (into [`ids`](Self::ids)) for request `i` — the allocation
+    /// of [`pick`](Self::pick) without the string, for callers keeping
+    /// per-lane counters.  The mix is id-agnostic, so the continuum
+    /// driver reuses it to interleave *models* (and demand sites) with
+    /// the same smooth weighted-round-robin the tenancy layer drains by.
+    pub fn pick_index(&self, i: usize) -> usize {
+        self.cycle[i % self.cycle.len()]
+    }
+
     /// The tenant ids, in construction order.
     pub fn ids(&self) -> &[String] {
         &self.ids
@@ -189,6 +198,7 @@ mod tests {
         assert_eq!(window.iter().filter(|t| **t == "hot").count(), 10);
         assert_eq!(window.iter().filter(|t| **t == "cold").count(), 1);
         assert_eq!(mix.pick(0), mix.pick(11), "cycle repeats");
+        assert_eq!(mix.ids()[mix.pick_index(3)], mix.pick(3), "index matches the id");
 
         let even = TenantMix::new(&[("a".into(), 1), ("b".into(), 1)]).unwrap();
         let window: Vec<&str> = (0..4).map(|i| even.pick(i)).collect();

@@ -15,7 +15,9 @@ use std::sync::Arc;
 use tf2aif::backend::{Backend, Policy};
 use tf2aif::cluster::{paper_testbed, Cluster};
 use tf2aif::fabric::sim::{synthetic_catalog, Gate};
-use tf2aif::fabric::{AutoscaleConfig, Fabric, FabricConfig, Outcome, ScaleDirection, Submission};
+use tf2aif::fabric::{
+    AutoscaleConfig, Fabric, FabricConfig, Outcome, ScaleDirection, Submission, TenantSpec,
+};
 use tf2aif::workload::Arrival;
 
 fn testbed() -> Cluster {
@@ -136,6 +138,7 @@ fn manual_autoscale(min: usize, max: usize, hold: u32, cooldown: u32) -> Option<
         hold_ticks: hold,
         cooldown_ticks: cooldown,
         interval_ms: 0, // stepped manually: deterministic
+        predictive: false,
     })
 }
 
@@ -216,6 +219,168 @@ fn autoscaler_scales_up_to_max_and_back_down_to_min() {
     fabric.shutdown();
 }
 
+/// A fabric hosting exactly one variant of one model, so modeled
+/// latency (and therefore the Little's-law forecast) is pinned.
+fn place_one_variant(
+    model: &str,
+    variant: &str,
+    cfg: &FabricConfig,
+    gate: Option<Arc<Gate>>,
+) -> Fabric {
+    let catalog: Vec<_> = synthetic_catalog()
+        .into_iter()
+        .filter(|a| a.manifest.model == model && a.manifest.variant == variant)
+        .collect();
+    let backend = Backend::new(catalog, Policy::MinLatency);
+    Fabric::place_sim(&backend, testbed(), cfg, gate).unwrap()
+}
+
+#[test]
+fn predictive_autoscaler_scales_on_forecast_where_the_reactive_path_cannot() {
+    // The reactive backlog threshold is set absurdly high, so ONLY the
+    // predictive saturation signal (forecast ≥ 1 replica's worth of
+    // offered concurrency) can scale this fleet.  The pod is pinned to
+    // the CPU variant — the one platform with a second feasible node
+    // for the scale-up — whose modeled inceptionv4 latency (~4.2 ms)
+    // dwarfs the µs-scale gaps of a no-sleep submission flood, so the
+    // offered load reads as hundreds of replicas' worth of concurrency
+    // while executions (time_scale 0) are instant and real backlog
+    // never materializes for the reactive path to claim credit.
+    let auto = AutoscaleConfig {
+        min_replicas: 1,
+        max_replicas: 2,
+        scale_up_backlog: 1e12, // reactive scale-up structurally off
+        scale_down_backlog: 0.0,
+        hold_ticks: 1,
+        cooldown_ticks: 0,
+        interval_ms: 0,
+        predictive: true,
+    };
+    let cfg = FabricConfig {
+        queue_capacity: 1024, // flood never sheds (no pressure signal either)
+        max_batch: 8,
+        replicas_per_model: 1,
+        time_scale: 0.0,
+        dedup: false,
+        autoscale: Some(auto.clone()),
+        ..Default::default()
+    };
+    let fabric = place_one_variant("inceptionv4", "CPU", &cfg, None);
+    assert_eq!(fabric.active_replicas("inceptionv4"), 1);
+    let mut pending = Vec::new();
+    for i in 0..300 {
+        match fabric.submit("inceptionv4", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => panic!("a 1024-deep queue must absorb a 300 flood"),
+        }
+    }
+    // Tick immediately after the flood: the arrival EWMA is hot and the
+    // forecast (offered rate × ~4.2 ms / 1 replica) is far beyond
+    // saturation, while mean backlog — whatever it transiently is —
+    // sits far below the 1e12 reactive threshold.
+    fabric.autoscale_tick();
+    assert_eq!(
+        fabric.active_replicas("inceptionv4"),
+        2,
+        "the forecast alone must scale up — the reactive path is disabled"
+    );
+    let events = fabric.scale_events();
+    assert!(
+        events.iter().any(|e| e.trigger.starts_with("forecast")),
+        "the trigger names the forecast: {events:?}"
+    );
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    fabric.shutdown();
+
+    // The reactive fallback under the identical flood: no forecast, a
+    // backlog nowhere near 1e12, no sheds → nothing ever scales, and
+    // the idle side respects min_replicas.
+    let cfg = FabricConfig {
+        autoscale: Some(AutoscaleConfig { predictive: false, ..auto }),
+        ..cfg
+    };
+    let fabric = place_one_variant("inceptionv4", "CPU", &cfg, None);
+    let mut pending = Vec::new();
+    for i in 0..300 {
+        match fabric.submit("inceptionv4", distinct_payload(i)).unwrap() {
+            Submission::Enqueued(rx) => pending.push(rx),
+            Submission::Shed => panic!("a 1024-deep queue must absorb a 300 flood"),
+        }
+    }
+    fabric.autoscale_tick();
+    for rx in pending {
+        assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+    }
+    for _ in 0..3 {
+        fabric.autoscale_tick();
+    }
+    assert_eq!(
+        fabric.active_replicas("inceptionv4"),
+        1,
+        "without the forecast the reactive path sees nothing to scale on"
+    );
+    assert!(fabric.scale_events().is_empty());
+    fabric.shutdown();
+}
+
+#[test]
+fn tenant_slo_pins_batches_down_for_the_dominant_tenant() {
+    // Two fabrics under the identical gated backlog, adaptive batching,
+    // generous 1000 ms global SLO.  The strict fabric's only traffic
+    // comes from a tenant carrying a 1 ms SLO override — every drained
+    // batch is dominated by it, so the controller must back off to the
+    // floor where the lax fabric slow-starts to deep batches.
+    let mk_cfg = |slo: Option<f64>| {
+        let mut spec = TenantSpec::new("tenant");
+        spec.slo_p99_ms = slo;
+        FabricConfig {
+            adaptive: true,
+            max_batch: 16,
+            min_batch: 1,
+            slo_p99_ms: 1000.0,
+            queue_capacity: 64,
+            replicas_per_model: 1,
+            workers: 1,
+            time_scale: 0.0,
+            dedup: false,
+            tenants: vec![spec],
+            ..Default::default()
+        }
+    };
+    let drive = |fabric: &Fabric, gate: &Gate| {
+        let mut pending = Vec::new();
+        for i in 0..60 {
+            match fabric.submit_as("tenant", "lenet", distinct_payload(i)).unwrap() {
+                Submission::Enqueued(rx) => pending.push(rx),
+                Submission::Shed => panic!("queue bound 64 must admit 60"),
+            }
+        }
+        gate.open();
+        for rx in pending {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+    };
+
+    let gate = Gate::closed_gate();
+    let lax = place_one_model("lenet", &mk_cfg(None), Some(Arc::clone(&gate)));
+    drive(&lax, &gate);
+    let lax_target = lax.batch_targets()[0].1;
+    assert!(lax_target >= 8, "no override: backlog grows the batch (got {lax_target})");
+    lax.shutdown();
+
+    let gate = Gate::closed_gate();
+    let strict = place_one_model("lenet", &mk_cfg(Some(1.0)), Some(Arc::clone(&gate)));
+    drive(&strict, &gate);
+    let strict_target = strict.batch_targets()[0].1;
+    assert_eq!(
+        strict_target, 1,
+        "the dominant tenant's 1 ms SLO must pin the drain size at the floor"
+    );
+    strict.shutdown();
+}
+
 #[test]
 fn shed_burst_counts_as_overload_signal() {
     // Even with backlog thresholds set absurdly high, shedding since the
@@ -234,6 +399,7 @@ fn shed_burst_counts_as_overload_signal() {
             hold_ticks: 1,
             cooldown_ticks: 0,
             interval_ms: 0,
+            predictive: false,
         }),
         ..Default::default()
     };
@@ -278,6 +444,7 @@ fn retiring_a_replica_never_drops_admitted_requests() {
             hold_ticks: 1,
             cooldown_ticks: 0,
             interval_ms: 0,
+            predictive: false,
         }),
         ..Default::default()
     };

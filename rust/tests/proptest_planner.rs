@@ -1,0 +1,256 @@
+//! Property-style tests for the continuum planner — randomized
+//! topologies under fixed seeds (deterministic, reproducible), checking
+//! the invariants multi-site placement rests on:
+//!
+//! - No plan ever over-commits a node's memory: the sum of pod
+//!   footprints the primaries bind on any node stays within its
+//!   capacity (recomputed independently of the planner's own binds).
+//! - An accelerator variant is never placed on a node that does not
+//!   expose that platform (and, for device-plugin platforms, never
+//!   beyond the node's accelerator slots).
+//! - Planning — and *replanning* after a site loss or node drain — is
+//!   bit-deterministic for a fixed seed.
+
+use std::collections::BTreeMap;
+
+use tf2aif::cluster::{platform_needs_accelerator, NodeSpec};
+use tf2aif::continuum::{DeploymentPlan, LinkSpec, PlanPolicy, Planner, SiteSpec, SiteTier, Topology};
+use tf2aif::fabric::sim::synthetic_catalog_for;
+use tf2aif::util::rng::Rng;
+
+const MODELS: [&str; 4] = ["lenet", "mobilenetv1", "resnet50", "inceptionv4"];
+const PLATFORM_POOL: [&str; 5] = ["CPU", "GPU", "ALVEO", "AGX", "ARM"];
+
+/// A random connected topology: 2–4 sites, 1–3 random nodes each, plus
+/// one well-provisioned anchor node in site 0 so most instances are
+/// globally feasible.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let n_sites = 2 + rng.below(3);
+    let tiers = [SiteTier::Cloud, SiteTier::Edge, SiteTier::FarEdge];
+    let mut sites = Vec::new();
+    for s in 0..n_sites {
+        let mut nodes = Vec::new();
+        for i in 0..1 + rng.below(3) {
+            let mut platforms: Vec<String> = Vec::new();
+            for _ in 0..1 + rng.below(3) {
+                let p = PLATFORM_POOL[rng.below(PLATFORM_POOL.len())].to_string();
+                if !platforms.contains(&p) {
+                    platforms.push(p);
+                }
+            }
+            nodes.push(NodeSpec {
+                name: format!("s{s}-n{i}"),
+                arch: "x86_64".into(),
+                cpu_desc: String::new(),
+                cpus: 8,
+                memory_gb: 2.0 + rng.f64() * 8.0,
+                accelerator: "sim".into(),
+                platforms,
+                slots: 1 + rng.below(2),
+            });
+        }
+        if s == 0 {
+            nodes.push(NodeSpec {
+                name: "anchor".into(),
+                arch: "x86_64".into(),
+                cpu_desc: String::new(),
+                cpus: 32,
+                memory_gb: 64.0,
+                accelerator: "sim".into(),
+                platforms: PLATFORM_POOL.iter().map(|p| p.to_string()).collect(),
+                slots: 2,
+            });
+        }
+        sites.push(SiteSpec {
+            name: format!("site{s}"),
+            tier: tiers[rng.below(3)],
+            nodes,
+        });
+    }
+    let mut links = Vec::new();
+    for s in 1..n_sites {
+        links.push(LinkSpec {
+            a: format!("site{}", s - 1),
+            b: format!("site{s}"),
+            rtt_ms: 1.0 + rng.f64() * 30.0,
+            gbps: 0.5 + rng.f64() * 9.5,
+        });
+    }
+    Topology::new(sites, links).expect("generated topologies are valid")
+}
+
+fn random_planner(seed: u64) -> Planner {
+    let mut rng = Rng::new(seed);
+    let topology = random_topology(&mut rng);
+    // Non-empty random model subset.
+    let mut models: Vec<&str> = MODELS.to_vec();
+    rng.shuffle(&mut models);
+    models.truncate(1 + rng.below(MODELS.len()));
+    let catalog = synthetic_catalog_for(&models);
+    let policies =
+        [PlanPolicy::MinLatency, PlanPolicy::MinEnergy, PlanPolicy::Balanced];
+    let demand = format!("site{}", rng.below(topology.sites().len()));
+    let mut planner = Planner::new(
+        topology,
+        catalog,
+        policies[rng.below(3)],
+        demand,
+    )
+    .expect("demand site exists");
+    planner.replicas_per_site = 1 + rng.below(3);
+    planner
+}
+
+/// Recompute the memory and accelerator commitments of a plan's primary
+/// binds per (site, node), independently of the planner's own
+/// accounting, and assert them against the topology's capacities.
+fn assert_no_overcommit(planner: &Planner, plan: &DeploymentPlan) {
+    let mut mem: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut accel: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for placements in plan.assignments.values() {
+        let primary = &placements[0];
+        let artifact = planner
+            .catalog
+            .iter()
+            .find(|a| {
+                a.manifest.model == primary.model && a.manifest.variant == primary.variant
+            })
+            .expect("planned variant exists in the catalog");
+        let pod_gb = artifact.manifest.weights_bytes as f64 / 1e9 + 0.25;
+        assert_eq!(primary.replicas, primary.nodes.len());
+        assert!(primary.replicas >= 1, "a primary always reserves capacity");
+        assert!(primary.replicas <= planner.replicas_per_site);
+        for node in &primary.nodes {
+            let key = (primary.site.clone(), node.clone());
+            *mem.entry(key.clone()).or_insert(0.0) += pod_gb;
+            if platform_needs_accelerator(&primary.variant) {
+                *accel.entry(key).or_insert(0) += 1;
+            }
+        }
+        // Alternates reserve nothing.
+        for alt in &placements[1..] {
+            assert_eq!(alt.replicas, 0);
+            assert!(alt.nodes.is_empty());
+        }
+    }
+    for ((site, node), used) in &mem {
+        let spec = node_spec(planner, site, node);
+        assert!(
+            *used <= spec.memory_gb + 1e-9,
+            "{site}/{node}: {used:.3} GB committed over {} GB",
+            spec.memory_gb
+        );
+    }
+    for ((site, node), used) in &accel {
+        let spec = node_spec(planner, site, node);
+        assert!(
+            *used <= spec.slots,
+            "{site}/{node}: {used} accelerator pods over {} slots",
+            spec.slots
+        );
+    }
+}
+
+/// Every placement (primary or alternate) only ever names a node that
+/// exposes the variant's platform — an accelerator variant can never
+/// land on a node without that accelerator.
+fn assert_platform_feasible(planner: &Planner, plan: &DeploymentPlan) {
+    for placements in plan.assignments.values() {
+        for p in placements {
+            let base = p.variant.trim_end_matches("_TF");
+            for node in std::iter::once(&p.node).chain(p.nodes.iter()) {
+                let spec = node_spec(planner, &p.site, node);
+                assert!(
+                    spec.platforms.iter().any(|pl| pl == base),
+                    "{}: node {}/{} does not expose {}",
+                    p.model,
+                    p.site,
+                    node,
+                    p.variant
+                );
+                if platform_needs_accelerator(&p.variant) {
+                    assert!(spec.slots >= 1, "{}/{}: accelerator variant, no slots", p.site, node);
+                }
+            }
+        }
+    }
+}
+
+fn node_spec<'a>(planner: &'a Planner, site: &str, node: &str) -> &'a NodeSpec {
+    planner
+        .topology
+        .site(site)
+        .expect("placement names a known site")
+        .nodes
+        .iter()
+        .find(|n| n.name == node)
+        .expect("placement names a known node")
+}
+
+#[test]
+fn plans_never_overcommit_and_respect_accelerators() {
+    let mut feasible = 0;
+    for seed in 0..24u64 {
+        let planner = random_planner(seed);
+        // Random instances may legitimately be infeasible (a surviving
+        // site out of slots); the invariants apply to every plan that
+        // exists.
+        let Ok(plan) = planner.plan() else { continue };
+        feasible += 1;
+        assert_no_overcommit(&planner, &plan);
+        assert_platform_feasible(&planner, &plan);
+    }
+    assert!(feasible >= 12, "most random instances must be plannable, got {feasible}");
+}
+
+#[test]
+fn replanning_is_deterministic_for_a_fixed_seed() {
+    for seed in 0..12u64 {
+        let base = || random_planner(seed);
+        // The base plan reproduces bit-identically.
+        let a = base().plan();
+        let b = base().plan();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "seed {seed}");
+
+        // Losing the first site: the replan reproduces too (and its
+        // invariants hold when it succeeds).
+        let lose = || {
+            let mut p = base();
+            p.lost_sites.insert("site0".to_string());
+            p
+        };
+        let la = lose().plan();
+        let lb = lose().plan();
+        assert_eq!(format!("{la:?}"), format!("{lb:?}"), "seed {seed} after site loss");
+        if let Ok(plan) = &la {
+            let p = lose();
+            assert_no_overcommit(&p, plan);
+            assert_platform_feasible(&p, plan);
+            for placements in plan.assignments.values() {
+                assert!(placements.iter().all(|sp| sp.site != "site0"));
+            }
+        }
+
+        // Draining one node reproduces as well, and the node vanishes
+        // from the plan.
+        let drain = || {
+            let mut p = base();
+            p.drained_nodes.insert(("site0".to_string(), "anchor".to_string()));
+            p
+        };
+        let da = drain().plan();
+        let db = drain().plan();
+        assert_eq!(format!("{da:?}"), format!("{db:?}"), "seed {seed} after drain");
+        if let Ok(plan) = &da {
+            for placements in plan.assignments.values() {
+                for sp in placements {
+                    assert!(
+                        !(sp.site == "site0"
+                            && (sp.node == "anchor" || sp.nodes.iter().any(|n| n == "anchor"))),
+                        "drained node must not appear: {sp:?}"
+                    );
+                }
+            }
+        }
+    }
+}
