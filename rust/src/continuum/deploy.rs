@@ -20,6 +20,11 @@
 //! pod's measured busy time into board utilization and integrates the
 //! platform's idle/peak power model over the drive — the
 //! joules/request column of the continuum report.
+//!
+//! This orchestrator runs real threads against real (scaled) time.  For
+//! deterministic, bit-reproducible multi-site replay — spillover,
+//! site-loss drills and million-request days on a virtual clock — see
+//! [`crate::continuum::des`] and `tf2aif continuum --virtual-time`.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{mpsc, Arc};

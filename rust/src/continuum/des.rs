@@ -1,0 +1,356 @@
+//! Continuum adapter for the virtual-time engine — canned multi-site
+//! scenarios over the 3-site testbed.
+//!
+//! [`crate::fabric::des`] is topology-agnostic: it takes sites, an RTT
+//! matrix and demand curves.  This module is the bridge from the
+//! continuum's network model ([`Topology`], cheapest-path RTTs,
+//! tiers) to that engine, plus the canned scenario library the golden
+//! suite (`rust/tests/scenario_des.rs`), `tf2aif continuum
+//! --virtual-time` and the BENCH v5 `des` section all share — the
+//! traffic shapes worth testing on a cloud-edge continuum:
+//!
+//! - [`scenario_diurnal_day`] — a 24 h day/night demand swing at every
+//!   site (the baseline curve of the 6G/edge surveys in PAPERS.md);
+//! - [`scenario_flash_crowd`] — a far-edge spike an order of magnitude
+//!   over baseline, exercising spillover toward the edge and cloud;
+//! - [`scenario_site_loss_storm`] — a correlated every-site surge with
+//!   the edge site failing mid-surge and recovering later, exercising
+//!   failure reroute under the worst possible timing;
+//! - [`scenario_million_user_day`] — the acceptance drive: a 24 h
+//!   diurnal trace of ≥ 1,000,000 virtual client requests across all
+//!   three sites, bit-reproducible and done in seconds of wall time.
+//!
+//! Each continuum tier serves the platform variant its hardware would
+//! host ([`tier_variant`]): server GPU in the cloud, AGX at the edge,
+//! bare ARM at the far edge — the same Table I mapping the orchestrator
+//! uses for placement.
+
+use anyhow::{bail, Result};
+
+use crate::continuum::topology::{continuum_testbed, SiteTier, Topology};
+use crate::fabric::des::{DesAutoscale, DesConfig, DesModel, DesScenario, DesSite, Drill};
+use crate::fabric::sim::synthetic_catalog_for;
+use crate::workload::RateCurve;
+
+/// Platform variant a site of the given tier serves in the
+/// virtual-time model: Cloud → `GPU`, Edge → `AGX`, FarEdge → `ARM`.
+pub fn tier_variant(tier: SiteTier) -> &'static str {
+    match tier {
+        SiteTier::Cloud => "GPU",
+        SiteTier::Edge => "AGX",
+        SiteTier::FarEdge => "ARM",
+    }
+}
+
+/// Build a scenario skeleton from a topology: sites in declaration
+/// order (one initial pod per model, no demand curves yet), the
+/// cheapest-path RTT matrix, and model compute scales from the
+/// synthetic catalog's manifests (`models` empty = every Table III
+/// model).  Callers attach curves, drills and a horizon.
+pub fn scenario_from_topology(
+    name: &str,
+    topology: &Topology,
+    models: &[&str],
+    cfg: DesConfig,
+) -> Result<DesScenario> {
+    let catalog = synthetic_catalog_for(models);
+    let mut des_models: Vec<DesModel> = Vec::new();
+    for a in &catalog {
+        if !des_models.iter().any(|m| m.name == a.manifest.model) {
+            des_models.push(DesModel {
+                name: a.manifest.model.clone(),
+                gflops: a.manifest.gflops,
+            });
+        }
+    }
+    if des_models.is_empty() {
+        bail!("no catalog models match {models:?}");
+    }
+    let sites: Vec<DesSite> = topology
+        .sites()
+        .iter()
+        .map(|s| DesSite {
+            name: s.name.clone(),
+            tier: s.tier.name().to_string(),
+            variant: tier_variant(s.tier).to_string(),
+            pods: 1,
+            arrivals: None,
+        })
+        .collect();
+    let rtt_ms: Vec<Vec<f64>> = topology
+        .sites()
+        .iter()
+        .map(|from| {
+            topology
+                .sites()
+                .iter()
+                .map(|to| topology.rtt_ms(&from.name, &to.name).unwrap_or(f64::INFINITY))
+                .collect()
+        })
+        .collect();
+    Ok(DesScenario {
+        name: name.to_string(),
+        horizon_s: 0.0,
+        models: des_models,
+        sites,
+        rtt_ms,
+        trace: None,
+        drills: Vec::new(),
+        cfg,
+    })
+}
+
+/// Attach the same curve to every site of a scenario.
+fn curve_everywhere(sc: &mut DesScenario, curve: &RateCurve) {
+    for site in &mut sc.sites {
+        site.arrivals = Some(curve.clone());
+    }
+}
+
+fn base_cfg(seed: u64) -> DesConfig {
+    DesConfig {
+        queue_capacity: 32,
+        max_batch: 8,
+        min_batch: 1,
+        adaptive: true,
+        slo_p99_ms: 50.0,
+        batch_linger_ms: 2.0,
+        cache_ttl_ms: 30_000.0,
+        cohorts: 64,
+        autoscale: Some(DesAutoscale::default()),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// A 24 h day at modest per-site demand: every site swings through one
+/// diurnal period (trough at midnight, peak mid-day).  Small enough for
+/// debug-build test runs (~30 k requests), long enough that cache TTLs,
+/// autoscale ticks and the day-scale curve all get exercised.
+pub fn scenario_diurnal_day(seed: u64) -> Result<DesScenario> {
+    let mut sc = scenario_from_topology(
+        "diurnal-day",
+        &continuum_testbed(),
+        &["lenet", "resnet50"],
+        base_cfg(seed),
+    )?;
+    sc.horizon_s = 86_400.0;
+    curve_everywhere(
+        &mut sc,
+        &RateCurve::Diurnal {
+            base_rps: 0.05,
+            peak_rps: 0.2,
+            period_s: 86_400.0,
+            phase_s: 0.0,
+        },
+    );
+    Ok(sc)
+}
+
+/// A far-edge flash crowd: baseline demand everywhere, then the
+/// far-edge site spikes ~75× over baseline for five minutes.  With
+/// inceptionv4 in the mix the far-edge ARM pods genuinely saturate
+/// (≈ 10 ms of ARM compute per inference) and the excess overflows
+/// toward the edge and cloud — the spillover path under the exact
+/// shape per-site provisioning cannot absorb.
+pub fn scenario_flash_crowd(seed: u64) -> Result<DesScenario> {
+    let mut sc = scenario_from_topology(
+        "flash-crowd",
+        &continuum_testbed(),
+        &["mobilenetv1", "inceptionv4"],
+        base_cfg(seed),
+    )?;
+    sc.horizon_s = 1_800.0;
+    curve_everywhere(&mut sc, &RateCurve::Constant { rps: 4.0 });
+    for site in &mut sc.sites {
+        if site.tier == "far-edge" {
+            site.arrivals = Some(RateCurve::FlashCrowd {
+                base_rps: 4.0,
+                spike_rps: 300.0,
+                at_s: 600.0,
+                ramp_s: 60.0,
+                hold_s: 300.0,
+            });
+        }
+    }
+    Ok(sc)
+}
+
+/// A correlated surge at every site — one regional event drives demand
+/// up everywhere at once — with the edge site failing mid-surge and
+/// recovering five minutes later.  Queued edge work reroutes to the
+/// survivors while they are themselves under surge: the worst-timed
+/// failure drill the continuum replanner is meant to survive.
+pub fn scenario_site_loss_storm(seed: u64) -> Result<DesScenario> {
+    let mut sc = scenario_from_topology(
+        "site-loss-storm",
+        &continuum_testbed(),
+        &["lenet", "resnet50"],
+        base_cfg(seed),
+    )?;
+    sc.horizon_s = 1_800.0;
+    curve_everywhere(
+        &mut sc,
+        &RateCurve::FlashCrowd {
+            base_rps: 4.0,
+            spike_rps: 40.0,
+            at_s: 600.0,
+            ramp_s: 120.0,
+            hold_s: 400.0,
+        },
+    );
+    sc.drills = vec![
+        Drill::FailSite { at_s: 900.0, site: "edge".into() },
+        Drill::RecoverSite { at_s: 1_200.0, site: "edge".into() },
+    ];
+    Ok(sc)
+}
+
+/// The acceptance drive: a 24 h diurnal day at 2→8 rps per site across
+/// the 3-site continuum — a hair over 1.29 million expected virtual
+/// client requests (mean 5 rps × 3 sites × 86 400 s), every Table III
+/// model in the mix.  Runs in seconds of wall time on the virtual
+/// clock; CI gates it under 60 s and byte-compares two same-seed runs.
+pub fn scenario_million_user_day(seed: u64) -> Result<DesScenario> {
+    let mut cfg = base_cfg(seed);
+    cfg.queue_capacity = 64;
+    cfg.cohorts = 512;
+    cfg.autoscale = Some(DesAutoscale { max_pods: 4, ..Default::default() });
+    let mut sc =
+        scenario_from_topology("million-user-day", &continuum_testbed(), &[], cfg)?;
+    sc.horizon_s = 86_400.0;
+    curve_everywhere(
+        &mut sc,
+        &RateCurve::Diurnal {
+            base_rps: 2.0,
+            peak_rps: 8.0,
+            period_s: 86_400.0,
+            phase_s: 0.0,
+        },
+    );
+    Ok(sc)
+}
+
+/// Look a canned scenario up by name — the shared registry behind the
+/// CLI (`tf2aif continuum --virtual-time --scenario <name>`), the
+/// golden suite and the bench.
+pub fn canned(name: &str, seed: u64) -> Result<DesScenario> {
+    match name {
+        "diurnal-day" => scenario_diurnal_day(seed),
+        "flash-crowd" => scenario_flash_crowd(seed),
+        "site-loss-storm" => scenario_site_loss_storm(seed),
+        "million-user-day" => scenario_million_user_day(seed),
+        other => bail!(
+            "unknown canned scenario {other:?} (expected diurnal-day, flash-crowd, \
+             site-loss-storm or million-user-day)"
+        ),
+    }
+}
+
+/// Names of every canned scenario, in registry order.
+pub const CANNED: &[&str] =
+    &["diurnal-day", "flash-crowd", "site-loss-storm", "million-user-day"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::des::run_des;
+
+    #[test]
+    fn skeleton_mirrors_the_testbed_topology() {
+        let sc = scenario_from_topology(
+            "t",
+            &continuum_testbed(),
+            &["lenet"],
+            DesConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(sc.sites.len(), 3);
+        assert_eq!(sc.sites[0].variant, "GPU");
+        assert_eq!(sc.sites[1].variant, "AGX");
+        assert_eq!(sc.sites[2].variant, "ARM");
+        // Cheapest-path RTTs, including the two-hop cloud↔far-edge.
+        assert_eq!(sc.rtt_ms[0][1], 18.0);
+        assert_eq!(sc.rtt_ms[1][2], 4.0);
+        assert_eq!(sc.rtt_ms[0][2], 22.0);
+        assert_eq!(sc.rtt_ms[2][2], 0.0);
+        assert_eq!(sc.models.len(), 1);
+        assert!(scenario_from_topology(
+            "t",
+            &continuum_testbed(),
+            &["ghost-model"],
+            DesConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn canned_registry_resolves_every_name() {
+        for name in CANNED {
+            let sc = canned(name, 1).unwrap();
+            assert_eq!(&sc.name, name);
+            assert!(sc.sites.iter().any(|s| s.arrivals.is_some()), "{name} has demand");
+        }
+        assert!(canned("nope", 1).is_err());
+    }
+
+    #[test]
+    fn flash_crowd_spills_off_the_far_edge() {
+        // Same shape as the canned scenario at 1/10 the duration: an
+        // inceptionv4 spike far over what one ARM pod can serve, so
+        // overflow toward the edge is guaranteed, not probabilistic.
+        let mut sc = scenario_flash_crowd(11).unwrap();
+        sc.horizon_s = 180.0;
+        for site in &mut sc.sites {
+            if site.tier == "far-edge" {
+                site.arrivals = Some(RateCurve::FlashCrowd {
+                    base_rps: 4.0,
+                    spike_rps: 450.0,
+                    at_s: 60.0,
+                    ramp_s: 10.0,
+                    hold_s: 30.0,
+                });
+            }
+        }
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        assert!(r.spilled > 0, "the spike must overflow the far edge");
+    }
+
+    #[test]
+    fn site_loss_storm_reroutes_and_recovers() {
+        // The far edge is saturated by inceptionv4 demand (its queues
+        // are full for the whole surge), then killed mid-surge: its
+        // queued work MUST be rerouted, deterministically.
+        let mut sc = scenario_from_topology(
+            "storm-test",
+            &continuum_testbed(),
+            &["inceptionv4"],
+            base_cfg(13),
+        )
+        .unwrap();
+        sc.horizon_s = 300.0;
+        curve_everywhere(
+            &mut sc,
+            &RateCurve::FlashCrowd {
+                base_rps: 4.0,
+                spike_rps: 600.0,
+                at_s: 100.0,
+                ramp_s: 20.0,
+                hold_s: 80.0,
+            },
+        );
+        sc.drills = vec![
+            Drill::FailSite { at_s: 150.0, site: "far-edge".into() },
+            Drill::RecoverSite { at_s: 220.0, site: "far-edge".into() },
+        ];
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        assert!(r.rerouted > 0, "queued far-edge work must reroute during the outage");
+        assert!(r.sites.iter().all(|s| s.up), "every site is back by the end");
+        // And the canned storm itself runs reproducibly.
+        let a = run_des(&scenario_site_loss_storm(5).unwrap()).unwrap();
+        let b = run_des(&scenario_site_loss_storm(5).unwrap()).unwrap();
+        assert_eq!(a.canonical_json(), b.canonical_json());
+    }
+}

@@ -33,12 +33,18 @@
 //!   per planned site, nearest-feasible routing with explicit spillover,
 //!   graceful whole-site loss with deterministic replanning (no admitted
 //!   work dropped), and per-site joules/request accounting.
+//! - [`des`] — the virtual-time adapter: canned multi-site scenarios
+//!   (diurnal day, flash crowd, site-loss storm, the million-user day)
+//!   over [`crate::fabric::des`], replayed on a virtual clock in
+//!   seconds of wall time, bit-reproducibly.
 //!
-//! `tf2aif continuum` drives it from the CLI; `tf2aif bench` records
-//! the scenario verdicts in `BENCH_fabric.json` v4
-//! (`spillover_recovers`, `replan_no_drop`, `energy_policy_tradeoff`).
+//! `tf2aif continuum` drives it from the CLI (`--virtual-time` for the
+//! DES path); `tf2aif bench` records the scenario verdicts in
+//! `BENCH_fabric.json` v5 (`spillover_recovers`, `replan_no_drop`,
+//! `energy_policy_tradeoff`, and the DES `bit_reproducible` verdict).
 
 pub mod deploy;
+pub mod des;
 pub mod planner;
 pub mod topology;
 

@@ -30,6 +30,12 @@
 //!    dropped, min-energy vs min-latency plan divergence — plus a mixed
 //!    drive over the 3-site testbed with per-site joules/request rows.
 //!    CI gates on `spillover_recovers` and `replan_no_drop`.
+//! 6. **Virtual time** (schema v5): the million-user diurnal day
+//!    ([`crate::continuum::des`]) replayed twice on the discrete-event
+//!    core under the same seed and byte-compared — the
+//!    `bit_reproducible` verdict CI gates on — plus a seed-variation
+//!    check proving the scenario RNG actually steers outcomes, and the
+//!    engine's events/second as the replay-speed trajectory.
 //!
 //! Dedup and the response cache are disabled for every measurement (the
 //! payload pool recycles tensors; collapsing them would measure
@@ -38,6 +44,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{bail, Context as _, Result};
 
@@ -52,7 +59,7 @@ use crate::util::rng::Rng;
 use crate::workload::{image_like, Arrival, TenantMix};
 
 use super::tenancy::{self, ScenarioVerdicts, TenantReport, TenantSpec};
-use super::{sim, AutoscaleConfig, Fabric, FabricConfig};
+use super::{des, sim, AutoscaleConfig, Fabric, FabricConfig};
 
 /// Sweep configuration (CLI: `tf2aif bench`, see `docs/CLI.md`).
 #[derive(Debug, Clone)]
@@ -630,6 +637,62 @@ pub fn run_continuum_bench(cfg: &BenchConfig) -> Result<ContinuumBench> {
     Ok(ContinuumBench { rate_rps: rate, verdicts, drive })
 }
 
+/// The virtual-time measurement (schema v5 `des` section).
+#[derive(Debug, Clone)]
+pub struct DesBench {
+    /// Events the million-user-day replay processed.
+    pub events: u64,
+    /// Events per wall-clock second (the replay-speed trajectory).
+    pub events_per_sec: f64,
+    /// Virtual seconds the replay covered (horizon + drain).
+    pub virtual_s: f64,
+    /// Virtual client requests offered.
+    pub submitted: u64,
+    /// Requests served by a pod dispatch.
+    pub completed: u64,
+    /// Wall seconds for one replay.
+    pub wall_s: f64,
+    /// Same scenario + same seed twice → byte-identical canonical
+    /// reports.  CI gates on this.
+    pub bit_reproducible: bool,
+    /// Different seeds → different reports (the seed actually steers
+    /// arrivals and service sampling; determinism is not degeneracy).
+    pub seeds_differ: bool,
+    /// Request conservation held on every replay.
+    pub conservation: bool,
+}
+
+/// Run the virtual-time measurement: the million-user diurnal day twice
+/// under `cfg.seed` (byte-comparing the canonical reports), then the
+/// small diurnal scenario under two different seeds (expecting the
+/// reports to differ).
+pub fn run_des_bench(cfg: &BenchConfig) -> Result<DesBench> {
+    let sc = crate::continuum::des::canned("million-user-day", cfg.seed)?;
+    let t0 = Instant::now();
+    let first = des::run_des(&sc)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let second = des::run_des(&sc)?;
+    let bit_reproducible = first.canonical_json() == second.canonical_json();
+    let small_a = des::run_des(&crate::continuum::des::canned("diurnal-day", cfg.seed)?)?;
+    let small_b =
+        des::run_des(&crate::continuum::des::canned("diurnal-day", cfg.seed.wrapping_add(1))?)?;
+    let seeds_differ = small_a.canonical_json() != small_b.canonical_json();
+    Ok(DesBench {
+        events: first.events,
+        events_per_sec: first.events as f64 / wall_s.max(1e-9),
+        virtual_s: first.virtual_end_ms / 1e3,
+        submitted: first.submitted,
+        completed: first.completed,
+        wall_s,
+        bit_reproducible,
+        seeds_differ,
+        conservation: first.conservation_holds()
+            && second.conservation_holds()
+            && small_a.conservation_holds()
+            && small_b.conservation_holds(),
+    })
+}
+
 fn side_json(b: &BenchSide) -> Json {
     obj(vec![
         ("submitted", n(b.submitted as f64)),
@@ -646,10 +709,10 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v4,
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v5,
 /// documented in `docs/CLI.md`) — the perf trajectory future PRs
-/// measure against.  `control`, `autoscale`, `tenancy` and `continuum`
-/// are optional sections; the PR 2 fused sweep is always present.
+/// measure against.  `control`, `autoscale`, `tenancy`, `continuum` and
+/// `des` are optional sections; the PR 2 fused sweep is always present.
 pub fn write_json(
     path: impl AsRef<Path>,
     cfg: &BenchConfig,
@@ -658,6 +721,7 @@ pub fn write_json(
     autoscale: Option<&AutoscaleCompare>,
     tenancy_bench: Option<&TenancyBench>,
     continuum: Option<&ContinuumBench>,
+    des_bench: Option<&DesBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -673,7 +737,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(4.0)),
+        ("version", n(5.0)),
         (
             "config",
             obj(vec![
@@ -850,6 +914,23 @@ pub fn write_json(
                     ]),
                 ),
                 ("sites", Json::Arr(site_rows)),
+            ]),
+        ));
+    }
+    if let Some(d) = des_bench {
+        top.push((
+            "des",
+            obj(vec![
+                ("scenario", s("million-user-day")),
+                ("events", n(d.events as f64)),
+                ("events_per_sec", n(d.events_per_sec)),
+                ("virtual_s", n(d.virtual_s)),
+                ("submitted", n(d.submitted as f64)),
+                ("completed", n(d.completed as f64)),
+                ("wall_s", n(d.wall_s)),
+                ("bit_reproducible", Json::Bool(d.bit_reproducible)),
+                ("seeds_differ", Json::Bool(d.seeds_differ)),
+                ("conservation", Json::Bool(d.conservation)),
             ]),
         ));
     }
@@ -1074,6 +1155,17 @@ mod tests {
             Some(&cmp),
             Some(&tb),
             Some(&cb),
+            Some(&DesBench {
+                events: 4_000_000,
+                events_per_sec: 2_500_000.0,
+                virtual_s: 86_400.5,
+                submitted: 1_296_000,
+                completed: 1_295_000,
+                wall_s: 1.6,
+                bit_reproducible: true,
+                seeds_differ: true,
+                conservation: true,
+            }),
         )
         .unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
@@ -1101,7 +1193,11 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
-        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 4);
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 5);
+        let des_doc = doc.get("des").unwrap();
+        assert!(matches!(des_doc.get("bit_reproducible").unwrap(), Json::Bool(true)));
+        assert!(matches!(des_doc.get("seeds_differ").unwrap(), Json::Bool(true)));
+        assert_eq!(des_doc.get("submitted").unwrap().usize().unwrap(), 1_296_000);
         let cont = doc.get("continuum").unwrap();
         assert!(matches!(cont.get("spillover_recovers").unwrap(), Json::Bool(true)));
         assert!(matches!(cont.get("replan_no_drop").unwrap(), Json::Bool(true)));
@@ -1133,12 +1229,14 @@ mod tests {
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None).unwrap();
+        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None, None)
+            .unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(doc.opt("control").is_none());
         assert!(doc.opt("autoscale").is_none());
         assert!(doc.opt("tenancy").is_none());
         assert!(doc.opt("continuum").is_none());
+        assert!(doc.opt("des").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -43,7 +43,13 @@ pub struct TokenBucket {
     rate_per_s: f64,
     burst: f64,
     tokens: f64,
-    last: Option<Instant>,
+    /// Refill high-water mark on the bucket's own time axis, seconds.
+    last_s: Option<f64>,
+    /// Anchor mapping `Instant`s onto that axis — set lazily by the
+    /// first [`try_take_at`](Self::try_take_at) call.  A bucket driven
+    /// purely through [`try_take_at_s`](Self::try_take_at_s) (the
+    /// virtual-time fabric) never touches the wall clock at all.
+    epoch: Option<Instant>,
 }
 
 impl TokenBucket {
@@ -52,23 +58,26 @@ impl TokenBucket {
     pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
         assert!(rate_per_s > 0.0, "token rate must be positive");
         assert!(burst >= 1.0, "burst must admit at least one request");
-        TokenBucket { rate_per_s, burst, tokens: burst, last: None }
+        TokenBucket { rate_per_s, burst, tokens: burst, last_s: None, epoch: None }
     }
 
-    /// Take one token as of `now`; `false` means the quota is exhausted
-    /// (the submission is shed).  `now` values that move backwards are
-    /// treated as zero elapsed time and never rewind the refill clock —
-    /// the bucket cannot be made to credit an interval twice.
-    pub fn try_take_at(&mut self, now: Instant) -> bool {
-        match self.last {
+    /// Take one token as of `now_s` seconds on the caller's time axis —
+    /// wall-clock seconds from the threaded fabric, *virtual* seconds
+    /// from the DES (quota refills become arithmetic over virtual
+    /// elapsed time, no sleeps anywhere).  `false` means the quota is
+    /// exhausted (the submission is shed).  `now_s` values that move
+    /// backwards count as zero elapsed time and never rewind the refill
+    /// clock — the bucket cannot be made to credit an interval twice.
+    pub fn try_take_at_s(&mut self, now_s: f64) -> bool {
+        match self.last_s {
             Some(last) => {
-                let dt = now.saturating_duration_since(last).as_secs_f64();
+                let dt = (now_s - last).max(0.0);
                 self.tokens = (self.tokens + dt * self.rate_per_s).min(self.burst);
-                // Keep the high-water mark: a backwards `now` must not
-                // let a later call re-earn the same interval.
-                self.last = Some(last.max(now));
+                // Keep the high-water mark: a backwards `now_s` must
+                // not let a later call re-earn the same interval.
+                self.last_s = Some(last.max(now_s));
             }
-            None => self.last = Some(now),
+            None => self.last_s = Some(now_s),
         }
         if self.tokens >= 1.0 {
             self.tokens -= 1.0;
@@ -76,6 +85,15 @@ impl TokenBucket {
         } else {
             false
         }
+    }
+
+    /// [`try_take_at_s`](Self::try_take_at_s) with an `Instant`: the
+    /// first call anchors the bucket's epoch, later calls convert to
+    /// elapsed seconds since it (backwards `Instant`s saturate to the
+    /// epoch, preserving the never-refill-retroactively guarantee).
+    pub fn try_take_at(&mut self, now: Instant) -> bool {
+        let epoch = *self.epoch.get_or_insert(now);
+        self.try_take_at_s(now.saturating_duration_since(epoch).as_secs_f64())
     }
 
     /// [`try_take_at`](Self::try_take_at) against the real clock.
@@ -480,6 +498,23 @@ mod tests {
         assert!(!b.try_take_at(t0 + Duration::from_secs(5)));
         // Time genuinely past the high-water mark refills normally.
         assert!(b.try_take_at(t0 + Duration::from_secs(6)));
+    }
+
+    #[test]
+    fn token_bucket_virtual_axis_matches_instant_semantics() {
+        // The pure-seconds core the DES drives: same burst bound, same
+        // refill rate, same high-water mark, no Instant anywhere.
+        let mut b = TokenBucket::new(10.0, 2.0);
+        assert!(b.try_take_at_s(0.0));
+        assert!(b.try_take_at_s(0.0));
+        assert!(!b.try_take_at_s(0.0), "burst 2 spent");
+        assert!(b.try_take_at_s(0.1), "100 virtual ms at 10/s refills one");
+        assert!(!b.try_take_at_s(0.1));
+        // Backwards virtual time is zero elapsed and never rewinds.
+        assert!(!b.try_take_at_s(0.05));
+        assert!(!b.try_take_at_s(0.1), "the interval cannot be credited twice");
+        let admitted = (0..5).filter(|_| b.try_take_at_s(60.0)).count();
+        assert_eq!(admitted, 2, "long idle refills to the burst cap only");
     }
 
     fn ctl(max: usize, slo: f64) -> BatchController {

@@ -1,0 +1,1415 @@
+//! Deterministic discrete-event simulation (DES) core — virtual time
+//! for the serving fabric and the continuum.
+//!
+//! Every fabric drive before this module was wall-clock-bound: simulated
+//! pods really sleep a scaled slice of their modeled latency, lingers
+//! are condvar timeouts, autoscale ticks ride a control thread, and a
+//! heavy-traffic scenario is capped at what a CI runner can physically
+//! sleep through.  This module re-hosts the *simulated* serving path
+//! onto a discrete-event engine:
+//!
+//! - a virtual [`SimClock`] in integer microseconds, advanced only by
+//!   the event loop (monotonicity is asserted, never assumed);
+//! - an [`EventHeap`] keyed by `(time, seq)` — `seq` is a monotonically
+//!   increasing schedule counter, so same-time events fire in the exact
+//!   order they were scheduled (stable tie-breaking is what makes runs
+//!   bit-reproducible);
+//! - one seeded PRNG lineage ([`crate::util::rng::Rng`]) for arrivals
+//!   and service noise — no `Instant::now`, no thread timing, no
+//!   iteration over hash maps anywhere on this path.
+//!
+//! The pieces of the real-time fabric that are already pure reappear
+//! here unchanged: platform cost models
+//! ([`Platform::sample_batch_latency_ms`]) price fused dispatches,
+//! [`BatchController`] adapts drain sizes, [`HysteresisGate`] debounces
+//! autoscale decisions, and [`TokenBucket`] quotas refill on the
+//! virtual axis via
+//! [`try_take_at_s`](crate::fabric::control::TokenBucket::try_take_at_s).
+//! What real time expressed as sleeps — batch service occupancy, linger
+//! deadlines, autoscale ticks, site-failure drills — becomes scheduled
+//! events; cache TTLs and quota refills become virtual-time arithmetic.
+//! The [`Clock`] trait is the seam: [`WallClock`] is the threaded
+//! fabric's view of time, [`SimClock`] the event loop's, and nothing in
+//! the real-time path changed to make room for this one.
+//!
+//! A simulated day of ~1M virtual client requests across the 3-site
+//! continuum runs in seconds of wall time, and two runs with the same
+//! seed produce **byte-identical** reports
+//! ([`DesReport::canonical_json`]) — the golden suite
+//! (`rust/tests/scenario_des.rs`) and the BENCH v5 `bit_reproducible`
+//! verdict hold that contract.
+
+use std::collections::{BinaryHeap, BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::fabric::control::{
+    BatchControlConfig, BatchController, HysteresisGate, ScaleDirection, TokenBucket,
+};
+use crate::platform::{self, Platform};
+use crate::util::json::{n, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::Series;
+use crate::workload::{RateCurve, TraceEvent};
+
+// ───────────────────────────── clocks ──────────────────────────────
+
+/// The time source a serving path reads.  The threaded fabric measures
+/// real elapsed time ([`WallClock`]); the DES advances a virtual clock
+/// event by event ([`SimClock`]).  Code written against this trait
+/// cannot tell the difference — which is the whole point: the
+/// determinism rule for the DES path is *no `Instant::now` anywhere*,
+/// and the trait is where that rule is enforced by construction.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's epoch.
+    fn now_ms(&self) -> f64;
+}
+
+/// Real time: milliseconds since construction, via `Instant`.  This is
+/// the clock the threaded fabric implicitly ran on all along.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// A wall clock anchored at the moment of construction.
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Virtual time in integer microseconds, advanced only by the event
+/// loop.  Integer time is deliberate: float accumulation would make
+/// event ordering depend on summation history, and the bit-reproducible
+/// contract forbids that.  Advancing backwards panics — the monotone
+/// clock is an asserted invariant, not a convention.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    now_us: AtomicU64,
+}
+
+impl SimClock {
+    /// A virtual clock at t = 0.
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// Current virtual time, microseconds.
+    pub fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::Relaxed)
+    }
+
+    /// Advance to `at_us` (equal time is fine — simultaneous events).
+    ///
+    /// # Panics
+    /// If `at_us` is earlier than the current virtual time: a regressing
+    /// clock means the event heap yielded out of order, which would
+    /// silently corrupt every downstream measurement.
+    pub fn advance_to(&self, at_us: u64) {
+        let prev = self.now_us.load(Ordering::Relaxed);
+        assert!(
+            at_us >= prev,
+            "virtual clock may never run backwards ({at_us} < {prev})"
+        );
+        self.now_us.store(at_us, Ordering::Relaxed);
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ms(&self) -> f64 {
+        self.now_us() as f64 / 1e3
+    }
+}
+
+// ──────────────────────────── event heap ───────────────────────────
+
+/// One scheduled entry: ordered by `(at_us, seq)` only — the payload
+/// never participates in ordering.
+#[derive(Debug)]
+struct Scheduled<E> {
+    at_us: u64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_us == other.at_us && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Inverted: BinaryHeap is a max-heap, we want the earliest
+        // (time, seq) on top.
+        (other.at_us, other.seq).cmp(&(self.at_us, self.seq))
+    }
+}
+
+/// Binary min-heap of scheduled events keyed by `(time, seq)`.
+///
+/// `seq` is assigned at [`schedule`](Self::schedule) time from a
+/// monotone counter, so two events scheduled for the same virtual
+/// instant pop in schedule order — FIFO among ties, by construction.
+/// The property suite (`rust/tests/proptest_des.rs`) holds the heap to
+/// exactly that: pops never regress in time, and equal-time pops never
+/// reorder.
+#[derive(Debug)]
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventHeap<E> {
+    fn default() -> Self {
+        EventHeap { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+}
+
+impl<E> EventHeap<E> {
+    /// An empty heap.
+    pub fn new() -> EventHeap<E> {
+        EventHeap::default()
+    }
+
+    /// Schedule `ev` at absolute virtual time `at_us`; returns the
+    /// sequence number assigned (the tie-break key).
+    pub fn schedule(&mut self, at_us: u64, ev: E) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { at_us, seq, ev });
+        seq
+    }
+
+    /// Pop the earliest `(at_us, seq, event)`, or `None` when drained.
+    pub fn pop(&mut self) -> Option<(u64, u64, E)> {
+        self.heap.pop().map(|e| (e.at_us, e.seq, e.ev))
+    }
+
+    /// Scheduled events not yet popped.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// ─────────────────────────── scenario model ────────────────────────
+
+/// One model served in a scenario (name + compute scale, from the
+/// synthetic catalog's manifests).
+#[derive(Debug, Clone)]
+pub struct DesModel {
+    /// Model name (trace events refer to it).
+    pub name: String,
+    /// Compute per inference, GFLOPs — priced by the platform models.
+    pub gflops: f64,
+}
+
+/// One site in a scenario: a serving location with a platform variant,
+/// an initial pod count per model, and (optionally) its own open-loop
+/// demand curve.
+#[derive(Debug, Clone)]
+pub struct DesSite {
+    /// Site name (drills and traces refer to it).
+    pub name: String,
+    /// Continuum tier label, e.g. `cloud` / `edge` / `far-edge`.
+    pub tier: String,
+    /// Platform variant every pod at this site runs (Table I name).
+    pub variant: String,
+    /// Initial pods per model at this site.
+    pub pods: usize,
+    /// Demand originating here, as a rate curve over virtual seconds
+    /// (`None` when the scenario replays a recorded trace instead).
+    pub arrivals: Option<RateCurve>,
+}
+
+/// Autoscaler settings for the virtual-time fabric — the same
+/// backlog-per-replica signal and [`HysteresisGate`] debounce the
+/// threaded autoscaler uses, stepped by scheduled tick events.
+#[derive(Debug, Clone)]
+pub struct DesAutoscale {
+    /// Floor of active pods per (site, model).
+    pub min_pods: usize,
+    /// Ceiling of active pods per (site, model).
+    pub max_pods: usize,
+    /// Virtual tick period, ms.
+    pub interval_ms: f64,
+    /// Mean backlog per active pod at which a group counts overloaded.
+    pub scale_up_backlog: f64,
+    /// Mean backlog per active pod at or below which a group counts idle.
+    pub scale_down_backlog: f64,
+    /// Consecutive ticks the signal must hold before a decision fires.
+    pub hold_ticks: u32,
+    /// Ticks to ignore a group's signals after acting on it.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for DesAutoscale {
+    fn default() -> Self {
+        DesAutoscale {
+            min_pods: 1,
+            max_pods: 3,
+            interval_ms: 1000.0,
+            scale_up_backlog: 4.0,
+            scale_down_backlog: 0.5,
+            hold_ticks: 2,
+            cooldown_ticks: 2,
+        }
+    }
+}
+
+/// Serving-fabric knobs of a virtual-time scenario — the DES analogue
+/// of [`super::FabricConfig`], restricted to what the event-driven
+/// model exercises.
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    /// Admission bound per pod queue.
+    pub queue_capacity: usize,
+    /// Fused-dispatch packing bound.
+    pub max_batch: usize,
+    /// Smallest drain size the adaptive controller may pick.
+    pub min_batch: usize,
+    /// Adaptive batch sizing ([`BatchController`]) instead of always
+    /// draining up to `max_batch`.
+    pub adaptive: bool,
+    /// Tail objective handed to the adaptive controller, ms.
+    pub slo_p99_ms: f64,
+    /// How long an idle pod holds a partial batch hoping to fill it,
+    /// virtual ms (`0` dispatches immediately) — the linger deadline as
+    /// a scheduled event instead of a condvar timeout.
+    pub batch_linger_ms: f64,
+    /// Per-site admission quota, requests/second (`0` disables).  The
+    /// bucket refills on the virtual axis.
+    pub quota_rps: f64,
+    /// Quota burst depth (≥ 1 when the quota is on).
+    pub quota_burst: f64,
+    /// Response-cache TTL, virtual ms (`0` disables).  Active only with
+    /// `cohorts > 0`, since all-distinct requests can never hit.
+    pub cache_ttl_ms: f64,
+    /// Distinct request identities per site: arrivals draw a cohort id
+    /// in `[0, cohorts)` and identical `(model, cohort)` pairs are
+    /// cache-equivalent.  `0` makes every request unique.
+    pub cohorts: usize,
+    /// Backlog-driven autoscaling via virtual tick events (`None` keeps
+    /// pod counts fixed).
+    pub autoscale: Option<DesAutoscale>,
+    /// Master seed: arrival streams, cohorts and per-pod service noise
+    /// all derive from it deterministically.
+    pub seed: u64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig {
+            queue_capacity: 16,
+            max_batch: 8,
+            min_batch: 1,
+            adaptive: false,
+            slo_p99_ms: 50.0,
+            batch_linger_ms: 2.0,
+            quota_rps: 0.0,
+            quota_burst: 1.0,
+            cache_ttl_ms: 0.0,
+            cohorts: 0,
+            autoscale: None,
+            seed: 0xDE5,
+        }
+    }
+}
+
+/// A scheduled failure-drill action.
+#[derive(Debug, Clone)]
+pub enum Drill {
+    /// The named site drops out at `at_s`: its queued work is rerouted
+    /// to surviving sites (original enqueue times preserved), in-flight
+    /// batches drain to completion, and new demand originating there
+    /// routes to the nearest surviving site.
+    FailSite {
+        /// Virtual seconds from scenario start.
+        at_s: f64,
+        /// Site to kill.
+        site: String,
+    },
+    /// The named site comes back at `at_s` and resumes serving.
+    RecoverSite {
+        /// Virtual seconds from scenario start.
+        at_s: f64,
+        /// Site to revive.
+        site: String,
+    },
+}
+
+/// A complete virtual-time scenario: sites, models, link RTTs, demand
+/// (curves or a recorded trace), failure drills, and fabric knobs.
+/// Everything needed to reproduce a run bit-for-bit is in here plus the
+/// seed — [`run_des`] takes nothing else.
+#[derive(Debug, Clone)]
+pub struct DesScenario {
+    /// Scenario name (echoed in the report).
+    pub name: String,
+    /// Arrival horizon, virtual seconds: curves generate arrivals in
+    /// `[0, horizon_s)`; the engine then drains to completion.
+    pub horizon_s: f64,
+    /// Models served (every site hosts every model).
+    pub models: Vec<DesModel>,
+    /// Sites, in routing-index order.
+    pub sites: Vec<DesSite>,
+    /// Site-pair link RTT matrix, ms (`rtt_ms[i][j]`; `0` on the
+    /// diagonal, `f64::INFINITY` = unreachable).  Spillover and
+    /// failure reroutes charge this once per request.
+    pub rtt_ms: Vec<Vec<f64>>,
+    /// Recorded trace to replay instead of the per-site curves
+    /// (`at_ms` ordered; site/model names must resolve).
+    pub trace: Option<Vec<TraceEvent>>,
+    /// Failure drills, applied at their scheduled virtual times.
+    pub drills: Vec<Drill>,
+    /// Fabric knobs.
+    pub cfg: DesConfig,
+}
+
+// ─────────────────────────── engine internals ──────────────────────
+
+/// One admitted request riding a pod queue.
+#[derive(Debug, Clone)]
+struct Item {
+    origin: usize,
+    model: usize,
+    cohort: u64,
+    enq_us: u64,
+    link_ms: f64,
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// Curve-driven arrival at `site` (schedules its successor).
+    Arrival { site: usize },
+    /// Trace-driven arrival (schedules `idx + 1`).
+    TraceArrival { idx: usize },
+    /// Linger deadline for a pod's partial batch.
+    LingerFire { site: usize, model: usize, pod: usize, gen: u64 },
+    /// A fused dispatch completed.
+    BatchDone { site: usize, model: usize, pod: usize, total_ms: f64, batch: Vec<Item> },
+    /// Autoscaler control tick.
+    AutoscaleTick,
+    /// Site-loss drill.
+    Fail { site: usize },
+    /// Site-recovery drill.
+    Recover { site: usize },
+}
+
+struct Pod {
+    q: VecDeque<Item>,
+    busy: bool,
+    retired: bool,
+    linger_armed: bool,
+    linger_gen: u64,
+    rng: Rng,
+    ctrl: Option<BatchController>,
+    dispatches: u64,
+}
+
+struct SiteState {
+    up: bool,
+    quota: Option<TokenBucket>,
+    /// `(model, cohort)` → stored-at virtual µs; freshness checked
+    /// lazily against the TTL.
+    cache: BTreeMap<(usize, u64), u64>,
+    arrivals_rng: Rng,
+    // Demand-origin accounting (requests that *originated* here).
+    submitted: u64,
+    quota_shed: u64,
+    cache_hits: u64,
+    completed: u64,
+    shed: u64,
+    e2e: Series,
+    // Exec-side accounting (work *served* here).
+    served_here: u64,
+    spillover_in: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+}
+
+struct Engine<'a> {
+    sc: &'a DesScenario,
+    clock: SimClock,
+    heap: EventHeap<Ev>,
+    sites: Vec<SiteState>,
+    /// Pod groups indexed `site * n_models + model`.
+    groups: Vec<Vec<Pod>>,
+    gates: Vec<HysteresisGate>,
+    cooldown: Vec<u32>,
+    /// Per-origin candidate sites, nearest first (origin, then ascending
+    /// RTT, site index breaking ties) — unreachable pairs excluded.
+    route_order: Vec<Vec<usize>>,
+    plats: Vec<(&'static Platform, bool)>,
+    trace: Vec<(u64, usize, usize)>,
+    horizon_us: u64,
+    ttl_us: u64,
+    cache_on: bool,
+    events: u64,
+    pod_seq: u64,
+    unique_cohort: u64,
+    // Global totals.
+    submitted: u64,
+    completed: u64,
+    cache_hits: u64,
+    shed: u64,
+    quota_shed: u64,
+    spilled: u64,
+    rerouted: u64,
+    e2e: Series,
+}
+
+fn dur_us(ms: f64) -> u64 {
+    ((ms * 1e3).round() as u64).max(1)
+}
+
+fn at_us(t_s: f64) -> u64 {
+    (t_s * 1e6).round() as u64
+}
+
+fn pod_seed(master: u64, seq: u64) -> u64 {
+    master ^ 0xA5CA1Eu64 ^ seq.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+fn percentiles(series: &mut Series) -> (f64, f64, f64, f64) {
+    if series.is_empty() {
+        return (0.0, 0.0, 0.0, 0.0);
+    }
+    let max = series.samples().iter().copied().fold(f64::MIN, f64::max);
+    (series.percentile(50.0), series.percentile(99.0), series.mean(), max)
+}
+
+impl<'a> Engine<'a> {
+    fn build(sc: &'a DesScenario) -> Result<Engine<'a>> {
+        let (ns, nm) = (sc.sites.len(), sc.models.len());
+        if ns == 0 {
+            bail!("scenario {:?} has no sites", sc.name);
+        }
+        if nm == 0 {
+            bail!("scenario {:?} has no models", sc.name);
+        }
+        if sc.cfg.queue_capacity == 0 || sc.cfg.max_batch == 0 {
+            bail!("queue capacity and max batch must be >= 1");
+        }
+        if sc.trace.is_none() && !(sc.horizon_s > 0.0) {
+            bail!("curve-driven scenarios need a positive horizon");
+        }
+        if sc.rtt_ms.len() != ns || sc.rtt_ms.iter().any(|row| row.len() != ns) {
+            bail!("rtt matrix must be {ns}x{ns}");
+        }
+        {
+            let mut names = std::collections::BTreeSet::new();
+            for site in &sc.sites {
+                if site.pods == 0 {
+                    bail!("site {:?} starts with no pods", site.name);
+                }
+                if !names.insert(site.name.as_str()) {
+                    bail!("duplicate site {:?}", site.name);
+                }
+            }
+        }
+        let mut plats = Vec::with_capacity(ns);
+        for site in &sc.sites {
+            let Some(p) = platform::get(&site.variant) else {
+                bail!("site {:?}: unknown platform variant {:?}", site.name, site.variant);
+            };
+            plats.push((p, Platform::is_native_variant(&site.variant)));
+        }
+        let site_idx = |name: &str| -> Result<usize> {
+            sc.sites
+                .iter()
+                .position(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown site {name:?}"))
+        };
+        let model_idx = |name: &str| -> Result<usize> {
+            sc.models
+                .iter()
+                .position(|m| m.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+        };
+        let mut trace = Vec::new();
+        if let Some(events) = &sc.trace {
+            trace.reserve(events.len());
+            for ev in events {
+                let at = (ev.at_ms * 1e3).round() as u64;
+                trace.push((at, site_idx(&ev.site)?, model_idx(&ev.model)?));
+            }
+        }
+        for d in &sc.drills {
+            let (at_s, site) = match d {
+                Drill::FailSite { at_s, site } | Drill::RecoverSite { at_s, site } => (at_s, site),
+            };
+            if !(*at_s >= 0.0) {
+                bail!("drill time must be >= 0, got {at_s}");
+            }
+            site_idx(site)?;
+        }
+        let mut route_order = Vec::with_capacity(ns);
+        for origin in 0..ns {
+            let mut order: Vec<usize> =
+                (0..ns).filter(|&j| sc.rtt_ms[origin][j].is_finite()).collect();
+            order.sort_by(|&a, &b| {
+                sc.rtt_ms[origin][a]
+                    .partial_cmp(&sc.rtt_ms[origin][b])
+                    .expect("finite RTTs compare")
+                    .then(a.cmp(&b))
+            });
+            route_order.push(order);
+        }
+        let mut pod_seq = 0u64;
+        let mut groups = Vec::with_capacity(ns * nm);
+        for site in &sc.sites {
+            for _model in 0..nm {
+                let mut pods = Vec::with_capacity(site.pods);
+                for _ in 0..site.pods {
+                    pods.push(Pod::new(sc, pod_seed(sc.cfg.seed, pod_seq)));
+                    pod_seq += 1;
+                }
+                groups.push(pods);
+            }
+        }
+        let sites = (0..ns)
+            .map(|i| SiteState {
+                up: true,
+                quota: (sc.cfg.quota_rps > 0.0).then(|| {
+                    TokenBucket::new(sc.cfg.quota_rps, sc.cfg.quota_burst.max(1.0))
+                }),
+                cache: BTreeMap::new(),
+                arrivals_rng: Rng::new(sc.cfg.seed ^ 0x51D0u64 ^ (i as u64) << 17),
+                submitted: 0,
+                quota_shed: 0,
+                cache_hits: 0,
+                completed: 0,
+                shed: 0,
+                e2e: Series::new(),
+                served_here: 0,
+                spillover_in: 0,
+                scale_ups: 0,
+                scale_downs: 0,
+            })
+            .collect();
+        // Trace-driven scenarios take their horizon from the last trace
+        // timestamp so autoscale ticks span the replay.
+        let horizon_us = trace
+            .last()
+            .map(|&(at, _, _)| at)
+            .unwrap_or(0)
+            .max(at_us(sc.horizon_s.max(0.0)));
+        Ok(Engine {
+            sc,
+            clock: SimClock::new(),
+            heap: EventHeap::new(),
+            sites,
+            groups,
+            gates: vec![HysteresisGate::default(); ns * nm],
+            cooldown: vec![0; ns * nm],
+            route_order,
+            plats,
+            trace,
+            horizon_us,
+            ttl_us: dur_us(sc.cfg.cache_ttl_ms.max(0.0)),
+            cache_on: sc.cfg.cache_ttl_ms > 0.0 && sc.cfg.cohorts > 0,
+            events: 0,
+            pod_seq,
+            unique_cohort: 0,
+            submitted: 0,
+            completed: 0,
+            cache_hits: 0,
+            shed: 0,
+            quota_shed: 0,
+            spilled: 0,
+            rerouted: 0,
+            e2e: Series::new(),
+        })
+    }
+
+    fn seed_initial_events(&mut self) {
+        if self.trace.is_empty() {
+            for site in 0..self.sc.sites.len() {
+                self.schedule_next_arrival(site, 0.0);
+            }
+        } else {
+            let t0 = self.trace[0].0;
+            self.heap.schedule(t0, Ev::TraceArrival { idx: 0 });
+        }
+        for d in &self.sc.drills {
+            match d {
+                Drill::FailSite { at_s, site } => {
+                    let idx = self.sc.sites.iter().position(|s| &s.name == site).unwrap();
+                    self.heap.schedule(at_us(*at_s), Ev::Fail { site: idx });
+                }
+                Drill::RecoverSite { at_s, site } => {
+                    let idx = self.sc.sites.iter().position(|s| &s.name == site).unwrap();
+                    self.heap.schedule(at_us(*at_s), Ev::Recover { site: idx });
+                }
+            }
+        }
+        if let Some(auto) = &self.sc.cfg.autoscale {
+            let first = dur_us(auto.interval_ms);
+            if first <= self.horizon_us {
+                self.heap.schedule(first, Ev::AutoscaleTick);
+            }
+        }
+    }
+
+    /// Schedule `site`'s next curve arrival strictly after `from_s`.
+    fn schedule_next_arrival(&mut self, site: usize, from_s: f64) {
+        let Some(curve) = &self.sc.sites[site].arrivals else { return };
+        let curve = curve.clone();
+        let st = &mut self.sites[site];
+        if let Some(t) = curve.next_arrival_s(&mut st.arrivals_rng, from_s, self.sc.horizon_s) {
+            self.heap.schedule(at_us(t), Ev::Arrival { site });
+        }
+    }
+
+    fn draw_cohort(&mut self, site: usize) -> u64 {
+        if self.sc.cfg.cohorts > 0 {
+            self.sites[site].arrivals_rng.below(self.sc.cfg.cohorts) as u64
+        } else {
+            self.unique_cohort += 1;
+            self.unique_cohort
+        }
+    }
+
+    /// Admit one request originating at `origin` for `model`: quota →
+    /// cache → route (origin first, spillover by ascending RTT) → shed.
+    fn admit(&mut self, origin: usize, model: usize, cohort: u64) {
+        let now = self.clock.now_us();
+        self.submitted += 1;
+        self.sites[origin].submitted += 1;
+        if let Some(bucket) = &mut self.sites[origin].quota {
+            if !bucket.try_take_at_s(now as f64 / 1e6) {
+                self.quota_shed += 1;
+                self.sites[origin].quota_shed += 1;
+                return;
+            }
+        }
+        if self.cache_on {
+            let st = &mut self.sites[origin];
+            if let Some(&stored) = st.cache.get(&(model, cohort)) {
+                if now.saturating_sub(stored) <= self.ttl_us {
+                    self.cache_hits += 1;
+                    st.cache_hits += 1;
+                    return;
+                }
+            }
+        }
+        let item = Item { origin, model, cohort, enq_us: now, link_ms: 0.0 };
+        self.route(item, false);
+    }
+
+    /// Place `item` on the least-loaded pod of the nearest up site with
+    /// queue room; sheds (attributed to the origin) when every
+    /// reachable site is full or down.  `reroute` marks failure-drill
+    /// replacement traffic (counted separately from spillover).
+    fn route(&mut self, mut item: Item, reroute: bool) {
+        let nm = self.sc.models.len();
+        let order = self.route_order[item.origin].clone();
+        for cand in order {
+            if !self.sites[cand].up {
+                continue;
+            }
+            let gi = cand * nm + item.model;
+            let cap = self.sc.cfg.queue_capacity;
+            let pick = self.groups[gi]
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| !p.retired && p.q.len() < cap)
+                .min_by_key(|(i, p)| (p.q.len(), *i))
+                .map(|(i, _)| i);
+            if let Some(pi) = pick {
+                item.link_ms = self.sc.rtt_ms[item.origin][cand];
+                if cand != item.origin {
+                    if reroute {
+                        self.rerouted += 1;
+                    } else {
+                        self.spilled += 1;
+                    }
+                    self.sites[cand].spillover_in += 1;
+                } else if reroute {
+                    self.rerouted += 1;
+                }
+                self.groups[gi][pi].q.push_back(item);
+                self.pod_kick(cand, item_model(gi, nm), pi);
+                return;
+            }
+        }
+        self.shed += 1;
+        self.sites[item.origin].shed += 1;
+    }
+
+    /// Nudge an idle pod: dispatch when a full batch is ready (or no
+    /// linger is configured), otherwise arm the linger deadline.
+    fn pod_kick(&mut self, site: usize, model: usize, pod: usize) {
+        if !self.sites[site].up {
+            return;
+        }
+        let gi = site * self.sc.models.len() + model;
+        let linger = self.sc.cfg.batch_linger_ms;
+        let (do_dispatch, arm) = {
+            let p = &self.groups[gi][pod];
+            if p.busy || p.retired || p.q.is_empty() {
+                return;
+            }
+            let target = self.drain_target(gi, pod);
+            if p.q.len() >= target || linger <= 0.0 {
+                (true, false)
+            } else {
+                (false, !p.linger_armed)
+            }
+        };
+        if do_dispatch {
+            self.dispatch(site, model, pod);
+        } else if arm {
+            let p = &mut self.groups[gi][pod];
+            p.linger_armed = true;
+            p.linger_gen += 1;
+            let gen = p.linger_gen;
+            let fire = self.clock.now_us() + dur_us(linger);
+            self.heap.schedule(fire, Ev::LingerFire { site, model, pod, gen });
+        }
+    }
+
+    fn drain_target(&self, gi: usize, pod: usize) -> usize {
+        let cfg = &self.sc.cfg;
+        self.groups[gi][pod]
+            .ctrl
+            .as_ref()
+            .map(|c| c.drain_size())
+            .unwrap_or(cfg.max_batch)
+            .clamp(1, cfg.max_batch)
+    }
+
+    /// Drain up to the target and price the fused dispatch with the
+    /// site platform's cost model — the service time becomes one
+    /// `BatchDone` event instead of a worker sleeping.
+    fn dispatch(&mut self, site: usize, model: usize, pod: usize) {
+        let gi = site * self.sc.models.len() + model;
+        let target = self.drain_target(gi, pod);
+        let (plat, native) = self.plats[site];
+        let gflops = self.sc.models[model].gflops;
+        let p = &mut self.groups[gi][pod];
+        let drain = p.q.len().min(target);
+        debug_assert!(drain > 0, "dispatch on an empty queue");
+        let batch: Vec<Item> = p.q.drain(..drain).collect();
+        p.busy = true;
+        p.linger_armed = false;
+        p.dispatches += 1;
+        let total_ms = plat.sample_batch_latency_ms(gflops, native, batch.len(), &mut p.rng);
+        let done = self.clock.now_us() + dur_us(total_ms);
+        self.heap.schedule(done, Ev::BatchDone { site, model, pod, total_ms, batch });
+    }
+
+    fn on_batch_done(
+        &mut self,
+        site: usize,
+        model: usize,
+        pod: usize,
+        total_ms: f64,
+        batch: Vec<Item>,
+    ) {
+        let now = self.clock.now_us();
+        let drained = batch.len();
+        let mut worst = 0.0f64;
+        for item in &batch {
+            let e2e = (now - item.enq_us) as f64 / 1e3 + item.link_ms;
+            worst = worst.max(e2e);
+            self.completed += 1;
+            self.e2e.push(e2e);
+            let origin = &mut self.sites[item.origin];
+            origin.completed += 1;
+            origin.e2e.push(e2e);
+            if self.cache_on {
+                origin.cache.insert((item.model, item.cohort), now);
+            }
+        }
+        self.sites[site].served_here += drained as u64;
+        let gi = site * self.sc.models.len() + model;
+        let p = &mut self.groups[gi][pod];
+        p.busy = false;
+        if let Some(c) = &p.ctrl {
+            c.observe(drained, p.q.len(), worst.max(total_ms), None);
+        }
+        self.pod_kick(site, model, pod);
+    }
+
+    fn on_linger_fire(&mut self, site: usize, model: usize, pod: usize, gen: u64) {
+        let gi = site * self.sc.models.len() + model;
+        {
+            let p = &mut self.groups[gi][pod];
+            if !p.linger_armed || p.linger_gen != gen {
+                return; // stale deadline: the batch already dispatched
+            }
+            p.linger_armed = false;
+            if p.busy || p.retired || p.q.is_empty() {
+                return;
+            }
+        }
+        if !self.sites[site].up {
+            return;
+        }
+        self.dispatch(site, model, pod);
+    }
+
+    fn on_autoscale_tick(&mut self) {
+        let auto = self.sc.cfg.autoscale.clone().expect("tick only scheduled with autoscale");
+        let nm = self.sc.models.len();
+        for site in 0..self.sc.sites.len() {
+            if !self.sites[site].up {
+                continue;
+            }
+            for model in 0..nm {
+                let gi = site * nm + model;
+                if self.cooldown[gi] > 0 {
+                    self.cooldown[gi] -= 1;
+                    continue;
+                }
+                let (active, backlog) = {
+                    let g = &self.groups[gi];
+                    let active = g.iter().filter(|p| !p.retired).count();
+                    let backlog: usize =
+                        g.iter().filter(|p| !p.retired).map(|p| p.q.len()).sum();
+                    (active.max(1), backlog)
+                };
+                let per = backlog as f64 / active as f64;
+                let decision = self.gates[gi].decide(
+                    per >= auto.scale_up_backlog,
+                    per <= auto.scale_down_backlog,
+                    auto.hold_ticks,
+                );
+                match decision {
+                    Some(ScaleDirection::Up) if active < auto.max_pods => {
+                        if let Some(p) =
+                            self.groups[gi].iter_mut().find(|p| p.retired)
+                        {
+                            p.retired = false;
+                        } else {
+                            let seed = pod_seed(self.sc.cfg.seed, self.pod_seq);
+                            self.pod_seq += 1;
+                            self.groups[gi].push(Pod::new(self.sc, seed));
+                        }
+                        self.sites[site].scale_ups += 1;
+                        self.cooldown[gi] = auto.cooldown_ticks;
+                    }
+                    Some(ScaleDirection::Down) if active > auto.min_pods => {
+                        let victim = self.groups[gi]
+                            .iter()
+                            .enumerate()
+                            .rev()
+                            .find(|(_, p)| {
+                                !p.retired && !p.busy && !p.linger_armed && p.q.is_empty()
+                            })
+                            .map(|(i, _)| i);
+                        if let Some(i) = victim {
+                            self.groups[gi][i].retired = true;
+                            self.sites[site].scale_downs += 1;
+                            self.cooldown[gi] = auto.cooldown_ticks;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let next = self.clock.now_us() + dur_us(auto.interval_ms);
+        if next <= self.horizon_us {
+            self.heap.schedule(next, Ev::AutoscaleTick);
+        }
+    }
+
+    /// Site-loss drill: mark the site down, reroute every queued (not
+    /// yet dispatched) item to surviving sites with their original
+    /// enqueue times, and let in-flight batches drain to completion.
+    fn on_fail(&mut self, site: usize) {
+        if !self.sites[site].up {
+            return;
+        }
+        self.sites[site].up = false;
+        let nm = self.sc.models.len();
+        let mut orphans = Vec::new();
+        for model in 0..nm {
+            let gi = site * nm + model;
+            for p in self.groups[gi].iter_mut() {
+                p.linger_armed = false;
+                orphans.extend(p.q.drain(..));
+            }
+        }
+        for item in orphans {
+            self.route(item, true);
+        }
+    }
+
+    fn on_recover(&mut self, site: usize) {
+        self.sites[site].up = true;
+    }
+
+    fn run(mut self) -> DesReport {
+        self.seed_initial_events();
+        while let Some((t, _seq, ev)) = self.heap.pop() {
+            self.clock.advance_to(t);
+            self.events += 1;
+            match ev {
+                Ev::Arrival { site } => {
+                    let from_s = t as f64 / 1e6;
+                    self.schedule_next_arrival(site, from_s);
+                    let model = (self.sites[site].submitted as usize) % self.sc.models.len();
+                    let cohort = self.draw_cohort(site);
+                    self.admit(site, model, cohort);
+                }
+                Ev::TraceArrival { idx } => {
+                    if let Some(&(next_at, _, _)) = self.trace.get(idx + 1) {
+                        self.heap.schedule(next_at, Ev::TraceArrival { idx: idx + 1 });
+                    }
+                    let (_, site, model) = self.trace[idx];
+                    let cohort = self.draw_cohort(site);
+                    self.admit(site, model, cohort);
+                }
+                Ev::LingerFire { site, model, pod, gen } => {
+                    self.on_linger_fire(site, model, pod, gen)
+                }
+                Ev::BatchDone { site, model, pod, total_ms, batch } => {
+                    self.on_batch_done(site, model, pod, total_ms, batch)
+                }
+                Ev::AutoscaleTick => self.on_autoscale_tick(),
+                Ev::Fail { site } => self.on_fail(site),
+                Ev::Recover { site } => self.on_recover(site),
+            }
+        }
+        self.into_report()
+    }
+
+    fn into_report(mut self) -> DesReport {
+        let nm = self.sc.models.len();
+        let mut sites = Vec::with_capacity(self.sc.sites.len());
+        for (i, spec) in self.sc.sites.iter().enumerate() {
+            let st = &mut self.sites[i];
+            let (p50_ms, p99_ms, mean_ms, _max) = percentiles(&mut st.e2e);
+            let mut pods_end = 0u64;
+            let mut dispatches = 0u64;
+            for model in 0..nm {
+                for p in &self.groups[i * nm + model] {
+                    if !p.retired {
+                        pods_end += 1;
+                    }
+                    dispatches += p.dispatches;
+                }
+            }
+            sites.push(DesSiteReport {
+                name: spec.name.clone(),
+                tier: spec.tier.clone(),
+                variant: spec.variant.clone(),
+                up: st.up,
+                submitted: st.submitted,
+                completed: st.completed,
+                cache_hits: st.cache_hits,
+                shed: st.shed,
+                quota_shed: st.quota_shed,
+                served_here: st.served_here,
+                spillover_in: st.spillover_in,
+                pods_end,
+                dispatches,
+                scale_ups: st.scale_ups,
+                scale_downs: st.scale_downs,
+                p50_ms,
+                p99_ms,
+                mean_ms,
+            });
+        }
+        let (p50_ms, p99_ms, mean_ms, max_ms) = percentiles(&mut self.e2e);
+        DesReport {
+            scenario: self.sc.name.clone(),
+            seed: self.sc.cfg.seed,
+            horizon_s: self.sc.horizon_s,
+            virtual_end_ms: self.clock.now_us() as f64 / 1e3,
+            events: self.events,
+            submitted: self.submitted,
+            completed: self.completed,
+            cache_hits: self.cache_hits,
+            shed: self.shed,
+            quota_shed: self.quota_shed,
+            spilled: self.spilled,
+            rerouted: self.rerouted,
+            p50_ms,
+            p99_ms,
+            mean_ms,
+            max_ms,
+            sites,
+        }
+    }
+}
+
+fn item_model(gi: usize, nm: usize) -> usize {
+    gi % nm
+}
+
+impl Pod {
+    fn new(sc: &DesScenario, seed: u64) -> Pod {
+        Pod {
+            q: VecDeque::new(),
+            busy: false,
+            retired: false,
+            linger_armed: false,
+            linger_gen: 0,
+            rng: Rng::new(seed),
+            ctrl: sc.cfg.adaptive.then(|| {
+                BatchController::new(BatchControlConfig {
+                    min_batch: sc.cfg.min_batch.max(1),
+                    max_batch: sc.cfg.max_batch,
+                    slo_p99_ms: sc.cfg.slo_p99_ms,
+                    ..Default::default()
+                })
+            }),
+            dispatches: 0,
+        }
+    }
+}
+
+/// Run a scenario to completion on the virtual clock: every curve
+/// arrival inside the horizon is generated, every admitted request
+/// drains (the heap empties only when no work is queued or in flight),
+/// and the report is a pure function of the scenario — two calls with
+/// the same input are byte-identical through
+/// [`DesReport::canonical_json`].
+pub fn run_des(sc: &DesScenario) -> Result<DesReport> {
+    Ok(Engine::build(sc)?.run())
+}
+
+// ──────────────────────────────── report ───────────────────────────
+
+/// Per-site rows of a [`DesReport`]: demand-origin accounting
+/// (`submitted`/`completed`/`shed`/… for requests that *originated*
+/// here) plus exec-side accounting (`served_here`/`spillover_in`/pod
+/// counts for work *executed* here).
+#[derive(Debug, Clone)]
+pub struct DesSiteReport {
+    /// Site name.
+    pub name: String,
+    /// Continuum tier label.
+    pub tier: String,
+    /// Platform variant served here.
+    pub variant: String,
+    /// Whether the site was up at scenario end.
+    pub up: bool,
+    /// Requests that originated at this site.
+    pub submitted: u64,
+    /// Origin-attributed completions (wherever they executed).
+    pub completed: u64,
+    /// Origin-attributed cache hits.
+    pub cache_hits: u64,
+    /// Origin-attributed capacity sheds.
+    pub shed: u64,
+    /// Origin-attributed quota sheds.
+    pub quota_shed: u64,
+    /// Requests executed at this site (any origin).
+    pub served_here: u64,
+    /// Requests that arrived here by spillover or failure reroute.
+    pub spillover_in: u64,
+    /// Active pods at scenario end (across all models).
+    pub pods_end: u64,
+    /// Fused dispatches performed here.
+    pub dispatches: u64,
+    /// Autoscaler scale-up actions here.
+    pub scale_ups: u64,
+    /// Autoscaler scale-down actions here.
+    pub scale_downs: u64,
+    /// Median end-to-end latency of this origin's demand, ms.
+    pub p50_ms: f64,
+    /// p99 end-to-end latency of this origin's demand, ms.
+    pub p99_ms: f64,
+    /// Mean end-to-end latency of this origin's demand, ms.
+    pub mean_ms: f64,
+}
+
+/// The outcome of one virtual-time scenario run.  Contains **no
+/// wall-clock-derived values**: serialize it with
+/// [`canonical_json`](Self::canonical_json) and two same-seed runs
+/// compare byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct DesReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Seed the run derived all randomness from.
+    pub seed: u64,
+    /// Arrival horizon, virtual seconds.
+    pub horizon_s: f64,
+    /// Virtual time when the last event fired, ms (≥ the last arrival:
+    /// the drain runs past the horizon).
+    pub virtual_end_ms: f64,
+    /// Events processed by the loop.
+    pub events: u64,
+    /// Virtual client requests offered.
+    pub submitted: u64,
+    /// Requests served by a pod dispatch.
+    pub completed: u64,
+    /// Requests served from the virtual response cache.
+    pub cache_hits: u64,
+    /// Requests shed for capacity (every reachable queue full).
+    pub shed: u64,
+    /// Requests shed by the admission quota.
+    pub quota_shed: u64,
+    /// Requests that executed off their origin site (spillover).
+    pub spilled: u64,
+    /// Queued requests rerouted by a site-loss drill.
+    pub rerouted: u64,
+    /// Median end-to-end latency, ms (queue wait + service + link RTT).
+    pub p50_ms: f64,
+    /// p99 end-to-end latency, ms.
+    pub p99_ms: f64,
+    /// Mean end-to-end latency, ms.
+    pub mean_ms: f64,
+    /// Worst end-to-end latency, ms.
+    pub max_ms: f64,
+    /// Per-site rows, in scenario site order.
+    pub sites: Vec<DesSiteReport>,
+}
+
+impl DesReport {
+    /// Request conservation: every offered request is accounted exactly
+    /// once — `submitted = completed + cache_hits + shed + quota_shed`,
+    /// globally and per origin site.
+    pub fn conservation_holds(&self) -> bool {
+        let global = self.submitted
+            == self.completed + self.cache_hits + self.shed + self.quota_shed;
+        let per_site = self.sites.iter().all(|s| {
+            s.submitted == s.completed + s.cache_hits + s.shed + s.quota_shed
+        });
+        global && per_site
+    }
+
+    /// The report as a JSON document (BTreeMap-backed: key order is
+    /// canonical).
+    pub fn to_json(&self) -> Json {
+        let sites: Vec<Json> = self
+            .sites
+            .iter()
+            .map(|site| {
+                obj(vec![
+                    ("site", s(site.name.clone())),
+                    ("tier", s(site.tier.clone())),
+                    ("variant", s(site.variant.clone())),
+                    ("up", Json::Bool(site.up)),
+                    ("submitted", n(site.submitted as f64)),
+                    ("completed", n(site.completed as f64)),
+                    ("cache_hits", n(site.cache_hits as f64)),
+                    ("shed", n(site.shed as f64)),
+                    ("quota_shed", n(site.quota_shed as f64)),
+                    ("served_here", n(site.served_here as f64)),
+                    ("spillover_in", n(site.spillover_in as f64)),
+                    ("pods_end", n(site.pods_end as f64)),
+                    ("dispatches", n(site.dispatches as f64)),
+                    ("scale_ups", n(site.scale_ups as f64)),
+                    ("scale_downs", n(site.scale_downs as f64)),
+                    ("p50_ms", n(site.p50_ms)),
+                    ("p99_ms", n(site.p99_ms)),
+                    ("mean_ms", n(site.mean_ms)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("scenario", s(self.scenario.clone())),
+            ("seed", n(self.seed as f64)),
+            ("horizon_s", n(self.horizon_s)),
+            ("virtual_end_ms", n(self.virtual_end_ms)),
+            ("events", n(self.events as f64)),
+            ("submitted", n(self.submitted as f64)),
+            ("completed", n(self.completed as f64)),
+            ("cache_hits", n(self.cache_hits as f64)),
+            ("shed", n(self.shed as f64)),
+            ("quota_shed", n(self.quota_shed as f64)),
+            ("spilled", n(self.spilled as f64)),
+            ("rerouted", n(self.rerouted as f64)),
+            (
+                "latency_ms",
+                obj(vec![
+                    ("p50", n(self.p50_ms)),
+                    ("p99", n(self.p99_ms)),
+                    ("mean", n(self.mean_ms)),
+                    ("max", n(self.max_ms)),
+                ]),
+            ),
+            ("conservation", Json::Bool(self.conservation_holds())),
+            ("sites", Json::Arr(sites)),
+        ])
+    }
+
+    /// Canonical serialization — the bit-reproducibility contract:
+    /// identical scenario + seed ⇒ identical bytes.
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_orders_by_time_then_schedule_order() {
+        let mut h = EventHeap::new();
+        h.schedule(30, "late");
+        h.schedule(10, "first-at-10");
+        h.schedule(10, "second-at-10");
+        h.schedule(20, "mid");
+        let order: Vec<(u64, &str)> = std::iter::from_fn(|| h.pop())
+            .map(|(t, _, e)| (t, e))
+            .collect();
+        assert_eq!(
+            order,
+            vec![(10, "first-at-10"), (10, "second-at-10"), (20, "mid"), (30, "late")]
+        );
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn sim_clock_advances_and_reads_ms() {
+        let c = SimClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_to(1500);
+        c.advance_to(1500); // equal time is fine: simultaneous events
+        assert_eq!(c.now_ms(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "never run backwards")]
+    fn sim_clock_rejects_regression() {
+        let c = SimClock::new();
+        c.advance_to(100);
+        c.advance_to(99);
+    }
+
+    #[test]
+    fn wall_clock_is_nondecreasing() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+
+    fn tiny_scenario(seed: u64) -> DesScenario {
+        DesScenario {
+            name: "tiny".into(),
+            horizon_s: 20.0,
+            models: vec![
+                DesModel { name: "lenet".into(), gflops: 0.001 },
+                DesModel { name: "resnet50".into(), gflops: 0.168 },
+            ],
+            sites: vec![
+                DesSite {
+                    name: "edge".into(),
+                    tier: "edge".into(),
+                    variant: "AGX".into(),
+                    pods: 1,
+                    arrivals: Some(RateCurve::Constant { rps: 40.0 }),
+                },
+                DesSite {
+                    name: "cloud".into(),
+                    tier: "cloud".into(),
+                    variant: "GPU".into(),
+                    pods: 1,
+                    arrivals: None,
+                },
+            ],
+            rtt_ms: vec![vec![0.0, 18.0], vec![18.0, 0.0]],
+            trace: None,
+            drills: Vec::new(),
+            cfg: DesConfig { seed, queue_capacity: 4, max_batch: 4, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        let a = run_des(&tiny_scenario(3)).unwrap();
+        let b = run_des(&tiny_scenario(3)).unwrap();
+        assert_eq!(a.canonical_json(), b.canonical_json());
+        let c = run_des(&tiny_scenario(4)).unwrap();
+        assert_ne!(a.canonical_json(), c.canonical_json());
+        assert!(a.submitted > 400, "constant 40 rps over 20 s: {}", a.submitted);
+        assert!(a.conservation_holds());
+    }
+
+    #[test]
+    fn drain_completes_past_the_horizon() {
+        let r = run_des(&tiny_scenario(9)).unwrap();
+        assert!(r.completed > 0);
+        assert!(
+            r.virtual_end_ms >= r.horizon_s * 1e3 - 1e3,
+            "the drain runs close to or past the horizon, got {}",
+            r.virtual_end_ms
+        );
+    }
+
+    #[test]
+    fn quota_and_cache_paths_account_conservatively() {
+        let mut sc = tiny_scenario(5);
+        sc.cfg.quota_rps = 10.0;
+        sc.cfg.quota_burst = 5.0;
+        sc.cfg.cache_ttl_ms = 10_000.0;
+        sc.cfg.cohorts = 4;
+        let r = run_des(&sc).unwrap();
+        assert!(r.quota_shed > 0, "40 rps offered against a 10 rps quota must shed");
+        assert!(r.conservation_holds());
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+    }
+
+    #[test]
+    fn fail_drill_reroutes_and_conserves() {
+        let mut sc = tiny_scenario(7);
+        sc.drills = vec![
+            Drill::FailSite { at_s: 5.0, site: "edge".into() },
+            Drill::RecoverSite { at_s: 12.0, site: "edge".into() },
+        ];
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        let cloud = &r.sites[1];
+        assert!(
+            cloud.spillover_in > 0,
+            "edge demand must land on the cloud while the edge is down"
+        );
+        assert!(r.sites[0].up, "edge recovered by scenario end");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_scenarios() {
+        let mut sc = tiny_scenario(1);
+        sc.sites.clear();
+        sc.rtt_ms.clear();
+        assert!(run_des(&sc).is_err(), "no sites");
+        let mut sc = tiny_scenario(1);
+        sc.rtt_ms = vec![vec![0.0]];
+        assert!(run_des(&sc).is_err(), "bad rtt matrix");
+        let mut sc = tiny_scenario(1);
+        sc.sites[0].variant = "NPU".into();
+        assert!(run_des(&sc).is_err(), "unknown variant");
+        let mut sc = tiny_scenario(1);
+        sc.cfg.queue_capacity = 0;
+        assert!(run_des(&sc).is_err(), "zero queue");
+    }
+}

@@ -80,6 +80,7 @@
 pub mod bench;
 pub mod cache;
 pub mod control;
+pub mod des;
 pub mod queue;
 pub mod sim;
 pub mod tenancy;

@@ -20,6 +20,12 @@
 //! In both layers `Some(batch)` from a pop is always non-empty and
 //! `None` means closed **and** drained — the unambiguous worker-shutdown
 //! signal (workers block, never spin).
+//!
+//! These queues wait on real time (`pop_batch_linger` parks on a
+//! `Condvar` deadline), so they live on the threaded path only.  The
+//! virtual-time engine ([`crate::fabric::des`]) models the same
+//! bounded-FIFO admission and linger semantics as scheduled events on
+//! its event heap instead — same policy, different clock.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -29,10 +29,25 @@ use crate::util::rng::Rng;
 /// every request.  Integration tests close the gate, flood the router,
 /// and get a *deterministic* accepted-count bound (queue capacity plus
 /// in-worker batches) before opening it to drain.
+///
+/// The gate also counts how many executors are currently blocked on it
+/// ([`await_blocked`](Self::await_blocked)), so tests can wait for the
+/// fabric to *quiesce* at the gate instead of sleeping an arbitrary
+/// settle interval and hoping the scheduler ran the workers in time.
 #[derive(Debug, Default)]
 pub struct Gate {
-    closed: Mutex<bool>,
+    state: Mutex<GateState>,
+    /// Wakes executors blocked in [`wait_open`](Self::wait_open).
     cv: Condvar,
+    /// Wakes observers blocked in [`await_blocked`](Self::await_blocked).
+    settled: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct GateState {
+    closed: bool,
+    /// Executors currently parked in `wait_open`.
+    waiting: usize,
 }
 
 impl Gate {
@@ -44,26 +59,44 @@ impl Gate {
     /// A new gate, initially closed.
     pub fn closed_gate() -> Arc<Gate> {
         let g = Gate::default();
-        *g.closed.lock().unwrap() = true;
+        g.state.lock().unwrap().closed = true;
         Arc::new(g)
     }
 
     /// Close the gate: executors block before serving their next request.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.state.lock().unwrap().closed = true;
     }
 
-    /// Open the gate and wake every blocked executor.
+    /// Open the gate and wake every blocked executor (and any observer
+    /// in [`await_blocked`](Self::await_blocked) — an open gate can
+    /// never quiesce).
     pub fn open(&self) {
-        *self.closed.lock().unwrap() = false;
+        self.state.lock().unwrap().closed = false;
         self.cv.notify_all();
+        self.settled.notify_all();
     }
 
     /// Block while the gate is closed.
     pub fn wait_open(&self) {
-        let mut g = self.closed.lock().unwrap();
-        while *g {
+        let mut g = self.state.lock().unwrap();
+        while g.closed {
+            g.waiting += 1;
+            // An observer may be waiting for this executor to park.
+            self.settled.notify_all();
             g = self.cv.wait(g).unwrap();
+            g.waiting -= 1;
+        }
+    }
+
+    /// Block until at least `n` executors are parked at the (closed)
+    /// gate — the explicit quiesce wait that replaces "sleep and hope
+    /// the workers got scheduled".  Returns immediately once the gate
+    /// opens (nothing can park on an open gate).
+    pub fn await_blocked(&self, n: usize) {
+        let mut g = self.state.lock().unwrap();
+        while g.closed && g.waiting < n {
+            g = self.settled.wait(g).unwrap();
         }
     }
 }
@@ -302,7 +335,9 @@ mod tests {
         let h = std::thread::spawn(move || {
             p2.execute(&Request { id: 0, payload: vec![] }, 0.0).unwrap()
         });
-        std::thread::sleep(Duration::from_millis(20));
+        // Explicit quiesce: wait until the executor is provably parked
+        // at the gate (no arbitrary settle sleep, no scheduler races).
+        gate.await_blocked(1);
         assert_eq!(pod.metrics().snapshot().requests, 0, "gated executor must not serve");
         gate.open();
         let resp = h.join().unwrap();

@@ -18,6 +18,7 @@
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -28,13 +29,15 @@ use tf2aif::config::Config;
 use tf2aif::continuum::{self, ContinuumOrchestrator, PlanPolicy, Topology};
 use tf2aif::coordinator::{self, Fig4Options, GenerateOptions};
 use tf2aif::fabric::bench::{self, BenchConfig};
+use tf2aif::fabric::des::{
+    run_des, DesAutoscale, DesConfig, DesModel, DesReport, DesScenario, DesSite, Drill,
+};
 use tf2aif::fabric::tenancy::{apply_tenant_slos, parse_tenant_specs, TenantSpec};
 use tf2aif::fabric::{sim, AutoscaleConfig, Fabric, FabricConfig};
-use tf2aif::workload::TenantMix;
 use tf2aif::report;
 use tf2aif::runtime::Engine;
 use tf2aif::serving::{AifServer, ImageClassify};
-use tf2aif::workload::Arrival;
+use tf2aif::workload::{read_trace_csv, Arrival, RateCurve, TenantMix};
 use tf2aif::{artifact, ARTIFACTS_DIR};
 
 fn main() {
@@ -117,11 +120,17 @@ fn print_usage() {
          [--linger MS] [--cache N] [--cache-ttl MS] [--autoscale MIN:MAX]\n           \
          [--as-interval MS] [--as-predict] [--tenants SPEC] [--quota RPS]\n           \
          [--tenant-share F] [--tenant-slo NAME:MS,...]\n           \
-         (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F][:slo=MS],...)\n  \
+         (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F][:slo=MS],...)\n           \
+         [--virtual-time] [--trace CURVE] [--trace-file CSV] [--duration S]\n           \
+         [--variant V] [--report-out FILE]\n           \
+         (CURVE = const:RPS | diurnal:BASE:PEAK:PERIOD[:PHASE] | flash:BASE:SPIKE:AT:RAMP:HOLD)\n  \
          continuum [--config FILE] [--policy min-latency|min-energy|balanced] [--site NAME]\n           \
          [--requests N] [--arrival A] [--models a,b] [--replicas N] [--queue N]\n           \
          [--batch N] [--workers N] [--time-scale F] [--seed N] [--run-seed N]\n           \
-         [--fail-site NAME] [--fail-at I] [--scenarios]\n  \
+         [--fail-site NAME] [--fail-at I] [--scenarios]\n           \
+         [--virtual-time] [--scenario diurnal-day|flash-crowd|site-loss-storm|million-user-day]\n           \
+         [--trace-file CSV] [--duration S] [--fail-at-s S] [--recover-at-s S]\n           \
+         [--report-out FILE]\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
          [--slo MS] [--seed N] [--out FILE] [--fused-only]\n  \
@@ -258,6 +267,9 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_fabric(flags: &Flags) -> Result<()> {
+    if flags.has("--virtual-time") {
+        return cmd_fabric_des(flags);
+    }
     // ── Cluster + backend ───────────────────────────────────────────────
     let mut cluster = match flags.get("--config") {
         Some(path) => Cluster::from_config(&Config::load(path)?)?,
@@ -510,7 +522,265 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+// ── Virtual-time (DES) CLI paths ────────────────────────────────────────
+
+/// Threaded-path flags the DES would silently ignore are errors,
+/// matching this CLI's no-effect-flag convention.
+fn reject_des_no_effect(flags: &Flags, no_effect: &[&str]) -> Result<()> {
+    for flag in no_effect {
+        if flags.has(flag) {
+            bail!(
+                "{flag} has no effect with --virtual-time (the DES replays \
+                 open-loop virtual traffic on a virtual clock; see docs/CLI.md)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Print the human summary of a DES run and optionally persist the
+/// canonical report.  Wall-clock figures are printed but never written
+/// into the report itself, which stays bit-reproducible.
+fn print_des_report(report: &DesReport, wall_s: f64, report_out: Option<&str>) -> Result<()> {
+    println!(
+        "\nvirtual time: {:.1}s simulated in {:.2}s wall ({} events, {:.0} events/s)",
+        report.virtual_end_ms / 1e3,
+        wall_s,
+        report.events,
+        report.events as f64 / wall_s.max(1e-9),
+    );
+    println!(
+        "requests: {} submitted = {} completed + {} cached + {} shed + {} quota-shed \
+         (conservation: {})",
+        report.submitted,
+        report.completed,
+        report.cache_hits,
+        report.shed,
+        report.quota_shed,
+        yn(report.conservation_holds()),
+    );
+    println!(
+        "latency (e2e ms): p50 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}   \
+         spilled {}  rerouted {}",
+        report.p50_ms, report.p99_ms, report.mean_ms, report.max_ms, report.spilled, report.rerouted,
+    );
+    println!(
+        "\n{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>9} {:>9} {:>5} {:>7} {:>8} {:>8}",
+        "site", "up", "submitted", "completed", "cached", "shed", "served", "spill-in", "pods",
+        "p50ms", "p99ms", "scale+/-",
+    );
+    for s in &report.sites {
+        println!(
+            "{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>9} {:>9} {:>5} {:>7.2} {:>8.2} {:>5}/{}",
+            s.name,
+            yn(s.up),
+            s.submitted,
+            s.completed,
+            s.cache_hits,
+            s.shed + s.quota_shed,
+            s.served_here,
+            s.spillover_in,
+            s.pods_end,
+            s.p50_ms,
+            s.p99_ms,
+            s.scale_ups,
+            s.scale_downs,
+        );
+    }
+    if let Some(path) = report_out {
+        std::fs::write(path, report.canonical_json())
+            .with_context(|| format!("writing {path}"))?;
+        println!("\ncanonical report written to {path}");
+    }
+    Ok(())
+}
+
+/// `tf2aif fabric --virtual-time`: one site on the event heap — the
+/// fabric's batch/linger/quota/cache/autoscale controls replayed
+/// deterministically against an open-loop rate curve or a CSV trace
+/// (site column `fabric`).
+fn cmd_fabric_des(flags: &Flags) -> Result<()> {
+    reject_des_no_effect(
+        flags,
+        &[
+            "--real",
+            "--requests",
+            "--arrival",
+            "--workers",
+            "--time-scale",
+            "--run-seed",
+            "--policy",
+            "--config",
+            "--cache",
+            "--per-item",
+            "--no-dedup",
+            "--as-predict",
+            "--tenants",
+            "--tenant-share",
+            "--tenant-slo",
+        ],
+    )?;
+    let wanted = csv_list(flags.get("--models"), &[]);
+    let wanted: Vec<&str> = wanted.iter().map(String::as_str).collect();
+    let catalog = sim::synthetic_catalog_for(&wanted);
+    let mut models: Vec<DesModel> = Vec::new();
+    for a in &catalog {
+        if !models.iter().any(|m| m.name == a.manifest.model) {
+            models.push(DesModel { name: a.manifest.model.clone(), gflops: a.manifest.gflops });
+        }
+    }
+    if models.is_empty() {
+        bail!("no catalog models match --models");
+    }
+
+    let da = DesAutoscale::default();
+    let autoscale = match flags.get("--autoscale") {
+        Some(spec) => {
+            let (lo, hi) = spec
+                .split_once(':')
+                .with_context(|| format!("bad --autoscale {spec:?} (expected MIN:MAX)"))?;
+            let min_pods: usize = lo.parse().with_context(|| format!("bad min {lo:?}"))?;
+            let max_pods: usize = hi.parse().with_context(|| format!("bad max {hi:?}"))?;
+            if min_pods < 1 || min_pods > max_pods {
+                bail!("bad --autoscale {spec:?}: need 1 <= MIN <= MAX, got {min_pods}:{max_pods}");
+            }
+            Some(DesAutoscale {
+                min_pods,
+                max_pods,
+                interval_ms: flags.f64_or("--as-interval", da.interval_ms)?,
+                ..Default::default()
+            })
+        }
+        None => None,
+    };
+
+    let dc = DesConfig::default();
+    let quota_rps = flags.f64_or("--quota", dc.quota_rps)?;
+    let cfg = DesConfig {
+        queue_capacity: flags.usize_or("--queue", dc.queue_capacity)?,
+        max_batch: flags.usize_or("--batch", dc.max_batch)?,
+        min_batch: flags.usize_or("--min-batch", dc.min_batch)?,
+        adaptive: flags.has("--adaptive"),
+        slo_p99_ms: flags.f64_or("--slo", dc.slo_p99_ms)?,
+        batch_linger_ms: flags.f64_or("--linger", dc.batch_linger_ms)?,
+        quota_rps,
+        quota_burst: quota_rps.ceil().max(1.0),
+        cache_ttl_ms: flags.f64_or("--cache-ttl", dc.cache_ttl_ms)?,
+        cohorts: flags.usize_or("--cohorts", dc.cohorts)?,
+        autoscale,
+        seed: flags.usize_or("--seed", dc.seed as usize)? as u64,
+    };
+
+    let horizon_s = flags.f64_or("--duration", 60.0)?;
+    let trace = match flags.get("--trace-file") {
+        Some(path) => Some(read_trace_csv(path)?),
+        None => None,
+    };
+    let arrivals = match trace {
+        Some(_) => {
+            if flags.get("--trace").is_some() {
+                bail!("--trace has no effect with --trace-file (the CSV replaces the curve)");
+            }
+            None
+        }
+        None => Some(RateCurve::parse(flags.get("--trace").unwrap_or("const:50"))?),
+    };
+    let variant = flags.get("--variant").unwrap_or("AGX").to_string();
+    let sc = DesScenario {
+        name: "fabric-cli".to_string(),
+        horizon_s,
+        models,
+        sites: vec![DesSite {
+            name: "fabric".to_string(),
+            tier: "edge".to_string(),
+            variant,
+            pods: flags.usize_or("--replicas", 1)?,
+            arrivals,
+        }],
+        rtt_ms: vec![vec![0.0]],
+        trace,
+        drills: Vec::new(),
+        cfg,
+    };
+    println!(
+        "fabric (virtual time): {} model(s) on {} ({} pod(s)), horizon {:.0}s, seed {}",
+        sc.models.len(),
+        sc.sites[0].variant,
+        sc.sites[0].pods,
+        sc.horizon_s,
+        sc.cfg.seed,
+    );
+    let t0 = Instant::now();
+    let report = run_des(&sc)?;
+    print_des_report(&report, t0.elapsed().as_secs_f64(), flags.get("--report-out"))
+}
+
+/// `tf2aif continuum --virtual-time`: a canned multi-site scenario on
+/// the built-in 3-site testbed, replayed on the event heap.  The
+/// default scenario is the million-user diurnal day the CI determinism
+/// gate drives.
+fn cmd_continuum_des(flags: &Flags) -> Result<()> {
+    reject_des_no_effect(
+        flags,
+        &[
+            "--scenarios",
+            "--requests",
+            "--arrival",
+            "--run-seed",
+            "--fail-at",
+            "--policy",
+            "--site",
+            "--config",
+            "--workers",
+            "--time-scale",
+            "--replicas",
+            "--models",
+        ],
+    )?;
+    let seed = flags.usize_or("--seed", DesConfig::default().seed as usize)? as u64;
+    let name = flags.get("--scenario").unwrap_or("million-user-day");
+    let mut sc = tf2aif::continuum::des::canned(name, seed)?;
+    sc.cfg.queue_capacity = flags.usize_or("--queue", sc.cfg.queue_capacity)?;
+    sc.cfg.max_batch = flags.usize_or("--batch", sc.cfg.max_batch)?;
+    sc.cfg.batch_linger_ms = flags.f64_or("--linger", sc.cfg.batch_linger_ms)?;
+    sc.horizon_s = flags.f64_or("--duration", sc.horizon_s)?;
+    if let Some(path) = flags.get("--trace-file") {
+        sc.trace = Some(read_trace_csv(path)?);
+        for site in &mut sc.sites {
+            site.arrivals = None;
+        }
+    }
+    match flags.get("--fail-site") {
+        Some(site) => {
+            let at_s = flags.f64_or("--fail-at-s", sc.horizon_s * 0.5)?;
+            sc.drills.push(Drill::FailSite { at_s, site: site.to_string() });
+            if let Some(rec) = flags.get("--recover-at-s") {
+                let at_s: f64 = rec.parse().with_context(|| format!("bad --recover-at-s {rec:?}"))?;
+                sc.drills.push(Drill::RecoverSite { at_s, site: site.to_string() });
+            }
+        }
+        None => {
+            if flags.get("--fail-at-s").is_some() || flags.get("--recover-at-s").is_some() {
+                bail!("--fail-at-s/--recover-at-s need --fail-site");
+            }
+        }
+    }
+    println!(
+        "continuum (virtual time): scenario {:?}, {} site(s), horizon {:.0}s, seed {}",
+        sc.name,
+        sc.sites.len(),
+        sc.horizon_s,
+        seed,
+    );
+    let t0 = Instant::now();
+    let report = run_des(&sc)?;
+    print_des_report(&report, t0.elapsed().as_secs_f64(), flags.get("--report-out"))
+}
+
 fn cmd_continuum(flags: &Flags) -> Result<()> {
+    if flags.has("--virtual-time") {
+        return cmd_continuum_des(flags);
+    }
     let d = FabricConfig::default();
     let cfg = FabricConfig {
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
@@ -702,10 +972,12 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     print!("{}", report::render_table(&h, &rows));
 
     // The control-plane comparisons (adaptive vs fixed batch sizing,
-    // fixed replicas vs autoscaler) and the tenancy measurement ride
+    // fixed replicas vs autoscaler), the tenancy measurement, the
+    // continuum scenarios and the virtual-time determinism check ride
     // along unless --fused-only.
-    let (control, autoscale, tenancy, continuum_bench) = if flags.has("--fused-only") {
-        (None, None, None, None)
+    let (control, autoscale, tenancy, continuum_bench, des_bench) = if flags.has("--fused-only")
+    {
+        (None, None, None, None, None)
     } else {
         println!(
             "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
@@ -767,7 +1039,28 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             cont.verdicts.min_latency_ms,
             cont.verdicts.min_energy_ms,
         );
-        (Some(sweep), Some(cmp), Some(ten), Some(cont))
+
+        println!(
+            "\nvirtual time: replaying the million-user day twice on the \
+             discrete-event core (seed {})…",
+            cfg.seed,
+        );
+        let des = bench::run_des_bench(&cfg)?;
+        println!(
+            "{} submitted over {:.0} virtual seconds in {:.2}s wall \
+             ({} events, {:.0} events/s)\n\
+             bit-reproducible (same seed, byte-identical reports): {} | \
+             seeds steer outcomes: {} | conservation: {}",
+            des.submitted,
+            des.virtual_s,
+            des.wall_s,
+            des.events,
+            des.events_per_sec,
+            yn(des.bit_reproducible),
+            yn(des.seeds_differ),
+            yn(des.conservation),
+        );
+        (Some(sweep), Some(cmp), Some(ten), Some(cont), Some(des))
     };
 
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
@@ -779,6 +1072,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         autoscale.as_ref(),
         tenancy.as_ref(),
         continuum_bench.as_ref(),
+        des_bench.as_ref(),
     )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {

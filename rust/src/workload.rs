@@ -152,6 +152,270 @@ impl TenantMix {
     }
 }
 
+/// Time-varying offered-load curve — the open-loop trace-replay side of
+/// the virtual-time path ([`crate::fabric::des`]).
+///
+/// Where [`Arrival`] models a *stationary* process for real-time
+/// drives, a `RateCurve` is a deterministic intensity function
+/// `rate_at(t)` over *virtual* seconds, sampled by thinning
+/// ([`next_arrival_s`](Self::next_arrival_s)) so a whole simulated day
+/// of non-homogeneous Poisson traffic replays bit-reproducibly from one
+/// seed.  The shapes are the ones the cloud-edge surveys motivate:
+/// diurnal demand, flash crowds, and (via
+/// [`correlated_surge`]) surges that hit several sites at once.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateCurve {
+    /// Stationary Poisson at `rps` requests/second.
+    Constant {
+        /// Offered rate, requests/second.
+        rps: f64,
+    },
+    /// One sinusoidal demand cycle per `period_s`: the rate swings from
+    /// `base_rps` (trough, at `t = -phase_s`) up to `peak_rps` and back.
+    Diurnal {
+        /// Trough rate, requests/second.
+        base_rps: f64,
+        /// Peak rate, requests/second.
+        peak_rps: f64,
+        /// Cycle length, seconds (86 400 = one day).
+        period_s: f64,
+        /// Phase offset, seconds (0 starts at the trough).
+        phase_s: f64,
+    },
+    /// A flash crowd on top of a flat baseline: the rate ramps linearly
+    /// from `base_rps` to `spike_rps` over `[at_s, at_s + ramp_s]`,
+    /// holds for `hold_s`, then decays linearly back over another
+    /// `ramp_s`.
+    FlashCrowd {
+        /// Baseline rate, requests/second.
+        base_rps: f64,
+        /// Rate at the top of the spike, requests/second.
+        spike_rps: f64,
+        /// When the ramp starts, seconds.
+        at_s: f64,
+        /// Ramp-up (and decay) duration, seconds.
+        ramp_s: f64,
+        /// Plateau duration at `spike_rps`, seconds.
+        hold_s: f64,
+    },
+}
+
+impl RateCurve {
+    /// Parse the CLI syntax: `const:RPS`, `diurnal:BASE:PEAK:PERIOD[:PHASE]`
+    /// or `flash:BASE:SPIKE:AT:RAMP:HOLD` (times in seconds).
+    pub fn parse(spec: &str) -> anyhow::Result<RateCurve> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let num = |v: &str, what: &str| -> anyhow::Result<f64> {
+            let x: f64 =
+                v.parse().map_err(|_| anyhow::anyhow!("bad {what} {v:?} in {spec:?}"))?;
+            if !(x >= 0.0) {
+                anyhow::bail!("{what} must be >= 0, got {x} in {spec:?}");
+            }
+            Ok(x)
+        };
+        let curve = match parts.as_slice() {
+            ["const", rps] => RateCurve::Constant { rps: num(rps, "rate")? },
+            ["diurnal", base, peak, period] | ["diurnal", base, peak, period, _] => {
+                let phase_s =
+                    if parts.len() == 5 { num(parts[4], "phase")? } else { 0.0 };
+                RateCurve::Diurnal {
+                    base_rps: num(base, "base rate")?,
+                    peak_rps: num(peak, "peak rate")?,
+                    period_s: num(period, "period")?,
+                    phase_s,
+                }
+            }
+            ["flash", base, spike, at, ramp, hold] => RateCurve::FlashCrowd {
+                base_rps: num(base, "base rate")?,
+                spike_rps: num(spike, "spike rate")?,
+                at_s: num(at, "spike start")?,
+                ramp_s: num(ramp, "ramp")?,
+                hold_s: num(hold, "hold")?,
+            },
+            _ => anyhow::bail!(
+                "unknown trace {spec:?} (expected const:RPS, \
+                 diurnal:BASE:PEAK:PERIOD[:PHASE] or flash:BASE:SPIKE:AT:RAMP:HOLD)"
+            ),
+        };
+        match &curve {
+            RateCurve::Constant { rps } if !(*rps > 0.0) => {
+                anyhow::bail!("const rate must be positive in {spec:?}")
+            }
+            RateCurve::Diurnal { base_rps, peak_rps, period_s, .. } => {
+                if !(*period_s > 0.0) {
+                    anyhow::bail!("diurnal period must be positive in {spec:?}");
+                }
+                if peak_rps < base_rps {
+                    anyhow::bail!("diurnal peak must be >= base in {spec:?}");
+                }
+                if !(*peak_rps > 0.0) {
+                    anyhow::bail!("diurnal peak must be positive in {spec:?}");
+                }
+            }
+            RateCurve::FlashCrowd { base_rps, spike_rps, .. } => {
+                if spike_rps < base_rps {
+                    anyhow::bail!("flash spike must be >= base in {spec:?}");
+                }
+                if !(*spike_rps > 0.0) {
+                    anyhow::bail!("flash spike must be positive in {spec:?}");
+                }
+            }
+            _ => {}
+        }
+        Ok(curve)
+    }
+
+    /// Offered rate at virtual time `t_s`, requests/second.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match self {
+            RateCurve::Constant { rps } => *rps,
+            RateCurve::Diurnal { base_rps, peak_rps, period_s, phase_s } => {
+                let x = std::f64::consts::TAU * (t_s + phase_s) / period_s;
+                base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - x.cos())
+            }
+            RateCurve::FlashCrowd { base_rps, spike_rps, at_s, ramp_s, hold_s } => {
+                let up_end = at_s + ramp_s;
+                let hold_end = up_end + hold_s;
+                let down_end = hold_end + ramp_s;
+                if t_s < *at_s || t_s >= down_end {
+                    *base_rps
+                } else if t_s < up_end {
+                    base_rps + (spike_rps - base_rps) * (t_s - at_s) / ramp_s.max(1e-9)
+                } else if t_s < hold_end {
+                    *spike_rps
+                } else {
+                    spike_rps
+                        - (spike_rps - base_rps) * (t_s - hold_end) / ramp_s.max(1e-9)
+                }
+            }
+        }
+    }
+
+    /// Upper bound of [`rate_at`](Self::rate_at) over all `t` — the
+    /// majorizing rate the thinning sampler rejects against.
+    pub fn max_rps(&self) -> f64 {
+        match self {
+            RateCurve::Constant { rps } => *rps,
+            RateCurve::Diurnal { base_rps, peak_rps, .. } => base_rps.max(*peak_rps),
+            RateCurve::FlashCrowd { base_rps, spike_rps, .. } => base_rps.max(*spike_rps),
+        }
+    }
+
+    /// Next arrival strictly after `from_s` under this intensity, by
+    /// thinning a homogeneous Poisson process at [`max_rps`](Self::max_rps):
+    /// candidate gaps are exponential at the majorizing rate and each
+    /// candidate survives with probability `rate_at(t) / max_rps`.
+    /// `None` once the next arrival would land at or past `horizon_s`.
+    /// Fully deterministic for a given `rng` state — the virtual-time
+    /// scenario driver schedules arrivals one at a time with this, so a
+    /// million-request day never materializes as a million pre-built
+    /// events.
+    pub fn next_arrival_s(
+        &self,
+        rng: &mut Rng,
+        from_s: f64,
+        horizon_s: f64,
+    ) -> Option<f64> {
+        let bound = self.max_rps();
+        if !(bound > 0.0) {
+            return None;
+        }
+        let mut t = from_s;
+        loop {
+            t += rng.exponential(1.0 / bound);
+            if !(t < horizon_s) {
+                return None;
+            }
+            if rng.f64() * bound <= self.rate_at(t) {
+                return Some(t);
+            }
+        }
+    }
+}
+
+/// The same flash crowd replicated across every named site — the
+/// correlated multi-site surge pattern (one regional event drives
+/// demand up everywhere at once, which is exactly what per-site
+/// autoscaling cannot absorb by borrowing capacity).
+pub fn correlated_surge(
+    sites: &[String],
+    base_rps: f64,
+    spike_rps: f64,
+    at_s: f64,
+    ramp_s: f64,
+    hold_s: f64,
+) -> Vec<(String, RateCurve)> {
+    sites
+        .iter()
+        .map(|s| {
+            (
+                s.clone(),
+                RateCurve::FlashCrowd { base_rps, spike_rps, at_s, ramp_s, hold_s },
+            )
+        })
+        .collect()
+}
+
+/// One recorded request in a replayable trace: when it arrived (virtual
+/// ms), where the demand originated, and which model it asked for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time in virtual milliseconds from scenario start.
+    pub at_ms: f64,
+    /// Demand-origin site name.
+    pub site: String,
+    /// Model the request targets.
+    pub model: String,
+}
+
+/// Read a CSV trace of `at_ms,site,model` rows (header line, blank
+/// lines and `#` comments allowed).  Arrival times must be
+/// non-negative and non-decreasing — the virtual-time replayer walks
+/// the trace front to back and refuses to sort someone else's data
+/// silently.
+pub fn read_trace_csv(path: impl AsRef<std::path::Path>) -> anyhow::Result<Vec<TraceEvent>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    let mut last = 0.0f64;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split(',').map(str::trim);
+        let (Some(at), Some(site), Some(model)) = (cols.next(), cols.next(), cols.next())
+        else {
+            anyhow::bail!("trace line {}: expected at_ms,site,model", lineno + 1);
+        };
+        let Ok(at_ms) = at.parse::<f64>() else {
+            if out.is_empty() && lineno == 0 {
+                continue; // header row
+            }
+            anyhow::bail!("trace line {}: bad at_ms {at:?}", lineno + 1);
+        };
+        if !(at_ms >= 0.0) {
+            anyhow::bail!("trace line {}: at_ms must be >= 0, got {at_ms}", lineno + 1);
+        }
+        if at_ms < last {
+            anyhow::bail!(
+                "trace line {}: arrivals must be non-decreasing ({at_ms} after {last})",
+                lineno + 1
+            );
+        }
+        if site.is_empty() || model.is_empty() {
+            anyhow::bail!("trace line {}: site and model must be non-empty", lineno + 1);
+        }
+        last = at_ms;
+        out.push(TraceEvent { at_ms, site: site.to_string(), model: model.to_string() });
+    }
+    if out.is_empty() {
+        anyhow::bail!("trace {} contains no events", path.display());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,5 +483,120 @@ mod tests {
         assert!(Arrival::parse("poisson:-1").is_err());
         assert!(Arrival::parse("burst:9").is_err());
         assert!(Arrival::parse("poisson:abc").is_err());
+    }
+
+    #[test]
+    fn rate_curve_parse_cli_syntax() {
+        assert_eq!(
+            RateCurve::parse("const:25").unwrap(),
+            RateCurve::Constant { rps: 25.0 }
+        );
+        assert_eq!(
+            RateCurve::parse("diurnal:2:8:86400").unwrap(),
+            RateCurve::Diurnal { base_rps: 2.0, peak_rps: 8.0, period_s: 86400.0, phase_s: 0.0 }
+        );
+        assert_eq!(
+            RateCurve::parse("flash:4:120:600:60:120").unwrap(),
+            RateCurve::FlashCrowd {
+                base_rps: 4.0,
+                spike_rps: 120.0,
+                at_s: 600.0,
+                ramp_s: 60.0,
+                hold_s: 120.0
+            }
+        );
+        assert!(RateCurve::parse("const:0").is_err(), "zero rate generates nothing");
+        assert!(RateCurve::parse("diurnal:8:2:86400").is_err(), "peak < base");
+        assert!(RateCurve::parse("diurnal:2:8:0").is_err(), "zero period");
+        assert!(RateCurve::parse("flash:10:5:0:1:1").is_err(), "spike < base");
+        assert!(RateCurve::parse("tsunami:1").is_err(), "unknown shape");
+    }
+
+    #[test]
+    fn diurnal_swings_between_base_and_peak() {
+        let c = RateCurve::Diurnal {
+            base_rps: 2.0,
+            peak_rps: 10.0,
+            period_s: 86400.0,
+            phase_s: 0.0,
+        };
+        assert!((c.rate_at(0.0) - 2.0).abs() < 1e-9, "trough at t=0");
+        assert!((c.rate_at(43200.0) - 10.0).abs() < 1e-9, "peak at half-period");
+        assert!((c.rate_at(86400.0) - 2.0).abs() < 1e-9, "back to trough");
+        assert_eq!(c.max_rps(), 10.0);
+    }
+
+    #[test]
+    fn flash_crowd_ramps_holds_and_decays() {
+        let c = RateCurve::FlashCrowd {
+            base_rps: 4.0,
+            spike_rps: 104.0,
+            at_s: 100.0,
+            ramp_s: 10.0,
+            hold_s: 20.0,
+        };
+        assert_eq!(c.rate_at(0.0), 4.0, "baseline before");
+        assert!((c.rate_at(105.0) - 54.0).abs() < 1e-9, "mid-ramp");
+        assert_eq!(c.rate_at(115.0), 104.0, "plateau");
+        assert!((c.rate_at(135.0) - 54.0).abs() < 1e-9, "mid-decay");
+        assert_eq!(c.rate_at(200.0), 4.0, "baseline after");
+    }
+
+    #[test]
+    fn thinning_is_deterministic_and_hits_the_mean_rate() {
+        let c = RateCurve::Diurnal {
+            base_rps: 50.0,
+            peak_rps: 150.0,
+            period_s: 100.0,
+            phase_s: 0.0,
+        };
+        let count = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0;
+            let mut n = 0usize;
+            while let Some(next) = c.next_arrival_s(&mut rng, t, 100.0) {
+                assert!(next > t, "arrivals strictly advance");
+                t = next;
+                n += 1;
+            }
+            n
+        };
+        assert_eq!(count(11), count(11), "same seed, same arrival stream");
+        assert_ne!(count(11), count(12), "different seed, different stream");
+        // Mean of the sinusoid is 100 rps over one period: expect ~10k.
+        let n = count(11) as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "arrivals over one period: {n}");
+    }
+
+    #[test]
+    fn correlated_surge_replicates_the_curve() {
+        let sites = vec!["a".to_string(), "b".to_string()];
+        let curves = correlated_surge(&sites, 2.0, 40.0, 60.0, 10.0, 30.0);
+        assert_eq!(curves.len(), 2);
+        assert_eq!(curves[0].1, curves[1].1, "same spike everywhere = correlated");
+        assert_eq!(curves[0].1.rate_at(80.0), 40.0);
+    }
+
+    #[test]
+    fn trace_csv_round_trip_and_validation() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tf2aif_trace_test.csv");
+        std::fs::write(
+            &path,
+            "at_ms,site,model\n# warm-up\n0,edge,lenet\n12.5,far-edge,resnet50\n12.5,cloud,lenet\n",
+        )
+        .unwrap();
+        let ev = read_trace_csv(&path).unwrap();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0], TraceEvent { at_ms: 0.0, site: "edge".into(), model: "lenet".into() });
+        assert_eq!(ev[2].site, "cloud");
+
+        std::fs::write(&path, "at_ms,site,model\n5,edge,lenet\n1,edge,lenet\n").unwrap();
+        assert!(read_trace_csv(&path).is_err(), "out-of-order arrivals rejected");
+        std::fs::write(&path, "at_ms,site,model\n").unwrap();
+        assert!(read_trace_csv(&path).is_err(), "empty trace rejected");
+        std::fs::write(&path, "1,edge\n").unwrap();
+        assert!(read_trace_csv(&path).is_err(), "missing column rejected");
+        std::fs::remove_file(&path).ok();
     }
 }

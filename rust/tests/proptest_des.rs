@@ -1,0 +1,198 @@
+//! Property-style tests for the discrete-event core — randomized inputs
+//! under fixed seeds (deterministic, reproducible), checking the
+//! invariants bit-reproducible replay rests on:
+//!
+//! - The event heap never yields events out of time order, and events
+//!   scheduled for the same instant pop in schedule order (FIFO among
+//!   ties — the property that makes the replay canonical rather than
+//!   merely time-sorted).
+//! - The virtual clock is monotone over any sorted drive and panics on
+//!   regression instead of silently corrupting measurements.
+//! - Randomly generated multi-site scenarios conserve every request
+//!   (`submitted = completed + cache_hits + shed + quota_shed`) and
+//!   replay byte-identically.
+
+use tf2aif::fabric::des::{
+    run_des, Clock, DesConfig, DesModel, DesScenario, DesSite, EventHeap, SimClock,
+};
+use tf2aif::util::rng::Rng;
+use tf2aif::workload::RateCurve;
+
+#[test]
+fn heap_never_yields_events_out_of_time_order() {
+    for seed in [1u64, 7, 42, 1234] {
+        let mut rng = Rng::new(seed);
+        let mut heap = EventHeap::new();
+        for i in 0..5000usize {
+            heap.schedule(rng.below(1000) as u64 * 17, i);
+        }
+        let mut popped = 0usize;
+        let mut last_at = 0u64;
+        while let Some((at, _seq, _ev)) = heap.pop() {
+            assert!(at >= last_at, "seed {seed}: time ran backwards ({at} < {last_at})");
+            last_at = at;
+            popped += 1;
+        }
+        assert_eq!(popped, 5000, "seed {seed}: every scheduled event pops exactly once");
+    }
+}
+
+#[test]
+fn same_instant_events_pop_in_schedule_order() {
+    // Heavy tie pressure: only 10 distinct timestamps for 2000 events.
+    // Among equal timestamps the sequence number must come out strictly
+    // increasing — FIFO among ties, the bit-reproducibility keystone.
+    for seed in [5u64, 9, 86] {
+        let mut rng = Rng::new(seed);
+        let mut heap = EventHeap::new();
+        for _ in 0..2000 {
+            heap.schedule(rng.below(10) as u64 * 100, ());
+        }
+        let mut last: Option<(u64, u64)> = None;
+        while let Some((at, seq, ())) = heap.pop() {
+            if let Some((prev_at, prev_seq)) = last {
+                assert!(
+                    at > prev_at || (at == prev_at && seq > prev_seq),
+                    "seed {seed}: tie broken out of schedule order \
+                     (({prev_at},{prev_seq}) then ({at},{seq}))"
+                );
+            }
+            last = Some((at, seq));
+        }
+    }
+}
+
+#[test]
+fn interleaved_schedule_and_pop_preserves_order() {
+    // Scheduling while draining (the engine's actual access pattern:
+    // every handled event schedules successors at now or later) must
+    // still never pop backwards in time.
+    for seed in [3u64, 21] {
+        let mut rng = Rng::new(seed);
+        let mut heap = EventHeap::new();
+        heap.schedule(0, 0u32);
+        let mut now = 0u64;
+        let mut handled = 0usize;
+        while let Some((at, _seq, _ev)) = heap.pop() {
+            assert!(at >= now, "seed {seed}: popped {at} before {now}");
+            now = at;
+            handled += 1;
+            if handled < 3000 {
+                // One or two successors, never in the past.
+                for _ in 0..1 + rng.below(2) {
+                    heap.schedule(now + rng.below(500) as u64, 0u32);
+                }
+            }
+        }
+        assert!(heap.is_empty());
+        assert!(handled >= 3000, "seed {seed}: the drive ran to completion");
+    }
+}
+
+#[test]
+fn sim_clock_is_monotone_over_any_sorted_drive() {
+    for seed in [2u64, 31] {
+        let mut rng = Rng::new(seed);
+        let mut times: Vec<u64> = (0..1000).map(|_| rng.below(1_000_000) as u64).collect();
+        times.sort_unstable();
+        let clock = SimClock::new();
+        let mut last_ms = 0.0f64;
+        for at in times {
+            clock.advance_to(at);
+            let ms = clock.now_ms();
+            assert!(ms >= last_ms, "seed {seed}: clock regressed");
+            assert!(
+                (ms - at as f64 / 1e3).abs() < 1e-9,
+                "seed {seed}: now_ms disagrees with the advanced time"
+            );
+            last_ms = ms;
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "never run backwards")]
+fn sim_clock_panics_on_regression() {
+    let clock = SimClock::new();
+    clock.advance_to(10);
+    clock.advance_to(9);
+}
+
+/// A random but seed-determined multi-site scenario: 1–3 sites on
+/// random variants, random pod counts, constant curves, random queue
+/// bounds, quota and cache toggled at random.
+fn random_scenario(seed: u64) -> DesScenario {
+    let mut rng = Rng::new(0xD15C ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let variants = ["GPU", "AGX", "ARM"];
+    let nsites = 1 + rng.below(3);
+    let sites: Vec<DesSite> = (0..nsites)
+        .map(|i| DesSite {
+            name: format!("s{i}"),
+            tier: "edge".to_string(),
+            variant: variants[rng.below(variants.len())].to_string(),
+            pods: 1 + rng.below(2),
+            arrivals: Some(RateCurve::Constant { rps: rng.range_f64(5.0, 60.0) }),
+        })
+        .collect();
+    let rtt_ms: Vec<Vec<f64>> = (0..nsites)
+        .map(|i| {
+            (0..nsites)
+                .map(|j| if i == j { 0.0 } else { rng.range_f64(1.0, 20.0) })
+                .collect()
+        })
+        .collect();
+    let quota_on = rng.below(2) == 1;
+    let cache_on = rng.below(2) == 1;
+    DesScenario {
+        name: format!("prop-{seed}"),
+        horizon_s: 20.0,
+        models: vec![
+            DesModel { name: "lenet".to_string(), gflops: 0.001 },
+            DesModel { name: "resnet50".to_string(), gflops: 0.168 },
+        ],
+        sites,
+        rtt_ms,
+        trace: None,
+        drills: Vec::new(),
+        cfg: DesConfig {
+            queue_capacity: 2 + rng.below(14),
+            max_batch: 1 + rng.below(8),
+            quota_rps: if quota_on { rng.range_f64(5.0, 30.0) } else { 0.0 },
+            quota_burst: 8.0,
+            cache_ttl_ms: if cache_on { rng.range_f64(100.0, 2000.0) } else { 0.0 },
+            cohorts: if cache_on { 8 } else { 0 },
+            seed: seed.wrapping_add(0xACE5),
+            ..DesConfig::default()
+        },
+    }
+}
+
+#[test]
+fn randomized_scenarios_conserve_every_request() {
+    for seed in 0..8u64 {
+        let report = run_des(&random_scenario(seed)).unwrap();
+        assert!(report.submitted > 0, "seed {seed}: load was offered");
+        assert!(
+            report.conservation_holds(),
+            "seed {seed}: {} submitted != {} completed + {} cached + {} shed + {} quota-shed",
+            report.submitted,
+            report.completed,
+            report.cache_hits,
+            report.shed,
+            report.quota_shed,
+        );
+    }
+}
+
+#[test]
+fn randomized_scenarios_replay_byte_identically() {
+    for seed in [0u64, 3, 6] {
+        let first = run_des(&random_scenario(seed)).unwrap();
+        let second = run_des(&random_scenario(seed)).unwrap();
+        assert_eq!(
+            first.canonical_json(),
+            second.canonical_json(),
+            "seed {seed}: the same scenario must replay to identical bytes"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Golden suite for the discrete-event simulation core: every canned
+//! continuum scenario, replayed on the virtual clock, must be
+//! **bit-reproducible** — the same scenario under the same seed twice
+//! produces byte-identical canonical reports — while different seeds
+//! must produce different reports (determinism is not degeneracy).
+//! Request conservation (`submitted = completed + cache_hits + shed +
+//! quota_shed`, globally and per origin site) is asserted on every run,
+//! and the canonical report must parse back with the documented schema
+//! fields.  The million-user day is exercised by the CI determinism
+//! gate through the release CLI (`tf2aif continuum --virtual-time`);
+//! this suite covers the three fast scenarios in tier-1.
+
+use tf2aif::continuum::des::{canned, scenario_from_topology, CANNED};
+use tf2aif::continuum::continuum_testbed;
+use tf2aif::fabric::des::{run_des, DesConfig};
+use tf2aif::util::json::Json;
+use tf2aif::workload::TraceEvent;
+
+/// The canned scenarios cheap enough for the debug-build golden suite.
+const GOLDEN: &[&str] = &["diurnal-day", "flash-crowd", "site-loss-storm"];
+
+#[test]
+fn canned_registry_builds_every_scenario() {
+    for name in CANNED {
+        let sc = canned(name, 3).expect("canned scenario builds");
+        assert_eq!(sc.name, *name);
+        assert_eq!(sc.sites.len(), 3, "{name}: built on the 3-site testbed");
+    }
+    assert!(canned("no-such-scenario", 3).is_err());
+}
+
+#[test]
+fn golden_scenarios_are_bit_reproducible_under_the_same_seed() {
+    for name in GOLDEN {
+        let first = run_des(&canned(name, 11).unwrap()).unwrap();
+        let second = run_des(&canned(name, 11).unwrap()).unwrap();
+        assert!(first.conservation_holds(), "{name}: conservation");
+        assert!(first.submitted > 0, "{name}: the scenario offers load");
+        assert_eq!(
+            first.canonical_json(),
+            second.canonical_json(),
+            "{name}: same seed twice must be byte-identical"
+        );
+    }
+}
+
+#[test]
+fn different_seeds_change_the_golden_report() {
+    let a = run_des(&canned("diurnal-day", 11).unwrap()).unwrap();
+    let b = run_des(&canned("diurnal-day", 12).unwrap()).unwrap();
+    assert!(a.conservation_holds() && b.conservation_holds());
+    assert_ne!(
+        a.canonical_json(),
+        b.canonical_json(),
+        "the seed must actually steer arrivals and service sampling"
+    );
+}
+
+#[test]
+fn trace_replay_is_deterministic_and_conserves() {
+    // A hand-built 600-request trace alternating origin sites: replay
+    // is exact (submitted = trace length), deterministic, and with
+    // quota/cache off every request is either completed or shed.
+    let trace: Vec<TraceEvent> = (0..600)
+        .map(|i| TraceEvent {
+            at_ms: i as f64 * 5.0,
+            site: ["cloud", "edge", "far-edge"][i % 3].to_string(),
+            model: "lenet".to_string(),
+        })
+        .collect();
+    let build = || {
+        let mut sc = scenario_from_topology(
+            "trace-replay",
+            &continuum_testbed(),
+            &["lenet"],
+            DesConfig { seed: 77, ..DesConfig::default() },
+        )
+        .unwrap();
+        sc.trace = Some(trace.clone());
+        sc
+    };
+    let first = run_des(&build()).unwrap();
+    let second = run_des(&build()).unwrap();
+    assert_eq!(first.submitted, 600, "every trace row is offered exactly once");
+    assert!(first.conservation_holds());
+    assert_eq!(first.cache_hits, 0, "cache is off in the default config");
+    assert_eq!(first.quota_shed, 0, "quota is off in the default config");
+    assert_eq!(first.submitted, first.completed + first.shed);
+    assert_eq!(first.canonical_json(), second.canonical_json());
+}
+
+#[test]
+fn canonical_report_parses_with_schema_fields() {
+    let report = run_des(&canned("site-loss-storm", 4).unwrap()).unwrap();
+    let doc = Json::parse(&report.canonical_json()).expect("canonical JSON parses");
+    assert_eq!(doc.get("scenario").unwrap().str().unwrap(), "site-loss-storm");
+    assert_eq!(doc.get("seed").unwrap().usize().unwrap(), 4);
+    assert!(doc.get("events").unwrap().usize().unwrap() > 0);
+    assert!(doc.get("submitted").unwrap().usize().unwrap() > 0);
+    assert!(matches!(doc.get("conservation").unwrap(), Json::Bool(true)));
+    let lat = doc.get("latency_ms").unwrap();
+    for key in ["p50", "p99", "mean", "max"] {
+        assert!(lat.get(key).unwrap().f64().unwrap() >= 0.0, "latency_ms.{key}");
+    }
+    let sites = doc.get("sites").unwrap().arr().unwrap();
+    assert_eq!(sites.len(), 3);
+    for row in sites {
+        for key in ["site", "tier", "variant"] {
+            assert!(!row.get(key).unwrap().str().unwrap().is_empty(), "sites[].{key}");
+        }
+        assert!(row.get("pods_end").unwrap().usize().unwrap() >= 1);
+    }
+}
