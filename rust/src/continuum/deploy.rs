@@ -155,6 +155,14 @@ pub struct SiteRunReport {
     pub throughput_rps: f64,
     /// Mean service latency, ms (0 when idle).
     pub mean_service_ms: f64,
+    /// Circuit-breaker trips across the site's pods (0 with breakers
+    /// off).
+    pub breaker_trips: u64,
+    /// Faults injected into this site's fabric (pod crashes).
+    pub faults_injected: u64,
+    /// The site's most recent autoscaler pod-spawn failure — drill runs
+    /// show *why* capacity failed to move, not just that it did.
+    pub last_scale_error: Option<String>,
 }
 
 /// Result of one [`ContinuumOrchestrator::run`] drive.
@@ -681,6 +689,9 @@ fn site_run_report(
         energy,
         throughput_rps: throughput_rps(completed as usize, wall_s),
         mean_service_ms,
+        breaker_trips: fabric.breaker_trips(),
+        faults_injected: fabric.faults_injected(),
+        last_scale_error: fabric.last_scale_error(),
     }
 }
 

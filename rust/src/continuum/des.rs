@@ -29,6 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::continuum::topology::{continuum_testbed, SiteTier, Topology};
 use crate::fabric::des::{DesAutoscale, DesConfig, DesModel, DesScenario, DesSite, Drill};
+use crate::fabric::faults::{site_loss_storm_plan, FaultPlan, ResilienceConfig};
 use crate::fabric::sim::synthetic_catalog_for;
 use crate::workload::RateCurve;
 
@@ -96,6 +97,7 @@ pub fn scenario_from_topology(
         rtt_ms,
         trace: None,
         drills: Vec::new(),
+        faults: FaultPlan::default(),
         cfg,
     })
 }
@@ -178,15 +180,22 @@ pub fn scenario_flash_crowd(seed: u64) -> Result<DesScenario> {
 
 /// A correlated surge at every site — one regional event drives demand
 /// up everywhere at once — with the edge site failing mid-surge and
-/// recovering five minutes later.  Queued edge work reroutes to the
-/// survivors while they are themselves under surge: the worst-timed
-/// failure drill the continuum replanner is meant to survive.
+/// recovering five minutes later, **plus** the canned partial-failure
+/// storm ([`site_loss_storm_plan`]): an edge straggler, a far-edge pod
+/// crash mid-batch, a cloud↔far-edge partition, a lossy degraded
+/// edge↔cloud link, and a far-edge flap racing the drill's replan.  The
+/// full resilience stack ([`ResilienceConfig::storm_defaults`]: retry,
+/// hedging, breakers, brownout) runs against it, and the engine's
+/// conservation check proves every admitted request still reaches
+/// exactly one terminal verdict.
 pub fn scenario_site_loss_storm(seed: u64) -> Result<DesScenario> {
+    let mut cfg = base_cfg(seed);
+    cfg.resilience = ResilienceConfig::storm_defaults();
     let mut sc = scenario_from_topology(
         "site-loss-storm",
         &continuum_testbed(),
         &["lenet", "resnet50"],
-        base_cfg(seed),
+        cfg,
     )?;
     sc.horizon_s = 1_800.0;
     curve_everywhere(
@@ -203,6 +212,7 @@ pub fn scenario_site_loss_storm(seed: u64) -> Result<DesScenario> {
         Drill::FailSite { at_s: 900.0, site: "edge".into() },
         Drill::RecoverSite { at_s: 1_200.0, site: "edge".into() },
     ];
+    sc.faults = site_loss_storm_plan();
     Ok(sc)
 }
 
@@ -352,5 +362,10 @@ mod tests {
         let a = run_des(&scenario_site_loss_storm(5).unwrap()).unwrap();
         let b = run_des(&scenario_site_loss_storm(5).unwrap()).unwrap();
         assert_eq!(a.canonical_json(), b.canonical_json());
+        // The canned storm now carries the partial-failure fault plan
+        // and the full resilience stack: faults really fire, and the
+        // exactly-one-terminal-verdict invariant holds through them.
+        assert!(a.conservation_holds(), "zero lost admitted work under the storm");
+        assert!(a.faults_injected > 0, "the fault plan must actually fire");
     }
 }

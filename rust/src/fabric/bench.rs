@@ -693,6 +693,82 @@ pub fn run_des_bench(cfg: &BenchConfig) -> Result<DesBench> {
     })
 }
 
+/// The chaos measurement (schema v6 `resilience` section): the canned
+/// `site-loss-storm` scenario replayed under the storm resilience
+/// defaults, plus a hedge-disabled control run of the same storm so the
+/// tail-latency claim is a measured A/B, not an assertion.
+#[derive(Debug, Clone)]
+pub struct ResilienceBench {
+    /// Requests offered during the storm replay.
+    pub submitted: u64,
+    /// Requests served by a pod dispatch.
+    pub completed: u64,
+    /// Requests that exhausted retries/deadline and failed terminally.
+    pub failed: u64,
+    /// Retry attempts the policy launched.
+    pub retries: u64,
+    /// Hedge duplicates launched past the EWMA tail threshold.
+    pub hedges_launched: u64,
+    /// Hedges that beat the primary attempt (first-wins).
+    pub hedges_won: u64,
+    /// Circuit-breaker closed→open transitions across the storm.
+    pub breaker_trips: u64,
+    /// Breakers still open when the replay drained (0 = recovered).
+    pub breakers_open_end: u64,
+    /// Virtual milliseconds spent in brownout degradation.
+    pub brownout_ms: f64,
+    /// Faults the plan actually injected.
+    pub faults_injected: u64,
+    /// p99 end-to-end latency with hedging on, ms.
+    pub p99_hedged_ms: f64,
+    /// p99 end-to-end latency of the hedge-disabled control run, ms.
+    pub p99_unhedged_ms: f64,
+    /// Every admitted request reached exactly one terminal verdict:
+    /// request conservation held globally and per site on both the
+    /// storm and the control run.  CI gates on this.
+    pub no_lost_requests_under_storm: bool,
+    /// Hedged p99 beat the hedge-disabled p99 under the same storm and
+    /// seed.  CI gates on this.
+    pub hedging_cuts_tail_p99: bool,
+    /// Breakers tripped during the storm and all re-closed by drain.
+    pub breaker_recovers: bool,
+    /// Same seed + same storm twice → byte-identical canonical reports.
+    pub storm_bit_reproducible: bool,
+}
+
+/// Run the chaos measurement: the `site-loss-storm` scenario twice
+/// under `cfg.seed` (byte-comparing canonical reports), then once more
+/// with hedging disabled to price the tail-latency win.
+pub fn run_resilience_bench(cfg: &BenchConfig) -> Result<ResilienceBench> {
+    let sc = crate::continuum::des::canned("site-loss-storm", cfg.seed)?;
+    let first = des::run_des(&sc)?;
+    let second = des::run_des(&sc)?;
+    let storm_bit_reproducible = first.canonical_json() == second.canonical_json();
+    let mut unhedged_sc = sc.clone();
+    unhedged_sc.cfg.resilience.hedge = None;
+    let unhedged = des::run_des(&unhedged_sc)?;
+    Ok(ResilienceBench {
+        submitted: first.submitted,
+        completed: first.completed,
+        failed: first.failed,
+        retries: first.retries,
+        hedges_launched: first.hedges_launched,
+        hedges_won: first.hedges_won,
+        breaker_trips: first.breaker_trips,
+        breakers_open_end: first.breakers_open_end,
+        brownout_ms: first.brownout_ms,
+        faults_injected: first.faults_injected,
+        p99_hedged_ms: first.p99_ms,
+        p99_unhedged_ms: unhedged.p99_ms,
+        no_lost_requests_under_storm: first.conservation_holds()
+            && second.conservation_holds()
+            && unhedged.conservation_holds(),
+        hedging_cuts_tail_p99: first.p99_ms < unhedged.p99_ms,
+        breaker_recovers: first.breaker_trips > 0 && first.breakers_open_end == 0,
+        storm_bit_reproducible,
+    })
+}
+
 fn side_json(b: &BenchSide) -> Json {
     obj(vec![
         ("submitted", n(b.submitted as f64)),
@@ -709,10 +785,12 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v5,
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v6,
 /// documented in `docs/CLI.md`) — the perf trajectory future PRs
-/// measure against.  `control`, `autoscale`, `tenancy`, `continuum` and
-/// `des` are optional sections; the PR 2 fused sweep is always present.
+/// measure against.  `control`, `autoscale`, `tenancy`, `continuum`,
+/// `des` and `resilience` are optional sections; the PR 2 fused sweep
+/// is always present.
+#[allow(clippy::too_many_arguments)]
 pub fn write_json(
     path: impl AsRef<Path>,
     cfg: &BenchConfig,
@@ -722,6 +800,7 @@ pub fn write_json(
     tenancy_bench: Option<&TenancyBench>,
     continuum: Option<&ContinuumBench>,
     des_bench: Option<&DesBench>,
+    resilience: Option<&ResilienceBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -737,7 +816,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(5.0)),
+        ("version", n(6.0)),
         (
             "config",
             obj(vec![
@@ -931,6 +1010,33 @@ pub fn write_json(
                 ("bit_reproducible", Json::Bool(d.bit_reproducible)),
                 ("seeds_differ", Json::Bool(d.seeds_differ)),
                 ("conservation", Json::Bool(d.conservation)),
+            ]),
+        ));
+    }
+    if let Some(r) = resilience {
+        top.push((
+            "resilience",
+            obj(vec![
+                ("scenario", s("site-loss-storm")),
+                ("submitted", n(r.submitted as f64)),
+                ("completed", n(r.completed as f64)),
+                ("failed", n(r.failed as f64)),
+                ("retries", n(r.retries as f64)),
+                ("hedges_launched", n(r.hedges_launched as f64)),
+                ("hedges_won", n(r.hedges_won as f64)),
+                ("breaker_trips", n(r.breaker_trips as f64)),
+                ("breakers_open_end", n(r.breakers_open_end as f64)),
+                ("brownout_ms", n(r.brownout_ms)),
+                ("faults_injected", n(r.faults_injected as f64)),
+                ("p99_hedged_ms", n(r.p99_hedged_ms)),
+                ("p99_unhedged_ms", n(r.p99_unhedged_ms)),
+                (
+                    "no_lost_requests_under_storm",
+                    Json::Bool(r.no_lost_requests_under_storm),
+                ),
+                ("hedging_cuts_tail_p99", Json::Bool(r.hedging_cuts_tail_p99)),
+                ("breaker_recovers", Json::Bool(r.breaker_recovers)),
+                ("storm_bit_reproducible", Json::Bool(r.storm_bit_reproducible)),
             ]),
         ));
     }
@@ -1142,6 +1248,9 @@ mod tests {
                     },
                     throughput_rps: 50.0,
                     mean_service_ms: 1.2,
+                    breaker_trips: 0,
+                    faults_injected: 0,
+                    last_scale_error: None,
                 }],
             },
         };
@@ -1165,6 +1274,24 @@ mod tests {
                 bit_reproducible: true,
                 seeds_differ: true,
                 conservation: true,
+            }),
+            Some(&ResilienceBench {
+                submitted: 9_000,
+                completed: 8_950,
+                failed: 50,
+                retries: 120,
+                hedges_launched: 40,
+                hedges_won: 25,
+                breaker_trips: 3,
+                breakers_open_end: 0,
+                brownout_ms: 1_500.0,
+                faults_injected: 5,
+                p99_hedged_ms: 42.0,
+                p99_unhedged_ms: 95.0,
+                no_lost_requests_under_storm: true,
+                hedging_cuts_tail_p99: true,
+                breaker_recovers: true,
+                storm_bit_reproducible: true,
             }),
         )
         .unwrap();
@@ -1193,7 +1320,20 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
-        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 5);
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 6);
+        let res = doc.get("resilience").unwrap();
+        assert!(matches!(
+            res.get("no_lost_requests_under_storm").unwrap(),
+            Json::Bool(true)
+        ));
+        assert!(matches!(res.get("hedging_cuts_tail_p99").unwrap(), Json::Bool(true)));
+        assert!(matches!(res.get("breaker_recovers").unwrap(), Json::Bool(true)));
+        assert!(matches!(res.get("storm_bit_reproducible").unwrap(), Json::Bool(true)));
+        assert_eq!(res.get("breaker_trips").unwrap().usize().unwrap(), 3);
+        assert!(
+            res.get("p99_hedged_ms").unwrap().f64().unwrap()
+                < res.get("p99_unhedged_ms").unwrap().f64().unwrap()
+        );
         let des_doc = doc.get("des").unwrap();
         assert!(matches!(des_doc.get("bit_reproducible").unwrap(), Json::Bool(true)));
         assert!(matches!(des_doc.get("seeds_differ").unwrap(), Json::Bool(true)));
@@ -1229,7 +1369,7 @@ mod tests {
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None, None)
+        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None, None, None)
             .unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(doc.opt("control").is_none());
@@ -1237,6 +1377,7 @@ mod tests {
         assert!(doc.opt("tenancy").is_none());
         assert!(doc.opt("continuum").is_none());
         assert!(doc.opt("des").is_none());
+        assert!(doc.opt("resilience").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

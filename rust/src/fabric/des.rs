@@ -36,8 +36,17 @@
 //! continuum runs in seconds of wall time, and two runs with the same
 //! seed produce **byte-identical** reports
 //! ([`DesReport::canonical_json`]) — the golden suite
-//! (`rust/tests/scenario_des.rs`) and the BENCH v5 `bit_reproducible`
+//! (`rust/tests/scenario_des.rs`) and the BENCH v6 `bit_reproducible`
 //! verdict hold that contract.
+//!
+//! PR 7 adds the chaos layer on the same event loop: a seeded
+//! [`FaultPlan`] injects pod crashes mid-batch (stale-epoch detection),
+//! latency stragglers, link degradation/partitions and site flaps,
+//! while the [`ResilienceConfig`] policy answers with bounded retries,
+//! first-wins tail hedging, per-site circuit breakers and a brownout
+//! ladder — all deterministic, all feeding
+//! [`DesReport::conservation_holds`], which now states the
+//! exactly-one-terminal-verdict invariant under failure storms.
 
 use std::collections::{BinaryHeap, BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,6 +56,10 @@ use anyhow::{bail, Result};
 
 use crate::fabric::control::{
     BatchControlConfig, BatchController, HysteresisGate, ScaleDirection, TokenBucket,
+};
+use crate::fabric::faults::{
+    Brownout, CircuitBreaker, EwmaLatency, Fault, FaultPlan, HedgePolicy, ResilienceConfig,
+    RetryPolicy,
 };
 use crate::platform::{self, Platform};
 use crate::util::json::{n, obj, s, Json};
@@ -320,6 +333,10 @@ pub struct DesConfig {
     /// Backlog-driven autoscaling via virtual tick events (`None` keeps
     /// pod counts fixed).
     pub autoscale: Option<DesAutoscale>,
+    /// Resilience policy (retry, hedging, breakers, brownout) — all off
+    /// by default, so plain scenarios replay byte-identically to their
+    /// pre-chaos selves.
+    pub resilience: ResilienceConfig,
     /// Master seed: arrival streams, cohorts and per-pod service noise
     /// all derive from it deterministically.
     pub seed: u64,
@@ -339,6 +356,7 @@ impl Default for DesConfig {
             cache_ttl_ms: 0.0,
             cohorts: 0,
             autoscale: None,
+            resilience: ResilienceConfig::default(),
             seed: 0xDE5,
         }
     }
@@ -390,6 +408,9 @@ pub struct DesScenario {
     pub trace: Option<Vec<TraceEvent>>,
     /// Failure drills, applied at their scheduled virtual times.
     pub drills: Vec<Drill>,
+    /// Partial-failure injection plan (crashes, stragglers, link
+    /// degradation/partitions, site flaps) — empty injects nothing.
+    pub faults: FaultPlan,
     /// Fabric knobs.
     pub cfg: DesConfig,
 }
@@ -404,6 +425,25 @@ struct Item {
     cohort: u64,
     enq_us: u64,
     link_ms: f64,
+    /// Request id — shared by every retry and hedge clone of one
+    /// admitted request, so terminal-verdict accounting stays exact.
+    req: u64,
+    /// Retry number (0 = first attempt).
+    attempt: u32,
+    /// True for a hedge duplicate (the speculative second copy).
+    hedge: bool,
+}
+
+/// First-wins bookkeeping for one admitted request while any of its
+/// copies (original, retries, hedge clone) is still in flight.
+#[derive(Debug)]
+struct ReqState {
+    /// Copies not yet resolved (completed, cancelled, or failed).
+    remaining: u32,
+    /// A copy already won (terminal verdict recorded).
+    done: bool,
+    /// Site the original landed on — the hedge routes elsewhere.
+    first_site: usize,
 }
 
 #[derive(Debug)]
@@ -414,20 +454,54 @@ enum Ev {
     TraceArrival { idx: usize },
     /// Linger deadline for a pod's partial batch.
     LingerFire { site: usize, model: usize, pod: usize, gen: u64 },
-    /// A fused dispatch completed.
-    BatchDone { site: usize, model: usize, pod: usize, total_ms: f64, batch: Vec<Item> },
+    /// A fused dispatch completed.  `epoch` detects crash-mid-batch:
+    /// a stale epoch means the pod crashed while this batch was in
+    /// flight and its items are failure victims, not completions.
+    BatchDone { site: usize, model: usize, pod: usize, total_ms: f64, epoch: u64, batch: Vec<Item> },
     /// Autoscaler control tick.
     AutoscaleTick,
     /// Site-loss drill.
     Fail { site: usize },
     /// Site-recovery drill.
     Recover { site: usize },
+    /// Injected pod crash (fault plan).
+    PodCrash { site: usize, pod: usize, restart_us: Option<u64> },
+    /// A crashed pod rejoins.
+    PodRestart { site: usize, pod: usize },
+    /// Latency straggler onset: the site serves `factor`× slower.
+    StragglerStart { site: usize, factor: f64 },
+    /// Straggler end: service speed restored.
+    StragglerEnd { site: usize },
+    /// Link degradation onset: RTT inflated, transit loss enabled.
+    LinkDegrade { a: usize, b: usize, rtt_factor: f64, loss: f64 },
+    /// Degraded link heals.
+    LinkHeal { a: usize, b: usize },
+    /// Full partition: the pair becomes mutually unreachable.
+    PartitionStart { a: usize, b: usize },
+    /// Partition heals.
+    PartitionHeal { a: usize, b: usize },
+    /// Site flap down (fault plan — counted as an injected fault,
+    /// unlike a scripted [`Drill`]).
+    FlapDown { site: usize },
+    /// Site flap recovery.
+    FlapUp { site: usize },
+    /// Scheduled retry of a failed request copy, after backoff.
+    Retry { item: Item },
+    /// Hedge deadline: if the request is still unresolved, duplicate
+    /// it to the next-ranked site.
+    HedgeFire { req: u64, item: Item },
+    /// Brownout-ladder window tick.
+    BrownoutTick,
 }
 
 struct Pod {
     q: VecDeque<Item>,
     busy: bool,
     retired: bool,
+    /// Crashed by the fault plan: unroutable until restarted.
+    crashed: bool,
+    /// Bumped on crash so in-flight `BatchDone`s are recognizably stale.
+    epoch: u64,
     linger_armed: bool,
     linger_gen: u64,
     rng: Rng,
@@ -448,6 +522,8 @@ struct SiteState {
     cache_hits: u64,
     completed: u64,
     shed: u64,
+    failed: u64,
+    retries: u64,
     e2e: Series,
     // Exec-side accounting (work *served* here).
     served_here: u64,
@@ -467,6 +543,7 @@ struct Engine<'a> {
     cooldown: Vec<u32>,
     /// Per-origin candidate sites, nearest first (origin, then ascending
     /// RTT, site index breaking ties) — unreachable pairs excluded.
+    /// Recomputed when link faults mutate the effective topology.
     route_order: Vec<Vec<usize>>,
     plats: Vec<(&'static Platform, bool)>,
     trace: Vec<(u64, usize, usize)>,
@@ -476,15 +553,49 @@ struct Engine<'a> {
     events: u64,
     pod_seq: u64,
     unique_cohort: u64,
+    // Chaos overlay: effective RTTs, link reachability, per-transit
+    // loss, per-site straggle factors — all mutated by fault events.
+    rtt: Vec<Vec<f64>>,
+    link_up: Vec<Vec<bool>>,
+    loss: Vec<Vec<f64>>,
+    straggle: Vec<f64>,
+    chaos_rng: Rng,
+    // Resilience machinery (None/empty when the policy is off).
+    retry_pol: Option<RetryPolicy>,
+    hedge_pol: Option<HedgePolicy>,
+    breakers: Option<Vec<CircuitBreaker>>,
+    brownouts: Option<Vec<Brownout>>,
+    ewma: EwmaLatency,
+    outstanding: BTreeMap<u64, ReqState>,
+    next_req: u64,
     // Global totals.
     submitted: u64,
     completed: u64,
     cache_hits: u64,
     shed: u64,
     quota_shed: u64,
+    failed: u64,
+    retries: u64,
     spilled: u64,
     rerouted: u64,
+    hedges_launched: u64,
+    hedges_won: u64,
+    hedges_lost: u64,
+    faults_injected: u64,
     e2e: Series,
+}
+
+/// Brownout windows tick on this fixed virtual period.
+const BROWNOUT_TICK_MS: f64 = 1_000.0;
+
+/// Where [`Engine::try_place`] left an item.
+enum Placed {
+    /// Queued on a pod at the given site.
+    At(usize),
+    /// Lost in transit on a degraded link (failure path already fed).
+    Lost,
+    /// No reachable site had queue room — the item comes back.
+    Full(Item),
 }
 
 fn dur_us(ms: f64) -> u64 {
@@ -572,6 +683,31 @@ impl<'a> Engine<'a> {
             }
             site_idx(site)?;
         }
+        for f in &sc.faults.faults {
+            match f {
+                Fault::PodCrash { site, pod, .. } => {
+                    let i = site_idx(site)?;
+                    if *pod >= sc.sites[i].pods {
+                        bail!(
+                            "fault plan {:?}: site {site:?} starts with {} pod(s), \
+                             cannot crash pod {pod}",
+                            sc.faults.name,
+                            sc.sites[i].pods
+                        );
+                    }
+                }
+                Fault::Straggler { site, .. } | Fault::SiteFlap { site, .. } => {
+                    site_idx(site)?;
+                }
+                Fault::LinkDegrade { a, b, .. } | Fault::Partition { a, b, .. } => {
+                    let (ia, ib) = (site_idx(a)?, site_idx(b)?);
+                    if ia == ib {
+                        bail!("fault plan {:?}: link fault needs two sites, got {a:?} twice",
+                              sc.faults.name);
+                    }
+                }
+            }
+        }
         let mut route_order = Vec::with_capacity(ns);
         for origin in 0..ns {
             let mut order: Vec<usize> =
@@ -609,6 +745,8 @@ impl<'a> Engine<'a> {
                 cache_hits: 0,
                 completed: 0,
                 shed: 0,
+                failed: 0,
+                retries: 0,
                 e2e: Series::new(),
                 served_here: 0,
                 spillover_in: 0,
@@ -623,6 +761,7 @@ impl<'a> Engine<'a> {
             .map(|&(at, _, _)| at)
             .unwrap_or(0)
             .max(at_us(sc.horizon_s.max(0.0)));
+        let res = &sc.cfg.resilience;
         Ok(Engine {
             sc,
             clock: SimClock::new(),
@@ -640,13 +779,37 @@ impl<'a> Engine<'a> {
             events: 0,
             pod_seq,
             unique_cohort: 0,
+            rtt: sc.rtt_ms.clone(),
+            link_up: vec![vec![true; ns]; ns],
+            loss: vec![vec![0.0; ns]; ns],
+            straggle: vec![1.0; ns],
+            chaos_rng: Rng::new(sc.cfg.seed ^ 0xC4A05u64),
+            retry_pol: res.retry.clone(),
+            hedge_pol: res.hedge.clone(),
+            breakers: res
+                .breaker
+                .as_ref()
+                .map(|cfg| (0..ns).map(|_| CircuitBreaker::new(cfg.clone())).collect()),
+            brownouts: res
+                .brownout
+                .as_ref()
+                .map(|cfg| (0..ns).map(|_| Brownout::new(cfg.clone())).collect()),
+            ewma: EwmaLatency::new(0.2),
+            outstanding: BTreeMap::new(),
+            next_req: 0,
             submitted: 0,
             completed: 0,
             cache_hits: 0,
             shed: 0,
             quota_shed: 0,
+            failed: 0,
+            retries: 0,
             spilled: 0,
             rerouted: 0,
+            hedges_launched: 0,
+            hedges_won: 0,
+            hedges_lost: 0,
+            faults_injected: 0,
             e2e: Series::new(),
         })
     }
@@ -678,6 +841,52 @@ impl<'a> Engine<'a> {
                 self.heap.schedule(first, Ev::AutoscaleTick);
             }
         }
+        let sc = self.sc;
+        let site_of = |name: &str| {
+            sc.sites.iter().position(|s| &s.name == name).expect("validated in build")
+        };
+        for f in &sc.faults.faults {
+            match f {
+                Fault::PodCrash { at_s, site, pod, restart_s } => {
+                    let ev = Ev::PodCrash {
+                        site: site_of(site),
+                        pod: *pod,
+                        restart_us: restart_s.map(at_us),
+                    };
+                    self.heap.schedule(at_us(*at_s), ev);
+                }
+                Fault::Straggler { at_s, until_s, site, factor } => {
+                    let idx = site_of(site);
+                    self.heap
+                        .schedule(at_us(*at_s), Ev::StragglerStart { site: idx, factor: *factor });
+                    self.heap.schedule(at_us(*until_s), Ev::StragglerEnd { site: idx });
+                }
+                Fault::LinkDegrade { at_s, until_s, a, b, rtt_factor, loss } => {
+                    let (a, b) = (site_of(a), site_of(b));
+                    self.heap.schedule(
+                        at_us(*at_s),
+                        Ev::LinkDegrade { a, b, rtt_factor: *rtt_factor, loss: *loss },
+                    );
+                    self.heap.schedule(at_us(*until_s), Ev::LinkHeal { a, b });
+                }
+                Fault::Partition { at_s, heal_s, a, b } => {
+                    let (a, b) = (site_of(a), site_of(b));
+                    self.heap.schedule(at_us(*at_s), Ev::PartitionStart { a, b });
+                    self.heap.schedule(at_us(*heal_s), Ev::PartitionHeal { a, b });
+                }
+                Fault::SiteFlap { at_s, recover_s, site } => {
+                    let idx = site_of(site);
+                    self.heap.schedule(at_us(*at_s), Ev::FlapDown { site: idx });
+                    self.heap.schedule(at_us(*recover_s), Ev::FlapUp { site: idx });
+                }
+            }
+        }
+        if self.brownouts.is_some() {
+            let first = dur_us(BROWNOUT_TICK_MS);
+            if first <= self.horizon_us {
+                self.heap.schedule(first, Ev::BrownoutTick);
+            }
+        }
     }
 
     /// Schedule `site`'s next curve arrival strictly after `from_s`.
@@ -699,12 +908,21 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Admit one request originating at `origin` for `model`: quota →
-    /// cache → route (origin first, spillover by ascending RTT) → shed.
+    /// Admit one request originating at `origin` for `model`: brownout
+    /// demand-shedding → quota → cache → route (origin first, spillover
+    /// by ascending RTT) → shed.
     fn admit(&mut self, origin: usize, model: usize, cohort: u64) {
         let now = self.clock.now_us();
         self.submitted += 1;
         self.sites[origin].submitted += 1;
+        // Deepest brownout rung: shed half the new demand at the door
+        // (the DES has no tenant priorities, so "lowest priority
+        // first" degrades to a deterministic alternating shed).
+        if self.brownout_level(origin) >= 3 && self.sites[origin].submitted % 2 == 0 {
+            self.shed += 1;
+            self.sites[origin].shed += 1;
+            return;
+        }
         if let Some(bucket) = &mut self.sites[origin].quota {
             if !bucket.try_take_at_s(now as f64 / 1e6) {
                 self.quota_shed += 1;
@@ -722,19 +940,42 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        let item = Item { origin, model, cohort, enq_us: now, link_ms: 0.0 };
-        self.route(item, false);
+        let req = self.next_req;
+        self.next_req += 1;
+        let item =
+            Item { origin, model, cohort, enq_us: now, link_ms: 0.0, req, attempt: 0, hedge: false };
+        let template = item.clone();
+        match self.try_place(item, false, None) {
+            Placed::At(site) => {
+                if self.hedge_pol.is_some() {
+                    self.outstanding
+                        .insert(req, ReqState { remaining: 1, done: false, first_site: site });
+                    let thr = {
+                        let pol = self.hedge_pol.as_ref().expect("checked");
+                        self.ewma.threshold_ms(pol)
+                    };
+                    if thr.is_finite() {
+                        let fire = now + dur_us(thr);
+                        self.heap.schedule(fire, Ev::HedgeFire { req, item: template });
+                    }
+                }
+            }
+            Placed::Lost => {}
+            Placed::Full(item) => self.terminal_shed(&item),
+        }
     }
 
-    /// Place `item` on the least-loaded pod of the nearest up site with
-    /// queue room; sheds (attributed to the origin) when every
-    /// reachable site is full or down.  `reroute` marks failure-drill
-    /// replacement traffic (counted separately from spillover).
-    fn route(&mut self, mut item: Item, reroute: bool) {
+    /// Place `item` on the least-loaded pod of the nearest up site
+    /// (skipping open breakers and `avoid`) with queue room.  Crossing
+    /// a degraded link may lose the item in transit, which feeds the
+    /// failure path.  `reroute` marks failure-drill replacement traffic
+    /// (counted separately from spillover).
+    fn try_place(&mut self, mut item: Item, reroute: bool, avoid: Option<usize>) -> Placed {
         let nm = self.sc.models.len();
+        let now_ms = self.clock.now_ms();
         let order = self.route_order[item.origin].clone();
         for cand in order {
-            if !self.sites[cand].up {
+            if !self.sites[cand].up || Some(cand) == avoid {
                 continue;
             }
             let gi = cand * nm + item.model;
@@ -742,28 +983,177 @@ impl<'a> Engine<'a> {
             let pick = self.groups[gi]
                 .iter()
                 .enumerate()
-                .filter(|(_, p)| !p.retired && p.q.len() < cap)
+                .filter(|(_, p)| !p.retired && !p.crashed && p.q.len() < cap)
                 .min_by_key(|(i, p)| (p.q.len(), *i))
                 .map(|(i, _)| i);
-            if let Some(pi) = pick {
-                item.link_ms = self.sc.rtt_ms[item.origin][cand];
-                if cand != item.origin {
-                    if reroute {
-                        self.rerouted += 1;
-                    } else {
-                        self.spilled += 1;
-                    }
-                    self.sites[cand].spillover_in += 1;
-                } else if reroute {
-                    self.rerouted += 1;
+            let Some(pi) = pick else { continue };
+            // Breaker check after the capacity check so half-open
+            // probes are only spent on placements that can happen.
+            if let Some(breakers) = &mut self.breakers {
+                if !breakers[cand].allow(now_ms) {
+                    continue;
                 }
-                self.groups[gi][pi].q.push_back(item);
-                self.pod_kick(cand, item_model(gi, nm), pi);
+            }
+            if cand != item.origin && self.loss[item.origin][cand] > 0.0 {
+                if self.chaos_rng.f64() < self.loss[item.origin][cand] {
+                    // Lost in transit on the degraded link: a failure
+                    // charged to the destination, retried or terminal.
+                    self.breaker_failure(cand, now_ms);
+                    self.brownout_observe(cand, false);
+                    self.fail_or_retry(item);
+                    return Placed::Lost;
+                }
+            }
+            item.link_ms = self.rtt[item.origin][cand];
+            if cand != item.origin {
+                if reroute {
+                    self.rerouted += 1;
+                } else {
+                    self.spilled += 1;
+                }
+                self.sites[cand].spillover_in += 1;
+            } else if reroute {
+                self.rerouted += 1;
+            }
+            self.groups[gi][pi].q.push_back(item);
+            self.pod_kick(cand, item_model(gi, nm), pi);
+            return Placed::At(cand);
+        }
+        Placed::Full(item)
+    }
+
+    /// Resolve one copy of a request terminally; true when this copy's
+    /// verdict is *the request's* verdict (first — and only — terminal
+    /// outcome), false when another copy already won or is still live.
+    fn resolve_clone_terminal(&mut self, item: &Item) -> bool {
+        if self.hedge_pol.is_none() {
+            return true;
+        }
+        match self.outstanding.get_mut(&item.req) {
+            Some(rs) => {
+                rs.remaining -= 1;
+                let counts = !rs.done && rs.remaining == 0;
+                if rs.done {
+                    self.hedges_lost += 1;
+                }
+                if rs.remaining == 0 {
+                    self.outstanding.remove(&item.req);
+                }
+                counts
+            }
+            None => true,
+        }
+    }
+
+    /// Terminal capacity-shed verdict for one copy.
+    fn terminal_shed(&mut self, item: &Item) {
+        let origin = item.origin;
+        if self.resolve_clone_terminal(item) {
+            self.shed += 1;
+            self.sites[origin].shed += 1;
+        }
+    }
+
+    /// Terminal failure verdict for one copy.
+    fn terminal_fail(&mut self, item: &Item) {
+        let origin = item.origin;
+        if self.resolve_clone_terminal(item) {
+            self.failed += 1;
+            self.sites[origin].failed += 1;
+        }
+    }
+
+    /// A copy failed (crash victim or transit loss): retry with backoff
+    /// while the policy allows, otherwise record the terminal verdict.
+    fn fail_or_retry(&mut self, mut item: Item) {
+        let now = self.clock.now_us();
+        if let Some(rp) = &self.retry_pol {
+            let next = item.attempt + 1;
+            if rp.may_retry(next, item.enq_us as f64 / 1e3, now as f64 / 1e3) {
+                item.attempt = next;
+                let backoff = {
+                    let rp = rp.clone();
+                    rp.backoff_ms(next, &mut self.chaos_rng)
+                };
+                self.retries += 1;
+                self.sites[item.origin].retries += 1;
+                self.heap.schedule(now + dur_us(backoff), Ev::Retry { item });
                 return;
             }
         }
-        self.shed += 1;
-        self.sites[item.origin].shed += 1;
+        self.terminal_fail(&item);
+    }
+
+    /// A scheduled retry fires: place the copy again (reroute
+    /// accounting), shedding terminally when nothing can take it.
+    fn on_retry(&mut self, item: Item) {
+        match self.try_place(item, true, None) {
+            Placed::At(_) | Placed::Lost => {}
+            Placed::Full(item) => self.terminal_shed(&item),
+        }
+    }
+
+    /// The hedge deadline fires: if the request is still unresolved
+    /// and not yet hedged, duplicate it to the next-ranked site
+    /// (first copy to finish wins; the loser is cancelled).
+    fn on_hedge_fire(&mut self, req: u64, item: Item) {
+        let Some(rs) = self.outstanding.get(&req) else { return };
+        if rs.done || rs.remaining >= 2 {
+            return;
+        }
+        let avoid = rs.first_site;
+        let mut clone = item;
+        clone.hedge = true;
+        clone.attempt = 0;
+        self.outstanding.get_mut(&req).expect("checked").remaining += 1;
+        match self.try_place(clone, false, Some(avoid)) {
+            Placed::At(_) | Placed::Lost => {
+                self.hedges_launched += 1;
+            }
+            Placed::Full(_) => {
+                // Stillborn hedge: nowhere to duplicate to.
+                if let Some(rs) = self.outstanding.get_mut(&req) {
+                    rs.remaining -= 1;
+                }
+            }
+        }
+    }
+
+    /// Current brownout rung at `site` (0 when the ladder is off).
+    fn brownout_level(&self, site: usize) -> u8 {
+        self.brownouts.as_ref().map(|b| b[site].level()).unwrap_or(0)
+    }
+
+    /// Feed one outcome into `site`'s brownout window, if any.
+    fn brownout_observe(&mut self, site: usize, ok: bool) {
+        if let Some(b) = &mut self.brownouts {
+            b[site].observe(ok);
+        }
+    }
+
+    /// Record a serving failure on `site`'s breaker, if any.
+    fn breaker_failure(&mut self, site: usize, now_ms: f64) {
+        if let Some(b) = &mut self.breakers {
+            b[site].on_failure(now_ms);
+        }
+    }
+
+    /// Recompute per-origin candidate orderings from the effective
+    /// (fault-adjusted) RTTs and link reachability.
+    fn recompute_routes(&mut self) {
+        let ns = self.sc.sites.len();
+        for origin in 0..ns {
+            let mut order: Vec<usize> = (0..ns)
+                .filter(|&j| self.rtt[origin][j].is_finite() && self.link_up[origin][j])
+                .collect();
+            order.sort_by(|&a, &b| {
+                self.rtt[origin][a]
+                    .partial_cmp(&self.rtt[origin][b])
+                    .expect("finite RTTs compare")
+                    .then(a.cmp(&b))
+            });
+            self.route_order[origin] = order;
+        }
     }
 
     /// Nudge an idle pod: dispatch when a full batch is ready (or no
@@ -776,7 +1166,7 @@ impl<'a> Engine<'a> {
         let linger = self.sc.cfg.batch_linger_ms;
         let (do_dispatch, arm) = {
             let p = &self.groups[gi][pod];
-            if p.busy || p.retired || p.q.is_empty() {
+            if p.busy || p.retired || p.crashed || p.q.is_empty() {
                 return;
             }
             let target = self.drain_target(gi, pod);
@@ -808,24 +1198,59 @@ impl<'a> Engine<'a> {
             .clamp(1, cfg.max_batch)
     }
 
-    /// Drain up to the target and price the fused dispatch with the
-    /// site platform's cost model — the service time becomes one
-    /// `BatchDone` event instead of a worker sleeping.
+    /// Drain up to the target (brownout-capped) and price the fused
+    /// dispatch with the site platform's cost model — the service time
+    /// becomes one `BatchDone` event instead of a worker sleeping.
+    /// Already-won hedge losers are cancelled during the drain instead
+    /// of being served.
     fn dispatch(&mut self, site: usize, model: usize, pod: usize) {
         let gi = site * self.sc.models.len() + model;
-        let target = self.drain_target(gi, pod);
+        let mut target = self.drain_target(gi, pod);
+        let level = self.brownout_level(site);
+        if level >= 1 {
+            // Brownout rung 1: halve the batch bound so degraded
+            // hardware turns around smaller units of work.
+            target = (target / 2).max(1);
+        }
         let (plat, native) = self.plats[site];
-        let gflops = self.sc.models[model].gflops;
+        let mut gflops = self.sc.models[model].gflops;
+        if level >= 2 {
+            // Rung 2: step down to a cheaper variant of the model.
+            gflops *= 0.6;
+        }
+        let mut drained: Vec<Item> = {
+            let p = &mut self.groups[gi][pod];
+            let drain = p.q.len().min(target);
+            debug_assert!(drain > 0, "dispatch on an empty queue");
+            p.linger_armed = false;
+            p.q.drain(..drain).collect()
+        };
+        // Cancel copies whose request already reached its verdict.
+        drained.retain(|item| {
+            if let Some(rs) = self.outstanding.get_mut(&item.req) {
+                if rs.done {
+                    rs.remaining -= 1;
+                    self.hedges_lost += 1;
+                    if rs.remaining == 0 {
+                        self.outstanding.remove(&item.req);
+                    }
+                    return false;
+                }
+            }
+            true
+        });
+        if drained.is_empty() {
+            self.pod_kick(site, model, pod);
+            return;
+        }
         let p = &mut self.groups[gi][pod];
-        let drain = p.q.len().min(target);
-        debug_assert!(drain > 0, "dispatch on an empty queue");
-        let batch: Vec<Item> = p.q.drain(..drain).collect();
         p.busy = true;
-        p.linger_armed = false;
         p.dispatches += 1;
-        let total_ms = plat.sample_batch_latency_ms(gflops, native, batch.len(), &mut p.rng);
+        let total_ms = plat.sample_batch_latency_ms(gflops, native, drained.len(), &mut p.rng)
+            * self.straggle[site];
         let done = self.clock.now_us() + dur_us(total_ms);
-        self.heap.schedule(done, Ev::BatchDone { site, model, pod, total_ms, batch });
+        let epoch = p.epoch;
+        self.heap.schedule(done, Ev::BatchDone { site, model, pod, total_ms, epoch, batch: drained });
     }
 
     fn on_batch_done(
@@ -834,12 +1259,58 @@ impl<'a> Engine<'a> {
         model: usize,
         pod: usize,
         total_ms: f64,
+        epoch: u64,
         batch: Vec<Item>,
     ) {
+        let gi = site * self.sc.models.len() + model;
+        if self.groups[gi][pod].epoch != epoch {
+            // The pod crashed while this batch was in flight: its items
+            // are crash victims — retried or failed, never completed.
+            // The crash handler already reset `busy`, so don't touch it.
+            let now_ms = self.clock.now_ms();
+            for item in batch {
+                self.breaker_failure(site, now_ms);
+                self.brownout_observe(site, false);
+                self.fail_or_retry(item);
+            }
+            return;
+        }
         let now = self.clock.now_us();
-        let drained = batch.len();
+        let mut served = 0u64;
         let mut worst = 0.0f64;
-        for item in &batch {
+        self.ewma.observe(total_ms);
+        if let Some(b) = &mut self.breakers {
+            b[site].on_success();
+        }
+        for item in batch {
+            self.brownout_observe(site, true);
+            served += 1;
+            let counts = if self.hedge_pol.is_none() {
+                true
+            } else {
+                match self.outstanding.get_mut(&item.req) {
+                    Some(rs) => {
+                        rs.remaining -= 1;
+                        let counts = !rs.done;
+                        if rs.done {
+                            self.hedges_lost += 1;
+                        } else {
+                            rs.done = true;
+                            if item.hedge {
+                                self.hedges_won += 1;
+                            }
+                        }
+                        if rs.remaining == 0 {
+                            self.outstanding.remove(&item.req);
+                        }
+                        counts
+                    }
+                    None => true,
+                }
+            };
+            if !counts {
+                continue;
+            }
             let e2e = (now - item.enq_us) as f64 / 1e3 + item.link_ms;
             worst = worst.max(e2e);
             self.completed += 1;
@@ -851,12 +1322,11 @@ impl<'a> Engine<'a> {
                 origin.cache.insert((item.model, item.cohort), now);
             }
         }
-        self.sites[site].served_here += drained as u64;
-        let gi = site * self.sc.models.len() + model;
+        self.sites[site].served_here += served;
         let p = &mut self.groups[gi][pod];
         p.busy = false;
         if let Some(c) = &p.ctrl {
-            c.observe(drained, p.q.len(), worst.max(total_ms), None);
+            c.observe(served as usize, p.q.len(), worst.max(total_ms), None);
         }
         self.pod_kick(site, model, pod);
     }
@@ -869,7 +1339,7 @@ impl<'a> Engine<'a> {
                 return; // stale deadline: the batch already dispatched
             }
             p.linger_armed = false;
-            if p.busy || p.retired || p.q.is_empty() {
+            if p.busy || p.retired || p.crashed || p.q.is_empty() {
                 return;
             }
         }
@@ -894,9 +1364,9 @@ impl<'a> Engine<'a> {
                 }
                 let (active, backlog) = {
                     let g = &self.groups[gi];
-                    let active = g.iter().filter(|p| !p.retired).count();
+                    let active = g.iter().filter(|p| !p.retired && !p.crashed).count();
                     let backlog: usize =
-                        g.iter().filter(|p| !p.retired).map(|p| p.q.len()).sum();
+                        g.iter().filter(|p| !p.retired && !p.crashed).map(|p| p.q.len()).sum();
                     (active.max(1), backlog)
                 };
                 let per = backlog as f64 / active as f64;
@@ -908,7 +1378,7 @@ impl<'a> Engine<'a> {
                 match decision {
                     Some(ScaleDirection::Up) if active < auto.max_pods => {
                         if let Some(p) =
-                            self.groups[gi].iter_mut().find(|p| p.retired)
+                            self.groups[gi].iter_mut().find(|p| p.retired && !p.crashed)
                         {
                             p.retired = false;
                         } else {
@@ -925,7 +1395,11 @@ impl<'a> Engine<'a> {
                             .enumerate()
                             .rev()
                             .find(|(_, p)| {
-                                !p.retired && !p.busy && !p.linger_armed && p.q.is_empty()
+                                !p.retired
+                                    && !p.crashed
+                                    && !p.busy
+                                    && !p.linger_armed
+                                    && p.q.is_empty()
                             })
                             .map(|(i, _)| i);
                         if let Some(i) = victim {
@@ -962,12 +1436,102 @@ impl<'a> Engine<'a> {
             }
         }
         for item in orphans {
-            self.route(item, true);
+            if let Placed::Full(item) = self.try_place(item, true, None) {
+                self.terminal_shed(&item);
+            }
         }
     }
 
     fn on_recover(&mut self, site: usize) {
         self.sites[site].up = true;
+    }
+
+    /// Injected pod crash: every pod at that per-model index dies
+    /// mid-whatever-it-was-doing.  In-flight batches become stale via
+    /// the epoch bump (their items fail or retry when `BatchDone`
+    /// fires); queued items are drained and re-placed immediately.
+    fn on_pod_crash(&mut self, site: usize, pod: usize, restart_us: Option<u64>) {
+        self.faults_injected += 1;
+        let nm = self.sc.models.len();
+        let mut orphans = Vec::new();
+        for model in 0..nm {
+            let gi = site * nm + model;
+            if let Some(p) = self.groups[gi].get_mut(pod) {
+                if p.crashed {
+                    continue;
+                }
+                p.crashed = true;
+                p.linger_armed = false;
+                if p.busy {
+                    p.epoch += 1;
+                    p.busy = false;
+                }
+                orphans.extend(p.q.drain(..));
+            }
+        }
+        for item in orphans {
+            if let Placed::Full(item) = self.try_place(item, true, None) {
+                self.terminal_shed(&item);
+            }
+        }
+        if let Some(at) = restart_us {
+            self.heap.schedule(at.max(self.clock.now_us()), Ev::PodRestart { site, pod });
+        }
+    }
+
+    /// A crashed pod rejoins with a clean queue and picks up new work.
+    fn on_pod_restart(&mut self, site: usize, pod: usize) {
+        let nm = self.sc.models.len();
+        for model in 0..nm {
+            let gi = site * nm + model;
+            if let Some(p) = self.groups[gi].get_mut(pod) {
+                p.crashed = false;
+            }
+        }
+    }
+
+    /// Link fault: inflate RTT and enable transit loss on both
+    /// directions of the pair, then re-rank routes.
+    fn on_link_degrade(&mut self, a: usize, b: usize, rtt_factor: f64, loss: f64) {
+        self.faults_injected += 1;
+        self.rtt[a][b] = self.sc.rtt_ms[a][b] * rtt_factor;
+        self.rtt[b][a] = self.sc.rtt_ms[b][a] * rtt_factor;
+        self.loss[a][b] = loss;
+        self.loss[b][a] = loss;
+        self.recompute_routes();
+    }
+
+    fn on_link_heal(&mut self, a: usize, b: usize) {
+        self.rtt[a][b] = self.sc.rtt_ms[a][b];
+        self.rtt[b][a] = self.sc.rtt_ms[b][a];
+        self.loss[a][b] = 0.0;
+        self.loss[b][a] = 0.0;
+        self.recompute_routes();
+    }
+
+    /// Partition: the pair becomes mutually unreachable until healed.
+    fn on_partition(&mut self, a: usize, b: usize, up: bool) {
+        if !up {
+            self.faults_injected += 1;
+        }
+        self.link_up[a][b] = up;
+        self.link_up[b][a] = up;
+        self.recompute_routes();
+    }
+
+    /// Brownout window tick: fold each site's recent failure rate into
+    /// its ladder level, then reschedule while inside the horizon.
+    fn on_brownout_tick(&mut self) {
+        let now_ms = self.clock.now_ms();
+        if let Some(b) = &mut self.brownouts {
+            for site in b.iter_mut() {
+                site.tick(now_ms);
+            }
+        }
+        let next = self.clock.now_us() + dur_us(BROWNOUT_TICK_MS);
+        if next <= self.horizon_us {
+            self.heap.schedule(next, Ev::BrownoutTick);
+        }
     }
 
     fn run(mut self) -> DesReport {
@@ -994,19 +1558,48 @@ impl<'a> Engine<'a> {
                 Ev::LingerFire { site, model, pod, gen } => {
                     self.on_linger_fire(site, model, pod, gen)
                 }
-                Ev::BatchDone { site, model, pod, total_ms, batch } => {
-                    self.on_batch_done(site, model, pod, total_ms, batch)
+                Ev::BatchDone { site, model, pod, total_ms, epoch, batch } => {
+                    self.on_batch_done(site, model, pod, total_ms, epoch, batch)
                 }
                 Ev::AutoscaleTick => self.on_autoscale_tick(),
                 Ev::Fail { site } => self.on_fail(site),
                 Ev::Recover { site } => self.on_recover(site),
+                Ev::PodCrash { site, pod, restart_us } => {
+                    self.on_pod_crash(site, pod, restart_us)
+                }
+                Ev::PodRestart { site, pod } => self.on_pod_restart(site, pod),
+                Ev::StragglerStart { site, factor } => {
+                    self.faults_injected += 1;
+                    self.straggle[site] = factor;
+                }
+                Ev::StragglerEnd { site } => self.straggle[site] = 1.0,
+                Ev::LinkDegrade { a, b, rtt_factor, loss } => {
+                    self.on_link_degrade(a, b, rtt_factor, loss)
+                }
+                Ev::LinkHeal { a, b } => self.on_link_heal(a, b),
+                Ev::PartitionStart { a, b } => self.on_partition(a, b, false),
+                Ev::PartitionHeal { a, b } => self.on_partition(a, b, true),
+                Ev::FlapDown { site } => {
+                    self.faults_injected += 1;
+                    self.on_fail(site);
+                }
+                Ev::FlapUp { site } => self.on_recover(site),
+                Ev::Retry { item } => self.on_retry(item),
+                Ev::HedgeFire { req, item } => self.on_hedge_fire(req, item),
+                Ev::BrownoutTick => self.on_brownout_tick(),
             }
         }
         self.into_report()
     }
 
     fn into_report(mut self) -> DesReport {
+        debug_assert!(
+            self.outstanding.is_empty(),
+            "drained heap with unresolved requests: every admitted request \
+             must reach exactly one terminal verdict"
+        );
         let nm = self.sc.models.len();
+        let end_ms = self.clock.now_us() as f64 / 1e3;
         let mut sites = Vec::with_capacity(self.sc.sites.len());
         for (i, spec) in self.sc.sites.iter().enumerate() {
             let st = &mut self.sites[i];
@@ -1015,7 +1608,7 @@ impl<'a> Engine<'a> {
             let mut dispatches = 0u64;
             for model in 0..nm {
                 for p in &self.groups[i * nm + model] {
-                    if !p.retired {
+                    if !p.retired && !p.crashed {
                         pods_end += 1;
                     }
                     dispatches += p.dispatches;
@@ -1031,31 +1624,55 @@ impl<'a> Engine<'a> {
                 cache_hits: st.cache_hits,
                 shed: st.shed,
                 quota_shed: st.quota_shed,
+                failed: st.failed,
+                retries: st.retries,
                 served_here: st.served_here,
                 spillover_in: st.spillover_in,
                 pods_end,
                 dispatches,
                 scale_ups: st.scale_ups,
                 scale_downs: st.scale_downs,
+                breaker_trips: self.breakers.as_ref().map(|b| b[i].trips()).unwrap_or(0),
+                brownout_ms: self
+                    .brownouts
+                    .as_ref()
+                    .map(|b| b[i].degraded_ms(end_ms))
+                    .unwrap_or(0.0),
                 p50_ms,
                 p99_ms,
                 mean_ms,
             });
         }
         let (p50_ms, p99_ms, mean_ms, max_ms) = percentiles(&mut self.e2e);
+        let breaker_trips = sites.iter().map(|s| s.breaker_trips).sum();
+        let breakers_open_end = self
+            .breakers
+            .as_ref()
+            .map(|b| b.iter().filter(|c| !c.is_closed()).count() as u64)
+            .unwrap_or(0);
+        let brownout_ms = sites.iter().map(|s| s.brownout_ms).sum();
         DesReport {
             scenario: self.sc.name.clone(),
             seed: self.sc.cfg.seed,
             horizon_s: self.sc.horizon_s,
-            virtual_end_ms: self.clock.now_us() as f64 / 1e3,
+            virtual_end_ms: end_ms,
             events: self.events,
             submitted: self.submitted,
             completed: self.completed,
             cache_hits: self.cache_hits,
             shed: self.shed,
             quota_shed: self.quota_shed,
+            failed: self.failed,
+            retries: self.retries,
             spilled: self.spilled,
             rerouted: self.rerouted,
+            hedges_launched: self.hedges_launched,
+            hedges_won: self.hedges_won,
+            hedges_lost: self.hedges_lost,
+            breaker_trips,
+            breakers_open_end,
+            brownout_ms,
+            faults_injected: self.faults_injected,
             p50_ms,
             p99_ms,
             mean_ms,
@@ -1075,6 +1692,8 @@ impl Pod {
             q: VecDeque::new(),
             busy: false,
             retired: false,
+            crashed: false,
+            epoch: 0,
             linger_armed: false,
             linger_gen: 0,
             rng: Rng::new(seed),
@@ -1127,6 +1746,10 @@ pub struct DesSiteReport {
     pub shed: u64,
     /// Origin-attributed quota sheds.
     pub quota_shed: u64,
+    /// Origin-attributed terminal failures (retries exhausted).
+    pub failed: u64,
+    /// Origin-attributed retry attempts scheduled.
+    pub retries: u64,
     /// Requests executed at this site (any origin).
     pub served_here: u64,
     /// Requests that arrived here by spillover or failure reroute.
@@ -1139,6 +1762,10 @@ pub struct DesSiteReport {
     pub scale_ups: u64,
     /// Autoscaler scale-down actions here.
     pub scale_downs: u64,
+    /// Circuit-breaker trips at this site.
+    pub breaker_trips: u64,
+    /// Virtual ms this site spent in brownout (any rung ≥ 1).
+    pub brownout_ms: f64,
     /// Median end-to-end latency of this origin's demand, ms.
     pub p50_ms: f64,
     /// p99 end-to-end latency of this origin's demand, ms.
@@ -1174,10 +1801,29 @@ pub struct DesReport {
     pub shed: u64,
     /// Requests shed by the admission quota.
     pub quota_shed: u64,
+    /// Requests that reached a terminal failure verdict (crash or
+    /// transit-loss victims whose retries were exhausted).
+    pub failed: u64,
+    /// Retry attempts scheduled (not a terminal verdict).
+    pub retries: u64,
     /// Requests that executed off their origin site (spillover).
     pub spilled: u64,
     /// Queued requests rerouted by a site-loss drill.
     pub rerouted: u64,
+    /// Hedge duplicates launched.
+    pub hedges_launched: u64,
+    /// Requests whose hedge copy finished first.
+    pub hedges_won: u64,
+    /// Racing copies cancelled or discarded after another copy won.
+    pub hedges_lost: u64,
+    /// Circuit-breaker trips across all sites.
+    pub breaker_trips: u64,
+    /// Breakers not back in `Closed` at scenario end (0 = recovered).
+    pub breakers_open_end: u64,
+    /// Total virtual ms spent in brownout, summed over sites.
+    pub brownout_ms: f64,
+    /// Fault-plan events injected (onsets, not heals).
+    pub faults_injected: u64,
     /// Median end-to-end latency, ms (queue wait + service + link RTT).
     pub p50_ms: f64,
     /// p99 end-to-end latency, ms.
@@ -1191,14 +1837,16 @@ pub struct DesReport {
 }
 
 impl DesReport {
-    /// Request conservation: every offered request is accounted exactly
-    /// once — `submitted = completed + cache_hits + shed + quota_shed`,
-    /// globally and per origin site.
+    /// Request conservation — the exactly-one-terminal-verdict
+    /// invariant: every offered request is accounted exactly once —
+    /// `submitted = completed + cache_hits + shed + quota_shed +
+    /// failed`, globally and per origin site, even under fault storms
+    /// (retries and hedge duplicates never double-count).
     pub fn conservation_holds(&self) -> bool {
         let global = self.submitted
-            == self.completed + self.cache_hits + self.shed + self.quota_shed;
+            == self.completed + self.cache_hits + self.shed + self.quota_shed + self.failed;
         let per_site = self.sites.iter().all(|s| {
-            s.submitted == s.completed + s.cache_hits + s.shed + s.quota_shed
+            s.submitted == s.completed + s.cache_hits + s.shed + s.quota_shed + s.failed
         });
         global && per_site
     }
@@ -1220,12 +1868,16 @@ impl DesReport {
                     ("cache_hits", n(site.cache_hits as f64)),
                     ("shed", n(site.shed as f64)),
                     ("quota_shed", n(site.quota_shed as f64)),
+                    ("failed", n(site.failed as f64)),
+                    ("retries", n(site.retries as f64)),
                     ("served_here", n(site.served_here as f64)),
                     ("spillover_in", n(site.spillover_in as f64)),
                     ("pods_end", n(site.pods_end as f64)),
                     ("dispatches", n(site.dispatches as f64)),
                     ("scale_ups", n(site.scale_ups as f64)),
                     ("scale_downs", n(site.scale_downs as f64)),
+                    ("breaker_trips", n(site.breaker_trips as f64)),
+                    ("brownout_ms", n(site.brownout_ms)),
                     ("p50_ms", n(site.p50_ms)),
                     ("p99_ms", n(site.p99_ms)),
                     ("mean_ms", n(site.mean_ms)),
@@ -1243,8 +1895,22 @@ impl DesReport {
             ("cache_hits", n(self.cache_hits as f64)),
             ("shed", n(self.shed as f64)),
             ("quota_shed", n(self.quota_shed as f64)),
+            ("failed", n(self.failed as f64)),
+            ("retries", n(self.retries as f64)),
             ("spilled", n(self.spilled as f64)),
             ("rerouted", n(self.rerouted as f64)),
+            (
+                "resilience",
+                obj(vec![
+                    ("hedges_launched", n(self.hedges_launched as f64)),
+                    ("hedges_won", n(self.hedges_won as f64)),
+                    ("hedges_lost", n(self.hedges_lost as f64)),
+                    ("breaker_trips", n(self.breaker_trips as f64)),
+                    ("breakers_open_end", n(self.breakers_open_end as f64)),
+                    ("brownout_ms", n(self.brownout_ms)),
+                    ("faults_injected", n(self.faults_injected as f64)),
+                ]),
+            ),
             (
                 "latency_ms",
                 obj(vec![
@@ -1339,6 +2005,7 @@ mod tests {
             rtt_ms: vec![vec![0.0, 18.0], vec![18.0, 0.0]],
             trace: None,
             drills: Vec::new(),
+            faults: FaultPlan::default(),
             cfg: DesConfig { seed, queue_capacity: 4, max_batch: 4, ..Default::default() },
         }
     }
@@ -1397,6 +2064,143 @@ mod tests {
     }
 
     #[test]
+    fn pod_crash_mid_batch_conserves_with_retries() {
+        let mut sc = tiny_scenario(11);
+        sc.faults = FaultPlan {
+            name: "crash".into(),
+            faults: vec![Fault::PodCrash {
+                at_s: 5.0,
+                site: "edge".into(),
+                pod: 0,
+                restart_s: Some(12.0),
+            }],
+        };
+        sc.cfg.resilience.retry = Some(RetryPolicy::default());
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds(), "crash victims must still reach one verdict");
+        assert!(r.faults_injected >= 1);
+        assert!(
+            r.retries > 0 || r.failed > 0 || r.rerouted > 0,
+            "a crash at peak load must disturb something"
+        );
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+    }
+
+    #[test]
+    fn link_loss_and_partition_conserve() {
+        let mut sc = tiny_scenario(13);
+        // Force spillover so the degraded link actually carries traffic.
+        sc.faults = FaultPlan {
+            name: "links".into(),
+            faults: vec![
+                Fault::LinkDegrade {
+                    at_s: 2.0,
+                    until_s: 8.0,
+                    a: "edge".into(),
+                    b: "cloud".into(),
+                    rtt_factor: 4.0,
+                    loss: 0.3,
+                },
+                Fault::Partition {
+                    at_s: 10.0,
+                    heal_s: 14.0,
+                    a: "edge".into(),
+                    b: "cloud".into(),
+                },
+            ],
+        };
+        sc.cfg.resilience.retry = Some(RetryPolicy::default());
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+    }
+
+    #[test]
+    fn breaker_trips_and_recovers_after_flap() {
+        let mut sc = tiny_scenario(17);
+        // Crash the only edge pod with no restart until late: placements
+        // spill to the cloud; the crash victims trip the edge breaker.
+        sc.faults = FaultPlan {
+            name: "crash-no-restart".into(),
+            faults: vec![Fault::PodCrash {
+                at_s: 3.0,
+                site: "edge".into(),
+                pod: 0,
+                restart_s: Some(15.0),
+            }],
+        };
+        sc.cfg.resilience.retry = Some(RetryPolicy::default());
+        sc.cfg.resilience.breaker = Some(crate::fabric::faults::BreakerConfig {
+            consecutive_failures: 2,
+            open_ms: 2_000.0,
+            half_open_probes: 1,
+        });
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        assert_eq!(
+            r.breakers_open_end, 0,
+            "breakers must close again once the fault clears"
+        );
+    }
+
+    #[test]
+    fn brownout_ladder_engages_under_sustained_failure() {
+        let mut sc = tiny_scenario(19);
+        sc.faults = FaultPlan {
+            name: "lossy".into(),
+            faults: vec![Fault::LinkDegrade {
+                at_s: 2.0,
+                until_s: 16.0,
+                a: "edge".into(),
+                b: "cloud".into(),
+                rtt_factor: 2.0,
+                loss: 0.5,
+            }],
+        };
+        // Tiny queues so edge demand constantly spills over the lossy
+        // link; a low enter threshold makes the ladder engage.
+        sc.cfg.queue_capacity = 2;
+        sc.cfg.resilience.retry = Some(RetryPolicy::default());
+        sc.cfg.resilience.brownout = Some(crate::fabric::faults::BrownoutConfig {
+            enter_failure_rate: 0.05,
+            exit_failure_rate: 0.01,
+            max_level: 3,
+        });
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        assert!(r.brownout_ms > 0.0, "sustained transit loss must engage the ladder");
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+    }
+
+    #[test]
+    fn hedging_duplicates_and_conserves() {
+        let mut sc = tiny_scenario(23);
+        sc.faults = FaultPlan {
+            name: "straggle".into(),
+            faults: vec![Fault::Straggler {
+                at_s: 2.0,
+                until_s: 18.0,
+                site: "edge".into(),
+                factor: 8.0,
+            }],
+        };
+        sc.cfg.resilience.hedge = Some(HedgePolicy::default());
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds(), "first-wins hedging must not double-count");
+        assert!(r.hedges_launched > 0, "an 8x straggler must cross the EWMA threshold");
+        assert_eq!(
+            r.hedges_won + r.hedges_lost > 0,
+            r.hedges_launched > 0,
+            "launched hedges resolve as wins or losses"
+        );
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+    }
+
+    #[test]
     fn validation_rejects_degenerate_scenarios() {
         let mut sc = tiny_scenario(1);
         sc.sites.clear();
@@ -1411,5 +2215,27 @@ mod tests {
         let mut sc = tiny_scenario(1);
         sc.cfg.queue_capacity = 0;
         assert!(run_des(&sc).is_err(), "zero queue");
+        let mut sc = tiny_scenario(1);
+        sc.faults = FaultPlan {
+            name: "bad".into(),
+            faults: vec![Fault::PodCrash {
+                at_s: 1.0,
+                site: "edge".into(),
+                pod: 9,
+                restart_s: None,
+            }],
+        };
+        assert!(run_des(&sc).is_err(), "crash target outside the initial pod set");
+        let mut sc = tiny_scenario(1);
+        sc.faults = FaultPlan {
+            name: "bad".into(),
+            faults: vec![Fault::Partition {
+                at_s: 1.0,
+                heal_s: 2.0,
+                a: "edge".into(),
+                b: "edge".into(),
+            }],
+        };
+        assert!(run_des(&sc).is_err(), "self-partition rejected");
     }
 }

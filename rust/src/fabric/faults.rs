@@ -1,0 +1,875 @@
+//! Deterministic fault injection and resilience policy — the chaos
+//! layer of the fabric.
+//!
+//! Two halves, one module.  The *attack* half is a seeded [`FaultPlan`]:
+//! a declarative list of partial failures — pod crashes mid-batch,
+//! latency stragglers, link degradation and partitions, whole-site
+//! flaps — that the virtual-time engine ([`super::des`]) schedules on
+//! its event heap and the threaded fabric replays on a scaled timer.
+//! The *defense* half is [`ResilienceConfig`]: per-request deadlines,
+//! bounded retry with exponential backoff + deterministic jitter
+//! ([`RetryPolicy`]), tail-latency hedging after an EWMA-derived
+//! straggler threshold ([`HedgePolicy`] + [`EwmaLatency`]), a
+//! closed→open→half-open [`CircuitBreaker`] per pod/site, and a
+//! [`Brownout`] ladder that degrades service under sustained failure
+//! and restores it on recovery.
+//!
+//! Everything here is a pure state machine: no clock, no threads, no
+//! I/O.  Callers feed in `now_ms` from whatever [`Clock`] they run on
+//! (wall or virtual), which is what lets one implementation back both
+//! serving paths — and keeps the DES bit-reproducible.
+//!
+//! The load-bearing invariant the resilience half exists to uphold:
+//! **every admitted request reaches exactly one terminal verdict**
+//! (completed, cached, shed, quota-shed, or failed) — nothing lost,
+//! nothing double-completed, even when crashes, partitions and a
+//! redeploy race mid-storm.  The DES enforces it through its extended
+//! conservation check; the threaded path through fan-out accounting.
+//!
+//! [`Clock`]: super::des::Clock
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+// ───────────────────────────── fault plans ─────────────────────────
+
+/// One scheduled partial failure.  Times are virtual seconds from
+/// scenario start (the threaded path scales them by its time factor);
+/// sites are named so one plan applies to any scenario that hosts them.
+#[derive(Debug, Clone)]
+pub enum Fault {
+    /// Pod `pod` (index within each model group) at `site` crashes at
+    /// `at_s`: its in-flight batch fails mid-service (items retried or
+    /// failed with a typed verdict), its queue is re-routed, and the
+    /// pod rejoins at `restart_s` if given.
+    PodCrash {
+        /// Crash time, virtual seconds.
+        at_s: f64,
+        /// Site whose pod crashes.
+        site: String,
+        /// Pod index within every model group at the site.
+        pod: usize,
+        /// Optional restart time, virtual seconds (`None` = stays down).
+        restart_s: Option<f64>,
+    },
+    /// Every pod at `site` serves `factor`× slower in `[at_s, until_s)`
+    /// — the classic latency straggler.
+    Straggler {
+        /// Onset, virtual seconds.
+        at_s: f64,
+        /// End of the slowdown, virtual seconds.
+        until_s: f64,
+        /// Straggling site.
+        site: String,
+        /// Multiplicative service-time inflation (> 1).
+        factor: f64,
+    },
+    /// The `a`↔`b` link degrades in `[at_s, until_s)`: RTT inflated by
+    /// `rtt_factor`, and each transit loses independently with
+    /// probability `loss` (drawn from the plan's seeded chaos stream).
+    LinkDegrade {
+        /// Onset, virtual seconds.
+        at_s: f64,
+        /// Healing time, virtual seconds.
+        until_s: f64,
+        /// One endpoint site.
+        a: String,
+        /// Other endpoint site.
+        b: String,
+        /// Multiplicative RTT inflation (≥ 1).
+        rtt_factor: f64,
+        /// Per-transit loss probability in `[0, 1)`.
+        loss: f64,
+    },
+    /// The `a`↔`b` link is fully partitioned in `[at_s, heal_s)`:
+    /// unreachable in both directions until it heals.
+    Partition {
+        /// Partition time, virtual seconds.
+        at_s: f64,
+        /// Healing time, virtual seconds.
+        heal_s: f64,
+        /// One endpoint site.
+        a: String,
+        /// Other endpoint site.
+        b: String,
+    },
+    /// The whole site drops at `at_s` and recovers at `recover_s` —
+    /// a flap racing whatever replanning the control plane attempts.
+    SiteFlap {
+        /// Loss time, virtual seconds.
+        at_s: f64,
+        /// Recovery time, virtual seconds.
+        recover_s: f64,
+        /// Flapping site.
+        site: String,
+    },
+}
+
+/// A named, ordered set of [`Fault`]s — the unit the CLI's `--faults`
+/// flag and the canned chaos scenarios pass around.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Plan name (echoed in reports and error messages).
+    pub name: String,
+    /// The faults, in declaration order (the engine sorts by time).
+    pub faults: Vec<Fault>,
+}
+
+/// A typed fault-plan parse failure: which entry, and why.
+#[derive(Debug, Clone)]
+pub struct FaultParseError {
+    /// 1-based entry index within the `;`-separated spec.
+    pub entry: usize,
+    /// What was wrong.
+    pub message: String,
+}
+
+impl fmt::Display for FaultParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fault plan entry {}: {}", self.entry, self.message)
+    }
+}
+
+impl std::error::Error for FaultParseError {}
+
+fn num(entry: usize, what: &str, v: &str) -> Result<f64, FaultParseError> {
+    v.parse().map_err(|_| FaultParseError {
+        entry,
+        message: format!("bad {what} {v:?} (expected a number)"),
+    })
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Resolve a `--faults` argument: the name of a canned plan
+    /// (currently `site-loss-storm`) or an inline spec for
+    /// [`parse`](Self::parse).
+    pub fn named(spec: &str) -> Result<FaultPlan, FaultParseError> {
+        match spec {
+            "site-loss-storm" => Ok(site_loss_storm_plan()),
+            _ => FaultPlan::parse(spec),
+        }
+    }
+
+    /// Parse an inline plan: `;`-separated entries, each `:`-separated.
+    ///
+    /// - `crash:SITE:POD:AT[:RESTART]`
+    /// - `straggle:SITE:AT:UNTIL:FACTOR`
+    /// - `link:A:B:AT:UNTIL:RTT_FACTOR:LOSS`
+    /// - `partition:A:B:AT:HEAL`
+    /// - `flap:SITE:AT:RECOVER`
+    pub fn parse(spec: &str) -> Result<FaultPlan, FaultParseError> {
+        let mut faults = Vec::new();
+        for (i, entry) in spec.split(';').enumerate() {
+            let entry_no = i + 1;
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = entry.split(':').collect();
+            let err = |message: String| FaultParseError { entry: entry_no, message };
+            let fault = match parts[0] {
+                "crash" => {
+                    if parts.len() < 4 || parts.len() > 5 {
+                        return Err(err("crash:SITE:POD:AT[:RESTART]".into()));
+                    }
+                    let pod = parts[2].parse().map_err(|_| FaultParseError {
+                        entry: entry_no,
+                        message: format!("bad pod index {:?}", parts[2]),
+                    })?;
+                    Fault::PodCrash {
+                        site: parts[1].to_string(),
+                        pod,
+                        at_s: num(entry_no, "crash time", parts[3])?,
+                        restart_s: match parts.get(4) {
+                            Some(v) => Some(num(entry_no, "restart time", v)?),
+                            None => None,
+                        },
+                    }
+                }
+                "straggle" => {
+                    if parts.len() != 5 {
+                        return Err(err("straggle:SITE:AT:UNTIL:FACTOR".into()));
+                    }
+                    Fault::Straggler {
+                        site: parts[1].to_string(),
+                        at_s: num(entry_no, "onset", parts[2])?,
+                        until_s: num(entry_no, "end", parts[3])?,
+                        factor: num(entry_no, "factor", parts[4])?,
+                    }
+                }
+                "link" => {
+                    if parts.len() != 7 {
+                        return Err(err("link:A:B:AT:UNTIL:RTT_FACTOR:LOSS".into()));
+                    }
+                    Fault::LinkDegrade {
+                        a: parts[1].to_string(),
+                        b: parts[2].to_string(),
+                        at_s: num(entry_no, "onset", parts[3])?,
+                        until_s: num(entry_no, "end", parts[4])?,
+                        rtt_factor: num(entry_no, "rtt factor", parts[5])?,
+                        loss: num(entry_no, "loss", parts[6])?,
+                    }
+                }
+                "partition" => {
+                    if parts.len() != 5 {
+                        return Err(err("partition:A:B:AT:HEAL".into()));
+                    }
+                    Fault::Partition {
+                        a: parts[1].to_string(),
+                        b: parts[2].to_string(),
+                        at_s: num(entry_no, "partition time", parts[3])?,
+                        heal_s: num(entry_no, "heal time", parts[4])?,
+                    }
+                }
+                "flap" => {
+                    if parts.len() != 4 {
+                        return Err(err("flap:SITE:AT:RECOVER".into()));
+                    }
+                    Fault::SiteFlap {
+                        site: parts[1].to_string(),
+                        at_s: num(entry_no, "loss time", parts[2])?,
+                        recover_s: num(entry_no, "recovery time", parts[3])?,
+                    }
+                }
+                other => {
+                    return Err(err(format!(
+                        "unknown fault kind {other:?} \
+                         (crash|straggle|link|partition|flap)"
+                    )))
+                }
+            };
+            validate(entry_no, &fault)?;
+            faults.push(fault);
+        }
+        Ok(FaultPlan { name: "inline".into(), faults })
+    }
+}
+
+fn validate(entry: usize, f: &Fault) -> Result<(), FaultParseError> {
+    let err = |message: String| Err(FaultParseError { entry, message });
+    match f {
+        Fault::PodCrash { at_s, restart_s, .. } => {
+            if !(*at_s >= 0.0) {
+                return err(format!("crash time must be >= 0, got {at_s}"));
+            }
+            if let Some(r) = restart_s {
+                if !(*r > *at_s) {
+                    return err(format!("restart {r} must come after the crash {at_s}"));
+                }
+            }
+        }
+        Fault::Straggler { at_s, until_s, factor, .. } => {
+            if !(*at_s >= 0.0 && *until_s > *at_s) {
+                return err(format!("need 0 <= onset < end, got {at_s}..{until_s}"));
+            }
+            if !(*factor > 1.0) {
+                return err(format!("straggler factor must exceed 1, got {factor}"));
+            }
+        }
+        Fault::LinkDegrade { at_s, until_s, rtt_factor, loss, .. } => {
+            if !(*at_s >= 0.0 && *until_s > *at_s) {
+                return err(format!("need 0 <= onset < end, got {at_s}..{until_s}"));
+            }
+            if !(*rtt_factor >= 1.0) {
+                return err(format!("rtt factor must be >= 1, got {rtt_factor}"));
+            }
+            if !(*loss >= 0.0 && *loss < 1.0) {
+                return err(format!("loss must be in [0, 1), got {loss}"));
+            }
+        }
+        Fault::Partition { at_s, heal_s, .. } => {
+            if !(*at_s >= 0.0 && *heal_s > *at_s) {
+                return err(format!("need 0 <= partition < heal, got {at_s}..{heal_s}"));
+            }
+        }
+        Fault::SiteFlap { at_s, recover_s, .. } => {
+            if !(*at_s >= 0.0 && *recover_s > *at_s) {
+                return err(format!("need 0 <= loss < recovery, got {at_s}..{recover_s}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The canned failure storm the `site-loss-storm` scenario and the
+/// BENCH `resilience` verdicts ride: a straggling edge, a far-edge pod
+/// crash with restart, a cloud↔far-edge partition, a degraded
+/// edge↔cloud link, and a far-edge flap — all overlapping the
+/// scenario's flash crowd and racing its own site-loss drill and the
+/// autoscaler's redeploys.
+pub fn site_loss_storm_plan() -> FaultPlan {
+    FaultPlan {
+        name: "site-loss-storm".into(),
+        faults: vec![
+            Fault::Straggler {
+                at_s: 620.0,
+                until_s: 900.0,
+                site: "edge".into(),
+                factor: 6.0,
+            },
+            Fault::PodCrash {
+                at_s: 650.0,
+                site: "far-edge".into(),
+                pod: 0,
+                restart_s: Some(760.0),
+            },
+            Fault::Partition {
+                at_s: 700.0,
+                heal_s: 820.0,
+                a: "cloud".into(),
+                b: "far-edge".into(),
+            },
+            Fault::LinkDegrade {
+                at_s: 840.0,
+                until_s: 980.0,
+                a: "edge".into(),
+                b: "cloud".into(),
+                rtt_factor: 3.0,
+                loss: 0.05,
+            },
+            Fault::SiteFlap {
+                at_s: 950.0,
+                recover_s: 1050.0,
+                site: "far-edge".into(),
+            },
+        ],
+    }
+}
+
+// ──────────────────────────── retry policy ─────────────────────────
+
+/// Bounded retry with exponential backoff and deterministic jitter.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt fails (0 disables retry).
+    pub max_retries: u32,
+    /// First backoff, ms; doubles per retry.
+    pub base_ms: f64,
+    /// Backoff ceiling, ms.
+    pub max_backoff_ms: f64,
+    /// Per-request deadline from admission, ms (`0` = none): once
+    /// exceeded, the next failure is terminal instead of retried.
+    pub deadline_ms: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, base_ms: 5.0, max_backoff_ms: 200.0, deadline_ms: 0.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `retry` (1-based): exponential,
+    /// capped, with multiplicative jitter in `[0.5, 1.0)` drawn from
+    /// the caller's seeded stream.
+    pub fn backoff_ms(&self, retry: u32, rng: &mut Rng) -> f64 {
+        let exp = self.base_ms * 2f64.powi(retry.saturating_sub(1).min(16) as i32);
+        exp.min(self.max_backoff_ms) * rng.range_f64(0.5, 1.0)
+    }
+
+    /// Whether a request admitted at `enq_ms` may still retry at
+    /// `now_ms` for retry number `retry`.
+    pub fn may_retry(&self, retry: u32, enq_ms: f64, now_ms: f64) -> bool {
+        retry <= self.max_retries
+            && (self.deadline_ms <= 0.0 || now_ms - enq_ms < self.deadline_ms)
+    }
+}
+
+// ──────────────────────────── hedging ──────────────────────────────
+
+/// Tail-latency hedging: duplicate a request to the next-ranked
+/// pod/site once it has been outstanding past a straggler threshold;
+/// first copy to finish wins, the loser is cancelled and accounted.
+#[derive(Debug, Clone)]
+pub struct HedgePolicy {
+    /// Fixed straggler threshold, ms — `0` derives it from the service
+    /// EWMA instead ([`EwmaLatency::threshold_ms`]).
+    pub threshold_ms: f64,
+    /// EWMA multiple that counts as straggling when `threshold_ms` is 0.
+    pub ewma_multiplier: f64,
+}
+
+impl Default for HedgePolicy {
+    fn default() -> Self {
+        HedgePolicy { threshold_ms: 0.0, ewma_multiplier: 3.0 }
+    }
+}
+
+/// Exponentially weighted service-latency estimate feeding the hedge
+/// threshold — the same smoothing shape the router's feedback uses.
+#[derive(Debug, Clone)]
+pub struct EwmaLatency {
+    /// Current estimate, ms (meaningless until `seen`).
+    pub ewma_ms: f64,
+    alpha: f64,
+    seen: bool,
+}
+
+impl EwmaLatency {
+    /// An estimator with smoothing factor `alpha` in `(0, 1]`.
+    pub fn new(alpha: f64) -> EwmaLatency {
+        EwmaLatency { ewma_ms: 0.0, alpha: alpha.clamp(1e-3, 1.0), seen: false }
+    }
+
+    /// Fold one observed service latency into the estimate.
+    pub fn observe(&mut self, ms: f64) {
+        if self.seen {
+            self.ewma_ms += self.alpha * (ms - self.ewma_ms);
+        } else {
+            self.ewma_ms = ms;
+            self.seen = true;
+        }
+    }
+
+    /// The hedge-fire threshold under `pol`: the fixed threshold when
+    /// set, otherwise `ewma × multiplier` — infinite (never hedge)
+    /// before the first observation.
+    pub fn threshold_ms(&self, pol: &HedgePolicy) -> f64 {
+        if pol.threshold_ms > 0.0 {
+            pol.threshold_ms
+        } else if self.seen {
+            self.ewma_ms * pol.ewma_multiplier
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+// ─────────────────────────── circuit breaker ───────────────────────
+
+/// Breaker configuration: when to trip, how long to stay open, how
+/// many probes half-open admits.
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip the breaker open.
+    pub consecutive_failures: u32,
+    /// How long the breaker stays open before probing, ms.
+    pub open_ms: f64,
+    /// Probe requests admitted while half-open; one success closes,
+    /// any failure re-trips.
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { consecutive_failures: 3, open_ms: 5_000.0, half_open_probes: 1 }
+    }
+}
+
+/// Breaker state, in the canonical closed→open→half-open cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: all traffic admitted.
+    Closed,
+    /// Tripped: all traffic refused until `open_ms` elapses.
+    Open,
+    /// Probing: a bounded number of requests admitted; one success
+    /// closes the breaker, any failure re-trips it.
+    HalfOpen,
+}
+
+/// A per-pod/per-site circuit breaker.  Transitions are lazy — driven
+/// by [`allow`](Self::allow)/[`on_failure`](Self::on_failure) calls
+/// with the caller's clock — so the same machine runs on wall and
+/// virtual time.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive: u32,
+    opened_at_ms: f64,
+    probes_left: u32,
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    /// A closed breaker under `cfg`.
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive: 0,
+            opened_at_ms: 0.0,
+            probes_left: 0,
+            trips: 0,
+        }
+    }
+
+    /// May a request be routed through this breaker at `now_ms`?
+    /// Open breakers transition to half-open once `open_ms` has
+    /// elapsed; half-open admits up to `half_open_probes` requests.
+    pub fn allow(&mut self, now_ms: f64) -> bool {
+        if self.state == BreakerState::Open {
+            if now_ms - self.opened_at_ms >= self.cfg.open_ms {
+                self.state = BreakerState::HalfOpen;
+                self.probes_left = self.cfg.half_open_probes.max(1);
+            } else {
+                return false;
+            }
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => {
+                if self.probes_left > 0 {
+                    self.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::Open => unreachable!("handled above"),
+        }
+    }
+
+    /// Record a success: closes a half-open breaker, clears the
+    /// failure streak.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        if self.state == BreakerState::HalfOpen {
+            self.state = BreakerState::Closed;
+        }
+    }
+
+    /// Record a failure at `now_ms`: re-trips a half-open breaker
+    /// immediately, trips a closed one after the configured streak.
+    pub fn on_failure(&mut self, now_ms: f64) {
+        match self.state {
+            BreakerState::HalfOpen => self.trip(now_ms),
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= self.cfg.consecutive_failures {
+                    self.trip(now_ms);
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    fn trip(&mut self, now_ms: f64) {
+        self.state = BreakerState::Open;
+        self.opened_at_ms = now_ms;
+        self.consecutive = 0;
+        self.probes_left = 0;
+        self.trips += 1;
+    }
+
+    /// Current state (lazy: an open breaker past its window still
+    /// reads `Open` until the next [`allow`](Self::allow)).
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Times this breaker has tripped open.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// True when the breaker is closed (healthy).
+    pub fn is_closed(&self) -> bool {
+        self.state == BreakerState::Closed
+    }
+}
+
+// ───────────────────────────── brownout ────────────────────────────
+
+/// Brownout ladder configuration: windowed failure-rate thresholds for
+/// stepping degradation up and down.
+#[derive(Debug, Clone)]
+pub struct BrownoutConfig {
+    /// Window failure rate at or above which the ladder steps up.
+    pub enter_failure_rate: f64,
+    /// Window failure rate at or below which the ladder steps down.
+    pub exit_failure_rate: f64,
+    /// Deepest degradation level (1 = smaller batches, 2 = + cheaper
+    /// variant, 3 = + shed lowest-priority demand).
+    pub max_level: u8,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig { enter_failure_rate: 0.2, exit_failure_rate: 0.02, max_level: 3 }
+    }
+}
+
+/// Brownout state for one site/fleet: observations accumulate into the
+/// current window; each [`tick`](Self::tick) converts the window's
+/// failure rate into at most one ladder step.  Time spent at any
+/// degraded level accumulates into `total_ms`.
+#[derive(Debug, Clone)]
+pub struct Brownout {
+    cfg: BrownoutConfig,
+    level: u8,
+    ok: u64,
+    err: u64,
+    entered_at_ms: f64,
+    total_ms: f64,
+}
+
+impl Brownout {
+    /// A healthy (level 0) ladder under `cfg`.
+    pub fn new(cfg: BrownoutConfig) -> Brownout {
+        Brownout { cfg, level: 0, ok: 0, err: 0, entered_at_ms: 0.0, total_ms: 0.0 }
+    }
+
+    /// Record one request outcome into the current window.
+    pub fn observe(&mut self, ok: bool) {
+        if ok {
+            self.ok += 1;
+        } else {
+            self.err += 1;
+        }
+    }
+
+    /// Close the current window at `now_ms` and step the ladder at
+    /// most one level; returns the level now in force.  An empty
+    /// window counts as healthy (rate 0) so recovery is automatic once
+    /// failures stop.
+    pub fn tick(&mut self, now_ms: f64) -> u8 {
+        let total = self.ok + self.err;
+        let rate = if total == 0 { 0.0 } else { self.err as f64 / total as f64 };
+        if rate >= self.cfg.enter_failure_rate && self.level < self.cfg.max_level {
+            if self.level == 0 {
+                self.entered_at_ms = now_ms;
+            }
+            self.level += 1;
+        } else if rate <= self.cfg.exit_failure_rate && self.level > 0 {
+            self.level -= 1;
+            if self.level == 0 {
+                self.total_ms += now_ms - self.entered_at_ms;
+            }
+        }
+        self.ok = 0;
+        self.err = 0;
+        self.level
+    }
+
+    /// Current degradation level (0 = full service).
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Total degraded time through `now_ms`, ms (closes the open
+    /// interval without mutating state).
+    pub fn degraded_ms(&self, now_ms: f64) -> f64 {
+        if self.level > 0 {
+            self.total_ms + (now_ms - self.entered_at_ms)
+        } else {
+            self.total_ms
+        }
+    }
+}
+
+// ─────────────────────────── resilience policy ─────────────────────
+
+/// The resilience knobs a serving path runs under.  Everything
+/// defaults to off, so plain scenarios are byte-identical to their
+/// pre-chaos selves.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceConfig {
+    /// Bounded retry with backoff (`None` = fail fast).
+    pub retry: Option<RetryPolicy>,
+    /// Tail-latency hedging (`None` = never duplicate).
+    pub hedge: Option<HedgePolicy>,
+    /// Per-pod/per-site circuit breaking (`None` = always route).
+    pub breaker: Option<BreakerConfig>,
+    /// Brownout degradation ladder (`None` = never degrade).
+    pub brownout: Option<BrownoutConfig>,
+}
+
+impl ResilienceConfig {
+    /// True when any resilience mechanism is enabled.
+    pub fn any_on(&self) -> bool {
+        self.retry.is_some()
+            || self.hedge.is_some()
+            || self.breaker.is_some()
+            || self.brownout.is_some()
+    }
+
+    /// The defaults the canned chaos scenarios run under: retry,
+    /// EWMA-derived hedging, breakers, and the brownout ladder all on.
+    pub fn storm_defaults() -> ResilienceConfig {
+        ResilienceConfig {
+            retry: Some(RetryPolicy::default()),
+            hedge: Some(HedgePolicy::default()),
+            breaker: Some(BreakerConfig::default()),
+            brownout: Some(BrownoutConfig::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_every_kind_and_rejects_garbage() {
+        let plan = FaultPlan::parse(
+            "crash:edge:0:5;crash:edge:1:5:9.5;straggle:cloud:1:4:6;\
+             link:edge:cloud:2:8:3:0.1;partition:a:b:1:2;flap:edge:3:7",
+        )
+        .unwrap();
+        assert_eq!(plan.faults.len(), 6);
+        assert!(matches!(
+            plan.faults[1],
+            Fault::PodCrash { restart_s: Some(r), .. } if (r - 9.5).abs() < 1e-9
+        ));
+        for bad in [
+            "warp:edge:1:2",              // unknown kind
+            "crash:edge:x:5",             // bad pod index
+            "crash:edge:0:5:4",           // restart before crash
+            "straggle:cloud:4:1:6",       // end before onset
+            "straggle:cloud:1:4:0.5",     // factor <= 1
+            "link:a:b:1:4:3:1.5",         // loss out of range
+            "partition:a:b:5:5",          // zero-length partition
+            "flap:edge:3",                // missing field
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert_eq!(err.entry, 1, "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn named_resolves_the_canned_storm() {
+        let plan = FaultPlan::named("site-loss-storm").unwrap();
+        assert_eq!(plan.name, "site-loss-storm");
+        assert!(plan.faults.len() >= 5);
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let pol = RetryPolicy { base_ms: 10.0, max_backoff_ms: 55.0, ..Default::default() };
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let b1 = pol.backoff_ms(1, &mut a);
+        let b2 = pol.backoff_ms(2, &mut a);
+        let b3 = pol.backoff_ms(5, &mut a);
+        assert!((5.0..10.0).contains(&b1), "{b1}");
+        assert!((10.0..20.0).contains(&b2), "{b2}");
+        assert!((27.5..55.0).contains(&b3), "capped then jittered: {b3}");
+        assert_eq!(b1, pol.backoff_ms(1, &mut b), "same seed, same jitter");
+    }
+
+    #[test]
+    fn retry_honors_bounds_and_deadline() {
+        let pol = RetryPolicy { max_retries: 2, deadline_ms: 100.0, ..Default::default() };
+        assert!(pol.may_retry(1, 0.0, 50.0));
+        assert!(pol.may_retry(2, 0.0, 50.0));
+        assert!(!pol.may_retry(3, 0.0, 50.0), "retry budget spent");
+        assert!(!pol.may_retry(1, 0.0, 100.0), "deadline exceeded");
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_half_open_closed() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            consecutive_failures: 2,
+            open_ms: 100.0,
+            half_open_probes: 1,
+        });
+        assert!(b.allow(0.0));
+        b.on_failure(0.0);
+        assert_eq!(b.state(), BreakerState::Closed, "one failure is not a streak");
+        b.on_failure(1.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow(50.0), "open window holds");
+        assert!(b.allow(101.0), "half-open admits a probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(102.0), "probe budget is 1");
+        b.on_success();
+        assert!(b.is_closed());
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn half_open_failure_re_trips() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            consecutive_failures: 1,
+            open_ms: 10.0,
+            half_open_probes: 1,
+        });
+        b.on_failure(0.0);
+        assert!(b.allow(11.0));
+        b.on_failure(11.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        assert!(!b.allow(12.0));
+    }
+
+    #[test]
+    fn success_interleaving_resets_the_streak() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            consecutive_failures: 3,
+            ..Default::default()
+        });
+        b.on_failure(0.0);
+        b.on_failure(1.0);
+        b.on_success();
+        b.on_failure(2.0);
+        b.on_failure(3.0);
+        assert!(b.is_closed(), "streak broke; 2 < 3 since the success");
+    }
+
+    #[test]
+    fn ewma_threshold_derives_from_observations() {
+        let pol = HedgePolicy { threshold_ms: 0.0, ewma_multiplier: 3.0 };
+        let mut e = EwmaLatency::new(0.3);
+        assert_eq!(e.threshold_ms(&pol), f64::INFINITY, "never hedge blind");
+        e.observe(10.0);
+        assert!((e.threshold_ms(&pol) - 30.0).abs() < 1e-9);
+        e.observe(20.0);
+        let expect = (10.0 + 0.3 * 10.0) * 3.0;
+        assert!((e.threshold_ms(&pol) - expect).abs() < 1e-9);
+        let fixed = HedgePolicy { threshold_ms: 7.0, ewma_multiplier: 3.0 };
+        assert_eq!(e.threshold_ms(&fixed), 7.0, "fixed threshold wins");
+    }
+
+    #[test]
+    fn brownout_ladder_steps_up_under_failure_and_recovers() {
+        let mut b = Brownout::new(BrownoutConfig {
+            enter_failure_rate: 0.5,
+            exit_failure_rate: 0.1,
+            max_level: 2,
+        });
+        for _ in 0..4 {
+            b.observe(false);
+        }
+        b.observe(true);
+        assert_eq!(b.tick(1_000.0), 1, "80% failure steps up");
+        for _ in 0..4 {
+            b.observe(false);
+        }
+        assert_eq!(b.tick(2_000.0), 2);
+        for _ in 0..4 {
+            b.observe(false);
+        }
+        assert_eq!(b.tick(3_000.0), 2, "capped at max_level");
+        assert_eq!(b.tick(4_000.0), 1, "empty window reads healthy");
+        assert_eq!(b.tick(5_000.0), 0);
+        assert!((b.degraded_ms(9_000.0) - 4_000.0).abs() < 1e-9, "1s..5s degraded");
+    }
+
+    #[test]
+    fn brownout_open_interval_accrues_without_mutation() {
+        let mut b = Brownout::new(BrownoutConfig {
+            enter_failure_rate: 0.5,
+            exit_failure_rate: 0.1,
+            max_level: 3,
+        });
+        b.observe(false);
+        assert_eq!(b.tick(100.0), 1);
+        assert!((b.degraded_ms(250.0) - 150.0).abs() < 1e-9);
+        assert!((b.degraded_ms(250.0) - 150.0).abs() < 1e-9, "pure read");
+    }
+
+    #[test]
+    fn resilience_defaults_are_off_and_storm_is_on() {
+        assert!(!ResilienceConfig::default().any_on());
+        assert!(ResilienceConfig::storm_defaults().any_on());
+    }
+}

@@ -81,6 +81,7 @@ pub mod bench;
 pub mod cache;
 pub mod control;
 pub mod des;
+pub mod faults;
 pub mod queue;
 pub mod sim;
 pub mod tenancy;
@@ -109,6 +110,10 @@ use cache::ResponseCache;
 pub use cache::CacheStats;
 use control::{ArrivalRate, BatchControlConfig, BatchController, HysteresisGate};
 pub use control::{AutoscaleConfig, ScaleDirection, ScaleEvent};
+use faults::CircuitBreaker;
+pub use faults::{
+    BreakerConfig, BrownoutConfig, Fault, FaultPlan, HedgePolicy, ResilienceConfig, RetryPolicy,
+};
 use queue::{LaneConfig, Push, TenantQueue};
 use sim::{Gate, SimPod};
 use tenancy::{TenantRegistry, TenantState};
@@ -221,6 +226,11 @@ pub struct FabricConfig {
     /// list does not define one, so anonymous [`Fabric::submit`]
     /// traffic always has a home.
     pub tenants: Vec<TenantSpec>,
+    /// Failure-handling policy: bounded retry on executor failure,
+    /// per-pod circuit breakers, and (on the virtual-time path)
+    /// tail-latency hedging and brownout degradation.  All off by
+    /// default — the resilient fabric is opt-in per run.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for FabricConfig {
@@ -243,6 +253,7 @@ impl Default for FabricConfig {
             cache_ttl_ms: 250,
             autoscale: None,
             tenants: Vec::new(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -275,6 +286,9 @@ struct Work {
     lane: usize,
     /// Priority rank (the queue's eviction ordering key).
     prio: u8,
+    /// Executor-failure retries already consumed (0 on first admission);
+    /// the retry policy bounds this before re-routing.
+    attempt: u32,
 }
 
 /// Terminal state of one routed request.
@@ -427,6 +441,10 @@ struct PodRuntime {
     born_ms: f64,
     /// Milliseconds after the fabric epoch this pod retired, if it did.
     retired_ms: Mutex<Option<f64>>,
+    /// Per-pod circuit breaker (None when `resilience.breaker` is off):
+    /// executor failures open it, the router stops routing here until
+    /// the open window lapses, then half-open probes decide recovery.
+    breaker: Option<Mutex<CircuitBreaker>>,
 }
 
 impl PodRuntime {
@@ -460,9 +478,16 @@ struct Registry {
 struct ModelScale {
     gate: HysteresisGate,
     cooldown: u32,
-    /// Priority-weighted shed pressure at the last tick (deltas against
-    /// `FabricInner::pressure_by_model` classify overload).
+    /// Cumulative priority-weighted shed pressure at the last tick
+    /// (deltas against `FabricInner::pressure_by_model` feed the
+    /// window below).
     last_pressure: f64,
+    /// Time-windowed shed pressure: each tick folds in the fresh delta
+    /// and halves what remains ([`PRESSURE_DECAY`]), so a burst of
+    /// storm-induced sheds reads as overload for a bounded number of
+    /// ticks and cannot pin the fleet at its scale-up high-water mark
+    /// long after recovery.
+    windowed_pressure: f64,
 }
 
 /// Autoscaler state: its own (feedback-blended) placement backend plus
@@ -530,6 +555,11 @@ struct FabricInner {
     /// In-flight dedup index, shared with every pod worker.
     dedup: Arc<DedupMap>,
     dedup_hits: AtomicU64,
+    /// Executor-failure retries re-routed under the resilience policy.
+    retries_total: AtomicU64,
+    /// Faults injected into this fabric (pod crashes on the threaded
+    /// path; the virtual-time engine tracks its own).
+    faults_injected: AtomicU64,
     stop: AtomicBool,
 }
 
@@ -783,6 +813,8 @@ impl Fabric {
             pressure_by_model: Mutex::new(BTreeMap::new()),
             dedup: Arc::new(Mutex::new(HashMap::new())),
             dedup_hits: AtomicU64::new(0),
+            retries_total: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
         let initial: Vec<Arc<PodRuntime>> = inner.registry.read().unwrap().pods.clone();
@@ -939,6 +971,97 @@ impl Fabric {
             .scaler
             .as_ref()
             .and_then(|s| s.last_spawn_error.lock().unwrap().clone())
+    }
+
+    /// Executor-failure retries re-routed under the resilience policy.
+    pub fn retries_total(&self) -> u64 {
+        self.inner.retries_total.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected into this fabric so far (pod crashes via
+    /// [`inject_pod_crash`](Self::inject_pod_crash) /
+    /// [`schedule_faults`](Self::schedule_faults)).
+    pub fn faults_injected(&self) -> u64 {
+        self.inner.faults_injected.load(Ordering::Relaxed)
+    }
+
+    /// Circuit-breaker trips across every pod spawned so far (0 when
+    /// breakers are off).
+    pub fn breaker_trips(&self) -> u64 {
+        self.inner
+            .registry
+            .read()
+            .unwrap()
+            .pods
+            .iter()
+            .filter_map(|p| p.breaker.as_ref())
+            .map(|b| b.lock().unwrap().trips())
+            .sum()
+    }
+
+    /// Chaos hook: crash the `idx`-th spawned pod (spawn order, as in
+    /// [`plans`](Self::plans)).  The pod is retired and its breaker
+    /// opened immediately; its queued work is seized and re-routed to
+    /// surviving replicas under the retry policy, with a terminal
+    /// [`Outcome::Failed`] for anything no replica admits — dedup'd
+    /// followers attached to a seized leader get the leader's verdict,
+    /// so no waiter ever hangs.  Items a worker already drained finish
+    /// executing normally (the virtual-time engine models the mid-batch
+    /// kill exactly).  Returns the number of queued items seized, or
+    /// `None` when `idx` is out of range.
+    pub fn inject_pod_crash(&self, idx: usize) -> Option<usize> {
+        let pod = self.inner.registry.read().unwrap().pods.get(idx).cloned()?;
+        if pod.retired.load(Ordering::Relaxed) {
+            return Some(0);
+        }
+        Some(self.inner.crash_pod(&pod))
+    }
+
+    /// Replay a [`FaultPlan`]'s pod crashes against the live fabric on a
+    /// background thread, each fault's `at_s` scaled by `time_scale`
+    /// into real sleep (the same compression `FabricConfig::time_scale`
+    /// applies to service latencies).  The threaded path replays
+    /// **crashes only** — stragglers, link faults and site flaps are
+    /// topology-level effects modeled on the deterministic virtual-time
+    /// path (`tf2aif fabric --virtual-time --faults ...`).  A crash's
+    /// `site` is matched against cluster node names; `pod` indexes the
+    /// node's active pods in spawn order.
+    pub fn schedule_faults(&self, plan: &FaultPlan, time_scale: f64) -> thread::JoinHandle<()> {
+        let mut crashes: Vec<(f64, String, usize)> = plan
+            .faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::PodCrash { at_s, site, pod, .. } => Some((*at_s, site.clone(), *pod)),
+                _ => None,
+            })
+            .collect();
+        crashes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let inner = Arc::clone(&self.inner);
+        thread::spawn(move || {
+            let t0 = Instant::now();
+            for (at_s, node, nth) in crashes {
+                let target = Duration::from_secs_f64((at_s * time_scale).max(0.0));
+                if let Some(left) = target.checked_sub(t0.elapsed()) {
+                    thread::sleep(left);
+                }
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let victim = {
+                    let reg = inner.registry.read().unwrap();
+                    reg.pods
+                        .iter()
+                        .filter(|p| {
+                            p.plan.node == node && !p.retired.load(Ordering::Relaxed)
+                        })
+                        .nth(nth)
+                        .cloned()
+                };
+                if let Some(pod) = victim {
+                    inner.crash_pod(&pod);
+                }
+            }
+        })
     }
 
     /// Every autoscaler action so far, oldest first.
@@ -1168,6 +1291,13 @@ impl Fabric {
             service: boxplot_opt(&merged.service_ms),
             mean_queue_wait_ms: mean_opt(&merged.queue_wait_ms),
             throughput_rps: throughput_rps(merged.requests as usize, wall_s),
+            retries: self.retries_total(),
+            hedges_won: 0,
+            hedges_lost: 0,
+            breaker_trips: self.breaker_trips(),
+            brownout_ms: 0.0,
+            faults_injected: self.faults_injected(),
+            last_scale_error: self.last_scale_error(),
         }
     }
 
@@ -1231,6 +1361,11 @@ fn new_runtime(
         final_report: Mutex::new(None),
         born_ms,
         retired_ms: Mutex::new(None),
+        breaker: cfg
+            .resilience
+            .breaker
+            .as_ref()
+            .map(|b| Mutex::new(CircuitBreaker::new(b.clone()))),
     }
 }
 
@@ -1298,35 +1433,55 @@ impl FabricInner {
             };
             let mut tail_ms = 0.0f64;
             {
-                let mut finish = |fan: Arc<Fanout>, result: Result<Response>| {
-                    let outcome = match result {
+                // Every item reaches exactly one terminal verdict here:
+                // success delivers (and closes the breaker's failure
+                // streak); failure feeds the breaker and either re-routes
+                // under the retry policy or delivers `Outcome::Failed`.
+                let mut finish = |work: Work, result: Result<Response>| {
+                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
+                    match result {
                         Ok(resp) => {
+                            if let Some(b) = &pod.breaker {
+                                b.lock().unwrap().on_success();
+                            }
                             self.feedback.observe(&pod.key, resp.service_ms, resp.queue_wait_ms);
                             let e2e = resp.queue_wait_ms + resp.service_ms;
                             if e2e > tail_ms {
                                 tail_ms = e2e;
                             }
-                            Outcome::Completed(resp)
+                            deliver(
+                                &self.dedup,
+                                self.cache.as_deref(),
+                                &work.fan,
+                                Outcome::Completed(resp),
+                            );
                         }
-                        Err(e) => Outcome::Failed(format!("{e:#}")),
-                    };
-                    pod.backlog.fetch_sub(1, Ordering::Relaxed);
-                    deliver(&self.dedup, self.cache.as_deref(), &fan, outcome);
+                        Err(e) => self.fail_or_retry(pod, work, format!("{e:#}")),
+                    }
                 };
                 if self.cfg.fused {
                     // The whole drained batch is ONE device dispatch;
-                    // every item stops waiting at dispatch time.
+                    // every item stops waiting at dispatch time.  The
+                    // requests are lent to the executor and moved back
+                    // into their `Work` afterwards so a failed item can
+                    // be re-routed whole.
                     let mut reqs = Vec::with_capacity(batch.len());
                     let mut waits = Vec::with_capacity(batch.len());
-                    let mut fans = Vec::with_capacity(batch.len());
-                    for work in batch {
+                    let mut works = Vec::with_capacity(batch.len());
+                    for mut work in batch {
                         waits.push(work.enqueued.elapsed().as_secs_f64() * 1e3);
-                        reqs.push(work.req);
-                        fans.push(work.fan);
+                        reqs.push(std::mem::replace(
+                            &mut work.req,
+                            Request { id: 0, payload: Vec::new() },
+                        ));
+                        works.push(work);
                     }
                     let results = executor.execute_batch(&reqs, &waits);
-                    for (fan, result) in fans.into_iter().zip(results) {
-                        finish(fan, result);
+                    for ((mut work, req), result) in
+                        works.into_iter().zip(reqs).zip(results)
+                    {
+                        work.req = req;
+                        finish(work, result);
                     }
                 } else {
                     // Per-item reference path (the bench baseline): one
@@ -1336,7 +1491,7 @@ impl FabricInner {
                     for work in batch {
                         let wait_ms = work.enqueued.elapsed().as_secs_f64() * 1e3;
                         let result = executor.execute(&work.req, wait_ms);
-                        finish(work.fan, result);
+                        finish(work, result);
                     }
                 }
             }
@@ -1476,6 +1631,7 @@ impl FabricInner {
                 fan: Arc::clone(&fan),
                 lane,
                 prio,
+                attempt: 0,
             };
             routed = self.try_route(&scored, work);
             if routed.admitted {
@@ -1494,6 +1650,7 @@ impl FabricInner {
                 fan,
                 lane,
                 prio,
+                attempt: 0,
             };
             routed = self.try_route(&scored, work);
         }
@@ -1528,7 +1685,16 @@ impl FabricInner {
     /// retire — closed queues bounce pushes).
     fn try_route(&self, scored: &[Arc<PodRuntime>], mut work: Work) -> RouteOutcome {
         let (lane, prio) = (work.lane, work.prio);
+        let now_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
         for pod in scored {
+            // An open circuit breaker removes the pod from rotation;
+            // half-open lets a bounded number of probes through and the
+            // probes' verdicts decide recovery.
+            if let Some(b) = &pod.breaker {
+                if !b.lock().unwrap().allow(now_ms) {
+                    continue;
+                }
+            }
             pod.backlog.fetch_add(1, Ordering::Relaxed);
             match pod.queue.push(lane, prio, work) {
                 Push::Admitted(evicted) => {
@@ -1567,6 +1733,82 @@ impl FabricInner {
         *self.pressure_by_model.lock().unwrap().entry(model.to_string()).or_insert(0.0) +=
             1.0 + prio as f64;
     }
+
+    /// One executor failure's terminal path: feed `pod`'s breaker, then
+    /// — while the retry policy allows (attempt bound + deadline against
+    /// the original enqueue) — re-route the work to the current best
+    /// replica set.  When retries are off, exhausted, or no replica
+    /// admits the work, every waiter gets a terminal
+    /// [`Outcome::Failed`]; nothing is dropped silently and nothing is
+    /// delivered twice.
+    fn fail_or_retry(&self, pod: &PodRuntime, work: Work, error: String) {
+        if let Some(b) = &pod.breaker {
+            b.lock().unwrap().on_failure(self.epoch.elapsed().as_secs_f64() * 1e3);
+        }
+        let retry_ok = self.cfg.resilience.retry.as_ref().map_or(false, |rp| {
+            let waited_ms = work.enqueued.elapsed().as_secs_f64() * 1e3;
+            rp.may_retry(work.attempt + 1, 0.0, waited_ms)
+        });
+        let fan = Arc::clone(&work.fan);
+        if retry_ok {
+            let mut work = work;
+            work.attempt += 1;
+            self.retries_total.fetch_add(1, Ordering::Relaxed);
+            if let Ok(scored) = self.candidates(&fan.model) {
+                let routed = self.try_route(&scored, work);
+                for evicted in routed.evicted {
+                    let callers = deliver(
+                        &self.dedup,
+                        self.cache.as_deref(),
+                        &evicted.fan,
+                        Outcome::Shed,
+                    );
+                    self.note_preemption(&evicted, callers);
+                }
+                if routed.admitted {
+                    return;
+                }
+            }
+        }
+        deliver(&self.dedup, self.cache.as_deref(), &fan, Outcome::Failed(error));
+    }
+
+    /// Crash one pod: retire it immediately, trip its breaker, seize its
+    /// queued backlog, and give every seized item a terminal path —
+    /// re-routed to surviving replicas under the retry policy, or a
+    /// terminal [`Outcome::Failed`] when none admits it.  Dedup'd
+    /// followers riding a seized leader get the leader's verdict; nobody
+    /// hangs.  Returns the number of queued items seized.
+    fn crash_pod(&self, pod: &Arc<PodRuntime>) -> usize {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+        pod.retired.store(true, Ordering::Relaxed);
+        let now_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        *pod.retired_ms.lock().unwrap() = Some(now_ms);
+        if let Some(b) = &pod.breaker {
+            // A crash is a failure burst: open the breaker now so the
+            // router's view and the crash agree.
+            let mut b = b.lock().unwrap();
+            for _ in 0..16 {
+                if !b.is_closed() {
+                    break;
+                }
+                b.on_failure(now_ms);
+            }
+        }
+        let _ = self.cluster.lock().unwrap().terminate(pod.plan.pod_id);
+        // `drain_all` closes the queue and seizes whatever was admitted
+        // but not yet drained by a worker; items a worker already holds
+        // finish executing and deliver normally (the threaded path kills
+        // the queue, not the in-flight dispatch — the virtual-time
+        // engine models the mid-batch kill exactly).
+        let orphans = pod.queue.drain_all();
+        let seized = orphans.len();
+        for work in orphans {
+            pod.backlog.fetch_sub(1, Ordering::Relaxed);
+            self.fail_or_retry(pod, work, format!("pod crashed: {}@{}", pod.plan.aif, pod.plan.node));
+        }
+        seized
+    }
 }
 
 /// Result of routing one admitted-or-not submission across replicas.
@@ -1589,6 +1831,22 @@ const FORECAST_IDLE_EPS: f64 = 0.01;
 /// units, which would defer predictive scale-ups until the backlog it
 /// exists to prevent was already inevitable).
 const FORECAST_SATURATION: f64 = 1.0;
+
+/// Per-tick retention of the windowed shed-pressure signal: what a tick
+/// does not consume, the next tick halves.  With the smallest possible
+/// shed weighing 1.0, a lone burst decays below [`PRESSURE_FLOOR`]
+/// (and snaps to exactly zero — the idle gate needs a true zero) within
+/// a handful of quiet ticks.
+const PRESSURE_DECAY: f64 = 0.5;
+
+/// Below this the windowed pressure snaps to 0.0: the geometric decay
+/// alone never reaches zero, and the idle gate requires it.
+const PRESSURE_FLOOR: f64 = 0.125;
+
+/// Windowed pressure at or above which a model reads as overloaded (one
+/// fresh best-effort shed is enough — same sensitivity as the old
+/// raw-delta trigger, but it now expires).
+const PRESSURE_OVERLOAD: f64 = 1.0;
 
 /// One autoscaler step: classify every model from mean backlog per
 /// active replica and shed deltas, debounce through the hysteresis
@@ -1650,13 +1908,22 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
         let st = pm.entry(model.clone()).or_default();
         let pressure_delta = (pressure_now - st.last_pressure).max(0.0);
         st.last_pressure = pressure_now;
+        // Time-windowed, not cumulative: fresh sheds fold in, old sheds
+        // decay out, so overload classification tracks *recent* loss and
+        // a storm burst stops reading as overload shortly after the
+        // storm ends.  Decay runs even during cooldown.
+        st.windowed_pressure = st.windowed_pressure * PRESSURE_DECAY + pressure_delta;
+        if st.windowed_pressure < PRESSURE_FLOOR {
+            st.windowed_pressure = 0.0;
+        }
+        let windowed = st.windowed_pressure;
         if st.cooldown > 0 {
             st.cooldown -= 1;
             continue;
         }
         let mean_backlog = backlog_sum as f64 / active as f64;
         let overloaded = mean_backlog >= a.scale_up_backlog
-            || pressure_delta > 0.0
+            || windowed >= PRESSURE_OVERLOAD
             || forecast >= FORECAST_SATURATION;
         // The forecast is continuous (unlike the integer backlog, it
         // never hits an exact 0 while any trickle of demand flows), so
@@ -1665,12 +1932,12 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
         // `scale_down_backlog == 0` fleet at its high-water mark.
         let idle = !overloaded
             && mean_backlog <= a.scale_down_backlog
-            && pressure_delta == 0.0
+            && windowed == 0.0
             && forecast <= FORECAST_IDLE_EPS;
         match st.gate.decide(overloaded, idle, a.hold_ticks) {
             Some(ScaleDirection::Up) if active < a.max_replicas => {
-                let trigger = if pressure_delta > 0.0 {
-                    format!("shed pressure +{pressure_delta:.1}")
+                let trigger = if windowed >= PRESSURE_OVERLOAD {
+                    format!("shed pressure {windowed:.1} (windowed)")
                 } else if mean_backlog >= a.scale_up_backlog {
                     format!("backlog {mean_backlog:.1}/replica")
                 } else {
@@ -2031,6 +2298,24 @@ pub struct FleetReport {
     pub mean_queue_wait_ms: f64,
     /// Fleet throughput over the drive wall-clock.
     pub throughput_rps: f64,
+    /// Executor-failure retries re-routed under the resilience policy.
+    pub retries: u64,
+    /// Hedged duplicates whose copy finished first (virtual-time path;
+    /// the threaded router does not hedge, so 0 there).
+    pub hedges_won: u64,
+    /// Hedged duplicates cancelled or beaten by the primary
+    /// (virtual-time path; 0 on the threaded router).
+    pub hedges_lost: u64,
+    /// Circuit-breaker trips (closed→open transitions) across all pods.
+    pub breaker_trips: u64,
+    /// Total brownout-degraded milliseconds (virtual-time path; 0 on
+    /// the threaded router).
+    pub brownout_ms: f64,
+    /// Faults injected (pod crashes on the threaded path).
+    pub faults_injected: u64,
+    /// Most recent autoscaler pod-spawn failure — surfaced so drill
+    /// runs show *why* capacity moved (or failed to).
+    pub last_scale_error: Option<String>,
 }
 
 #[cfg(test)]
@@ -2234,6 +2519,89 @@ mod tests {
             assert!(r.avg_batch >= 1.0, "{}: avg batch {}", r.aif, r.avg_batch);
             assert!(r.retired_ms.is_none(), "nothing retires without autoscaling");
         }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn shed_pressure_decays_after_overload_ends() {
+        let cfg = FabricConfig {
+            time_scale: 0.0,
+            autoscale: Some(AutoscaleConfig { interval_ms: 0, ..Default::default() }),
+            ..Default::default()
+        };
+        let fabric = sim_fabric(&cfg, None);
+        let model = fabric.models()[0].clone();
+        // A storm burst: 8 priority-2 sheds land between two ticks.
+        for _ in 0..8 {
+            fabric.inner.add_pressure(&model, 2);
+        }
+        fabric.autoscale_tick();
+        let read = |f: &Fabric| {
+            let sc = f.inner.scaler.as_ref().unwrap();
+            let pm = sc.per_model.lock().unwrap();
+            pm.get(&model).map_or(0.0, |m| m.windowed_pressure)
+        };
+        let w0 = read(&fabric);
+        assert!(w0 >= 24.0, "the burst folds into the window whole: {w0}");
+        // Quiet ticks: the window must decay to a true zero (the idle
+        // gate requires it) instead of pinning at the high-water mark.
+        for _ in 0..8 {
+            fabric.autoscale_tick();
+        }
+        assert_eq!(read(&fabric), 0.0, "windowed pressure decays after the storm ends");
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn pod_crash_gives_every_queued_waiter_a_terminal_verdict() {
+        // One gated replica: the first submission blocks in execution,
+        // five more sit queued behind it.  Crashing the pod must seize
+        // the five queued items and give each waiter a terminal verdict
+        // (retried, then failed — no surviving replica), while the
+        // in-flight item finishes normally when the gate opens.
+        let gate = Gate::closed_gate();
+        let cfg = FabricConfig {
+            time_scale: 0.0,
+            replicas_per_model: 1,
+            queue_capacity: 8,
+            workers: 1,
+            resilience: ResilienceConfig {
+                retry: Some(RetryPolicy::default()),
+                breaker: Some(BreakerConfig::default()),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let fabric = sim_fabric(&cfg, Some(Arc::clone(&gate)));
+        let Submission::Enqueued(rx0) = fabric.submit("lenet", vec![1.0; 8]).unwrap() else {
+            panic!("idle fabric must admit");
+        };
+        gate.await_blocked(1);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            match fabric.submit("lenet", vec![i as f32 + 2.0; 8]).unwrap() {
+                Submission::Enqueued(rx) => rxs.push(rx),
+                Submission::Shed => panic!("queue has room"),
+            }
+        }
+        let idx = fabric.plans().iter().position(|p| p.model == "lenet").unwrap();
+        let seized = fabric.inject_pod_crash(idx).unwrap();
+        assert_eq!(seized, 5, "exactly the queued items are seized");
+        gate.open();
+        assert!(
+            matches!(rx0.recv().unwrap(), Outcome::Completed(_)),
+            "in-flight work finishes normally"
+        );
+        for rx in rxs {
+            assert!(
+                matches!(rx.recv().unwrap(), Outcome::Failed(_)),
+                "seized work fails terminally with no surviving replica"
+            );
+        }
+        let fleet = fabric.fleet_report(1.0);
+        assert_eq!(fleet.faults_injected, 1);
+        assert_eq!(fleet.retries, 5, "each seized item consumed one retry before failing");
+        assert!(fleet.breaker_trips >= 1, "the crash trips the pod's breaker");
         fabric.shutdown();
     }
 

@@ -306,6 +306,30 @@ impl<T> TenantQueue<T> {
         self.state.lock().unwrap().closed = true;
         self.not_empty.notify_all();
     }
+
+    /// Close the queue **and** seize everything still queued in one lock
+    /// take — the crash path.  Unlike [`close`](Self::close) (graceful:
+    /// workers drain the backlog themselves), a crashed pod's queued
+    /// work is taken away from its workers so the caller can re-route or
+    /// fail each item explicitly.  Items come back in weighted-fair
+    /// drain order.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        let mut out = Vec::with_capacity(g.len);
+        while g.len > 0 {
+            let Some(li) = pick_lane(&mut g.lanes) else { break };
+            let (_, _, item) = g.lanes[li].items.pop_front().expect("picked lane non-empty");
+            if g.lanes[li].items.is_empty() {
+                g.lanes[li].current = 0;
+            }
+            g.len -= 1;
+            out.push(item);
+        }
+        drop(g);
+        self.not_empty.notify_all();
+        out
+    }
 }
 
 /// A fixed-capacity single-lane FIFO queue — a one-lane

@@ -33,7 +33,10 @@ use tf2aif::fabric::des::{
     run_des, DesAutoscale, DesConfig, DesModel, DesReport, DesScenario, DesSite, Drill,
 };
 use tf2aif::fabric::tenancy::{apply_tenant_slos, parse_tenant_specs, TenantSpec};
-use tf2aif::fabric::{sim, AutoscaleConfig, Fabric, FabricConfig};
+use tf2aif::fabric::{
+    sim, AutoscaleConfig, BreakerConfig, BrownoutConfig, Fabric, FabricConfig, Fault,
+    FaultPlan, HedgePolicy, ResilienceConfig, RetryPolicy,
+};
 use tf2aif::report;
 use tf2aif::runtime::Engine;
 use tf2aif::serving::{AifServer, ImageClassify};
@@ -123,13 +126,18 @@ fn print_usage() {
          (SPEC = name[:w=N][:p=low|standard|high][:rate=R][:burst=B][:share=F][:slo=MS],...)\n           \
          [--virtual-time] [--trace CURVE] [--trace-file CSV] [--duration S]\n           \
          [--variant V] [--report-out FILE]\n           \
-         (CURVE = const:RPS | diurnal:BASE:PEAK:PERIOD[:PHASE] | flash:BASE:SPIKE:AT:RAMP:HOLD)\n  \
+         (CURVE = const:RPS | diurnal:BASE:PEAK:PERIOD[:PHASE] | flash:BASE:SPIKE:AT:RAMP:HOLD)\n           \
+         [--faults PLAN] [--retry N] [--breaker] [--hedge-ms MS] [--brownout]\n           \
+         (PLAN = site-loss-storm | crash:SITE:POD:AT[:RESTART];straggle:SITE:AT:UNTIL:FACTOR;\n            \
+         link:A:B:AT:UNTIL:RTT_FACTOR:LOSS;partition:A:B:AT:HEAL;flap:SITE:AT:RECOVER)\n           \
+         (--hedge-ms/--brownout need --virtual-time; crash faults also run threaded)\n  \
          continuum [--config FILE] [--policy min-latency|min-energy|balanced] [--site NAME]\n           \
          [--requests N] [--arrival A] [--models a,b] [--replicas N] [--queue N]\n           \
          [--batch N] [--workers N] [--time-scale F] [--seed N] [--run-seed N]\n           \
          [--fail-site NAME] [--fail-at I] [--scenarios]\n           \
          [--virtual-time] [--scenario diurnal-day|flash-crowd|site-loss-storm|million-user-day]\n           \
          [--trace-file CSV] [--duration S] [--fail-at-s S] [--recover-at-s S]\n           \
+         [--faults PLAN] [--retry N] [--hedge-ms MS] [--breaker] [--brownout]\n           \
          [--report-out FILE]\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
@@ -156,6 +164,44 @@ where
             .map(|x| x.trim().parse().with_context(|| format!("bad list entry {x:?}")))
             .collect(),
         None => Ok(default.to_vec()),
+    }
+}
+
+/// Build the resilience policy from the shared CLI flags: `--retry N`
+/// (bounded retries with jittered backoff), `--hedge-ms MS` (tail
+/// hedging; `0` derives the threshold from the service EWMA),
+/// `--breaker` (per-pod circuit breakers) and `--brownout` (the
+/// failure-rate degradation ladder).  Absent flags leave the matching
+/// policy off.
+fn resilience_from_flags(flags: &Flags) -> Result<ResilienceConfig> {
+    let mut r = ResilienceConfig::default();
+    if let Some(v) = flags.get("--retry") {
+        let max_retries: u32 = v.parse().with_context(|| format!("bad --retry: {v:?}"))?;
+        r.retry = Some(RetryPolicy { max_retries, ..Default::default() });
+    }
+    if let Some(v) = flags.get("--hedge-ms") {
+        let threshold_ms: f64 =
+            v.parse().with_context(|| format!("bad --hedge-ms: {v:?}"))?;
+        if !(threshold_ms >= 0.0) {
+            bail!("--hedge-ms must be >= 0 (0 derives the threshold from the EWMA)");
+        }
+        r.hedge = Some(HedgePolicy { threshold_ms, ..Default::default() });
+    }
+    if flags.has("--breaker") {
+        r.breaker = Some(BreakerConfig::default());
+    }
+    if flags.has("--brownout") {
+        r.brownout = Some(BrownoutConfig::default());
+    }
+    Ok(r)
+}
+
+/// Parse `--faults` (a canned plan name or inline `;`-separated spec);
+/// absent means an empty plan.
+fn fault_plan_from_flags(flags: &Flags) -> Result<FaultPlan> {
+    match flags.get("--faults") {
+        Some(spec) => Ok(FaultPlan::named(spec)?),
+        None => Ok(FaultPlan::default()),
     }
 }
 
@@ -370,6 +416,14 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
     let mix_entries: Vec<(String, u32)> =
         tenants.iter().map(|t| (t.id.clone(), t.weight)).collect();
 
+    // Hedging and brownout are virtual-time policies; on the threaded
+    // path they would silently do nothing, which this CLI treats as an
+    // error (same convention as the DES no-effect flags).
+    for flag in ["--hedge-ms", "--brownout"] {
+        if flags.has(flag) {
+            bail!("{flag} needs --virtual-time (hedging/brownout run on the virtual clock)");
+        }
+    }
     let cfg = FabricConfig {
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
         max_batch: flags.usize_or("--batch", d.max_batch)?,
@@ -387,8 +441,10 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
         cache_ttl_ms: flags.usize_or("--cache-ttl", d.cache_ttl_ms as usize)? as u64,
         autoscale,
         tenants,
+        resilience: resilience_from_flags(flags)?,
         ..Default::default()
     };
+    let fault_plan = fault_plan_from_flags(flags)?;
 
     // ── Place + spawn the fleet ─────────────────────────────────────────
     let fabric = if real {
@@ -430,6 +486,20 @@ fn cmd_fabric(flags: &Flags) -> Result<()> {
             "  pod {:<3} {:<20} [{:<6}] on {:<4} (modeled {:.2} ms)",
             p.pod_id, p.aif, p.variant, p.node, p.modeled_ms
         );
+    }
+
+    // ── Fault plan (threaded path replays pod crashes) ──────────────────
+    if !fault_plan.is_empty() {
+        let crashes =
+            fault_plan.faults.iter().filter(|f| matches!(f, Fault::PodCrash { .. })).count();
+        println!(
+            "\nfault plan {:?}: {} fault(s); {} pod crash(es) scheduled (latency/link/site \
+             faults need --virtual-time and are skipped here)",
+            fault_plan.name,
+            fault_plan.faults.len(),
+            crashes,
+        );
+        drop(fabric.schedule_faults(&fault_plan, cfg.time_scale));
     }
 
     // ── Drive the workload ──────────────────────────────────────────────
@@ -551,38 +621,60 @@ fn print_des_report(report: &DesReport, wall_s: f64, report_out: Option<&str>) -
     );
     println!(
         "requests: {} submitted = {} completed + {} cached + {} shed + {} quota-shed \
-         (conservation: {})",
+         + {} failed (conservation: {}; {} retries)",
         report.submitted,
         report.completed,
         report.cache_hits,
         report.shed,
         report.quota_shed,
+        report.failed,
         yn(report.conservation_holds()),
+        report.retries,
     );
     println!(
         "latency (e2e ms): p50 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}   \
          spilled {}  rerouted {}",
         report.p50_ms, report.p99_ms, report.mean_ms, report.max_ms, report.spilled, report.rerouted,
     );
+    if report.faults_injected > 0
+        || report.hedges_launched > 0
+        || report.breaker_trips > 0
+        || report.brownout_ms > 0.0
+    {
+        println!(
+            "resilience: {} fault(s) injected | hedges {} launched / {} won / {} lost | \
+             breaker trips {} (open at end: {}) | brownout {:.0} ms",
+            report.faults_injected,
+            report.hedges_launched,
+            report.hedges_won,
+            report.hedges_lost,
+            report.breaker_trips,
+            report.breakers_open_end,
+            report.brownout_ms,
+        );
+    }
     println!(
-        "\n{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>9} {:>9} {:>5} {:>7} {:>8} {:>8}",
-        "site", "up", "submitted", "completed", "cached", "shed", "served", "spill-in", "pods",
-        "p50ms", "p99ms", "scale+/-",
+        "\n{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>6} {:>9} {:>9} {:>5} {:>7} {:>8} {:>4} {:>8}",
+        "site", "up", "submitted", "completed", "cached", "shed", "failed", "served",
+        "spill-in", "pods", "p50ms", "p99ms", "brk", "scale+/-",
     );
     for s in &report.sites {
         println!(
-            "{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>9} {:>9} {:>5} {:>7.2} {:>8.2} {:>5}/{}",
+            "{:<10} {:>5} {:>9} {:>9} {:>7} {:>6} {:>6} {:>9} {:>9} {:>5} {:>7.2} {:>8.2} \
+             {:>4} {:>5}/{}",
             s.name,
             yn(s.up),
             s.submitted,
             s.completed,
             s.cache_hits,
             s.shed + s.quota_shed,
+            s.failed,
             s.served_here,
             s.spillover_in,
             s.pods_end,
             s.p50_ms,
             s.p99_ms,
+            s.breaker_trips,
             s.scale_ups,
             s.scale_downs,
         );
@@ -668,6 +760,7 @@ fn cmd_fabric_des(flags: &Flags) -> Result<()> {
         cache_ttl_ms: flags.f64_or("--cache-ttl", dc.cache_ttl_ms)?,
         cohorts: flags.usize_or("--cohorts", dc.cohorts)?,
         autoscale,
+        resilience: resilience_from_flags(flags)?,
         seed: flags.usize_or("--seed", dc.seed as usize)? as u64,
     };
 
@@ -700,15 +793,21 @@ fn cmd_fabric_des(flags: &Flags) -> Result<()> {
         rtt_ms: vec![vec![0.0]],
         trace,
         drills: Vec::new(),
+        faults: fault_plan_from_flags(flags)?,
         cfg,
     };
     println!(
-        "fabric (virtual time): {} model(s) on {} ({} pod(s)), horizon {:.0}s, seed {}",
+        "fabric (virtual time): {} model(s) on {} ({} pod(s)), horizon {:.0}s, seed {}{}",
         sc.models.len(),
         sc.sites[0].variant,
         sc.sites[0].pods,
         sc.horizon_s,
         sc.cfg.seed,
+        if sc.faults.is_empty() {
+            String::new()
+        } else {
+            format!(", fault plan {:?} ({} fault(s))", sc.faults.name, sc.faults.faults.len())
+        },
     );
     let t0 = Instant::now();
     let report = run_des(&sc)?;
@@ -744,6 +843,24 @@ fn cmd_continuum_des(flags: &Flags) -> Result<()> {
     sc.cfg.max_batch = flags.usize_or("--batch", sc.cfg.max_batch)?;
     sc.cfg.batch_linger_ms = flags.f64_or("--linger", sc.cfg.batch_linger_ms)?;
     sc.horizon_s = flags.f64_or("--duration", sc.horizon_s)?;
+    // Resilience flags override the scenario's own policy per field, so
+    // e.g. `--retry 4` on the storm keeps its hedging/breaker defaults.
+    let r = resilience_from_flags(flags)?;
+    if r.retry.is_some() {
+        sc.cfg.resilience.retry = r.retry;
+    }
+    if r.hedge.is_some() {
+        sc.cfg.resilience.hedge = r.hedge;
+    }
+    if r.breaker.is_some() {
+        sc.cfg.resilience.breaker = r.breaker;
+    }
+    if r.brownout.is_some() {
+        sc.cfg.resilience.brownout = r.brownout;
+    }
+    if let Some(spec) = flags.get("--faults") {
+        sc.faults = FaultPlan::named(spec)?;
+    }
     if let Some(path) = flags.get("--trace-file") {
         sc.trace = Some(read_trace_csv(path)?);
         for site in &mut sc.sites {
@@ -766,11 +883,16 @@ fn cmd_continuum_des(flags: &Flags) -> Result<()> {
         }
     }
     println!(
-        "continuum (virtual time): scenario {:?}, {} site(s), horizon {:.0}s, seed {}",
+        "continuum (virtual time): scenario {:?}, {} site(s), horizon {:.0}s, seed {}{}",
         sc.name,
         sc.sites.len(),
         sc.horizon_s,
         seed,
+        if sc.faults.is_empty() {
+            String::new()
+        } else {
+            format!(", fault plan {:?} ({} fault(s))", sc.faults.name, sc.faults.faults.len())
+        },
     );
     let t0 = Instant::now();
     let report = run_des(&sc)?;
@@ -781,6 +903,13 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
     if flags.has("--virtual-time") {
         return cmd_continuum_des(flags);
     }
+    // Hedging, brownout and multi-fault plans are virtual-time features
+    // on the continuum path; rejecting them beats silently ignoring.
+    for flag in ["--hedge-ms", "--brownout", "--faults"] {
+        if flags.has(flag) {
+            bail!("{flag} needs --virtual-time on the continuum path");
+        }
+    }
     let d = FabricConfig::default();
     let cfg = FabricConfig {
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
@@ -789,6 +918,7 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
         replicas_per_model: flags.usize_or("--replicas", d.replicas_per_model)?,
         time_scale: flags.f64_or("--time-scale", d.time_scale)?,
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
+        resilience: resilience_from_flags(flags)?,
         ..Default::default()
     };
     if flags.has("--scenarios") {
@@ -975,10 +1105,10 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     // fixed replicas vs autoscaler), the tenancy measurement, the
     // continuum scenarios and the virtual-time determinism check ride
     // along unless --fused-only.
-    let (control, autoscale, tenancy, continuum_bench, des_bench) = if flags.has("--fused-only")
-    {
-        (None, None, None, None, None)
-    } else {
+    let (control, autoscale, tenancy, continuum_bench, des_bench, resilience_bench) =
+        if flags.has("--fused-only") {
+            (None, None, None, None, None, None)
+        } else {
         println!(
             "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
             cfg.rates.len(),
@@ -1060,7 +1190,34 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             yn(des.seeds_differ),
             yn(des.conservation),
         );
-        (Some(sweep), Some(cmp), Some(ten), Some(cont), Some(des))
+
+        println!(
+            "\nchaos: replaying site-loss-storm twice under the resilience defaults, \
+             then hedge-disabled (seed {})…",
+            cfg.seed,
+        );
+        let res = bench::run_resilience_bench(&cfg)?;
+        println!(
+            "{} submitted | {} failed | {} retries | hedges {} launched / {} won | \
+             breaker trips {} | {} fault(s) injected\n\
+             zero lost admitted work under the storm: {} | \
+             hedging cuts tail p99 ({:.2} → {:.2} ms): {} | \
+             breakers recover: {} | storm bit-reproducible: {}",
+            res.submitted,
+            res.failed,
+            res.retries,
+            res.hedges_launched,
+            res.hedges_won,
+            res.breaker_trips,
+            res.faults_injected,
+            yn(res.no_lost_requests_under_storm),
+            res.p99_unhedged_ms,
+            res.p99_hedged_ms,
+            yn(res.hedging_cuts_tail_p99),
+            yn(res.breaker_recovers),
+            yn(res.storm_bit_reproducible),
+        );
+        (Some(sweep), Some(cmp), Some(ten), Some(cont), Some(des), Some(res))
     };
 
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
@@ -1073,6 +1230,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         tenancy.as_ref(),
         continuum_bench.as_ref(),
         des_bench.as_ref(),
+        resilience_bench.as_ref(),
     )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {

@@ -355,6 +355,10 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         "fleet rps",
         "quota shed",
         "preempted",
+        "retries",
+        "breaker trips",
+        "faults",
+        "last scale error",
     ];
     let fmt = |f: fn(&Boxplot) -> f64| match &fleet.service {
         Some(b) => format!("{:.2}", f(b)),
@@ -381,6 +385,10 @@ pub fn fabric_fleet(fleet: &FleetReport) -> (Vec<&'static str>, Vec<Vec<String>>
         format!("{:.1}", fleet.throughput_rps),
         fleet.quota_shed.to_string(),
         fleet.preempted.to_string(),
+        fleet.retries.to_string(),
+        fleet.breaker_trips.to_string(),
+        fleet.faults_injected.to_string(),
+        fleet.last_scale_error.clone().unwrap_or_else(|| "-".into()),
     ];
     (headers, vec![row])
 }
@@ -608,6 +616,9 @@ pub fn continuum_sites(rows: &[SiteRunReport]) -> (Vec<&'static str>, Vec<Vec<St
         "J/req",
         "rps",
         "service (ms)*",
+        "brk trips",
+        "faults",
+        "last scale error",
     ];
     let out = rows
         .iter()
@@ -625,6 +636,9 @@ pub fn continuum_sites(rows: &[SiteRunReport]) -> (Vec<&'static str>, Vec<Vec<St
                 format!("{:.4}", r.energy.j_per_request),
                 format!("{:.1}", r.throughput_rps),
                 format!("{:.2}", r.mean_service_ms),
+                r.breaker_trips.to_string(),
+                r.faults_injected.to_string(),
+                r.last_scale_error.clone().unwrap_or_else(|| "-".into()),
             ]
         })
         .collect();
@@ -740,6 +754,13 @@ mod tests {
             service: None,
             mean_queue_wait_ms: 0.0,
             throughput_rps: 99.0,
+            retries: 4,
+            hedges_won: 0,
+            hedges_lost: 0,
+            breaker_trips: 2,
+            brownout_ms: 0.0,
+            faults_injected: 1,
+            last_scale_error: Some("lenet_GPU@cloud: boom".into()),
         };
         let (h, rows) = fabric_fleet(&fleet);
         assert_eq!(rows.len(), 1);
@@ -751,6 +772,10 @@ mod tests {
         assert_eq!(rows[0][8], "2/1", "scale up/down pair");
         assert_eq!(rows[0][14], "1", "quota sheds split out");
         assert_eq!(rows[0][15], "1", "preemptions split out");
+        assert_eq!(rows[0][16], "4", "resilience retries are a column");
+        assert_eq!(rows[0][17], "2", "breaker trips are a column");
+        assert_eq!(rows[0][18], "1", "injected faults are a column");
+        assert_eq!(rows[0][19], "lenet_GPU@cloud: boom", "scale errors surface");
 
         let no_cache = FleetReport { cache: None, ..fleet };
         let (_, rows) = fabric_fleet(&no_cache);

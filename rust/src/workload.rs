@@ -368,50 +368,143 @@ pub struct TraceEvent {
     pub model: String,
 }
 
+/// Typed failure of [`read_trace_csv`] — every parse-level variant
+/// carries the 1-based line number so a million-row trace pinpoints
+/// the offending record instead of a generic "bad CSV".
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// The file could not be read at all.
+    Io {
+        /// Path as given to the reader.
+        path: String,
+        /// OS-level error text.
+        error: String,
+    },
+    /// A row had fewer than the three `at_ms,site,model` columns.
+    TruncatedRow {
+        /// 1-based line number.
+        line: usize,
+        /// How many columns the row actually had.
+        found: usize,
+    },
+    /// The `at_ms` column did not parse as a finite number ≥ 0.
+    BadNumber {
+        /// 1-based line number.
+        line: usize,
+        /// The offending column text.
+        value: String,
+    },
+    /// Arrival times went backwards; the replayer refuses to sort
+    /// someone else's data silently.
+    OutOfOrder {
+        /// 1-based line number.
+        line: usize,
+        /// The offending arrival time.
+        at_ms: f64,
+        /// The previous (larger) arrival time.
+        prev_ms: f64,
+    },
+    /// `site` or `model` was empty after trimming.
+    EmptyField {
+        /// 1-based line number.
+        line: usize,
+    },
+    /// The file held headers/comments/blank lines but zero events.
+    NoEvents {
+        /// Path as given to the reader.
+        path: String,
+    },
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io { path, error } => write!(f, "reading trace {path}: {error}"),
+            TraceError::TruncatedRow { line, found } => write!(
+                f,
+                "trace line {line}: expected at_ms,site,model (3 columns), found {found}"
+            ),
+            TraceError::BadNumber { line, value } => {
+                write!(f, "trace line {line}: bad at_ms {value:?} (want a finite number >= 0)")
+            }
+            TraceError::OutOfOrder { line, at_ms, prev_ms } => write!(
+                f,
+                "trace line {line}: arrivals must be non-decreasing ({at_ms} after {prev_ms})"
+            ),
+            TraceError::EmptyField { line } => {
+                write!(f, "trace line {line}: site and model must be non-empty")
+            }
+            TraceError::NoEvents { path } => write!(f, "trace {path} contains no events"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
 /// Read a CSV trace of `at_ms,site,model` rows (header line, blank
-/// lines and `#` comments allowed).  Arrival times must be
+/// lines and `#` comments allowed).  Arrival times must be finite,
 /// non-negative and non-decreasing — the virtual-time replayer walks
 /// the trace front to back and refuses to sort someone else's data
-/// silently.
-pub fn read_trace_csv(path: impl AsRef<std::path::Path>) -> anyhow::Result<Vec<TraceEvent>> {
+/// silently.  Every malformed row is a typed, line-numbered
+/// [`TraceError`]; only a literal `at_ms,...` header row is skipped,
+/// so a garbage first line fails loudly instead of vanishing.
+pub fn read_trace_csv(
+    path: impl AsRef<std::path::Path>,
+) -> Result<Vec<TraceEvent>, TraceError> {
     let path = path.as_ref();
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let text = std::fs::read_to_string(path).map_err(|e| TraceError::Io {
+        path: path.display().to_string(),
+        error: e.to_string(),
+    })?;
+    parse_trace_csv(&text, path)
+}
+
+/// The parsing core of [`read_trace_csv`], split from the I/O so tests
+/// and in-memory traces exercise the exact validation the file path
+/// sees.  `path` is only used in the [`TraceError::NoEvents`] message.
+pub fn parse_trace_csv(
+    text: &str,
+    path: impl AsRef<std::path::Path>,
+) -> Result<Vec<TraceEvent>, TraceError> {
     let mut out = Vec::new();
     let mut last = 0.0f64;
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
+    let mut seen_row = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = lineno + 1;
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let mut cols = line.split(',').map(str::trim);
-        let (Some(at), Some(site), Some(model)) = (cols.next(), cols.next(), cols.next())
-        else {
-            anyhow::bail!("trace line {}: expected at_ms,site,model", lineno + 1);
-        };
-        let Ok(at_ms) = at.parse::<f64>() else {
-            if out.is_empty() && lineno == 0 {
-                continue; // header row
-            }
-            anyhow::bail!("trace line {}: bad at_ms {at:?}", lineno + 1);
-        };
-        if !(at_ms >= 0.0) {
-            anyhow::bail!("trace line {}: at_ms must be >= 0, got {at_ms}", lineno + 1);
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        // A header row is recognised by name, not by failing to parse:
+        // only the first non-blank, non-comment line may carry one.
+        if !seen_row && cols[0].eq_ignore_ascii_case("at_ms") {
+            continue;
         }
+        seen_row = true;
+        if cols.len() < 3 {
+            return Err(TraceError::TruncatedRow { line: lineno, found: cols.len() });
+        }
+        let (at, site, model) = (cols[0], cols[1], cols[2]);
+        let at_ms = match at.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => v,
+            _ => return Err(TraceError::BadNumber { line: lineno, value: at.to_string() }),
+        };
         if at_ms < last {
-            anyhow::bail!(
-                "trace line {}: arrivals must be non-decreasing ({at_ms} after {last})",
-                lineno + 1
-            );
+            return Err(TraceError::OutOfOrder {
+                line: lineno,
+                at_ms,
+                prev_ms: last,
+            });
         }
         if site.is_empty() || model.is_empty() {
-            anyhow::bail!("trace line {}: site and model must be non-empty", lineno + 1);
+            return Err(TraceError::EmptyField { line: lineno });
         }
         last = at_ms;
         out.push(TraceEvent { at_ms, site: site.to_string(), model: model.to_string() });
     }
     if out.is_empty() {
-        anyhow::bail!("trace {} contains no events", path.display());
+        return Err(TraceError::NoEvents { path: path.as_ref().display().to_string() });
     }
     Ok(out)
 }
@@ -598,5 +691,80 @@ mod tests {
         std::fs::write(&path, "1,edge\n").unwrap();
         assert!(read_trace_csv(&path).is_err(), "missing column rejected");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trace_errors_are_typed_and_line_numbered() {
+        let p = "t.csv";
+        assert_eq!(
+            parse_trace_csv("at_ms,site,model\n0,edge,lenet\n7,cloud\n", p),
+            Err(TraceError::TruncatedRow { line: 3, found: 2 }),
+            "truncated row names the exact line and column count"
+        );
+        assert_eq!(
+            parse_trace_csv("0,edge,lenet\n\n# note\nx9,edge,lenet\n", p),
+            Err(TraceError::BadNumber { line: 4, value: "x9".into() }),
+            "bad number skips blanks/comments but keeps file line numbers"
+        );
+        assert_eq!(
+            parse_trace_csv("at_ms,site,model\n-1,edge,lenet\n", p),
+            Err(TraceError::BadNumber { line: 2, value: "-1".into() }),
+            "negative arrival time is a bad number"
+        );
+        assert_eq!(
+            parse_trace_csv("at_ms,site,model\nnan,edge,lenet\n", p),
+            Err(TraceError::BadNumber { line: 2, value: "nan".into() }),
+            "non-finite arrival time is a bad number"
+        );
+        assert_eq!(
+            parse_trace_csv("5,edge,lenet\n2,edge,lenet\n", p),
+            Err(TraceError::OutOfOrder { line: 2, at_ms: 2.0, prev_ms: 5.0 }),
+            "regressions name both timestamps"
+        );
+        assert_eq!(
+            parse_trace_csv("1,,lenet\n", p),
+            Err(TraceError::EmptyField { line: 1 }),
+            "empty site is rejected"
+        );
+        assert_eq!(
+            parse_trace_csv("", p),
+            Err(TraceError::NoEvents { path: p.into() }),
+            "empty file is a typed error, not a panic"
+        );
+        assert_eq!(
+            parse_trace_csv("# only comments\n\nat_ms,site,model\n", p),
+            Err(TraceError::NoEvents { path: p.into() }),
+            "header-and-comments-only file has no events"
+        );
+        let err = parse_trace_csv("0,edge,lenet\n3,cloud\n", p).unwrap_err();
+        assert!(
+            err.to_string().contains("line 2"),
+            "display carries the line number: {err}"
+        );
+    }
+
+    #[test]
+    fn trace_header_is_matched_by_name_not_by_parse_failure() {
+        let p = "t.csv";
+        // Uppercase header on the first data line is still a header.
+        let ev = parse_trace_csv("AT_MS,SITE,MODEL\n3,edge,lenet\n", p).unwrap();
+        assert_eq!(ev.len(), 1);
+        // A garbage first line is NOT silently treated as a header.
+        assert_eq!(
+            parse_trace_csv("oops,edge,lenet\n3,edge,lenet\n", p),
+            Err(TraceError::BadNumber { line: 1, value: "oops".into() }),
+            "non-header garbage on line 1 fails loudly"
+        );
+        // A header after the first data row is data, and fails.
+        assert!(
+            parse_trace_csv("0,edge,lenet\nat_ms,site,model\n", p).is_err(),
+            "mid-file header is not skipped"
+        );
+    }
+
+    #[test]
+    fn trace_read_missing_file_is_io_error() {
+        let err = read_trace_csv("/nonexistent/tf2aif_no_such_trace.csv").unwrap_err();
+        assert!(matches!(err, TraceError::Io { .. }), "got {err:?}");
     }
 }

@@ -15,6 +15,7 @@
 use tf2aif::fabric::des::{
     run_des, Clock, DesConfig, DesModel, DesScenario, DesSite, EventHeap, SimClock,
 };
+use tf2aif::fabric::FaultPlan;
 use tf2aif::util::rng::Rng;
 use tf2aif::workload::RateCurve;
 
@@ -154,6 +155,7 @@ fn random_scenario(seed: u64) -> DesScenario {
         rtt_ms,
         trace: None,
         drills: Vec::new(),
+        faults: FaultPlan::default(),
         cfg: DesConfig {
             queue_capacity: 2 + rng.below(14),
             max_batch: 1 + rng.below(8),

@@ -1,0 +1,245 @@
+//! Property-style tests for the chaos fabric — randomized inputs under
+//! fixed seeds (deterministic, reproducible), checking the load-bearing
+//! resilience invariant from both directions:
+//!
+//! - Threaded fabric: K-way deduplicated submissions whose shared work
+//!   item is seized by a pod crash yield exactly K terminal verdicts —
+//!   every follower is notified, nobody hangs, nobody hears twice.
+//! - Virtual time: randomly generated fault storms (crashes,
+//!   stragglers, partitions, site flaps) over random two-site scenarios
+//!   conserve every request and replay byte-identically.
+
+use std::sync::Arc;
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::fabric::des::{
+    run_des, DesConfig, DesModel, DesScenario, DesSite,
+};
+use tf2aif::fabric::sim::{synthetic_catalog, Gate};
+use tf2aif::fabric::{
+    BreakerConfig, BrownoutConfig, Fabric, FabricConfig, Fault, FaultPlan, HedgePolicy,
+    Outcome, ResilienceConfig, RetryPolicy, Submission,
+};
+use tf2aif::util::rng::Rng;
+use tf2aif::workload::RateCurve;
+
+fn place(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
+    let backend = Backend::new(synthetic_catalog(), Policy::MinLatency);
+    let mut cluster = Cluster::new(paper_testbed());
+    cluster.apply_kube_api_extension();
+    Fabric::place_sim(&backend, cluster, cfg, gate).unwrap()
+}
+
+#[test]
+fn crashed_dedup_group_yields_exactly_one_verdict_per_follower() {
+    // One gated lenet replica.  A pin submission blocks the worker
+    // in-flight; D distinct requests plus one K-way deduplicated group
+    // queue up behind it.  Crashing the pod must hand every queued
+    // waiter — including all K dedup followers sharing one work item —
+    // exactly one terminal verdict, while the in-flight pin completes
+    // normally once the gate opens.  Randomized over D, K and the
+    // retry/breaker policies; the routing itself is deterministic.
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0xC8A5 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let d = 1 + rng.below(5);
+        let k = 2 + rng.below(5);
+        let retry_on = rng.below(2) == 1;
+        let breaker_on = rng.below(2) == 1;
+        let gate = Gate::closed_gate();
+        let cfg = FabricConfig {
+            time_scale: 0.0,
+            replicas_per_model: 1,
+            queue_capacity: 16,
+            workers: 1,
+            resilience: ResilienceConfig {
+                retry: if retry_on { Some(RetryPolicy::default()) } else { None },
+                breaker: if breaker_on { Some(BreakerConfig::default()) } else { None },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let fabric = place(&cfg, Some(Arc::clone(&gate)));
+
+        let Submission::Enqueued(pin) = fabric.submit("lenet", vec![-1.0; 8]).unwrap()
+        else {
+            panic!("seed {seed}: idle fabric must admit the pin");
+        };
+        gate.await_blocked(1);
+
+        let mut queued = Vec::new();
+        for i in 0..d {
+            match fabric.submit("lenet", vec![i as f32 + 1.0; 8]).unwrap() {
+                Submission::Enqueued(rx) => queued.push(rx),
+                Submission::Shed => panic!("seed {seed}: queue has room for item {i}"),
+            }
+        }
+        let mut followers = Vec::new();
+        for j in 0..k {
+            match fabric.submit("lenet", vec![999.0; 8]).unwrap() {
+                Submission::Enqueued(rx) => followers.push(rx),
+                Submission::Shed => panic!("seed {seed}: dedup follower {j} shed"),
+            }
+        }
+        assert_eq!(
+            fabric.dedup_hits(),
+            (k - 1) as u64,
+            "seed {seed}: followers after the first attach to the in-flight entry"
+        );
+
+        let idx = fabric.plans().iter().position(|p| p.model == "lenet").unwrap();
+        let seized = fabric.inject_pod_crash(idx).unwrap();
+        assert_eq!(
+            seized,
+            d + 1,
+            "seed {seed}: the crash seizes the D distinct items plus one dedup work item"
+        );
+        gate.open();
+
+        assert!(
+            matches!(pin.recv().unwrap(), Outcome::Completed(_)),
+            "seed {seed}: in-flight work survives the crash of its own pod's queue"
+        );
+        for (i, rx) in queued.into_iter().chain(followers).enumerate() {
+            assert!(
+                matches!(rx.recv().unwrap(), Outcome::Failed(_)),
+                "seed {seed}: waiter {i} must hear a terminal verdict (no hang)"
+            );
+            assert!(
+                rx.try_recv().is_err(),
+                "seed {seed}: waiter {i} must hear exactly once (no double delivery)"
+            );
+        }
+
+        let fleet = fabric.fleet_report(1.0);
+        assert_eq!(fleet.faults_injected, 1, "seed {seed}");
+        if retry_on {
+            assert_eq!(
+                fleet.retries,
+                (d + 1) as u64,
+                "seed {seed}: each seized work item consumed one retry before failing"
+            );
+        } else {
+            assert_eq!(fleet.retries, 0, "seed {seed}: no retry policy, no retries");
+        }
+        if breaker_on {
+            assert!(
+                fleet.breaker_trips >= 1,
+                "seed {seed}: the crash force-opens the pod's breaker"
+            );
+        }
+        fabric.shutdown();
+    }
+}
+
+/// A random but seed-determined two-site scenario carrying a random
+/// fault storm: crashes (with and without restart), stragglers,
+/// partitions and site flaps at random times, under randomly toggled
+/// hedge/breaker/brownout policies (retry always on).
+fn random_chaos_scenario(seed: u64) -> DesScenario {
+    let mut rng = Rng::new(0xFA17 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let variants = ["GPU", "AGX", "ARM"];
+    let sites: Vec<DesSite> = (0..2)
+        .map(|i| DesSite {
+            name: format!("s{i}"),
+            tier: if i == 0 { "cloud".to_string() } else { "edge".to_string() },
+            variant: variants[rng.below(variants.len())].to_string(),
+            pods: 1 + rng.below(2),
+            arrivals: Some(RateCurve::Constant { rps: rng.range_f64(10.0, 50.0) }),
+        })
+        .collect();
+    let mut faults = Vec::new();
+    for _ in 0..1 + rng.below(4) {
+        let site = format!("s{}", rng.below(2));
+        let at_s = rng.range_f64(2.0, 20.0);
+        let fault = match rng.below(4) {
+            0 => Fault::PodCrash {
+                at_s,
+                site,
+                pod: 0,
+                restart_s: if rng.below(2) == 1 {
+                    Some(at_s + rng.range_f64(1.0, 8.0))
+                } else {
+                    None
+                },
+            },
+            1 => Fault::Straggler {
+                at_s,
+                until_s: at_s + rng.range_f64(1.0, 8.0),
+                site,
+                factor: rng.range_f64(2.0, 8.0),
+            },
+            2 => Fault::Partition {
+                at_s,
+                heal_s: at_s + rng.range_f64(1.0, 6.0),
+                a: "s0".to_string(),
+                b: "s1".to_string(),
+            },
+            _ => Fault::SiteFlap {
+                at_s,
+                recover_s: at_s + rng.range_f64(1.0, 6.0),
+                site,
+            },
+        };
+        faults.push(fault);
+    }
+    let resilience = ResilienceConfig {
+        retry: Some(RetryPolicy::default()),
+        hedge: if rng.below(2) == 1 { Some(HedgePolicy::default()) } else { None },
+        breaker: if rng.below(2) == 1 { Some(BreakerConfig::default()) } else { None },
+        brownout: if rng.below(2) == 1 { Some(BrownoutConfig::default()) } else { None },
+    };
+    DesScenario {
+        name: format!("chaos-{seed}"),
+        horizon_s: 30.0,
+        models: vec![
+            DesModel { name: "lenet".to_string(), gflops: 0.001 },
+            DesModel { name: "resnet50".to_string(), gflops: 0.168 },
+        ],
+        sites,
+        rtt_ms: vec![vec![0.0, 12.0], vec![12.0, 0.0]],
+        trace: None,
+        drills: Vec::new(),
+        faults: FaultPlan { name: format!("chaos-plan-{seed}"), faults },
+        cfg: DesConfig {
+            queue_capacity: 2 + rng.below(14),
+            max_batch: 1 + rng.below(8),
+            resilience,
+            seed: seed.wrapping_add(0xFEE1),
+            ..DesConfig::default()
+        },
+    }
+}
+
+#[test]
+fn random_fault_storms_conserve_every_request() {
+    for seed in 0..6u64 {
+        let report = run_des(&random_chaos_scenario(seed)).unwrap();
+        assert!(report.submitted > 0, "seed {seed}: load was offered");
+        assert!(report.faults_injected > 0, "seed {seed}: the plan must actually fire");
+        assert!(
+            report.conservation_holds(),
+            "seed {seed}: {} submitted != {} completed + {} cached + {} shed \
+             + {} quota-shed + {} failed",
+            report.submitted,
+            report.completed,
+            report.cache_hits,
+            report.shed,
+            report.quota_shed,
+            report.failed,
+        );
+    }
+}
+
+#[test]
+fn random_fault_storms_replay_byte_identically() {
+    for seed in [0u64, 2, 5] {
+        let first = run_des(&random_chaos_scenario(seed)).unwrap();
+        let second = run_des(&random_chaos_scenario(seed)).unwrap();
+        assert_eq!(
+            first.canonical_json(),
+            second.canonical_json(),
+            "seed {seed}: the same storm must replay to identical bytes"
+        );
+    }
+}

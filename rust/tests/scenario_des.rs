@@ -90,6 +90,44 @@ fn trace_replay_is_deterministic_and_conserves() {
 }
 
 #[test]
+fn storm_injects_faults_and_loses_no_admitted_work() {
+    // The load-bearing chaos invariant at tier-1: the canned storm's
+    // fault plan actually fires, and every admitted request still
+    // reaches exactly one terminal verdict (request conservation holds
+    // globally and per site).  Replay is byte-identical under the same
+    // seed even with crashes, stragglers, partitions and flaps racing
+    // the replanner.
+    let first = run_des(&canned("site-loss-storm", 19).unwrap()).unwrap();
+    let second = run_des(&canned("site-loss-storm", 19).unwrap()).unwrap();
+    assert!(first.faults_injected > 0, "the storm's fault plan must fire");
+    assert!(first.conservation_holds(), "zero lost admitted work under the storm");
+    assert_eq!(
+        first.canonical_json(),
+        second.canonical_json(),
+        "the storm replays byte-identically under the same seed"
+    );
+    // The resilience section is part of the canonical schema.
+    let doc = Json::parse(&first.canonical_json()).unwrap();
+    let res = doc.get("resilience").unwrap();
+    for key in [
+        "hedges_launched",
+        "hedges_won",
+        "hedges_lost",
+        "breaker_trips",
+        "breakers_open_end",
+        "brownout_ms",
+        "faults_injected",
+    ] {
+        assert!(res.get(key).unwrap().f64().unwrap() >= 0.0, "resilience.{key}");
+    }
+    assert_eq!(
+        res.get("faults_injected").unwrap().usize().unwrap() as u64,
+        first.faults_injected,
+        "the canonical report mirrors the in-memory counter"
+    );
+}
+
+#[test]
 fn canonical_report_parses_with_schema_fields() {
     let report = run_des(&canned("site-loss-storm", 4).unwrap()).unwrap();
     let doc = Json::parse(&report.canonical_json()).expect("canonical JSON parses");
