@@ -50,12 +50,12 @@ fn main() -> anyhow::Result<()> {
 
         // 2. Full server handle.
         let srv = Arc::clone(&server);
-        let img2 = img.clone();
+        let img2: Arc<[f32]> = img.clone().into();
         let mut n = 0u64;
         let mut s = common::bench_ms(3, iters, || {
             n += 1;
             std::hint::black_box(
-                srv.handle(&Request { id: n, payload: img2.clone() }).unwrap(),
+                srv.handle(&Request { id: n, payload: Arc::clone(&img2) }).unwrap(),
             );
         });
         common::summarize("L3 server handle (pre+infer+post)", &mut s);
@@ -72,11 +72,11 @@ fn main() -> anyhow::Result<()> {
             Arc::clone(&server),
             BatcherConfig { max_batch: 8, workers: 1 },
         );
-        let img3 = img.clone();
+        let img3: Arc<[f32]> = img.clone().into();
         let mut m = 1_000_000u64;
         let mut s = common::bench_ms(3, iters, || {
             m += 1;
-            let rx = handle.submit(Request { id: m, payload: img3.clone() });
+            let rx = handle.submit(Request { id: m, payload: Arc::clone(&img3) });
             std::hint::black_box(rx.recv().unwrap().unwrap());
         });
         common::summarize("L3 queued round-trip (1 in flight)", &mut s);
@@ -96,6 +96,60 @@ fn main() -> anyhow::Result<()> {
             );
         });
         common::summarize("manifest JSON parse", &mut s);
+    }
+
+    // 5. Fabric submit→verdict round-trip over zero-work pods — the
+    //    router/queue/dedup overhead in isolation (no artifacts needed;
+    //    `tf2aif bench --hotpath` is the saturation version of this).
+    fabric_roundtrip(iters)?;
+    Ok(())
+}
+
+fn fabric_roundtrip(iters: usize) -> anyhow::Result<()> {
+    use tf2aif::backend::{Backend, Policy};
+    use tf2aif::cluster::{paper_testbed, Cluster};
+    use tf2aif::fabric::{sim, Fabric, FabricConfig, Outcome, Submission};
+
+    println!("\n─ fabric submit→verdict (NullPod, zero-work executors)");
+    for (label, dedup) in [("dedup off", false), ("dedup on", true)] {
+        let cfg = FabricConfig {
+            queue_capacity: 256,
+            max_batch: 16,
+            workers: 1,
+            replicas_per_model: 1,
+            time_scale: 0.0,
+            fused: true,
+            dedup,
+            cache_capacity: 0,
+            ..Default::default()
+        };
+        let backend =
+            Backend::new(sim::synthetic_catalog_for(&["mobilenetv1"]), Policy::MinLatency);
+        let mut cluster = Cluster::new(paper_testbed());
+        cluster.apply_kube_api_extension();
+        let fabric = Fabric::place_null(&backend, cluster, &cfg)?;
+        let model = fabric.models().first().cloned().expect("placed model");
+        let mut k = 0u64;
+        let payloads: Vec<Arc<[f32]>> = (0..256)
+            .map(|i| {
+                let mut p = vec![0.125f32; 64];
+                p[0] = i as f32;
+                p.into()
+            })
+            .collect();
+        let mut s = common::bench_ms(3, iters.max(100), || {
+            k += 1;
+            let payload = Arc::clone(&payloads[(k as usize) % payloads.len()]);
+            match fabric.submit(&model, payload).unwrap() {
+                Submission::Enqueued(rx) => match rx.recv().unwrap() {
+                    Outcome::Completed(_) => {}
+                    other => panic!("null pod never sheds/fails: {other:?}"),
+                },
+                Submission::Shed => panic!("closed loop cannot shed"),
+            }
+        });
+        common::summarize(&format!("submit→verdict round-trip ({label})"), &mut s);
+        fabric.shutdown();
     }
     Ok(())
 }

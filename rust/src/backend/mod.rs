@@ -73,8 +73,10 @@ pub struct Decision {
 
 /// The backend: an index of available artifacts + a policy.
 pub struct Backend {
-    /// model name → its artifacts (all variants found on disk).
-    index: BTreeMap<String, Vec<Artifact>>,
+    /// model name → its artifacts (all variants found on disk).  Shared
+    /// (`Arc`) so catalog snapshots, continuum replans and autoscaler
+    /// scale-ups move a refcount instead of cloning weight bytes.
+    index: BTreeMap<String, Vec<Arc<Artifact>>>,
     /// Active selection policy.
     pub policy: Policy,
     /// Consider native `*_TF` variants during selection (off by default —
@@ -91,9 +93,17 @@ pub struct Backend {
 }
 
 impl Backend {
-    /// Index artifacts by model under a policy.
+    /// Index artifacts by model under a policy (each artifact is moved
+    /// behind an `Arc` exactly once, here).
     pub fn new(artifacts: Vec<Artifact>, policy: Policy) -> Backend {
-        let mut index: BTreeMap<String, Vec<Artifact>> = BTreeMap::new();
+        Backend::from_shared(artifacts.into_iter().map(Arc::new).collect(), policy)
+    }
+
+    /// Index an already-shared catalog (continuum replans and the
+    /// autoscaler rebuild backends over the same artifacts — this path
+    /// bumps refcounts instead of cloning weight bytes).
+    pub fn from_shared(artifacts: Vec<Arc<Artifact>>, policy: Policy) -> Backend {
+        let mut index: BTreeMap<String, Vec<Arc<Artifact>>> = BTreeMap::new();
         for a in artifacts {
             index.entry(a.manifest.model.clone()).or_default().push(a);
         }
@@ -105,8 +115,8 @@ impl Backend {
         self.index.keys().map(String::as_str).collect()
     }
 
-    /// Every artifact (variant) of a model.
-    pub fn variants_of(&self, model: &str) -> Vec<&Artifact> {
+    /// Every artifact (variant) of a model, as shared handles.
+    pub fn variants_of(&self, model: &str) -> Vec<&Arc<Artifact>> {
         self.index.get(model).map(|v| v.iter().collect()).unwrap_or_default()
     }
 
@@ -193,8 +203,8 @@ impl Backend {
             .find(|a| a.manifest.variant == d.variant)
             .unwrap();
         let pod = cluster.bind(&d.aif, &d.variant, &d.node, Self::pod_memory_gb(artifact))?;
-        // One placement-time clone, then shared with the runtime host.
-        let artifact = Arc::new(artifact.clone());
+        // Shared with the runtime host — a refcount bump, not a clone.
+        let artifact = Arc::clone(artifact);
         let server = AifServer::deploy(engine, &artifact, Arc::new(ImageClassify))?;
         Ok(Deployment { decision: d, pod, server: Arc::new(server) })
     }

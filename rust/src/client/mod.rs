@@ -90,7 +90,7 @@ impl Client {
                 std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.002)));
             }
             let payload = image_like(&mut rng, h, w, c);
-            match self.server.handle(&Request { id: i as u64, payload }) {
+            match self.server.handle(&Request { id: i as u64, payload: payload.into() }) {
                 Ok(resp) => {
                     service.push(resp.service_ms);
                     real.push(resp.real_compute_ms);
@@ -119,7 +119,7 @@ impl Client {
         for (i, fx) in fixtures.iter().enumerate() {
             let resp = self
                 .server
-                .handle(&Request { id: u64::MAX - i as u64, payload: fx.input.clone() })?;
+                .handle(&Request { id: u64::MAX - i as u64, payload: fx.input.clone().into() })?;
             let expected = pp.postprocess(&fx.expected);
             if resp.prediction.class != expected.class {
                 bail!(

@@ -203,7 +203,7 @@ impl ContinuumRunReport {
 /// The continuum orchestrator — see the module docs.
 pub struct ContinuumOrchestrator {
     topology: Topology,
-    catalog: Vec<Artifact>,
+    catalog: Vec<Arc<Artifact>>,
     policy: PlanPolicy,
     demand_site: String,
     cfg: FabricConfig,
@@ -234,6 +234,10 @@ impl ContinuumOrchestrator {
         cfg: &FabricConfig,
         gates: &BTreeMap<String, Arc<Gate>>,
     ) -> Result<ContinuumOrchestrator> {
+        // Wrap every artifact once; replans and per-site backends from
+        // here on share the same weight bytes by refcount.
+        let catalog: Vec<Arc<Artifact>> =
+            catalog.into_iter().map(Arc::new).collect();
         let mut planner =
             Planner::new(topology.clone(), catalog.clone(), policy, demand_site)?;
         planner.replicas_per_site = cfg.replicas_per_model;
@@ -258,12 +262,14 @@ impl ContinuumOrchestrator {
             }
             let gate = gates.get(&site.name).cloned();
             let spawn = |models: &BTreeSet<&str>| -> Result<Fabric> {
-                let site_catalog: Vec<Artifact> = catalog
+                // `.cloned()` on `&Arc<Artifact>` bumps refcounts — no
+                // model weight bytes are copied per site.
+                let site_catalog: Vec<Arc<Artifact>> = catalog
                     .iter()
                     .filter(|a| models.contains(a.manifest.model.as_str()))
                     .cloned()
                     .collect();
-                let backend = Backend::new(site_catalog, backend_policy);
+                let backend = Backend::from_shared(site_catalog, backend_policy);
                 let mut cluster = Cluster::new(site.nodes.clone());
                 cluster.apply_kube_api_extension();
                 Fabric::place_sim(&backend, cluster, cfg, gate.clone())
@@ -362,7 +368,12 @@ impl ContinuumOrchestrator {
     /// request to the next; only when every ranked site sheds does the
     /// submission come back [`ContinuumSubmission::Shed`] — counted,
     /// never silent.
-    pub fn submit(&mut self, model: &str, mut payload: Vec<f32>) -> Result<ContinuumSubmission> {
+    pub fn submit(
+        &mut self,
+        model: &str,
+        payload: impl Into<Arc<[f32]>>,
+    ) -> Result<ContinuumSubmission> {
+        let payload: Arc<[f32]> = payload.into();
         // Disjoint field borrows: the plan and loss set are read while
         // the site map is mutated, so candidates are plain references —
         // the admitted site's name is the only string cloned.
@@ -379,14 +390,11 @@ impl ContinuumOrchestrator {
         }
         let mut spilled = false;
         let mut routed = None;
-        let last = ranked.len() - 1;
-        for (i, p) in ranked.iter().enumerate() {
+        for p in &ranked {
             let Some(rt) = sites.get_mut(&p.site) else { continue };
-            // The payload is moved into the final candidate; only a
-            // spill chain with candidates still ahead pays a copy.
-            let attempt =
-                if i == last { std::mem::take(&mut payload) } else { payload.clone() };
-            match rt.fabric.submit(model, attempt) {
+            // Zero-copy re-routing: every candidate in the spill chain
+            // shares the same payload allocation by refcount.
+            match rt.fabric.submit(model, Arc::clone(&payload)) {
                 Ok(Submission::Enqueued(rx)) => {
                     rt.admitted += 1;
                     if spilled {

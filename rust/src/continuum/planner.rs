@@ -21,6 +21,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -190,8 +191,9 @@ impl DeploymentPlan {
 pub struct Planner {
     /// The network of sites being planned over.
     pub topology: Topology,
-    /// Artifact catalog (every model × variant on offer).
-    pub catalog: Vec<Artifact>,
+    /// Artifact catalog (every model × variant on offer), shared —
+    /// replans clone refcounts, never weight bytes.
+    pub catalog: Vec<Arc<Artifact>>,
     /// Placement objective.
     pub policy: PlanPolicy,
     /// Site the demand originates at; link costs are charged from here.
@@ -207,16 +209,14 @@ pub struct Planner {
 }
 
 impl Planner {
-    /// A planner over `topology` with no losses or drains.
-    ///
-    /// Takes the catalog by value because [`Backend::new`] does; with
-    /// the synthetic (sim) catalogs the continuum runs on today those
-    /// are manifest-only clones.  Before a real-artifact continuum,
-    /// thread `Arc<Artifact>` through `Backend` so replans stop copying
-    /// weight bytes (ROADMAP).
+    /// A planner over `topology` with no losses or drains.  The catalog
+    /// is held as shared handles: replanning after a site loss (or
+    /// re-ranking at any cadence) moves refcounts only.  Accepts plain
+    /// `Vec<Artifact>` (each artifact wrapped once, here) or an
+    /// already-shared `Vec<Arc<Artifact>>` (no copies at all).
     pub fn new(
         topology: Topology,
-        catalog: Vec<Artifact>,
+        catalog: impl IntoIterator<Item = impl Into<Arc<Artifact>>>,
         policy: PlanPolicy,
         demand_site: impl Into<String>,
     ) -> Result<Planner> {
@@ -226,7 +226,7 @@ impl Planner {
         }
         Ok(Planner {
             topology,
-            catalog,
+            catalog: catalog.into_iter().map(Into::into).collect(),
             policy,
             demand_site,
             replicas_per_site: 1,
@@ -258,7 +258,7 @@ impl Planner {
         if clusters.is_empty() {
             bail!("no surviving sites to plan over");
         }
-        let backend = Backend::new(self.catalog.clone(), Policy::MinLatency);
+        let backend = Backend::from_shared(self.catalog.clone(), Policy::MinLatency);
         let models: Vec<String> = backend.models().iter().map(|m| m.to_string()).collect();
         if models.is_empty() {
             bail!("catalog has no models to place");

@@ -36,15 +36,30 @@
 //!    `bit_reproducible` verdict CI gates on — plus a seed-variation
 //!    check proving the scenario RNG actually steers outcomes, and the
 //!    engine's events/second as the replay-speed trajectory.
+//! 7. **Hotpath** (schema v7, `tf2aif bench --hotpath`): the
+//!    submit→verdict overhead harness — the fabric at saturation over
+//!    zero-work [`sim::NullPod`] executors, payload sizes bracketed
+//!    small/large, dedup on/off, tenancy on/off, reporting
+//!    requests/sec/core plus p50/p99 submit→verdict latency.  Two
+//!    `legacy-*` arms re-impose the emulated pre-v7 per-submit costs
+//!    (full-payload sha256 keying + a `Vec<f32>` payload copy) so the
+//!    speedup is measured, and CI gates a requests/sec/core floor plus
+//!    the `dedup_two_tier_no_regression` verdict.
 //!
-//! Dedup and the response cache are disabled for every measurement (the
-//! payload pool recycles tensors; collapsing them would measure
-//! memoization, not batching or scaling), and compared sides share the
-//! workload seed, the placement, and the submission loop.
+//! Dedup and the response cache are disabled for every sweep
+//! measurement (the payload pool recycles tensors; collapsing them
+//! would measure memoization, not batching or scaling) — only the
+//! hotpath harness turns dedup on, in the arms built to measure it —
+//! and compared sides share the workload seed, the placement, and the
+//! submission loop.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
+
+use sha2::{Digest as _, Sha256};
 
 use anyhow::{bail, Context as _, Result};
 
@@ -59,7 +74,7 @@ use crate::util::rng::Rng;
 use crate::workload::{image_like, Arrival, TenantMix};
 
 use super::tenancy::{self, ScenarioVerdicts, TenantReport, TenantSpec};
-use super::{des, sim, AutoscaleConfig, Fabric, FabricConfig};
+use super::{des, sim, AutoscaleConfig, Fabric, FabricConfig, Outcome, Submission};
 
 /// Sweep configuration (CLI: `tf2aif bench`, see `docs/CLI.md`).
 #[derive(Debug, Clone)]
@@ -364,12 +379,12 @@ fn drive(cfg: &BenchConfig, fcfg: &FabricConfig, rate: f64) -> Result<DriveOutco
     // and accounting are identical to `tf2aif fabric`.
     let models = fabric.models();
     let mut pool_rng = Rng::new(cfg.seed ^ 0x9E37_79B9);
-    let pools: BTreeMap<String, Vec<Vec<f32>>> = models
+    let pools: BTreeMap<String, Vec<Arc<[f32]>>> = models
         .iter()
         .map(|m| {
             let (h, w, c) = fabric.input_shape(m).unwrap_or((8, 8, 1));
             let pool = (0..cfg.payload_pool.max(1))
-                .map(|_| image_like(&mut pool_rng, h, w, c))
+                .map(|_| image_like(&mut pool_rng, h, w, c).into())
                 .collect();
             (m.clone(), pool)
         })
@@ -381,7 +396,7 @@ fn drive(cfg: &BenchConfig, fcfg: &FabricConfig, rate: f64) -> Result<DriveOutco
         cfg.seed,
         |_rng: &mut Rng, model: &str, i: usize| {
             let pool = &pools[model];
-            pool[(i / models.len()) % pool.len()].clone()
+            Arc::clone(&pool[(i / models.len()) % pool.len()])
         },
     )?;
 
@@ -769,6 +784,342 @@ pub fn run_resilience_bench(cfg: &BenchConfig) -> Result<ResilienceBench> {
     })
 }
 
+// ─────────────────── hotpath harness (schema v7) ────────────────────
+
+/// Requests/sec/core the CI `hotpath-floor` job gates on (measured on
+/// the small-distinct dedup-off arm — pure submit→verdict overhead with
+/// zero-work executors).
+pub const HOTPATH_FLOOR_RPS_PER_CORE: f64 = 10_000.0;
+
+/// Small bracketing payload: 64 f32s (256 bytes).
+const HOTPATH_SMALL: usize = 64;
+/// Large bracketing payload: 4096 f32s (16 KiB) — big enough that
+/// hashing and copy costs dominate router bookkeeping.
+const HOTPATH_LARGE: usize = 4096;
+/// Distinct payloads cycled per submit thread.
+const HOTPATH_POOL: usize = 256;
+
+/// One saturation arm of the submit→verdict overhead harness.
+#[derive(Debug, Clone)]
+pub struct HotpathArm {
+    /// Arm name (`small-distinct`, `legacy-large`, …).
+    pub name: String,
+    /// f32s per payload.
+    pub payload_len: usize,
+    /// In-flight dedup enabled for this arm.
+    pub dedup: bool,
+    /// Multi-tenant admission (two weighted lanes) for this arm.
+    pub tenants: bool,
+    /// Closed-loop submit threads driven at saturation.
+    pub threads: usize,
+    /// Requests offered.
+    pub submitted: u64,
+    /// Requests that reached a Completed verdict.
+    pub completed: u64,
+    /// Requests shed (admission bound or preemption).
+    pub shed: u64,
+    /// Requests that failed terminally.
+    pub failed: u64,
+    /// Submissions answered by in-flight dedup.
+    pub dedup_hits: u64,
+    /// sha256 confirm digests computed on the submit path.
+    pub sha_confirms: u64,
+    /// Drive wall-clock, seconds.
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub rps: f64,
+    /// `rps / cores` — the trajectory number.
+    pub rps_per_core: f64,
+    /// Median submit→verdict latency, µs.
+    pub p50_us: f64,
+    /// 99th-percentile submit→verdict latency, µs.
+    pub p99_us: f64,
+    /// Every offered request reached exactly one terminal verdict.
+    pub conservation: bool,
+}
+
+/// The hotpath measurement (schema v7 `hotpath` section): the fabric
+/// driven at saturation with zero-work [`sim::NullPod`] executors so
+/// the only thing on the clock is submit→verdict overhead — routing,
+/// admission, queue staging, dedup hashing, fan-out and verdict
+/// delivery.  Payload sizes are bracketed small/large, dedup on/off,
+/// tenancy on/off; two `legacy-*` arms re-impose the pre-v7 per-submit
+/// costs (full-payload sha256 keying plus one `Vec<f32>` payload copy)
+/// on the same fabric, so the speedup is measured against an emulated
+/// baseline (`baseline = "emulated-v6-costs"`), not asserted.
+#[derive(Debug, Clone)]
+pub struct HotpathBench {
+    /// Requests offered per arm.
+    pub requests: usize,
+    /// Cores the per-core numbers are normalized by.
+    pub cores: usize,
+    /// The CI floor the `small-distinct` arm is gated on.
+    pub floor_rps_per_core: f64,
+    /// What the `legacy-*` arms measure (always `emulated-v6-costs`).
+    pub baseline: String,
+    /// Every measured arm.
+    pub arms: Vec<HotpathArm>,
+    /// `large-dedup-distinct` over `legacy-large` rps/core.
+    pub speedup_vs_baseline: f64,
+    /// The acceptance bar: ≥ 2× over the emulated pre-v7 costs.
+    pub speedup_ge_2x: bool,
+    /// The `small-distinct` arm cleared [`HOTPATH_FLOOR_RPS_PER_CORE`].
+    pub rps_per_core_above_floor: bool,
+    /// Two-tier hashing preserved dedup semantics: the shared-pool arm
+    /// still collapsed identical in-flight payloads (with conservation
+    /// intact), and the distinct-payload arm computed zero sha256
+    /// confirms on the submit path.
+    pub dedup_two_tier_no_regression: bool,
+    /// Conservation held on every arm.
+    pub conservation: bool,
+}
+
+/// How one arm synthesizes payloads.
+#[derive(Clone, Copy)]
+enum HotPayloads {
+    /// Globally distinct payloads (per-thread disjoint pools) — no two
+    /// submissions ever share bytes, so dedup/caching can never hit.
+    Distinct,
+    /// A pool of `n` payloads shared by every thread — concurrent
+    /// identical submissions are the norm, exercising dedup fan-out.
+    Shared(usize),
+}
+
+/// Zero-work fleet hosting one model: every measured arm places the
+/// same way, so the arms differ only in the knob under test.
+fn null_fabric(fcfg: &FabricConfig) -> Result<Fabric> {
+    let catalog = sim::synthetic_catalog_for(&["mobilenetv1"]);
+    let backend = Backend::new(catalog, Policy::MinLatency);
+    let mut cluster = Cluster::new(paper_testbed());
+    cluster.apply_kube_api_extension();
+    Fabric::place_null(&backend, cluster, fcfg)
+}
+
+/// Emulate the pre-v7 per-submit costs on top of the current path: the
+/// full-payload sha256 the old dedup/cache keying computed on every
+/// submission, plus the `Vec<f32>` payload copy the old staging paid.
+fn legacy_submit_costs(model: &str, payload: &Arc<[f32]>) -> Vec<f32> {
+    let mut h = Sha256::new();
+    h.update(model.as_bytes());
+    h.update([0u8]);
+    let mut buf = [0u8; 4096];
+    let mut used = 0;
+    for v in payload.iter() {
+        buf[used..used + 4].copy_from_slice(&v.to_le_bytes());
+        used += 4;
+        if used == buf.len() {
+            h.update(&buf[..]);
+            used = 0;
+        }
+    }
+    if used > 0 {
+        h.update(&buf[..used]);
+    }
+    std::hint::black_box(h.finalize());
+    payload.to_vec()
+}
+
+/// One saturation arm: `threads` closed loops (one in-flight request
+/// each) hammering the null fleet until `cfg.requests` verdicts landed.
+#[allow(clippy::too_many_arguments)]
+fn hotpath_arm(
+    name: &str,
+    cfg: &BenchConfig,
+    cores: usize,
+    payload_len: usize,
+    dedup: bool,
+    tenants: bool,
+    payloads: HotPayloads,
+    legacy: bool,
+) -> Result<HotpathArm> {
+    let fcfg = FabricConfig {
+        queue_capacity: 1024,
+        max_batch: 64,
+        workers: 2,
+        replicas_per_model: 1,
+        time_scale: 0.0,
+        seed: cfg.seed,
+        fused: true,
+        dedup,
+        cache_capacity: 0,
+        tenants: if tenants {
+            vec![TenantSpec::new("hot"), TenantSpec::new("cold")]
+        } else {
+            Vec::new()
+        },
+        ..Default::default()
+    };
+    let fabric = null_fabric(&fcfg)?;
+    let model =
+        fabric.models().first().cloned().context("null fleet placed no model")?;
+    let threads = cores.max(2);
+    let per_thread = (cfg.requests / threads).max(1);
+    let submitted = (per_thread * threads) as u64;
+
+    // Payloads are synthesized before the clock starts; the drive
+    // itself only bumps refcounts.
+    let pools: Vec<Vec<Arc<[f32]>>> = (0..threads)
+        .map(|t| match payloads {
+            HotPayloads::Distinct => (0..HOTPATH_POOL)
+                .map(|i| {
+                    let mut p = vec![0.25f32; payload_len];
+                    p[0] = (t * HOTPATH_POOL + i) as f32;
+                    p.into()
+                })
+                .collect(),
+            HotPayloads::Shared(n) => (0..n.max(1))
+                .map(|i| {
+                    let mut p = vec![0.5f32; payload_len];
+                    p[0] = i as f32;
+                    p.into()
+                })
+                .collect(),
+        })
+        .collect();
+
+    let completed = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let lat_us: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = pools
+            .into_iter()
+            .enumerate()
+            .map(|(t, pool)| {
+                let (fabric, model) = (&fabric, model.as_str());
+                let (completed, shed, failed) = (&completed, &shed, &failed);
+                s.spawn(move || {
+                    let tenant = if t % 2 == 0 { "hot" } else { "cold" };
+                    let mut lat = Vec::with_capacity(per_thread);
+                    for i in 0..per_thread {
+                        let payload = Arc::clone(&pool[i % pool.len()]);
+                        let t1 = Instant::now();
+                        let sub = if legacy {
+                            let copied = legacy_submit_costs(model, &payload);
+                            fabric.submit(model, copied)
+                        } else if tenants {
+                            fabric.submit_as(tenant, model, payload)
+                        } else {
+                            fabric.submit(model, payload)
+                        };
+                        match sub {
+                            Ok(Submission::Enqueued(rx)) => match rx.recv() {
+                                Ok(Outcome::Completed(_)) => {
+                                    completed.fetch_add(1, Ordering::Relaxed);
+                                    lat.push(t1.elapsed().as_secs_f64() * 1e6);
+                                }
+                                Ok(Outcome::Shed) => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Ok(Outcome::Failed(_)) | Err(_) => {
+                                    failed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            },
+                            Ok(Submission::Shed) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("submit thread")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let dedup_hits = fabric.dedup_hits();
+    let sha_confirms = fabric.sha_confirms();
+    fabric.shutdown();
+
+    let mut series = crate::util::stats::Series::new();
+    for v in lat_us.iter().flatten() {
+        series.push(*v);
+    }
+    let (p50_us, p99_us) = if series.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (series.percentile(50.0), series.percentile(99.0))
+    };
+    let (completed, shed, failed) = (
+        completed.into_inner(),
+        shed.into_inner(),
+        failed.into_inner(),
+    );
+    let rps = completed as f64 / wall_s;
+    Ok(HotpathArm {
+        name: name.to_string(),
+        payload_len,
+        dedup,
+        tenants,
+        threads,
+        submitted,
+        completed,
+        shed,
+        failed,
+        dedup_hits,
+        sha_confirms,
+        wall_s,
+        rps,
+        rps_per_core: rps / cores.max(1) as f64,
+        p50_us,
+        p99_us,
+        conservation: completed + shed + failed == submitted,
+    })
+}
+
+/// Run the hotpath measurement: seven saturation arms over the same
+/// zero-work fleet.  `small`/`large` bracket payload size, `distinct`
+/// vs `dedup-pool` bracket dedup traffic, `tenants` adds weighted-fair
+/// admission, and the two `legacy-*` arms re-impose the emulated pre-v7
+/// per-submit costs to price the speedup.
+pub fn run_hotpath_bench(cfg: &BenchConfig) -> Result<HotpathBench> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let arms = vec![
+        hotpath_arm("small-distinct", cfg, cores, HOTPATH_SMALL, false, false, HotPayloads::Distinct, false)
+            .context("small-distinct arm")?,
+        hotpath_arm("large-distinct", cfg, cores, HOTPATH_LARGE, false, false, HotPayloads::Distinct, false)
+            .context("large-distinct arm")?,
+        hotpath_arm("small-dedup-pool", cfg, cores, HOTPATH_SMALL, true, false, HotPayloads::Shared(8), false)
+            .context("small-dedup-pool arm")?,
+        hotpath_arm("large-dedup-distinct", cfg, cores, HOTPATH_LARGE, true, false, HotPayloads::Distinct, false)
+            .context("large-dedup-distinct arm")?,
+        hotpath_arm("small-tenants", cfg, cores, HOTPATH_SMALL, false, true, HotPayloads::Distinct, false)
+            .context("small-tenants arm")?,
+        hotpath_arm("legacy-small", cfg, cores, HOTPATH_SMALL, true, false, HotPayloads::Distinct, true)
+            .context("legacy-small arm")?,
+        hotpath_arm("legacy-large", cfg, cores, HOTPATH_LARGE, true, false, HotPayloads::Distinct, true)
+            .context("legacy-large arm")?,
+    ];
+    let by = |name: &str| arms.iter().find(|a| a.name == name).expect("arm exists");
+    let floor_arm = by("small-distinct");
+    let new_large = by("large-dedup-distinct");
+    let legacy_large = by("legacy-large");
+    let pool_arm = by("small-dedup-pool");
+    let speedup_vs_baseline =
+        new_large.rps_per_core / legacy_large.rps_per_core.max(1e-9);
+    let rps_per_core_above_floor =
+        floor_arm.rps_per_core >= HOTPATH_FLOOR_RPS_PER_CORE;
+    let dedup_two_tier_no_regression = pool_arm.conservation
+        && pool_arm.dedup_hits > 0
+        && new_large.sha_confirms == 0;
+    let conservation = arms.iter().all(|a| a.conservation);
+    Ok(HotpathBench {
+        requests: cfg.requests,
+        cores,
+        floor_rps_per_core: HOTPATH_FLOOR_RPS_PER_CORE,
+        baseline: "emulated-v6-costs".to_string(),
+        speedup_vs_baseline,
+        speedup_ge_2x: speedup_vs_baseline >= 2.0,
+        rps_per_core_above_floor,
+        dedup_two_tier_no_regression,
+        conservation,
+        arms,
+    })
+}
+
 fn side_json(b: &BenchSide) -> Json {
     obj(vec![
         ("submitted", n(b.submitted as f64)),
@@ -785,11 +1136,12 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v6,
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v7,
 /// documented in `docs/CLI.md`) — the perf trajectory future PRs
 /// measure against.  `control`, `autoscale`, `tenancy`, `continuum`,
-/// `des` and `resilience` are optional sections; the PR 2 fused sweep
-/// is always present.
+/// `des`, `resilience` and `hotpath` are optional sections; the PR 2
+/// fused sweep is always present (`--hotpath` runs write an empty
+/// `points` array).
 #[allow(clippy::too_many_arguments)]
 pub fn write_json(
     path: impl AsRef<Path>,
@@ -801,6 +1153,7 @@ pub fn write_json(
     continuum: Option<&ContinuumBench>,
     des_bench: Option<&DesBench>,
     resilience: Option<&ResilienceBench>,
+    hotpath: Option<&HotpathBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -816,7 +1169,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(6.0)),
+        ("version", n(7.0)),
         (
             "config",
             obj(vec![
@@ -1037,6 +1390,54 @@ pub fn write_json(
                 ("hedging_cuts_tail_p99", Json::Bool(r.hedging_cuts_tail_p99)),
                 ("breaker_recovers", Json::Bool(r.breaker_recovers)),
                 ("storm_bit_reproducible", Json::Bool(r.storm_bit_reproducible)),
+            ]),
+        ));
+    }
+    if let Some(h) = hotpath {
+        let arm_rows: Vec<Json> = h
+            .arms
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("name", s(a.name.clone())),
+                    ("payload_len", n(a.payload_len as f64)),
+                    ("dedup", Json::Bool(a.dedup)),
+                    ("tenants", Json::Bool(a.tenants)),
+                    ("threads", n(a.threads as f64)),
+                    ("submitted", n(a.submitted as f64)),
+                    ("completed", n(a.completed as f64)),
+                    ("shed", n(a.shed as f64)),
+                    ("failed", n(a.failed as f64)),
+                    ("dedup_hits", n(a.dedup_hits as f64)),
+                    ("sha_confirms", n(a.sha_confirms as f64)),
+                    ("wall_s", n(a.wall_s)),
+                    ("rps", n(a.rps)),
+                    ("rps_per_core", n(a.rps_per_core)),
+                    ("p50_us", n(a.p50_us)),
+                    ("p99_us", n(a.p99_us)),
+                    ("conservation", Json::Bool(a.conservation)),
+                ])
+            })
+            .collect();
+        top.push((
+            "hotpath",
+            obj(vec![
+                ("requests_per_arm", n(h.requests as f64)),
+                ("cores", n(h.cores as f64)),
+                ("floor_rps_per_core", n(h.floor_rps_per_core)),
+                ("baseline", s(h.baseline.clone())),
+                ("arms", Json::Arr(arm_rows)),
+                ("speedup_vs_baseline", n(h.speedup_vs_baseline)),
+                ("speedup_ge_2x", Json::Bool(h.speedup_ge_2x)),
+                (
+                    "rps_per_core_above_floor",
+                    Json::Bool(h.rps_per_core_above_floor),
+                ),
+                (
+                    "dedup_two_tier_no_regression",
+                    Json::Bool(h.dedup_two_tier_no_regression),
+                ),
+                ("conservation", Json::Bool(h.conservation)),
             ]),
         ));
     }
@@ -1293,6 +1694,36 @@ mod tests {
                 breaker_recovers: true,
                 storm_bit_reproducible: true,
             }),
+            Some(&HotpathBench {
+                requests: 20_000,
+                cores: 8,
+                floor_rps_per_core: HOTPATH_FLOOR_RPS_PER_CORE,
+                baseline: "emulated-v6-costs".into(),
+                arms: vec![HotpathArm {
+                    name: "small-distinct".into(),
+                    payload_len: 64,
+                    dedup: false,
+                    tenants: false,
+                    threads: 8,
+                    submitted: 20_000,
+                    completed: 20_000,
+                    shed: 0,
+                    failed: 0,
+                    dedup_hits: 0,
+                    sha_confirms: 0,
+                    wall_s: 0.5,
+                    rps: 40_000.0,
+                    rps_per_core: 5_000.0,
+                    p50_us: 35.0,
+                    p99_us: 180.0,
+                    conservation: true,
+                }],
+                speedup_vs_baseline: 2.7,
+                speedup_ge_2x: true,
+                rps_per_core_above_floor: true,
+                dedup_two_tier_no_regression: true,
+                conservation: true,
+            }),
         )
         .unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
@@ -1320,7 +1751,19 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
-        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 6);
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 7);
+        let hp = doc.get("hotpath").unwrap();
+        assert_eq!(hp.get("baseline").unwrap().str().unwrap(), "emulated-v6-costs");
+        assert!(matches!(hp.get("speedup_ge_2x").unwrap(), Json::Bool(true)));
+        assert!(matches!(
+            hp.get("dedup_two_tier_no_regression").unwrap(),
+            Json::Bool(true)
+        ));
+        assert!(matches!(hp.get("rps_per_core_above_floor").unwrap(), Json::Bool(true)));
+        let hp_arms = hp.get("arms").unwrap().arr().unwrap();
+        assert_eq!(hp_arms[0].get("name").unwrap().str().unwrap(), "small-distinct");
+        assert_eq!(hp_arms[0].get("sha_confirms").unwrap().usize().unwrap(), 0);
+        assert!(hp_arms[0].get("rps_per_core").unwrap().f64().unwrap() > 0.0);
         let res = doc.get("resilience").unwrap();
         assert!(matches!(
             res.get("no_lost_requests_under_storm").unwrap(),
@@ -1369,8 +1812,19 @@ mod tests {
         };
         let path = std::env::temp_dir()
             .join(format!("tf2aif_bench_min_{}.json", std::process::id()));
-        write_json(&path, &BenchConfig::default(), &[p], None, None, None, None, None, None)
-            .unwrap();
+        write_json(
+            &path,
+            &BenchConfig::default(),
+            &[p],
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(doc.opt("control").is_none());
         assert!(doc.opt("autoscale").is_none());
@@ -1378,6 +1832,7 @@ mod tests {
         assert!(doc.opt("continuum").is_none());
         assert!(doc.opt("des").is_none());
         assert!(doc.opt("resilience").is_none());
+        assert!(doc.opt("hotpath").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -8,13 +8,20 @@
 //! response cache (beyond in-flight memoization, with
 //! TTL/invalidation)").
 //!
-//! Keys are the same `sha256(model, payload)` digest the dedup map
-//! uses, so the two layers compose: a submission first consults the
-//! cache (fresh hit → immediate response, re-stamped with the caller's
-//! request id), then the in-flight map, then the router.  Capacity is
-//! bounded with FIFO eviction; staleness is bounded by the TTL **and by
-//! a per-model generation**: redeploying a model's artifact bumps its
-//! generation ([`ResponseCache::invalidate`], exposed as
+//! Keys are **two-tier**, shared with the dedup map: a cheap FNV-1a
+//! 64-bit pre-hash of `(model, payload)` ([`crate::util::hash`])
+//! indexes the store, and each entry carries the full
+//! `sha256(model, payload)` digest as its *confirm* hash.  A lookup
+//! whose pre-hash bucket is empty — the common case for fresh traffic —
+//! costs no sha256 at all; only a lookup landing in an occupied bucket
+//! forces the caller's lazily-computed confirm digest (`sha_of`), which
+//! distinguishes a true repeat from a 64-bit collision.  Colliding
+//! entries with distinct confirm digests coexist in one bucket, so
+//! exact `(model, payload)` addressing semantics are preserved
+//! bit-for-bit.  Capacity is bounded with FIFO eviction; staleness is
+//! bounded by the TTL **and by a per-model generation**: redeploying a
+//! model's artifact bumps its generation
+//! ([`ResponseCache::invalidate`], exposed as
 //! [`Fabric::on_artifact_redeploy`](super::Fabric::on_artifact_redeploy)),
 //! so a response computed by the old weights can never be served after
 //! the redeploy — inserts carry the generation observed at admission
@@ -51,6 +58,9 @@ pub struct CacheStats {
 
 struct Entry {
     resp: Response,
+    /// Tier-2 confirm digest: `sha256(model, payload)`.  Distinguishes
+    /// this entry from pre-hash collision neighbours in the same bucket.
+    sha: [u8; 32],
     stored: Instant,
     gen: u64,
     /// The model generation this response was computed under; a lookup
@@ -60,13 +70,17 @@ struct Entry {
 }
 
 struct CacheInner {
-    map: HashMap<[u8; 32], Entry>,
-    /// Insertion order as (key, generation) — a popped pair only evicts
-    /// the mapped entry when the generations match, so a key that was
-    /// expired and later re-inserted is never killed by its stale
+    /// Tier-1 index: pre-hash → bucket of confirm-distinct entries.
+    /// Buckets are length 1 outside forced-collision tests.
+    map: HashMap<u64, Vec<Entry>>,
+    /// Insertion order as (pre-hash, generation) — a popped pair only
+    /// evicts the bucket entry whose generation matches, so a key that
+    /// was expired and later re-inserted is never killed by its stale
     /// predecessor's order slot.
-    order: VecDeque<([u8; 32], u64)>,
+    order: VecDeque<(u64, u64)>,
     next_gen: u64,
+    /// Live entries across all buckets (the capacity bound's measure).
+    live: usize,
     /// Per-model redeploy generation (absent = 0).
     model_gens: HashMap<String, u64>,
 }
@@ -96,6 +110,7 @@ impl ResponseCache {
                 map: HashMap::new(),
                 order: VecDeque::new(),
                 next_gen: 0,
+                live: 0,
                 model_gens: HashMap::new(),
             }),
             hits: AtomicU64::new(0),
@@ -129,37 +144,74 @@ impl ResponseCache {
         *gen
     }
 
-    /// Look up a response for `model`; a fresh same-generation entry is
-    /// a hit, an expired or invalidated entry is removed and counted.
-    pub fn get(&self, key: &[u8; 32], model: &str) -> Option<Response> {
-        self.get_at(key, model, Instant::now())
+    /// Look up a response for `model` under pre-hash `pre`; a fresh
+    /// same-generation entry whose confirm digest matches is a hit, an
+    /// expired or invalidated entry is removed and counted.  `sha_of`
+    /// is the caller's lazily-computed confirm digest: it is invoked
+    /// only when the pre-hash bucket is occupied (the documented
+    /// "sha256 on pre-hash collision only" contract), and the caller is
+    /// expected to memoize it for reuse by the dedup layer.
+    pub fn get(
+        &self,
+        pre: u64,
+        model: &str,
+        sha_of: &mut dyn FnMut() -> [u8; 32],
+    ) -> Option<Response> {
+        self.get_at(pre, model, sha_of, Instant::now())
     }
 
-    fn get_at(&self, key: &[u8; 32], model: &str, now: Instant) -> Option<Response> {
-        // Remove-then-reinsert keeps the hot path free of aliasing
-        // between the lookup borrow and the expiry mutation: the entry
-        // is owned while inspected, and a still-fresh one goes straight
-        // back under the same generation (its eviction slot stays
-        // valid).
+    fn get_at(
+        &self,
+        pre: u64,
+        model: &str,
+        sha_of: &mut dyn FnMut() -> [u8; 32],
+        now: Instant,
+    ) -> Option<Response> {
         enum Miss {
             Absent,
             Expired,
             Invalidated,
         }
-        let looked_up = {
-            let mut g = self.inner.lock().unwrap();
-            let current = g.model_gens.get(model).copied().unwrap_or(0);
-            match g.map.remove(key) {
-                Some(e) if e.model_gen != current => Err(Miss::Invalidated),
-                Some(e) if now.duration_since(e.stored) <= self.ttl => {
-                    let resp = e.resp.clone();
-                    g.map.insert(*key, e);
-                    Ok(resp)
+        let mut g = self.inner.lock().unwrap();
+        let current = g.model_gens.get(model).copied().unwrap_or(0);
+        let mut removed = false;
+        // Remove-then-count: the stale entry is dropped while the bucket
+        // is borrowed; the live count and empty-bucket cleanup follow
+        // once the borrow ends.
+        let looked_up: Result<Response, Miss> = match g.map.get_mut(&pre) {
+            None => Err(Miss::Absent),
+            Some(bucket) => {
+                if bucket.is_empty() {
+                    Err(Miss::Absent)
+                } else {
+                    // Occupied bucket: force the tier-2 confirm digest.
+                    let sha = sha_of();
+                    match bucket.iter().position(|e| e.sha == sha) {
+                        None => Err(Miss::Absent), // 64-bit collision, different request
+                        Some(i) if bucket[i].model_gen != current => {
+                            bucket.remove(i);
+                            removed = true;
+                            Err(Miss::Invalidated)
+                        }
+                        Some(i) if now.duration_since(bucket[i].stored) <= self.ttl => {
+                            Ok(bucket[i].resp.clone())
+                        }
+                        Some(i) => {
+                            bucket.remove(i);
+                            removed = true;
+                            Err(Miss::Expired)
+                        }
+                    }
                 }
-                Some(_) => Err(Miss::Expired), // stays removed
-                None => Err(Miss::Absent),
             }
         };
+        if removed {
+            g.live -= 1;
+            if g.map.get(&pre).is_some_and(Vec::is_empty) {
+                g.map.remove(&pre);
+            }
+        }
+        drop(g);
         match looked_up {
             Ok(resp) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -183,20 +235,31 @@ impl ResponseCache {
 
     /// Store a completed response computed under `model`'s generation
     /// `admitted_gen` (from [`generation`](Self::generation) at
-    /// admission), evicting oldest entries past the capacity bound.  If
-    /// the model was redeployed while the request was in flight
+    /// admission), evicting oldest entries past the capacity bound.
+    /// `sha` is the entry's confirm digest — computing it here (the
+    /// delivery path) is the one "first-sight insert" sha256 the
+    /// hot-path contract allows, and it happens off the submit path.
+    /// If the model was redeployed while the request was in flight
     /// (`admitted_gen` is no longer current) the memo is silently
     /// dropped — stale weights must never enter the cache.
     /// Re-inserting a live key refreshes its payload but keeps its
     /// original eviction slot (FIFO, not LRU — the cache protects pods
     /// from repeat traffic, not from scans).
-    pub fn insert(&self, key: [u8; 32], model: &str, admitted_gen: u64, resp: Response) {
-        self.insert_at(key, model, admitted_gen, resp, Instant::now());
+    pub fn insert(
+        &self,
+        pre: u64,
+        sha: [u8; 32],
+        model: &str,
+        admitted_gen: u64,
+        resp: Response,
+    ) {
+        self.insert_at(pre, sha, model, admitted_gen, resp, Instant::now());
     }
 
     fn insert_at(
         &self,
-        key: [u8; 32],
+        pre: u64,
+        sha: [u8; 32],
         model: &str,
         admitted_gen: u64,
         resp: Response,
@@ -208,30 +271,63 @@ impl ResponseCache {
         }
         let gen = g.next_gen;
         g.next_gen += 1;
-        let entry = Entry { resp, stored: now, gen, model_gen: admitted_gen };
-        if g.map.insert(key, entry).is_none() {
-            g.order.push_back((key, gen));
-        } else if let Some(slot) = g.order.iter_mut().find(|(k, _)| *k == key) {
+        let entry = Entry { resp, sha, stored: now, gen, model_gen: admitted_gen };
+        let replaced_gen = {
+            let bucket = g.map.entry(pre).or_default();
+            match bucket.iter().position(|e| e.sha == sha) {
+                Some(i) => {
+                    let old = bucket[i].gen;
+                    bucket[i] = entry;
+                    Some(old)
+                }
+                None => {
+                    bucket.push(entry);
+                    None
+                }
+            }
+        };
+        match replaced_gen {
             // Live re-insert: point the existing order slot at the new
             // generation so a later pop evicts the refreshed entry.
-            slot.1 = gen;
-        } else {
-            // The old generation expired out of the map; its order slot
-            // (if any) is stale, so this insert needs a fresh slot.
-            g.order.push_back((key, gen));
+            Some(old) => {
+                if let Some(slot) =
+                    g.order.iter_mut().find(|(k, og)| *k == pre && *og == old)
+                {
+                    slot.1 = gen;
+                } else {
+                    // The predecessor's slot was already consumed (e.g.
+                    // discarded as stale): this insert needs a fresh one.
+                    g.order.push_back((pre, gen));
+                }
+            }
+            None => {
+                g.live += 1;
+                g.order.push_back((pre, gen));
+            }
         }
         let mut evictions = 0u64;
-        while g.map.len() > self.capacity {
-            let Some((old_key, old_gen)) = g.order.pop_front() else {
+        while g.live > self.capacity {
+            let Some((old_pre, old_gen)) = g.order.pop_front() else {
                 break;
             };
             // A popped slot only evicts when generations match; a stale
             // slot (entry expired, or refreshed under a newer gen) is
-            // discarded without touching the live entry.
-            let live = g.map.get(&old_key).map_or(false, |e| e.gen == old_gen);
-            if live {
-                g.map.remove(&old_key);
+            // discarded without touching live entries.
+            let mut emptied = false;
+            let mut killed = false;
+            if let Some(bucket) = g.map.get_mut(&old_pre) {
+                if let Some(i) = bucket.iter().position(|e| e.gen == old_gen) {
+                    bucket.remove(i);
+                    killed = true;
+                    emptied = bucket.is_empty();
+                }
+            }
+            if killed {
+                g.live -= 1;
                 evictions += 1;
+            }
+            if emptied {
+                g.map.remove(&old_pre);
             }
         }
         // Stale slots (from expiries and refreshes) are normally
@@ -243,7 +339,9 @@ impl ResponseCache {
         if g.order.len() > self.capacity.saturating_mul(2).max(8) {
             let inner = &mut *g;
             let map = &inner.map;
-            inner.order.retain(|(k, gen)| map.get(k).map_or(false, |e| e.gen == *gen));
+            inner.order.retain(|(k, gen)| {
+                map.get(k).is_some_and(|b| b.iter().any(|e| e.gen == *gen))
+            });
         }
         drop(g);
         if evictions > 0 {
@@ -266,7 +364,7 @@ impl ResponseCache {
             evicted: self.evicted.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             invalidated: self.invalidated.load(Ordering::Relaxed),
-            entries: self.inner.lock().unwrap().map.len(),
+            entries: self.inner.lock().unwrap().live,
         }
     }
 }
@@ -286,7 +384,12 @@ mod tests {
         }
     }
 
-    fn key(b: u8) -> [u8; 32] {
+    fn key(b: u8) -> u64 {
+        b as u64
+    }
+
+    /// Per-key confirm digest (tests pair pre-hash `b` with digest `b`).
+    fn sha(b: u8) -> [u8; 32] {
         [b; 32]
     }
 
@@ -296,12 +399,13 @@ mod tests {
     fn hit_within_ttl_miss_after() {
         let c = ResponseCache::new(4, Duration::from_millis(100));
         let t0 = Instant::now();
-        c.insert_at(key(1), M, 0, resp(7), t0);
-        let got = c.get_at(&key(1), M, t0 + Duration::from_millis(50)).unwrap();
+        c.insert_at(key(1), sha(1), M, 0, resp(7), t0);
+        let got =
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(50)).unwrap();
         assert_eq!(got.id, 7);
         assert_eq!(got.prediction.class, 3);
         assert!(
-            c.get_at(&key(1), M, t0 + Duration::from_millis(150)).is_none(),
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(150)).is_none(),
             "entry past its TTL must not be served"
         );
         let s = c.stats();
@@ -309,15 +413,71 @@ mod tests {
     }
 
     #[test]
+    fn empty_bucket_never_forces_the_confirm_digest() {
+        // The two-tier contract: a miss on an unoccupied pre-hash slot
+        // must not compute sha256 at all.
+        let c = ResponseCache::new(4, Duration::from_secs(60));
+        let t0 = Instant::now();
+        let mut forced = false;
+        assert!(c
+            .get_at(
+                key(9),
+                M,
+                &mut || {
+                    forced = true;
+                    sha(9)
+                },
+                t0
+            )
+            .is_none());
+        assert!(!forced, "absent bucket must not force the confirm digest");
+        // An occupied bucket does force it.
+        c.insert_at(key(9), sha(9), M, 0, resp(1), t0);
+        let mut forced = false;
+        assert!(c
+            .get_at(
+                key(9),
+                M,
+                &mut || {
+                    forced = true;
+                    sha(9)
+                },
+                t0
+            )
+            .is_some());
+        assert!(forced, "occupied bucket must confirm via sha256");
+    }
+
+    #[test]
+    fn prehash_collisions_coexist_and_resolve_by_confirm_digest() {
+        // Two distinct requests sharing one 64-bit pre-hash: both are
+        // cached, and each lookup gets exactly its own response.
+        let c = ResponseCache::new(4, Duration::from_secs(60));
+        let t0 = Instant::now();
+        c.insert_at(key(1), sha(10), M, 0, resp(10), t0);
+        c.insert_at(key(1), sha(20), M, 0, resp(20), t0);
+        assert_eq!(c.stats().entries, 2, "colliding entries share a bucket");
+        assert_eq!(c.get_at(key(1), M, &mut || sha(10), t0).unwrap().id, 10);
+        assert_eq!(c.get_at(key(1), M, &mut || sha(20), t0).unwrap().id, 20);
+        assert!(
+            c.get_at(key(1), M, &mut || sha(30), t0).is_none(),
+            "a third collider with no entry misses despite the occupied bucket"
+        );
+    }
+
+    #[test]
     fn capacity_bound_evicts_oldest_first() {
         let c = ResponseCache::new(2, Duration::from_secs(60));
         let t0 = Instant::now();
-        c.insert_at(key(1), M, 0, resp(1), t0);
-        c.insert_at(key(2), M, 0, resp(2), t0);
-        c.insert_at(key(3), M, 0, resp(3), t0);
-        assert!(c.get_at(&key(1), M, t0).is_none(), "oldest entry must have been evicted");
-        assert!(c.get_at(&key(2), M, t0).is_some());
-        assert!(c.get_at(&key(3), M, t0).is_some());
+        c.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        c.insert_at(key(2), sha(2), M, 0, resp(2), t0);
+        c.insert_at(key(3), sha(3), M, 0, resp(3), t0);
+        assert!(
+            c.get_at(key(1), M, &mut || sha(1), t0).is_none(),
+            "oldest entry must have been evicted"
+        );
+        assert!(c.get_at(key(2), M, &mut || sha(2), t0).is_some());
+        assert!(c.get_at(key(3), M, &mut || sha(3), t0).is_some());
         let s = c.stats();
         assert_eq!(s.evicted, 1);
         assert_eq!(s.entries, 2);
@@ -329,14 +489,17 @@ mod tests {
         // order slot must NOT evict the fresh entry.
         let c = ResponseCache::new(2, Duration::from_millis(10));
         let t0 = Instant::now();
-        c.insert_at(key(1), M, 0, resp(1), t0);
-        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(50)).is_none(), "expired");
-        c.insert_at(key(1), M, 0, resp(11), t0 + Duration::from_millis(60));
+        c.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        assert!(
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(50)).is_none(),
+            "expired"
+        );
+        c.insert_at(key(1), sha(1), M, 0, resp(11), t0 + Duration::from_millis(60));
         // Fill to capacity: pops the stale (key 1, gen 0) slot, which
         // must be ignored, then stays within bounds.
-        c.insert_at(key(2), M, 0, resp(2), t0 + Duration::from_millis(61));
-        c.insert_at(key(3), M, 0, resp(3), t0 + Duration::from_millis(62));
-        let got = c.get_at(&key(3), M, t0 + Duration::from_millis(63));
+        c.insert_at(key(2), sha(2), M, 0, resp(2), t0 + Duration::from_millis(61));
+        c.insert_at(key(3), sha(3), M, 0, resp(3), t0 + Duration::from_millis(62));
+        let got = c.get_at(key(3), M, &mut || sha(3), t0 + Duration::from_millis(63));
         assert!(got.is_some(), "newest entry survives");
         assert!(c.stats().entries <= 2, "capacity bound held");
     }
@@ -350,10 +513,11 @@ mod tests {
         let t0 = Instant::now();
         for i in 0..200u64 {
             let t = t0 + Duration::from_millis(i * 20);
-            c.insert_at(key((i % 251) as u8), M, 0, resp(i), t);
+            let b = (i % 251) as u8;
+            c.insert_at(key(b), sha(b), M, 0, resp(i), t);
             // Expired by the next round's lookup: map stays near-empty.
             assert!(c
-                .get_at(&key((i % 251) as u8), M, t + Duration::from_millis(15))
+                .get_at(key(b), M, &mut || sha(b), t + Duration::from_millis(15))
                 .is_none());
         }
         assert!(
@@ -369,17 +533,23 @@ mod tests {
     fn live_reinsert_refreshes_payload_without_duplicating_slots() {
         let c = ResponseCache::new(2, Duration::from_secs(60));
         let t0 = Instant::now();
-        c.insert_at(key(1), M, 0, resp(1), t0);
-        c.insert_at(key(1), M, 0, resp(99), t0 + Duration::from_millis(1));
-        assert_eq!(c.get_at(&key(1), M, t0 + Duration::from_millis(2)).unwrap().id, 99);
-        c.insert_at(key(2), M, 0, resp(2), t0 + Duration::from_millis(3));
-        c.insert_at(key(3), M, 0, resp(3), t0 + Duration::from_millis(4));
+        c.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        c.insert_at(key(1), sha(1), M, 0, resp(99), t0 + Duration::from_millis(1));
+        assert_eq!(
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(2)).unwrap().id,
+            99
+        );
+        c.insert_at(key(2), sha(2), M, 0, resp(2), t0 + Duration::from_millis(3));
+        c.insert_at(key(3), sha(3), M, 0, resp(3), t0 + Duration::from_millis(4));
         // key(1) held one order slot despite two inserts: exactly one
         // eviction brings the map back to capacity.
         let s = c.stats();
         assert_eq!(s.evicted, 1);
         assert_eq!(s.entries, 2);
-        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(5)).is_none(), "FIFO evicts 1");
+        assert!(
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(5)).is_none(),
+            "FIFO evicts 1"
+        );
     }
 
     #[test]
@@ -387,21 +557,21 @@ mod tests {
         let c = ResponseCache::new(4, Duration::from_secs(60));
         let t0 = Instant::now();
         assert_eq!(c.generation(M), 0);
-        c.insert_at(key(1), M, 0, resp(1), t0);
-        assert!(c.get_at(&key(1), M, t0 + Duration::from_millis(1)).is_some());
+        c.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        assert!(c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(1)).is_some());
         // Redeploy: the entry is far inside its TTL and must still die.
         assert_eq!(c.invalidate(M), 1);
         assert!(
-            c.get_at(&key(1), M, t0 + Duration::from_millis(2)).is_none(),
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(2)).is_none(),
             "pre-redeploy response served after redeploy"
         );
         let s = c.stats();
         assert_eq!(s.invalidated, 1);
         assert_eq!(s.entries, 0, "the stale entry was dropped, not kept");
         // A fresh post-redeploy insert under the new generation serves.
-        c.insert_at(key(1), M, 1, resp(2), t0 + Duration::from_millis(3));
+        c.insert_at(key(1), sha(1), M, 1, resp(2), t0 + Duration::from_millis(3));
         assert_eq!(
-            c.get_at(&key(1), M, t0 + Duration::from_millis(4)).unwrap().id,
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(4)).unwrap().id,
             2
         );
     }
@@ -410,12 +580,12 @@ mod tests {
     fn redeploy_scopes_to_the_named_model_only() {
         let c = ResponseCache::new(4, Duration::from_secs(60));
         let t0 = Instant::now();
-        c.insert_at(key(1), "lenet", 0, resp(1), t0);
-        c.insert_at(key(2), "resnet50", 0, resp(2), t0);
+        c.insert_at(key(1), sha(1), "lenet", 0, resp(1), t0);
+        c.insert_at(key(2), sha(2), "resnet50", 0, resp(2), t0);
         c.invalidate("lenet");
-        assert!(c.get_at(&key(1), "lenet", t0).is_none());
+        assert!(c.get_at(key(1), "lenet", &mut || sha(1), t0).is_none());
         assert!(
-            c.get_at(&key(2), "resnet50", t0).is_some(),
+            c.get_at(key(2), "resnet50", &mut || sha(2), t0).is_some(),
             "other models' entries survive a redeploy"
         );
     }
@@ -428,8 +598,8 @@ mod tests {
         let t0 = Instant::now();
         let admitted_gen = c.generation(M);
         c.invalidate(M); // redeploy lands while the request executes
-        c.insert_at(key(1), M, admitted_gen, resp(1), t0);
+        c.insert_at(key(1), sha(1), M, admitted_gen, resp(1), t0);
         assert_eq!(c.stats().entries, 0, "stale memo must not enter the cache");
-        assert!(c.get_at(&key(1), M, t0).is_none());
+        assert!(c.get_at(key(1), M, &mut || sha(1), t0).is_none());
     }
 }

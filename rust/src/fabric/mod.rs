@@ -52,12 +52,21 @@
 //!   scales on demand it can *see coming* instead of waiting for the
 //!   backlog to materialize — the reactive path stays as the fallback.
 //! - **Response cache** (`FabricConfig::cache_capacity`) — a bounded,
-//!   TTL'd `sha256(model, payload) → response` store answers repeats of
-//!   recently completed requests without touching a queue.
+//!   TTL'd `(model, payload) → response` store answers repeats of
+//!   recently completed requests without touching a queue.  Keys are
+//!   two-tier: a cheap FNV-1a 64-bit pre-hash indexes the store, with
+//!   sha256 computed only to confirm an occupied slot (see §Hot path in
+//!   `docs/ARCHITECTURE.md`).
 //! - **Request dedup / response memoization** — identical concurrent
 //!   (model, payload) submissions collapse into one execution keyed by
-//!   input hash; every caller gets a response re-stamped with its own
-//!   request id.
+//!   the same two-tier input hash; every caller gets a response
+//!   re-stamped with its own request id.
+//! - **Lock-free hot path** — the pod registry is an immutable
+//!   epoch-published snapshot ([`SnapCell`]): submits read the current
+//!   snapshot without taking any fabric-wide lock, scale-up/retire
+//!   publish copy-on-write replacements, and payloads travel as shared
+//!   `Arc<[f32]>` so fan-out, retries and spillover move a refcount,
+//!   never tensor bytes.
 //! - **Multi-tenancy** (`FabricConfig::tenants`) — requests carry a
 //!   tenant id ([`Fabric::submit_as`]) with a priority class; admission
 //!   enforces **per-tenant token-bucket quotas** and per-tenant queue
@@ -86,9 +95,10 @@ pub mod queue;
 pub mod sim;
 pub mod tenancy;
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -102,6 +112,7 @@ use crate::metrics::{Collector, FeedbackStore, Snapshot};
 use crate::platform;
 use crate::runtime::Engine;
 use crate::serving::{AifServer, ImageClassify, Request, Response};
+use crate::util::hash::Fnv1a;
 use crate::util::rng::Rng;
 use crate::util::stats::{throughput_rps, Boxplot, Series};
 use crate::workload::{image_like, Arrival};
@@ -115,7 +126,7 @@ pub use faults::{
     BreakerConfig, BrownoutConfig, Fault, FaultPlan, HedgePolicy, ResilienceConfig, RetryPolicy,
 };
 use queue::{LaneConfig, Push, TenantQueue};
-use sim::{Gate, SimPod};
+use sim::{Gate, NullPod, SimPod};
 use tenancy::{TenantRegistry, TenantState};
 pub use tenancy::{Priority, TenancyError, TenantReport, TenantSpec, DEFAULT_TENANT};
 
@@ -167,6 +178,24 @@ impl PodExecutor for SimPod {
 
     fn dispatches(&self) -> u64 {
         SimPod::dispatches(self)
+    }
+}
+
+impl PodExecutor for NullPod {
+    fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        NullPod::execute(self, req, queue_wait_ms)
+    }
+
+    fn execute_batch(&self, reqs: &[Request], queue_wait_ms: &[f64]) -> Vec<Result<Response>> {
+        NullPod::execute_batch(self, reqs, queue_wait_ms)
+    }
+
+    fn collector(&self) -> &Arc<Collector> {
+        self.metrics()
+    }
+
+    fn dispatches(&self) -> u64 {
+        NullPod::dispatches(self)
     }
 }
 
@@ -231,6 +260,13 @@ pub struct FabricConfig {
     /// tail-latency hedging and brownout degradation.  All off by
     /// default — the resilient fabric is opt-in per run.
     pub resilience: ResilienceConfig,
+    /// Test hook: mask ANDed onto the 64-bit pre-hash before it indexes
+    /// the dedup map and response cache.  `!0` (the default) leaves the
+    /// hash untouched; equivalence tests narrow it (e.g. to `0xF`) to
+    /// force pre-hash collisions and prove the sha256 confirm tier
+    /// preserves exact dedup/memoization semantics.
+    #[doc(hidden)]
+    pub prehash_mask: u64,
 }
 
 impl Default for FabricConfig {
@@ -254,6 +290,7 @@ impl Default for FabricConfig {
             autoscale: None,
             tenants: Vec::new(),
             resilience: ResilienceConfig::default(),
+            prehash_mask: !0,
         }
     }
 }
@@ -313,31 +350,73 @@ type Waiter = (u64, Arc<TenantState>, mpsc::Sender<Outcome>);
 /// leader itself plus any dedup'd followers that attached while it was in
 /// flight.
 struct Fanout {
-    /// Content digest of the request: the dedup-map key to unregister on
-    /// completion and the response-cache key to memoize under (`None`
-    /// when both dedup and the cache are off).
-    key: Option<[u8; 32]>,
+    /// Tier-1 pre-hash the execution is registered under in the dedup
+    /// index and the response cache (`None` when both are off).
+    key: Option<u64>,
+    /// Tier-2 confirm digest (`sha256(model, payload)`), computed
+    /// lazily: only a pre-hash collision (a follower landing on this
+    /// bucket) or the first-sight cache insert on completion forces it.
+    sha: OnceLock<[u8; 32]>,
     /// Model this execution serves — the response cache's invalidation
     /// namespace and the dedup purge handle on artifact redeploy.
     model: String,
+    /// The admitted payload, retained as a refcount bump so collision
+    /// confirms can hash it lazily (never a byte copy).
+    payload: Arc<[f32]>,
     /// Cache generation of `model` observed at admission; the insert is
     /// dropped if [`Fabric::on_artifact_redeploy`] bumped it mid-flight.
     cache_gen: u64,
     waiters: Mutex<Vec<Waiter>>,
 }
 
-/// In-flight dedup index: content hash → the execution to piggyback on.
-type DedupMap = Mutex<HashMap<[u8; 32], Arc<Fanout>>>;
+impl Fanout {
+    /// The confirm digest, computed on first use.  When the computation
+    /// actually runs on the submit path (a collision confirm), callers
+    /// pass the fabric's `sha_confirms` counter so the "sha256 only on
+    /// collision or first-sight insert" invariant stays measurable.
+    fn confirm(&self, confirms: Option<&AtomicU64>) -> [u8; 32] {
+        *self.sha.get_or_init(|| {
+            if let Some(c) = confirms {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+            confirm_sha(&self.model, &self.payload)
+        })
+    }
+}
 
-/// Content hash of a routed request — the dedup/memoization key.  The
-/// model name is part of the digest so identical tensors aimed at
-/// different AIFs never collapse.
-fn dedup_key(model: &str, payload: &[f32]) -> [u8; 32] {
+/// In-flight dedup index: tier-1 pre-hash → bucket of executions to
+/// piggyback on.  Buckets hold one entry outside forced-collision tests;
+/// a follower landing on an occupied bucket confirms by sha256 before
+/// attaching, so distinct requests sharing a 64-bit pre-hash never
+/// collapse.
+type DedupMap = Mutex<HashMap<u64, Vec<Arc<Fanout>>>>;
+
+/// Tier-1 index hash of a routed request: FNV-1a 64 over the model
+/// name, a zero separator and the payload's LE bytes — a handful of
+/// cycles per element, no allocation, deterministic across runs.  The
+/// model name is part of the hash so identical tensors aimed at
+/// different AIFs land in different buckets (and the confirm digest
+/// separates them exactly even when they do not).
+fn prehash(model: &str, payload: &[f32], mask: u64) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(model.as_bytes());
+    h.write_u8(0);
+    for v in payload {
+        h.write(&v.to_le_bytes());
+    }
+    h.finish() & mask
+}
+
+/// Tier-2 confirm digest — the exact content address the fabric used to
+/// pay per submit, now computed only on pre-hash collision or at the
+/// first-sight cache insert.  The model name is part of the digest so
+/// identical tensors aimed at different AIFs never collapse.
+fn confirm_sha(model: &str, payload: &[f32]) -> [u8; 32] {
     let mut h = Sha256::new();
     h.update(model.as_bytes());
     h.update([0u8]);
     // Stream fixed-size chunks through a stack buffer: no payload-sized
-    // allocation on the admission path.
+    // allocation.
     let mut buf = [0u8; 4096];
     for chunk in payload.chunks(buf.len() / 4) {
         let mut n = 0;
@@ -366,19 +445,27 @@ fn deliver(
     fan: &Arc<Fanout>,
     outcome: Outcome,
 ) -> u64 {
-    if let Some(key) = &fan.key {
+    if let Some(key) = fan.key {
         {
             // Remove only OUR entry: after `on_artifact_redeploy` purged
             // this execution from the map, an identical post-redeploy
             // submission may have re-registered the same key as a fresh
             // leader — completing here must not evict that live entry.
             let mut map = dedup.lock().unwrap();
-            if map.get(key).map_or(false, |entry| Arc::ptr_eq(entry, fan)) {
-                map.remove(key);
+            if let Some(bucket) = map.get_mut(&key) {
+                if let Some(i) = bucket.iter().position(|entry| Arc::ptr_eq(entry, fan)) {
+                    bucket.remove(i);
+                }
+                if bucket.is_empty() {
+                    map.remove(&key);
+                }
             }
         }
         if let (Some(c), Outcome::Completed(resp)) = (cache, &outcome) {
-            c.insert(*key, &fan.model, fan.cache_gen, resp.clone());
+            // First-sight insert: the one place the confirm digest is
+            // computed off the collision path — and it runs on the
+            // delivery side, never on submit.
+            c.insert(key, fan.confirm(None), &fan.model, fan.cache_gen, resp.clone());
         }
     }
     let waiters = std::mem::take(&mut *fan.waiters.lock().unwrap());
@@ -466,11 +553,103 @@ impl PodRuntime {
 /// `place_*` time and reused by the autoscaler for scale-ups.
 type PodFactory = Box<dyn Fn(&PodPlan, &Arc<Artifact>) -> Result<Arc<dyn PodExecutor>> + Send + Sync>;
 
-/// The mutable pod set: every spawned pod (active and retired) plus the
-/// per-model index into it.
-struct Registry {
+/// An immutable published view of the pod set: every spawned pod
+/// (active and retired) plus the per-model index into it.  Snapshots
+/// are never mutated after publication — structural changes (scale-up,
+/// reap) build a new snapshot and publish it through [`SnapCell`].
+/// In-place pod state (retired flags, breakers, final reports) lives
+/// behind each pod's own interior mutability, so flipping it needs no
+/// republish.
+struct RegistrySnapshot {
     pods: Vec<Arc<PodRuntime>>,
     by_model: BTreeMap<String, Vec<usize>>,
+}
+
+/// Epoch-validated snapshot cell: the fabric's RCU-style registry
+/// publication point.
+///
+/// Readers call [`load`](SnapCell::load), which consults a thread-local
+/// single-entry cache keyed by `(cell id, epoch)`.  On the steady state
+/// (no scale event since this thread's last load) that is two relaxed
+/// atomic/TLS reads and **zero shared-lock traffic** — the
+/// no-lock-on-submit invariant.  Only when the epoch has moved (a
+/// copy-on-write publish happened) does the reader take the brief slot
+/// mutex to refresh its cached `Arc`.  Writers serialize structural
+/// changes on `FabricInner::registry_write`, build the successor
+/// snapshot off to the side, then [`publish`](SnapCell::publish) it:
+/// store the new `Arc`, then bump the epoch with `Release` so readers
+/// that observe the new epoch also observe the new slot contents.
+struct SnapCell {
+    /// Process-unique cell id, so a thread's cached entry from one
+    /// fabric can never satisfy a load against another.
+    id: u64,
+    epoch: AtomicU64,
+    slot: Mutex<Arc<RegistrySnapshot>>,
+}
+
+thread_local! {
+    /// One cached `(cell id, epoch, snapshot)` per thread — submit
+    /// threads hammer a single fabric, so one entry is a 100% hit rate
+    /// in the steady state.
+    static SNAP_CACHE: RefCell<Option<(u64, u64, Arc<RegistrySnapshot>)>> =
+        const { RefCell::new(None) };
+}
+
+impl SnapCell {
+    fn new(snap: RegistrySnapshot) -> SnapCell {
+        static NEXT_CELL_ID: AtomicU64 = AtomicU64::new(1);
+        SnapCell {
+            id: NEXT_CELL_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: AtomicU64::new(1),
+            slot: Mutex::new(Arc::new(snap)),
+        }
+    }
+
+    /// The current published snapshot (lock-free on the steady state).
+    fn load(&self) -> Arc<RegistrySnapshot> {
+        let epoch = self.epoch.load(Ordering::Acquire);
+        SNAP_CACHE.with(|c| {
+            let mut cached = c.borrow_mut();
+            if let Some((id, e, snap)) = cached.as_ref() {
+                if *id == self.id && *e == epoch {
+                    return Arc::clone(snap);
+                }
+            }
+            let snap = Arc::clone(&self.slot.lock().unwrap());
+            *cached = Some((self.id, epoch, Arc::clone(&snap)));
+            snap
+        })
+    }
+
+    /// Publish a successor snapshot.  Callers hold
+    /// `FabricInner::registry_write` for the whole read-modify-publish,
+    /// so publishes never race each other.
+    fn publish(&self, snap: RegistrySnapshot) {
+        *self.slot.lock().unwrap() = Arc::new(snap);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Per-model hot-path counters: plain atomics bumped on the submit
+/// path, aggregated only at report time.  The model set is fixed at
+/// spawn, so the owning map is immutable and lookups are lock-free.
+struct ModelCounters {
+    /// Requests shed for this model (capacity sheds + preemptions;
+    /// quota sheds are tracked fleet-wide and per-tenant, matching the
+    /// old `shed_by_model` map's semantics).
+    shed: AtomicU64,
+    /// Priority-weighted shed pressure (each capacity shed or
+    /// preemption adds `1 + priority rank`; the increment is always
+    /// integral, so a u64 atomic carries it exactly and the autoscaler
+    /// reads it as `f64` at tick time).  Quota sheds add nothing — a
+    /// tenant at its own quota is not a capacity problem.
+    pressure: AtomicU64,
+}
+
+impl ModelCounters {
+    fn new() -> ModelCounters {
+        ModelCounters { shed: AtomicU64::new(0), pressure: AtomicU64::new(0) }
+    }
 }
 
 /// Per-model autoscaler bookkeeping.
@@ -479,7 +658,7 @@ struct ModelScale {
     gate: HysteresisGate,
     cooldown: u32,
     /// Cumulative priority-weighted shed pressure at the last tick
-    /// (deltas against `FabricInner::pressure_by_model` feed the
+    /// (deltas against the model's `ModelCounters::pressure` feed the
     /// window below).
     last_pressure: f64,
     /// Time-windowed shed pressure: each tick folds in the fresh delta
@@ -507,7 +686,13 @@ struct ScalerState {
 
 /// Shared fabric state: the router, every pod, and the control plane.
 struct FabricInner {
-    registry: RwLock<Registry>,
+    /// The published pod-set snapshot (see [`SnapCell`]): submits load
+    /// it lock-free; structural changes publish copy-on-write.
+    registry: SnapCell,
+    /// Serializes structural registry changes (scale-up, reap).  Held
+    /// only by control-plane writers — the submit path never touches
+    /// it.
+    registry_write: Mutex<()>,
     input_shapes: BTreeMap<String, (usize, usize, usize)>,
     feedback: Arc<FeedbackStore>,
     cfg: FabricConfig,
@@ -545,16 +730,19 @@ struct FabricInner {
     quota_shed_total: AtomicU64,
     /// Queued requests evicted by higher-priority work.
     preempted_total: AtomicU64,
-    shed_by_model: Mutex<BTreeMap<String, u64>>,
-    /// Priority-weighted shed pressure per model (each capacity shed or
-    /// preemption adds `1 + priority rank`), the autoscaler's overload
-    /// signal: losing high-priority work pushes scale-up harder than
-    /// losing best-effort work.  Quota sheds add nothing — a tenant at
-    /// its own quota is not a capacity problem.
-    pressure_by_model: Mutex<BTreeMap<String, f64>>,
+    /// Per-model shed + autoscaler-pressure atomics (see
+    /// [`ModelCounters`]).  Built once at spawn from the fixed model
+    /// set, so the submit path pays a lock-free map lookup and an
+    /// atomic add — never a registry-wide mutex.
+    model_stats: BTreeMap<String, ModelCounters>,
     /// In-flight dedup index, shared with every pod worker.
     dedup: Arc<DedupMap>,
     dedup_hits: AtomicU64,
+    /// sha256 confirm digests actually computed on the submit path
+    /// (pre-hash bucket occupied, so tier 2 ran).  The hotpath bench
+    /// reads this to prove the two-tier scheme works: distinct-payload
+    /// traffic must keep it at zero.
+    sha_confirms: AtomicU64,
     /// Executor-failure retries re-routed under the resilience policy.
     retries_total: AtomicU64,
     /// Faults injected into this fabric (pod crashes on the threaded
@@ -595,15 +783,14 @@ fn plan_placements(
             if nodes_used.contains(&d.node) {
                 continue;
             }
-            // One clone at placement time, shared (`Arc`) with the pod
-            // executor and the runtime host from here on.
-            let artifact = Arc::new(
+            // Shared (`Arc`) with the pod executor and the runtime host
+            // from here on — a refcount bump, never a weight-byte clone.
+            let artifact = Arc::clone(
                 backend
                     .variants_of(model)
                     .into_iter()
                     .find(|a| a.manifest.variant == d.variant)
-                    .context("ranked variant missing from index")?
-                    .clone(),
+                    .context("ranked variant missing from index")?,
             );
             let mem = Backend::pod_memory_gb(&artifact);
             let Ok(pod_id) = cluster.bind(&d.aif, &d.variant, &d.node, mem) else {
@@ -630,12 +817,13 @@ fn plan_placements(
 }
 
 /// A full catalog snapshot of a backend's artifact index — what the
-/// autoscaler ranks scale-up placements from.
-fn catalog_of(backend: &Backend) -> Vec<Artifact> {
+/// autoscaler ranks scale-up placements from.  Shared handles: cloning
+/// the snapshot bumps refcounts, never weight bytes.
+fn catalog_of(backend: &Backend) -> Vec<Arc<Artifact>> {
     backend
         .models()
         .into_iter()
-        .flat_map(|m| backend.variants_of(m).into_iter().cloned())
+        .flat_map(|m| backend.variants_of(m).into_iter().map(Arc::clone))
         .collect()
 }
 
@@ -643,7 +831,7 @@ fn catalog_of(backend: &Backend) -> Vec<Artifact> {
 struct SpawnEnv {
     cluster: Cluster,
     factory: PodFactory,
-    catalog: Vec<Artifact>,
+    catalog: Vec<Arc<Artifact>>,
     policy: Policy,
     allow_native: bool,
     predictor: Option<crate::backend::predictor::LearnedLatency>,
@@ -689,6 +877,29 @@ impl Fabric {
             )?;
             Ok(Arc::new(pod) as Arc<dyn PodExecutor>)
         });
+        let mut pods = Vec::new();
+        for (plan, artifact) in plans {
+            let executor = (factory)(&plan, &artifact)?;
+            pods.push((plan, artifact, executor));
+        }
+        let env = SpawnEnv::from_backend(backend, cluster, factory);
+        Fabric::spawn(pods, cfg.clone(), env)
+    }
+
+    /// Place and spawn the fabric with **zero-work** pods
+    /// ([`NullPod`]): requests complete the instant a worker drains
+    /// them, so a saturation drive measures pure submit→verdict
+    /// router/queue/dedup overhead.  This is the `tf2aif bench
+    /// --hotpath` harness's executor; placement, queues, tenancy,
+    /// dedup and caching all behave exactly as in the other modes.
+    pub fn place_null(
+        backend: &Backend,
+        mut cluster: Cluster,
+        cfg: &FabricConfig,
+    ) -> Result<Fabric> {
+        let plans = plan_placements(backend, &mut cluster, cfg.replicas_per_model)?;
+        let factory: PodFactory =
+            Box::new(move |_plan, _artifact| Ok(Arc::new(NullPod::new()) as Arc<dyn PodExecutor>));
         let mut pods = Vec::new();
         for (plan, artifact) in plans {
             let executor = (factory)(&plan, &artifact)?;
@@ -749,7 +960,7 @@ impl Fabric {
             // over the same catalog, wired to the live feedback store —
             // so replicas land where measured (not just modeled)
             // latency says they should.
-            let mut backend = Backend::new(env.catalog.clone(), env.policy);
+            let mut backend = Backend::from_shared(env.catalog.clone(), env.policy);
             backend.allow_native = env.allow_native;
             // Same ranking inputs as the placing backend: learned
             // predictor (when trained) AND the live feedback store —
@@ -768,7 +979,7 @@ impl Fabric {
             }
         });
         let epoch = Instant::now();
-        let mut registry = Registry { pods: Vec::new(), by_model: BTreeMap::new() };
+        let mut registry = RegistrySnapshot { pods: Vec::new(), by_model: BTreeMap::new() };
         let mut input_shapes = BTreeMap::new();
         for (plan, artifact, executor) in pods {
             let s = &artifact.manifest.input_shape;
@@ -779,6 +990,14 @@ impl Fabric {
             registry.by_model.entry(plan.model.clone()).or_default().push(idx);
             registry.pods.push(Arc::new(new_runtime(plan, executor, &cfg, 0.0, &lanes)));
         }
+        // The model set is fixed from here on (the autoscaler only adds
+        // replicas of existing models), so the per-model counter map is
+        // immutable and submit-path lookups are lock-free.
+        let model_stats: BTreeMap<String, ModelCounters> = registry
+            .by_model
+            .keys()
+            .map(|m| (m.clone(), ModelCounters::new()))
+            .collect();
         // One estimator per model, up front: the model set never grows
         // after spawn, so the admission path reads an immutable map.
         let arrivals: BTreeMap<String, ArrivalRate> =
@@ -792,7 +1011,8 @@ impl Fabric {
                 BTreeMap::new()
             };
         let inner = Arc::new(FabricInner {
-            registry: RwLock::new(registry),
+            registry: SnapCell::new(registry),
+            registry_write: Mutex::new(()),
             input_shapes,
             feedback,
             cfg,
@@ -809,16 +1029,17 @@ impl Fabric {
             shed_total: AtomicU64::new(0),
             quota_shed_total: AtomicU64::new(0),
             preempted_total: AtomicU64::new(0),
-            shed_by_model: Mutex::new(BTreeMap::new()),
-            pressure_by_model: Mutex::new(BTreeMap::new()),
+            model_stats,
             dedup: Arc::new(Mutex::new(HashMap::new())),
             dedup_hits: AtomicU64::new(0),
+            sha_confirms: AtomicU64::new(0),
             retries_total: AtomicU64::new(0),
             faults_injected: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
-        let initial: Vec<Arc<PodRuntime>> = inner.registry.read().unwrap().pods.clone();
-        for pod in &initial {
+        // Iterate the published snapshot — no pod-vector clone.
+        let initial = inner.registry.load();
+        for pod in &initial.pods {
             start_workers(&inner, pod);
         }
         let interval_ms = inner.scaler.as_ref().map_or(0, |sc| sc.auto.interval_ms);
@@ -850,15 +1071,14 @@ impl Fabric {
     /// Every spawned pod's plan, in spawn order (includes pods the
     /// autoscaler has since retired — the full replica timeline).
     pub fn plans(&self) -> Vec<PodPlan> {
-        self.inner.registry.read().unwrap().pods.iter().map(|p| p.plan.clone()).collect()
+        self.inner.registry.load().pods.iter().map(|p| p.plan.clone()).collect()
     }
 
     /// Distinct cluster nodes hosting at least one **active** pod.
     pub fn nodes_spanned(&self) -> BTreeSet<String> {
         self.inner
             .registry
-            .read()
-            .unwrap()
+            .load()
             .pods
             .iter()
             .filter(|p| !p.retired.load(Ordering::Relaxed))
@@ -868,7 +1088,7 @@ impl Fabric {
 
     /// Models the fabric can route.
     pub fn models(&self) -> Vec<String> {
-        self.inner.registry.read().unwrap().by_model.keys().cloned().collect()
+        self.inner.registry.load().by_model.keys().cloned().collect()
     }
 
     /// NHWC input shape for a model's requests, from its placed artifact.
@@ -878,7 +1098,7 @@ impl Fabric {
 
     /// Active (non-retired) replicas of a model right now.
     pub fn active_replicas(&self, model: &str) -> usize {
-        let reg = self.inner.registry.read().unwrap();
+        let reg = self.inner.registry.load();
         reg.by_model.get(model).map_or(0, |idxs| {
             idxs.iter().filter(|&&i| !reg.pods[i].retired.load(Ordering::Relaxed)).count()
         })
@@ -893,8 +1113,13 @@ impl Fabric {
     /// preempting strictly-lower-priority queued work), and shed if
     /// every queue is at the bound.  Shed requests are counted —
     /// nothing is silently dropped.
-    pub fn submit(&self, model: &str, payload: Vec<f32>) -> Result<Submission> {
-        self.inner.submit_as(DEFAULT_TENANT, model, payload)
+    /// Payloads are shared end-to-end as `Arc<[f32]>` (queue staging,
+    /// dedup fan-out, response cache, retry re-routing all bump a
+    /// refcount); `Vec<f32>` call sites convert implicitly via
+    /// `impl Into<Arc<[f32]>>`, and callers holding an `Arc` pay
+    /// nothing.
+    pub fn submit(&self, model: &str, payload: impl Into<Arc<[f32]>>) -> Result<Submission> {
+        self.inner.submit_as(DEFAULT_TENANT, model, payload.into())
     }
 
     /// [`submit`](Self::submit) on behalf of a named tenant.  An
@@ -905,9 +1130,9 @@ impl Fabric {
         &self,
         tenant: &str,
         model: &str,
-        payload: Vec<f32>,
+        payload: impl Into<Arc<[f32]>>,
     ) -> Result<Submission> {
-        self.inner.submit_as(tenant, model, payload)
+        self.inner.submit_as(tenant, model, payload.into())
     }
 
     /// Per-tenant report rows (configuration + every admission verdict
@@ -928,7 +1153,11 @@ impl Fabric {
         if let Some(cache) = &self.inner.cache {
             cache.invalidate(model);
         }
-        self.inner.dedup.lock().unwrap().retain(|_, fan| fan.model != model);
+        let mut dedup = self.inner.dedup.lock().unwrap();
+        for bucket in dedup.values_mut() {
+            bucket.retain(|fan| fan.model != model);
+        }
+        dedup.retain(|_, bucket| !bucket.is_empty());
     }
 
     /// Total shed requests so far (quota + capacity + preemptions).
@@ -954,9 +1183,25 @@ impl Fabric {
         self.inner.dedup_hits.load(Ordering::Relaxed)
     }
 
-    /// Shed counts per model.
+    /// Shed counts per model, aggregated from the per-model atomics at
+    /// call time (models with zero sheds are omitted, matching the old
+    /// lazily-populated map).
     pub fn shed_by_model(&self) -> BTreeMap<String, u64> {
-        self.inner.shed_by_model.lock().unwrap().clone()
+        self.inner
+            .model_stats
+            .iter()
+            .filter_map(|(m, c)| {
+                let n = c.shed.load(Ordering::Relaxed);
+                (n > 0).then(|| (m.clone(), n))
+            })
+            .collect()
+    }
+
+    /// sha256 confirm digests computed on the submit path so far (the
+    /// two-tier hashing tier-2 counter — stays 0 for distinct-payload
+    /// traffic with no cache/dedup index hits).
+    pub fn sha_confirms(&self) -> u64 {
+        self.inner.sha_confirms.load(Ordering::Relaxed)
     }
 
     /// Response-cache counters (None when the cache is disabled).
@@ -990,8 +1235,7 @@ impl Fabric {
     pub fn breaker_trips(&self) -> u64 {
         self.inner
             .registry
-            .read()
-            .unwrap()
+            .load()
             .pods
             .iter()
             .filter_map(|p| p.breaker.as_ref())
@@ -1010,7 +1254,7 @@ impl Fabric {
     /// kill exactly).  Returns the number of queued items seized, or
     /// `None` when `idx` is out of range.
     pub fn inject_pod_crash(&self, idx: usize) -> Option<usize> {
-        let pod = self.inner.registry.read().unwrap().pods.get(idx).cloned()?;
+        let pod = self.inner.registry.load().pods.get(idx).cloned()?;
         if pod.retired.load(Ordering::Relaxed) {
             return Some(0);
         }
@@ -1047,16 +1291,14 @@ impl Fabric {
                 if inner.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                let victim = {
-                    let reg = inner.registry.read().unwrap();
-                    reg.pods
-                        .iter()
-                        .filter(|p| {
-                            p.plan.node == node && !p.retired.load(Ordering::Relaxed)
-                        })
-                        .nth(nth)
-                        .cloned()
-                };
+                let victim = inner
+                    .registry
+                    .load()
+                    .pods
+                    .iter()
+                    .filter(|p| p.plan.node == node && !p.retired.load(Ordering::Relaxed))
+                    .nth(nth)
+                    .cloned();
                 if let Some(pod) = victim {
                     inner.crash_pod(&pod);
                 }
@@ -1078,8 +1320,7 @@ impl Fabric {
     pub fn batch_targets(&self) -> Vec<(String, usize)> {
         self.inner
             .registry
-            .read()
-            .unwrap()
+            .load()
             .pods
             .iter()
             .filter(|p| !p.retired.load(Ordering::Relaxed))
@@ -1113,7 +1354,7 @@ impl Fabric {
     pub fn run(&self, requests: usize, arrival: Arrival, seed: u64) -> Result<FabricRunReport> {
         self.run_with(requests, arrival, seed, |rng: &mut Rng, model: &str, _i: usize| {
             let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
-            image_like(rng, h, w, c)
+            image_like(rng, h, w, c).into()
         })
     }
 
@@ -1122,13 +1363,14 @@ impl Fabric {
     /// payloads) and the `tf2aif bench` sweep (pre-generated payload
     /// pool), so pacing and accounting can never diverge between them.
     /// `payload_for` receives the workload RNG, the target model and the
-    /// request index.
+    /// request index; it returns the shared payload handle (a pool hands
+    /// out `Arc::clone`s, a generator converts its fresh `Vec` once).
     pub fn run_with(
         &self,
         requests: usize,
         arrival: Arrival,
         seed: u64,
-        payload_for: impl FnMut(&mut Rng, &str, usize) -> Vec<f32>,
+        payload_for: impl FnMut(&mut Rng, &str, usize) -> Arc<[f32]>,
     ) -> Result<FabricRunReport> {
         self.run_with_tenants(requests, arrival, seed, payload_for, |_| {
             DEFAULT_TENANT.to_string()
@@ -1151,7 +1393,7 @@ impl Fabric {
             seed,
             |rng: &mut Rng, model: &str, _i: usize| {
                 let (h, w, c) = self.input_shape(model).unwrap_or((8, 8, 1));
-                image_like(rng, h, w, c)
+                image_like(rng, h, w, c).into()
             },
             |i| mix.pick(i).to_string(),
         )
@@ -1165,7 +1407,7 @@ impl Fabric {
         requests: usize,
         arrival: Arrival,
         seed: u64,
-        mut payload_for: impl FnMut(&mut Rng, &str, usize) -> Vec<f32>,
+        mut payload_for: impl FnMut(&mut Rng, &str, usize) -> Arc<[f32]>,
         mut tenant_for: impl FnMut(usize) -> String,
     ) -> Result<FabricRunReport> {
         let models = self.models();
@@ -1242,8 +1484,7 @@ impl Fabric {
     pub fn pod_reports(&self, wall_s: f64) -> Vec<PodReport> {
         self.inner
             .registry
-            .read()
-            .unwrap()
+            .load()
             .pods
             .iter()
             .map(|p| {
@@ -1264,7 +1505,7 @@ impl Fabric {
     /// cache / scale counters).
     pub fn fleet_report(&self, wall_s: f64) -> FleetReport {
         let (snaps, pods, active_pods): (Vec<Snapshot>, usize, usize) = {
-            let reg = self.inner.registry.read().unwrap();
+            let reg = self.inner.registry.load();
             let snaps = reg.pods.iter().map(|p| p.stats().0).collect();
             let active =
                 reg.pods.iter().filter(|p| !p.retired.load(Ordering::Relaxed)).count();
@@ -1310,11 +1551,13 @@ impl Fabric {
     /// stop but does not join it; idempotent.
     pub fn drain(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
-        let pods: Vec<Arc<PodRuntime>> = self.inner.registry.read().unwrap().pods.clone();
-        for p in &pods {
+        // Iterate the published snapshot directly — the old path cloned
+        // the whole pod vector under the registry lock.
+        let snap = self.inner.registry.load();
+        for p in &snap.pods {
             p.queue.close();
         }
-        for p in &pods {
+        for p in &snap.pods {
             for w in p.workers.lock().unwrap().drain(..) {
                 let _ = w.join();
             }
@@ -1415,6 +1658,10 @@ impl FabricInner {
         let Some(executor) = pod.executor.lock().unwrap().clone() else {
             return;
         };
+        // Placeholder swapped into `Work` while a fused batch lends its
+        // requests to the executor — one shared empty slice per worker,
+        // so staging never allocates.
+        let empty: Arc<[f32]> = Vec::new().into();
         loop {
             let take = pod.controller.as_ref().map_or(max_batch, |c| c.drain_size());
             // `None` = closed and drained: the unambiguous shutdown
@@ -1472,7 +1719,7 @@ impl FabricInner {
                         waits.push(work.enqueued.elapsed().as_secs_f64() * 1e3);
                         reqs.push(std::mem::replace(
                             &mut work.req,
-                            Request { id: 0, payload: Vec::new() },
+                            Request { id: 0, payload: Arc::clone(&empty) },
                         ));
                         works.push(work);
                     }
@@ -1520,7 +1767,10 @@ impl FabricInner {
     /// Errors for unknown models; an empty vec (every replica retired)
     /// lets the caller shed.
     fn candidates(&self, model: &str) -> Result<Vec<Arc<PodRuntime>>> {
-        let reg = self.registry.read().unwrap();
+        // Snapshot load: lock-free on the steady state (no scale event
+        // since this thread's last submit) — the no-lock-on-submit
+        // invariant.
+        let reg = self.registry.load();
         let Some(idxs) = reg.by_model.get(model) else {
             let have: Vec<&String> = reg.by_model.keys().collect();
             bail!("fabric serves no model {model:?} (have: {have:?})");
@@ -1531,12 +1781,11 @@ impl FabricInner {
             .filter(|p| !p.retired.load(Ordering::Relaxed))
             .map(|p| (self.score(p), Arc::clone(p)))
             .collect();
-        drop(reg);
         scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         Ok(scored.into_iter().map(|(_, p)| p).collect())
     }
 
-    fn submit_as(&self, tenant_id: &str, model: &str, payload: Vec<f32>) -> Result<Submission> {
+    fn submit_as(&self, tenant_id: &str, model: &str, payload: Arc<[f32]>) -> Result<Submission> {
         // Unknown tenants and unknown models are typed errors — config
         // and addressing mistakes, not load to account.
         let tenant = Arc::clone(
@@ -1570,8 +1819,13 @@ impl FabricInner {
 
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        // Two-tier content addressing: the cheap 64-bit pre-hash is the
+        // only digest computed unconditionally; the sha256 confirm runs
+        // lazily — and at most once per submission, memoized here —
+        // strictly when an index lookup finds an occupied slot.
         let keyed = self.cfg.dedup || self.cache.is_some();
-        let key = if keyed { Some(dedup_key(model, &payload)) } else { None };
+        let key = if keyed { Some(prehash(model, &payload, self.cfg.prehash_mask)) } else { None };
+        let mut sha_memo: Option<[u8; 32]> = None;
 
         // Layer 1 — response cache: a fresh completed response for the
         // same (model, payload) answers immediately, re-stamped with
@@ -1579,8 +1833,17 @@ impl FabricInner {
         // latency fields are zeroed, because this caller waited for
         // nothing: reporting the leader's historical service time here
         // would poison the e2e percentiles the cache exists to improve.
-        if let (Some(cache), Some(k)) = (&self.cache, &key) {
-            if let Some(resp) = cache.get(k, model) {
+        if let (Some(cache), Some(k)) = (&self.cache, key) {
+            let hit = {
+                let mut sha_of = || {
+                    *sha_memo.get_or_insert_with(|| {
+                        self.sha_confirms.fetch_add(1, Ordering::Relaxed);
+                        confirm_sha(model, &payload)
+                    })
+                };
+                cache.get(k, model, &mut sha_of)
+            };
+            if let Some(resp) = hit {
                 tenant.stats.note_admitted();
                 tenant.stats.note_completed(0.0);
                 let _ = tx.send(Outcome::Completed(Response {
@@ -1611,22 +1874,41 @@ impl FabricInner {
             // already happened above, so under the lock we only do
             // backlog atomics and at most `replicas` O(1) queue pushes
             // (preemption delivery is deferred until the lock drops —
-            // `deliver` re-takes it).
+            // `deliver` re-takes it).  Buckets hold every in-flight
+            // leader sharing a pre-hash; attaching requires a sha256
+            // confirm on BOTH sides, so a 64-bit collision can never
+            // collapse distinct payloads onto one execution.
             let mut map = self.dedup.lock().unwrap();
-            if let Some(entry) = map.get(&k) {
-                entry.waiters.lock().unwrap().push((id, Arc::clone(&tenant), tx));
-                self.dedup_hits.fetch_add(1, Ordering::Relaxed);
-                tenant.stats.note_admitted();
-                return Ok(Submission::Enqueued(rx));
+            if let Some(bucket) = map.get(&k) {
+                let attach = bucket.iter().find(|f| {
+                    f.model == model && {
+                        let sha = *sha_memo.get_or_insert_with(|| {
+                            self.sha_confirms.fetch_add(1, Ordering::Relaxed);
+                            confirm_sha(model, &payload)
+                        });
+                        f.confirm(Some(&self.sha_confirms)) == sha
+                    }
+                });
+                if let Some(entry) = attach {
+                    entry.waiters.lock().unwrap().push((id, Arc::clone(&tenant), tx));
+                    self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                    tenant.stats.note_admitted();
+                    return Ok(Submission::Enqueued(rx));
+                }
             }
             let fan = Arc::new(Fanout {
                 key: Some(k),
+                sha: OnceLock::new(),
                 model: model.to_string(),
+                payload: Arc::clone(&payload),
                 cache_gen,
                 waiters: Mutex::new(vec![(id, Arc::clone(&tenant), tx)]),
             });
+            if let Some(s) = sha_memo {
+                let _ = fan.sha.set(s);
+            }
             let work = Work {
-                req: Request { id, payload },
+                req: Request { id, payload: Arc::clone(&payload) },
                 enqueued: Instant::now(),
                 fan: Arc::clone(&fan),
                 lane,
@@ -1635,15 +1917,20 @@ impl FabricInner {
             };
             routed = self.try_route(&scored, work);
             if routed.admitted {
-                map.insert(k, fan);
+                map.entry(k).or_default().push(fan);
             }
         } else {
             let fan = Arc::new(Fanout {
                 key,
+                sha: OnceLock::new(),
                 model: model.to_string(),
+                payload: Arc::clone(&payload),
                 cache_gen,
                 waiters: Mutex::new(vec![(id, Arc::clone(&tenant), tx)]),
             });
+            if let Some(s) = sha_memo {
+                let _ = fan.sha.set(s);
+            }
             let work = Work {
                 req: Request { id, payload },
                 enqueued: Instant::now(),
@@ -1672,7 +1959,7 @@ impl FabricInner {
         }
         tenant.stats.note_capacity_shed();
         self.shed_total.fetch_add(1, Ordering::Relaxed);
-        *self.shed_by_model.lock().unwrap().entry(model.to_string()).or_insert(0) += 1;
+        self.note_shed(model, 1);
         self.add_pressure(model, prio);
         Ok(Submission::Shed)
     }
@@ -1722,16 +2009,28 @@ impl FabricInner {
     fn note_preemption(&self, work: &Work, callers: u64) {
         self.preempted_total.fetch_add(callers, Ordering::Relaxed);
         self.shed_total.fetch_add(callers, Ordering::Relaxed);
-        let model = work.fan.model.clone();
-        *self.shed_by_model.lock().unwrap().entry(model.clone()).or_insert(0) += callers;
-        self.add_pressure(&model, work.prio);
+        self.note_shed(&work.fan.model, callers);
+        self.add_pressure(&work.fan.model, work.prio);
+    }
+
+    /// Fold `n` sheds into the model's atomic counter.  The map covers
+    /// every routable model (built at spawn), so a miss can only mean
+    /// the caller fabricated a model name — and those error out in
+    /// `candidates` long before any accounting runs.
+    fn note_shed(&self, model: &str, n: u64) {
+        if let Some(c) = self.model_stats.get(model) {
+            c.shed.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Fold one capacity shed / preemption into the model's
     /// priority-weighted pressure (the autoscaler's overload signal).
+    /// The increment `1 + prio` is integral, so the atomic counter
+    /// carries the f64 semantics of the old mutex map exactly.
     fn add_pressure(&self, model: &str, prio: u8) {
-        *self.pressure_by_model.lock().unwrap().entry(model.to_string()).or_insert(0.0) +=
-            1.0 + prio as f64;
+        if let Some(c) = self.model_stats.get(model) {
+            c.pressure.fetch_add(1 + prio as u64, Ordering::Relaxed);
+        }
     }
 
     /// One executor failure's terminal path: feed `pod`'s breaker, then
@@ -1857,11 +2156,12 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
     let Some(sc) = &inner.scaler else { return };
     inner.reap_retired();
     let a = sc.auto.clone();
-    let models: Vec<String> =
-        inner.registry.read().unwrap().by_model.keys().cloned().collect();
+    let models: Vec<String> = inner.registry.load().by_model.keys().cloned().collect();
     for model in models {
         let (active, backlog_sum, est_sum_ms) = {
-            let reg = inner.registry.read().unwrap();
+            // Re-load per model: a scale-up for the previous model
+            // published a fresh snapshot this tick should see.
+            let reg = inner.registry.load();
             let mut active = 0usize;
             let mut backlog = 0u64;
             let mut est_ms = 0.0f64;
@@ -1902,8 +2202,10 @@ fn autoscale_tick(inner: &Arc<FabricInner>) {
         // each scaled by 1 + priority rank): losing protected traffic
         // pushes scale-up harder than losing best-effort traffic, and
         // per-tenant quota sheds never register here at all.
-        let pressure_now =
-            inner.pressure_by_model.lock().unwrap().get(&model).copied().unwrap_or(0.0);
+        let pressure_now = inner
+            .model_stats
+            .get(&model)
+            .map_or(0.0, |c| c.pressure.load(Ordering::Relaxed) as f64);
         let mut pm = sc.per_model.lock().unwrap();
         let st = pm.entry(model.clone()).or_default();
         let pressure_delta = (pressure_now - st.last_pressure).max(0.0);
@@ -1969,7 +2271,7 @@ fn scale_up(
     trigger: &str,
 ) -> bool {
     let (nodes_used, plat_counts) = {
-        let reg = inner.registry.read().unwrap();
+        let reg = inner.registry.load();
         let mut nodes: BTreeSet<String> = BTreeSet::new();
         let mut plats: BTreeMap<&'static str, usize> = BTreeMap::new();
         if let Some(idxs) = reg.by_model.get(model) {
@@ -2003,6 +2305,7 @@ fn scale_up(
         if plat_counts.get(plat.name).copied().unwrap_or(0) >= plat.max_replicas_per_model() {
             continue;
         }
+        // A refcount bump — scale-ups never clone model weight bytes.
         let Some(artifact) = sc
             .backend
             .variants_of(model)
@@ -2012,7 +2315,6 @@ fn scale_up(
         else {
             continue;
         };
-        let artifact = Arc::new(artifact);
         let mem = Backend::pod_memory_gb(&artifact);
         let bound = {
             let mut cluster = inner.cluster.lock().unwrap();
@@ -2049,10 +2351,17 @@ fn scale_up(
         let pod = Arc::new(new_runtime(plan, executor, &inner.cfg, born_ms, &inner.lanes));
         start_workers(inner, &pod);
         {
-            let mut reg = inner.registry.write().unwrap();
-            let idx = reg.pods.len();
-            reg.pods.push(Arc::clone(&pod));
-            reg.by_model.entry(model.to_string()).or_default().push(idx);
+            // Copy-on-write publish: build the successor snapshot off
+            // to the side and swap it in — concurrent submits keep
+            // routing on the old snapshot, lock-free, the whole time.
+            let _guard = inner.registry_write.lock().unwrap();
+            let cur = inner.registry.load();
+            let mut pods = cur.pods.clone();
+            let mut by_model = cur.by_model.clone();
+            let idx = pods.len();
+            pods.push(Arc::clone(&pod));
+            by_model.entry(model.to_string()).or_default().push(idx);
+            inner.registry.publish(RegistrySnapshot { pods, by_model });
         }
         sc.ups.fetch_add(1, Ordering::Relaxed);
         sc.events.lock().unwrap().push(ScaleEvent {
@@ -2077,16 +2386,10 @@ impl FabricInner {
     /// Runs at the top of every autoscaler tick; pods still draining
     /// are left for a later tick (never blocks).
     fn reap_retired(&self) {
-        let retired: Vec<Arc<PodRuntime>> = self
-            .registry
-            .read()
-            .unwrap()
-            .pods
-            .iter()
-            .filter(|p| p.retired.load(Ordering::Relaxed))
-            .cloned()
-            .collect();
-        for pod in retired {
+        // Reaping frees the executor in place (the snapshot keeps the
+        // pod's row for reports); no structural change, so no republish.
+        let snap = self.registry.load();
+        for pod in snap.pods.iter().filter(|p| p.retired.load(Ordering::Relaxed)) {
             let mut workers = pod.workers.lock().unwrap();
             if workers.is_empty() {
                 continue; // already reaped (or shutdown got there first)
@@ -2120,7 +2423,7 @@ impl FabricInner {
         trigger: &str,
     ) -> bool {
         let victim: Option<Arc<PodRuntime>> = {
-            let reg = self.registry.read().unwrap();
+            let reg = self.registry.load();
             let mut worst: Option<(f64, Arc<PodRuntime>)> = None;
             if let Some(idxs) = reg.by_model.get(model) {
                 for &i in idxs {
@@ -2606,11 +2909,58 @@ mod tests {
     }
 
     #[test]
-    fn dedup_key_separates_models_and_payloads() {
-        let a = dedup_key("lenet", &[1.0, 2.0]);
-        assert_eq!(a, dedup_key("lenet", &[1.0, 2.0]), "deterministic");
-        assert_ne!(a, dedup_key("resnet50", &[1.0, 2.0]), "model is part of the key");
-        assert_ne!(a, dedup_key("lenet", &[1.0, 2.5]), "payload is part of the key");
-        assert_ne!(a, dedup_key("lenet", &[1.0]), "length is part of the key");
+    fn prehash_separates_models_and_payloads() {
+        let a = prehash("lenet", &[1.0, 2.0], !0);
+        assert_eq!(a, prehash("lenet", &[1.0, 2.0], !0), "deterministic");
+        assert_ne!(a, prehash("resnet50", &[1.0, 2.0], !0), "model is part of the key");
+        assert_ne!(a, prehash("lenet", &[1.0, 2.5], !0), "payload is part of the key");
+        assert_ne!(a, prehash("lenet", &[1.0], !0), "length is part of the key");
+        assert_eq!(prehash("lenet", &[1.0, 2.0], 0x7), a & 0x7, "mask hook narrows the key");
+    }
+
+    #[test]
+    fn confirm_sha_separates_models_and_payloads() {
+        let a = confirm_sha("lenet", &[1.0, 2.0]);
+        assert_eq!(a, confirm_sha("lenet", &[1.0, 2.0]), "deterministic");
+        assert_ne!(a, confirm_sha("resnet50", &[1.0, 2.0]), "model is part of the digest");
+        assert_ne!(a, confirm_sha("lenet", &[1.0, 2.5]), "payload is part of the digest");
+        assert_ne!(a, confirm_sha("lenet", &[1.0]), "length is part of the digest");
+    }
+
+    #[test]
+    fn forced_prehash_collisions_still_dedup_by_confirm() {
+        // Mask the pre-hash down to a single bucket: every submission
+        // collides at tier 1, so correctness rests entirely on the
+        // sha256 confirm step.  Distinct payloads must execute
+        // separately; identical ones must still collapse.
+        let cfg = FabricConfig {
+            dedup: true,
+            prehash_mask: 0,
+            workers: 1,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let gate = Gate::closed_gate();
+        let fabric = sim_fabric(&cfg, Some(Arc::clone(&gate)));
+        let mut rxs = Vec::new();
+        // Two distinct payloads, each submitted twice while the gate
+        // holds execution: 2 leaders + 2 dedup'd followers.
+        for _ in 0..2 {
+            for p in [vec![1.0f32; 8], vec![2.0f32; 8]] {
+                match fabric.submit("lenet", p).unwrap() {
+                    Submission::Enqueued(rx) => rxs.push(rx),
+                    Submission::Shed => panic!("queue has room"),
+                }
+            }
+        }
+        assert_eq!(fabric.dedup_hits(), 2, "identical payloads collapse despite collisions");
+        assert!(fabric.sha_confirms() > 0, "a single-bucket mask forces tier-2 confirms");
+        gate.open();
+        for rx in rxs {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        let fleet = fabric.fleet_report(1.0);
+        assert_eq!(fleet.requests, 2, "exactly one execution per distinct payload");
+        fabric.shutdown();
     }
 }

@@ -211,6 +211,76 @@ impl SimPod {
     }
 }
 
+/// A zero-work pod executor: returns a canned response immediately, no
+/// cost-model sampling, no sleeping, no RNG.  Everything it *doesn't* do
+/// is the point — driving the fabric at saturation through `NullPod`s
+/// measures pure submit→verdict router/queue/dedup overhead (the
+/// `tf2aif bench --hotpath` harness), because the serving time is as
+/// close to zero as the machine allows.  Metrics and the dispatch
+/// counter are still recorded so conservation accounting holds.
+pub struct NullPod {
+    metrics: Arc<Collector>,
+    dispatches: AtomicU64,
+}
+
+impl NullPod {
+    /// Create a zero-work pod.
+    pub fn new() -> NullPod {
+        NullPod { metrics: Arc::new(Collector::new()), dispatches: AtomicU64::new(0) }
+    }
+
+    /// This pod's metrics collector.
+    pub fn metrics(&self) -> &Arc<Collector> {
+        &self.metrics
+    }
+
+    /// Dispatches so far (one per fused batch).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Serve one request with zero modeled work.
+    pub fn execute(&self, req: &Request, queue_wait_ms: f64) -> Result<Response> {
+        self.execute_batch(std::slice::from_ref(req), &[queue_wait_ms]).remove(0)
+    }
+
+    /// Serve a drained batch as one zero-cost dispatch.  The canned
+    /// prediction matches [`SimPod`]'s deterministic stand-in
+    /// (`class == id % 10`), so accounting-equivalence suites can swap
+    /// executors without changing expected outputs.
+    pub fn execute_batch(
+        &self,
+        reqs: &[Request],
+        queue_wait_ms: &[f64],
+    ) -> Vec<Result<Response>> {
+        assert_eq!(reqs.len(), queue_wait_ms.len(), "one queue wait per request");
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        reqs.iter()
+            .zip(queue_wait_ms)
+            .map(|(req, &wait)| {
+                self.metrics.record(0.0, Duration::ZERO, Duration::from_secs_f64(wait / 1e3));
+                let prediction = Prediction { class: (req.id % 10) as usize, score: 1.0 };
+                Ok(Response {
+                    id: req.id,
+                    prediction,
+                    service_ms: 0.0,
+                    real_compute_ms: 0.0,
+                    queue_wait_ms: wait,
+                })
+            })
+            .collect()
+    }
+}
+
+impl Default for NullPod {
+    fn default() -> Self {
+        NullPod::new()
+    }
+}
+
 /// Per-model (gflops, weights_bytes, input_shape) for the synthetic
 /// catalog — the Table III scale the repo's python exporter produces.
 const MODEL_SPECS: &[(&str, f64, u64, [usize; 4])] = &[
@@ -299,7 +369,7 @@ mod tests {
     fn sim_pod_records_metrics() {
         let pod = SimPod::new("GPU", 0.1, 0.0, 7, None).unwrap();
         let resp = pod
-            .execute(&Request { id: 3, payload: vec![0.0; 4] }, 1.5)
+            .execute(&Request { id: 3, payload: vec![0.0; 4].into() }, 1.5)
             .unwrap();
         assert_eq!(resp.id, 3);
         assert_eq!(resp.prediction.class, 3);
@@ -313,7 +383,7 @@ mod tests {
     fn fused_batch_amortizes_platform_overhead() {
         let pod = SimPod::new("GPU", 0.025, 0.0, 9, None).unwrap();
         let reqs: Vec<Request> =
-            (0..8).map(|i| Request { id: i, payload: vec![] }).collect();
+            (0..8).map(|i| Request { id: i, payload: Vec::new().into() }).collect();
         let out = pod.execute_batch(&reqs, &[0.0; 8]);
         assert_eq!(out.len(), 8);
         let batched_ms = out[0].as_ref().unwrap().service_ms;
@@ -333,7 +403,7 @@ mod tests {
             Arc::new(SimPod::new("CPU", 0.001, 0.0, 1, Some(Arc::clone(&gate))).unwrap());
         let p2 = Arc::clone(&pod);
         let h = std::thread::spawn(move || {
-            p2.execute(&Request { id: 0, payload: vec![] }, 0.0).unwrap()
+            p2.execute(&Request { id: 0, payload: Vec::new().into() }, 0.0).unwrap()
         });
         // Explicit quiesce: wait until the executor is provably parked
         // at the gate (no arbitrary settle sleep, no scheduler races).

@@ -544,7 +544,8 @@ pub fn run_scenarios(seed: u64) -> ScenarioVerdicts {
         // cap, which is exactly the admission story under a hot tenant.
         for lane in [0usize, 1] {
             while queue.lane_len(lane) < 8 {
-                let req = Request { id: *next_id * 3 + lane as u64, payload: vec![] };
+                let req =
+                    Request { id: *next_id * 3 + lane as u64, payload: Vec::new().into() };
                 *next_id += 1;
                 match queue.push(lane, 1, req) {
                     Push::Admitted(ev) => debug_assert!(ev.is_empty()),
@@ -553,7 +554,7 @@ pub fn run_scenarios(seed: u64) -> ScenarioVerdicts {
             }
         }
         for _ in 0..10 {
-            let req = Request { id: *next_id * 3 + 2, payload: vec![] };
+            let req = Request { id: *next_id * 3 + 2, payload: Vec::new().into() };
             *next_id += 1;
             // At the hot lane's slot cap the surplus is rejected — the
             // share bound doing its job mid-scenario.

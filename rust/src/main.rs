@@ -15,6 +15,8 @@
 //! - `bench`    — fabric sweeps: fused vs per-item, adaptive vs fixed
 //!   batch sizing, fixed replicas vs autoscaler, tenancy fairness, and
 //!   the continuum scenario verdicts; writes `BENCH_fabric.json`.
+//!   `--hotpath` instead runs the submit→verdict overhead harness at
+//!   saturation over zero-work pods (schema v7 `hotpath` section).
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
@@ -141,7 +143,10 @@ fn print_usage() {
          [--report-out FILE]\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
-         [--slo MS] [--seed N] [--out FILE] [--fused-only]\n  \
+         [--slo MS] [--seed N] [--out FILE] [--fused-only]\n           \
+         [--hotpath]  (submit→verdict overhead harness at saturation over\n            \
+         zero-work pods; writes only the v7 `hotpath` section; default\n            \
+         20000 requests/arm; incompatible with --fused-only)\n  \
          report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
     );
 }
@@ -1088,6 +1093,56 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         slo_p99_ms: flags.f64_or("--slo", d.slo_p99_ms)?,
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
     };
+
+    if flags.has("--hotpath") {
+        if flags.has("--fused-only") {
+            bail!("--hotpath and --fused-only are mutually exclusive");
+        }
+        // The hotpath harness saturates instead of pacing, so it wants
+        // far more requests than a sweep point; default accordingly
+        // unless the caller pinned --requests.
+        let requests = match flags.get("--requests") {
+            Some(_) => cfg.requests,
+            None => 20_000,
+        };
+        let hcfg = BenchConfig { requests, ..cfg.clone() };
+        println!(
+            "hotpath: driving the null-executor fabric at saturation \
+             ({requests} requests/arm, seed {})…\n",
+            hcfg.seed,
+        );
+        let hp = bench::run_hotpath_bench(&hcfg)?;
+        println!(
+            "{:<22} {:>9} {:>12} {:>10} {:>10} {:>7} {:>8}",
+            "arm", "payload", "rps/core", "p50 µs", "p99 µs", "dedup", "sha"
+        );
+        for a in &hp.arms {
+            println!(
+                "{:<22} {:>9} {:>12.0} {:>10.1} {:>10.1} {:>7} {:>8}",
+                a.name, a.payload_len, a.rps_per_core, a.p50_us, a.p99_us,
+                a.dedup_hits, a.sha_confirms,
+            );
+        }
+        println!(
+            "\nspeedup vs {} baseline: {:.2}x (≥ 2x: {}) | \
+             rps/core ≥ {:.0} floor: {} | \
+             two-tier dedup no regression: {} | conservation: {}",
+            hp.baseline,
+            hp.speedup_vs_baseline,
+            yn(hp.speedup_ge_2x),
+            hp.floor_rps_per_core,
+            yn(hp.rps_per_core_above_floor),
+            yn(hp.dedup_two_tier_no_regression),
+            yn(hp.conservation),
+        );
+        let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
+        bench::write_json(
+            out, &hcfg, &[], None, None, None, None, None, None, Some(&hp),
+        )?;
+        println!("wrote {out}");
+        return Ok(());
+    }
+
     println!(
         "sweeping {} batch sizes × {} rates × 2 execution modes \
          ({} requests/point, models {:?}, time-scale {})…\n",
@@ -1231,6 +1286,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         continuum_bench.as_ref(),
         des_bench.as_ref(),
         resilience_bench.as_ref(),
+        None,
     )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {

@@ -73,12 +73,19 @@ impl PrePost for ImageClassify {
 }
 
 /// One inference request.
+///
+/// The payload is a shared, immutable `Arc<[f32]>`: cloning a request —
+/// dedup fan-out, retry/hedge re-routing, continuum spillover, batch
+/// staging — moves a refcount, never the tensor bytes.  `Arc<[f32]>`
+/// implements `From<Vec<f32>>`, so call sites build payloads with
+/// `vec![…].into()` (and the fabric's submit APIs accept
+/// `impl Into<Arc<[f32]>>` directly).
 #[derive(Debug, Clone)]
 pub struct Request {
     /// Caller-assigned request id.
     pub id: u64,
-    /// Raw input payload (preprocess runs server-side).
-    pub payload: Vec<f32>,
+    /// Raw input payload (preprocess runs server-side), shared zero-copy.
+    pub payload: Arc<[f32]>,
 }
 
 /// One inference response with both latency channels.

@@ -1,0 +1,106 @@
+//! Vendored non-cryptographic 64-bit hashing — tier 1 of the fabric's
+//! two-tier content-addressing scheme.
+//!
+//! The serving hot path used to sha256 every `(model, payload)` pair to
+//! key the dedup map and response cache.  sha256 is the right *confirm*
+//! hash (collision-resistant, stable across runs), but it is far too
+//! expensive to pay per submit.  [`Fnv1a`] is the cheap *index* hash:
+//! an FNV-1a 64-bit stream hash (public-domain constants, no
+//! dependencies) that indexes the maps; sha256 is computed only when an
+//! index lookup actually finds an occupied slot, to confirm the match —
+//! see `crate::fabric`'s hot-path docs for the full protocol.
+//!
+//! FNV-1a is deterministic across platforms and runs (no per-process
+//! seeding), which the bit-reproducibility suites rely on.
+
+/// FNV-1a 64-bit streaming hasher.
+///
+/// ```
+/// use tf2aif::util::hash::Fnv1a;
+/// let mut h = Fnv1a::new();
+/// h.write(b"abc");
+/// // One-shot and streaming agree.
+/// let mut g = Fnv1a::new();
+/// g.write(b"a");
+/// g.write(b"bc");
+/// assert_eq!(h.finish(), g.finish());
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Fnv1a {
+    /// A fresh hasher at the offset basis.
+    pub fn new() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Fold `bytes` into the running hash.
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    /// Fold a single byte into the running hash.
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+/// One-shot convenience over a single byte slice.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Classic published FNV-1a/64 vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let mut h = Fnv1a::new();
+        h.write(b"hello ");
+        h.write_u8(b'w');
+        h.write(b"orld");
+        assert_eq!(h.finish(), fnv1a_64(b"hello world"));
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        // Not a collision-resistance claim — just a sanity check that
+        // nearby inputs do not trivially alias.
+        let a = fnv1a_64(&1.0f32.to_le_bytes());
+        let b = fnv1a_64(&1.5f32.to_le_bytes());
+        assert_ne!(a, b);
+    }
+}

@@ -2,6 +2,7 @@
 //! tokio/criterion, so the JSON codec, PRNG, statistics, and thread pool
 //! the coordinator needs are first-class modules here).
 
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,231 @@
+//! Equivalence suite for the hot-path rework (sharded registry snapshot +
+//! two-tier dedup hashing): the fabric must produce **identical verdict
+//! accounting and conservation sums** regardless of the tier-1 pre-hash
+//! width.  `FabricConfig::prehash_mask` narrows the vendored FNV-1a
+//! pre-hash that indexes the dedup map — `!0` is production, `0x7` forces
+//! frequent 64-bit collisions, `0` funnels every request into ONE bucket —
+//! and because an occupied bucket is always confirmed by sha256 before a
+//! request attaches, none of that may change what the caller observes.
+//!
+//! Covered here:
+//! - gated deterministic floods: dedup_hits is exactly the duplicate
+//!   count under every mask (identical payloads collapse),
+//! - forced collisions: distinct payloads sharing a pre-hash bucket are
+//!   NEVER collapsed (the sha256 confirm rejects them) and the confirm
+//!   counter proves the second tier actually ran,
+//! - threaded saturation drives: conservation sums and the
+//!   `completed = pod-served + deduped` identity hold under every mask,
+//! - the virtual-time path (`--virtual-time` / DES): payload-free by
+//!   construction, so it must stay byte-reproducible and conserving —
+//!   asserted against the same golden scenario the CI gate replays.
+
+use std::sync::Arc;
+
+use tf2aif::backend::{Backend, Policy};
+use tf2aif::cluster::{paper_testbed, Cluster};
+use tf2aif::continuum::des::canned;
+use tf2aif::fabric::des::run_des;
+use tf2aif::fabric::sim::{synthetic_catalog, Gate};
+use tf2aif::fabric::{Fabric, FabricConfig, Outcome, Submission};
+use tf2aif::workload::Arrival;
+
+/// The masks under test: production width, a 3-bit hash (collisions
+/// near-certain), and the degenerate single-bucket hash.
+const MASKS: &[u64] = &[!0u64, 0x7, 0x0];
+
+fn testbed() -> Cluster {
+    let mut c = Cluster::new(paper_testbed());
+    c.apply_kube_api_extension();
+    c
+}
+
+fn place(cfg: &FabricConfig, gate: Option<Arc<Gate>>) -> Fabric {
+    let backend = Backend::new(synthetic_catalog(), Policy::MinLatency);
+    Fabric::place_sim(&backend, testbed(), cfg, gate).unwrap()
+}
+
+fn gated_cfg(prehash_mask: u64) -> FabricConfig {
+    FabricConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        workers: 1,
+        time_scale: 0.0,
+        dedup: true,
+        cache_capacity: 0,
+        prehash_mask,
+        ..Default::default()
+    }
+}
+
+/// Distinct-by-content payloads: only element 0 varies, so narrow masks
+/// collide maximally while the exact bytes stay unique.
+fn distinct_payloads(n: usize) -> Vec<Arc<[f32]>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![0.5f32; 32];
+            p[0] = i as f32;
+            p.into()
+        })
+        .collect()
+}
+
+/// Gate the executors closed, submit `rounds` passes over `pool`, open
+/// the gate, and return the observed accounting tuple
+/// `(enqueued, shed, completed, dedup_hits, sha_confirms)`.
+fn gated_flood(
+    mask: u64,
+    pool: &[Arc<[f32]>],
+    rounds: usize,
+) -> (usize, usize, usize, u64, u64) {
+    let cfg = gated_cfg(mask);
+    let gate = Gate::closed_gate();
+    let fabric = place(&cfg, Some(Arc::clone(&gate)));
+    let model = "lenet";
+    let mut pending = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..rounds {
+        for payload in pool {
+            match fabric.submit(model, Arc::clone(payload)).unwrap() {
+                Submission::Enqueued(rx) => pending.push(rx),
+                Submission::Shed => shed += 1,
+            }
+        }
+    }
+    let enqueued = pending.len();
+    let (dedup_hits, sha_confirms) = (fabric.dedup_hits(), fabric.sha_confirms());
+    gate.open();
+    let mut completed = 0usize;
+    for rx in pending {
+        match rx.recv().expect("every admitted request gets a verdict") {
+            Outcome::Completed(_) => completed += 1,
+            other => panic!("gated sim pods never shed/fail admitted work: {other:?}"),
+        }
+    }
+    fabric.shutdown();
+    (enqueued, shed, completed, dedup_hits, sha_confirms)
+}
+
+#[test]
+fn verdict_accounting_is_identical_under_every_prehash_mask() {
+    // 8 distinct payloads × 3 rounds while the executors are gated: the
+    // first round inserts 8 leaders, every later round attaches as a
+    // follower.  That arithmetic — 24 admitted, 16 dedup hits — must be
+    // bit-equal no matter how collided the tier-1 index is.
+    let pool = distinct_payloads(8);
+    let baseline = gated_flood(MASKS[0], &pool, 3);
+    for &mask in MASKS {
+        let got = gated_flood(mask, &pool, 3);
+        assert_eq!(
+            (got.0, got.1, got.2, got.3),
+            (baseline.0, baseline.1, baseline.2, baseline.3),
+            "mask {mask:#x}: accounting diverged from production-width hash"
+        );
+        assert_eq!(got.0, 24, "mask {mask:#x}: every submission admitted");
+        assert_eq!(got.1, 0, "mask {mask:#x}: nothing shed below the bound");
+        assert_eq!(got.2, 24, "mask {mask:#x}: every admitted request completed");
+        assert_eq!(got.3, 16, "mask {mask:#x}: exactly the duplicates collapsed");
+    }
+}
+
+#[test]
+fn forced_collisions_never_collapse_distinct_payloads() {
+    // Mask 0 funnels ALL requests into one dedup bucket.  Distinct
+    // payloads must still execute independently — the sha256 confirm is
+    // what keeps a 64-bit collision from corrupting verdicts — and the
+    // confirm counter must prove the second tier actually ran.
+    let pool = distinct_payloads(8);
+    let (enqueued, shed, completed, dedup_hits, sha_confirms) =
+        gated_flood(0, &pool, 1);
+    assert_eq!((enqueued, shed), (8, 0));
+    assert_eq!(dedup_hits, 0, "distinct payloads must never dedup");
+    assert_eq!(completed, 8, "each collided-but-distinct request ran on its own");
+    assert!(
+        sha_confirms > 0,
+        "an occupied bucket probe must have computed confirm digests"
+    );
+    // Production-width hash on the same distinct pool: buckets never
+    // collide, so the sha256 tier is never consulted at all.
+    let (.., full_hits, full_confirms) = gated_flood(!0, &pool, 1);
+    assert_eq!(full_hits, 0);
+    assert_eq!(
+        full_confirms, 0,
+        "full-width pre-hash on distinct traffic must not pay for sha256"
+    );
+}
+
+#[test]
+fn duplicate_collapse_survives_forced_collisions() {
+    // The property from the issue: forced 64-bit pre-hash collisions
+    // still dedup correctly via the sha256 confirm.  A pool of 4
+    // payloads each submitted twice while gated must yield exactly 4
+    // dedup hits under the production hash AND under the degenerate
+    // single-bucket hash.
+    let pool = distinct_payloads(4);
+    let mut doubled = Vec::new();
+    for p in &pool {
+        doubled.push(Arc::clone(p));
+        doubled.push(Arc::clone(p));
+    }
+    let mut per_mask = Vec::new();
+    for &mask in MASKS {
+        let got = gated_flood(mask, &doubled, 1);
+        assert_eq!(got.3, 4, "mask {mask:#x}: one follower per distinct payload");
+        assert_eq!(got.2, 8, "mask {mask:#x}: followers still receive verdicts");
+        per_mask.push((got.0, got.1, got.2, got.3));
+    }
+    assert!(
+        per_mask.windows(2).all(|w| w[0] == w[1]),
+        "accounting must be mask-invariant: {per_mask:?}"
+    );
+}
+
+#[test]
+fn threaded_saturation_conserves_under_every_mask() {
+    // A real threaded drive (Poisson arrivals, pooled payloads so
+    // in-flight overlap actually exercises the dedup map): conservation
+    // and the `completed = pod-served + deduped` identity must hold for
+    // every mask.  Overlap timing is scheduler-dependent, so dedup_hits
+    // itself may vary run to run — the sums may not.
+    let pool = distinct_payloads(4);
+    for &mask in MASKS {
+        let cfg = FabricConfig {
+            time_scale: 0.0,
+            dedup: true,
+            cache_capacity: 0,
+            prehash_mask: mask,
+            ..Default::default()
+        };
+        let fabric = place(&cfg, None);
+        let run = fabric
+            .run_with(300, Arrival::Poisson { rps: 50_000.0 }, 7, |_, _, i| {
+                Arc::clone(&pool[i % pool.len()])
+            })
+            .unwrap();
+        assert!(run.fully_accounted(), "mask {mask:#x}: conservation");
+        assert_eq!(run.failed, 0, "mask {mask:#x}: sim pods never fail");
+        assert_eq!(run.completed + run.shed, 300, "mask {mask:#x}");
+        let fleet = fabric.fleet_report(run.wall_s);
+        assert_eq!(
+            fleet.requests + fleet.deduped,
+            run.completed as u64,
+            "mask {mask:#x}: every completion is a pod execution or a dedup attach"
+        );
+        fabric.shutdown();
+    }
+}
+
+#[test]
+fn virtual_time_path_is_unchanged_and_conserving() {
+    // The DES engine never touches payload bytes, so the hot-path work
+    // cannot move it — prove it: the golden scenario the CI determinism
+    // gate replays is still byte-reproducible and conserving.
+    let first = run_des(&canned("diurnal-day", 11).unwrap()).unwrap();
+    let second = run_des(&canned("diurnal-day", 11).unwrap()).unwrap();
+    assert!(first.conservation_holds(), "virtual-time conservation");
+    assert!(first.submitted > 0);
+    assert_eq!(
+        first.canonical_json(),
+        second.canonical_json(),
+        "virtual-time replay must stay byte-identical after the hot-path rework"
+    );
+}

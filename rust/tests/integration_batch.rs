@@ -97,7 +97,9 @@ fn server_batcher_fuses_and_answers_every_request() {
     let handle =
         ServerHandle::spawn(Arc::clone(&server), BatcherConfig { max_batch: 4, workers: 2 });
     let pending: Vec<_> = (0..40)
-        .map(|i| handle.submit(Request { id: i, payload: vec![0.25 * (i as f32 + 1.0); 16] }))
+        .map(|i| {
+            handle.submit(Request { id: i, payload: vec![0.25 * (i as f32 + 1.0); 16].into() })
+        })
         .collect();
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv().unwrap().unwrap();
@@ -123,9 +125,9 @@ fn handle_batch_isolates_malformed_items() {
     let server =
         Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify)).unwrap());
     let reqs = vec![
-        Request { id: 0, payload: vec![0.1; 16] },
-        Request { id: 1, payload: vec![0.1; 7] },
-        Request { id: 2, payload: vec![0.2; 16] },
+        Request { id: 0, payload: vec![0.1; 16].into() },
+        Request { id: 1, payload: vec![0.1; 7].into() },
+        Request { id: 2, payload: vec![0.2; 16].into() },
     ];
     let out = server.handle_batch(&reqs, &[0.0, 0.0, 0.0]);
     assert_eq!(out.len(), 3);
@@ -147,10 +149,10 @@ fn handle_queued_is_a_fused_batch_of_one() {
     let engine = Engine::cpu().unwrap();
     let server =
         Arc::new(AifServer::deploy(&engine, &artifact, Arc::new(ImageClassify)).unwrap());
-    let resp = server.handle(&Request { id: 7, payload: vec![0.5; 16] }).unwrap();
+    let resp = server.handle(&Request { id: 7, payload: vec![0.5; 16].into() }).unwrap();
     assert_eq!(resp.id, 7);
     assert_eq!(server.model.dispatch_count().unwrap(), 1);
-    assert!(server.handle(&Request { id: 8, payload: vec![0.5; 3] }).is_err());
+    assert!(server.handle(&Request { id: 8, payload: vec![0.5; 3].into() }).is_err());
     assert_eq!(server.metrics.snapshot().errors, 1);
     assert_eq!(
         server.model.dispatch_count().unwrap(),

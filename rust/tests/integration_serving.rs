@@ -74,7 +74,9 @@ fn batched_loop_serves_burst_without_loss() {
     );
     let mut rng = Rng::new(2);
     let pending: Vec<_> = (0..100)
-        .map(|i| handle.submit(Request { id: i, payload: image_like(&mut rng, 32, 32, 1) }))
+        .map(|i| {
+            handle.submit(Request { id: i, payload: image_like(&mut rng, 32, 32, 1).into() })
+        })
         .collect();
     let mut ids = Vec::new();
     for (i, rx) in pending.into_iter().enumerate() {
@@ -93,11 +95,11 @@ fn failure_injection_bad_input_is_counted_not_fatal() {
     let Some(server) = deploy("CPU") else { return };
     // Payload of the wrong size: preprocess passes it through, infer must
     // reject it, metrics must count it, server must keep serving.
-    let bad = Request { id: 1, payload: vec![0.0; 7] };
+    let bad = Request { id: 1, payload: vec![0.0; 7].into() };
     assert!(server.handle(&bad).is_err());
     assert_eq!(server.metrics.snapshot().errors, 1);
     let mut rng = Rng::new(3);
-    let good = Request { id: 2, payload: image_like(&mut rng, 32, 32, 1) };
+    let good = Request { id: 2, payload: image_like(&mut rng, 32, 32, 1).into() };
     assert!(server.handle(&good).is_ok(), "server must survive bad requests");
 }
 
@@ -129,7 +131,7 @@ fn custom_prepost_interface_is_honored() {
     let server = AifServer::deploy(&engine, &a, Arc::new(Custom)).unwrap();
     let mut rng = Rng::new(4);
     let resp = server
-        .handle(&Request { id: 0, payload: image_like(&mut rng, 32, 32, 1) })
+        .handle(&Request { id: 0, payload: image_like(&mut rng, 32, 32, 1).into() })
         .unwrap();
     assert!(resp.prediction.score > 0.0 && resp.prediction.score <= 1.0, "softmax");
 }
@@ -141,7 +143,7 @@ fn native_variant_uses_native_cost_model() {
     assert!(!accel.is_native());
     assert!(native.is_native());
     let mut rng = Rng::new(5);
-    let img = image_like(&mut rng, 32, 32, 1);
+    let img: std::sync::Arc<[f32]> = image_like(&mut rng, 32, 32, 1).into();
     let a = accel.handle(&Request { id: 0, payload: img.clone() }).unwrap();
     let n = native.handle(&Request { id: 0, payload: img }).unwrap();
     assert!(

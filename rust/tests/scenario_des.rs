@@ -8,7 +8,9 @@
 //! and the canonical report must parse back with the documented schema
 //! fields.  The million-user day is exercised by the CI determinism
 //! gate through the release CLI (`tf2aif continuum --virtual-time`);
-//! this suite covers the three fast scenarios in tier-1.
+//! tier-1 covers the three fast scenarios, and
+//! `million_user_day_golden_is_byte_stable` pins the full day — ignored
+//! under debug builds, live in the release golden-suite CI step.
 
 use tf2aif::continuum::des::{canned, scenario_from_topology, CANNED};
 use tf2aif::continuum::continuum_testbed;
@@ -124,6 +126,25 @@ fn storm_injects_faults_and_loses_no_admitted_work() {
         res.get("faults_injected").unwrap().usize().unwrap() as u64,
         first.faults_injected,
         "the canonical report mirrors the in-memory counter"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "1.29M virtual requests: release builds only")]
+fn million_user_day_golden_is_byte_stable() {
+    // The acceptance drive itself, pinned in-suite: after the hot-path
+    // rework (sharded registry snapshots, two-tier dedup hashing,
+    // `Arc<[f32]>` payloads) the million-user day must still replay to
+    // the byte.  The DES engine is payload-free, so any drift here means
+    // the fabric changes leaked into the virtual-time path.
+    let first = run_des(&canned("million-user-day", 11).unwrap()).unwrap();
+    let second = run_des(&canned("million-user-day", 11).unwrap()).unwrap();
+    assert!(first.submitted > 1_000_000, "the day really offers a million users");
+    assert!(first.conservation_holds(), "every virtual request reaches a verdict");
+    assert_eq!(
+        first.canonical_json(),
+        second.canonical_json(),
+        "million-user-day canonical report must be byte-identical run to run"
     );
 }
 
