@@ -36,7 +36,8 @@ use crate::artifact::Artifact;
 use crate::backend::{Backend, Policy};
 use crate::cluster::Cluster;
 use crate::fabric::sim::{synthetic_catalog_for, Gate};
-use crate::fabric::{Fabric, FabricConfig, Outcome, PodReport, Submission};
+use crate::fabric::{AutoscaleConfig, Fabric, FabricConfig, Outcome, PodReport, Submission};
+use crate::metrics::FeedbackStore;
 use crate::platform;
 use crate::util::rng::Rng;
 use crate::util::stats::{throughput_rps, Series};
@@ -69,6 +70,34 @@ pub struct ReplanEvent {
     /// testbed; surfaced so a constrained custom topology fails loud,
     /// not silent.
     pub stranded: Vec<String>,
+}
+
+/// What one live migration actually moved — returned by
+/// [`ContinuumOrchestrator::migrate_model`] and recorded in drill
+/// reports so the handover is auditable, not just asserted.
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// Model that moved.
+    pub model: String,
+    /// Site the model served from before the handover.
+    pub from: String,
+    /// Site serving it after.
+    pub to: String,
+    /// What initiated the move (`"forecast …"`, `"energy-budget …"`,
+    /// or an operator-supplied drill label).
+    pub trigger: String,
+    /// Response-cache entries exported from the source and landed warm
+    /// on the target (0 when the cache is off or cold).
+    pub cache_entries_moved: usize,
+    /// Target feedback keys primed with the source's measured EWMA
+    /// (insert-if-absent: real target observations are never clobbered).
+    pub feedback_keys_seeded: usize,
+    /// Whether the target spawned an extra replica for the takeover
+    /// (false when no node fit or the fabric runs without autoscale).
+    pub replica_spawned: bool,
+    /// Source replicas gracefully retired — their admitted work drained
+    /// to completion before the pods were reaped.
+    pub replicas_retired: usize,
 }
 
 /// One routed request: where it landed and the receiver for its outcome.
@@ -463,6 +492,212 @@ impl ContinuumOrchestrator {
         }
         self.drained.insert((site.to_string(), node.to_string()));
         self.replan(format!("node {node}@{site} drained"))
+    }
+
+    /// Live-migrate `model` from one active site to another with zero
+    /// dropped admitted work — the continuum's planned capacity move,
+    /// as opposed to [`fail_site`](Self::fail_site)'s reactive loss:
+    ///
+    /// 1. the target spawns replacement capacity *first* (the handover
+    ///    window never serves with less than it started with),
+    /// 2. warm state moves — the source's response-cache entries land
+    ///    on the target keyed by content hash (same artifact, so they
+    ///    stay valid; contrast a replan's rolling invalidation) and the
+    ///    source's measured EWMA primes the target's feedback,
+    /// 3. routing flips: the target becomes the model's primary,
+    /// 4. the source retires its replicas gracefully, drains every
+    ///    request it already admitted to completion, and is reaped.
+    ///
+    /// Callers holding receivers from the source keep getting their
+    /// outcomes; the conservation invariant `submitted = completed +
+    /// shed + failed` holds across the whole window.
+    pub fn migrate_model(
+        &mut self,
+        model: &str,
+        from: &str,
+        to: &str,
+        trigger: &str,
+    ) -> Result<MigrationReport> {
+        if from == to {
+            bail!("migration needs two distinct sites, got {from:?} twice");
+        }
+        if !self.sites.contains_key(from) {
+            bail!("migration source {from:?} is not an active site");
+        }
+        if !self.sites.contains_key(to) {
+            bail!("migration target {to:?} is not an active site");
+        }
+        if !self.sites[from].fabric.models().iter().any(|m| m == model) {
+            bail!("source site {from:?} hosts no model {model:?}");
+        }
+        if !self.sites[to].fabric.models().iter().any(|m| m == model) {
+            bail!("target site {to:?} hosts no model {model:?}");
+        }
+        if !self.plan.ranked(model).iter().any(|p| p.site == to) {
+            bail!("the plan does not rank {model:?} at {to:?}");
+        }
+
+        // 1. Replacement capacity up-front.
+        let replica_spawned = self.sites[to].fabric.add_replica(model, trigger);
+
+        // 2. Warm state: cache entries plus the best-evidenced source
+        //    EWMA, seeded onto every target pod of the model that has
+        //    no real observations of its own yet.
+        let exported = self.sites[from].fabric.export_cache(model);
+        let cache_entries_moved = self.sites[to].fabric.import_cache(model, &exported);
+        let src_fb = self.sites[from].fabric.feedback().all();
+        let carried = self.sites[from]
+            .fabric
+            .plans()
+            .iter()
+            .filter(|p| p.model == model)
+            .filter_map(|p| src_fb.get(&FeedbackStore::key(&p.aif, &p.node)))
+            .max_by_key(|f| f.observations)
+            .copied();
+        let feedback_keys_seeded = match carried {
+            None => 0,
+            Some(carried) => {
+                let dst = &self.sites[to];
+                let dst_fb = dst.fabric.feedback();
+                dst.fabric
+                    .plans()
+                    .iter()
+                    .filter(|p| p.model == model)
+                    .filter(|p| dst_fb.seed(&FeedbackStore::key(&p.aif, &p.node), carried))
+                    .count()
+            }
+        };
+
+        // 3. Flip routing: the target placement becomes the primary,
+        //    everything else keeps its relative rank.
+        let placements = self.plan.assignments.get_mut(model).expect("validated above");
+        let pos = placements.iter().position(|p| p.site == to).expect("validated above");
+        let target = placements.remove(pos);
+        placements.insert(0, target);
+        self.replans.push(ReplanEvent {
+            reason: format!("migration: {model} {from} -> {to} ({trigger})"),
+            moved: vec![(model.to_string(), from.to_string(), to.to_string())],
+            stranded: Vec::new(),
+        });
+
+        // 4. Graceful source evacuation: retire every replica (each
+        //    drains what it already admitted), wait the drain out, then
+        //    reap the retired pods so the handover ends with the
+        //    source's memory actually reclaimed.
+        let src = &self.sites[from];
+        let mut replicas_retired = 0usize;
+        while src.fabric.retire_replica(model, trigger) {
+            replicas_retired += 1;
+        }
+        src.fabric.drain();
+        src.fabric.reap_retired();
+
+        Ok(MigrationReport {
+            model: model.to_string(),
+            from: from.to_string(),
+            to: to.to_string(),
+            trigger: trigger.to_string(),
+            cache_entries_moved,
+            feedback_keys_seeded,
+            replica_spawned,
+            replicas_retired,
+        })
+    }
+
+    /// Active sites hosting `model`, best rank first — the candidate
+    /// chain both migration policies walk.
+    fn hosting_sites(&self, model: &str) -> Vec<String> {
+        self.plan
+            .ranked(model)
+            .iter()
+            .filter(|p| {
+                self.sites
+                    .get(&p.site)
+                    .map_or(false, |rt| rt.fabric.models().iter().any(|m| m == model))
+            })
+            .map(|p| p.site.clone())
+            .collect()
+    }
+
+    /// Mean electrical power a site's boards drew since the epoch,
+    /// watts (idle draw included — an idle board is not free).
+    fn site_watts(&self, rt: &SiteRuntime) -> f64 {
+        let wall_s = self.epoch.elapsed().as_secs_f64().max(1e-9);
+        energy_from_pods(&rt.fabric.pod_reports(wall_s), wall_s).joules / wall_s
+    }
+
+    /// Forecast-driven migration policy: every model whose primary
+    /// site's offered-arrival EWMA ([`Fabric::arrival_rate_rps`], the
+    /// predictive autoscaler's demand signal) reads at least `min_rps`
+    /// is live-migrated to its next-ranked hosting site — capacity
+    /// shifts ahead of the demand instead of shedding behind it.
+    /// Models without a forecast (predictive scaling off, or too few
+    /// arrivals) are left alone.  Returns one report per move.
+    pub fn forecast_migrations(&mut self, min_rps: f64) -> Vec<MigrationReport> {
+        let models: Vec<String> =
+            self.plan.models().iter().map(|m| m.to_string()).collect();
+        let mut decisions = Vec::new();
+        for model in models {
+            let hosting = self.hosting_sites(&model);
+            let [from, to, ..] = hosting.as_slice() else { continue };
+            let Some(rate) = self.sites[from.as_str()].fabric.arrival_rate_rps(&model)
+            else {
+                continue;
+            };
+            if rate < min_rps {
+                continue;
+            }
+            let trigger = format!("forecast {rate:.1} rps >= {min_rps:.1} rps");
+            decisions.push((model, from.clone(), to.clone(), trigger));
+        }
+        let mut reports = Vec::new();
+        for (model, from, to, trigger) in decisions {
+            if let Ok(r) = self.migrate_model(&model, &from, &to, &trigger) {
+                reports.push(r);
+            }
+        }
+        reports
+    }
+
+    /// Energy-budget migration policy: every model whose primary site
+    /// draws more than `budget_w` mean watts is live-migrated to the
+    /// cheapest strictly-cheaper hosting site — the continuum sheds
+    /// joules by *moving* work instead of dropping it.  Sites within
+    /// budget, and models with nowhere cheaper to go, are left alone.
+    pub fn energy_budget_migrations(&mut self, budget_w: f64) -> Vec<MigrationReport> {
+        let watts: BTreeMap<String, f64> = self
+            .sites
+            .iter()
+            .map(|(name, rt)| (name.clone(), self.site_watts(rt)))
+            .collect();
+        let models: Vec<String> =
+            self.plan.models().iter().map(|m| m.to_string()).collect();
+        let mut decisions = Vec::new();
+        for model in models {
+            let hosting = self.hosting_sites(&model);
+            let Some((from, rest)) = hosting.split_first() else { continue };
+            let from_w = watts[from];
+            if from_w <= budget_w {
+                continue;
+            }
+            let Some(to) = rest
+                .iter()
+                .min_by(|a, b| watts[a.as_str()].total_cmp(&watts[b.as_str()]))
+                .filter(|t| watts[t.as_str()] < from_w)
+            else {
+                continue;
+            };
+            let trigger =
+                format!("energy-budget {from_w:.1} W > {budget_w:.1} W at {from}");
+            decisions.push((model, from.clone(), to.clone(), trigger));
+        }
+        let mut reports = Vec::new();
+        for (model, from, to, trigger) in decisions {
+            if let Ok(r) = self.migrate_model(&model, &from, &to, &trigger) {
+                reports.push(r);
+            }
+        }
+        reports
     }
 
     /// Recompute the plan over surviving sites and record the diff.
@@ -894,6 +1129,238 @@ pub fn run_scenarios(seed: u64) -> ContinuumVerdicts {
     }
 }
 
+/// Verdicts of the deterministic live-migration scenarios — the
+/// handover acceptance criteria as machine-checkable booleans (`tf2aif
+/// bench` writes them into `BENCH_fabric.json` v8; CI gates on
+/// `migration_no_drop`).
+#[derive(Debug, Clone)]
+pub struct MigrationVerdicts {
+    /// Response-cache entries the drill migration landed warm on the
+    /// target.
+    pub cache_entries_moved: usize,
+    /// Target feedback keys primed from the source's measured EWMA.
+    pub feedback_keys_seeded: usize,
+    /// Source replicas gracefully retired by the drill migration.
+    pub replicas_retired: usize,
+    /// The handover drill held: requests admitted at the source before
+    /// the migration all completed, every post-migration request routed
+    /// to the target, the source ended with zero active replicas, and
+    /// the conservation invariant `submitted = completed + shed` held
+    /// with zero failures across the whole window.
+    pub migration_no_drop: bool,
+    /// A payload cached at the source was answered from the target's
+    /// cache after the move — the warm state actually carried.
+    pub warm_cache_carries: bool,
+    /// The predictive policy fired: the primary's arrival-rate EWMA
+    /// crossed the threshold and produced a forecast-triggered move.
+    pub forecast_triggers: bool,
+    /// The energy policy fired: a primary over the watt budget produced
+    /// a move to a strictly-cheaper hosting site.
+    pub energy_budget_triggers: bool,
+}
+
+/// Run the deterministic live-migration scenarios on the built-in
+/// 3-site testbed (see [`MigrationVerdicts`] for what each proves).
+/// Mirrors [`run_scenarios`]: seedable, no wall-clock-sensitive
+/// assertions, the same driver behind the integration suite and the
+/// `tf2aif bench` v8 verdicts and the CI migration drill.
+pub fn run_migration_scenarios(seed: u64) -> MigrationVerdicts {
+    // Cache + predictive autoscale on: migration moves warm state, and
+    // `interval_ms: 0` keeps the scaler thread out (explicit calls are
+    // the only driver — deterministic).
+    let cfg = FabricConfig {
+        queue_capacity: 32,
+        max_batch: 4,
+        workers: 1,
+        replicas_per_model: 1,
+        time_scale: 0.0,
+        seed,
+        dedup: false,
+        cache_capacity: 64,
+        cache_ttl_ms: 60_000,
+        autoscale: Some(AutoscaleConfig {
+            interval_ms: 0,
+            predictive: true,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let deploy = || {
+        ContinuumOrchestrator::deploy_sim(
+            continuum_testbed(),
+            synthetic_catalog_for(&["mobilenetv1"]),
+            PlanPolicy::MinLatency,
+            "edge",
+            &cfg,
+            &BTreeMap::new(),
+        )
+        .expect("testbed deploys")
+    };
+
+    // ── 1. Handover drill: warm the source, migrate with admitted work
+    //      still in flight, verify zero drops + warm cache on target. ──
+    let mut orch = deploy();
+    let from = orch.plan().primary("mobilenetv1").expect("planned").site.clone();
+    let to = orch
+        .hosting_sites("mobilenetv1")
+        .into_iter()
+        .find(|s| *s != from)
+        .expect("a second hosting site on the testbed");
+    let warm_payload: Arc<[f32]> = vec![0.5; 16].into();
+    let mut submitted = 0u64;
+    let (mut completed, mut failed, mut shed) = (0u64, 0u64, 0u64);
+    fn recv_all(
+        pending: Vec<RoutedRequest>,
+        completed: &mut u64,
+        failed: &mut u64,
+        shed: &mut u64,
+    ) {
+        for r in pending {
+            match r.rx.recv().ok() {
+                Some(Outcome::Completed(_)) => *completed += 1,
+                Some(Outcome::Shed) => *shed += 1,
+                Some(Outcome::Failed(_)) | None => *failed += 1,
+            }
+        }
+    }
+    // Warm phase: distinct payloads plus the warm payload twice, so the
+    // source finishes it with observations in its feedback store and
+    // the warm payload memoized in its response cache.
+    let mut pending = Vec::new();
+    for i in 0..12u64 {
+        submitted += 1;
+        match orch.submit("mobilenetv1", vec![i as f32; 16]).expect("known model") {
+            ContinuumSubmission::Routed(r) => pending.push(r),
+            ContinuumSubmission::Shed => shed += 1,
+        }
+    }
+    for _ in 0..2 {
+        submitted += 1;
+        match orch
+            .submit("mobilenetv1", Arc::clone(&warm_payload))
+            .expect("known model")
+        {
+            ContinuumSubmission::Routed(r) => pending.push(r),
+            ContinuumSubmission::Shed => shed += 1,
+        }
+    }
+    recv_all(pending, &mut completed, &mut failed, &mut shed);
+    // In-flight phase: admit work at the source and migrate BEFORE
+    // receiving — the drain inside the migration must complete it.
+    let mut inflight = Vec::new();
+    for i in 0..8u64 {
+        submitted += 1;
+        match orch
+            .submit("mobilenetv1", vec![100.0 + i as f32; 16])
+            .expect("known model")
+        {
+            ContinuumSubmission::Routed(r) => inflight.push(r),
+            ContinuumSubmission::Shed => shed += 1,
+        }
+    }
+    let rep = orch
+        .migrate_model("mobilenetv1", &from, &to, "drill")
+        .expect("drill migration succeeds");
+    recv_all(inflight, &mut completed, &mut failed, &mut shed);
+    // Post phase: the warm payload again (must hit the target's
+    // imported cache) plus fresh traffic — all of it on the target.
+    let mut post = Vec::new();
+    let mut post_routed = 0u64;
+    let mut post_on_target = 0u64;
+    for _ in 0..2 {
+        submitted += 1;
+        match orch
+            .submit("mobilenetv1", Arc::clone(&warm_payload))
+            .expect("known model")
+        {
+            ContinuumSubmission::Routed(r) => {
+                post_routed += 1;
+                if r.site == to {
+                    post_on_target += 1;
+                }
+                post.push(r);
+            }
+            ContinuumSubmission::Shed => shed += 1,
+        }
+    }
+    for i in 0..4u64 {
+        submitted += 1;
+        match orch
+            .submit("mobilenetv1", vec![200.0 + i as f32; 16])
+            .expect("known model")
+        {
+            ContinuumSubmission::Routed(r) => {
+                post_routed += 1;
+                if r.site == to {
+                    post_on_target += 1;
+                }
+                post.push(r);
+            }
+            ContinuumSubmission::Shed => shed += 1,
+        }
+    }
+    recv_all(post, &mut completed, &mut failed, &mut shed);
+    let target_hits =
+        orch.sites[&to].fabric.cache_stats().map_or(0, |s| s.hits);
+    let source_active = orch.sites[&from].fabric.active_replicas("mobilenetv1");
+    let migration_no_drop = failed == 0
+        && completed + shed == submitted
+        && rep.replicas_retired >= 1
+        && source_active == 0
+        && post_routed > 0
+        && post_on_target == post_routed;
+    let warm_cache_carries = rep.cache_entries_moved >= 1 && target_hits >= 1;
+    orch.shutdown();
+
+    // ── 2. Forecast trigger: prime the primary's arrival-rate EWMA,
+    //      then ask the predictive policy to act on it. ────────────────
+    let mut orch = deploy();
+    let mut pending = Vec::new();
+    for i in 0..16u64 {
+        if let ContinuumSubmission::Routed(r) = orch
+            .submit("mobilenetv1", vec![i as f32 + 0.25; 16])
+            .expect("known model")
+        {
+            pending.push(r);
+        }
+    }
+    let reports = orch.forecast_migrations(1.0);
+    let forecast_triggers = reports.iter().any(|r| r.trigger.starts_with("forecast"));
+    let (mut c2, mut f2, mut s2) = (0u64, 0u64, 0u64);
+    recv_all(pending, &mut c2, &mut f2, &mut s2);
+    let forecast_triggers = forecast_triggers && f2 == 0;
+    orch.shutdown();
+
+    // ── 3. Energy budget: with a sub-idle watt budget the primary is
+    //      over budget by construction and a cheaper tier exists. ──────
+    let mut orch = deploy();
+    let mut pending = Vec::new();
+    for i in 0..6u64 {
+        if let ContinuumSubmission::Routed(r) = orch
+            .submit("mobilenetv1", vec![i as f32 + 0.75; 16])
+            .expect("known model")
+        {
+            pending.push(r);
+        }
+    }
+    let (mut c3, mut f3, mut s3) = (0u64, 0u64, 0u64);
+    recv_all(pending, &mut c3, &mut f3, &mut s3);
+    let reports = orch.energy_budget_migrations(0.5);
+    let energy_budget_triggers =
+        reports.iter().any(|r| r.trigger.starts_with("energy-budget")) && f3 == 0;
+    orch.shutdown();
+
+    MigrationVerdicts {
+        cache_entries_moved: rep.cache_entries_moved,
+        feedback_keys_seeded: rep.feedback_keys_seeded,
+        replicas_retired: rep.replicas_retired,
+        migration_no_drop,
+        warm_cache_carries,
+        forecast_triggers,
+        energy_budget_triggers,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -922,5 +1389,100 @@ mod tests {
         assert_eq!(e.joules, 0.0);
         assert_eq!(e.j_per_request, 0.0);
         assert_eq!(e.mean_utilization, 0.0);
+    }
+
+    #[test]
+    fn migration_scenarios_all_pass() {
+        let v = run_migration_scenarios(0x316);
+        assert!(v.migration_no_drop, "{v:?}");
+        assert!(v.warm_cache_carries, "{v:?}");
+        assert!(v.forecast_triggers, "{v:?}");
+        assert!(v.energy_budget_triggers, "{v:?}");
+        assert!(v.cache_entries_moved >= 1, "{v:?}");
+        assert!(v.feedback_keys_seeded >= 1, "the source EWMA must prime the target: {v:?}");
+        assert!(v.replicas_retired >= 1, "{v:?}");
+    }
+
+    #[test]
+    fn migration_rejects_degenerate_moves() {
+        let cfg = FabricConfig {
+            queue_capacity: 8,
+            workers: 1,
+            replicas_per_model: 1,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let mut orch = ContinuumOrchestrator::deploy_sim(
+            continuum_testbed(),
+            synthetic_catalog_for(&["mobilenetv1"]),
+            PlanPolicy::MinLatency,
+            "edge",
+            &cfg,
+            &BTreeMap::new(),
+        )
+        .expect("testbed deploys");
+        let from = orch.plan().primary("mobilenetv1").unwrap().site.clone();
+        assert!(
+            orch.migrate_model("mobilenetv1", &from, &from, "t").is_err(),
+            "same-site migration must be rejected"
+        );
+        assert!(
+            orch.migrate_model("mobilenetv1", &from, "atlantis", "t").is_err(),
+            "unknown target site must be rejected"
+        );
+        assert!(
+            orch.migrate_model("nosuchmodel", &from, "cloud", "t").is_err(),
+            "unknown model must be rejected"
+        );
+        orch.shutdown();
+    }
+
+    #[test]
+    fn migration_without_autoscale_still_flips_routing_and_moves_state() {
+        // No autoscale: the fabric cannot spawn/retire replicas, but the
+        // warm-state transfer and the routing flip still happen — the
+        // report records exactly what could and could not move.
+        let cfg = FabricConfig {
+            queue_capacity: 16,
+            workers: 1,
+            replicas_per_model: 1,
+            time_scale: 0.0,
+            cache_capacity: 16,
+            cache_ttl_ms: 60_000,
+            ..Default::default()
+        };
+        let mut orch = ContinuumOrchestrator::deploy_sim(
+            continuum_testbed(),
+            synthetic_catalog_for(&["mobilenetv1"]),
+            PlanPolicy::MinLatency,
+            "edge",
+            &cfg,
+            &BTreeMap::new(),
+        )
+        .expect("testbed deploys");
+        let from = orch.plan().primary("mobilenetv1").unwrap().site.clone();
+        let to = orch
+            .hosting_sites("mobilenetv1")
+            .into_iter()
+            .find(|s| *s != from)
+            .expect("a second hosting site");
+        // One completed request so the source cache holds an entry.
+        if let ContinuumSubmission::Routed(r) =
+            orch.submit("mobilenetv1", vec![1.0; 16]).unwrap()
+        {
+            assert!(matches!(r.rx.recv().unwrap(), Outcome::Completed(_)));
+        }
+        let rep = orch.migrate_model("mobilenetv1", &from, &to, "drill").unwrap();
+        assert!(!rep.replica_spawned, "no autoscale, no spawn");
+        assert_eq!(rep.replicas_retired, 0, "no autoscale, no retirement");
+        assert!(rep.cache_entries_moved >= 1, "warm state still moves: {rep:?}");
+        assert_eq!(
+            orch.plan().primary("mobilenetv1").unwrap().site,
+            to,
+            "the routing flip is unconditional"
+        );
+        assert_eq!(orch.replans().len(), 1);
+        assert!(orch.replans()[0].reason.starts_with("migration:"));
+        orch.shutdown();
     }
 }

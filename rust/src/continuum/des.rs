@@ -18,7 +18,12 @@
 //!   failure reroute under the worst possible timing;
 //! - [`scenario_million_user_day`] — the acceptance drive: a 24 h
 //!   diurnal trace of ≥ 1,000,000 virtual client requests across all
-//!   three sites, bit-reproducible and done in seconds of wall time.
+//!   three sites, bit-reproducible and done in seconds of wall time;
+//! - [`scenario_mobile_day`] — client mobility: per-site demand mixes
+//!   with phase-shifted diurnal curves, and roaming populations whose
+//!   mid-session handovers race injected site flaps (the "client whose
+//!   nearest site changes mid-session" gap the live-migration work
+//!   closes).
 //!
 //! Each continuum tier serves the platform variant its hardware would
 //! host ([`tier_variant`]): server GPU in the cloud, AGX at the edge,
@@ -29,9 +34,9 @@ use anyhow::{bail, Result};
 
 use crate::continuum::topology::{continuum_testbed, SiteTier, Topology};
 use crate::fabric::des::{DesAutoscale, DesConfig, DesModel, DesScenario, DesSite, Drill};
-use crate::fabric::faults::{site_loss_storm_plan, FaultPlan, ResilienceConfig};
+use crate::fabric::faults::{site_loss_storm_plan, Fault, FaultPlan, ResilienceConfig};
 use crate::fabric::sim::synthetic_catalog_for;
-use crate::workload::RateCurve;
+use crate::workload::{Handover, RateCurve};
 
 /// Platform variant a site of the given tier serves in the
 /// virtual-time model: Cloud → `GPU`, Edge → `AGX`, FarEdge → `ARM`.
@@ -76,6 +81,7 @@ pub fn scenario_from_topology(
             variant: tier_variant(s.tier).to_string(),
             pods: 1,
             arrivals: None,
+            mix: None,
         })
         .collect();
     let rtt_ms: Vec<Vec<f64>> = topology
@@ -97,6 +103,7 @@ pub fn scenario_from_topology(
         rtt_ms,
         trace: None,
         drills: Vec::new(),
+        handovers: Vec::new(),
         faults: FaultPlan::default(),
         cfg,
     })
@@ -241,6 +248,63 @@ pub fn scenario_million_user_day(seed: u64) -> Result<DesScenario> {
     Ok(sc)
 }
 
+/// Client mobility over one day: each tier carries its own demand mix
+/// (cloud leans resnet50, far-edge leans lenet) on a phase-shifted
+/// diurnal curve, and the populations roam — far-edge clients re-attach
+/// to the edge at 06:00, the edge population (now carrying the roamed
+/// far-edge clients) moves to the cloud at noon, and everyone drifts
+/// back toward the far edge at 18:00.  Each handover races an injected
+/// site flap ([`Fault::SiteFlap`]) at the site being roamed to or from,
+/// with the full resilience stack answering — anycast routing, retries
+/// and breakers absorb the race, and request conservation holds across
+/// every handover window.  Bit-reproducible under one seed: the CI
+/// `migration-drill` job byte-compares two replays.
+pub fn scenario_mobile_day(seed: u64) -> Result<DesScenario> {
+    let mut cfg = base_cfg(seed);
+    cfg.resilience = ResilienceConfig::storm_defaults();
+    let mut sc = scenario_from_topology(
+        "mobile-day",
+        &continuum_testbed(),
+        &["lenet", "resnet50"],
+        cfg,
+    )?;
+    sc.horizon_s = 86_400.0;
+    // Phase-shifted diurnal curves: each tier peaks six virtual hours
+    // after the previous one, like a population commuting across tiers.
+    for (i, site) in sc.sites.iter_mut().enumerate() {
+        site.arrivals = Some(RateCurve::Diurnal {
+            base_rps: 0.05,
+            peak_rps: 0.2,
+            period_s: 86_400.0,
+            phase_s: i as f64 * 21_600.0,
+        });
+    }
+    // Per-origin demand mixes (model-list order: lenet, resnet50).
+    sc.sites[0].mix = Some(vec![1, 3]); // cloud leans on the heavy model
+    sc.sites[1].mix = Some(vec![1, 1]); // edge splits evenly
+    sc.sites[2].mix = Some(vec![3, 1]); // far edge leans lightweight
+    sc.handovers = vec![
+        Handover { at_s: 21_600.0, from: "far-edge".into(), to: "edge".into() },
+        Handover { at_s: 43_200.0, from: "edge".into(), to: "cloud".into() },
+        Handover { at_s: 64_800.0, from: "cloud".into(), to: "far-edge".into() },
+    ];
+    // Each flap brackets a handover instant at an involved site, so
+    // roaming demand lands on (or leaves) a site mid-outage.
+    sc.faults = FaultPlan {
+        name: "mobile-day-flaps".into(),
+        faults: vec![
+            Fault::SiteFlap { at_s: 21_300.0, recover_s: 21_900.0, site: "edge".into() },
+            Fault::SiteFlap { at_s: 43_000.0, recover_s: 43_500.0, site: "cloud".into() },
+            Fault::SiteFlap {
+                at_s: 64_500.0,
+                recover_s: 65_100.0,
+                site: "far-edge".into(),
+            },
+        ],
+    };
+    Ok(sc)
+}
+
 /// Look a canned scenario up by name — the shared registry behind the
 /// CLI (`tf2aif continuum --virtual-time --scenario <name>`), the
 /// golden suite and the bench.
@@ -250,16 +314,17 @@ pub fn canned(name: &str, seed: u64) -> Result<DesScenario> {
         "flash-crowd" => scenario_flash_crowd(seed),
         "site-loss-storm" => scenario_site_loss_storm(seed),
         "million-user-day" => scenario_million_user_day(seed),
+        "mobile-day" => scenario_mobile_day(seed),
         other => bail!(
             "unknown canned scenario {other:?} (expected diurnal-day, flash-crowd, \
-             site-loss-storm or million-user-day)"
+             site-loss-storm, million-user-day or mobile-day)"
         ),
     }
 }
 
 /// Names of every canned scenario, in registry order.
 pub const CANNED: &[&str] =
-    &["diurnal-day", "flash-crowd", "site-loss-storm", "million-user-day"];
+    &["diurnal-day", "flash-crowd", "site-loss-storm", "million-user-day", "mobile-day"];
 
 #[cfg(test)]
 mod tests {
@@ -325,6 +390,29 @@ mod tests {
         let r = run_des(&sc).unwrap();
         assert!(r.conservation_holds());
         assert!(r.spilled > 0, "the spike must overflow the far edge");
+    }
+
+    #[test]
+    fn mobile_day_roams_replays_and_conserves() {
+        let a = run_des(&scenario_mobile_day(7).unwrap()).unwrap();
+        let b = run_des(&scenario_mobile_day(7).unwrap()).unwrap();
+        assert_eq!(a.canonical_json(), b.canonical_json(), "mobility replays to the byte");
+        assert!(a.conservation_holds(), "zero lost admitted work while clients roam");
+        assert_eq!(a.handovers, 3, "every scheduled handover fires");
+        assert_eq!(a.faults_injected, 3, "every flap races its handover");
+        // Roaming shows up in the per-site ledgers: every site both
+        // sheds and receives a population over the day, and per-origin
+        // conservation held through it (checked above) — the handover
+        // window loses nothing.
+        for (i, site) in a.sites.iter().enumerate() {
+            assert_eq!(site.handovers_out, 1, "site {i} sheds its population once");
+            assert_eq!(site.handovers_in, 1, "site {i} receives a population once");
+            assert!(site.submitted > 0, "site {i} originates demand before roaming");
+        }
+        assert!(a.sites.iter().all(|s| s.up), "flapped sites recover by day's end");
+        // A different seed must not replay to the same bytes.
+        let c = run_des(&scenario_mobile_day(8).unwrap()).unwrap();
+        assert_ne!(a.canonical_json(), c.canonical_json());
     }
 
     #[test]

@@ -32,7 +32,13 @@
 //! - [`deploy`] — the [`ContinuumOrchestrator`]: one [`crate::fabric::Fabric`]
 //!   per planned site, nearest-feasible routing with explicit spillover,
 //!   graceful whole-site loss with deterministic replanning (no admitted
-//!   work dropped), and per-site joules/request accounting.
+//!   work dropped), per-site joules/request accounting, and **live
+//!   migration** ([`ContinuumOrchestrator::migrate_model`]): a planned
+//!   zero-drop handover that spawns target capacity first, carries the
+//!   source's warm response cache and measured EWMA feedback, flips
+//!   routing, then gracefully drains and reaps the source — driven
+//!   manually, by arrival-rate forecasts, or by a per-site energy
+//!   budget.
 //! - [`des`] — the virtual-time adapter: canned multi-site scenarios
 //!   (diurnal day, flash crowd, site-loss storm, the million-user day)
 //!   over [`crate::fabric::des`], replayed on a virtual clock in
@@ -49,9 +55,9 @@ pub mod planner;
 pub mod topology;
 
 pub use deploy::{
-    energy_from_pods, run_scenarios, ContinuumOrchestrator, ContinuumRunReport,
-    ContinuumSubmission, ContinuumVerdicts, ReplanEvent, RoutedRequest, SiteEnergy,
-    SiteRunReport,
+    energy_from_pods, run_migration_scenarios, run_scenarios, ContinuumOrchestrator,
+    ContinuumRunReport, ContinuumSubmission, ContinuumVerdicts, MigrationReport,
+    MigrationVerdicts, ReplanEvent, RoutedRequest, SiteEnergy, SiteRunReport,
 };
 pub use planner::{DeploymentPlan, PlanPolicy, Planner, SitePlacement};
 pub use topology::{continuum_testbed, LinkSpec, SiteSpec, SiteTier, Topology};

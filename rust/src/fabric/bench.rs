@@ -45,6 +45,13 @@
 //!    (full-payload sha256 keying + a `Vec<f32>` payload copy) so the
 //!    speedup is measured, and CI gates a requests/sec/core floor plus
 //!    the `dedup_two_tier_no_regression` verdict.
+//! 8. **Migration** (schema v8): the deterministic live-migration
+//!    scenarios ([`crate::continuum::run_migration_scenarios`]) — a
+//!    zero-drop handover drill with warm cache + EWMA carry, the
+//!    forecast trigger, the energy-budget trigger — plus the
+//!    `mobile-day` DES scenario (client mobility racing site flaps)
+//!    replayed twice and byte-compared.  CI gates on
+//!    `migration_no_drop` and `handover_no_drop`.
 //!
 //! Dedup and the response cache are disabled for every sweep
 //! measurement (the payload pool recycles tensors; collapsing them
@@ -67,7 +74,7 @@ use crate::backend::{Backend, Policy};
 use crate::cluster::{paper_testbed, Cluster};
 use crate::continuum::{
     continuum_testbed, ContinuumOrchestrator, ContinuumRunReport, ContinuumVerdicts,
-    PlanPolicy,
+    MigrationVerdicts, PlanPolicy,
 };
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::Rng;
@@ -301,15 +308,22 @@ pub fn fused_beats_per_item_at_batch_ge4(points: &[BenchPoint]) -> bool {
 /// convergence dispatches.  A controller stuck at small batches still
 /// fails: its p99 under overload is queue-bound and blows through both
 /// bounds, and its throughput misses the 85% bar.
+///
+/// Two defensive rules: rate extrema are found with [`f64::total_cmp`]
+/// (a NaN `rate_rps` — e.g. a zero-duration arm — must not panic the
+/// verdict), and a sweep whose fixed arms completed *nothing* at the
+/// peak has no baseline to beat, so both comparative gates are
+/// explicitly `false` rather than vacuously true against a 0-rps /
+/// ∞-p99 fold.
 pub fn control_verdict(sweep: &ControlSweep) -> ControlVerdict {
     let peak = sweep
         .points
         .iter()
-        .max_by(|a, b| a.rate_rps.partial_cmp(&b.rate_rps).unwrap());
+        .max_by(|a, b| a.rate_rps.total_cmp(&b.rate_rps));
     let low = sweep
         .points
         .iter()
-        .min_by(|a, b| a.rate_rps.partial_cmp(&b.rate_rps).unwrap());
+        .min_by(|a, b| a.rate_rps.total_cmp(&b.rate_rps));
     let (Some(peak), Some(low)) = (peak, low) else {
         return ControlVerdict {
             throughput_match_at_peak: false,
@@ -317,9 +331,11 @@ pub fn control_verdict(sweep: &ControlSweep) -> ControlVerdict {
             p99_within_slo_at_low_rate: false,
         };
     };
+    let baseline_exists = peak.fixed.iter().any(|f| f.side.completed > 0);
     let best_fixed_thr = peak
         .fixed
         .iter()
+        .filter(|f| f.side.completed > 0)
         .map(|f| f.side.throughput_rps)
         .fold(0.0f64, f64::max);
     let best_fixed_p99 = peak
@@ -329,9 +345,11 @@ pub fn control_verdict(sweep: &ControlSweep) -> ControlVerdict {
         .map(|f| f.side.p99_ms)
         .fold(f64::INFINITY, f64::min);
     ControlVerdict {
-        throughput_match_at_peak: peak.adaptive.completed > 0
+        throughput_match_at_peak: baseline_exists
+            && peak.adaptive.completed > 0
             && peak.adaptive.throughput_rps >= 0.85 * best_fixed_thr,
-        p99_le_best_fixed_at_peak: best_fixed_p99.is_finite()
+        p99_le_best_fixed_at_peak: baseline_exists
+            && best_fixed_p99.is_finite()
             && peak.adaptive.completed > 0
             && peak.adaptive.p99_ms <= f64::max(1.5 * best_fixed_p99, sweep.slo_p99_ms),
         p99_within_slo_at_low_rate: low.adaptive.completed > 0
@@ -784,6 +802,52 @@ pub fn run_resilience_bench(cfg: &BenchConfig) -> Result<ResilienceBench> {
     })
 }
 
+/// The live-migration measurement (schema v8 `migration` section): the
+/// deterministic continuum handover drill + trigger scenarios
+/// ([`crate::continuum::run_migration_scenarios`]), plus the
+/// `mobile-day` DES scenario — per-origin demand mixes and mid-session
+/// client handovers racing site flaps — replayed twice under `cfg.seed`
+/// and byte-compared.
+#[derive(Debug, Clone)]
+pub struct MigrationBench {
+    /// The threaded handover verdicts (`migration_no_drop` is a CI
+    /// gate).
+    pub verdicts: MigrationVerdicts,
+    /// Virtual requests the mobile-day replay offered.
+    pub submitted: u64,
+    /// Mid-session client handover events the replay fired.
+    pub handovers: u64,
+    /// Faults injected while the handovers raced site flaps.
+    pub faults_injected: u64,
+    /// Request conservation held on both mobile-day replays, with the
+    /// handovers and the fault plan both actually firing — no admitted
+    /// work lost across the handover + flap windows.  CI gates on this.
+    pub handover_no_drop: bool,
+    /// Same seed twice → byte-identical canonical mobile-day reports.
+    pub migration_bit_reproducible: bool,
+}
+
+/// Run the migration measurement: the deterministic handover scenarios
+/// under `cfg.seed`, then the `mobile-day` scenario twice
+/// (byte-comparing the canonical reports).
+pub fn run_migration_bench(cfg: &BenchConfig) -> Result<MigrationBench> {
+    let verdicts = crate::continuum::run_migration_scenarios(cfg.seed);
+    let sc = crate::continuum::des::canned("mobile-day", cfg.seed)?;
+    let first = des::run_des(&sc)?;
+    let second = des::run_des(&sc)?;
+    Ok(MigrationBench {
+        submitted: first.submitted,
+        handovers: first.handovers,
+        faults_injected: first.faults_injected,
+        handover_no_drop: first.conservation_holds()
+            && second.conservation_holds()
+            && first.handovers > 0
+            && first.faults_injected > 0,
+        migration_bit_reproducible: first.canonical_json() == second.canonical_json(),
+        verdicts,
+    })
+}
+
 // ─────────────────── hotpath harness (schema v7) ────────────────────
 
 /// Requests/sec/core the CI `hotpath-floor` job gates on (measured on
@@ -1136,12 +1200,12 @@ fn side_json(b: &BenchSide) -> Json {
     ])
 }
 
-/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v7,
+/// Write the sweeps as machine-readable `BENCH_fabric.json` (schema v8,
 /// documented in `docs/CLI.md`) — the perf trajectory future PRs
 /// measure against.  `control`, `autoscale`, `tenancy`, `continuum`,
-/// `des`, `resilience` and `hotpath` are optional sections; the PR 2
-/// fused sweep is always present (`--hotpath` runs write an empty
-/// `points` array).
+/// `des`, `resilience`, `hotpath` and `migration` are optional
+/// sections; the PR 2 fused sweep is always present (`--hotpath` runs
+/// write an empty `points` array).
 #[allow(clippy::too_many_arguments)]
 pub fn write_json(
     path: impl AsRef<Path>,
@@ -1154,6 +1218,7 @@ pub fn write_json(
     des_bench: Option<&DesBench>,
     resilience: Option<&ResilienceBench>,
     hotpath: Option<&HotpathBench>,
+    migration: Option<&MigrationBench>,
 ) -> Result<()> {
     let pts: Vec<Json> = points
         .iter()
@@ -1169,7 +1234,7 @@ pub fn write_json(
         .collect();
     let mut top = vec![
         ("bench", s("tf2aif fabric sweeps")),
-        ("version", n(7.0)),
+        ("version", n(8.0)),
         (
             "config",
             obj(vec![
@@ -1441,6 +1506,30 @@ pub fn write_json(
             ]),
         ));
     }
+    if let Some(m) = migration {
+        let v = &m.verdicts;
+        top.push((
+            "migration",
+            obj(vec![
+                ("scenario", s("mobile-day")),
+                ("submitted", n(m.submitted as f64)),
+                ("handovers", n(m.handovers as f64)),
+                ("faults_injected", n(m.faults_injected as f64)),
+                ("cache_entries_moved", n(v.cache_entries_moved as f64)),
+                ("feedback_keys_seeded", n(v.feedback_keys_seeded as f64)),
+                ("replicas_retired", n(v.replicas_retired as f64)),
+                ("migration_no_drop", Json::Bool(v.migration_no_drop)),
+                ("warm_cache_carries", Json::Bool(v.warm_cache_carries)),
+                ("forecast_triggers", Json::Bool(v.forecast_triggers)),
+                ("energy_budget_triggers", Json::Bool(v.energy_budget_triggers)),
+                ("handover_no_drop", Json::Bool(m.handover_no_drop)),
+                (
+                    "migration_bit_reproducible",
+                    Json::Bool(m.migration_bit_reproducible),
+                ),
+            ]),
+        ));
+    }
     let doc = obj(top);
     if let Some(parent) = path.as_ref().parent() {
         if !parent.as_os_str().is_empty() {
@@ -1534,6 +1623,57 @@ mod tests {
         let v = control_verdict(&bad);
         assert!(!v.throughput_match_at_peak);
         assert!(!v.p99_le_best_fixed_at_peak);
+    }
+
+    #[test]
+    fn control_verdict_survives_nan_rate() {
+        // A zero-duration arm can produce a NaN rate; the verdict must
+        // classify the sweep, not panic inside max_by/min_by.
+        let sweep = ControlSweep {
+            slo_p99_ms: 50.0,
+            max_batch: 16,
+            points: vec![
+                ControlPoint {
+                    rate_rps: 500.0,
+                    fixed: vec![FixedPoint { batch: 1, side: side(400.0, 3.0, 0) }],
+                    adaptive: side(400.0, 3.5, 0),
+                },
+                ControlPoint {
+                    rate_rps: f64::NAN,
+                    fixed: vec![FixedPoint { batch: 1, side: side(0.0, 0.0, 100) }],
+                    adaptive: side(0.0, 0.0, 100),
+                },
+            ],
+        };
+        let v = control_verdict(&sweep);
+        // Under total_cmp the NaN point sorts as the peak; its fixed arm
+        // completed nothing, so both comparative gates fail closed.
+        assert!(!v.throughput_match_at_peak);
+        assert!(!v.p99_le_best_fixed_at_peak);
+        assert!(v.p99_within_slo_at_low_rate, "the real low-rate point still judges");
+    }
+
+    #[test]
+    fn control_verdict_fails_closed_on_empty_fixed_baseline() {
+        // Every fixed arm shed everything: there is no baseline to
+        // match, so the comparative gates must be false — not vacuously
+        // true against a 0-rps throughput fold and an ∞ p99 fold.
+        let sweep = ControlSweep {
+            slo_p99_ms: 50.0,
+            max_batch: 16,
+            points: vec![ControlPoint {
+                rate_rps: 16000.0,
+                fixed: vec![
+                    FixedPoint { batch: 1, side: side(0.0, 0.0, 100) },
+                    FixedPoint { batch: 16, side: side(0.0, 0.0, 100) },
+                ],
+                adaptive: side(8800.0, 9.0, 2),
+            }],
+        };
+        let v = control_verdict(&sweep);
+        assert!(!v.throughput_match_at_peak, "no completed fixed arm = no baseline");
+        assert!(!v.p99_le_best_fixed_at_peak, "∞ p99 fold must not pass the gate");
+        assert!(v.p99_within_slo_at_low_rate, "the SLO gate needs no fixed baseline");
     }
 
     #[test]
@@ -1724,6 +1864,22 @@ mod tests {
                 dedup_two_tier_no_regression: true,
                 conservation: true,
             }),
+            Some(&MigrationBench {
+                verdicts: MigrationVerdicts {
+                    cache_entries_moved: 14,
+                    feedback_keys_seeded: 2,
+                    replicas_retired: 1,
+                    migration_no_drop: true,
+                    warm_cache_carries: true,
+                    forecast_triggers: true,
+                    energy_budget_triggers: true,
+                },
+                submitted: 40_000,
+                handovers: 3,
+                faults_injected: 3,
+                handover_no_drop: true,
+                migration_bit_reproducible: true,
+            }),
         )
         .unwrap();
         let src = std::fs::read_to_string(&path).unwrap();
@@ -1751,7 +1907,7 @@ mod tests {
             auto.get("autoscaler_eliminates_sheds").unwrap(),
             Json::Bool(true)
         ));
-        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 7);
+        assert_eq!(doc.get("version").unwrap().usize().unwrap(), 8);
         let hp = doc.get("hotpath").unwrap();
         assert_eq!(hp.get("baseline").unwrap().str().unwrap(), "emulated-v6-costs");
         assert!(matches!(hp.get("speedup_ge_2x").unwrap(), Json::Bool(true)));
@@ -1799,6 +1955,17 @@ mod tests {
         let rows = ten.get("tenants").unwrap().arr().unwrap();
         assert_eq!(rows[0].get("id").unwrap().str().unwrap(), "hot");
         assert_eq!(rows[0].get("shed_quota").unwrap().usize().unwrap(), 10);
+        let mig = doc.get("migration").unwrap();
+        assert_eq!(mig.get("scenario").unwrap().str().unwrap(), "mobile-day");
+        assert!(matches!(mig.get("migration_no_drop").unwrap(), Json::Bool(true)));
+        assert!(matches!(mig.get("warm_cache_carries").unwrap(), Json::Bool(true)));
+        assert!(matches!(mig.get("handover_no_drop").unwrap(), Json::Bool(true)));
+        assert!(matches!(
+            mig.get("migration_bit_reproducible").unwrap(),
+            Json::Bool(true)
+        ));
+        assert_eq!(mig.get("handovers").unwrap().usize().unwrap(), 3);
+        assert_eq!(mig.get("cache_entries_moved").unwrap().usize().unwrap(), 14);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -1823,6 +1990,7 @@ mod tests {
             None,
             None,
             None,
+            None,
         )
         .unwrap();
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
@@ -1833,6 +2001,7 @@ mod tests {
         assert!(doc.opt("des").is_none());
         assert!(doc.opt("resilience").is_none());
         assert!(doc.opt("hotpath").is_none());
+        assert!(doc.opt("migration").is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -63,10 +63,29 @@ struct Entry {
     sha: [u8; 32],
     stored: Instant,
     gen: u64,
+    /// The model this response answers — needed to scope a warm
+    /// migration export ([`ResponseCache::export_model`]) to one model.
+    /// Cold-path memory only: lookups still key on `(pre, sha)`.
+    model: String,
     /// The model generation this response was computed under; a lookup
     /// after [`ResponseCache::invalidate`] bumped the model's
     /// generation treats the entry as stale.
     model_gen: u64,
+}
+
+/// One live cache entry exported for a warm migration handover
+/// ([`ResponseCache::export_model`] → [`ResponseCache::import_model`]).
+#[derive(Clone)]
+pub struct CacheExport {
+    /// Tier-1 pre-hash of `(model, payload)`.
+    pub pre: u64,
+    /// Tier-2 confirm digest: `sha256(model, payload)`.
+    pub sha: [u8; 32],
+    /// The cached response.
+    pub resp: Response,
+    /// Time the entry had already spent in the source cache; preserved
+    /// on import so the remaining TTL shrinks instead of resetting.
+    pub age: Duration,
 }
 
 struct CacheInner {
@@ -271,7 +290,14 @@ impl ResponseCache {
         }
         let gen = g.next_gen;
         g.next_gen += 1;
-        let entry = Entry { resp, sha, stored: now, gen, model_gen: admitted_gen };
+        let entry = Entry {
+            resp,
+            sha,
+            stored: now,
+            gen,
+            model: model.to_string(),
+            model_gen: admitted_gen,
+        };
         let replaced_gen = {
             let bucket = g.map.entry(pre).or_default();
             match bucket.iter().position(|e| e.sha == sha) {
@@ -347,6 +373,72 @@ impl ResponseCache {
         if evictions > 0 {
             self.evicted.fetch_add(evictions, Ordering::Relaxed);
         }
+    }
+
+    /// Export every *live* entry for `model` — unexpired and stored
+    /// under its current generation — for a warm migration handover.
+    /// Entries are returned sorted by `(pre, sha)` so the export order
+    /// is deterministic regardless of hash-map iteration order.  The
+    /// source cache is left untouched (the source keeps serving until
+    /// its drain completes).
+    pub fn export_model(&self, model: &str) -> Vec<CacheExport> {
+        self.export_model_at(model, Instant::now())
+    }
+
+    fn export_model_at(&self, model: &str, now: Instant) -> Vec<CacheExport> {
+        let g = self.inner.lock().unwrap();
+        let current = g.model_gens.get(model).copied().unwrap_or(0);
+        let mut out: Vec<CacheExport> = g
+            .map
+            .iter()
+            .flat_map(|(pre, bucket)| {
+                bucket.iter().filter_map(move |e| {
+                    if e.model == model
+                        && e.model_gen == current
+                        && now.duration_since(e.stored) <= self.ttl
+                    {
+                        Some(CacheExport {
+                            pre: *pre,
+                            sha: e.sha,
+                            resp: e.resp.clone(),
+                            age: now.duration_since(e.stored),
+                        })
+                    } else {
+                        None
+                    }
+                })
+            })
+            .collect();
+        out.sort_by(|a, b| (a.pre, a.sha).cmp(&(b.pre, b.sha)));
+        out
+    }
+
+    /// Import entries exported from a source site's cache, storing them
+    /// under *this* cache's current generation for `model` with their
+    /// source age preserved (an entry 20 s old with a 30 s TTL arrives
+    /// with 10 s left, not a fresh 30).  Returns how many entries were
+    /// stored; capacity eviction applies as for any insert.
+    pub fn import_model(&self, model: &str, entries: &[CacheExport]) -> usize {
+        self.import_model_at(model, entries, Instant::now())
+    }
+
+    fn import_model_at(
+        &self,
+        model: &str,
+        entries: &[CacheExport],
+        now: Instant,
+    ) -> usize {
+        let current = self.generation(model);
+        let mut stored = 0usize;
+        for e in entries {
+            if e.age > self.ttl {
+                continue; // already dead in transit
+            }
+            let born = now.checked_sub(e.age).unwrap_or(now);
+            self.insert_at(e.pre, e.sha, model, current, e.resp.clone(), born);
+            stored += 1;
+        }
+        stored
     }
 
     /// Eviction-queue slots currently held (test hook: proves the
@@ -588,6 +680,77 @@ mod tests {
             c.get_at(key(2), "resnet50", &mut || sha(2), t0).is_some(),
             "other models' entries survive a redeploy"
         );
+    }
+
+    #[test]
+    fn export_import_carries_live_entries_with_age_preserved() {
+        let src = ResponseCache::new(8, Duration::from_millis(100));
+        let dst = ResponseCache::new(8, Duration::from_millis(100));
+        let t0 = Instant::now();
+        src.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        src.insert_at(key(2), sha(2), M, 0, resp(2), t0 + Duration::from_millis(40));
+        // Exported at t0+60: entry 1 is 60 ms old, entry 2 is 20 ms old.
+        let t_mig = t0 + Duration::from_millis(60);
+        let export = src.export_model_at(M, t_mig);
+        assert_eq!(export.len(), 2);
+        assert_eq!(dst.import_model_at(M, &export, t_mig), 2);
+        // Both serve on the target right after the handover…
+        assert!(dst
+            .get_at(key(1), M, &mut || sha(1), t_mig + Duration::from_millis(10))
+            .is_some());
+        assert!(dst
+            .get_at(key(2), M, &mut || sha(2), t_mig + Duration::from_millis(10))
+            .is_some());
+        // …but entry 1's remaining TTL carried over: 50 ms after the
+        // handover it is 110 ms old and must be expired, while entry 2
+        // (70 ms old) still serves.
+        assert!(dst
+            .get_at(key(1), M, &mut || sha(1), t_mig + Duration::from_millis(50))
+            .is_none());
+        assert!(dst
+            .get_at(key(2), M, &mut || sha(2), t_mig + Duration::from_millis(50))
+            .is_some());
+        // The source was left untouched (it keeps serving until drain).
+        assert_eq!(src.stats().entries, 2);
+    }
+
+    #[test]
+    fn export_scopes_to_model_and_skips_dead_entries() {
+        let c = ResponseCache::new(8, Duration::from_millis(100));
+        let t0 = Instant::now();
+        c.insert_at(key(1), sha(1), "lenet", 0, resp(1), t0); // expires
+        c.insert_at(key(2), sha(2), "resnet50", 0, resp(2), t0 + Duration::from_millis(90));
+        c.insert_at(key(3), sha(3), "lenet", 0, resp(3), t0 + Duration::from_millis(90));
+        let export = c.export_model_at("lenet", t0 + Duration::from_millis(120));
+        assert_eq!(export.len(), 1, "expired + other-model entries stay home");
+        assert_eq!(export[0].pre, key(3));
+        // A redeploy on the source makes its pre-redeploy entries
+        // unexportable too.
+        c.invalidate("lenet");
+        assert!(c.export_model_at("lenet", t0 + Duration::from_millis(121)).is_empty());
+    }
+
+    #[test]
+    fn import_lands_under_target_generation() {
+        let src = ResponseCache::new(8, Duration::from_secs(60));
+        let dst = ResponseCache::new(8, Duration::from_secs(60));
+        let t0 = Instant::now();
+        // The target was redeployed twice; imports must adopt its
+        // current generation, not the source's.
+        dst.invalidate(M);
+        dst.invalidate(M);
+        src.insert_at(key(1), sha(1), M, 0, resp(1), t0);
+        let export = src.export_model_at(M, t0);
+        assert_eq!(dst.import_model_at(M, &export, t0), 1);
+        assert!(
+            dst.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(1)).is_some(),
+            "imported entry serves under the target's generation"
+        );
+        // A later target redeploy kills the imported entry like any other.
+        dst.invalidate(M);
+        assert!(dst
+            .get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(2))
+            .is_none());
     }
 
     #[test]

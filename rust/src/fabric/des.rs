@@ -65,7 +65,7 @@ use crate::platform::{self, Platform};
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::Series;
-use crate::workload::{RateCurve, TraceEvent};
+use crate::workload::{Handover, RateCurve, TenantMix, TraceEvent};
 
 // ───────────────────────────── clocks ──────────────────────────────
 
@@ -261,6 +261,12 @@ pub struct DesSite {
     /// Demand originating here, as a rate curve over virtual seconds
     /// (`None` when the scenario replays a recorded trace instead).
     pub arrivals: Option<RateCurve>,
+    /// Per-model demand weights for arrivals originating here, in
+    /// model-list order — smoothly interleaved with the same weighted
+    /// round-robin the tenancy layer drains by ([`TenantMix`]).  `None`
+    /// keeps the legacy uniform round-robin over the model list, so
+    /// pre-mobility scenarios replay byte-identically.
+    pub mix: Option<Vec<u32>>,
 }
 
 /// Autoscaler settings for the virtual-time fabric — the same
@@ -408,6 +414,11 @@ pub struct DesScenario {
     pub trace: Option<Vec<TraceEvent>>,
     /// Failure drills, applied at their scheduled virtual times.
     pub drills: Vec<Drill>,
+    /// Client-mobility schedule: at each [`Handover`]'s `at_s` the
+    /// demand population currently entering at `from` re-attaches to
+    /// `to` — subsequent arrivals generated by `from`'s curve originate
+    /// (and route anycast-style, nearest first) from the new site.
+    pub handovers: Vec<Handover>,
     /// Partial-failure injection plan (crashes, stragglers, link
     /// degradation/partitions, site flaps) — empty injects nothing.
     pub faults: FaultPlan,
@@ -485,6 +496,9 @@ enum Ev {
     FlapDown { site: usize },
     /// Site flap recovery.
     FlapUp { site: usize },
+    /// Client-mobility handover: the population whose demand enters at
+    /// `from` roams to `to`.
+    Handover { from: usize, to: usize },
     /// Scheduled retry of a failed request copy, after backoff.
     Retry { item: Item },
     /// Hedge deadline: if the request is still unresolved, duplicate
@@ -530,6 +544,10 @@ struct SiteState {
     spillover_in: u64,
     scale_ups: u64,
     scale_downs: u64,
+    // Mobility accounting: handover events that detached demand from
+    // here / re-attached it here.
+    handovers_out: u64,
+    handovers_in: u64,
 }
 
 struct Engine<'a> {
@@ -545,6 +563,14 @@ struct Engine<'a> {
     /// RTT, site index breaking ties) — unreachable pairs excluded.
     /// Recomputed when link faults mutate the effective topology.
     route_order: Vec<Vec<usize>>,
+    /// Effective origin per generator site: arrivals produced by site
+    /// `i`'s curve enter the continuum at `origin_map[i]` (identity
+    /// until a [`Ev::Handover`] redirects it).
+    origin_map: Vec<usize>,
+    /// Per-site model mixes: the smooth interleave plus a map from mix
+    /// lane back to model index (zero-weight models are dropped from
+    /// the lanes).  `None` = legacy uniform round-robin.
+    mixes: Vec<Option<(TenantMix, Vec<usize>)>>,
     plats: Vec<(&'static Platform, bool)>,
     trace: Vec<(u64, usize, usize)>,
     horizon_us: u64,
@@ -578,6 +604,7 @@ struct Engine<'a> {
     retries: u64,
     spilled: u64,
     rerouted: u64,
+    handovers_fired: u64,
     hedges_launched: u64,
     hedges_won: u64,
     hedges_lost: u64,
@@ -708,6 +735,42 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        let mut mixes: Vec<Option<(TenantMix, Vec<usize>)>> = Vec::with_capacity(ns);
+        for site in &sc.sites {
+            match &site.mix {
+                None => mixes.push(None),
+                Some(weights) => {
+                    if weights.len() != nm {
+                        bail!(
+                            "site {:?}: mix has {} weight(s) for {nm} model(s)",
+                            site.name,
+                            weights.len()
+                        );
+                    }
+                    let mut entries: Vec<(String, u32)> = Vec::new();
+                    let mut map: Vec<usize> = Vec::new();
+                    for (mi, &w) in weights.iter().enumerate() {
+                        if w > 0 {
+                            entries.push((sc.models[mi].name.clone(), w));
+                            map.push(mi);
+                        }
+                    }
+                    let mix = TenantMix::new(&entries).map_err(|e| {
+                        anyhow::anyhow!("site {:?}: bad model mix: {e}", site.name)
+                    })?;
+                    mixes.push(Some((mix, map)));
+                }
+            }
+        }
+        for h in &sc.handovers {
+            if !(h.at_s >= 0.0) {
+                bail!("handover time must be >= 0, got {}", h.at_s);
+            }
+            let (from, to) = (site_idx(&h.from)?, site_idx(&h.to)?);
+            if from == to {
+                bail!("handover needs two distinct sites, got {:?} twice", h.from);
+            }
+        }
         let mut route_order = Vec::with_capacity(ns);
         for origin in 0..ns {
             let mut order: Vec<usize> =
@@ -752,6 +815,8 @@ impl<'a> Engine<'a> {
                 spillover_in: 0,
                 scale_ups: 0,
                 scale_downs: 0,
+                handovers_out: 0,
+                handovers_in: 0,
             })
             .collect();
         // Trace-driven scenarios take their horizon from the last trace
@@ -771,6 +836,8 @@ impl<'a> Engine<'a> {
             gates: vec![HysteresisGate::default(); ns * nm],
             cooldown: vec![0; ns * nm],
             route_order,
+            origin_map: (0..ns).collect(),
+            mixes,
             plats,
             trace,
             horizon_us,
@@ -806,6 +873,7 @@ impl<'a> Engine<'a> {
             retries: 0,
             spilled: 0,
             rerouted: 0,
+            handovers_fired: 0,
             hedges_launched: 0,
             hedges_won: 0,
             hedges_lost: 0,
@@ -881,6 +949,10 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        for h in &sc.handovers {
+            let ev = Ev::Handover { from: site_of(&h.from), to: site_of(&h.to) };
+            self.heap.schedule(at_us(h.at_s), ev);
+        }
         if self.brownouts.is_some() {
             let first = dur_us(BROWNOUT_TICK_MS);
             if first <= self.horizon_us {
@@ -897,6 +969,34 @@ impl<'a> Engine<'a> {
         if let Some(t) = curve.next_arrival_s(&mut st.arrivals_rng, from_s, self.sc.horizon_s) {
             self.heap.schedule(at_us(t), Ev::Arrival { site });
         }
+    }
+
+    /// Model for the next request originating at `origin`: the site's
+    /// smooth weighted mix when one is configured, else uniform
+    /// round-robin over the model list.  Keyed off the origin's
+    /// submitted count, so the stream is a pure function of scenario +
+    /// seed.
+    fn pick_model(&self, origin: usize) -> usize {
+        let i = self.sites[origin].submitted as usize;
+        match &self.mixes[origin] {
+            Some((mix, map)) => map[mix.pick_index(i)],
+            None => i % self.sc.models.len(),
+        }
+    }
+
+    /// A mobility handover fires: demand generated at `from`'s curve
+    /// now enters the continuum at `to`.  Every generator currently
+    /// attached to `from` moves (handovers chain: a population that
+    /// roamed A→B earlier follows a later B→C event).
+    fn on_handover(&mut self, from: usize, to: usize) {
+        self.handovers_fired += 1;
+        for mapped in self.origin_map.iter_mut() {
+            if *mapped == from {
+                *mapped = to;
+            }
+        }
+        self.sites[from].handovers_out += 1;
+        self.sites[to].handovers_in += 1;
     }
 
     fn draw_cohort(&mut self, site: usize) -> u64 {
@@ -1543,9 +1643,14 @@ impl<'a> Engine<'a> {
                 Ev::Arrival { site } => {
                     let from_s = t as f64 / 1e6;
                     self.schedule_next_arrival(site, from_s);
-                    let model = (self.sites[site].submitted as usize) % self.sc.models.len();
+                    // The generator site keeps producing (its curve and
+                    // RNG stream are untouched by mobility), but the
+                    // request *originates* wherever its population is
+                    // currently attached.
+                    let origin = self.origin_map[site];
+                    let model = self.pick_model(origin);
                     let cohort = self.draw_cohort(site);
-                    self.admit(site, model, cohort);
+                    self.admit(origin, model, cohort);
                 }
                 Ev::TraceArrival { idx } => {
                     if let Some(&(next_at, _, _)) = self.trace.get(idx + 1) {
@@ -1584,6 +1689,7 @@ impl<'a> Engine<'a> {
                     self.on_fail(site);
                 }
                 Ev::FlapUp { site } => self.on_recover(site),
+                Ev::Handover { from, to } => self.on_handover(from, to),
                 Ev::Retry { item } => self.on_retry(item),
                 Ev::HedgeFire { req, item } => self.on_hedge_fire(req, item),
                 Ev::BrownoutTick => self.on_brownout_tick(),
@@ -1632,6 +1738,8 @@ impl<'a> Engine<'a> {
                 dispatches,
                 scale_ups: st.scale_ups,
                 scale_downs: st.scale_downs,
+                handovers_out: st.handovers_out,
+                handovers_in: st.handovers_in,
                 breaker_trips: self.breakers.as_ref().map(|b| b[i].trips()).unwrap_or(0),
                 brownout_ms: self
                     .brownouts
@@ -1666,6 +1774,7 @@ impl<'a> Engine<'a> {
             retries: self.retries,
             spilled: self.spilled,
             rerouted: self.rerouted,
+            handovers: self.handovers_fired,
             hedges_launched: self.hedges_launched,
             hedges_won: self.hedges_won,
             hedges_lost: self.hedges_lost,
@@ -1762,6 +1871,10 @@ pub struct DesSiteReport {
     pub scale_ups: u64,
     /// Autoscaler scale-down actions here.
     pub scale_downs: u64,
+    /// Mobility handovers that detached a demand population from here.
+    pub handovers_out: u64,
+    /// Mobility handovers that re-attached a demand population here.
+    pub handovers_in: u64,
     /// Circuit-breaker trips at this site.
     pub breaker_trips: u64,
     /// Virtual ms this site spent in brownout (any rung ≥ 1).
@@ -1810,6 +1923,8 @@ pub struct DesReport {
     pub spilled: u64,
     /// Queued requests rerouted by a site-loss drill.
     pub rerouted: u64,
+    /// Client-mobility handover events fired.
+    pub handovers: u64,
     /// Hedge duplicates launched.
     pub hedges_launched: u64,
     /// Requests whose hedge copy finished first.
@@ -1876,6 +1991,8 @@ impl DesReport {
                     ("dispatches", n(site.dispatches as f64)),
                     ("scale_ups", n(site.scale_ups as f64)),
                     ("scale_downs", n(site.scale_downs as f64)),
+                    ("handovers_out", n(site.handovers_out as f64)),
+                    ("handovers_in", n(site.handovers_in as f64)),
                     ("breaker_trips", n(site.breaker_trips as f64)),
                     ("brownout_ms", n(site.brownout_ms)),
                     ("p50_ms", n(site.p50_ms)),
@@ -1899,6 +2016,7 @@ impl DesReport {
             ("retries", n(self.retries as f64)),
             ("spilled", n(self.spilled as f64)),
             ("rerouted", n(self.rerouted as f64)),
+            ("handovers", n(self.handovers as f64)),
             (
                 "resilience",
                 obj(vec![
@@ -1993,6 +2111,7 @@ mod tests {
                     variant: "AGX".into(),
                     pods: 1,
                     arrivals: Some(RateCurve::Constant { rps: 40.0 }),
+                    mix: None,
                 },
                 DesSite {
                     name: "cloud".into(),
@@ -2000,11 +2119,13 @@ mod tests {
                     variant: "GPU".into(),
                     pods: 1,
                     arrivals: None,
+                    mix: None,
                 },
             ],
             rtt_ms: vec![vec![0.0, 18.0], vec![18.0, 0.0]],
             trace: None,
             drills: Vec::new(),
+            handovers: Vec::new(),
             faults: FaultPlan::default(),
             cfg: DesConfig { seed, queue_capacity: 4, max_batch: 4, ..Default::default() },
         }
@@ -2237,5 +2358,67 @@ mod tests {
             }],
         };
         assert!(run_des(&sc).is_err(), "self-partition rejected");
+        let mut sc = tiny_scenario(1);
+        sc.handovers =
+            vec![Handover { at_s: 1.0, from: "edge".into(), to: "edge".into() }];
+        assert!(run_des(&sc).is_err(), "self-handover rejected");
+        let mut sc = tiny_scenario(1);
+        sc.handovers =
+            vec![Handover { at_s: 1.0, from: "edge".into(), to: "mars".into() }];
+        assert!(run_des(&sc).is_err(), "handover to an unknown site rejected");
+        let mut sc = tiny_scenario(1);
+        sc.sites[0].mix = Some(vec![3]);
+        assert!(run_des(&sc).is_err(), "mix length must match the model list");
+        let mut sc = tiny_scenario(1);
+        sc.sites[0].mix = Some(vec![0, 0]);
+        assert!(run_des(&sc).is_err(), "all-zero mix weights rejected");
+    }
+
+    #[test]
+    fn handover_moves_demand_origin_and_conserves() {
+        // Mid-run the edge population roams to the cloud: from then on
+        // its arrivals originate (and are accounted) at the cloud, so
+        // per-origin conservation must hold on both sides of the window
+        // and the cloud must see demand it never generated.
+        let mut sc = tiny_scenario(31);
+        sc.handovers =
+            vec![Handover { at_s: 10.0, from: "edge".into(), to: "cloud".into() }];
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds(), "conservation across the handover window");
+        assert_eq!(r.handovers, 1);
+        assert_eq!(r.sites[0].handovers_out, 1);
+        assert_eq!(r.sites[1].handovers_in, 1);
+        assert!(r.sites[0].submitted > 0, "pre-handover demand originated at the edge");
+        assert!(
+            r.sites[1].submitted > 0,
+            "post-handover demand must originate at the cloud"
+        );
+        assert_eq!(
+            r.submitted,
+            r.sites[0].submitted + r.sites[1].submitted,
+            "roaming never loses or double-counts offered requests"
+        );
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json(), "mobility replays to the byte");
+    }
+
+    #[test]
+    fn per_site_mix_steers_the_model_stream() {
+        // An all-lenet mix on the edge: every request it originates
+        // targets model 0, while the default round-robin would have
+        // alternated.  The mix is part of the canonical replay.
+        let mut sc = tiny_scenario(37);
+        sc.cfg.autoscale = None;
+        sc.sites[0].mix = Some(vec![1, 0]);
+        let r = run_des(&sc).unwrap();
+        assert!(r.conservation_holds());
+        let r2 = run_des(&sc).unwrap();
+        assert_eq!(r.canonical_json(), r2.canonical_json());
+        // Round-robin control: same seed, no mix — the reports differ
+        // because the model stream differs.
+        let mut ctl = tiny_scenario(37);
+        ctl.cfg.autoscale = None;
+        let c = run_des(&ctl).unwrap();
+        assert_ne!(r.canonical_json(), c.canonical_json(), "the mix steers demand");
     }
 }

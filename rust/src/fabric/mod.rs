@@ -118,7 +118,7 @@ use crate::util::stats::{throughput_rps, Boxplot, Series};
 use crate::workload::{image_like, Arrival};
 
 use cache::ResponseCache;
-pub use cache::CacheStats;
+pub use cache::{CacheExport, CacheStats};
 use control::{ArrivalRate, BatchControlConfig, BatchController, HysteresisGate};
 pub use control::{AutoscaleConfig, ScaleDirection, ScaleEvent};
 use faults::CircuitBreaker;
@@ -1334,6 +1334,74 @@ impl Fabric {
     /// deterministic tests use.  No-op when autoscaling is off.
     pub fn autoscale_tick(&self) {
         autoscale_tick(&self.inner);
+    }
+
+    // ── live-migration hooks (see docs/ARCHITECTURE.md §Live migration) ──
+
+    /// Export `model`'s live response-cache entries for a warm
+    /// migration handover (empty when the cache is off or cold).  The
+    /// local cache is left untouched — the source keeps serving until
+    /// its drain completes.
+    pub fn export_cache(&self, model: &str) -> Vec<CacheExport> {
+        self.inner.cache.as_ref().map(|c| c.export_model(model)).unwrap_or_default()
+    }
+
+    /// Import cache entries exported from a source site's fabric,
+    /// stored under *this* fabric's current generation for `model` with
+    /// their source age (and hence remaining TTL) preserved.  Returns
+    /// how many entries landed (0 when the cache is off).
+    pub fn import_cache(&self, model: &str, entries: &[CacheExport]) -> usize {
+        self.inner.cache.as_ref().map(|c| c.import_model(model, entries)).unwrap_or(0)
+    }
+
+    /// Spawn one more replica of `model` through the autoscaler's
+    /// placement path (feedback-blended ranking, distinct nodes,
+    /// per-platform ceilings), logging a [`ScaleEvent`] with `trigger`.
+    /// This is the migration target's "spawn the replacement pod" step.
+    /// Returns `false` when no placement fits — or when the fabric was
+    /// spawned without `autoscale` (the scaler owns the placement
+    /// backend).
+    pub fn add_replica(&self, model: &str, trigger: &str) -> bool {
+        let Some(sc) = self.inner.scaler.as_ref() else {
+            return false;
+        };
+        let active = self.active_replicas(model);
+        scale_up(&self.inner, model, sc, active, trigger)
+    }
+
+    /// Gracefully retire one active replica of `model` (the
+    /// worst-estimated one, as the autoscaler's scale-down picks): the
+    /// router stops seeing it immediately, its workers drain everything
+    /// already admitted, and the cluster slot is released.  Admitted
+    /// work is never dropped — that is the migration source's
+    /// zero-drop handoff step.  Requires `autoscale` like
+    /// [`add_replica`](Self::add_replica).
+    pub fn retire_replica(&self, model: &str, trigger: &str) -> bool {
+        let Some(sc) = self.inner.scaler.as_ref() else {
+            return false;
+        };
+        let active = self.active_replicas(model);
+        if active == 0 {
+            return false;
+        }
+        self.inner.scale_down(model, sc, active, trigger)
+    }
+
+    /// Reap retired pods whose workers have finished draining (join
+    /// threads, freeze reports, release executors).  The autoscaler's
+    /// control thread does this every tick; migration calls it
+    /// explicitly after the source drain so the handover ends with the
+    /// source's memory actually reclaimed.
+    pub fn reap_retired(&self) {
+        self.inner.reap_retired();
+    }
+
+    /// Offered-arrival EWMA for `model`, requests/second (None until
+    /// the predictive autoscaler has seen enough arrivals, or when
+    /// `autoscale.predictive` is off).  The continuum migration policy
+    /// reads these forecasts to shift capacity toward rising demand.
+    pub fn arrival_rate_rps(&self, model: &str) -> Option<f64> {
+        self.inner.arrivals.get(model).and_then(|a| a.rate_rps())
     }
 
     /// Inspect the fabric-owned cluster (placement accounting, pod

@@ -137,7 +137,10 @@ fn print_usage() {
          [--requests N] [--arrival A] [--models a,b] [--replicas N] [--queue N]\n           \
          [--batch N] [--workers N] [--time-scale F] [--seed N] [--run-seed N]\n           \
          [--fail-site NAME] [--fail-at I] [--scenarios]\n           \
-         [--virtual-time] [--scenario diurnal-day|flash-crowd|site-loss-storm|million-user-day]\n           \
+         [--migrate] [--energy-budget W]  (post-drive live migration: forecast-\n            \
+         driven, or watt-budgeted with --energy-budget; threaded path only)\n           \
+         [--virtual-time] [--scenario diurnal-day|flash-crowd|site-loss-storm|\n            \
+         million-user-day|mobile-day]\n           \
          [--trace-file CSV] [--duration S] [--fail-at-s S] [--recover-at-s S]\n           \
          [--faults PLAN] [--retry N] [--hedge-ms MS] [--breaker] [--brownout]\n           \
          [--report-out FILE]\n  \
@@ -145,7 +148,7 @@ fn print_usage() {
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
          [--slo MS] [--seed N] [--out FILE] [--fused-only]\n           \
          [--hotpath]  (submit→verdict overhead harness at saturation over\n            \
-         zero-work pods; writes only the v7 `hotpath` section; default\n            \
+         zero-work pods; writes only the v8 `hotpath` section; default\n            \
          20000 requests/arm; incompatible with --fused-only)\n  \
          report   <table1|table2|table3|fig3|fig4|fig5|all> [--requests N] [--real N]\n"
     );
@@ -794,10 +797,12 @@ fn cmd_fabric_des(flags: &Flags) -> Result<()> {
             variant,
             pods: flags.usize_or("--replicas", 1)?,
             arrivals,
+            mix: None,
         }],
         rtt_ms: vec![vec![0.0]],
         trace,
         drills: Vec::new(),
+        handovers: Vec::new(),
         faults: fault_plan_from_flags(flags)?,
         cfg,
     };
@@ -839,6 +844,8 @@ fn cmd_continuum_des(flags: &Flags) -> Result<()> {
             "--time-scale",
             "--replicas",
             "--models",
+            "--migrate",
+            "--energy-budget",
         ],
     )?;
     let seed = flags.usize_or("--seed", DesConfig::default().seed as usize)? as u64;
@@ -915,6 +922,14 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
             bail!("{flag} needs --virtual-time on the continuum path");
         }
     }
+    let migrate = flags.has("--migrate");
+    let energy_budget_w = flags
+        .get("--energy-budget")
+        .map(|v| v.parse::<f64>().with_context(|| format!("bad --energy-budget {v:?}")))
+        .transpose()?;
+    if energy_budget_w.is_some() && !migrate {
+        bail!("--energy-budget needs --migrate");
+    }
     let d = FabricConfig::default();
     let cfg = FabricConfig {
         queue_capacity: flags.usize_or("--queue", d.queue_capacity)?,
@@ -924,12 +939,32 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
         time_scale: flags.f64_or("--time-scale", d.time_scale)?,
         seed: flags.usize_or("--seed", d.seed as usize)? as u64,
         resilience: resilience_from_flags(flags)?,
+        // Live migration needs the autoscaler's spawn/retire path (ticked
+        // explicitly, never by a thread) plus a response cache so warm
+        // state has something to carry.
+        autoscale: if migrate {
+            Some(tf2aif::fabric::AutoscaleConfig {
+                interval_ms: 0,
+                predictive: true,
+                ..Default::default()
+            })
+        } else {
+            None
+        },
+        cache_capacity: if migrate { 256 } else { d.cache_capacity },
+        cache_ttl_ms: if migrate { 60_000 } else { d.cache_ttl_ms },
         ..Default::default()
     };
     if flags.has("--scenarios") {
         // The scenario suite runs the built-in testbed under fixed
         // policies; flags it would silently ignore are errors, matching
         // this CLI's no-effect-flag convention.
+        if migrate {
+            bail!(
+                "--migrate has no effect with --scenarios (the migration drill is its \
+                 own suite: drop --scenarios, or see `tf2aif bench`'s migration section)"
+            );
+        }
         for flag in [
             "--config",
             "--policy",
@@ -1071,6 +1106,36 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
             );
         }
     }
+    if migrate {
+        let reports = match energy_budget_w {
+            Some(w) => {
+                println!("\nlive migration (energy budget {w:.1} W per site):");
+                orch.energy_budget_migrations(w)
+            }
+            None => {
+                println!("\nlive migration (arrival-rate forecast, floor 1.0 rps):");
+                orch.forecast_migrations(1.0)
+            }
+        };
+        if reports.is_empty() {
+            println!("  no model qualified for migration (policy thresholds not met)");
+        }
+        for r in &reports {
+            println!(
+                "  {}: {} → {} ({}) — {} cache entr{} carried, {} feedback key(s) \
+                 seeded, target spawn {}, {} source replica(s) retired",
+                r.model,
+                r.from,
+                r.to,
+                r.trigger,
+                r.cache_entries_moved,
+                if r.cache_entries_moved == 1 { "y" } else { "ies" },
+                r.feedback_keys_seeded,
+                yn(r.replica_spawned),
+                r.replicas_retired,
+            );
+        }
+    }
     orch.shutdown();
     Ok(())
 }
@@ -1137,7 +1202,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         );
         let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
         bench::write_json(
-            out, &hcfg, &[], None, None, None, None, None, None, Some(&hp),
+            out, &hcfg, &[], None, None, None, None, None, None, Some(&hp), None,
         )?;
         println!("wrote {out}");
         return Ok(());
@@ -1160,9 +1225,9 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     // fixed replicas vs autoscaler), the tenancy measurement, the
     // continuum scenarios and the virtual-time determinism check ride
     // along unless --fused-only.
-    let (control, autoscale, tenancy, continuum_bench, des_bench, resilience_bench) =
+    let (control, autoscale, tenancy, continuum_bench, des_bench, resilience_bench, migration_bench) =
         if flags.has("--fused-only") {
-            (None, None, None, None, None, None)
+            (None, None, None, None, None, None, None)
         } else {
         println!(
             "\nadaptive vs fixed max_batch across {} rates (SLO {:.0} ms)…\n",
@@ -1272,7 +1337,34 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             yn(res.breaker_recovers),
             yn(res.storm_bit_reproducible),
         );
-        (Some(sweep), Some(cmp), Some(ten), Some(cont), Some(des), Some(res))
+
+        println!(
+            "\nmigration: live handover drill, forecast + energy-budget triggers, and \
+             the mobile-day replay (seed {})…",
+            cfg.seed,
+        );
+        let mig = bench::run_migration_bench(&cfg)?;
+        println!(
+            "{} submitted over mobile-day | {} handover(s) | {} fault(s) injected | \
+             {} cache entr{} carried | {} feedback key(s) seeded | {} replica(s) retired\n\
+             migration drops nothing: {} | warm cache carries: {} | \
+             forecast triggers: {} | energy-budget triggers: {} | \
+             mid-session handover drops nothing: {} | mobile-day bit-reproducible: {}",
+            mig.submitted,
+            mig.handovers,
+            mig.faults_injected,
+            mig.verdicts.cache_entries_moved,
+            if mig.verdicts.cache_entries_moved == 1 { "y" } else { "ies" },
+            mig.verdicts.feedback_keys_seeded,
+            mig.verdicts.replicas_retired,
+            yn(mig.verdicts.migration_no_drop),
+            yn(mig.verdicts.warm_cache_carries),
+            yn(mig.verdicts.forecast_triggers),
+            yn(mig.verdicts.energy_budget_triggers),
+            yn(mig.handover_no_drop),
+            yn(mig.migration_bit_reproducible),
+        );
+        (Some(sweep), Some(cmp), Some(ten), Some(cont), Some(des), Some(res), Some(mig))
     };
 
     let out = flags.get("--out").unwrap_or("BENCH_fabric.json");
@@ -1287,6 +1379,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         des_bench.as_ref(),
         resilience_bench.as_ref(),
         None,
+        migration_bench.as_ref(),
     )?;
     let beats = bench::fused_beats_per_item_at_batch_ge4(&points);
     match bench::best_speedup_at_batch_ge4(&points) {

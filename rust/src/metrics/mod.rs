@@ -304,6 +304,23 @@ impl FeedbackStore {
     pub fn all(&self) -> BTreeMap<String, Feedback> {
         self.inner.lock().unwrap().clone()
     }
+
+    /// Seed a key with feedback carried from another pod — the warm
+    /// half of a live migration, where the source replica's measured
+    /// EWMA primes the replacement so placement ranks it by inherited
+    /// evidence instead of the cold cost model.  Insert-if-absent: a
+    /// key that already holds *real* local observations is never
+    /// clobbered by carried history.  Returns whether the seed landed.
+    pub fn seed(&self, key: &str, carried: Feedback) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.get(key) {
+            Some(f) if f.observations > 0 => false,
+            _ => {
+                g.insert(key.to_string(), carried);
+                true
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -411,5 +428,24 @@ mod tests {
         assert_eq!(fb.observations, 2);
         assert!((fb.ewma_service_ms - 15.0).abs() < 1e-12);
         assert!((fb.ewma_queue_wait_ms - 6.0).abs() < 1e-12, "queue-wait channel tracked too");
+    }
+
+    #[test]
+    fn feedback_seed_primes_cold_keys_but_never_clobbers_measurements() {
+        let f = FeedbackStore::new(0.5);
+        let carried =
+            Feedback { ewma_service_ms: 3.0, ewma_queue_wait_ms: 1.0, observations: 40 };
+        // Cold key: the seed lands and blending uses the carried EWMA.
+        assert!(f.seed("aif@dst", carried));
+        let est = f.blend("aif@dst", 10.0);
+        assert!(est < 10.0, "seeded key must rank by inherited evidence, got {est}");
+        // A key with real local observations refuses the seed.
+        f.observe("aif@warm", 20.0, 0.0);
+        assert!(!f.seed("aif@warm", carried));
+        assert!((f.get("aif@warm").unwrap().ewma_service_ms - 20.0).abs() < 1e-12);
+        // Re-seeding the seeded key overwrites carried-with-carried
+        // only if no real observation landed in between.
+        f.observe("aif@dst", 5.0, 0.0);
+        assert!(!f.seed("aif@dst", carried), "post-observation seed must bounce");
     }
 }

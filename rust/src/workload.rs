@@ -368,6 +368,24 @@ pub struct TraceEvent {
     pub model: String,
 }
 
+/// One scheduled client-mobility event: at `at_s` virtual seconds the
+/// client population whose demand currently enters the continuum at
+/// `from` roams to `to` — from then on those arrivals originate (and
+/// are routed anycast-style, nearest site first) from the new
+/// attachment point.  Mid-session handover in the DES is exactly this:
+/// the demand curve keeps firing on the old site's arrival stream (so
+/// replay stays bit-reproducible), but the *effective origin* of every
+/// subsequent request is the roamed-to site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Handover {
+    /// Virtual seconds from scenario start.
+    pub at_s: f64,
+    /// Site the roaming population detaches from.
+    pub from: String,
+    /// Site it re-attaches to.
+    pub to: String,
+}
+
 /// Typed failure of [`read_trace_csv`] — every parse-level variant
 /// carries the 1-based line number so a million-row trace pinpoints
 /// the offending record instead of a generic "bad CSV".

@@ -133,6 +133,7 @@ fn random_scenario(seed: u64) -> DesScenario {
             variant: variants[rng.below(variants.len())].to_string(),
             pods: 1 + rng.below(2),
             arrivals: Some(RateCurve::Constant { rps: rng.range_f64(5.0, 60.0) }),
+            mix: None,
         })
         .collect();
     let rtt_ms: Vec<Vec<f64>> = (0..nsites)
@@ -155,6 +156,7 @@ fn random_scenario(seed: u64) -> DesScenario {
         rtt_ms,
         trace: None,
         drills: Vec::new(),
+        handovers: Vec::new(),
         faults: FaultPlan::default(),
         cfg: DesConfig {
             queue_capacity: 2 + rng.below(14),

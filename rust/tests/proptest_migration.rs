@@ -1,0 +1,295 @@
+//! Property-style tests for live migration — randomized inputs under
+//! fixed seeds (deterministic, reproducible), checking the handover
+//! invariant from both directions:
+//!
+//! - Threaded continuum: randomized warm/in-flight/post load shapes
+//!   around a live migration lose nothing — every admitted request
+//!   hears exactly one terminal verdict, nothing fails, and all
+//!   post-handover traffic lands on the target site.
+//! - Virtual time: randomly generated mobility storms (mid-session
+//!   handovers racing site flaps, random per-site demand mixes)
+//!   conserve every request and replay byte-identically, and the
+//!   canned `mobile-day` scenario is byte-stable under a fresh seed.
+
+use std::collections::BTreeMap;
+
+use tf2aif::continuum::des::canned;
+use tf2aif::continuum::{
+    continuum_testbed, ContinuumOrchestrator, ContinuumSubmission, PlanPolicy, RoutedRequest,
+};
+use tf2aif::fabric::des::{run_des, DesConfig, DesModel, DesScenario, DesSite};
+use tf2aif::fabric::sim::synthetic_catalog_for;
+use tf2aif::fabric::{
+    AutoscaleConfig, FabricConfig, Fault, FaultPlan, Outcome, ResilienceConfig, RetryPolicy,
+};
+use tf2aif::util::rng::Rng;
+use tf2aif::workload::{Handover, RateCurve};
+
+/// Receive every pending outcome, asserting the exactly-once property:
+/// each receiver yields one terminal verdict and then nothing.
+fn recv_exactly_once(
+    seed: u64,
+    phase: &str,
+    pending: Vec<RoutedRequest>,
+    completed: &mut u64,
+    shed: &mut u64,
+) {
+    for (i, r) in pending.into_iter().enumerate() {
+        match r.rx.recv() {
+            Ok(Outcome::Completed(_)) => *completed += 1,
+            Ok(Outcome::Shed) => *shed += 1,
+            Ok(Outcome::Failed(e)) => {
+                panic!("seed {seed}: {phase} request {i} failed during migration: {e}")
+            }
+            Err(_) => panic!("seed {seed}: {phase} request {i} hung (sender dropped)"),
+        }
+        assert!(
+            r.rx.try_recv().is_err(),
+            "seed {seed}: {phase} request {i} must hear exactly one verdict"
+        );
+    }
+}
+
+#[test]
+fn random_migration_drills_lose_nothing_and_verdict_exactly_once() {
+    // Randomized load shapes (warm, in-flight, post-handover) and fabric
+    // knobs around a live migration of the testbed's only model: the
+    // conservation invariant must hold across the migration window no
+    // matter how much admitted work the handover races.
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(0x316A ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let warm = 4 + rng.below(8) as u64;
+        let inflight = 1 + rng.below(7) as u64;
+        let post = 2 + rng.below(4) as u64;
+        let cfg = FabricConfig {
+            queue_capacity: 16 + rng.below(32),
+            max_batch: 1 + rng.below(6),
+            workers: 1,
+            replicas_per_model: 1,
+            time_scale: 0.0,
+            seed: seed.wrapping_add(0x9D),
+            dedup: false,
+            cache_capacity: 32,
+            cache_ttl_ms: 60_000,
+            autoscale: Some(AutoscaleConfig {
+                interval_ms: 0,
+                predictive: true,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut orch = ContinuumOrchestrator::deploy_sim(
+            continuum_testbed(),
+            synthetic_catalog_for(&["mobilenetv1"]),
+            PlanPolicy::MinLatency,
+            "edge",
+            &cfg,
+            &BTreeMap::new(),
+        )
+        .expect("testbed deploys");
+        let from = orch.plan().primary("mobilenetv1").expect("planned").site.clone();
+        let candidates: Vec<String> = orch
+            .plan()
+            .ranked("mobilenetv1")
+            .iter()
+            .map(|p| p.site.clone())
+            .filter(|s| *s != from)
+            .collect();
+        assert!(!candidates.is_empty(), "seed {seed}: the testbed ranks a second site");
+        let to = candidates[rng.below(candidates.len())].clone();
+
+        let mut submitted = 0u64;
+        let (mut completed, mut shed) = (0u64, 0u64);
+        let mut pending = Vec::new();
+        for i in 0..warm {
+            submitted += 1;
+            match orch.submit("mobilenetv1", vec![i as f32; 16]).expect("known model") {
+                ContinuumSubmission::Routed(r) => pending.push(r),
+                ContinuumSubmission::Shed => shed += 1,
+            }
+        }
+        recv_exactly_once(seed, "warm", pending, &mut completed, &mut shed);
+
+        // Admit work and migrate BEFORE receiving: the graceful drain
+        // inside the migration must complete it, never drop it.
+        let mut racing = Vec::new();
+        for i in 0..inflight {
+            submitted += 1;
+            match orch
+                .submit("mobilenetv1", vec![500.0 + i as f32; 16])
+                .expect("known model")
+            {
+                ContinuumSubmission::Routed(r) => racing.push(r),
+                ContinuumSubmission::Shed => shed += 1,
+            }
+        }
+        let rep = orch
+            .migrate_model("mobilenetv1", &from, &to, "proptest drill")
+            .expect("drill migration succeeds");
+        assert!(
+            rep.replicas_retired >= 1,
+            "seed {seed}: the source must actually evacuate"
+        );
+        recv_exactly_once(seed, "in-flight", racing, &mut completed, &mut shed);
+
+        let mut after = Vec::new();
+        for i in 0..post {
+            submitted += 1;
+            match orch
+                .submit("mobilenetv1", vec![900.0 + i as f32; 16])
+                .expect("known model")
+            {
+                ContinuumSubmission::Routed(r) => {
+                    assert_eq!(
+                        r.site, to,
+                        "seed {seed}: post-handover traffic must land on the target"
+                    );
+                    after.push(r);
+                }
+                ContinuumSubmission::Shed => shed += 1,
+            }
+        }
+        recv_exactly_once(seed, "post", after, &mut completed, &mut shed);
+
+        assert_eq!(
+            completed + shed,
+            submitted,
+            "seed {seed}: zero lost admitted work across the migration window"
+        );
+        let last = orch.replans().last().expect("the migration records a replan event");
+        assert!(
+            last.reason.starts_with("migration:"),
+            "seed {seed}: audit trail carries the migration trigger, got {:?}",
+            last.reason
+        );
+        orch.shutdown();
+    }
+}
+
+/// A random but seed-determined three-site scenario carrying a random
+/// mobility storm: mid-session handovers between random site pairs at
+/// random times, racing random site flaps, under random per-site demand
+/// mixes (retry always on so flap-displaced work is re-admitted).
+fn random_mobility_scenario(seed: u64) -> DesScenario {
+    let mut rng = Rng::new(0x906E ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let variants = ["GPU", "AGX", "ARM"];
+    let tiers = ["cloud", "edge", "far-edge"];
+    let sites: Vec<DesSite> = (0..3)
+        .map(|i| DesSite {
+            name: format!("s{i}"),
+            tier: tiers[i].to_string(),
+            variant: variants[rng.below(variants.len())].to_string(),
+            pods: 1 + rng.below(2),
+            arrivals: Some(RateCurve::Constant { rps: rng.range_f64(10.0, 40.0) }),
+            mix: if rng.below(2) == 1 {
+                Some(vec![1 + rng.below(3) as u32, 1 + rng.below(3) as u32])
+            } else {
+                None
+            },
+        })
+        .collect();
+    let mut handovers = Vec::new();
+    for _ in 0..1 + rng.below(3) {
+        let from = rng.below(3);
+        let to = (from + 1 + rng.below(2)) % 3;
+        handovers.push(Handover {
+            at_s: rng.range_f64(2.0, 25.0),
+            from: format!("s{from}"),
+            to: format!("s{to}"),
+        });
+    }
+    let mut faults = Vec::new();
+    for _ in 0..1 + rng.below(2) {
+        let at_s = rng.range_f64(2.0, 20.0);
+        faults.push(Fault::SiteFlap {
+            at_s,
+            recover_s: at_s + rng.range_f64(1.0, 6.0),
+            site: format!("s{}", rng.below(3)),
+        });
+    }
+    DesScenario {
+        name: format!("mobility-{seed}"),
+        horizon_s: 30.0,
+        models: vec![
+            DesModel { name: "lenet".to_string(), gflops: 0.001 },
+            DesModel { name: "resnet50".to_string(), gflops: 0.168 },
+        ],
+        sites,
+        rtt_ms: vec![
+            vec![0.0, 12.0, 25.0],
+            vec![12.0, 0.0, 8.0],
+            vec![25.0, 8.0, 0.0],
+        ],
+        trace: None,
+        drills: Vec::new(),
+        handovers,
+        faults: FaultPlan { name: format!("mobility-plan-{seed}"), faults },
+        cfg: DesConfig {
+            queue_capacity: 4 + rng.below(12),
+            max_batch: 1 + rng.below(6),
+            resilience: ResilienceConfig {
+                retry: Some(RetryPolicy::default()),
+                ..Default::default()
+            },
+            seed: seed.wrapping_add(0x5EED),
+            ..DesConfig::default()
+        },
+    }
+}
+
+#[test]
+fn random_mobility_storms_conserve_every_request() {
+    for seed in 0..6u64 {
+        let sc = random_mobility_scenario(seed);
+        let scheduled = sc.handovers.len() as u64;
+        let report = run_des(&sc).unwrap();
+        assert!(report.submitted > 0, "seed {seed}: load was offered");
+        assert_eq!(
+            report.handovers, scheduled,
+            "seed {seed}: every scheduled handover fires"
+        );
+        assert!(report.faults_injected > 0, "seed {seed}: the flap plan must fire");
+        assert!(
+            report.conservation_holds(),
+            "seed {seed}: {} submitted != {} completed + {} cached + {} shed \
+             + {} quota-shed + {} failed",
+            report.submitted,
+            report.completed,
+            report.cache_hits,
+            report.shed,
+            report.quota_shed,
+            report.failed,
+        );
+    }
+}
+
+#[test]
+fn random_mobility_storms_replay_byte_identically() {
+    for seed in [0u64, 3, 5] {
+        let first = run_des(&random_mobility_scenario(seed)).unwrap();
+        let second = run_des(&random_mobility_scenario(seed)).unwrap();
+        assert_eq!(
+            first.canonical_json(),
+            second.canonical_json(),
+            "seed {seed}: the same mobility storm must replay to identical bytes"
+        );
+    }
+}
+
+#[test]
+fn mobile_day_replays_byte_identically_under_a_fresh_seed() {
+    // The golden suite pins mobile-day under its shared seed; this pins
+    // it under an independent one, with the mobility and fault counters
+    // asserted so the scenario can never silently degenerate into a
+    // static day.
+    let first = run_des(&canned("mobile-day", 23).unwrap()).unwrap();
+    let second = run_des(&canned("mobile-day", 23).unwrap()).unwrap();
+    assert!(first.conservation_holds(), "zero lost admitted work on the mobile day");
+    assert_eq!(first.handovers, 3, "all three roaming populations move");
+    assert!(first.faults_injected > 0, "the flaps race the handovers");
+    assert_eq!(
+        first.canonical_json(),
+        second.canonical_json(),
+        "mobile-day must replay byte-identically under the same seed"
+    );
+}

@@ -146,6 +146,7 @@ fn random_chaos_scenario(seed: u64) -> DesScenario {
             variant: variants[rng.below(variants.len())].to_string(),
             pods: 1 + rng.below(2),
             arrivals: Some(RateCurve::Constant { rps: rng.range_f64(10.0, 50.0) }),
+            mix: None,
         })
         .collect();
     let mut faults = Vec::new();
@@ -200,6 +201,7 @@ fn random_chaos_scenario(seed: u64) -> DesScenario {
         rtt_ms: vec![vec![0.0, 12.0], vec![12.0, 0.0]],
         trace: None,
         drills: Vec::new(),
+        handovers: Vec::new(),
         faults: FaultPlan { name: format!("chaos-plan-{seed}"), faults },
         cfg: DesConfig {
             queue_capacity: 2 + rng.below(14),

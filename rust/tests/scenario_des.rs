@@ -19,7 +19,7 @@ use tf2aif::util::json::Json;
 use tf2aif::workload::TraceEvent;
 
 /// The canned scenarios cheap enough for the debug-build golden suite.
-const GOLDEN: &[&str] = &["diurnal-day", "flash-crowd", "site-loss-storm"];
+const GOLDEN: &[&str] = &["diurnal-day", "flash-crowd", "site-loss-storm", "mobile-day"];
 
 #[test]
 fn canned_registry_builds_every_scenario() {
