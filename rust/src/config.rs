@@ -7,9 +7,77 @@
 //! parameters.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+/// Typed parse error: the 1-based source line, the offending text and
+/// what went wrong — so a bad manifest line points at itself instead of
+/// failing with a context-free "cannot parse".  Carried inside the
+/// `anyhow` error chain ([`Config::parse`] keeps its signature);
+/// callers that care downcast with `err.downcast_ref::<ConfigError>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// A `[section]` or `[[array]]` header missing its closing
+    /// bracket(s).
+    UnclosedHeader {
+        /// 1-based line number.
+        line: usize,
+        /// The offending line (comment-stripped, trimmed).
+        text: String,
+    },
+    /// A header with an empty section name (`[]`, `[[ ]]`).
+    EmptyHeader {
+        /// 1-based line number.
+        line: usize,
+        /// The offending line (comment-stripped, trimmed).
+        text: String,
+    },
+    /// A `key = value` line whose value does not parse.
+    BadValue {
+        /// 1-based line number.
+        line: usize,
+        /// The offending line (comment-stripped, trimmed).
+        text: String,
+        /// Why the value failed (unterminated string/array, not a
+        /// number, …).
+        reason: String,
+    },
+    /// A non-blank line that is neither a header nor a `key = value`
+    /// entry.
+    NotAnEntry {
+        /// 1-based line number.
+        line: usize,
+        /// The offending line (comment-stripped, trimmed).
+        text: String,
+    },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnclosedHeader { line, text } => {
+                write!(f, "config line {line}: unclosed section header {text:?}")
+            }
+            ConfigError::EmptyHeader { line, text } => {
+                write!(f, "config line {line}: empty section name in {text:?}")
+            }
+            ConfigError::BadValue { line, text, reason } => {
+                write!(f, "config line {line}: {reason} in {text:?}")
+            }
+            ConfigError::NotAnEntry { line, text } => {
+                write!(
+                    f,
+                    "config line {line}: expected `[section]`, `[[array]]` or \
+                     `key = value`, got {text:?}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A configuration value.
 #[derive(Debug, Clone, PartialEq)]
@@ -145,18 +213,52 @@ impl Config {
             if line.is_empty() {
                 continue;
             }
-            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            // Every error below is a typed ConfigError carrying the
+            // 1-based line and the offending (trimmed) text.
+            let at = lineno + 1;
+            if line.starts_with("[[") {
+                let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]"))
+                else {
+                    return Err(anyhow::Error::new(ConfigError::UnclosedHeader {
+                        line: at,
+                        text: line.to_string(),
+                    }));
+                };
                 let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(anyhow::Error::new(ConfigError::EmptyHeader {
+                        line: at,
+                        text: line.to_string(),
+                    }));
+                }
                 cfg.arrays.entry(name.clone()).or_default().push(Table::default());
                 target = Target::ArrayLast(name);
-            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            } else if line.starts_with('[') {
+                let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+                else {
+                    return Err(anyhow::Error::new(ConfigError::UnclosedHeader {
+                        line: at,
+                        text: line.to_string(),
+                    }));
+                };
                 let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(anyhow::Error::new(ConfigError::EmptyHeader {
+                        line: at,
+                        text: line.to_string(),
+                    }));
+                }
                 cfg.tables.entry(name.clone()).or_default();
                 target = Target::Table(name);
             } else if let Some((k, v)) = line.split_once('=') {
                 let key = k.trim().to_string();
-                let val = parse_value(v.trim())
-                    .with_context(|| format!("config line {}: {raw:?}", lineno + 1))?;
+                let val = parse_value(v.trim()).map_err(|reason| {
+                    anyhow::Error::new(ConfigError::BadValue {
+                        line: at,
+                        text: line.to_string(),
+                        reason,
+                    })
+                })?;
                 let table = match &target {
                     Target::Root => &mut cfg.root,
                     Target::Table(name) => cfg.tables.get_mut(name).unwrap(),
@@ -166,7 +268,10 @@ impl Config {
                 };
                 table.entries.insert(key, val);
             } else {
-                bail!("config line {}: cannot parse {raw:?}", lineno + 1);
+                return Err(anyhow::Error::new(ConfigError::NotAnEntry {
+                    line: at,
+                    text: line.to_string(),
+                }));
             }
         }
         Ok(cfg)
@@ -198,10 +303,12 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn parse_value(s: &str) -> Result<Value> {
+/// Parse one value; the `Err` carries the *reason* (the caller wraps it
+/// in a [`ConfigError::BadValue`] with the line and source text).
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
     if s.starts_with('"') {
         if !s.ends_with('"') || s.len() < 2 {
-            bail!("unterminated string: {s:?}");
+            return Err(format!("unterminated string {s:?}"));
         }
         return Ok(Value::Str(s[1..s.len() - 1].to_string()));
     }
@@ -213,7 +320,7 @@ fn parse_value(s: &str) -> Result<Value> {
     }
     if s.starts_with('[') {
         if !s.ends_with(']') {
-            bail!("unterminated array: {s:?}");
+            return Err(format!("unterminated array {s:?}"));
         }
         let inner = &s[1..s.len() - 1];
         let mut out = Vec::new();
@@ -227,7 +334,7 @@ fn parse_value(s: &str) -> Result<Value> {
     }
     s.parse::<f64>()
         .map(Value::Num)
-        .map_err(|_| anyhow::anyhow!("cannot parse value {s:?}"))
+        .map_err(|_| format!("cannot parse value {s:?}"))
 }
 
 fn split_top_level(s: &str) -> Vec<&str> {
@@ -299,6 +406,75 @@ mod tests {
         assert!(Config::parse("???").is_err());
         assert!(Config::parse("a = [1, 2").is_err());
         assert!(Config::parse("a = \"unterminated").is_err());
+    }
+
+    /// Errors are typed and carry the 1-based line plus the offending
+    /// text — the downcast is the contract `tf2aif apply` relies on to
+    /// point at a bad manifest line.
+    #[test]
+    fn malformed_header_carries_line_and_text() {
+        let err = Config::parse("a = 1\n[unclosed\n").unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<ConfigError>().unwrap(),
+            ConfigError::UnclosedHeader { line: 2, text: "[unclosed".to_string() }
+        );
+        let err = Config::parse("[[site]").unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<ConfigError>().unwrap(),
+            ConfigError::UnclosedHeader { line: 1, text: "[[site]".to_string() }
+        );
+        let err = Config::parse("\n[ ]").unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<ConfigError>().unwrap(),
+            ConfigError::EmptyHeader { line: 2, text: "[ ]".to_string() }
+        );
+    }
+
+    #[test]
+    fn malformed_value_carries_line_text_and_reason() {
+        let err = Config::parse("ok = 1\n\nk = @@@").unwrap_err();
+        match err.downcast_ref::<ConfigError>().unwrap() {
+            ConfigError::BadValue { line, text, reason } => {
+                assert_eq!(*line, 3);
+                assert_eq!(text, "k = @@@");
+                assert!(reason.contains("@@@"), "reason names the value: {reason}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        let err = Config::parse("s = \"open").unwrap_err();
+        match err.downcast_ref::<ConfigError>().unwrap() {
+            ConfigError::BadValue { line: 1, reason, .. } => {
+                assert!(reason.contains("unterminated string"), "{reason}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_array_carries_line_and_reason() {
+        let err = Config::parse("a = [1, 2").unwrap_err();
+        match err.downcast_ref::<ConfigError>().unwrap() {
+            ConfigError::BadValue { line: 1, reason, .. } => {
+                assert!(reason.contains("unterminated array"), "{reason}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        // A bad element inside a well-bracketed array surfaces the
+        // element's reason, still pinned to the array's line.
+        let err = Config::parse("x = 0\na = [1, oops]").unwrap_err();
+        match err.downcast_ref::<ConfigError>().unwrap() {
+            ConfigError::BadValue { line: 2, reason, .. } => {
+                assert!(reason.contains("oops"), "{reason}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        let err = Config::parse("stray").unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<ConfigError>().unwrap(),
+            ConfigError::NotAnEntry { line: 1, text: "stray".to_string() }
+        );
+        // Display renders the location for human eyes too.
+        assert!(format!("{err:#}").contains("config line 1"));
     }
 
     #[test]

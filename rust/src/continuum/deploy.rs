@@ -28,7 +28,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
@@ -36,7 +36,10 @@ use crate::artifact::Artifact;
 use crate::backend::{Backend, Policy};
 use crate::cluster::Cluster;
 use crate::fabric::sim::{synthetic_catalog_for, Gate};
-use crate::fabric::{AutoscaleConfig, Fabric, FabricConfig, Outcome, PodReport, Submission};
+use crate::fabric::{
+    AutoscaleConfig, Fabric, FabricConfig, Outcome, PodReport, Submission, TenancyError,
+    DEFAULT_TENANT,
+};
 use crate::metrics::FeedbackStore;
 use crate::platform;
 use crate::util::rng::Rng;
@@ -245,6 +248,9 @@ pub struct ContinuumOrchestrator {
     epoch: Instant,
     /// Reports of lost sites, frozen at loss time.
     frozen: Vec<SiteRunReport>,
+    /// Generation of the deployment manifest currently applied (the
+    /// config plane's bookkeeping — see [`crate::manifest`]).
+    applied_generation: u64,
 }
 
 impl ContinuumOrchestrator {
@@ -353,6 +359,7 @@ impl ContinuumOrchestrator {
             shed_total: 0,
             epoch: Instant::now(),
             frozen: Vec::new(),
+            applied_generation: 1,
         })
     }
 
@@ -402,6 +409,21 @@ impl ContinuumOrchestrator {
         model: &str,
         payload: impl Into<Arc<[f32]>>,
     ) -> Result<ContinuumSubmission> {
+        self.submit_as(DEFAULT_TENANT, model, payload)
+    }
+
+    /// [`submit`](Self::submit) on behalf of a named tenant: every
+    /// candidate site's fabric checks the tenant's quota and lane
+    /// before admitting, so a per-tenant token bucket shapes the
+    /// tenant's traffic continuum-wide (each site holds its own
+    /// bucket).  An unknown tenant is a typed error surfaced from the
+    /// first ranked site — never a silent shed.
+    pub fn submit_as(
+        &mut self,
+        tenant: &str,
+        model: &str,
+        payload: impl Into<Arc<[f32]>>,
+    ) -> Result<ContinuumSubmission> {
         let payload: Arc<[f32]> = payload.into();
         // Disjoint field borrows: the plan and loss set are read while
         // the site map is mutated, so candidates are plain references —
@@ -423,7 +445,7 @@ impl ContinuumOrchestrator {
             let Some(rt) = sites.get_mut(&p.site) else { continue };
             // Zero-copy re-routing: every candidate in the spill chain
             // shares the same payload allocation by refcount.
-            match rt.fabric.submit(model, Arc::clone(&payload)) {
+            match rt.fabric.submit_as(tenant, model, Arc::clone(&payload)) {
                 Ok(Submission::Enqueued(rx)) => {
                     rt.admitted += 1;
                     if spilled {
@@ -438,6 +460,17 @@ impl ContinuumOrchestrator {
                     break;
                 }
                 Ok(Submission::Shed) => spilled = true,
+                // An unknown tenant is a caller error, not a routing
+                // outcome — spilling it onward would just repeat the
+                // same rejection at every site.
+                Err(e)
+                    if matches!(
+                        e.downcast_ref::<TenancyError>(),
+                        Some(TenancyError::UnknownTenant(_))
+                    ) =>
+                {
+                    return Err(e);
+                }
                 // A post-replan site that never hosted this model: not
                 // spillover, just not a candidate.
                 Err(_) => {}
@@ -867,6 +900,107 @@ impl ContinuumOrchestrator {
             ));
         }
         rows
+    }
+
+    // -- live reconcile primitives (the `tf2aif apply` config plane) --
+
+    /// Generation of the deployment manifest currently applied (starts
+    /// at 1 for the deploying manifest; see [`crate::manifest`]).
+    pub fn applied_generation(&self) -> u64 {
+        self.applied_generation
+    }
+
+    /// Record that manifest generation `generation` is now applied —
+    /// called by [`crate::manifest::reconcile`] after a convergence
+    /// pass.  Pure bookkeeping: stamping the current value again is not
+    /// a mutation of serving state.
+    pub fn set_applied_generation(&mut self, generation: u64) {
+        self.applied_generation = generation;
+    }
+
+    /// Live-edit a tenant's rate quota on every site's fabric (each
+    /// site holds its own token bucket, so the edit reshapes them all).
+    /// See [`Fabric::set_tenant_quota`] for the bucket semantics.
+    pub fn set_tenant_quota(
+        &self,
+        tenant: &str,
+        rate_rps: Option<f64>,
+        burst: f64,
+    ) -> Result<()> {
+        for (name, rt) in &self.sites {
+            rt.fabric
+                .set_tenant_quota(tenant, rate_rps, burst)
+                .with_context(|| format!("site {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Live-edit a tenant's p99 SLO on every site's fabric — batches
+    /// dominated by the tenant back off against the new target from
+    /// the next controller cycle.  See [`Fabric::set_tenant_slo`].
+    pub fn set_tenant_slo(&self, tenant: &str, slo_p99_ms: Option<f64>) -> Result<()> {
+        for (name, rt) in &self.sites {
+            rt.fabric
+                .set_tenant_slo(tenant, slo_p99_ms)
+                .with_context(|| format!("site {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Live-edit the response-cache TTL on every site's fabric.
+    /// Returns `true` when at least one site has a cache to retune.
+    pub fn set_cache_ttl(&self, ttl: Duration) -> bool {
+        let mut any = false;
+        for rt in self.sites.values() {
+            any |= rt.fabric.set_cache_ttl(ttl);
+        }
+        any
+    }
+
+    /// Live-edit the autoscaler's replica bounds on every site's
+    /// fabric.  Errors when a site was deployed without a scaler or
+    /// the bounds are invalid — nothing is partially applied beyond
+    /// the sites already visited (all sites share one deploy config,
+    /// so in practice the first site decides).
+    pub fn set_autoscale_bounds(&self, min_replicas: usize, max_replicas: usize) -> Result<()> {
+        for (name, rt) in &self.sites {
+            rt.fabric
+                .set_autoscale_bounds(min_replicas, max_replicas)
+                .with_context(|| format!("site {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Rolling artifact redeploy: walk the sites in deterministic
+    /// (alphabetical) order and fire [`Fabric::on_artifact_redeploy`]
+    /// on every fabric serving `model`, so no stale cached response or
+    /// in-flight dedup memo survives the version bump.  Admitted work
+    /// is untouched — callers already holding receivers still get
+    /// their outcomes.  Returns the number of sites rolled.
+    pub fn redeploy_artifact(&self, model: &str) -> usize {
+        let mut rolled = 0;
+        for rt in self.sites.values() {
+            if rt.fabric.models().iter().any(|m| m == model) {
+                rt.fabric.on_artifact_redeploy(model);
+                rolled += 1;
+            }
+        }
+        rolled
+    }
+
+    /// Switch the planner objective and replan placements over the
+    /// current survivors.  Routing re-ranks under the new objective;
+    /// site fabrics keep serving untouched (their spawn-time backend
+    /// policy is structural), and models whose primary moved get the
+    /// usual rolling cache invalidation on the takeover site.  A no-op
+    /// when the objective already matches.
+    pub fn set_objective(&mut self, objective: PlanPolicy) -> Result<()> {
+        if self.policy == objective {
+            return Ok(());
+        }
+        let old = self.policy;
+        self.policy = objective;
+        self.replan(format!("objective {old} -> {objective}"))
     }
 
     /// Shut every surviving site's fabric down (queues closed, admitted

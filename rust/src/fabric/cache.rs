@@ -108,7 +108,10 @@ struct CacheInner {
 /// worker (workers insert on delivery, the router consults on submit).
 pub struct ResponseCache {
     capacity: usize,
-    ttl: Duration,
+    /// Entry lifetime in nanoseconds, atomic so `tf2aif apply` can
+    /// retune it on a running fabric ([`set_ttl`](Self::set_ttl))
+    /// without readers taking any lock: lookups load it once per call.
+    ttl_ns: AtomicU64,
     inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -124,7 +127,7 @@ impl ResponseCache {
         assert!(capacity > 0, "cache capacity must be positive");
         ResponseCache {
             capacity,
-            ttl,
+            ttl_ns: AtomicU64::new(ttl.as_nanos().min(u64::MAX as u128) as u64),
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
                 order: VecDeque::new(),
@@ -142,7 +145,17 @@ impl ResponseCache {
 
     /// The TTL entries live for.
     pub fn ttl(&self) -> Duration {
-        self.ttl
+        Duration::from_nanos(self.ttl_ns.load(Ordering::Relaxed))
+    }
+
+    /// Live TTL edit (the reconciler's hook).  Takes effect on the next
+    /// lookup: existing entries are judged against the *new* lifetime,
+    /// so shrinking the TTL immediately expires anything older than the
+    /// new bound and growing it revives nothing that was already
+    /// removed.
+    pub fn set_ttl(&self, ttl: Duration) {
+        self.ttl_ns
+            .store(ttl.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
     }
 
     /// Current redeploy generation of `model` (0 until the first
@@ -212,7 +225,7 @@ impl ResponseCache {
                             removed = true;
                             Err(Miss::Invalidated)
                         }
-                        Some(i) if now.duration_since(bucket[i].stored) <= self.ttl => {
+                        Some(i) if now.duration_since(bucket[i].stored) <= self.ttl() => {
                             Ok(bucket[i].resp.clone())
                         }
                         Some(i) => {
@@ -395,7 +408,7 @@ impl ResponseCache {
                 bucket.iter().filter_map(move |e| {
                     if e.model == model
                         && e.model_gen == current
-                        && now.duration_since(e.stored) <= self.ttl
+                        && now.duration_since(e.stored) <= self.ttl()
                     {
                         Some(CacheExport {
                             pre: *pre,
@@ -431,7 +444,7 @@ impl ResponseCache {
         let current = self.generation(model);
         let mut stored = 0usize;
         for e in entries {
-            if e.age > self.ttl {
+            if e.age > self.ttl() {
                 continue; // already dead in transit
             }
             let born = now.checked_sub(e.age).unwrap_or(now);
@@ -502,6 +515,27 @@ mod tests {
         );
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.expired, s.entries), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn live_ttl_edit_applies_to_existing_entries() {
+        let c = ResponseCache::new(4, Duration::from_millis(100));
+        let t0 = Instant::now();
+        c.insert_at(key(1), sha(1), M, 0, resp(7), t0);
+        // Shrink the TTL live: the 50 ms-old entry is now past the
+        // 10 ms bound and expires on its next lookup.
+        c.set_ttl(Duration::from_millis(10));
+        assert_eq!(c.ttl(), Duration::from_millis(10));
+        assert!(
+            c.get_at(key(1), M, &mut || sha(1), t0 + Duration::from_millis(50)).is_none(),
+            "entries are judged against the NEW lifetime"
+        );
+        // Grow it live: a fresh entry is served across the old bound.
+        c.set_ttl(Duration::from_secs(60));
+        c.insert_at(key(2), sha(2), M, 0, resp(8), t0);
+        assert!(c
+            .get_at(key(2), M, &mut || sha(2), t0 + Duration::from_secs(30))
+            .is_some());
     }
 
     #[test]

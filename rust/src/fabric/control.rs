@@ -105,6 +105,21 @@ impl TokenBucket {
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
+
+    /// Re-shape the bucket in place — the live-reconfiguration hook
+    /// (`tf2aif apply` quota edits).  The refill high-water mark and
+    /// the `Instant` epoch are kept, so the never-refill-retroactively
+    /// guarantee survives the edit: the new rate applies only to time
+    /// that has not been credited yet.  Accrued tokens are clamped to
+    /// the new burst (shrinking a quota also revokes its unspent
+    /// allowance above the new ceiling).
+    pub fn set_rate(&mut self, rate_per_s: f64, burst: f64) {
+        assert!(rate_per_s > 0.0, "token rate must be positive");
+        assert!(burst >= 1.0, "burst must admit at least one request");
+        self.rate_per_s = rate_per_s;
+        self.burst = burst;
+        self.tokens = self.tokens.min(burst);
+    }
 }
 
 /// Observations an [`ArrivalRate`] needs before it reports a rate —
@@ -515,6 +530,24 @@ mod tests {
         assert!(!b.try_take_at_s(0.1), "the interval cannot be credited twice");
         let admitted = (0..5).filter(|_| b.try_take_at_s(60.0)).count();
         assert_eq!(admitted, 2, "long idle refills to the burst cap only");
+    }
+
+    #[test]
+    fn token_bucket_set_rate_preserves_refill_clock() {
+        let mut b = TokenBucket::new(1.0, 4.0);
+        assert!(b.try_take_at_s(0.0));
+        // Shrinking the burst revokes accrued tokens above the new cap.
+        b.set_rate(10.0, 2.0);
+        let admitted = (0..5).filter(|_| b.try_take_at_s(0.0)).count();
+        assert_eq!(admitted, 2, "tokens clamp to the new burst");
+        // The refill high-water mark survives the edit: the new rate
+        // credits only time not yet earned, at the NEW rate.
+        assert!(b.try_take_at_s(0.1), "100 ms at the new 10/s refills one");
+        assert!(!b.try_take_at_s(0.1));
+        // A raise mid-flight never mints retroactive tokens either.
+        b.set_rate(1000.0, 2.0);
+        assert!(!b.try_take_at_s(0.1), "no credit for already-earned time");
+        assert!(b.try_take_at_s(0.101), "fresh time refills at the new rate");
     }
 
     fn ctl(max: usize, slo: f64) -> BatchController {

@@ -97,7 +97,7 @@ pub mod tenancy;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -669,10 +669,70 @@ struct ModelScale {
     windowed_pressure: f64,
 }
 
+/// Bit pattern marking an unset lane SLO inside [`LaneSlos`].  It is a
+/// NaN encoding, and configured SLOs are validated strictly positive,
+/// so no real override can collide with it.
+const SLO_NONE: u64 = u64::MAX;
+
+/// Per-lane SLO overrides as live atomics (f64 bit patterns;
+/// [`SLO_NONE`] = no override).  Workers read the slots per drained
+/// batch, so a `tf2aif apply` SLO edit reaches the batch controllers
+/// on the very next cycle — no republish, no restart.  The `active`
+/// counter preserves the fast path: with zero overrides configured,
+/// workers skip dominant-lane resolution entirely, exactly as the old
+/// spawn-time `slos_active` check did.
+struct LaneSlos {
+    slots: Vec<AtomicU64>,
+    active: AtomicUsize,
+}
+
+impl LaneSlos {
+    fn new(slos: Vec<Option<f64>>) -> LaneSlos {
+        let active = slos.iter().filter(|s| s.is_some()).count();
+        LaneSlos {
+            slots: slos
+                .iter()
+                .map(|s| AtomicU64::new(s.map_or(SLO_NONE, f64::to_bits)))
+                .collect(),
+            active: AtomicUsize::new(active),
+        }
+    }
+
+    /// The lane's current override, if any.
+    fn get(&self, lane: usize) -> Option<f64> {
+        let bits = self.slots.get(lane)?.load(Ordering::Relaxed);
+        (bits != SLO_NONE).then(|| f64::from_bits(bits))
+    }
+
+    /// Whether any lane currently carries an override.
+    fn any_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed) > 0
+    }
+
+    /// Install, change or clear one lane's override.
+    fn set(&self, lane: usize, slo: Option<f64>) {
+        let Some(slot) = self.slots.get(lane) else { return };
+        let new = slo.map_or(SLO_NONE, f64::to_bits);
+        let old = slot.swap(new, Ordering::Relaxed);
+        match (old != SLO_NONE, new != SLO_NONE) {
+            (false, true) => {
+                self.active.fetch_add(1, Ordering::Relaxed);
+            }
+            (true, false) => {
+                self.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Autoscaler state: its own (feedback-blended) placement backend plus
 /// hysteresis counters and the scale-event log.
 struct ScalerState {
-    auto: AutoscaleConfig,
+    /// Bounds + cadence, behind a mutex so `tf2aif apply` can retune
+    /// min/max replicas live (the tick clones it once per step; the
+    /// spawn-time thread interval is read once and is not live-tunable).
+    auto: Mutex<AutoscaleConfig>,
     backend: Backend,
     per_model: Mutex<BTreeMap<String, ModelScale>>,
     events: Mutex<Vec<ScaleEvent>>,
@@ -702,9 +762,10 @@ struct FabricInner {
     /// tenant registry and `queue_capacity`; reused at scale-up).
     lanes: Vec<LaneConfig>,
     /// Per-lane SLO overrides: a drained batch dominated by lane `i`
-    /// backs its pod's adaptive controller off against `lane_slos[i]`
-    /// (when set) instead of the fabric-wide `slo_p99_ms`.
-    lane_slos: Vec<Option<f64>>,
+    /// backs its pod's adaptive controller off against the lane's
+    /// override (when set) instead of the fabric-wide `slo_p99_ms`.
+    /// Live atomics — see [`LaneSlos`].
+    lane_slos: LaneSlos,
     /// Per-model offered-arrival EWMAs (every submission counts, admitted
     /// or not) — the predictive autoscaler's demand signal.  Built once
     /// at spawn (the model set is fixed; the autoscaler only adds
@@ -947,7 +1008,7 @@ impl Fabric {
         // surfaces here as a typed error, before any thread spawns.
         let tenants = TenantRegistry::build(&cfg.tenants).map_err(anyhow::Error::new)?;
         let lanes = tenants.lane_configs(cfg.queue_capacity);
-        let lane_slos = tenants.lane_slos();
+        let lane_slos = LaneSlos::new(tenants.lane_slos());
         let feedback = Arc::new(FeedbackStore::new(cfg.feedback_alpha));
         let cache = (cfg.cache_capacity > 0).then(|| {
             Arc::new(ResponseCache::new(
@@ -969,7 +1030,7 @@ impl Fabric {
             backend.predictor = env.predictor.clone();
             backend.feedback = Some(Arc::clone(&feedback));
             ScalerState {
-                auto,
+                auto: Mutex::new(auto),
                 backend,
                 per_model: Mutex::new(BTreeMap::new()),
                 events: Mutex::new(Vec::new()),
@@ -1042,7 +1103,8 @@ impl Fabric {
         for pod in &initial.pods {
             start_workers(&inner, pod);
         }
-        let interval_ms = inner.scaler.as_ref().map_or(0, |sc| sc.auto.interval_ms);
+        let interval_ms =
+            inner.scaler.as_ref().map_or(0, |sc| sc.auto.lock().unwrap().interval_ms);
         let scaler_thread = (interval_ms > 0).then(|| {
             let inner = Arc::clone(&inner);
             let interval = Duration::from_millis(interval_ms);
@@ -1158,6 +1220,104 @@ impl Fabric {
             bucket.retain(|fan| fan.model != model);
         }
         dedup.retain(|_, bucket| !bucket.is_empty());
+    }
+
+    /// Live-edit a tenant's rate quota without restarting the fabric.
+    /// `Some(rate)` installs or reshapes the tenant's token bucket
+    /// (already-accrued tokens are clamped to the new burst and the
+    /// refill clock is preserved — the edit never mints retroactive
+    /// credit); `None` removes the quota so the tenant is admitted
+    /// unconditionally.  In-flight and queued requests are untouched.
+    /// Unknown tenants and non-positive rates are typed errors
+    /// ([`TenancyError`], downcastable).
+    pub fn set_tenant_quota(
+        &self,
+        tenant: &str,
+        rate_rps: Option<f64>,
+        burst: f64,
+    ) -> Result<()> {
+        if let Some(rate) = rate_rps {
+            if rate <= 0.0 {
+                return Err(anyhow::Error::new(TenancyError::ZeroQuota(tenant.to_string())));
+            }
+            if burst < 1.0 {
+                return Err(anyhow::Error::new(TenancyError::Malformed {
+                    entry: tenant.to_string(),
+                    reason: format!("burst {burst} must admit at least one request"),
+                }));
+            }
+        }
+        let t = self
+            .inner
+            .tenants
+            .get(tenant)
+            .ok_or_else(|| anyhow::Error::new(TenancyError::UnknownTenant(tenant.to_string())))?
+            .clone();
+        t.set_quota(rate_rps, burst);
+        Ok(())
+    }
+
+    /// Live-edit a tenant's p99 latency SLO.  `Some(ms)` (strictly
+    /// positive) makes batches dominated by this tenant back off
+    /// against the new target from the next controller cycle;
+    /// `None` clears the override so the global feedback target
+    /// applies again.  Workers observe the edit without restarting —
+    /// the per-lane slot is a lock-free atomic.
+    pub fn set_tenant_slo(&self, tenant: &str, slo_p99_ms: Option<f64>) -> Result<()> {
+        if let Some(slo) = slo_p99_ms {
+            if slo <= 0.0 {
+                return Err(anyhow::Error::new(TenancyError::Malformed {
+                    entry: tenant.to_string(),
+                    reason: format!("slo_ms {slo} must be positive"),
+                }));
+            }
+        }
+        let lane = self
+            .inner
+            .tenants
+            .get(tenant)
+            .ok_or_else(|| anyhow::Error::new(TenancyError::UnknownTenant(tenant.to_string())))?
+            .lane;
+        self.inner.lane_slos.set(lane, slo_p99_ms);
+        Ok(())
+    }
+
+    /// Live-edit the response cache's freshness TTL.  Takes effect on
+    /// the next lookup: a shorter TTL immediately expires entries that
+    /// were stored under the longer one.  Returns `false` (and does
+    /// nothing) when the fabric was built without a cache —
+    /// `cache_capacity: 0` — so callers can surface the no-op instead
+    /// of silently accepting a dead knob.
+    pub fn set_cache_ttl(&self, ttl: Duration) -> bool {
+        match &self.inner.cache {
+            Some(cache) => {
+                cache.set_ttl(ttl);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Live-edit the autoscaler's replica bounds.  The next
+    /// [`autoscale_tick`](Self::autoscale_tick) (or background scaler
+    /// cycle) plans against the new envelope: a fleet above
+    /// `max_replicas` scales down on the usual hysteresis schedule,
+    /// never abruptly.  Errors when the fabric has no autoscaler or
+    /// the bounds are inverted/zero.
+    pub fn set_autoscale_bounds(&self, min_replicas: usize, max_replicas: usize) -> Result<()> {
+        if min_replicas == 0 || max_replicas < min_replicas {
+            bail!(
+                "autoscale bounds must satisfy 1 <= min <= max \
+                 (got min={min_replicas} max={max_replicas})"
+            );
+        }
+        let Some(sc) = &self.inner.scaler else {
+            bail!("fabric has no autoscaler (spawn with FabricConfig.autoscale)");
+        };
+        let mut auto = sc.auto.lock().unwrap();
+        auto.min_replicas = min_replicas;
+        auto.max_replicas = max_replicas;
+        Ok(())
     }
 
     /// Total shed requests so far (quota + capacity + preemptions).
@@ -1717,9 +1877,6 @@ impl FabricInner {
     fn worker_loop(&self, pod: &Arc<PodRuntime>) {
         let linger = Duration::from_secs_f64(self.cfg.batch_linger_ms.max(0.0) / 1e3);
         let max_batch = self.cfg.max_batch.max(1);
-        // Dominant-tenant resolution is only worth the per-batch count
-        // when some tenant actually carries an SLO override.
-        let slos_active = self.lane_slos.iter().any(Option::is_some);
         // One clone up front: the executor slot is emptied only after
         // every worker has been joined, so a running worker always
         // owns a live handle without re-locking per batch.
@@ -1739,10 +1896,12 @@ impl FabricInner {
             };
             let drained = batch.len();
             // Per-tenant SLOs: the batch's dominant tenant decides the
-            // target the controller backs off against this cycle.
-            let slo_override = if slos_active {
-                dominant_lane(&batch)
-                    .and_then(|lane| self.lane_slos.get(lane).copied().flatten())
+            // target the controller backs off against this cycle.  The
+            // check is per batch (not hoisted) because `tf2aif apply`
+            // can edit SLOs while workers run; the `any_active` counter
+            // keeps the no-override fast path a single atomic load.
+            let slo_override = if self.lane_slos.any_active() {
+                dominant_lane(&batch).and_then(|lane| self.lane_slos.get(lane))
             } else {
                 None
             };
@@ -2223,7 +2382,7 @@ const PRESSURE_OVERLOAD: f64 = 1.0;
 fn autoscale_tick(inner: &Arc<FabricInner>) {
     let Some(sc) = &inner.scaler else { return };
     inner.reap_retired();
-    let a = sc.auto.clone();
+    let a = sc.auto.lock().unwrap().clone();
     let models: Vec<String> = inner.registry.load().by_model.keys().cloned().collect();
     for model in models {
         let (active, backlog_sum, est_sum_ms) = {

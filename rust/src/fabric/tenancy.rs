@@ -316,6 +316,75 @@ pub fn parse_tenant_specs(
     Ok(out)
 }
 
+/// Build tenant specs from manifest `[[tenant]]` tables (the
+/// declarative path of `tf2aif apply`).  Each table is *compiled to
+/// the `--tenants` grammar* and the result handed to
+/// [`parse_tenant_specs`] — one grammar, one validator, and the CLI
+/// and manifest paths can never drift.  Recognized keys: `name`
+/// (required string), `weight`, `priority`, `rate`, `burst`, `share`,
+/// `slo_ms`; anything else is a typed [`TenancyError::Malformed`],
+/// matching the grammar's unknown-field rejection.
+pub fn tenant_specs_from_tables(
+    tables: &[crate::config::Table],
+) -> Result<Vec<TenantSpec>, TenancyError> {
+    if tables.is_empty() {
+        return Err(TenancyError::EmptySpec);
+    }
+    let mut entries: Vec<String> = Vec::with_capacity(tables.len());
+    for t in tables {
+        let name = t
+            .entries
+            .get("name")
+            .and_then(|v| v.str().ok())
+            .map(str::trim)
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| TenancyError::Malformed {
+                entry: "[[tenant]]".to_string(),
+                reason: "tenant table needs a non-empty string `name`".to_string(),
+            })?;
+        // The compiled grammar uses `:`, `,` and `=` as separators, so a
+        // name carrying them cannot round-trip — reject it up front.
+        if name.contains([':', ',', '=']) {
+            return Err(TenancyError::Malformed {
+                entry: name.to_string(),
+                reason: "tenant name must not contain ':', ',' or '='".to_string(),
+            });
+        }
+        let mut compiled = name.to_string();
+        for (key, value) in &t.entries {
+            let bad = |reason: String| TenancyError::Malformed {
+                entry: name.to_string(),
+                reason,
+            };
+            match key.as_str() {
+                "name" => {}
+                "priority" => {
+                    let p = value
+                        .str()
+                        .map_err(|_| bad("priority must be a string".to_string()))?;
+                    compiled.push_str(&format!(":p={p}"));
+                }
+                "weight" | "rate" | "burst" | "share" | "slo_ms" => {
+                    let n = value
+                        .f64()
+                        .map_err(|_| bad(format!("{key} must be a number")))?;
+                    let field = match key.as_str() {
+                        "weight" => "w",
+                        "slo_ms" => "slo",
+                        other => other,
+                    };
+                    compiled.push_str(&format!(":{field}={n}"));
+                }
+                other => {
+                    return Err(bad(format!("unknown [[tenant]] key {other:?}")));
+                }
+            }
+        }
+        entries.push(compiled);
+    }
+    parse_tenant_specs(&entries.join(","), None, 1.0)
+}
+
 /// Apply `--tenant-slo` overrides (`NAME:MS[,NAME:MS]...`) onto parsed
 /// specs.  Every named tenant must already exist in `specs` (the
 /// override attaches an SLO to a configured tenant, it does not invent
@@ -354,20 +423,39 @@ pub(crate) struct TenantState {
     pub(crate) spec: TenantSpec,
     /// Lane index of this tenant in every pod's `TenantQueue`.
     pub(crate) lane: usize,
-    bucket: Option<Mutex<TokenBucket>>,
+    /// Live token bucket (`None` = unlimited).  The slot sits behind
+    /// the mutex — not the other way round — so `tf2aif apply` can
+    /// install, re-shape or remove a quota on a running fabric without
+    /// republishing any tenant state.
+    bucket: Mutex<Option<TokenBucket>>,
     pub(crate) stats: TenantCollector,
 }
 
 impl TenantState {
     fn new(spec: TenantSpec, lane: usize) -> TenantState {
         let bucket =
-            spec.rate_rps.map(|rate| Mutex::new(TokenBucket::new(rate, spec.burst)));
+            Mutex::new(spec.rate_rps.map(|rate| TokenBucket::new(rate, spec.burst)));
         TenantState { spec, lane, bucket, stats: TenantCollector::default() }
     }
 
     /// Take one quota token; `true` for unlimited tenants.
     pub(crate) fn try_admit_quota(&self) -> bool {
-        self.bucket.as_ref().map_or(true, |b| b.lock().unwrap().try_take())
+        self.bucket.lock().unwrap().as_mut().map_or(true, |b| b.try_take())
+    }
+
+    /// Live quota edit (the reconciler's hook): `Some(rate)` re-shapes
+    /// an existing bucket in place — keeping its refill clock, so the
+    /// edit can never mint retroactive tokens — or installs a fresh one
+    /// on a previously unlimited tenant; `None` removes the quota.
+    /// Callers validate `rate > 0` and `burst >= 1` first (the bucket
+    /// asserts the same invariants).
+    pub(crate) fn set_quota(&self, rate_rps: Option<f64>, burst: f64) {
+        let mut slot = self.bucket.lock().unwrap();
+        match (slot.as_mut(), rate_rps) {
+            (Some(b), Some(rate)) => b.set_rate(rate, burst),
+            (None, Some(rate)) => *slot = Some(TokenBucket::new(rate, burst)),
+            (_, None) => *slot = None,
+        }
     }
 }
 
@@ -724,6 +812,79 @@ mod tests {
             parse_tenant_specs("a:slo=0", None, 1.0),
             Err(TenancyError::Malformed { .. }),
         ), "a zero SLO is a config error");
+    }
+
+    #[test]
+    fn tenant_tables_share_the_cli_grammar() {
+        // `[[tenant]]` manifest tables compile onto the --tenants
+        // grammar — same fields, same validator, same typed errors.
+        let cfg = crate::config::Config::parse(
+            "[[tenant]]\nname = \"gold\"\nweight = 4\npriority = \"high\"\n\
+             rate = 100\nburst = 20\nshare = 0.5\nslo_ms = 12.5\n\
+             [[tenant]]\nname = \"free\"\npriority = \"low\"\n",
+        )
+        .unwrap();
+        let specs = tenant_specs_from_tables(cfg.array("tenant")).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, "gold");
+        assert_eq!(specs[0].weight, 4);
+        assert_eq!(specs[0].priority, Priority::High);
+        assert_eq!(specs[0].rate_rps, Some(100.0));
+        assert_eq!(specs[0].burst, 20.0);
+        assert_eq!(specs[0].max_queue_share, 0.5);
+        assert_eq!(specs[0].slo_p99_ms, Some(12.5));
+        assert_eq!(specs[1].priority, Priority::Low);
+        assert_eq!(specs[1].rate_rps, None);
+
+        // Typed failures flow straight through the shared validator.
+        let bad = crate::config::Config::parse("[[tenant]]\nname = \"a\"\nrate = 0\n")
+            .unwrap();
+        assert_eq!(
+            tenant_specs_from_tables(bad.array("tenant")),
+            Err(TenancyError::ZeroQuota("a".into()))
+        );
+        let dup = crate::config::Config::parse(
+            "[[tenant]]\nname = \"a\"\n[[tenant]]\nname = \"a\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            tenant_specs_from_tables(dup.array("tenant")),
+            Err(TenancyError::DuplicateTenant("a".into()))
+        );
+        let unnamed = crate::config::Config::parse("[[tenant]]\nweight = 2\n").unwrap();
+        assert!(matches!(
+            tenant_specs_from_tables(unnamed.array("tenant")),
+            Err(TenancyError::Malformed { .. })
+        ));
+        let unknown = crate::config::Config::parse(
+            "[[tenant]]\nname = \"a\"\ncolor = \"red\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            tenant_specs_from_tables(unknown.array("tenant")),
+            Err(TenancyError::Malformed { .. })
+        ));
+        assert_eq!(tenant_specs_from_tables(&[]), Err(TenancyError::EmptySpec));
+    }
+
+    #[test]
+    fn live_quota_edit_reshapes_installs_and_removes() {
+        let mut spec = TenantSpec::new("t");
+        spec.rate_rps = Some(1.0);
+        spec.burst = 1.0;
+        let state = TenantState::new(spec, 0);
+        assert!(state.try_admit_quota(), "burst 1 admits one");
+        assert!(!state.try_admit_quota(), "then the 1 rps bucket is dry");
+        // Re-shape live: a deeper burst does not mint tokens (the
+        // refill clock survives), but the new rate applies to fresh time.
+        state.set_quota(Some(1000.0), 4.0);
+        // Removing the quota makes the tenant unlimited immediately…
+        state.set_quota(None, 1.0);
+        assert!((0..64).all(|_| state.try_admit_quota()));
+        // …and installing one restores enforcement at the new shape.
+        state.set_quota(Some(5.0), 2.0);
+        let admitted = (0..8).filter(|_| state.try_admit_quota()).count();
+        assert_eq!(admitted, 2, "fresh bucket admits exactly its burst");
     }
 
     #[test]

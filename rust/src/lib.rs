@@ -76,6 +76,7 @@ pub mod continuum;
 pub mod converter;
 pub mod coordinator;
 pub mod fabric;
+pub mod manifest;
 pub mod metrics;
 pub mod platform;
 pub mod registry;

@@ -12,6 +12,10 @@
 //! - `continuum` — multi-site orchestration: plan placements across
 //!   cloud/edge/far-edge sites under a latency/energy policy, route a
 //!   workload with spillover, kill sites mid-stream and replan.
+//! - `apply`    — declarative deployment: parse a versioned manifest,
+//!   `--plan` the canonical action diff against the applied state (exit
+//!   2 on drift), converge a live continuum `--from` the previous
+//!   manifest mid-traffic, `--watch` the file and re-converge on change.
 //! - `bench`    — fabric sweeps: fused vs per-item, adaptive vs fixed
 //!   batch sizing, fixed replicas vs autoscaler, tenancy fairness, and
 //!   the continuum scenario verdicts; writes `BENCH_fabric.json`.
@@ -20,7 +24,7 @@
 //! - `report`   — regenerate paper tables/figures (table1..3, fig3..5).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -39,8 +43,16 @@ use tf2aif::fabric::{
     sim, AutoscaleConfig, BreakerConfig, BrownoutConfig, Fabric, FabricConfig, Fault,
     FaultPlan, HedgePolicy, ResilienceConfig, RetryPolicy,
 };
+use tf2aif::manifest::canonical::{content_hash, render_json, sha256_hex};
+use tf2aif::manifest::diff::{diff, ConvergencePlan};
+use tf2aif::manifest::reconcile::{
+    deploy_manifest_sim, drive, reconcile, run_scenarios as run_manifest_scenarios, settle,
+    ApplyReport, DrivePhase,
+};
+use tf2aif::manifest::DeploymentManifest;
 use tf2aif::report;
 use tf2aif::runtime::Engine;
+use tf2aif::util::json::{self as json, Json};
 use tf2aif::serving::{AifServer, ImageClassify};
 use tf2aif::workload::{read_trace_csv, Arrival, RateCurve, TenantMix};
 use tf2aif::{artifact, ARTIFACTS_DIR};
@@ -99,6 +111,7 @@ fn run(args: &[String]) -> Result<()> {
         "cluster" => cmd_cluster(&flags),
         "fabric" => cmd_fabric(&flags),
         "continuum" => cmd_continuum(&flags),
+        "apply" => cmd_apply(&flags),
         "bench" => cmd_bench(&flags),
         "report" => cmd_report(&flags),
         "help" | "--help" | "-h" => {
@@ -144,6 +157,13 @@ fn print_usage() {
          [--trace-file CSV] [--duration S] [--fail-at-s S] [--recover-at-s S]\n           \
          [--faults PLAN] [--retry N] [--hedge-ms MS] [--breaker] [--brownout]\n           \
          [--report-out FILE]\n  \
+         apply    MANIFEST [--plan --against PREV] [--from PREV] [--requests N]\n           \
+         [--seed N] [--out FILE] [--watch] [--interval-ms MS] [--max-loops N]\n           \
+         (declarative deploy: --plan prints the canonical action diff vs the\n            \
+         applied manifest and exits 2 on drift; --from deploys PREV, drives\n            \
+         traffic, converges to MANIFEST mid-stream and proves re-apply is a\n            \
+         no-op; --watch polls the file and re-converges on change)\n  \
+         apply    --scenarios [--seed N]  (deterministic convergence verdicts)\n  \
          bench    [--batches 1,2,4,8] [--rates 500,2000,8000] [--requests N] [--models a,b]\n           \
          [--replicas N] [--queue N] [--workers N] [--time-scale F] [--pool N]\n           \
          [--slo MS] [--seed N] [--out FILE] [--fused-only]\n           \
@@ -1138,6 +1158,296 @@ fn cmd_continuum(flags: &Flags) -> Result<()> {
     }
     orch.shutdown();
     Ok(())
+}
+
+fn cmd_apply(flags: &Flags) -> Result<()> {
+    if flags.has("--scenarios") {
+        for key in
+            ["--plan", "--against", "--from", "--watch", "--out", "--requests", "--interval-ms", "--max-loops"]
+        {
+            if flags.has(key) {
+                bail!("{key} has no effect with --scenarios");
+            }
+        }
+        let seed = flags.usize_or("--seed", 0xA11)? as u64;
+        let v = run_manifest_scenarios(seed)?;
+        println!("manifest convergence scenarios (seed {seed}):");
+        println!("  roundtrip_stable   {}", yn(v.roundtrip_stable));
+        println!("  plan_matches       {} ({} actions)", yn(v.plan_matches), v.plan_actions);
+        println!("  quota_edit_live    {}", yn(v.quota_edit_live));
+        println!("  converge_accounted {}", yn(v.converge_accounted));
+        println!("  no_lost_admitted   {}", yn(v.no_lost_admitted));
+        println!("  reapply_noop       {}", yn(v.reapply_noop));
+        println!("  generation_tracks  {}", yn(v.generation_tracks));
+        let all = v.roundtrip_stable
+            && v.plan_matches
+            && v.quota_edit_live
+            && v.converge_accounted
+            && v.no_lost_admitted
+            && v.reapply_noop
+            && v.generation_tracks;
+        if !all {
+            bail!("manifest convergence scenarios failed: {v:?}");
+        }
+        return Ok(());
+    }
+
+    let path = match flags.args.first() {
+        Some(p) if !p.starts_with("--") => p.as_str(),
+        _ => bail!("apply needs a manifest path first: tf2aif apply MANIFEST [flags]"),
+    };
+
+    if flags.has("--plan") {
+        let Some(prev_path) = flags.get("--against") else {
+            bail!("--plan needs --against PREV (the manifest currently applied)");
+        };
+        for key in ["--from", "--watch", "--requests", "--seed", "--interval-ms", "--max-loops"] {
+            if flags.has(key) {
+                bail!("{key} has no effect with --plan");
+            }
+        }
+        let desired = DeploymentManifest::load(path)?;
+        let applied = DeploymentManifest::load(prev_path)?;
+        let plan = diff(&applied, &desired);
+        // Stdout is the plan and nothing else, so CI can `cmp` it
+        // against a checked-in golden byte-for-byte.
+        println!("{}", render_json(&plan.to_json()));
+        if let Some(out) = flags.get("--out") {
+            std::fs::write(out, format!("{}\n", render_json(&plan.to_json())))
+                .with_context(|| format!("writing {out}"))?;
+        }
+        if !plan.is_noop() {
+            // Drift is not an error, but it is not convergence either:
+            // exit 2 (terraform-plan style) so scripts can branch on it.
+            std::process::exit(2);
+        }
+        return Ok(());
+    }
+    if flags.has("--against") {
+        bail!("--against has no effect without --plan");
+    }
+    if !flags.has("--watch") {
+        for key in ["--interval-ms", "--max-loops"] {
+            if flags.has(key) {
+                bail!("{key} has no effect without --watch");
+            }
+        }
+    }
+
+    let desired = DeploymentManifest::load(path)?;
+    let seed = flags.usize_or("--seed", 0xF1E)? as u64;
+    let requests = flags.usize_or("--requests", 200)?;
+    let (start, plan): (DeploymentManifest, Option<ConvergencePlan>) =
+        match flags.get("--from") {
+            Some(prev_path) => {
+                let prev = DeploymentManifest::load(prev_path)?;
+                let plan = diff(&prev, &desired);
+                (prev, Some(plan))
+            }
+            None => (desired.clone(), None),
+        };
+
+    println!(
+        "deploying generation {} ({} site(s), objective {}, hash {})…",
+        start.version,
+        start.topology.sites().len(),
+        start.objective,
+        &content_hash(&start)[..12],
+    );
+    let mut orch = deploy_manifest_sim(&start, seed)?;
+    // Lane sets are fixed at spawn, so traffic rotates over the
+    // *deployed* manifest's tenants (anonymous when it declares none).
+    let tenant_ids: Vec<String> = start.tenants.iter().map(|t| t.id.clone()).collect();
+    let mut pending = Vec::new();
+    let mut total = DrivePhase::default();
+    let pre: DrivePhase;
+    let mut post: Option<DrivePhase> = None;
+    let mut apply_report: Option<ApplyReport> = None;
+
+    match &plan {
+        Some(plan) => {
+            let first = requests / 2;
+            println!("driving {first} request(s) under generation {}…", start.version);
+            pre = drive(&mut orch, first, seed ^ 0xA, &tenant_ids, &mut pending)?;
+            let in_flight = pending.len();
+            println!(
+                "\nconverging to generation {} ({} action(s), {in_flight} admitted \
+                 request(s) in flight):",
+                desired.version,
+                plan.actions.len()
+            );
+            let rep = reconcile(&mut orch, plan)?;
+            print_apply(&rep);
+            apply_report = Some(rep);
+            let second = requests - first;
+            println!("\ndriving {second} request(s) under generation {}…", desired.version);
+            post = Some(drive(&mut orch, second, seed ^ 0xB, &tenant_ids, &mut pending)?);
+        }
+        None => {
+            println!("driving {requests} request(s)…");
+            pre = drive(&mut orch, requests, seed ^ 0xA, &tenant_ids, &mut pending)?;
+        }
+    }
+    total.absorb(&pre);
+    if let Some(p) = &post {
+        total.absorb(p);
+    }
+    settle(&mut pending, &mut total);
+
+    // Re-applying the manifest that is now live must be a proven no-op:
+    // an empty diff, and a reconcile pass that mutates nothing.
+    let replan = diff(&desired, &desired);
+    let reapply = reconcile(&mut orch, &replan)?;
+    let reapply_noop = replan.is_noop() && reapply.is_noop();
+    let generation = orch.applied_generation();
+
+    println!(
+        "\nsubmitted {} | completed {} | shed {} | failed {} | conservation {} | \
+         re-apply no-op {} | generation {generation}",
+        total.submitted,
+        total.completed,
+        total.shed,
+        total.failed,
+        yn(total.fully_accounted()),
+        yn(reapply_noop),
+    );
+
+    let phase_json = |p: &DrivePhase| {
+        json::obj(vec![
+            ("completed", json::n(p.completed as f64)),
+            ("failed", json::n(p.failed as f64)),
+            ("shed", json::n(p.shed as f64)),
+            ("submitted", json::n(p.submitted as f64)),
+        ])
+    };
+    let report = json::obj(vec![
+        ("applied_generation", json::n(generation as f64)),
+        ("apply", apply_report.as_ref().map_or(Json::Null, ApplyReport::to_json)),
+        ("fully_accounted", Json::Bool(total.fully_accounted())),
+        ("manifest_hash", json::s(content_hash(&desired))),
+        (
+            "phases",
+            json::obj(vec![
+                ("post", post.as_ref().map_or(Json::Null, &phase_json)),
+                ("pre", phase_json(&pre)),
+            ]),
+        ),
+        ("plan", plan.as_ref().map_or(Json::Null, ConvergencePlan::to_json)),
+        ("reapply_noop", Json::Bool(reapply_noop)),
+        ("totals", phase_json(&total)),
+    ]);
+    if let Some(out) = flags.get("--out") {
+        std::fs::write(out, format!("{}\n", report.to_string()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("report written to {out}");
+    }
+
+    if flags.has("--watch") {
+        watch_loop(flags, path, desired, &mut orch)?;
+    }
+    orch.shutdown();
+    if !total.fully_accounted() {
+        bail!(
+            "conservation identity violated: {} submitted != {} completed + {} shed + \
+             {} failed",
+            total.submitted,
+            total.completed,
+            total.shed,
+            total.failed,
+        );
+    }
+    Ok(())
+}
+
+fn print_apply(rep: &ApplyReport) {
+    for line in &rep.applied {
+        println!("  applied  {line}");
+    }
+    for line in &rep.deferred {
+        println!("  deferred {line}");
+    }
+    for line in &rep.rejected {
+        println!("  rejected {line}");
+    }
+    if rep.is_noop() && rep.deferred.is_empty() && rep.rejected.is_empty() {
+        println!("  (no-op)");
+    }
+}
+
+/// `tf2aif apply --watch`: poll the manifest file and re-converge the
+/// live orchestrator whenever its *meaning* changes.  Three cheap gates
+/// before any work: mtime, raw-byte sha256, then the canonical content
+/// hash (so formatting-only edits converge nothing).
+fn watch_loop(
+    flags: &Flags,
+    path: &str,
+    mut applied: DeploymentManifest,
+    orch: &mut ContinuumOrchestrator,
+) -> Result<()> {
+    let interval = flags.usize_or("--interval-ms", 500)? as u64;
+    let max_loops = flags.usize_or("--max-loops", 0)?;
+    println!(
+        "\nwatching {path} (every {interval} ms{})…",
+        if max_loops > 0 { format!(", {max_loops} poll(s)") } else { ", ctrl-c to stop".into() }
+    );
+    let mut hash = content_hash(&applied);
+    let mut raw_hash = std::fs::read(path).map(|b| sha256_hex(&b)).unwrap_or_default();
+    let mut mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+    let mut polls = 0usize;
+    loop {
+        if max_loops > 0 && polls >= max_loops {
+            return Ok(());
+        }
+        polls += 1;
+        std::thread::sleep(Duration::from_millis(interval));
+        let now = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        if now == mtime {
+            continue;
+        }
+        mtime = now;
+        let bytes = std::fs::read(path).with_context(|| format!("re-reading {path}"))?;
+        let new_raw = sha256_hex(&bytes);
+        if new_raw == raw_hash {
+            continue;
+        }
+        raw_hash = new_raw;
+        let next = match DeploymentManifest::parse(&String::from_utf8_lossy(&bytes)) {
+            Ok(m) => m,
+            Err(e) => {
+                // A broken edit must never take the deployment down:
+                // keep serving the last good generation and say so.
+                println!(
+                    "  [poll {polls}] {path} invalid, keeping generation {}: {e:#}",
+                    orch.applied_generation()
+                );
+                continue;
+            }
+        };
+        let next_hash = content_hash(&next);
+        if next_hash == hash {
+            println!("  [poll {polls}] formatting-only edit (hash unchanged)");
+            continue;
+        }
+        let plan = diff(&applied, &next);
+        println!(
+            "  [poll {polls}] generation {} -> {} ({} action(s)):",
+            applied.version,
+            next.version,
+            plan.actions.len()
+        );
+        let rep = reconcile(orch, &plan)?;
+        for line in &rep.applied {
+            println!("    applied  {line}");
+        }
+        for line in &rep.deferred {
+            println!("    deferred {line}");
+        }
+        for line in &rep.rejected {
+            println!("    rejected {line}");
+        }
+        applied = next;
+        hash = next_hash;
+    }
 }
 
 fn cmd_bench(flags: &Flags) -> Result<()> {

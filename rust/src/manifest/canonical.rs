@@ -1,0 +1,315 @@
+//! Canonical JSON rendering for deployment manifests.
+//!
+//! Two TOML files that *mean* the same deployment must render to the
+//! same bytes — regardless of comments, blank lines, key order or
+//! number formatting — so manifests can be content-hashed, diffed and
+//! golden-tested byte-stably.  The canonical form is:
+//!
+//! - an object tree built on [`crate::util::json::Json`] (whose
+//!   `Obj(BTreeMap)` sorts keys for free), arrays sorted by their
+//!   natural identity (sites by name, nodes by name, links by
+//!   endpoints, tenants by id, artifacts by model);
+//! - pretty-printed with a fixed two-space pad and `\n` line ends
+//!   ([`render_json`]);
+//! - numbers written integer-form whenever lossless (`16`, not
+//!   `16.0`), mirroring `Json::to_string`, so the renderer and the
+//!   compact writer agree.
+//!
+//! [`content_hash`] is the sha256 of the rendered bytes — the identity
+//! `tf2aif apply --watch` polls against.
+
+use std::fmt::Write as _;
+
+use sha2::{Digest as _, Sha256};
+
+use crate::util::json::{n, obj, s, Json};
+
+use super::DeploymentManifest;
+
+/// Build the canonical JSON tree of a manifest.  Every field the
+/// parser reads appears here (and nothing else), so `parse → to_json`
+/// is a total function of manifest *meaning*.
+pub fn to_json(m: &DeploymentManifest) -> Json {
+    let artifacts: Vec<Json> = m
+        .artifacts
+        .iter()
+        .map(|(model, version)| {
+            obj(vec![("model", s(model.clone())), ("version", s(version.clone()))])
+        })
+        .collect();
+    let autoscale = match m.autoscale {
+        Some(b) => obj(vec![
+            ("max_replicas", n(b.max_replicas as f64)),
+            ("min_replicas", n(b.min_replicas as f64)),
+        ]),
+        None => Json::Null,
+    };
+    let mut sites: Vec<&crate::continuum::SiteSpec> = m.topology.sites().iter().collect();
+    sites.sort_by(|a, b| a.name.cmp(&b.name));
+    let sites: Vec<Json> = sites
+        .into_iter()
+        .map(|site| {
+            let mut nodes: Vec<&crate::cluster::NodeSpec> = site.nodes.iter().collect();
+            nodes.sort_by(|a, b| a.name.cmp(&b.name));
+            let nodes: Vec<Json> = nodes
+                .into_iter()
+                .map(|node| {
+                    obj(vec![
+                        ("accelerator", s(node.accelerator.clone())),
+                        ("arch", s(node.arch.clone())),
+                        ("cpu", s(node.cpu_desc.clone())),
+                        ("cpus", n(node.cpus as f64)),
+                        ("memory_gb", n(node.memory_gb)),
+                        ("name", s(node.name.clone())),
+                        (
+                            "platforms",
+                            Json::Arr(node.platforms.iter().map(|p| s(p.clone())).collect()),
+                        ),
+                        ("slots", n(node.slots as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("name", s(site.name.clone())),
+                ("nodes", Json::Arr(nodes)),
+                ("tier", s(site.tier.name())),
+            ])
+        })
+        .collect();
+    let mut links: Vec<&crate::continuum::LinkSpec> = m.topology.links().iter().collect();
+    links.sort_by(|x, y| (&x.a, &x.b).cmp(&(&y.a, &y.b)));
+    let links: Vec<Json> = links
+        .into_iter()
+        .map(|l| {
+            obj(vec![
+                ("a", s(l.a.clone())),
+                ("b", s(l.b.clone())),
+                ("gbps", n(l.gbps)),
+                ("rtt_ms", n(l.rtt_ms)),
+            ])
+        })
+        .collect();
+    let mut tenants: Vec<&crate::fabric::TenantSpec> = m.tenants.iter().collect();
+    tenants.sort_by(|a, b| a.id.cmp(&b.id));
+    let tenants: Vec<Json> = tenants
+        .into_iter()
+        .map(|t| {
+            obj(vec![
+                ("burst", n(t.burst)),
+                ("id", s(t.id.clone())),
+                ("priority", s(t.priority.name())),
+                ("rate_rps", t.rate_rps.map_or(Json::Null, n)),
+                ("share", n(t.max_queue_share)),
+                ("slo_ms", t.slo_p99_ms.map_or(Json::Null, n)),
+                ("weight", n(t.weight as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("artifacts", Json::Arr(artifacts)),
+        ("autoscale", autoscale),
+        (
+            "deployment",
+            obj(vec![
+                ("demand_site", s(m.demand_site.clone())),
+                ("objective", s(m.objective.name())),
+            ]),
+        ),
+        (
+            "fabric",
+            obj(vec![
+                ("cache_capacity", n(m.fabric.cache_capacity as f64)),
+                ("cache_ttl_ms", n(m.fabric.cache_ttl_ms as f64)),
+                ("max_batch", n(m.fabric.max_batch as f64)),
+                ("queue_capacity", n(m.fabric.queue_capacity as f64)),
+                ("replicas_per_model", n(m.fabric.replicas_per_model as f64)),
+                ("workers", n(m.fabric.workers as f64)),
+            ]),
+        ),
+        ("links", Json::Arr(links)),
+        ("sites", Json::Arr(sites)),
+        ("tenants", Json::Arr(tenants)),
+        ("version", n(m.version as f64)),
+    ])
+}
+
+/// Render a manifest to its canonical byte form: [`to_json`] pretty-
+/// printed by [`render_json`], no trailing newline.
+pub fn render(m: &DeploymentManifest) -> String {
+    render_json(&to_json(m))
+}
+
+/// sha256 of the canonical rendering, lowercase hex — two manifests
+/// share a hash iff they mean the same deployment.
+pub fn content_hash(m: &DeploymentManifest) -> String {
+    sha256_hex(render(m).as_bytes())
+}
+
+/// Lowercase-hex sha256 of arbitrary bytes (the watch loop hashes raw
+/// file contents with this before paying for a full parse).
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let digest = Sha256::digest(bytes);
+    let mut hex = String::with_capacity(64);
+    for b in digest {
+        let _ = write!(hex, "{b:02x}");
+    }
+    hex
+}
+
+/// Deterministic pretty-printer: sorted keys (inherent to `Json::Obj`),
+/// fixed two-space indent, `\n` separators, integer-form numbers
+/// whenever lossless.  `parse(render_json(v))` reproduces `v` exactly,
+/// and rendering is idempotent — the byte-stability the golden suite
+/// locks in.
+pub fn render_json(v: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out
+}
+
+fn write_pretty(v: &Json, depth: usize, out: &mut String) {
+    match v {
+        Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_) => {
+            // Scalars already render canonically in the compact writer.
+            out.push_str(&v.to_string());
+        }
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                push_pad(out, depth + 1);
+                write_pretty(item, depth + 1, out);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            push_pad(out, depth);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (key, val)) in map.iter().enumerate() {
+                push_pad(out, depth + 1);
+                // Keys render through the compact writer's escaper so
+                // pretty and compact forms never disagree on strings.
+                out.push_str(&Json::Str(key.clone()).to_string());
+                out.push_str(": ");
+                write_pretty(val, depth + 1, out);
+                if i + 1 < map.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            push_pad(out, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn push_pad(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DeploymentManifest;
+    use super::*;
+
+    const A: &str = r#"
+# comment-heavy, shuffled key order
+[[site]]
+tier = "edge"
+name = "edge"
+
+[[site]]
+name = "cloud"
+tier = "cloud"
+[[node]]
+name = "E-1"
+site = "edge"
+platforms = ["ARM"]
+[[node]]
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+[[link]]
+b = "edge"
+a = "cloud"
+rtt_ms = 12.0
+gbps = 1.0
+[[tenant]]
+burst = 4
+name = "anna"
+rate = 50
+"#;
+
+    const B: &str = r#"
+[[site]]
+name = "cloud"
+tier = "cloud"
+[[site]]
+name = "edge"
+tier = "edge"
+[[node]]
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+[[node]]
+site = "edge"
+name = "E-1"
+platforms = ["ARM"]
+[[link]]
+a = "cloud"
+b = "edge"
+rtt_ms = 12
+gbps = 1
+[[tenant]]
+name = "anna"
+rate = 50.0
+burst = 4.0
+"#;
+
+    #[test]
+    fn formatting_never_changes_the_canonical_bytes() {
+        let a = DeploymentManifest::parse(A).unwrap();
+        let b = DeploymentManifest::parse(B).unwrap();
+        assert_eq!(render(&a), render(&b));
+        assert_eq!(content_hash(&a), content_hash(&b));
+    }
+
+    #[test]
+    fn rendering_roundtrips_and_is_idempotent() {
+        let m = DeploymentManifest::parse(A).unwrap();
+        let rendered = render(&m);
+        let parsed = Json::parse(&rendered).unwrap();
+        assert_eq!(parsed, to_json(&m));
+        assert_eq!(render_json(&parsed), rendered);
+    }
+
+    #[test]
+    fn numbers_render_integer_form_when_lossless() {
+        let m = DeploymentManifest::parse(A).unwrap();
+        let rendered = render(&m);
+        assert!(rendered.contains("\"rtt_ms\": 12"), "{rendered}");
+        assert!(!rendered.contains("12.0"), "{rendered}");
+    }
+
+    #[test]
+    fn sha256_hex_matches_known_vector() {
+        // NIST FIPS 180-2 test vector for "abc".
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+}

@@ -1,0 +1,505 @@
+//! Typed diffing of deployment manifests into ordered action plans.
+//!
+//! [`diff`] compares the *applied* manifest against the *desired* one
+//! and emits a [`ConvergencePlan`] — the exact, ordered list of typed
+//! [`Action`]s that would make the live system match the file.  The
+//! ordering is deterministic (replan-triggering changes first, then
+//! fabric-wide knobs, then per-tenant edits sorted by tenant, then
+//! artifact redeploys sorted by model, rejections last), so the same
+//! pair of manifests always renders the same plan — which is what lets
+//! `tf2aif apply --plan` be golden-tested byte-for-byte.
+//!
+//! Not every declared change can be absorbed live: site/node/link
+//! topology is fixed at deploy time, tenant *lanes* (the set of
+//! tenants, their weights/priorities/queue shares) are sized when the
+//! fabrics spawn, and the autoscaler/response cache exist only if the
+//! deployment started with them.  Those come back as
+//! [`Action::Rejected`] carrying the reason — the plan never silently
+//! drops a declared intent, and never half-applies one.
+
+use crate::continuum::PlanPolicy;
+use crate::util::json::{n, obj, s, Json};
+
+use super::canonical::to_json;
+use super::DeploymentManifest;
+
+/// One step of a convergence plan.  Variants map 1:1 onto live
+/// reconciler primitives — except [`Action::Rejected`], which records
+/// a declared change the running system cannot absorb without a
+/// redeploy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Switch the planner objective and replan placements.
+    SetObjective {
+        /// Objective the applied manifest planned under.
+        from: PlanPolicy,
+        /// Objective the desired manifest asks for.
+        to: PlanPolicy,
+    },
+    /// Retune the autoscaler's replica bounds.
+    SetAutoscaleBounds {
+        /// New floor (≥ 1).
+        min_replicas: usize,
+        /// New ceiling (≥ `min_replicas`).
+        max_replicas: usize,
+    },
+    /// Retune the response cache's freshness TTL.
+    SetCacheTtl {
+        /// TTL the applied manifest pinned, ms.
+        from_ms: u64,
+        /// TTL the desired manifest pins, ms.
+        to_ms: u64,
+    },
+    /// Reshape (or install / remove) a tenant's rate quota.
+    SetQuota {
+        /// Tenant id.
+        tenant: String,
+        /// New refill rate, requests/second; `None` removes the quota.
+        rate_rps: Option<f64>,
+        /// New burst depth (meaningful only with a rate).
+        burst: f64,
+    },
+    /// Change (or clear) a tenant's p99 latency SLO.
+    SetSlo {
+        /// Tenant id.
+        tenant: String,
+        /// New SLO, ms end-to-end; `None` restores the global target.
+        slo_p99_ms: Option<f64>,
+    },
+    /// Change a tenant's maximum queue share.  Lanes are sized at
+    /// fabric spawn, so the reconciler defers this with a reason.
+    SetShare {
+        /// Tenant id.
+        tenant: String,
+        /// Desired share in (0, 1].
+        share: f64,
+    },
+    /// A tenant present only in the desired manifest.  Deferred live —
+    /// the lane set is fixed at spawn.
+    AddTenant {
+        /// Tenant id.
+        tenant: String,
+    },
+    /// A tenant present only in the applied manifest.  Deferred live.
+    RemoveTenant {
+        /// Tenant id.
+        tenant: String,
+    },
+    /// An artifact version pin changed (or appeared): roll
+    /// `on_artifact_redeploy` across every site serving the model.
+    RedeployArtifact {
+        /// Model whose artifact moved.
+        model: String,
+        /// Previously pinned version (`None` = previously unpinned).
+        from: Option<String>,
+        /// Newly pinned version.
+        to: String,
+    },
+    /// A declared change the live system cannot absorb — carried in
+    /// the plan with its reason instead of being silently dropped.
+    Rejected {
+        /// What changed (a manifest path such as `fabric.workers`).
+        what: String,
+        /// Why it needs a redeploy instead of a live apply.
+        reason: String,
+    },
+}
+
+impl Action {
+    /// Stable kebab-case tag for rendering and log lines.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Action::SetObjective { .. } => "set-objective",
+            Action::SetAutoscaleBounds { .. } => "set-autoscale-bounds",
+            Action::SetCacheTtl { .. } => "set-cache-ttl",
+            Action::SetQuota { .. } => "set-quota",
+            Action::SetSlo { .. } => "set-slo",
+            Action::SetShare { .. } => "set-share",
+            Action::AddTenant { .. } => "add-tenant",
+            Action::RemoveTenant { .. } => "remove-tenant",
+            Action::RedeployArtifact { .. } => "redeploy-artifact",
+            Action::Rejected { .. } => "rejected",
+        }
+    }
+
+    /// Canonical JSON form (the `actions` entries of a rendered plan).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("action", s(self.kind()))];
+        match self {
+            Action::SetObjective { from, to } => {
+                fields.push(("from", s(from.name())));
+                fields.push(("to", s(to.name())));
+            }
+            Action::SetAutoscaleBounds { min_replicas, max_replicas } => {
+                fields.push(("max_replicas", n(*max_replicas as f64)));
+                fields.push(("min_replicas", n(*min_replicas as f64)));
+            }
+            Action::SetCacheTtl { from_ms, to_ms } => {
+                fields.push(("from_ms", n(*from_ms as f64)));
+                fields.push(("to_ms", n(*to_ms as f64)));
+            }
+            Action::SetQuota { tenant, rate_rps, burst } => {
+                fields.push(("burst", n(*burst)));
+                fields.push(("rate_rps", rate_rps.map_or(Json::Null, n)));
+                fields.push(("tenant", s(tenant.clone())));
+            }
+            Action::SetSlo { tenant, slo_p99_ms } => {
+                fields.push(("slo_ms", slo_p99_ms.map_or(Json::Null, n)));
+                fields.push(("tenant", s(tenant.clone())));
+            }
+            Action::SetShare { tenant, share } => {
+                fields.push(("share", n(*share)));
+                fields.push(("tenant", s(tenant.clone())));
+            }
+            Action::AddTenant { tenant } | Action::RemoveTenant { tenant } => {
+                fields.push(("tenant", s(tenant.clone())));
+            }
+            Action::RedeployArtifact { model, from, to } => {
+                fields.push(("from", from.clone().map_or(Json::Null, s)));
+                fields.push(("model", s(model.clone())));
+                fields.push(("to", s(to.clone())));
+            }
+            Action::Rejected { what, reason } => {
+                fields.push(("reason", s(reason.clone())));
+                fields.push(("what", s(what.clone())));
+            }
+        }
+        obj(fields)
+    }
+
+    /// One-line human description (the `tf2aif apply` progress lines).
+    pub fn describe(&self) -> String {
+        match self {
+            Action::SetObjective { from, to } => {
+                format!("objective {from} -> {to} (replan)")
+            }
+            Action::SetAutoscaleBounds { min_replicas, max_replicas } => {
+                format!("autoscale bounds -> {min_replicas}..{max_replicas}")
+            }
+            Action::SetCacheTtl { from_ms, to_ms } => {
+                format!("cache ttl {from_ms}ms -> {to_ms}ms")
+            }
+            Action::SetQuota { tenant, rate_rps: Some(r), burst } => {
+                format!("tenant {tenant} quota -> {r} rps (burst {burst})")
+            }
+            Action::SetQuota { tenant, rate_rps: None, .. } => {
+                format!("tenant {tenant} quota removed")
+            }
+            Action::SetSlo { tenant, slo_p99_ms: Some(ms) } => {
+                format!("tenant {tenant} slo -> {ms}ms")
+            }
+            Action::SetSlo { tenant, slo_p99_ms: None } => {
+                format!("tenant {tenant} slo cleared")
+            }
+            Action::SetShare { tenant, share } => {
+                format!("tenant {tenant} share -> {share}")
+            }
+            Action::AddTenant { tenant } => format!("add tenant {tenant}"),
+            Action::RemoveTenant { tenant } => format!("remove tenant {tenant}"),
+            Action::RedeployArtifact { model, from, to } => match from {
+                Some(v) => format!("redeploy {model} {v} -> {to}"),
+                None => format!("redeploy {model} (unpinned) -> {to}"),
+            },
+            Action::Rejected { what, reason } => format!("rejected {what}: {reason}"),
+        }
+    }
+}
+
+/// The ordered action list turning the applied manifest into the
+/// desired one — see [`diff`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvergencePlan {
+    /// Version of the manifest currently applied.
+    pub from_version: u64,
+    /// Version of the manifest being applied.
+    pub to_version: u64,
+    /// Ordered actions (possibly empty — a proven no-op).
+    pub actions: Vec<Action>,
+}
+
+impl ConvergencePlan {
+    /// True when the plan carries no actions at all: applying it
+    /// mutates nothing.
+    pub fn is_noop(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Number of rejected (needs-redeploy) entries in the plan.
+    pub fn rejected_count(&self) -> usize {
+        self.actions.iter().filter(|a| matches!(a, Action::Rejected { .. })).count()
+    }
+
+    /// Canonical JSON form — what `tf2aif apply --plan` prints and the
+    /// golden suite locks byte-for-byte.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("actions", Json::Arr(self.actions.iter().map(Action::to_json).collect())),
+            ("from_version", n(self.from_version as f64)),
+            ("noop", Json::Bool(self.is_noop())),
+            ("rejected", n(self.rejected_count() as f64)),
+            ("to_version", n(self.to_version as f64)),
+        ])
+    }
+}
+
+/// Exact-bits f64 comparison: manifest numbers come from the same
+/// parser on both sides, so equality is meaningful (and NaN never
+/// reaches here — specs are validated finite).
+fn same(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn same_opt(a: Option<f64>, b: Option<f64>) -> bool {
+    match (a, b) {
+        (Some(x), Some(y)) => same(x, y),
+        (None, None) => true,
+        _ => false,
+    }
+}
+
+/// Compute the ordered [`ConvergencePlan`] turning `applied` into
+/// `desired`.  Deterministic: the emission order is fixed and every
+/// keyed group is sorted, so equal inputs always produce equal plans.
+pub fn diff(applied: &DeploymentManifest, desired: &DeploymentManifest) -> ConvergencePlan {
+    let mut actions = Vec::new();
+    let mut rejected = Vec::new();
+    let mut reject = |what: &str, reason: String| {
+        rejected.push(Action::Rejected { what: what.to_string(), reason });
+    };
+
+    if applied.objective != desired.objective {
+        actions.push(Action::SetObjective { from: applied.objective, to: desired.objective });
+    }
+    if applied.demand_site != desired.demand_site {
+        reject(
+            "deployment.demand_site",
+            format!(
+                "demand anchors the placement plan ({:?} -> {:?}); redeploy to move it",
+                applied.demand_site, desired.demand_site
+            ),
+        );
+    }
+    match (applied.autoscale, desired.autoscale) {
+        (Some(a), Some(b)) if a != b => {
+            actions.push(Action::SetAutoscaleBounds {
+                min_replicas: b.min_replicas,
+                max_replicas: b.max_replicas,
+            });
+        }
+        (None, Some(_)) | (Some(_), None) => {
+            reject(
+                "autoscale",
+                "the autoscaler is spawned with the fabric; enabling or disabling it \
+                 needs a redeploy"
+                    .to_string(),
+            );
+        }
+        _ => {}
+    }
+    if applied.fabric.cache_ttl_ms != desired.fabric.cache_ttl_ms {
+        actions.push(Action::SetCacheTtl {
+            from_ms: applied.fabric.cache_ttl_ms,
+            to_ms: desired.fabric.cache_ttl_ms,
+        });
+    }
+    for (field, a, b) in [
+        ("fabric.queue_capacity", applied.fabric.queue_capacity, desired.fabric.queue_capacity),
+        ("fabric.max_batch", applied.fabric.max_batch, desired.fabric.max_batch),
+        ("fabric.workers", applied.fabric.workers, desired.fabric.workers),
+        (
+            "fabric.replicas_per_model",
+            applied.fabric.replicas_per_model,
+            desired.fabric.replicas_per_model,
+        ),
+        ("fabric.cache_capacity", applied.fabric.cache_capacity, desired.fabric.cache_capacity),
+    ] {
+        if a != b {
+            reject(field, format!("fixed when the site fabrics spawn ({a} -> {b}); redeploy"));
+        }
+    }
+
+    // Topology: compare the canonical subtrees so formatting and
+    // declaration order never count as drift.
+    let (aj, dj) = (to_json(applied), to_json(desired));
+    for key in ["sites", "links"] {
+        if aj.get(key).ok() != dj.get(key).ok() {
+            reject(
+                key,
+                "site/node/link topology is fixed at deploy time; redeploy to change it"
+                    .to_string(),
+            );
+        }
+    }
+
+    // Tenants, keyed by id.  BTreeMap iteration keeps every group
+    // sorted by tenant.
+    let applied_tenants: std::collections::BTreeMap<&str, &crate::fabric::TenantSpec> =
+        applied.tenants.iter().map(|t| (t.id.as_str(), t)).collect();
+    let desired_tenants: std::collections::BTreeMap<&str, &crate::fabric::TenantSpec> =
+        desired.tenants.iter().map(|t| (t.id.as_str(), t)).collect();
+    for (&id, want) in &desired_tenants {
+        let Some(have) = applied_tenants.get(id) else {
+            actions.push(Action::AddTenant { tenant: id.to_string() });
+            continue;
+        };
+        if have.weight != want.weight {
+            reject(
+                &format!("tenant.{id}.weight"),
+                format!(
+                    "lane weights are fixed at fabric spawn ({} -> {}); redeploy",
+                    have.weight, want.weight
+                ),
+            );
+        }
+        if have.priority != want.priority {
+            reject(
+                &format!("tenant.{id}.priority"),
+                format!(
+                    "priorities order queued work at spawn ({} -> {}); redeploy",
+                    have.priority.name(),
+                    want.priority.name()
+                ),
+            );
+        }
+        let quota_changed = !same_opt(have.rate_rps, want.rate_rps)
+            || (want.rate_rps.is_some() && !same(have.burst, want.burst));
+        if quota_changed {
+            actions.push(Action::SetQuota {
+                tenant: id.to_string(),
+                rate_rps: want.rate_rps,
+                burst: want.burst,
+            });
+        }
+        if !same_opt(have.slo_p99_ms, want.slo_p99_ms) {
+            actions.push(Action::SetSlo {
+                tenant: id.to_string(),
+                slo_p99_ms: want.slo_p99_ms,
+            });
+        }
+        if !same(have.max_queue_share, want.max_queue_share) {
+            actions.push(Action::SetShare { tenant: id.to_string(), share: want.max_queue_share });
+        }
+    }
+    for &id in applied_tenants.keys() {
+        if !desired_tenants.contains_key(id) {
+            actions.push(Action::RemoveTenant { tenant: id.to_string() });
+        }
+    }
+
+    // Artifact pins, keyed by model (sorted by BTreeMap).  Unpinning a
+    // model changes no deployed bytes, so it emits nothing.
+    for (model, to) in &desired.artifacts {
+        let from = applied.artifacts.get(model);
+        if from.map(String::as_str) != Some(to.as_str()) {
+            actions.push(Action::RedeployArtifact {
+                model: model.clone(),
+                from: from.cloned(),
+                to: to.clone(),
+            });
+        }
+    }
+
+    actions.extend(rejected);
+    ConvergencePlan {
+        from_version: applied.version,
+        to_version: desired.version,
+        actions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DeploymentManifest;
+    use super::*;
+
+    fn base(extra: &str) -> String {
+        format!(
+            "{extra}\n\
+             [[site]]\nname = \"cloud\"\ntier = \"cloud\"\n\
+             [[site]]\nname = \"edge\"\ntier = \"edge\"\n\
+             [[node]]\nsite = \"cloud\"\nname = \"R-GPU\"\nplatforms = [\"GPU\"]\n\
+             [[node]]\nsite = \"edge\"\nname = \"E-1\"\nplatforms = [\"ARM\"]\n\
+             [[link]]\na = \"cloud\"\nb = \"edge\"\nrtt_ms = 12\ngbps = 1\n"
+        )
+    }
+
+    #[test]
+    fn identical_manifests_diff_to_a_noop() {
+        let m = DeploymentManifest::parse(&base("version = 2")).unwrap();
+        let plan = diff(&m, &m);
+        assert!(plan.is_noop());
+        assert_eq!(plan.from_version, 2);
+        assert_eq!(plan.to_version, 2);
+    }
+
+    #[test]
+    fn live_edits_become_typed_ordered_actions() {
+        let v1 = DeploymentManifest::parse(&base(
+            "version = 1\n[[tenant]]\nname = \"anna\"\nrate = 100\nburst = 8\n\
+             [[artifact]]\nmodel = \"lenet\"\nversion = \"v1\"",
+        ))
+        .unwrap();
+        let v2 = DeploymentManifest::parse(&base(
+            "version = 2\n[deployment]\nobjective = \"min-energy\"\n\
+             [[tenant]]\nname = \"anna\"\nrate = 25\nburst = 4\nslo_ms = 30\n\
+             [[artifact]]\nmodel = \"lenet\"\nversion = \"v2\"",
+        ))
+        .unwrap();
+        let plan = diff(&v1, &v2);
+        let kinds: Vec<&str> = plan.actions.iter().map(Action::kind).collect();
+        assert_eq!(
+            kinds,
+            vec!["set-objective", "set-quota", "set-slo", "redeploy-artifact"],
+            "{plan:?}"
+        );
+        assert_eq!(plan.rejected_count(), 0);
+        assert!(!plan.is_noop());
+    }
+
+    #[test]
+    fn structural_changes_come_back_rejected_with_reasons() {
+        let v1 = DeploymentManifest::parse(&base("version = 1")).unwrap();
+        let mut bumped = base("version = 2\n[fabric]\nworkers = 4");
+        bumped = bumped.replace("rtt_ms = 12", "rtt_ms = 99");
+        let v2 = DeploymentManifest::parse(&bumped).unwrap();
+        let plan = diff(&v1, &v2);
+        assert_eq!(plan.rejected_count(), 2, "{plan:?}");
+        assert!(plan.actions.iter().all(|a| matches!(a, Action::Rejected { .. })));
+        for a in &plan.actions {
+            if let Action::Rejected { reason, .. } = a {
+                assert!(!reason.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn lane_set_changes_are_deferred_shapes_not_silently_dropped() {
+        let v1 = DeploymentManifest::parse(&base(
+            "version = 1\n[[tenant]]\nname = \"anna\"\nrate = 100",
+        ))
+        .unwrap();
+        let v2 = DeploymentManifest::parse(&base(
+            "version = 2\n[[tenant]]\nname = \"bob\"\nrate = 50",
+        ))
+        .unwrap();
+        let plan = diff(&v1, &v2);
+        let kinds: Vec<&str> = plan.actions.iter().map(Action::kind).collect();
+        assert_eq!(kinds, vec!["add-tenant", "remove-tenant"], "{plan:?}");
+    }
+
+    #[test]
+    fn plan_json_is_deterministic() {
+        let v1 = DeploymentManifest::parse(&base("version = 1")).unwrap();
+        let v2 = DeploymentManifest::parse(&base(
+            "version = 2\n[fabric]\ncache_ttl_ms = 9000",
+        ))
+        .unwrap();
+        let p1 = diff(&v1, &v2);
+        let p2 = diff(&v1, &v2);
+        assert_eq!(
+            super::super::canonical::render_json(&p1.to_json()),
+            super::super::canonical::render_json(&p2.to_json())
+        );
+        assert_eq!(p1.actions, vec![Action::SetCacheTtl { from_ms: 250, to_ms: 9000 }]);
+    }
+}

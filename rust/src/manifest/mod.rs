@@ -1,0 +1,423 @@
+//! Declarative deployment manifests and the convergence engine.
+//!
+//! The paper's workflow stops at *generating* accelerated AI functions;
+//! operating them across the continuum still means hand-assembling CLI
+//! flags per run.  This module closes that gap with a Kubernetes-style
+//! config plane:
+//!
+//! ```text
+//!   deployment.toml ──parse──► DeploymentManifest ──render──► canonical JSON
+//!        │                          │   ▲                        (hash / golden)
+//!        │                 diff(applied, desired)
+//!        │                          │
+//!        │                   ConvergencePlan  (ordered, typed actions)
+//!        │                          │
+//!        ▼                    reconcile(orchestrator, plan)
+//!   tf2aif apply          quota / SLO / TTL / bounds edits + rolling
+//!   (--plan / --watch)    artifact redeploys against the LIVE continuum
+//! ```
+//!
+//! - A [`DeploymentManifest`] is the whole desired state in one
+//!   versioned file: the `[[site]]`/`[[node]]`/`[[link]]` topology
+//!   (byte-compatible with `tf2aif continuum --config` files —
+//!   topology-only files stay accepted), the `[deployment]` planner
+//!   objective, `[fabric]` serving knobs, `[autoscale]` replica bounds,
+//!   `[[tenant]]` quotas/SLOs (sharing the CLI `--tenants` grammar via
+//!   [`crate::fabric::tenancy::tenant_specs_from_tables`]), and
+//!   `[[artifact]]` per-model version pins.
+//! - [`canonical`] renders a manifest to canonical JSON — sorted keys,
+//!   fixed two-space padding, integer-stable numbers — so manifests
+//!   hash, diff and golden-test byte-stably regardless of TOML
+//!   formatting, comments or key order.
+//! - [`diff`] turns `(applied, desired)` into an ordered
+//!   [`diff::ConvergencePlan`] of typed actions; structural changes the
+//!   live system cannot absorb (topology edits, lane-set changes) come
+//!   back rejected-with-reason instead of half-applied.
+//! - [`reconcile`] applies a plan to a running
+//!   [`crate::continuum::ContinuumOrchestrator`] without restart:
+//!   quota/SLO edits reach the token buckets and batch controllers
+//!   live, artifact bumps roll `on_artifact_redeploy` across sites with
+//!   zero dropped admitted work, and re-applying an unchanged manifest
+//!   is a proven no-op.
+//!
+//! `tf2aif apply MANIFEST` drives it from the CLI (`--plan` for the
+//! dry-run diff, `--watch` to poll the file); the applied manifest
+//! version is tracked as the orchestrator's `applied_generation`.
+
+pub mod canonical;
+pub mod diff;
+pub mod reconcile;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::config::Config;
+use crate::continuum::{PlanPolicy, Topology};
+use crate::fabric::tenancy::{tenant_specs_from_tables, TenantSpec};
+use crate::fabric::FabricConfig;
+
+/// Serving-fabric knobs a manifest pins per deployment.  Everything but
+/// `cache_ttl_ms` is structural (fixed when the site fabrics spawn);
+/// the differ rejects changes to structural fields with a reason
+/// instead of pretending to converge them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricSettings {
+    /// Admission bound: queued requests per pod before shedding.
+    pub queue_capacity: usize,
+    /// Max requests one worker drains per wakeup.
+    pub max_batch: usize,
+    /// Batcher workers per pod.
+    pub workers: usize,
+    /// Max pods (on distinct nodes) per model at placement time.
+    pub replicas_per_model: usize,
+    /// Response-cache capacity (entries); `0` disables the cache.
+    pub cache_capacity: usize,
+    /// Response-cache entry lifetime, ms — the one live-tunable field.
+    pub cache_ttl_ms: u64,
+}
+
+impl Default for FabricSettings {
+    fn default() -> FabricSettings {
+        let d = FabricConfig::default();
+        FabricSettings {
+            queue_capacity: d.queue_capacity,
+            max_batch: d.max_batch,
+            workers: d.workers,
+            replicas_per_model: d.replicas_per_model,
+            cache_capacity: d.cache_capacity,
+            cache_ttl_ms: d.cache_ttl_ms,
+        }
+    }
+}
+
+/// Autoscaler replica bounds from a manifest's `[autoscale]` section.
+/// Presence of the section enables the scaler; the bounds themselves
+/// are live-tunable via `tf2aif apply`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleBounds {
+    /// Fewest replicas the scaler may keep per model (≥ 1).
+    pub min_replicas: usize,
+    /// Most replicas the scaler may grow a model to (≥ `min_replicas`).
+    pub max_replicas: usize,
+}
+
+/// The whole desired state of a continuum deployment, parsed from one
+/// versioned TOML file — see the [module docs](self) for the schema and
+/// `configs/deployment.toml` for a worked example.
+#[derive(Debug, Clone)]
+pub struct DeploymentManifest {
+    /// Manifest generation (`version = N`, default 1).  Applying a
+    /// manifest stamps this as the orchestrator's `applied_generation`.
+    pub version: u64,
+    /// Planner objective from `[deployment] objective`.
+    pub objective: PlanPolicy,
+    /// Where demand originates — `[deployment] demand_site`, defaulting
+    /// to the lowest-tier (furthest-edge) site, matching the CLI.
+    pub demand_site: String,
+    /// Sites, nodes and links (`[[site]]` / `[[node]]` / `[[link]]`).
+    pub topology: Topology,
+    /// Serving-fabric knobs (`[fabric]`, all optional).
+    pub fabric: FabricSettings,
+    /// Replica bounds when `[autoscale]` is present; `None` keeps the
+    /// placed replica count fixed.
+    pub autoscale: Option<AutoscaleBounds>,
+    /// Tenant set from `[[tenant]]` tables (may be empty — anonymous
+    /// traffic then rides the default tenant).
+    pub tenants: Vec<TenantSpec>,
+    /// Per-model artifact version pins from `[[artifact]]` tables —
+    /// bumping a pin drives a rolling redeploy on apply.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// Section and table names a deployment manifest may use.  Anything
+/// else is a typo the config plane must catch loudly — a silently
+/// ignored `[tenent]` section is exactly the failure mode declarative
+/// config exists to prevent.
+const KNOWN_TABLES: &[&str] = &["deployment", "fabric", "autoscale"];
+const KNOWN_ARRAYS: &[&str] = &["site", "node", "link", "tenant", "artifact"];
+const KNOWN_ROOT_KEYS: &[&str] = &["version"];
+
+impl DeploymentManifest {
+    /// Read and parse a manifest file.
+    pub fn load(path: impl AsRef<Path>) -> Result<DeploymentManifest> {
+        let cfg = Config::load(path.as_ref())?;
+        DeploymentManifest::from_config(&cfg)
+            .with_context(|| format!("manifest {}", path.as_ref().display()))
+    }
+
+    /// Parse manifest source text.
+    pub fn parse(src: &str) -> Result<DeploymentManifest> {
+        DeploymentManifest::from_config(&Config::parse(src)?)
+    }
+
+    /// Build a manifest from a parsed [`Config`], validating the whole
+    /// document: unknown sections/keys are errors, the demand site must
+    /// exist, bounds must be ordered, artifact pins must be unique and
+    /// non-empty.  Topology-only `tf2aif continuum --config` files
+    /// parse unchanged (every manifest-only section is optional).
+    pub fn from_config(cfg: &Config) -> Result<DeploymentManifest> {
+        for key in cfg.root.entries.keys() {
+            if !KNOWN_ROOT_KEYS.contains(&key.as_str()) {
+                bail!("unknown top-level manifest key {key:?} (expected one of {KNOWN_ROOT_KEYS:?})");
+            }
+        }
+        for name in cfg.tables.keys() {
+            if !KNOWN_TABLES.contains(&name.as_str()) {
+                bail!("unknown manifest section [{name}] (expected one of {KNOWN_TABLES:?})");
+            }
+        }
+        for name in cfg.arrays.keys() {
+            if !KNOWN_ARRAYS.contains(&name.as_str()) {
+                bail!("unknown manifest table [[{name}]] (expected one of {KNOWN_ARRAYS:?})");
+            }
+        }
+        let version = cfg.root.usize_or("version", 1) as u64;
+        if version == 0 {
+            bail!("manifest version must be >= 1");
+        }
+        let topology = Topology::from_config(cfg)?;
+        let (objective, demand_site) = match cfg.tables.get("deployment") {
+            Some(t) => {
+                for key in t.entries.keys() {
+                    if !["objective", "demand_site"].contains(&key.as_str()) {
+                        bail!("unknown [deployment] key {key:?}");
+                    }
+                }
+                let objective = PlanPolicy::parse(&t.str_or("objective", "min-latency"))?;
+                let site = t.entries.get("demand_site").map(|v| v.str()).transpose()?;
+                (objective, site.map(str::to_string))
+            }
+            None => (PlanPolicy::MinLatency, None),
+        };
+        let demand_site = match demand_site {
+            Some(name) => {
+                if topology.site(&name).is_none() {
+                    bail!("[deployment] demand_site {name:?} names no [[site]]");
+                }
+                name
+            }
+            // Demand originates at the lowest tier by default, matching
+            // `tf2aif continuum` without --site.
+            None => topology
+                .sites()
+                .iter()
+                .max_by_key(|s| s.tier)
+                .map(|s| s.name.clone())
+                .expect("validated topology has sites"),
+        };
+        let mut fabric = FabricSettings::default();
+        if let Some(t) = cfg.tables.get("fabric") {
+            for key in t.entries.keys() {
+                if ![
+                    "queue_capacity",
+                    "max_batch",
+                    "workers",
+                    "replicas_per_model",
+                    "cache_capacity",
+                    "cache_ttl_ms",
+                ]
+                .contains(&key.as_str())
+                {
+                    bail!("unknown [fabric] key {key:?}");
+                }
+            }
+            fabric.queue_capacity = t.usize_or("queue_capacity", fabric.queue_capacity);
+            fabric.max_batch = t.usize_or("max_batch", fabric.max_batch);
+            fabric.workers = t.usize_or("workers", fabric.workers);
+            fabric.replicas_per_model =
+                t.usize_or("replicas_per_model", fabric.replicas_per_model);
+            fabric.cache_capacity = t.usize_or("cache_capacity", fabric.cache_capacity);
+            fabric.cache_ttl_ms = t.usize_or("cache_ttl_ms", fabric.cache_ttl_ms as usize) as u64;
+            for (what, v) in [
+                ("queue_capacity", fabric.queue_capacity),
+                ("max_batch", fabric.max_batch),
+                ("workers", fabric.workers),
+                ("replicas_per_model", fabric.replicas_per_model),
+            ] {
+                if v == 0 {
+                    bail!("[fabric] {what} must be >= 1");
+                }
+            }
+        }
+        let autoscale = match cfg.tables.get("autoscale") {
+            Some(t) => {
+                for key in t.entries.keys() {
+                    if !["min_replicas", "max_replicas"].contains(&key.as_str()) {
+                        bail!("unknown [autoscale] key {key:?}");
+                    }
+                }
+                let min_replicas = t.usize_or("min_replicas", 1);
+                let max_replicas = t.usize_or("max_replicas", 3);
+                if min_replicas == 0 || max_replicas < min_replicas {
+                    bail!(
+                        "[autoscale] bounds must satisfy 1 <= min_replicas <= max_replicas \
+                         (got min={min_replicas} max={max_replicas})"
+                    );
+                }
+                Some(AutoscaleBounds { min_replicas, max_replicas })
+            }
+            None => None,
+        };
+        let tenant_tables = cfg.array("tenant");
+        let tenants = if tenant_tables.is_empty() {
+            Vec::new()
+        } else {
+            tenant_specs_from_tables(tenant_tables).map_err(anyhow::Error::new)?
+        };
+        let mut artifacts = BTreeMap::new();
+        for t in cfg.array("artifact") {
+            for key in t.entries.keys() {
+                if !["model", "version"].contains(&key.as_str()) {
+                    bail!("unknown [[artifact]] key {key:?}");
+                }
+            }
+            let model = t.get("model")?.str()?.trim().to_string();
+            let pin = t.get("version")?.str()?.trim().to_string();
+            if model.is_empty() || pin.is_empty() {
+                bail!("[[artifact]] needs non-empty `model` and `version`");
+            }
+            if artifacts.insert(model.clone(), pin).is_some() {
+                bail!("[[artifact]] pins model {model:?} twice");
+            }
+        }
+        Ok(DeploymentManifest {
+            version,
+            objective,
+            demand_site,
+            topology,
+            fabric,
+            autoscale,
+            tenants,
+            artifacts,
+        })
+    }
+
+    /// Models this manifest pins an artifact version for, sorted.
+    pub fn pinned_models(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+version = 3
+[deployment]
+objective = "min-energy"
+demand_site = "edge"
+[fabric]
+queue_capacity = 8
+cache_capacity = 32
+cache_ttl_ms = 5000
+[autoscale]
+min_replicas = 1
+max_replicas = 2
+[[site]]
+name = "cloud"
+tier = "cloud"
+[[site]]
+name = "edge"
+tier = "edge"
+[[node]]
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+[[node]]
+site = "edge"
+name = "E-1"
+platforms = ["ARM"]
+[[link]]
+a = "cloud"
+b = "edge"
+rtt_ms = 12
+gbps = 1
+[[tenant]]
+name = "anna"
+rate = 50
+burst = 4
+[[artifact]]
+model = "mobilenetv1"
+version = "v1"
+"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let m = DeploymentManifest::parse(MINI).unwrap();
+        assert_eq!(m.version, 3);
+        assert_eq!(m.objective, PlanPolicy::MinEnergy);
+        assert_eq!(m.demand_site, "edge");
+        assert_eq!(m.fabric.queue_capacity, 8);
+        assert_eq!(m.fabric.cache_ttl_ms, 5000);
+        assert_eq!(m.autoscale, Some(AutoscaleBounds { min_replicas: 1, max_replicas: 2 }));
+        assert_eq!(m.tenants.len(), 1);
+        assert_eq!(m.tenants[0].rate_rps, Some(50.0));
+        assert_eq!(m.artifacts.get("mobilenetv1").map(String::as_str), Some("v1"));
+    }
+
+    #[test]
+    fn topology_only_files_stay_accepted() {
+        let src = r#"
+[[site]]
+name = "solo"
+tier = "edge"
+[[node]]
+site = "solo"
+name = "n1"
+platforms = ["CPU"]
+"#;
+        let m = DeploymentManifest::parse(src).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.objective, PlanPolicy::MinLatency);
+        assert_eq!(m.demand_site, "solo");
+        assert!(m.tenants.is_empty());
+        assert!(m.artifacts.is_empty());
+        assert_eq!(m.fabric, FabricSettings::default());
+        assert_eq!(m.autoscale, None);
+    }
+
+    #[test]
+    fn rejects_typos_loudly() {
+        let site = "[[site]]\nname = \"s\"\ntier = \"edge\"\n[[node]]\nsite = \"s\"\nname = \"n\"\nplatforms = [\"CPU\"]\n";
+        for (src, needle) in [
+            (format!("[tenent]\nx = 1\n{site}"), "unknown manifest section"),
+            (format!("[[artifcat]]\nmodel = \"m\"\n{site}"), "unknown manifest table"),
+            (format!("versoin = 2\n{site}"), "unknown top-level manifest key"),
+            (format!("[deployment]\nobjektive = \"x\"\n{site}"), "unknown [deployment] key"),
+            (format!("[fabric]\nqueue = 4\n{site}"), "unknown [fabric] key"),
+        ] {
+            let err = DeploymentManifest::parse(&src).unwrap_err().to_string();
+            assert!(err.contains(needle), "{src:?} → {err}");
+        }
+    }
+
+    #[test]
+    fn validates_cross_references_and_bounds() {
+        let base = "[[site]]\nname = \"s\"\ntier = \"edge\"\n[[node]]\nsite = \"s\"\nname = \"n\"\nplatforms = [\"CPU\"]\n";
+        let bad_site = format!("[deployment]\ndemand_site = \"nowhere\"\n{base}");
+        assert!(DeploymentManifest::parse(&bad_site)
+            .unwrap_err()
+            .to_string()
+            .contains("names no [[site]]"));
+        let bad_bounds = format!("[autoscale]\nmin_replicas = 3\nmax_replicas = 1\n{base}");
+        assert!(DeploymentManifest::parse(&bad_bounds)
+            .unwrap_err()
+            .to_string()
+            .contains("min_replicas <= max_replicas"));
+        let dup_pin = format!(
+            "[[artifact]]\nmodel = \"m\"\nversion = \"v1\"\n[[artifact]]\nmodel = \"m\"\nversion = \"v2\"\n{base}"
+        );
+        assert!(DeploymentManifest::parse(&dup_pin)
+            .unwrap_err()
+            .to_string()
+            .contains("twice"));
+        let zero = format!("version = 0\n{base}");
+        assert!(DeploymentManifest::parse(&zero)
+            .unwrap_err()
+            .to_string()
+            .contains("version must be >= 1"));
+    }
+}

@@ -1,0 +1,599 @@
+//! Applying convergence plans to a live continuum, and the
+//! deterministic scenarios proving the loop closed.
+//!
+//! [`reconcile`] walks an ordered [`ConvergencePlan`] against a running
+//! [`ContinuumOrchestrator`] and sorts every action into one of three
+//! buckets, all reported, none silent:
+//!
+//! - **applied** — quota/SLO edits reach the live token buckets and
+//!   batch controllers, TTL and autoscale bounds retune in place,
+//!   objective changes replan routing, artifact bumps roll
+//!   `on_artifact_redeploy` across the serving sites;
+//! - **deferred** — declared changes the running deployment cannot
+//!   absorb (lane-set changes, knobs whose subsystem was disabled at
+//!   deploy), carried with the reason;
+//! - **rejected** — structural changes the differ already refused,
+//!   plus drift (an action naming a tenant the live system never had).
+//!
+//! Nothing in flight is disturbed: admitted requests keep their
+//! receivers through a replan, a redeploy, and every knob edit — the
+//! conservation identity `submitted = completed + shed + failed` holds
+//! across an apply, which is exactly what [`run_scenarios`] proves.
+//!
+//! [`deploy_manifest_sim`] is the deploy side of the same coin: build
+//! the simulated continuum a manifest describes, stamping the manifest
+//! version as the orchestrator's `applied_generation`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::continuum::{ContinuumOrchestrator, ContinuumSubmission, RoutedRequest};
+use crate::fabric::sim::synthetic_catalog_for;
+use crate::fabric::{AutoscaleConfig, FabricConfig, Outcome};
+use crate::util::json::{n, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::workload::image_like;
+
+use super::canonical::{content_hash, render, to_json};
+use super::diff::{diff, Action, ConvergencePlan};
+use super::DeploymentManifest;
+
+/// What one [`reconcile`] pass did, action by action.
+#[derive(Debug, Clone)]
+pub struct ApplyReport {
+    /// Actions applied to the live system, in plan order.
+    pub applied: Vec<String>,
+    /// Actions deferred with a reason (valid intent, needs a redeploy
+    /// or a subsystem this deployment disabled).
+    pub deferred: Vec<String>,
+    /// Actions rejected (structural changes, or drift between the
+    /// claimed applied-manifest and the live system).
+    pub rejected: Vec<String>,
+    /// True when an objective change triggered a replan.
+    pub replanned: bool,
+    /// The orchestrator's `applied_generation` after this pass.
+    pub generation: u64,
+}
+
+impl ApplyReport {
+    /// True when the pass mutated nothing at all — the proven no-op a
+    /// re-applied manifest must produce.
+    pub fn is_noop(&self) -> bool {
+        self.applied.is_empty() && !self.replanned
+    }
+
+    /// Canonical JSON form for reports and the CLI.
+    pub fn to_json(&self) -> Json {
+        let strings = |v: &[String]| Json::Arr(v.iter().map(|x| s(x.clone())).collect());
+        obj(vec![
+            ("applied", strings(&self.applied)),
+            ("deferred", strings(&self.deferred)),
+            ("generation", n(self.generation as f64)),
+            ("noop", Json::Bool(self.is_noop())),
+            ("rejected", strings(&self.rejected)),
+            ("replanned", Json::Bool(self.replanned)),
+        ])
+    }
+}
+
+/// Apply a [`ConvergencePlan`] to a live orchestrator — see the
+/// [module docs](self) for the applied/deferred/rejected contract.
+/// Always stamps `plan.to_version` as the orchestrator's
+/// `applied_generation` (stamping the same version twice is not a
+/// mutation).  Errors only when a replan itself fails; per-action
+/// problems are reported, not thrown, so one bad edit cannot abandon a
+/// half-applied plan.
+pub fn reconcile(
+    orch: &mut ContinuumOrchestrator,
+    plan: &ConvergencePlan,
+) -> Result<ApplyReport> {
+    let mut report = ApplyReport {
+        applied: Vec::new(),
+        deferred: Vec::new(),
+        rejected: Vec::new(),
+        replanned: false,
+        generation: orch.applied_generation(),
+    };
+    for action in &plan.actions {
+        let desc = action.describe();
+        match action {
+            Action::SetObjective { to, .. } => {
+                orch.set_objective(*to)?;
+                report.replanned = true;
+                report.applied.push(desc);
+            }
+            Action::SetAutoscaleBounds { min_replicas, max_replicas } => {
+                match orch.set_autoscale_bounds(*min_replicas, *max_replicas) {
+                    Ok(()) => report.applied.push(desc),
+                    Err(e) => report.deferred.push(format!("{desc}: {e:#}")),
+                }
+            }
+            Action::SetCacheTtl { to_ms, .. } => {
+                if orch.set_cache_ttl(Duration::from_millis(*to_ms)) {
+                    report.applied.push(desc);
+                } else {
+                    report
+                        .deferred
+                        .push(format!("{desc}: response cache disabled at deploy"));
+                }
+            }
+            Action::SetQuota { tenant, rate_rps, burst } => {
+                match orch.set_tenant_quota(tenant, *rate_rps, *burst) {
+                    Ok(()) => report.applied.push(desc),
+                    Err(e) => report.rejected.push(format!("{desc}: {e:#}")),
+                }
+            }
+            Action::SetSlo { tenant, slo_p99_ms } => {
+                match orch.set_tenant_slo(tenant, *slo_p99_ms) {
+                    Ok(()) => report.applied.push(desc),
+                    Err(e) => report.rejected.push(format!("{desc}: {e:#}")),
+                }
+            }
+            Action::SetShare { .. } | Action::AddTenant { .. } | Action::RemoveTenant { .. } => {
+                report.deferred.push(format!(
+                    "{desc}: tenant lanes are sized when the fabrics spawn; redeploy to \
+                     change the lane set or shares"
+                ));
+            }
+            Action::RedeployArtifact { model, .. } => {
+                let sites = orch.redeploy_artifact(model);
+                if sites > 0 {
+                    report.applied.push(format!("{desc} ({sites} sites)"));
+                } else {
+                    report.deferred.push(format!("{desc}: no active site serves {model:?}"));
+                }
+            }
+            Action::Rejected { .. } => report.rejected.push(desc),
+        }
+    }
+    orch.set_applied_generation(plan.to_version);
+    report.generation = orch.applied_generation();
+    Ok(report)
+}
+
+/// Deploy the simulated continuum a manifest describes: synthetic
+/// catalog for the pinned models (`mobilenetv1` when nothing is
+/// pinned), one fabric per planned site under the manifest's
+/// objective, tenants, autoscale bounds and cache settings.  The
+/// manifest version becomes the orchestrator's `applied_generation`.
+pub fn deploy_manifest_sim(
+    m: &DeploymentManifest,
+    seed: u64,
+) -> Result<ContinuumOrchestrator> {
+    let models = if m.artifacts.is_empty() {
+        vec!["mobilenetv1".to_string()]
+    } else {
+        m.artifacts.keys().cloned().collect()
+    };
+    let model_refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let catalog = synthetic_catalog_for(&model_refs);
+    if catalog.is_empty() {
+        bail!("no synthetic catalog entries for pinned models {models:?}");
+    }
+    let cfg = FabricConfig {
+        queue_capacity: m.fabric.queue_capacity,
+        max_batch: m.fabric.max_batch,
+        workers: m.fabric.workers,
+        replicas_per_model: m.fabric.replicas_per_model,
+        cache_capacity: m.fabric.cache_capacity,
+        cache_ttl_ms: m.fabric.cache_ttl_ms,
+        // Deterministic drives: no modeled sleep, no cross-request
+        // dedup collapsing the tenant-attributed traffic.
+        time_scale: 0.0,
+        dedup: false,
+        seed,
+        autoscale: m.autoscale.map(|b| AutoscaleConfig {
+            min_replicas: b.min_replicas,
+            max_replicas: b.max_replicas,
+            interval_ms: 0,
+            predictive: false,
+            ..Default::default()
+        }),
+        tenants: m.tenants.clone(),
+        ..Default::default()
+    };
+    let mut orch = ContinuumOrchestrator::deploy_sim(
+        m.topology.clone(),
+        catalog,
+        m.objective,
+        &m.demand_site,
+        &cfg,
+        &BTreeMap::new(),
+    )?;
+    orch.set_applied_generation(m.version);
+    Ok(orch)
+}
+
+/// Counters of one traffic phase driven through [`drive`] (+
+/// [`settle`]).  The conservation identity is checked only after every
+/// routed receiver has been settled.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DrivePhase {
+    /// Requests offered this phase.
+    pub submitted: usize,
+    /// Requests completed (settled receivers).
+    pub completed: usize,
+    /// Requests shed — at submit time (quota / every ranked site full)
+    /// or after admission (preemption), always explicit.
+    pub shed: usize,
+    /// Requests failed at an executor (or whose channel died).
+    pub failed: usize,
+}
+
+impl DrivePhase {
+    /// The conservation identity: every submission accounted.
+    pub fn fully_accounted(&self) -> bool {
+        self.completed + self.shed + self.failed == self.submitted
+    }
+
+    /// Fold another phase's counters into this one.
+    pub fn absorb(&mut self, other: &DrivePhase) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.failed += other.failed;
+    }
+}
+
+/// Drive `requests` open-loop submissions through the continuum
+/// router, cycling deterministically over the planned models and the
+/// given tenants (anonymous default-tenant traffic when `tenants` is
+/// empty).  Routed receivers are pushed onto `pending` — the caller
+/// settles them (possibly across an apply, proving nothing admitted is
+/// lost) with [`settle`].
+pub fn drive(
+    orch: &mut ContinuumOrchestrator,
+    requests: usize,
+    seed: u64,
+    tenants: &[String],
+    pending: &mut Vec<RoutedRequest>,
+) -> Result<DrivePhase> {
+    let models: Vec<String> =
+        orch.plan().models().iter().map(|m| m.to_string()).collect();
+    if models.is_empty() {
+        bail!("the plan serves no models");
+    }
+    let mut rng = Rng::new(seed);
+    let mut phase = DrivePhase::default();
+    for i in 0..requests {
+        let model = &models[i % models.len()];
+        let (h, w, c) = orch.input_shape(model).unwrap_or((8, 8, 1));
+        let payload = image_like(&mut rng, h, w, c);
+        phase.submitted += 1;
+        let sub = if tenants.is_empty() {
+            orch.submit(model, payload)?
+        } else {
+            orch.submit_as(&tenants[i % tenants.len()], model, payload)?
+        };
+        match sub {
+            ContinuumSubmission::Routed(r) => pending.push(r),
+            ContinuumSubmission::Shed => phase.shed += 1,
+        }
+    }
+    Ok(phase)
+}
+
+/// Settle every pending receiver into `phase` — each admitted request
+/// resolves to completed, shed (preempted) or failed; none vanish.
+pub fn settle(pending: &mut Vec<RoutedRequest>, phase: &mut DrivePhase) {
+    for r in pending.drain(..) {
+        match r.rx.recv().ok() {
+            Some(Outcome::Completed(_)) => phase.completed += 1,
+            Some(Outcome::Shed) => phase.shed += 1,
+            Some(Outcome::Failed(_)) | None => phase.failed += 1,
+        }
+    }
+}
+
+/// Machine-checkable verdicts of the manifest convergence scenarios —
+/// what `tf2aif apply --scenarios` prints and CI's `manifest-converge`
+/// job gates on.
+#[derive(Debug, Clone)]
+pub struct ManifestVerdicts {
+    /// Canonical rendering is byte-stable: a comment-heavy, reordered
+    /// copy of the same manifest renders to identical bytes and hash,
+    /// and `Json::parse(render(m))` reproduces `to_json(m)` exactly.
+    pub roundtrip_stable: bool,
+    /// Actions in the v1→v2 plan.
+    pub plan_actions: usize,
+    /// The v1→v2 plan is exactly the expected ordered action list
+    /// (objective, autoscale bounds, cache TTL, quota, SLO, artifact
+    /// redeploy) with zero rejections.
+    pub plan_matches: bool,
+    /// The live quota edit bit: anna sheds nothing before the apply,
+    /// and her tightened token bucket sheds after it.
+    pub quota_edit_live: bool,
+    /// The conservation identity held across deploy → drive → apply →
+    /// drive → settle: every submission completed, shed or failed.
+    pub converge_accounted: bool,
+    /// Requests admitted before the apply all resolved after it — the
+    /// zero-dropped-admitted-work bit (no failures anywhere).
+    pub no_lost_admitted: bool,
+    /// Re-applying v2 produced an empty diff and a no-op reconcile
+    /// pass that left the generation untouched.
+    pub reapply_noop: bool,
+    /// `applied_generation` tracked the manifest versions 1 → 2.
+    pub generation_tracks: bool,
+}
+
+/// The v1 scenario manifest: two sites, two tenants (anna unlimited,
+/// bob quota'd with an SLO), one pinned artifact, warm cache, scaler
+/// bounds 1..3.
+const SCENARIO_V1: &str = r#"
+version = 1
+[deployment]
+objective = "min-latency"
+demand_site = "edge"
+[fabric]
+queue_capacity = 64
+max_batch = 4
+workers = 1
+replicas_per_model = 1
+cache_capacity = 64
+cache_ttl_ms = 60000
+[autoscale]
+min_replicas = 1
+max_replicas = 3
+[[site]]
+name = "cloud"
+tier = "cloud"
+[[site]]
+name = "edge"
+tier = "edge"
+[[node]]
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+slots = 4
+[[node]]
+site = "edge"
+name = "E-1"
+platforms = ["ARM"]
+slots = 2
+[[link]]
+a = "cloud"
+b = "edge"
+rtt_ms = 12
+gbps = 1
+[[tenant]]
+name = "anna"
+weight = 2
+[[tenant]]
+name = "bob"
+rate = 40
+burst = 4
+slo_ms = 50
+[[artifact]]
+model = "mobilenetv1"
+version = "v1"
+"#;
+
+/// v2: same topology, but — objective → balanced (replan), scaler
+/// ceiling 3 → 2, cache TTL 60 s → 1 s, anna gains a tight quota,
+/// bob's SLO tightens, the artifact pin bumps to v2.
+const SCENARIO_V2: &str = r#"
+version = 2
+[deployment]
+objective = "balanced"
+demand_site = "edge"
+[fabric]
+queue_capacity = 64
+max_batch = 4
+workers = 1
+replicas_per_model = 1
+cache_capacity = 64
+cache_ttl_ms = 1000
+[autoscale]
+min_replicas = 1
+max_replicas = 2
+[[site]]
+name = "cloud"
+tier = "cloud"
+[[site]]
+name = "edge"
+tier = "edge"
+[[node]]
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+slots = 4
+[[node]]
+site = "edge"
+name = "E-1"
+platforms = ["ARM"]
+slots = 2
+[[link]]
+a = "cloud"
+b = "edge"
+rtt_ms = 12
+gbps = 1
+[[tenant]]
+name = "anna"
+weight = 2
+rate = 30
+burst = 4
+[[tenant]]
+name = "bob"
+rate = 40
+burst = 4
+slo_ms = 25
+[[artifact]]
+model = "mobilenetv1"
+version = "v2"
+"#;
+
+/// A byte-different but meaning-identical copy of [`SCENARIO_V1`]
+/// (comments, blank lines, shuffled keys, `12.0` for `12`) — must
+/// render to the same canonical bytes.
+const SCENARIO_V1_SHUFFLED: &str = r#"
+# the same deployment, formatted differently
+version = 1
+
+[deployment]
+demand_site = "edge"
+objective = "min-latency"
+
+[autoscale]
+max_replicas = 3
+min_replicas = 1
+
+[fabric]
+cache_capacity = 64
+cache_ttl_ms = 60000
+max_batch = 4
+queue_capacity = 64
+replicas_per_model = 1
+workers = 1
+
+[[site]]
+tier = "edge"
+name = "edge"
+[[site]]
+tier = "cloud"
+name = "cloud"
+
+[[node]]
+platforms = ["ARM"]
+site = "edge"
+name = "E-1"
+slots = 2
+[[node]]
+slots = 4
+site = "cloud"
+name = "R-GPU"
+platforms = ["GPU"]
+
+[[link]]
+gbps = 1.0
+a = "cloud"
+b = "edge"
+rtt_ms = 12.0
+
+[[tenant]]
+weight = 2.0
+name = "anna"
+[[tenant]]
+slo_ms = 50
+burst = 4.0
+name = "bob"
+rate = 40.0
+
+[[artifact]]
+version = "v1"
+model = "mobilenetv1"
+"#;
+
+/// Run the deterministic manifest-convergence scenarios — deploy v1,
+/// drive tenant traffic, apply v2 live mid-stream, drive again, settle
+/// everything, re-apply v2.  Mirrors `continuum::run_scenarios`:
+/// seedable, no wall-clock-sensitive assertions, the same driver
+/// behind the integration suite and `tf2aif apply --scenarios`.
+pub fn run_scenarios(seed: u64) -> Result<ManifestVerdicts> {
+    let v1 = DeploymentManifest::parse(SCENARIO_V1)?;
+    let v2 = DeploymentManifest::parse(SCENARIO_V2)?;
+    let shuffled = DeploymentManifest::parse(SCENARIO_V1_SHUFFLED)?;
+
+    let rendered = render(&v1);
+    let roundtrip_stable = render(&shuffled) == rendered
+        && content_hash(&shuffled) == content_hash(&v1)
+        && Json::parse(&rendered).ok().as_ref() == Some(&to_json(&v1));
+
+    let plan = diff(&v1, &v2);
+    let kinds: Vec<&str> = plan.actions.iter().map(Action::kind).collect();
+    let plan_matches = kinds
+        == [
+            "set-objective",
+            "set-autoscale-bounds",
+            "set-cache-ttl",
+            "set-quota",
+            "set-slo",
+            "redeploy-artifact",
+        ]
+        && plan.rejected_count() == 0;
+
+    let mut orch = deploy_manifest_sim(&v1, seed)?;
+    let gen_before = orch.applied_generation();
+    let anna = vec!["anna".to_string()];
+    let mut pending = Vec::new();
+
+    // Phase A: anna is unlimited under v1 — nothing sheds.
+    let phase_a = drive(&mut orch, 40, seed ^ 0xA, &anna, &mut pending)?;
+
+    // Apply v2 while phase A's receivers are still outstanding.
+    let apply = reconcile(&mut orch, &plan)?;
+    let admitted_before_apply = pending.len();
+
+    // Phase B: anna's new 30 rps / burst-4 bucket sheds the fast loop.
+    let phase_b = drive(&mut orch, 40, seed ^ 0xB, &anna, &mut pending)?;
+
+    let mut total = DrivePhase::default();
+    total.absorb(&phase_a);
+    total.absorb(&phase_b);
+    settle(&mut pending, &mut total);
+
+    let quota_edit_live = phase_a.shed == 0 && phase_b.shed > 0 && !apply.applied.is_empty();
+    let converge_accounted = total.fully_accounted();
+    let no_lost_admitted = total.failed == 0 && admitted_before_apply > 0;
+    let gen_after = orch.applied_generation();
+
+    // Re-apply: empty diff, no-op pass, generation untouched.
+    let replan = diff(&v2, &v2);
+    let reapply = reconcile(&mut orch, &replan)?;
+    let reapply_noop =
+        replan.is_noop() && reapply.is_noop() && orch.applied_generation() == gen_after;
+    let generation_tracks = gen_before == 1 && gen_after == 2;
+
+    orch.shutdown();
+    Ok(ManifestVerdicts {
+        roundtrip_stable,
+        plan_actions: plan.actions.len(),
+        plan_matches,
+        quota_edit_live,
+        converge_accounted,
+        no_lost_admitted,
+        reapply_noop,
+        generation_tracks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_all_hold() {
+        let v = run_scenarios(0xA11).unwrap();
+        assert!(v.roundtrip_stable, "{v:?}");
+        assert!(v.plan_matches, "{v:?}");
+        assert_eq!(v.plan_actions, 6, "{v:?}");
+        assert!(v.quota_edit_live, "{v:?}");
+        assert!(v.converge_accounted, "{v:?}");
+        assert!(v.no_lost_admitted, "{v:?}");
+        assert!(v.reapply_noop, "{v:?}");
+        assert!(v.generation_tracks, "{v:?}");
+    }
+
+    #[test]
+    fn reconcile_reports_drift_instead_of_throwing() {
+        let v1 = DeploymentManifest::parse(SCENARIO_V1).unwrap();
+        let mut orch = deploy_manifest_sim(&v1, 7).unwrap();
+        let plan = ConvergencePlan {
+            from_version: 1,
+            to_version: 2,
+            actions: vec![Action::SetQuota {
+                tenant: "nobody".to_string(),
+                rate_rps: Some(10.0),
+                burst: 2.0,
+            }],
+        };
+        let report = reconcile(&mut orch, &plan).unwrap();
+        assert!(report.applied.is_empty());
+        assert_eq!(report.rejected.len(), 1, "{report:?}");
+        assert!(report.rejected[0].contains("nobody"), "{report:?}");
+        // Drift still stamps the generation the caller asked for.
+        assert_eq!(orch.applied_generation(), 2);
+        orch.shutdown();
+    }
+}

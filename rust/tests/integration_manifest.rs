@@ -1,0 +1,101 @@
+//! Integration: the declarative config plane end to end.
+//!
+//! Locks the shipped worked-example manifests (`configs/deployment.toml`
+//! → `configs/deployment_v2.toml`) against the checked-in golden plan,
+//! proves canonical rendering ignores formatting, converges a live
+//! deployment mid-traffic under the conservation identity, and runs the
+//! same scenario verdicts CI's manifest-converge job gates on.
+
+use tf2aif::manifest::canonical::{content_hash, render, render_json};
+use tf2aif::manifest::diff::diff;
+use tf2aif::manifest::reconcile::{
+    deploy_manifest_sim, drive, reconcile, run_scenarios, settle, DrivePhase,
+};
+use tf2aif::manifest::DeploymentManifest;
+
+const V1: &str = include_str!("../../configs/deployment.toml");
+const V2: &str = include_str!("../../configs/deployment_v2.toml");
+const PLAN_GOLDEN: &str = include_str!("golden/manifest_plan_v1_v2.json");
+
+#[test]
+fn shipped_manifests_differ_to_the_golden_plan() {
+    let v1 = DeploymentManifest::parse(V1).unwrap();
+    let v2 = DeploymentManifest::parse(V2).unwrap();
+    assert_eq!(v1.version, 1);
+    assert_eq!(v2.version, 2);
+    let plan = diff(&v1, &v2);
+    let rendered = format!("{}\n", render_json(&plan.to_json()));
+    assert_eq!(
+        rendered, PLAN_GOLDEN,
+        "v1→v2 plan drifted from rust/tests/golden/manifest_plan_v1_v2.json"
+    );
+    assert_eq!(plan.rejected_count(), 0, "{plan:?}");
+}
+
+#[test]
+fn canonical_rendering_ignores_formatting_of_the_shipped_manifest() {
+    let v1 = DeploymentManifest::parse(V1).unwrap();
+    // Stripping every comment and blank line must not change meaning.
+    let stripped: String = V1
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#') && !l.trim().is_empty())
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let again = DeploymentManifest::parse(&stripped).unwrap();
+    assert_eq!(render(&v1), render(&again));
+    assert_eq!(content_hash(&v1), content_hash(&again));
+}
+
+#[test]
+fn apply_over_live_traffic_conserves_and_reapply_is_noop() {
+    let v1 = DeploymentManifest::parse(V1).unwrap();
+    let v2 = DeploymentManifest::parse(V2).unwrap();
+    let plan = diff(&v1, &v2);
+    let mut orch = deploy_manifest_sim(&v1, 0xBEEF).unwrap();
+    assert_eq!(orch.applied_generation(), 1);
+    let tenants: Vec<String> = v1.tenants.iter().map(|t| t.id.clone()).collect();
+    let mut pending = Vec::new();
+
+    let pre = drive(&mut orch, 60, 1, &tenants, &mut pending).unwrap();
+    assert!(!pending.is_empty(), "no admitted work in flight before the apply");
+
+    // Converge v1 → v2 while phase-one receivers are still outstanding.
+    let rep = reconcile(&mut orch, &plan).unwrap();
+    assert!(!rep.applied.is_empty(), "{rep:?}");
+    assert!(rep.rejected.is_empty(), "{rep:?}");
+    assert!(rep.replanned, "objective change must replan: {rep:?}");
+    assert_eq!(orch.applied_generation(), 2);
+
+    let post = drive(&mut orch, 60, 2, &tenants, &mut pending).unwrap();
+    let mut total = DrivePhase::default();
+    total.absorb(&pre);
+    total.absorb(&post);
+    settle(&mut pending, &mut total);
+    assert!(total.fully_accounted(), "{total:?}");
+    assert_eq!(total.failed, 0, "admitted work was lost across the apply: {total:?}");
+
+    // Re-apply v2: empty diff, reconcile mutates nothing.
+    let replan = diff(&v2, &v2);
+    assert!(replan.is_noop(), "{replan:?}");
+    let reapply = reconcile(&mut orch, &replan).unwrap();
+    assert!(reapply.is_noop(), "{reapply:?}");
+    assert_eq!(orch.applied_generation(), 2);
+    orch.shutdown();
+}
+
+#[test]
+fn scenario_verdicts_hold_across_seeds() {
+    for seed in [3u64, 0xDEAD] {
+        let v = run_scenarios(seed).unwrap();
+        assert!(
+            v.roundtrip_stable
+                && v.plan_matches
+                && v.quota_edit_live
+                && v.converge_accounted
+                && v.no_lost_admitted
+                && v.reapply_noop
+                && v.generation_tracks,
+            "seed {seed}: {v:?}"
+        );
+    }
+}
